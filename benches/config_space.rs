@@ -1,0 +1,37 @@
+//! §5.1 analysis benchmarks: configuration-space enumeration and the
+//! optimality/improvability sweeps behind the paper's statistics.
+//!
+//! Run: `cargo bench --bench config_space`
+
+use grmu::mig::config_space::{
+    analyze, count_suboptimal, default_policy_reachable, enumerate_all, group_by_multiset,
+    two_gpu_analysis, TieBreak,
+};
+use grmu::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.run("enumerate-all-723", enumerate_all);
+
+    let configs = enumerate_all();
+    b.run("group-by-multiset", || group_by_multiset(&configs));
+
+    let groups = group_by_multiset(&configs);
+    b.run("count-suboptimal-482", || count_suboptimal(&configs, &groups));
+
+    b.run("default-policy-reachable/first", || {
+        default_policy_reachable(TieBreak::First)
+    });
+    b.run("default-policy-reachable/all-ties", || {
+        default_policy_reachable(TieBreak::AllMaximal)
+    });
+
+    b.run("analyze/single-gpu", || analyze(false));
+
+    // The 261,726-pair sweep is the heavy one; keep it out of the timed
+    // loop in quick mode.
+    if std::env::var("BENCH_QUICK").is_err() {
+        b.run("two-gpu-analysis/261726-pairs", || two_gpu_analysis(&configs));
+    }
+}

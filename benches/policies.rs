@@ -1,0 +1,57 @@
+//! Placement-decision benchmarks: per-policy batch latency on a loaded
+//! mid-size data center — the coordinator's request-path cost.
+//!
+//! Run: `cargo bench --bench policies`
+
+use grmu::cluster::DataCenter;
+use grmu::policies;
+use grmu::trace::{TraceConfig, Workload};
+use grmu::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    // A 200-host cluster pre-loaded to ~60% with the first half of the
+    // trace; then benchmark decisions on the second half.
+    let config = TraceConfig {
+        num_hosts: 200,
+        num_pods: 4_000,
+        ..TraceConfig::default()
+    };
+    let workload = Workload::generate(config);
+    let half = workload.vms.len() / 2;
+    let (warmup, probe) = workload.vms.split_at(half);
+    let probe: Vec<_> = probe.iter().take(512).cloned().collect();
+
+    for name in policies::POLICY_NAMES {
+        let mut dc = DataCenter::new(workload.hosts.clone());
+        let mut policy = policies::by_name(name, 0.15, None).unwrap();
+        policy.place_batch(&mut dc, warmup, 0);
+        // Benchmark: decide the probe batch against a snapshot each time.
+        let base = dc.clone();
+        b.run(&format!("place-batch-512/{name}"), || {
+            let mut dc = base.clone();
+            let mut p = policies::by_name(name, 0.15, None).unwrap();
+            // Rebuild policy state quickly from scratch for GRMU et al.:
+            // placement decisions dominate; basket init is O(#GPUs).
+            p.place_batch(&mut dc, &probe, 3_600)
+        });
+        let _ = policy;
+    }
+
+    // Per-decision latency at full data-center scale (5k GPUs) for the
+    // scan-heavy policies — the paper-scale request path.
+    let big = Workload::generate(TraceConfig::default());
+    let (warm, rest) = big.vms.split_at(big.vms.len() / 2);
+    let probe_big: Vec<_> = rest.iter().take(64).cloned().collect();
+    for name in ["ff", "mcc", "grmu"] {
+        let mut dc = DataCenter::new(big.hosts.clone());
+        let mut policy = policies::by_name(name, 0.15, None).unwrap();
+        policy.place_batch(&mut dc, warm, 0);
+        let base = dc.clone();
+        b.run(&format!("place-batch-64/paper-scale/{name}"), || {
+            let mut dc = base.clone();
+            let mut p = policies::by_name(name, 0.15, None).unwrap();
+            p.place_batch(&mut dc, &probe_big, 3_600)
+        });
+    }
+}

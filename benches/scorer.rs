@@ -1,0 +1,70 @@
+//! Scorer micro-benchmarks — the placement hot path (EXPERIMENTS.md §Perf).
+//!
+//! Covers the native table-lookup backend, the full Algorithm 1 assign
+//! scan, the fragmentation metric, and (when `make artifacts` has run)
+//! the XLA/PJRT backend for batch scoring.
+//!
+//! Run: `cargo bench --bench scorer` (BENCH_QUICK=1 for a fast pass).
+
+use grmu::mig::fragmentation::fragmentation_value;
+use grmu::mig::gpu::{cc, profile_capacity};
+use grmu::mig::placement::mock_assign;
+use grmu::mig::profiles::ALL_PROFILES;
+use grmu::policies::mcc::{CcScorer, NativeScorer};
+use grmu::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let masks: Vec<u8> = (0..=255).collect();
+
+    b.run("cc/table-lookup-256", || {
+        let mut acc = 0u32;
+        for &m in &masks {
+            acc = acc.wrapping_add(cc(m));
+        }
+        acc
+    });
+
+    b.run("profile-capacity-256", || {
+        let mut acc = 0u32;
+        for &m in &masks {
+            acc = acc.wrapping_add(profile_capacity(m)[2] as u32);
+        }
+        acc
+    });
+
+    b.run("mock-assign/all-profiles-256-masks", || {
+        let mut acc = 0u32;
+        for &m in &masks {
+            for p in ALL_PROFILES {
+                if let Some((pl, _)) = mock_assign(m, p) {
+                    acc = acc.wrapping_add(pl.start as u32);
+                }
+            }
+        }
+        acc
+    });
+
+    b.run("fragmentation-value-256", || {
+        let mut acc = 0.0f64;
+        for &m in &masks {
+            acc += fragmentation_value(m);
+        }
+        acc
+    });
+
+    // Batch scoring: native backend on a 1024-config batch (the MCC
+    // candidate-scan shape at data-center scale).
+    let batch: Vec<u8> = (0..1024).map(|i| (i % 256) as u8).collect();
+    let mut native = NativeScorer;
+    b.run("scorer/native-1024-batch", || native.score(&batch));
+
+    let artifact = std::path::Path::new("artifacts/cc_scorer.hlo.txt");
+    if artifact.exists() {
+        let mut xla = grmu::runtime::XlaScorer::load(artifact).expect("artifact");
+        b.run("scorer/xla-pjrt-1024-batch", || xla.score(&batch));
+        b.compare("scorer/xla-pjrt-1024-batch", "scorer/native-1024-batch");
+    } else {
+        eprintln!("(skipping XLA scorer bench: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,103 @@
+//! Validate the heuristics against the exact ILP (Eq. 3–26) on small
+//! instances.
+//!
+//! The paper argues the ILP is intractable at data-center scale and never
+//! solves it; on *small* instances our branch-and-bound solver is exact,
+//! so we can measure how far GRMU and FF fall from the true optimum —
+//! and confirm the invariant that no heuristic ever beats the ILP bound.
+//!
+//! Run: `cargo run --release --example ilp_validation`
+
+use grmu::cluster::{DataCenter, Host, VmSpec};
+use grmu::ilp::model::{IlpHost, PlacementInstance};
+use grmu::ilp::IlpSolver;
+use grmu::mig::profiles::ALL_PROFILES;
+use grmu::policies;
+use grmu::util::rng::Rng;
+use std::collections::HashMap;
+
+fn random_instance(rng: &mut Rng, hosts: usize, gpus: usize, vms: usize) -> PlacementInstance {
+    let host = IlpHost { cpus: 64, ram_gb: 256, num_gpus: gpus, weight: 1.0 };
+    let vms = (0..vms)
+        .map(|i| VmSpec {
+            id: i as u64 + 1,
+            profile: *rng.pick(&ALL_PROFILES),
+            cpus: rng.range_inclusive(1, 8) as u32,
+            ram_gb: rng.range_inclusive(4, 32) as u32,
+            arrival: 0,
+            departure: 1_000,
+            weight: 1.0,
+        })
+        .collect();
+    PlacementInstance { hosts: vec![host; hosts], vms, prior: HashMap::new() }
+}
+
+fn heuristic_accepted(name: &str, inst: &PlacementInstance) -> u64 {
+    let hosts: Vec<Host> = inst
+        .hosts
+        .iter()
+        .enumerate()
+        .map(|(i, h)| Host::new(i as u32, h.cpus, h.ram_gb, h.num_gpus))
+        .collect();
+    let mut dc = DataCenter::new(hosts);
+    let mut policy = policies::by_name(name, 0.34, None).unwrap();
+    policy.place_batch(&mut dc, &inst.vms, 0).iter().filter(|&&ok| ok).count() as u64
+}
+
+fn main() {
+    let mut rng = Rng::new(2026);
+    let trials = 20;
+    let mut ilp_total = 0.0;
+    let mut grmu_total = 0u64;
+    let mut ff_total = 0u64;
+    let mut grmu_optimal = 0usize;
+    let mut ff_optimal = 0usize;
+    let mut nodes_total = 0usize;
+
+    println!(
+        "{:>5} {:>6} {:>6} {:>6} {:>8} {:>8}",
+        "trial", "VMs", "ILP", "GRMU", "FF", "B&B nodes"
+    );
+    for trial in 0..trials {
+        // ≥2 GPUs so GRMU's dual-basket split is non-degenerate; ≤4 VMs
+        // keeps each exact solve in the sub-second-to-seconds range.
+        let hosts = 1 + (trial % 2);
+        let gpus = 2;
+        let n_vms = 3 + (trial % 2);
+        let inst = random_instance(&mut rng, hosts, gpus, n_vms);
+        let solution = IlpSolver::new(inst.clone()).solve().expect("feasible (empty is)");
+        let ilp = solution.acceptance;
+        let grmu_acc = heuristic_accepted("grmu", &inst);
+        let ff_acc = heuristic_accepted("ff", &inst);
+        nodes_total += solution.nodes;
+        println!(
+            "{:>5} {:>6} {:>6.0} {:>6} {:>8} {:>8}",
+            trial, n_vms, ilp, grmu_acc, ff_acc, solution.nodes
+        );
+        assert!(
+            grmu_acc as f64 <= ilp + 1e-6,
+            "heuristic exceeded the exact optimum — model bug"
+        );
+        assert!(ff_acc as f64 <= ilp + 1e-6);
+        ilp_total += ilp;
+        grmu_total += grmu_acc;
+        ff_total += ff_acc;
+        if (grmu_acc as f64 - ilp).abs() < 1e-6 {
+            grmu_optimal += 1;
+        }
+        if (ff_acc as f64 - ilp).abs() < 1e-6 {
+            ff_optimal += 1;
+        }
+    }
+    println!("\nacross {trials} random small instances:");
+    println!("  ILP optimal acceptance total: {ilp_total:.0}");
+    println!(
+        "  GRMU: {grmu_total} ({:.1}% of optimal), optimal in {grmu_optimal}/{trials} instances",
+        100.0 * grmu_total as f64 / ilp_total
+    );
+    println!(
+        "  FF:   {ff_total} ({:.1}% of optimal), optimal in {ff_optimal}/{trials} instances",
+        100.0 * ff_total as f64 / ilp_total
+    );
+    println!("  branch-and-bound nodes total: {nodes_total}");
+}

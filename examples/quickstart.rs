@@ -1,0 +1,118 @@
+//! Quickstart: the GRMU public API in ~60 lines.
+//!
+//! Builds a 3-host data center, routes a handful of MIG-enabled VM
+//! requests through GRMU, prints each placement decision with the GPU
+//! block maps (Fig. 2-style), and shows the CC metric and defragmentation
+//! in action.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use grmu::cluster::{DataCenter, Host, VmSpec};
+use grmu::mig::Profile;
+use grmu::policies::grmu::{Grmu, GrmuConfig};
+use grmu::policies::Policy;
+
+fn vm(id: u64, profile: Profile) -> VmSpec {
+    VmSpec { id, profile, cpus: 4, ram_gb: 16, arrival: 0, departure: 3_600_000, weight: 1.0 }
+}
+
+fn print_cluster(dc: &DataCenter) {
+    for host in dc.hosts() {
+        for (g, gpu) in host.gpus().iter().enumerate() {
+            println!(
+                "  host {} gpu {}: [{}] CC={:<2} frag={:.2}",
+                host.id,
+                g,
+                gpu.block_map(),
+                gpu.cc(),
+                grmu::mig::fragmentation_value(gpu.occupancy()),
+            );
+        }
+    }
+}
+
+fn main() {
+    // A small data center: 3 hosts × 2 A100s.
+    let mut dc = DataCenter::new((0..3).map(|i| Host::new(i, 64, 256, 2)).collect());
+
+    // GRMU with a 33% heavy-basket quota (2 of 6 GPUs may serve 7g.40gb).
+    let mut policy = Grmu::new(GrmuConfig {
+        heavy_capacity_frac: 0.34,
+        consolidation_interval_hours: Some(1),
+        defrag_enabled: true,
+    });
+
+    // A mixed batch: two whole-GPU requests plus assorted slices.
+    let batch = vec![
+        vm(1, Profile::P7g40gb),
+        vm(2, Profile::P7g40gb),
+        vm(3, Profile::P7g40gb), // exceeds the heavy quota -> rejected
+        vm(4, Profile::P3g20gb),
+        vm(5, Profile::P2g10gb),
+        vm(6, Profile::P1g5gb),
+        vm(7, Profile::P1g5gb),
+    ];
+    let decisions = policy.place_batch(&mut dc, &batch, 0);
+    println!("placement decisions:");
+    for (vm, ok) in batch.iter().zip(&decisions) {
+        match (ok, dc.locate(vm.id)) {
+            (true, Some(loc)) => println!(
+                "  VM {} ({:<8}) -> host {} gpu {} start {}",
+                vm.id,
+                vm.profile.name(),
+                loc.gpu.host,
+                loc.gpu.gpu,
+                loc.placement.start
+            ),
+            _ => println!("  VM {} ({:<8}) -> REJECTED", vm.id, vm.profile.name()),
+        }
+    }
+    println!("\ncluster state (block maps; digit = compute engines of the instance):");
+    print_cluster(&dc);
+
+    // Departures free capacity that later requests reuse.
+    dc.remove(5);
+    dc.remove(7);
+    println!("\nafter VMs 5 and 7 depart:");
+    print_cluster(&dc);
+    let retry = vec![vm(8, Profile::P4g20gb), vm(9, Profile::P4g20gb)];
+    let decisions = policy.place_batch(&mut dc, &retry, 3_600);
+    println!("\nretry batch accepted: {decisions:?}");
+    print_cluster(&dc);
+
+    let (active, total) = dc.active_hardware();
+    println!("\nactive hardware (strict rule): {active}/{total} units");
+    dc.check_integrity().expect("datacenter consistent");
+    println!("integrity check: OK");
+
+    // --- §7.1's defragmentation worked example, in isolation ---------
+    // Two 1g.5gb instances land on blocks 6 and 4 (Algorithm 1). When
+    // the block-6 tenant departs, the survivor is stranded at block 4 —
+    // a suboptimal arrangement. Intra-GPU migration moves it back to 6.
+    use grmu::cluster::GpuRef;
+    use grmu::mig::placement::assign;
+    use grmu::policies::grmu::defrag;
+    use std::collections::BTreeSet;
+
+    println!("\n§7.1 defragmentation example:");
+    let mut dc2 = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+    let r = GpuRef { host: 0, gpu: 0 };
+    for id in [100u64, 101] {
+        let spec = vm(id, Profile::P1g5gb);
+        let placement = {
+            let mut probe = dc2.gpu(r).clone();
+            assign(&mut probe, id, Profile::P1g5gb).unwrap()
+        };
+        dc2.place(&spec, r, placement);
+    }
+    dc2.remove(100); // the block-6 tenant departs
+    println!("  before: [{}] CC={}", dc2.gpu(r).block_map(), dc2.gpu(r).cc());
+    let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
+    let moved = defrag::defragment_light_basket(&mut dc2, &basket);
+    println!(
+        "  after:  [{}] CC={}  ({moved} intra-GPU migration)",
+        dc2.gpu(r).block_map(),
+        dc2.gpu(r).cc()
+    );
+    assert_eq!(dc2.locate(101).unwrap().placement.start, 6);
+}

@@ -1,0 +1,100 @@
+"""AOT export: lower the L2 scoring graph to HLO **text** for the Rust
+runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``cc_scorer.hlo.txt``   — ``score(occ: f32[B, 8]) -> (f32[B], f32[B, 6])``
+  lowered with ``return_tuple=True`` (the Rust side unwraps the tuple).
+* ``cc_scorer.meta.json`` — the batch size and output names the Rust
+  loader validates against.
+
+Usage: ``python -m compile.aot --out ../artifacts/cc_scorer.hlo.txt``
+(from ``python/``; the Makefile drives this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+DEFAULT_BATCH = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides the 18×8 placement-mask and 18×6 grouping constants as
+    ``{...}``, which the Rust-side parser silently reads as zeros — every
+    placement then looks feasible (CC = 18 everywhere) and capacities
+    collapse to zero.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(out_path: str, batch: int = DEFAULT_BATCH, tile: int | None = None) -> dict:
+    spec = jax.ShapeDtypeStruct((batch, 8), jnp.float32)
+    if tile is None:
+        fn = model.score
+    else:
+        from compile.kernels.cc_kernel import score_configs
+
+        def fn(occ):
+            return score_configs(occ, tile=tile)
+
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    meta = {
+        "batch": batch,
+        "inputs": [{"name": "occ", "shape": [batch, 8], "dtype": "f32"}],
+        "outputs": [
+            {"name": "cc", "shape": [batch], "dtype": "f32"},
+            {"name": "capacity", "shape": [batch, 6], "dtype": "f32"},
+        ],
+    }
+    meta_path = os.path.splitext(out_path)[0]
+    meta_path = meta_path[: -len(".hlo")] if meta_path.endswith(".hlo") else meta_path
+    meta_path += ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    return {"hlo": out_path, "meta": meta_path, "chars": len(text)}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/cc_scorer.hlo.txt")
+    parser.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    parser.add_argument(
+        "--tile",
+        type=int,
+        default=None,
+        help="VMEM tile (default: auto, capped at 256). --tile == --batch "
+        "collapses the Pallas grid to one step — measurably faster on the "
+        "CPU PJRT backend (see EXPERIMENTS.md §Perf).",
+    )
+    args = parser.parse_args()
+    info = export(args.out, args.batch, args.tile)
+    print(f"wrote {info['chars']} chars to {info['hlo']} (+ {info['meta']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Layer 1 — the batched Configuration-Capability scorer as a Pallas kernel.
+
+The placement hot-spot of the paper is scoring GPU block configurations:
+MCC/MECC evaluate the post-allocation CC (Eq. 1) of *every* GPU in a
+1,213-host data center for every request. On TPU hardware that scoring
+maps naturally onto the MXU: a configuration is an 8-lane occupancy
+vector, the 18 legal ``(profile, start)`` placements form a static
+``18x8`` 0/1 mask matrix ``P``, and a placement fits iff its mask shares
+no block with the occupancy — i.e. iff ``(occ @ P.T) == 0``. One batched
+matmul feasibility-tests all 18 placements for a whole tile of GPUs;
+grouped reductions then give CC and the per-profile capacities.
+
+VMEM/BlockSpec plan (DESIGN.md "Hardware adaptation"): the batch dimension
+is tiled into ``TILE``-row blocks resident in VMEM; ``P`` (18x8) and the
+placement-to-profile matrix ``G`` (18x6) are tiny and pinned in VMEM for
+every grid step. All arithmetic is exact in float32 **and** bfloat16
+(counts <= 18), so the kernel can feed the MXU in its native dtype.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the interpreted kernel lowers to plain HLO and is what the
+AOT artifact ships. Real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# The six profiles in Algorithm 1 table order: (size_blocks, start_blocks).
+PROFILES = (
+    ("1g.5gb", 1, (0, 1, 2, 3, 4, 5, 6)),
+    ("1g.10gb", 2, (0, 2, 4, 6)),
+    ("2g.10gb", 2, (0, 2, 4)),
+    ("3g.20gb", 4, (0, 4)),
+    ("4g.20gb", 4, (0,)),
+    ("7g.40gb", 8, (0,)),
+)
+
+NUM_BLOCKS = 8
+NUM_PROFILES = len(PROFILES)
+
+
+def placement_tables() -> tuple[np.ndarray, np.ndarray]:
+    """The static (18, 8) placement-mask matrix ``P`` and the (18, 6)
+    placement-to-profile one-hot matrix ``G``."""
+    masks, groups = [], []
+    for p_idx, (_, size, starts) in enumerate(PROFILES):
+        for start in starts:
+            row = np.zeros(NUM_BLOCKS, dtype=np.float32)
+            row[start : start + size] = 1.0
+            masks.append(row)
+            onehot = np.zeros(NUM_PROFILES, dtype=np.float32)
+            onehot[p_idx] = 1.0
+            groups.append(onehot)
+    P = np.stack(masks)  # noqa: N806
+    G = np.stack(groups)  # noqa: N806
+    assert P.shape == (18, NUM_BLOCKS)
+    assert G.shape == (18, NUM_PROFILES)
+    return P, G
+
+
+def _cc_kernel(occ_ref, p_ref, g_ref, cc_ref, cap_ref):
+    """One grid step: score a (TILE, 8) occupancy block.
+
+    occ is 0/1 with 1 = block occupied. A placement is feasible iff the
+    overlap count ``occ · mask`` is exactly zero.
+    """
+    occ = occ_ref[...]
+    placements = p_ref[...]
+    overlap = jnp.dot(occ, placements.T, preferred_element_type=jnp.float32)
+    feasible = (overlap == 0.0).astype(jnp.float32)  # (TILE, 18)
+    cc_ref[...] = jnp.sum(feasible, axis=-1)
+    cap_ref[...] = jnp.dot(feasible, g_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def score_configs(occ: jax.Array, tile: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Batched CC + per-profile capacity of occupancy vectors.
+
+    Args:
+      occ: (B, 8) array, 1.0 where the memory block is occupied. B must be
+        a multiple of ``tile`` (the AOT wrapper pads).
+      tile: batch tile held in VMEM per grid step.
+
+    Returns:
+      ``(cc, cap)``: (B,) CC values and (B, 6) per-profile feasible-start
+      counts, both float32.
+    """
+    batch = occ.shape[0]
+    if batch % tile != 0:
+        raise ValueError(f"batch {batch} not a multiple of tile {tile}")
+    p_np, g_np = placement_tables()
+    p = jnp.asarray(p_np, dtype=occ.dtype)
+    g = jnp.asarray(g_np, dtype=occ.dtype)
+    grid = (batch // tile,)
+    cc, cap = pl.pallas_call(
+        _cc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, NUM_BLOCKS), lambda i: (i, 0)),
+            pl.BlockSpec((18, NUM_BLOCKS), lambda i: (0, 0)),
+            pl.BlockSpec((18, NUM_PROFILES), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, NUM_PROFILES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch, NUM_PROFILES), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(occ, p, g)
+    return cc, cap
+
+
+def auto_tile(batch: int, cap: int = 256) -> int:
+    """Largest divisor of ``batch`` not exceeding ``cap`` (VMEM budget)."""
+    best = 1
+    d = 1
+    while d * d <= batch:
+        if batch % d == 0:
+            for cand in (d, batch // d):
+                if cand <= cap and cand > best:
+                    best = cand
+        d += 1
+    return best
+
+
+def masks_to_batch(masks, dtype=jnp.float32) -> jax.Array:
+    """Convert an iterable of 8-bit occupancy masks to the (B, 8) input."""
+    arr = np.zeros((len(masks), NUM_BLOCKS), dtype=np.float32)
+    for i, m in enumerate(masks):
+        for b in range(NUM_BLOCKS):
+            if m & (1 << b):
+                arr[i, b] = 1.0
+    return jnp.asarray(arr, dtype=dtype)

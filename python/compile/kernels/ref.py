@@ -1,0 +1,69 @@
+"""Pure-jnp (and pure-Python) correctness oracles for the CC scorer.
+
+Two independent references:
+
+* :func:`score_configs_ref` — the same linear-algebra formulation as the
+  kernel, in plain ``jnp`` (catches Pallas-specific bugs: BlockSpec
+  indexing, tiling, dtype handling).
+* :func:`cc_scalar` / :func:`capacity_scalar` — a from-first-principles
+  bit-twiddling implementation of Eq. 1 (catches shared formulation bugs
+  in the mask matrices).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cc_kernel import NUM_BLOCKS, PROFILES, placement_tables
+
+
+def score_configs_ref(occ: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """CC + per-profile capacity via plain jnp (no Pallas)."""
+    p_np, g_np = placement_tables()
+    placements = jnp.asarray(p_np, dtype=occ.dtype)
+    groups = jnp.asarray(g_np, dtype=jnp.float32)
+    overlap = occ @ placements.T
+    feasible = (overlap == 0.0).astype(jnp.float32)
+    return jnp.sum(feasible, axis=-1), feasible @ groups
+
+
+def _placement_bitmasks() -> list[tuple[int, int]]:
+    """(profile_index, bitmask) for all 18 legal placements."""
+    out = []
+    for p_idx, (_, size, starts) in enumerate(PROFILES):
+        for start in starts:
+            mask = 0
+            for i in range(size):
+                mask |= 1 << (start + i)
+            out.append((p_idx, mask))
+    return out
+
+
+_BITMASKS = _placement_bitmasks()
+
+
+def cc_scalar(occ_mask: int) -> int:
+    """Eq. 1 from first principles on an 8-bit occupancy mask."""
+    return sum(1 for _, m in _BITMASKS if occ_mask & m == 0)
+
+
+def capacity_scalar(occ_mask: int) -> list[int]:
+    """Per-profile feasible-start counts on an 8-bit occupancy mask."""
+    caps = [0] * len(PROFILES)
+    for p_idx, m in _BITMASKS:
+        if occ_mask & m == 0:
+            caps[p_idx] += 1
+    return caps
+
+
+def batch_to_masks(occ) -> list[int]:
+    """Inverse of ``cc_kernel.masks_to_batch``."""
+    out = []
+    for row in occ:
+        mask = 0
+        for b in range(NUM_BLOCKS):
+            if float(row[b]) != 0.0:
+                mask |= 1 << b
+        out.append(mask)
+    return out

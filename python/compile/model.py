@@ -1,0 +1,80 @@
+"""Layer 2 — the JAX scoring graph exported to the Rust coordinator.
+
+Composes the L1 Pallas kernel into the functions the coordinator needs on
+its decision path:
+
+* :func:`score` — batched ``(cc, capacity)`` of occupancy vectors; this is
+  what MCC consumes (Algorithm 6's ``GetCC`` over every candidate GPU).
+* :func:`score_ecc` — capacity contracted with profile probabilities
+  (Algorithm 7's ``GetECC``) for MECC.
+* :func:`assign_best_start` — Algorithm 1 in tensor form: for a requested
+  profile, feasibility-test every start, score each resulting occupancy
+  and pick the CC-maximizing start (first maximal start on ties, matching
+  the driver behaviour and the Rust implementation bit-for-bit).
+
+Only :func:`score` is AOT-exported (``aot.py``): ECC is a dot product the
+coordinator does natively from ``capacity``, and the argmax of
+``assign_best_start`` is cheaper in Rust than a second artifact. The
+function is still part of the build-time test surface because it documents
+the exact tensor semantics of the native hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cc_kernel import NUM_BLOCKS, PROFILES, auto_tile, score_configs
+
+
+def score(occ: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(cc, capacity) for a (B, 8) occupancy batch — the AOT entry point."""
+    return score_configs(occ, tile=auto_tile(occ.shape[0]))
+
+
+def score_ecc(occ: jax.Array, probs: jax.Array) -> jax.Array:
+    """Algorithm 7: expected CC under per-profile probabilities (B,)."""
+    _, cap = score_configs(occ, tile=auto_tile(occ.shape[0]))
+    return cap @ probs.astype(cap.dtype)
+
+
+def _profile_start_table() -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(6, 7) legal-start flags and (6, 7, 8) candidate placement masks.
+
+    Row p lists up to 7 candidate starts for profile p (padded with
+    zeros); ``legal[p, s_idx]`` marks real entries.
+    """
+    import numpy as np
+
+    legal = np.zeros((len(PROFILES), 7), dtype=np.float32)
+    masks = np.zeros((len(PROFILES), 7, NUM_BLOCKS), dtype=np.float32)
+    for p, (_, size, starts) in enumerate(PROFILES):
+        for s_idx, start in enumerate(starts):
+            legal[p, s_idx] = 1.0
+            masks[p, s_idx, start : start + size] = 1.0
+    return jnp.asarray(legal), jnp.asarray(masks)
+
+
+def assign_best_start(occ: jax.Array, profile_index: int) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 1 in tensor form over a (B, 8) batch.
+
+    Returns ``(start_idx, feasible)``: per row, the index into the
+    profile's start list maximizing post-allocation CC (first max on
+    ties), and whether any start fits.
+    """
+    legal, masks = _profile_start_table()
+    cand_masks = masks[profile_index]  # (7, 8)
+    cand_legal = legal[profile_index]  # (7,)
+    batch = occ.shape[0]
+    # Candidate occupancies: (B, 7, 8); infeasible where blocks overlap.
+    overlap = jnp.einsum("bk,sk->bs", occ, cand_masks)
+    fits = (overlap == 0.0) & (cand_legal > 0.0)  # (B, 7)
+    new_occ = jnp.clip(occ[:, None, :] + cand_masks[None, :, :], 0.0, 1.0)
+    # tile=7 always divides the flattened batch*7 candidate rows.
+    cc, _ = score_configs(new_occ.reshape(batch * 7, NUM_BLOCKS), tile=7)
+    cc = cc.reshape(batch, 7)
+    cc = jnp.where(fits, cc, -1.0)
+    # First maximal start: argmax returns the first index on ties.
+    start_idx = jnp.argmax(cc, axis=1)
+    feasible = jnp.any(fits, axis=1)
+    return start_idx, feasible

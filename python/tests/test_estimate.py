@@ -1,0 +1,39 @@
+"""Sanity checks on the analytic TPU resource model (§Perf methodology)."""
+
+from compile.estimate import VMEM_BYTES, estimate, report
+
+
+def test_vmem_scales_linearly_with_tile():
+    a = estimate(256)
+    b = estimate(512)
+    # Fixed matrices aside, doubling the tile ~doubles VMEM.
+    assert 1.8 < b.vmem_bytes / a.vmem_bytes < 2.1
+
+
+def test_reasonable_tiles_fit_vmem():
+    for tile in (64, 256, 1024, 4096):
+        e = estimate(tile)
+        assert e.vmem_bytes < VMEM_BYTES, f"tile {tile} spills VMEM"
+        assert 0 < e.vmem_frac < 1
+
+
+def test_kernel_is_memory_bound():
+    # Arithmetic intensity is far below any MXU roofline knee (~100s
+    # FLOP/B): the kernel streams configs and must be judged against the
+    # HBM roofline, which is the documented §Perf target.
+    e = estimate(1024)
+    assert e.arithmetic_intensity < 50
+    # Throughput is enormous regardless: > 1e9 configs/s at roofline.
+    assert e.configs_per_sec > 1e9
+
+
+def test_mxu_utilization_low_by_design():
+    # K = 8/18 underfills the 128-wide systolic array.
+    e = estimate(4096)
+    assert e.mxu_util < 0.2
+
+
+def test_report_renders_all_tiles():
+    text = report([64, 256])
+    assert "64" in text and "256" in text
+    assert "VMEM" in text

@@ -1,0 +1,125 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp and scalar oracles.
+
+Hypothesis sweeps occupancy masks, batch shapes and dtypes; fixed tests
+pin the paper's worked examples.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.cc_kernel import (
+    NUM_BLOCKS,
+    PROFILES,
+    masks_to_batch,
+    placement_tables,
+    score_configs,
+)
+from compile.kernels.ref import capacity_scalar, cc_scalar, score_configs_ref
+
+
+def run_kernel(masks, tile=None, dtype=jnp.float32):
+    occ = masks_to_batch(masks, dtype=dtype)
+    if tile is None:
+        tile = occ.shape[0]
+    cc, cap = score_configs(occ, tile=tile)
+    return np.asarray(cc), np.asarray(cap)
+
+
+class TestStaticTables:
+    def test_eighteen_placements(self):
+        P, G = placement_tables()
+        assert P.shape == (18, 8)
+        assert G.shape == (18, 6)
+        # Each placement maps to exactly one profile.
+        assert np.array_equal(G.sum(axis=1), np.ones(18))
+        # Mask row sums equal the profile sizes.
+        sizes = G @ np.array([s for _, s, _ in PROFILES], dtype=np.float32)
+        assert np.array_equal(P.sum(axis=1), sizes)
+
+    def test_instance_counts_match_table1(self):
+        _, G = placement_tables()
+        per_profile = G.sum(axis=0)
+        assert list(per_profile) == [7, 4, 3, 2, 1, 1]
+
+
+class TestPaperExamples:
+    def test_empty_gpu_cc_18(self):
+        cc, cap = run_kernel([0x00])
+        assert cc[0] == 18.0
+        assert list(cap[0]) == [7, 4, 3, 2, 1, 1]
+
+    def test_full_gpu_cc_0(self):
+        cc, cap = run_kernel([0xFF])
+        assert cc[0] == 0.0
+        assert cap[0].sum() == 0.0
+
+    def test_section5_worked_example_cc_9(self):
+        # Blocks 0 and 3 occupied -> CC = 9 (5, 2, 1, 1, 0, 0).
+        cc, cap = run_kernel([0b0000_1001])
+        assert cc[0] == 9.0
+        assert list(cap[0]) == [5, 2, 1, 1, 0, 0]
+
+    def test_fig2a_checkerboard(self):
+        # Blocks 1,3,5,7 occupied: no 2-block profile fits.
+        cc, cap = run_kernel([0b1010_1010])
+        assert cap[0][1] == 0  # 1g.10gb
+        assert cap[0][2] == 0  # 2g.10gb
+        assert cap[0][0] == 4  # 1g.5gb at 0,2,4,6
+
+
+class TestKernelVsReferences:
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=255), min_size=1, max_size=64))
+    def test_matches_scalar_oracle(self, masks):
+        cc, cap = run_kernel(masks)
+        for i, m in enumerate(masks):
+            assert cc[i] == cc_scalar(m), f"mask {m:08b}"
+            assert list(cap[i]) == capacity_scalar(m), f"mask {m:08b}"
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        st.lists(st.integers(min_value=0, max_value=255), min_size=1, max_size=48),
+        st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_matches_jnp_reference_across_dtypes(self, masks, dtype):
+        occ = masks_to_batch(masks, dtype=dtype)
+        cc_k, cap_k = score_configs(occ, tile=occ.shape[0])
+        cc_r, cap_r = score_configs_ref(occ)
+        np.testing.assert_allclose(np.asarray(cc_k), np.asarray(cc_r), rtol=0, atol=0)
+        np.testing.assert_allclose(np.asarray(cap_k), np.asarray(cap_r), rtol=0, atol=0)
+
+    def test_exhaustive_all_256_masks(self):
+        masks = list(range(256))
+        cc, cap = run_kernel(masks, tile=64)
+        for m in masks:
+            assert cc[m] == cc_scalar(m)
+            assert list(cap[m]) == capacity_scalar(m)
+
+
+class TestTiling:
+    @pytest.mark.parametrize("batch,tile", [(8, 8), (64, 16), (256, 256), (512, 128)])
+    def test_tilings_agree(self, batch, tile):
+        rng = np.random.default_rng(batch * 1000 + tile)
+        masks = rng.integers(0, 256, size=batch).tolist()
+        cc_a, cap_a = run_kernel(masks, tile=tile)
+        cc_b, cap_b = run_kernel(masks, tile=batch)
+        np.testing.assert_array_equal(cc_a, cc_b)
+        np.testing.assert_array_equal(cap_a, cap_b)
+
+    def test_non_dividing_tile_rejected(self):
+        with pytest.raises(ValueError):
+            score_configs(jnp.zeros((10, NUM_BLOCKS), jnp.float32), tile=4)
+
+
+class TestMonotonicity:
+    @settings(max_examples=100, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=255),
+        st.integers(min_value=0, max_value=7),
+    )
+    def test_occupying_a_block_never_raises_cc(self, mask, block):
+        cc, _ = run_kernel([mask, mask | (1 << block)])
+        assert cc[1] <= cc[0]

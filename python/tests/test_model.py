@@ -1,0 +1,122 @@
+"""L2 correctness: the scoring graph's composite functions and the AOT
+export surface (shapes, determinism, tuple structure)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.cc_kernel import masks_to_batch
+from compile.kernels.ref import capacity_scalar, cc_scalar
+
+
+class TestScore:
+    def test_shapes(self):
+        occ = jnp.zeros((32, 8), jnp.float32)
+        cc, cap = model.score(occ)
+        assert cc.shape == (32,)
+        assert cap.shape == (32, 6)
+
+    def test_deterministic(self):
+        occ = masks_to_batch(list(range(64)))
+        a = model.score(occ)
+        b = model.score(occ)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+class TestEcc:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=255), min_size=4, max_size=4))
+    def test_ecc_is_prob_weighted_capacity(self, masks):
+        occ = masks_to_batch(masks)
+        probs = jnp.asarray([0.1, 0.05, 0.2, 0.15, 0.1, 0.4], jnp.float32)
+        ecc = np.asarray(model.score_ecc(occ, probs))
+        for i, m in enumerate(masks):
+            expected = float(np.dot(np.asarray(probs), capacity_scalar(m)))
+            assert abs(ecc[i] - expected) < 1e-5
+
+    def test_uniform_probs_give_cc_over_6(self):
+        occ = masks_to_batch([0b0000_1001])
+        probs = jnp.full((6,), 1.0 / 6.0, jnp.float32)
+        ecc = float(model.score_ecc(occ, probs)[0])
+        assert abs(ecc - cc_scalar(0b0000_1001) / 6.0) < 1e-5
+
+
+class TestAssignBestStart:
+    def _best_start_scalar(self, mask: int, profile_index: int):
+        """Algorithm 1 reference: first CC-maximizing start."""
+        from compile.kernels.cc_kernel import PROFILES
+
+        _, size, starts = PROFILES[profile_index]
+        best = None
+        for s_idx, start in enumerate(starts):
+            pmask = 0
+            for i in range(size):
+                pmask |= 1 << (start + i)
+            if mask & pmask:
+                continue
+            cc_val = cc_scalar(mask | pmask)
+            if best is None or cc_val > best[1]:
+                best = (s_idx, cc_val)
+        return best
+
+    def test_first_1g_goes_to_block_6(self):
+        # §5.1: the first 1g.5gb on an empty GPU lands on block 6 —
+        # start index 6 in the profile's start list (0..6).
+        occ = masks_to_batch([0])
+        idx, feasible = model.assign_best_start(occ, 0)
+        assert bool(feasible[0])
+        assert int(idx[0]) == 6
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=255),
+        st.integers(min_value=0, max_value=5),
+    )
+    def test_matches_scalar_algorithm1(self, mask, profile_index):
+        occ = masks_to_batch([mask])
+        idx, feasible = model.assign_best_start(occ, profile_index)
+        expected = self._best_start_scalar(mask, profile_index)
+        if expected is None:
+            assert not bool(feasible[0])
+        else:
+            assert bool(feasible[0])
+            assert int(idx[0]) == expected[0], f"mask {mask:08b} profile {profile_index}"
+
+
+class TestAotExport:
+    def test_export_writes_hlo_text_and_meta(self, tmp_path):
+        from compile import aot
+
+        out = tmp_path / "scorer.hlo.txt"
+        info = aot.export(str(out), batch=64)
+        text = out.read_text()
+        assert "HloModule" in text
+        assert info["chars"] == len(text)
+        import json
+
+        meta = json.loads((tmp_path / "scorer.meta.json").read_text())
+        assert meta["batch"] == 64
+        assert meta["outputs"][0]["name"] == "cc"
+
+    def test_exported_hlo_mentions_parameter_shape(self, tmp_path):
+        from compile import aot
+
+        out = tmp_path / "scorer.hlo.txt"
+        aot.export(str(out), batch=32)
+        text = out.read_text()
+        assert "f32[32,8]" in text.replace(" ", "")
+
+    def test_no_elided_constants(self, tmp_path):
+        # Regression guard: the default HLO printer elides the placement
+        # matrices as "{...}", which the Rust-side parser reads as zeros.
+        from compile import aot
+
+        out = tmp_path / "scorer.hlo.txt"
+        aot.export(str(out), batch=32)
+        text = out.read_text()
+        assert "{...}" not in text
+        # The 18x8 placement matrix starts with the 1g.5gb@0 row.
+        assert "f32[8,18]" in text.replace(" ", "") or "f32[18,8]" in text.replace(" ", "")

@@ -1,0 +1,312 @@
+//! The cluster state: hosts, GPU addressing, VM placement bookkeeping and
+//! active-hardware accounting.
+
+use super::host::Host;
+use super::vm::{VmId, VmSpec};
+use crate::mig::{GpuState, Placement};
+use std::collections::HashMap;
+
+/// Address of one GPU: `(host index, GPU index within host)`. Ordering is
+/// the paper's `globalIndex` (Algorithm 2) — lexicographic, so first-fit
+/// scans are deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GpuRef {
+    pub host: u32,
+    pub gpu: u8,
+}
+
+/// Where a VM currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VmLocation {
+    pub gpu: GpuRef,
+    pub placement: Placement,
+}
+
+/// The data center: all hosts plus a VM→location index.
+#[derive(Debug, Clone, Default)]
+pub struct DataCenter {
+    hosts: Vec<Host>,
+    locations: HashMap<VmId, VmLocation>,
+    /// CPU/RAM demands of resident VMs (needed on departure).
+    demands: HashMap<VmId, (u32, u32)>,
+}
+
+impl DataCenter {
+    pub fn new(hosts: Vec<Host>) -> DataCenter {
+        DataCenter { hosts, locations: HashMap::new(), demands: HashMap::new() }
+    }
+
+    pub fn hosts(&self) -> &[Host] {
+        &self.hosts
+    }
+
+    pub fn host(&self, id: u32) -> &Host {
+        &self.hosts[id as usize]
+    }
+
+    pub fn host_mut(&mut self, id: u32) -> &mut Host {
+        &mut self.hosts[id as usize]
+    }
+
+    /// Total number of GPUs in the data center.
+    pub fn num_gpus(&self) -> usize {
+        self.hosts.iter().map(|h| h.gpus().len()).sum()
+    }
+
+    /// All GPU references in `globalIndex` order.
+    pub fn gpu_refs(&self) -> Vec<GpuRef> {
+        let mut refs = Vec::with_capacity(self.num_gpus());
+        for h in &self.hosts {
+            for g in 0..h.gpus().len() {
+                refs.push(GpuRef { host: h.id, gpu: g as u8 });
+            }
+        }
+        refs
+    }
+
+    pub fn gpu(&self, r: GpuRef) -> &GpuState {
+        &self.hosts[r.host as usize].gpus()[r.gpu as usize]
+    }
+
+    pub fn gpu_mut(&mut self, r: GpuRef) -> &mut GpuState {
+        self.hosts[r.host as usize].gpu_mut(r.gpu as usize)
+    }
+
+    /// Location of a resident VM.
+    pub fn locate(&self, vm: VmId) -> Option<VmLocation> {
+        self.locations.get(&vm).copied()
+    }
+
+    /// CPU/RAM demands of a resident VM.
+    pub fn vm_demands(&self, vm: VmId) -> Option<(u32, u32)> {
+        self.demands.get(&vm).copied()
+    }
+
+    /// Number of resident VMs.
+    pub fn resident_count(&self) -> usize {
+        self.locations.len()
+    }
+
+    /// Place `vm` on the given GPU at the given placement, reserving host
+    /// CPU/RAM. Caller must have validated feasibility (CPU/RAM and block
+    /// availability); debug builds assert it.
+    pub fn place(&mut self, vm: &VmSpec, gpu_ref: GpuRef, placement: Placement) {
+        debug_assert!(self.locations.get(&vm.id).is_none(), "VM {} already placed", vm.id);
+        let host = &mut self.hosts[gpu_ref.host as usize];
+        host.reserve(vm.cpus, vm.ram_gb);
+        host.gpu_mut(gpu_ref.gpu as usize).place(vm.id, placement);
+        self.locations.insert(vm.id, VmLocation { gpu: gpu_ref, placement });
+        self.demands.insert(vm.id, (vm.cpus, vm.ram_gb));
+    }
+
+    /// Remove a resident VM entirely (departure), releasing all resources.
+    /// Returns its former location.
+    pub fn remove(&mut self, vm: VmId) -> Option<VmLocation> {
+        let loc = self.locations.remove(&vm)?;
+        let (cpus, ram) = self.demands.remove(&vm).unwrap_or((0, 0));
+        let host = &mut self.hosts[loc.gpu.host as usize];
+        host.gpu_mut(loc.gpu.gpu as usize).remove_vm(vm);
+        host.release(cpus, ram);
+        Some(loc)
+    }
+
+    /// Move a VM's GI to a different placement on the *same* GPU
+    /// (intra-GPU migration; the `ω_ijk`-only case of Eq. 24–25).
+    pub fn relocate_within_gpu(&mut self, vm: VmId, new_placement: Placement) {
+        let loc = self.locations.get_mut(&vm).expect("VM resident");
+        let gpu_ref = loc.gpu;
+        loc.placement = new_placement;
+        let gpu = self.hosts[gpu_ref.host as usize].gpu_mut(gpu_ref.gpu as usize);
+        gpu.remove_vm(vm).expect("instance present");
+        gpu.place(vm, new_placement);
+    }
+
+    /// Update the location index after an externally performed intra-GPU
+    /// move (used by the defragmentation re-pack, which manipulates the
+    /// `GpuState` in bulk to avoid transient overlaps).
+    pub(crate) fn relocate_index(&mut self, vm: VmId, gpu: GpuRef, placement: Placement) {
+        self.locations.insert(vm, VmLocation { gpu, placement });
+    }
+
+    /// Move a VM's GI to a different GPU (inter-GPU migration). Host
+    /// CPU/RAM moves with it when the hosts differ. Caller validated the
+    /// destination placement is free.
+    pub fn migrate(&mut self, vm: VmId, dst: GpuRef, placement: Placement) {
+        let loc = *self.locations.get(&vm).expect("VM resident");
+        let (cpus, ram) = *self.demands.get(&vm).expect("VM demands known");
+        let src = loc.gpu;
+        self.hosts[src.host as usize].gpu_mut(src.gpu as usize).remove_vm(vm);
+        if src.host != dst.host {
+            self.hosts[src.host as usize].release(cpus, ram);
+            self.hosts[dst.host as usize].reserve(cpus, ram);
+        }
+        self.hosts[dst.host as usize].gpu_mut(dst.gpu as usize).place(vm, placement);
+        self.locations.insert(vm, VmLocation { gpu: dst, placement });
+    }
+
+    /// Active-hardware count under the paper's *strict* definition (§2):
+    /// a PM is active if it hosts any VM; every GPU on an active PM counts
+    /// as active even when idle (idle GPUs count as inactive only when the
+    /// whole machine is idle). Returns `(active units, total units)` where
+    /// a unit is one PM or one GPU, matching Eq. 4's `φ_j + Σ_k γ_jk`.
+    pub fn active_hardware(&self) -> (usize, usize) {
+        let mut active = 0usize;
+        let mut total = 0usize;
+        for h in &self.hosts {
+            total += 1 + h.gpus().len();
+            if h.is_active() {
+                active += 1 + h.gpus().len();
+            }
+        }
+        (active, total)
+    }
+
+    /// Active-hardware rate in `[0, 1]`.
+    pub fn active_hardware_rate(&self) -> f64 {
+        let (active, total) = self.active_hardware();
+        if total == 0 {
+            0.0
+        } else {
+            active as f64 / total as f64
+        }
+    }
+
+    /// Looser accounting for ablation: GPUs count individually (`γ_jk`
+    /// set only when hosting a GI, Eq. 21).
+    pub fn active_hardware_loose(&self) -> (usize, usize) {
+        let mut active = 0usize;
+        let mut total = 0usize;
+        for h in &self.hosts {
+            total += 1 + h.gpus().len();
+            if h.is_active() {
+                active += 1;
+            }
+            active += h.gpus().iter().filter(|g| !g.is_empty()).count();
+        }
+        (active, total)
+    }
+
+    /// Integrity check: every location index entry matches the GPU state,
+    /// and host counters equal the sums of resident demands.
+    pub fn check_integrity(&self) -> Result<(), String> {
+        for (vm, loc) in &self.locations {
+            let gpu = self.gpu(loc.gpu);
+            match gpu.find_vm(*vm) {
+                None => return Err(format!("VM {vm} indexed but absent from {:?}", loc.gpu)),
+                Some(inst) if inst.placement != loc.placement => {
+                    return Err(format!("VM {vm} placement mismatch"))
+                }
+                _ => {}
+            }
+        }
+        for h in &self.hosts {
+            for (g_idx, g) in h.gpus().iter().enumerate() {
+                if !crate::mig::gpu::consistent(g) {
+                    return Err(format!("host {} GPU {g_idx} inconsistent", h.id));
+                }
+                for inst in g.instances() {
+                    let loc = self
+                        .locations
+                        .get(&inst.vm)
+                        .ok_or_else(|| format!("VM {} on GPU but not indexed", inst.vm))?;
+                    if loc.gpu != (GpuRef { host: h.id, gpu: g_idx as u8 }) {
+                        return Err(format!("VM {} location index stale", inst.vm));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::Profile;
+
+    fn spec(id: VmId, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 4, ram_gb: 16, arrival: 0, departure: 100, weight: 1.0 }
+    }
+
+    fn small_dc() -> DataCenter {
+        DataCenter::new(vec![Host::new(0, 64, 256, 2), Host::new(1, 64, 256, 1)])
+    }
+
+    #[test]
+    fn place_and_remove() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P3g20gb);
+        let r = GpuRef { host: 0, gpu: 1 };
+        dc.place(&vm, r, Placement { profile: Profile::P3g20gb, start: 0 });
+        assert_eq!(dc.locate(1).unwrap().gpu, r);
+        assert_eq!(dc.host(0).free_cpus(), 60);
+        dc.check_integrity().unwrap();
+        let loc = dc.remove(1).unwrap();
+        assert_eq!(loc.gpu, r);
+        assert!(dc.locate(1).is_none());
+        assert_eq!(dc.host(0).free_cpus(), 64);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn strict_active_hardware() {
+        let mut dc = small_dc();
+        assert_eq!(dc.active_hardware(), (0, 5)); // 2 hosts + 3 GPUs
+        let vm = spec(1, Profile::P1g5gb);
+        dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P1g5gb, start: 6 });
+        // Host 0 active: counts itself + BOTH its GPUs (strict rule).
+        assert_eq!(dc.active_hardware(), (3, 5));
+        assert_eq!(dc.active_hardware_loose(), (2, 5));
+    }
+
+    #[test]
+    fn migrate_between_hosts_moves_resources() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P4g20gb);
+        dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P4g20gb, start: 0 });
+        dc.migrate(1, GpuRef { host: 1, gpu: 0 }, Placement { profile: Profile::P4g20gb, start: 0 });
+        assert_eq!(dc.host(0).free_cpus(), 64);
+        assert_eq!(dc.host(1).free_cpus(), 60);
+        assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 1, gpu: 0 });
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn relocate_within_gpu() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P1g5gb);
+        let r = GpuRef { host: 0, gpu: 0 };
+        dc.place(&vm, r, Placement { profile: Profile::P1g5gb, start: 4 });
+        dc.relocate_within_gpu(1, Placement { profile: Profile::P1g5gb, start: 6 });
+        assert_eq!(dc.locate(1).unwrap().placement.start, 6);
+        assert_eq!(dc.host(0).free_cpus(), 60); // CPU unchanged
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn gpu_refs_global_index_order() {
+        let dc = small_dc();
+        let refs = dc.gpu_refs();
+        assert_eq!(
+            refs,
+            vec![
+                GpuRef { host: 0, gpu: 0 },
+                GpuRef { host: 0, gpu: 1 },
+                GpuRef { host: 1, gpu: 0 }
+            ]
+        );
+        let mut sorted = refs.clone();
+        sorted.sort();
+        assert_eq!(refs, sorted);
+    }
+
+    #[test]
+    fn integrity_detects_corruption() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P1g5gb);
+        dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P1g5gb, start: 6 });
+        // Corrupt: remove from GPU behind the index's back.
+        dc.host_mut(0).gpu_mut(0).remove_vm(1);
+        assert!(dc.check_integrity().is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Physical machines (`PM_j` of §6) with CPU/RAM capacities and GPUs.
+
+use crate::mig::GpuState;
+
+/// A physical machine: CPU/RAM capacities (`C_j`, `R_j` of Eq. 6–7) and a
+/// collection of MIG-enabled GPUs (`P_j`).
+#[derive(Debug, Clone)]
+pub struct Host {
+    pub id: u32,
+    /// CPU capacity in cores (`C_j`).
+    pub cpus: u32,
+    /// RAM capacity in GB (`R_j`).
+    pub ram_gb: u32,
+    /// Power/priority weight (`b_j` of Eq. 4).
+    pub weight: f64,
+    /// GPU characteristic (`H_jk` of Eq. 17–18); 100 for A100s.
+    pub gpu_characteristic: u32,
+    pub(crate) used_cpus: u32,
+    pub(crate) used_ram: u32,
+    pub(crate) gpus: Vec<GpuState>,
+    /// Number of VMs currently resident (for active-hardware accounting).
+    pub(crate) resident_vms: u32,
+}
+
+impl Host {
+    /// Create a host with `num_gpus` empty A100s.
+    pub fn new(id: u32, cpus: u32, ram_gb: u32, num_gpus: usize) -> Host {
+        Host {
+            id,
+            cpus,
+            ram_gb,
+            weight: 1.0,
+            gpu_characteristic: 100,
+            used_cpus: 0,
+            used_ram: 0,
+            gpus: vec![GpuState::new(); num_gpus],
+            resident_vms: 0,
+        }
+    }
+
+    /// CPU cores still free.
+    pub fn free_cpus(&self) -> u32 {
+        self.cpus - self.used_cpus
+    }
+
+    /// RAM (GB) still free.
+    pub fn free_ram(&self) -> u32 {
+        self.ram_gb - self.used_ram
+    }
+
+    /// Would a VM with these demands fit CPU/RAM-wise (Eq. 6–7)?
+    pub fn fits_resources(&self, cpus: u32, ram_gb: u32) -> bool {
+        self.free_cpus() >= cpus && self.free_ram() >= ram_gb
+    }
+
+    /// GPUs on this host.
+    pub fn gpus(&self) -> &[GpuState] {
+        &self.gpus
+    }
+
+    /// Mutable access to one GPU.
+    pub fn gpu_mut(&mut self, idx: usize) -> &mut GpuState {
+        &mut self.gpus[idx]
+    }
+
+    /// Active = hosts at least one VM (`φ_j` of Eq. 19).
+    pub fn is_active(&self) -> bool {
+        self.resident_vms > 0
+    }
+
+    /// Number of resident VMs.
+    pub fn resident_vms(&self) -> u32 {
+        self.resident_vms
+    }
+
+    /// Reserve CPU/RAM for a VM. Panics in debug builds on over-commit.
+    pub(crate) fn reserve(&mut self, cpus: u32, ram_gb: u32) {
+        debug_assert!(self.fits_resources(cpus, ram_gb));
+        self.used_cpus += cpus;
+        self.used_ram += ram_gb;
+        self.resident_vms += 1;
+    }
+
+    /// Release CPU/RAM previously reserved.
+    pub(crate) fn release(&mut self, cpus: u32, ram_gb: u32) {
+        debug_assert!(self.used_cpus >= cpus && self.used_ram >= ram_gb);
+        self.used_cpus -= cpus;
+        self.used_ram -= ram_gb;
+        debug_assert!(self.resident_vms > 0);
+        self.resident_vms -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_accounting() {
+        let mut h = Host::new(0, 64, 256, 4);
+        assert!(h.fits_resources(64, 256));
+        assert!(!h.fits_resources(65, 1));
+        h.reserve(32, 100);
+        assert_eq!(h.free_cpus(), 32);
+        assert_eq!(h.free_ram(), 156);
+        assert!(h.is_active());
+        h.release(32, 100);
+        assert!(!h.is_active());
+        assert_eq!(h.free_cpus(), 64);
+    }
+
+    #[test]
+    fn gpus_initialized_empty() {
+        let h = Host::new(1, 8, 32, 8);
+        assert_eq!(h.gpus().len(), 8);
+        assert!(h.gpus().iter().all(|g| g.is_empty()));
+    }
+}

@@ -1,0 +1,18 @@
+//! The data-center model: physical machines, GPUs, VMs (§6's `M`, `P_j`,
+//! `N`).
+//!
+//! * [`vm`] — VM specifications (`c_i`, `r_i`, `g_i` via the MIG profile,
+//!   arrival/departure times).
+//! * [`host`] — physical machines with CPU/RAM capacities (`C_j`, `R_j`)
+//!   and one to eight MIG-enabled GPUs.
+//! * [`datacenter`] — the cluster state: placement/removal of VMs with a
+//!   VM→location index, GPU addressing by global index, and the paper's
+//!   strict active-hardware accounting.
+
+pub mod datacenter;
+pub mod host;
+pub mod vm;
+
+pub use datacenter::{DataCenter, GpuRef, VmLocation};
+pub use host::Host;
+pub use vm::{Time, VmId, VmSpec, HOUR};

@@ -1,0 +1,71 @@
+//! Virtual machine specifications (the set `N` of §6).
+
+use crate::mig::Profile;
+
+/// VM identifier (also tags GPU instances in [`crate::mig::GpuState`]).
+pub type VmId = u64;
+
+/// Simulation time in seconds.
+pub type Time = u64;
+
+/// One VM request: a MIG GI profile plus host-level CPU/RAM demands and
+/// its lifetime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VmSpec {
+    pub id: VmId,
+    /// Requested GI profile (`g_i`, `h_i` derive from it).
+    pub profile: Profile,
+    /// CPU cores requested (`c_i`).
+    pub cpus: u32,
+    /// RAM in GB requested (`r_i`).
+    pub ram_gb: u32,
+    /// Arrival time (seconds).
+    pub arrival: Time,
+    /// Departure time (seconds); `departure > arrival`.
+    pub departure: Time,
+    /// Acceptance weight (`a_i` of Eq. 3); provider-defined priority.
+    pub weight: f64,
+}
+
+impl VmSpec {
+    /// Lifetime in seconds.
+    pub fn duration(&self) -> Time {
+        self.departure.saturating_sub(self.arrival)
+    }
+}
+
+/// Seconds per simulated hour (metric sampling granularity).
+pub const HOUR: Time = 3_600;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_computed() {
+        let vm = VmSpec {
+            id: 1,
+            profile: Profile::P2g10gb,
+            cpus: 8,
+            ram_gb: 32,
+            arrival: 100,
+            departure: 4_100,
+            weight: 1.0,
+        };
+        assert_eq!(vm.duration(), 4_000);
+    }
+
+    #[test]
+    fn duration_saturates() {
+        let vm = VmSpec {
+            id: 1,
+            profile: Profile::P1g5gb,
+            cpus: 1,
+            ram_gb: 1,
+            arrival: 10,
+            departure: 5,
+            weight: 1.0,
+        };
+        assert_eq!(vm.duration(), 0);
+    }
+}

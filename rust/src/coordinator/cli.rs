@@ -1,0 +1,84 @@
+//! `repro serve` — replay a trace through the coordinator service and
+//! report serving metrics (acceptance, decision latency, throughput).
+
+use super::service::{Coordinator, CoordinatorConfig, Request, Response};
+use crate::cluster::DataCenter;
+use crate::policies::{self, mcc::Mcc};
+use crate::runtime::scorer::XlaScorer;
+use crate::trace::{TraceConfig, Workload};
+use crate::util::cli::Args;
+use std::sync::mpsc;
+
+/// Entry point for the `serve` subcommand.
+pub fn run(args: &Args) {
+    let seed = args.num_or("seed", 42u64);
+    let trace = if args.flag("quick") {
+        TraceConfig::small(seed)
+    } else {
+        TraceConfig { seed, ..TraceConfig::default() }
+    };
+    let workload = Workload::generate(trace);
+    let policy_name = args.str_or("policy", "grmu");
+    let scorer = args.str_or("scorer", "native");
+    let heavy_frac = args.num_or("heavy-frac", 0.30f64);
+    let consolidation = args.get("consolidation").and_then(|s| s.parse().ok());
+
+    let policy: Box<dyn policies::Policy> = if policy_name == "mcc" && scorer == "xla" {
+        let artifact = args.str_or("artifact", "artifacts/cc_scorer.hlo.txt");
+        let xla = XlaScorer::load(std::path::Path::new(&artifact))
+            .expect("loading XLA scorer artifact (run `make artifacts` first)");
+        eprintln!("scoring through PJRT: {artifact}");
+        Box::new(Mcc::with_scorer(Box::new(xla)))
+    } else {
+        policies::by_name(&policy_name, heavy_frac, consolidation).expect("known policy")
+    };
+
+    eprintln!(
+        "serving {} VMs over {} hosts / {} GPUs with {} (scorer: {})",
+        workload.vms.len(),
+        workload.hosts.len(),
+        workload.num_gpus(),
+        policy_name,
+        scorer
+    );
+
+    let coordinator = Coordinator::new(
+        DataCenter::new(workload.hosts.clone()),
+        policy,
+        CoordinatorConfig::default(),
+    );
+
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let server = std::thread::spawn(move || coordinator.serve(req_rx, resp_tx));
+
+    // Feeder thread: replay arrivals in virtual-time order.
+    let vms = workload.vms.clone();
+    let feeder = std::thread::spawn(move || {
+        for vm in vms {
+            if req_tx.send(Request { vm }).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut accepted = 0u64;
+    let mut total = 0u64;
+    for resp in resp_rx {
+        total += 1;
+        if resp.accepted {
+            accepted += 1;
+        }
+    }
+    feeder.join().unwrap();
+    let stats = server.join().unwrap();
+
+    println!(
+        "served={total} accepted={accepted} ({:.1}%)  batches={}  p50={:.1}µs p99={:.1}µs  throughput={:.0} decisions/s",
+        100.0 * accepted as f64 / total.max(1) as f64,
+        stats.batches,
+        stats.latency_p50_us(),
+        stats.latency_p99_us(),
+        stats.throughput(),
+    );
+}

@@ -1,0 +1,12 @@
+//! The online placement coordinator (L3 service shell).
+//!
+//! Wraps the placement policies in a request/response service loop with
+//! admission metrics, periodic maintenance ticks, and pluggable CC
+//! scoring (native table lookups or the AOT-compiled XLA artifact).
+//! See [`service`] for the event loop and [`cli`] for the `repro serve`
+//! entry point.
+
+pub mod cli;
+pub mod service;
+
+pub use service::{Coordinator, CoordinatorConfig, Request, Response};

@@ -1,0 +1,300 @@
+//! The coordinator service: an online request loop around a placement
+//! policy.
+//!
+//! Requests (VM specifications) arrive on a channel; the coordinator
+//! batches them per simulated interval, releases departed VMs, asks the
+//! policy for decisions and answers on the response channel. Python is
+//! never involved: when the XLA scorer is selected, the coordinator calls
+//! the AOT-compiled artifact through the PJRT runtime.
+//!
+//! The offline build environment has no tokio, so concurrency uses
+//! `std::thread` + `std::sync::mpsc` — the event-loop structure (bounded
+//! batching, deadline-driven maintenance ticks, metrics) is the same as
+//! an async implementation would have.
+
+use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::policies::Policy;
+use crate::util::stats::percentile;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// A placement request: the VM spec (arrival acts as virtual time).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub vm: VmSpec,
+}
+
+/// The decision for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub vm: VmId,
+    pub accepted: bool,
+    /// GPU hosting the VM when accepted.
+    pub gpu: Option<GpuRef>,
+    /// Wall-clock decision latency for the batch containing this VM, µs.
+    pub decision_us: f64,
+}
+
+/// Coordinator knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Max requests folded into one placement batch.
+    pub max_batch: usize,
+    /// Virtual interval length for batching and maintenance ticks.
+    pub interval: Time,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { max_batch: 256, interval: HOUR }
+    }
+}
+
+/// Aggregate service statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorStats {
+    pub requests: u64,
+    pub accepted: u64,
+    pub batches: u64,
+    /// Per-batch decision latencies (µs).
+    pub batch_latencies_us: Vec<f64>,
+    /// Total wall time spent deciding (s).
+    pub decision_seconds: f64,
+}
+
+impl CoordinatorStats {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.requests as f64
+        }
+    }
+
+    pub fn latency_p50_us(&self) -> f64 {
+        if self.batch_latencies_us.is_empty() {
+            0.0
+        } else {
+            percentile(&self.batch_latencies_us, 50.0)
+        }
+    }
+
+    pub fn latency_p99_us(&self) -> f64 {
+        if self.batch_latencies_us.is_empty() {
+            0.0
+        } else {
+            percentile(&self.batch_latencies_us, 99.0)
+        }
+    }
+
+    /// Placement decisions per wall second.
+    pub fn throughput(&self) -> f64 {
+        if self.decision_seconds <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.decision_seconds
+        }
+    }
+}
+
+/// The coordinator: data-center state + policy + virtual clock.
+pub struct Coordinator {
+    dc: DataCenter,
+    policy: Box<dyn Policy>,
+    config: CoordinatorConfig,
+    departures: BinaryHeap<std::cmp::Reverse<(Time, VmId)>>,
+    now: Time,
+    last_tick: Time,
+    stats: CoordinatorStats,
+}
+
+impl Coordinator {
+    pub fn new(dc: DataCenter, policy: Box<dyn Policy>, config: CoordinatorConfig) -> Coordinator {
+        Coordinator {
+            dc,
+            policy,
+            config,
+            departures: BinaryHeap::new(),
+            now: 0,
+            last_tick: 0,
+            stats: CoordinatorStats::default(),
+        }
+    }
+
+    /// Advance virtual time: release departures due by `t`, fire the
+    /// policy tick at interval boundaries.
+    fn advance_to(&mut self, t: Time) {
+        while let Some(&std::cmp::Reverse((due, vm))) = self.departures.peek() {
+            if due > t {
+                break;
+            }
+            self.departures.pop();
+            self.dc.remove(vm);
+            self.policy.on_departure(&mut self.dc, vm);
+        }
+        if t.saturating_sub(self.last_tick) >= self.config.interval {
+            self.policy.on_tick(&mut self.dc, t);
+            self.last_tick = t;
+        }
+        self.now = self.now.max(t);
+    }
+
+    /// Decide one batch synchronously. Requests must be time-ordered.
+    pub fn decide_batch(&mut self, batch: &[Request]) -> Vec<Response> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let t = batch.iter().map(|r| r.vm.arrival).max().unwrap();
+        self.advance_to(t);
+        let specs: Vec<VmSpec> = batch.iter().map(|r| r.vm).collect();
+        let t0 = std::time::Instant::now();
+        let decisions = self.policy.place_batch(&mut self.dc, &specs, self.now);
+        let dt = t0.elapsed();
+        let us = dt.as_secs_f64() * 1e6;
+        self.stats.batches += 1;
+        self.stats.batch_latencies_us.push(us);
+        self.stats.decision_seconds += dt.as_secs_f64();
+        specs
+            .iter()
+            .zip(&decisions)
+            .map(|(vm, &accepted)| {
+                self.stats.requests += 1;
+                if accepted {
+                    self.stats.accepted += 1;
+                    self.departures
+                        .push(std::cmp::Reverse((vm.departure.max(vm.arrival + 1), vm.id)));
+                }
+                Response {
+                    vm: vm.id,
+                    accepted,
+                    gpu: self.dc.locate(vm.id).map(|loc| loc.gpu),
+                    decision_us: us,
+                }
+            })
+            .collect()
+    }
+
+    /// Serve a request channel until it closes. Requests are batched by
+    /// virtual interval (same `interval` as maintenance) and bounded by
+    /// `max_batch`.
+    pub fn serve(mut self, rx: Receiver<Request>, tx: Sender<Response>) -> CoordinatorStats {
+        let mut pending: Vec<Request> = Vec::new();
+        let mut batch_open: Option<Time> = None;
+        for req in rx {
+            let t = req.vm.arrival;
+            let flush = match batch_open {
+                Some(t0) => {
+                    t >= t0 + self.config.interval || pending.len() >= self.config.max_batch
+                }
+                None => false,
+            };
+            if flush {
+                for resp in self.decide_batch(&pending) {
+                    let _ = tx.send(resp);
+                }
+                pending.clear();
+                batch_open = None;
+            }
+            if batch_open.is_none() {
+                batch_open = Some(t);
+            }
+            pending.push(req);
+        }
+        for resp in self.decide_batch(&pending) {
+            let _ = tx.send(resp);
+        }
+        self.stats
+    }
+
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.stats
+    }
+
+    pub fn datacenter(&self) -> &DataCenter {
+        &self.dc
+    }
+
+    pub fn policy(&self) -> &dyn Policy {
+        self.policy.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::Profile;
+    use crate::policies::first_fit::FirstFit;
+    use std::sync::mpsc;
+
+    fn vm(id: VmId, profile: Profile, arrival: Time, departure: Time) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival, departure, weight: 1.0 }
+    }
+
+    fn coord(gpus: usize) -> Coordinator {
+        Coordinator::new(
+            DataCenter::new(vec![Host::new(0, 64, 256, gpus)]),
+            Box::new(FirstFit::new()),
+            CoordinatorConfig::default(),
+        )
+    }
+
+    #[test]
+    fn synchronous_decisions() {
+        let mut c = coord(1);
+        let r = c.decide_batch(&[Request { vm: vm(1, Profile::P7g40gb, 10, 10_000) }]);
+        assert!(r[0].accepted);
+        assert!(r[0].gpu.is_some());
+        let r = c.decide_batch(&[Request { vm: vm(2, Profile::P1g5gb, 20, 10_000) }]);
+        assert!(!r[0].accepted);
+        assert_eq!(c.stats().requests, 2);
+        assert_eq!(c.stats().accepted, 1);
+    }
+
+    #[test]
+    fn departures_release_capacity() {
+        let mut c = coord(1);
+        c.decide_batch(&[Request { vm: vm(1, Profile::P7g40gb, 0, 100) }]);
+        // Arrives after the departure: accepted.
+        let r = c.decide_batch(&[Request { vm: vm(2, Profile::P7g40gb, 200, 500) }]);
+        assert!(r[0].accepted);
+    }
+
+    #[test]
+    fn channel_service_end_to_end() {
+        let c = coord(2);
+        let (req_tx, req_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || c.serve(req_rx, resp_tx));
+        for i in 0..5u64 {
+            let spec = vm(i + 1, Profile::P2g10gb, i * 60, 1_000_000);
+            req_tx.send(Request { vm: spec }).unwrap();
+        }
+        drop(req_tx);
+        let responses: Vec<Response> = resp_rx.iter().collect();
+        let stats = handle.join().unwrap();
+        assert_eq!(responses.len(), 5);
+        // 2 GPUs × 3 slots for 2g.10gb = 6 ≥ 5: all accepted.
+        assert!(responses.iter().all(|r| r.accepted));
+        assert_eq!(stats.requests, 5);
+        assert!(stats.throughput() > 0.0);
+        assert!(stats.latency_p99_us() >= stats.latency_p50_us());
+    }
+
+    #[test]
+    fn batching_respects_interval() {
+        let c = coord(8);
+        let (req_tx, req_rx) = mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || c.serve(req_rx, resp_tx));
+        // Two requests in the same hour, one 2 hours later.
+        req_tx.send(Request { vm: vm(1, Profile::P1g5gb, 0, 9_999_999) }).unwrap();
+        req_tx.send(Request { vm: vm(2, Profile::P1g5gb, 60, 9_999_999) }).unwrap();
+        req_tx.send(Request { vm: vm(3, Profile::P1g5gb, 2 * HOUR + 1, 9_999_999) }).unwrap();
+        drop(req_tx);
+        let _: Vec<Response> = resp_rx.iter().collect();
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.batches, 2, "expected [vm1,vm2] then [vm3]");
+    }
+}

@@ -1,0 +1,302 @@
+//! Branch-and-bound MILP on top of the dense simplex.
+//!
+//! Depth-first search with incumbent pruning; branching on the most
+//! fractional integer variable; variable bounds expressed as extra rows
+//! appended to the relaxation. Exact for the small instances used to
+//! validate the placement heuristics.
+
+use super::lp::{LinearProgram, LpOutcome};
+
+/// Constraint comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A mixed-integer linear program. `maximize` selects the direction.
+#[derive(Debug, Clone, Default)]
+pub struct Milp {
+    pub num_vars: usize,
+    pub objective: Vec<f64>,
+    pub maximize: bool,
+    /// `(sparse coefficients, cmp, rhs)`.
+    pub constraints: Vec<(Vec<(usize, f64)>, Cmp, f64)>,
+    /// Marks integer variables.
+    pub integer: Vec<bool>,
+    /// Inclusive variable bounds (defaults `[0, +inf)`).
+    pub bounds: Vec<(f64, f64)>,
+    /// Branching priority per variable — lower classes branch first.
+    /// The placement model puts binaries at 0, `β` at 1 and the
+    /// big-M-slack `z` variables at 2: a fractional `z` whose GI is not
+    /// even placed is meaningless to branch on and explodes the tree.
+    pub branch_priority: Vec<u8>,
+    /// When every feasible objective value is integral (integer
+    /// coefficients on integer variables), a node whose LP bound is below
+    /// `incumbent + 1` cannot contain a strictly better solution — the
+    /// pruning gap becomes 1 instead of ε, which is what makes the loose
+    /// big-M relaxations of Eq. 12–18 tractable.
+    pub integral_objective: bool,
+}
+
+/// An optimal MILP solution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MilpSolution {
+    pub values: Vec<f64>,
+    pub objective: f64,
+    /// Number of branch-and-bound nodes explored.
+    pub nodes: usize,
+}
+
+const INT_TOL: f64 = 1e-6;
+
+impl Milp {
+    pub fn new(num_vars: usize, objective: Vec<f64>, maximize: bool) -> Milp {
+        assert_eq!(objective.len(), num_vars);
+        Milp {
+            num_vars,
+            objective,
+            maximize,
+            constraints: Vec::new(),
+            integer: vec![false; num_vars],
+            bounds: vec![(0.0, f64::INFINITY); num_vars],
+            branch_priority: vec![0; num_vars],
+            integral_objective: false,
+        }
+    }
+
+    pub fn constrain(&mut self, coeffs: Vec<(usize, f64)>, cmp: Cmp, rhs: f64) {
+        self.constraints.push((coeffs, cmp, rhs));
+    }
+
+    /// Mark a variable binary (`{0, 1}`).
+    pub fn set_binary(&mut self, var: usize) {
+        self.integer[var] = true;
+        self.bounds[var] = (0.0, 1.0);
+    }
+
+    /// Mark a variable integer in `[lo, hi]`.
+    pub fn set_integer(&mut self, var: usize, lo: f64, hi: f64) {
+        self.integer[var] = true;
+        self.bounds[var] = (lo, hi);
+    }
+
+    /// Solve exactly. Returns `None` when infeasible. `node_limit` caps
+    /// the search (0 = unlimited); hitting the cap returns the incumbent
+    /// if any.
+    pub fn solve(&self, node_limit: usize) -> Option<MilpSolution> {
+        // Internal form: maximize. For minimization negate the objective.
+        let sign = if self.maximize { 1.0 } else { -1.0 };
+        let base_obj: Vec<f64> = self.objective.iter().map(|c| c * sign).collect();
+
+        // Stack of extra bound constraints: (var, is_upper, value).
+        let mut stack: Vec<Vec<(usize, bool, f64)>> = vec![Vec::new()];
+        let mut incumbent: Option<(Vec<f64>, f64)> = None;
+        let mut nodes = 0usize;
+
+        let debug = std::env::var("GRMU_ILP_DEBUG").is_ok();
+        while let Some(extra) = stack.pop() {
+            nodes += 1;
+            if node_limit > 0 && nodes > node_limit {
+                break;
+            }
+            if debug && nodes % 200 == 0 {
+                eprintln!(
+                    "[bb] nodes={nodes} stack={} incumbent={:?} depth={}",
+                    stack.len(),
+                    incumbent.as_ref().map(|(_, b)| *b),
+                    extra.len()
+                );
+            }
+            let outcome = self.solve_relaxation(&base_obj, &extra);
+            let LpOutcome::Optimal { x, objective } = outcome else {
+                continue; // infeasible or (bounded vars) never unbounded
+            };
+            // Prune by bound (gap 1 for integral objectives).
+            let prune_gap = if self.integral_objective { 1.0 - 1e-6 } else { INT_TOL };
+            if let Some((_, best)) = &incumbent {
+                if objective < *best + prune_gap {
+                    continue;
+                }
+            }
+            // Find the most fractional integer variable in the lowest
+            // (most important) fractional priority class.
+            let mut branch: Option<(usize, f64)> = None;
+            let mut best: Option<(u8, f64)> = None; // (class, -fractionality)
+            for (v, &is_int) in self.integer.iter().enumerate() {
+                if !is_int {
+                    continue;
+                }
+                let frac = (x[v] - x[v].round()).abs();
+                if frac <= INT_TOL {
+                    continue;
+                }
+                let key = (self.branch_priority[v], -frac);
+                if best.map(|b| key < b).unwrap_or(true) {
+                    best = Some(key);
+                    branch = Some((v, x[v]));
+                }
+            }
+            match branch {
+                None => {
+                    // Integral: new incumbent.
+                    let rounded: Vec<f64> = x
+                        .iter()
+                        .enumerate()
+                        .map(|(v, &val)| if self.integer[v] { val.round() } else { val })
+                        .collect();
+                    if incumbent.as_ref().map(|(_, b)| objective > *b).unwrap_or(true) {
+                        incumbent = Some((rounded, objective));
+                    }
+                }
+                Some((v, val)) => {
+                    // Branch: x_v ≤ floor, x_v ≥ ceil. Explore the side
+                    // closer to the LP value first (pushed last).
+                    let mut lo_branch = extra.clone();
+                    lo_branch.push((v, true, val.floor()));
+                    let mut hi_branch = extra.clone();
+                    hi_branch.push((v, false, val.ceil()));
+                    if val - val.floor() < 0.5 {
+                        stack.push(hi_branch);
+                        stack.push(lo_branch);
+                    } else {
+                        stack.push(lo_branch);
+                        stack.push(hi_branch);
+                    }
+                }
+            }
+        }
+
+        incumbent.map(|(values, obj)| MilpSolution { values, objective: obj * sign, nodes })
+    }
+
+    fn solve_relaxation(&self, obj: &[f64], extra: &[(usize, bool, f64)]) -> LpOutcome {
+        let mut lp = LinearProgram::new(self.num_vars, obj.to_vec());
+        for (coeffs, cmp, rhs) in &self.constraints {
+            match cmp {
+                Cmp::Le => lp.add_le(coeffs, *rhs),
+                Cmp::Ge => lp.add_ge(coeffs, *rhs),
+                Cmp::Eq => lp.add_eq(coeffs, *rhs),
+            }
+        }
+        for (v, (lo, hi)) in self.bounds.iter().enumerate() {
+            if *lo > 0.0 {
+                lp.add_ge(&[(v, 1.0)], *lo);
+            }
+            if hi.is_finite() {
+                lp.add_le(&[(v, 1.0)], *hi);
+            }
+        }
+        for &(v, is_upper, val) in extra {
+            if is_upper {
+                lp.add_le(&[(v, 1.0)], val);
+            } else {
+                lp.add_ge(&[(v, 1.0)], val);
+            }
+        }
+        lp.solve()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knapsack_small() {
+        // max 60a + 100b + 120c, 10a + 20b + 30c ≤ 50, binary → b+c = 220.
+        let mut m = Milp::new(3, vec![60.0, 100.0, 120.0], true);
+        m.constrain(vec![(0, 10.0), (1, 20.0), (2, 30.0)], Cmp::Le, 50.0);
+        for v in 0..3 {
+            m.set_binary(v);
+        }
+        let s = m.solve(0).unwrap();
+        assert!((s.objective - 220.0).abs() < 1e-6);
+        assert_eq!(s.values.iter().map(|&v| v.round() as i32).collect::<Vec<_>>(), vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // max x + y, 2x + 2y ≤ 5, integer → 2 (LP gives 2.5).
+        let mut m = Milp::new(2, vec![1.0, 1.0], true);
+        m.constrain(vec![(0, 2.0), (1, 2.0)], Cmp::Le, 5.0);
+        m.set_integer(0, 0.0, 10.0);
+        m.set_integer(1, 0.0, 10.0);
+        let s = m.solve(0).unwrap();
+        assert!((s.objective - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minimization() {
+        // min 3x + 4y s.t. x + 2y ≥ 3, binary... x,y ∈ {0,1,2}: need
+        // x + 2y ≥ 3 → best (1,1): 7.
+        let mut m = Milp::new(2, vec![3.0, 4.0], false);
+        m.constrain(vec![(0, 1.0), (1, 2.0)], Cmp::Ge, 3.0);
+        m.set_integer(0, 0.0, 2.0);
+        m.set_integer(1, 0.0, 2.0);
+        let s = m.solve(0).unwrap();
+        assert!((s.objective - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let mut m = Milp::new(1, vec![1.0], true);
+        m.constrain(vec![(0, 1.0)], Cmp::Ge, 2.0);
+        m.constrain(vec![(0, 1.0)], Cmp::Le, 1.0);
+        m.set_binary(0);
+        assert!(m.solve(0).is_none());
+    }
+
+    #[test]
+    fn equality_and_mixed_integrality() {
+        // max 2x + y, x + y = 3, x integer, y continuous ≤ 1.5 →
+        // y ≤ 1.5 → x ≥ 1.5 → x ∈ {2, 3}; x=2, y=1 → 5; x=3, y=0 → 6.
+        let mut m = Milp::new(2, vec![2.0, 1.0], true);
+        m.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 3.0);
+        m.set_integer(0, 0.0, 5.0);
+        m.bounds[1] = (0.0, 1.5);
+        let s = m.solve(0).unwrap();
+        assert!((s.objective - 6.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn bigm_indicator_pattern() {
+        // The Eq. 12–13 pattern: two intervals must not overlap.
+        // z1, z2 ∈ [0, 6] integer, sizes 4 and 4, B = 8, alpha binary:
+        // z1 + 4 ≤ z2 + 8α ; z2 + 4 ≤ z1 + 8(1-α); z1,z2 ∈ {0,4}.
+        // maximize z1 + z2 → one at 0, other at 4 → 4... but both
+        // can't exceed. With starts multiple of 4 ≤ 4: max is 0+4.
+        let mut m = Milp::new(3, vec![1.0, 1.0, 0.0], true);
+        m.set_integer(0, 0.0, 4.0);
+        m.set_integer(1, 0.0, 4.0);
+        m.set_binary(2);
+        // z only multiples of 4: use beta vars implicitly via bounds of a
+        // scaled variable — here simply constrain z = 4*b with b binary.
+        // Add b1, b2 — extend the model.
+        let mut m2 = Milp::new(5, vec![1.0, 1.0, 0.0, 0.0, 0.0], true);
+        m2.set_integer(0, 0.0, 4.0);
+        m2.set_integer(1, 0.0, 4.0);
+        m2.set_binary(2);
+        m2.set_binary(3);
+        m2.set_binary(4);
+        m2.constrain(vec![(0, 1.0), (3, -4.0)], Cmp::Eq, 0.0); // z1 = 4 b1
+        m2.constrain(vec![(1, 1.0), (4, -4.0)], Cmp::Eq, 0.0); // z2 = 4 b2
+        m2.constrain(vec![(0, 1.0), (1, -1.0), (2, -8.0)], Cmp::Le, -4.0); // z1+4 ≤ z2+8a
+        m2.constrain(vec![(1, 1.0), (0, -1.0), (2, 8.0)], Cmp::Le, 4.0); // z2+4 ≤ z1+8(1-a)
+        let s = m2.solve(0).unwrap();
+        assert!((s.objective - 4.0).abs() < 1e-6, "{s:?}");
+        let _ = m;
+    }
+
+    #[test]
+    fn node_limit_returns_incumbent_or_none() {
+        let mut m = Milp::new(3, vec![60.0, 100.0, 120.0], true);
+        m.constrain(vec![(0, 10.0), (1, 20.0), (2, 30.0)], Cmp::Le, 50.0);
+        for v in 0..3 {
+            m.set_binary(v);
+        }
+        // Tiny limit may or may not find the optimum but must terminate.
+        let _ = m.solve(1);
+    }
+}

@@ -1,0 +1,396 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves `maximize c·x  s.t.  A x ≤ b,  x ≥ 0` with `b` of any sign
+//! (phase 1 drives artificial variables out of the basis). Bland's rule
+//! avoids cycling; sizes here are small (hundreds of rows), so the dense
+//! tableau is simple and fast enough.
+
+/// Result of an LP solve.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpOutcome {
+    /// Optimal solution: variable values and objective.
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+/// `maximize c·x  s.t.  rows·x ≤ rhs, x ≥ 0`.
+#[derive(Debug, Clone, Default)]
+pub struct LinearProgram {
+    pub num_vars: usize,
+    pub objective: Vec<f64>,
+    /// Each row: dense coefficients (len = num_vars) and right-hand side.
+    pub rows: Vec<Vec<f64>>,
+    pub rhs: Vec<f64>,
+}
+
+const EPS: f64 = 1e-9;
+
+impl LinearProgram {
+    pub fn new(num_vars: usize, objective: Vec<f64>) -> LinearProgram {
+        assert_eq!(objective.len(), num_vars);
+        LinearProgram { num_vars, objective, rows: Vec::new(), rhs: Vec::new() }
+    }
+
+    /// Add `coeffs·x ≤ rhs` from a sparse coefficient list.
+    pub fn add_le(&mut self, coeffs: &[(usize, f64)], rhs: f64) {
+        let mut row = vec![0.0; self.num_vars];
+        for &(i, c) in coeffs {
+            row[i] += c;
+        }
+        self.rows.push(row);
+        self.rhs.push(rhs);
+    }
+
+    /// Add `coeffs·x ≥ rhs` (stored as `-coeffs·x ≤ -rhs`).
+    pub fn add_ge(&mut self, coeffs: &[(usize, f64)], rhs: f64) {
+        let neg: Vec<(usize, f64)> = coeffs.iter().map(|&(i, c)| (i, -c)).collect();
+        self.add_le(&neg, -rhs);
+    }
+
+    /// Add `coeffs·x = rhs` (as ≤ and ≥).
+    pub fn add_eq(&mut self, coeffs: &[(usize, f64)], rhs: f64) {
+        self.add_le(coeffs, rhs);
+        self.add_ge(coeffs, rhs);
+    }
+
+    /// Solve with the two-phase simplex.
+    pub fn solve(&self) -> LpOutcome {
+        let m = self.rows.len();
+        let n = self.num_vars;
+
+        // Tableau layout: columns [structural n | slacks m | artificials a | rhs].
+        // Normalize rows to have rhs >= 0; rows that flip sign get their
+        // slack with coefficient -1 and need an artificial variable.
+        let mut need_artificial: Vec<bool> = vec![false; m];
+        let mut num_art = 0;
+        for i in 0..m {
+            if self.rhs[i] < -EPS {
+                need_artificial[i] = true;
+                num_art += 1;
+            }
+        }
+        let cols = n + m + num_art + 1;
+        let mut t = vec![vec![0.0; cols]; m];
+        let mut basis: Vec<usize> = vec![0; m];
+        let mut art_idx = 0;
+        for i in 0..m {
+            let flip = if need_artificial[i] { -1.0 } else { 1.0 };
+            for j in 0..n {
+                t[i][j] = flip * self.rows[i][j];
+            }
+            t[i][n + i] = flip; // slack (negative surplus when flipped)
+            t[i][cols - 1] = flip * self.rhs[i];
+            if need_artificial[i] {
+                let a_col = n + m + art_idx;
+                t[i][a_col] = 1.0;
+                basis[i] = a_col;
+                art_idx += 1;
+            } else {
+                basis[i] = n + i;
+            }
+        }
+
+        // Phase 1: minimize sum of artificials (maximize -sum).
+        if num_art > 0 {
+            let mut obj1 = vec![0.0; cols - 1];
+            for a in 0..num_art {
+                obj1[n + m + a] = -1.0;
+            }
+            let feasible = simplex_core(&mut t, &mut basis, &obj1);
+            match feasible {
+                CoreOutcome::Unbounded => return LpOutcome::Infeasible, // cannot happen
+                CoreOutcome::Optimal(z) => {
+                    if z < -1e-6 {
+                        return LpOutcome::Infeasible;
+                    }
+                }
+            }
+            // Drive any artificial still in the basis out (degenerate);
+            // if its row is all-zero over real columns it is redundant.
+            for i in 0..m {
+                if basis[i] >= n + m {
+                    let pivot_col = (0..n + m).find(|&j| t[i][j].abs() > EPS);
+                    if let Some(j) = pivot_col {
+                        pivot(&mut t, &mut basis, i, j);
+                    }
+                }
+            }
+        }
+
+        // Phase 2: original objective (zero on slack/artificial columns;
+        // artificial columns are forced to stay at 0 by never entering).
+        let mut obj2 = vec![0.0; cols - 1];
+        obj2[..n].copy_from_slice(&self.objective);
+        // Forbid artificials from re-entering.
+        for a in 0..num_art {
+            obj2[n + m + a] = f64::NEG_INFINITY;
+        }
+        match simplex_core(&mut t, &mut basis, &obj2) {
+            CoreOutcome::Unbounded => LpOutcome::Unbounded,
+            CoreOutcome::Optimal(z) => {
+                let mut x = vec![0.0; n];
+                let cols = t[0].len();
+                for i in 0..m {
+                    if basis[i] < n {
+                        x[basis[i]] = t[i][cols - 1];
+                    }
+                }
+                LpOutcome::Optimal { x, objective: z }
+            }
+        }
+    }
+}
+
+enum CoreOutcome {
+    Optimal(f64),
+    Unbounded,
+}
+
+/// Run primal simplex on the tableau with the given objective row.
+///
+/// Maintains the reduced-cost row incrementally (pivoted together with
+/// the constraint rows) instead of recomputing `c_B · B⁻¹A_j` per
+/// column — the difference between O(m·n) and O(m·n²) per pivot, which
+/// dominates branch-and-bound time on the Eq. 3–26 instances.
+fn simplex_core(t: &mut [Vec<f64>], basis: &mut [usize], obj: &[f64]) -> CoreOutcome {
+    let m = t.len();
+    let cols = t[0].len();
+    let ncols = cols - 1;
+
+    // Build the reduced-cost row: r_j = c_j - c_B · B^{-1} A_j, and the
+    // current objective value in the rhs slot.
+    let cost = |j: usize| -> f64 {
+        let c = obj[j];
+        if c == f64::NEG_INFINITY {
+            0.0
+        } else {
+            c
+        }
+    };
+    let mut red = vec![0.0f64; cols];
+    for j in 0..ncols {
+        let mut zj = 0.0;
+        for i in 0..m {
+            let cb = cost(basis[i]);
+            if cb != 0.0 {
+                zj += cb * t[i][j];
+            }
+        }
+        red[j] = cost(j) - zj;
+    }
+    // rhs slot stores -z so the whole row pivots uniformly like a
+    // constraint row ([c - c_B·B⁻¹A | -z] stays of that form).
+    let mut zval = 0.0;
+    for i in 0..m {
+        let cb = cost(basis[i]);
+        if cb != 0.0 {
+            zval += cb * t[i][cols - 1];
+        }
+    }
+    red[cols - 1] = -zval;
+
+    let mut iter = 0usize;
+    let max_iter = 50_000;
+    // Dantzig's rule normally; degenerate stalls (no objective progress
+    // for a stretch) switch permanently to Bland's rule, which cannot
+    // cycle.
+    let mut bland_mode = false;
+    let mut last_z = f64::NEG_INFINITY;
+    let mut stall = 0usize;
+    loop {
+        iter += 1;
+        if iter > max_iter {
+            if std::env::var("GRMU_ILP_DEBUG").is_ok() {
+                eprintln!("[lp] max_iter hit (m={m}, cols={cols}, z={})", -red[cols - 1]);
+            }
+            return CoreOutcome::Optimal(-red[cols - 1]);
+        }
+        let z = -red[cols - 1];
+        if z > last_z + 1e-9 {
+            last_z = z;
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall > 64 {
+                bland_mode = true;
+            }
+        }
+        let mut entering: Option<usize> = None;
+        let mut best = 1e-7;
+        for j in 0..ncols {
+            if obj[j] == f64::NEG_INFINITY {
+                continue; // barred column (artificials in phase 2)
+            }
+            if red[j] > best {
+                entering = Some(j);
+                if bland_mode {
+                    break;
+                }
+                best = red[j];
+            }
+        }
+        let Some(e) = entering else {
+            return CoreOutcome::Optimal(-red[cols - 1]);
+        };
+        // Ratio test (Bland: smallest basis index on ties).
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            if t[i][e] > EPS {
+                let ratio = t[i][cols - 1] / t[i][e];
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(true))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return CoreOutcome::Unbounded;
+        };
+        pivot(t, basis, l, e);
+        // Pivot the reduced-cost row as well.
+        let f = red[e];
+        if f.abs() > EPS {
+            for j in 0..cols {
+                red[j] -= f * t[l][j];
+            }
+        }
+        // The entering column's reduced cost is exactly zero now.
+        red[e] = 0.0;
+    }
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize) {
+    let cols = t[0].len();
+    let p = t[row][col];
+    debug_assert!(p.abs() > EPS);
+    for j in 0..cols {
+        t[row][j] /= p;
+    }
+    for i in 0..t.len() {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..cols {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(outcome: &LpOutcome, expect_obj: f64, expect_x: Option<&[f64]>) {
+        match outcome {
+            LpOutcome::Optimal { x, objective } => {
+                assert!(
+                    (objective - expect_obj).abs() < 1e-6,
+                    "objective {objective} vs {expect_obj}"
+                );
+                if let Some(ex) = expect_x {
+                    for (a, b) in x.iter().zip(ex) {
+                        assert!((a - b).abs() < 1e-6, "x={x:?} vs {ex:?}");
+                    }
+                }
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_2d() {
+        // max 3x + 5y, x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18 → (2, 6), z = 36.
+        let mut lp = LinearProgram::new(2, vec![3.0, 5.0]);
+        lp.add_le(&[(0, 1.0)], 4.0);
+        lp.add_le(&[(1, 2.0)], 12.0);
+        lp.add_le(&[(0, 3.0), (1, 2.0)], 18.0);
+        assert_opt(&lp.solve(), 36.0, Some(&[2.0, 6.0]));
+    }
+
+    #[test]
+    fn needs_phase_one() {
+        // max x + y, x + y ≥ 2, x ≤ 3, y ≤ 3 → 6 at (3,3).
+        let mut lp = LinearProgram::new(2, vec![1.0, 1.0]);
+        lp.add_ge(&[(0, 1.0), (1, 1.0)], 2.0);
+        lp.add_le(&[(0, 1.0)], 3.0);
+        lp.add_le(&[(1, 1.0)], 3.0);
+        assert_opt(&lp.solve(), 6.0, None);
+    }
+
+    #[test]
+    fn minimization_via_negation() {
+        // min x + 2y s.t. x + y ≥ 4, y ≥ 1 → (3,1), obj 5.
+        let mut lp = LinearProgram::new(2, vec![-1.0, -2.0]);
+        lp.add_ge(&[(0, 1.0), (1, 1.0)], 4.0);
+        lp.add_ge(&[(1, 1.0)], 1.0);
+        match lp.solve() {
+            LpOutcome::Optimal { objective, x } => {
+                assert!((objective + 5.0).abs() < 1e-6, "obj={objective} x={x:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x ≤ 1 and x ≥ 2.
+        let mut lp = LinearProgram::new(1, vec![1.0]);
+        lp.add_le(&[(0, 1.0)], 1.0);
+        lp.add_ge(&[(0, 1.0)], 2.0);
+        assert_eq!(lp.solve(), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = LinearProgram::new(1, vec![1.0]);
+        lp.add_ge(&[(0, 1.0)], 0.0);
+        assert_eq!(lp.solve(), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // max x + y s.t. x + y = 5, x ≤ 2 → 5 with x ≤ 2.
+        let mut lp = LinearProgram::new(2, vec![1.0, 1.0]);
+        lp.add_eq(&[(0, 1.0), (1, 1.0)], 5.0);
+        lp.add_le(&[(0, 1.0)], 2.0);
+        assert_opt(&lp.solve(), 5.0, None);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic degenerate LP (Beale-like); just require termination
+        // at the known optimum 0.05.
+        let mut lp = LinearProgram::new(4, vec![0.75, -150.0, 0.02, -6.0]);
+        lp.add_le(&[(0, 0.25), (1, -60.0), (2, -0.04), (3, 9.0)], 0.0);
+        lp.add_le(&[(0, 0.5), (1, -90.0), (2, -0.02), (3, 3.0)], 0.0);
+        lp.add_le(&[(2, 1.0)], 1.0);
+        match lp.solve() {
+            LpOutcome::Optimal { objective, .. } => {
+                assert!((objective - 0.05).abs() < 1e-6, "obj={objective}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn binding_mix_larger() {
+        // Knapsack LP relaxation: max 10a+6b+4c, a+b+c ≤ 100,
+        // 10a+4b+5c ≤ 600, 2a+2b+6c ≤ 300 → z = 733.33...
+        let mut lp = LinearProgram::new(3, vec![10.0, 6.0, 4.0]);
+        lp.add_le(&[(0, 1.0), (1, 1.0), (2, 1.0)], 100.0);
+        lp.add_le(&[(0, 10.0), (1, 4.0), (2, 5.0)], 600.0);
+        lp.add_le(&[(0, 2.0), (1, 2.0), (2, 6.0)], 300.0);
+        match lp.solve() {
+            LpOutcome::Optimal { objective, .. } => {
+                assert!((objective - 2200.0 / 3.0).abs() < 1e-4);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's multi-objective ILP (Eq. 3–26) and an exact in-house MILP
+//! solver.
+//!
+//! §7 argues the full formulation is intractable ("even a solver cannot
+//! handle it within a viable timeframe"); the paper therefore never
+//! solves it. We go one step further than the paper: [`lp`] implements a
+//! dense two-phase simplex, [`bb`] a branch-and-bound MILP on top of it,
+//! and [`model`] builds Eq. 3–26 exactly and solves the three objectives
+//! *lexicographically* (acceptance ≻ active hardware ≻ migrations) on
+//! small instances. `examples/ilp_validation.rs` and the integration
+//! tests use it as ground truth for the heuristics.
+
+pub mod bb;
+pub mod lp;
+pub mod model;
+
+pub use bb::{Cmp, Milp, MilpSolution};
+pub use lp::{LinearProgram, LpOutcome};
+pub use model::{IlpSolver, PlacementInstance, PlacementSolution};

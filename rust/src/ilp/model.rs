@@ -1,0 +1,646 @@
+//! The paper's ILP formulation (Eq. 3–26), built exactly and solved
+//! lexicographically on small instances.
+//!
+//! Variables per §6 / Table 4: `x_ij` (VM→PM), `y_ijk` (GI→GPU), `z_ijk`
+//! (starting block), `β_i` (start as a multiple of the GI size, Eq. 14–15),
+//! `α_{ii'jk}` (GI ordering, Eq. 12–13), `φ_j` / `γ_jk` (powered-on
+//! PM/GPU, Eq. 19–21), `m_ij` / `ω_ijk` (migration indicators, Eq. 22–25).
+//!
+//! The three objectives are solved lexicographically, the paper's implied
+//! priority: maximize weighted acceptance (Eq. 3), then minimize active
+//! hardware (Eq. 4), then minimize migrations (Eq. 5). After each stage
+//! the achieved value is frozen as a constraint.
+//!
+//! Note the model is an *idealized bound*: it may choose any legal start
+//! block, while real hardware delegates the intra-GPU choice to NVIDIA's
+//! fixed policy (§5.1). Heuristic acceptance can therefore never exceed
+//! the ILP's.
+
+use super::bb::{Cmp, Milp};
+use crate::cluster::vm::{VmId, VmSpec};
+use crate::mig::profiles::NUM_BLOCKS;
+use std::collections::HashMap;
+
+/// One host of the small instance.
+#[derive(Debug, Clone, Copy)]
+pub struct IlpHost {
+    pub cpus: u32,
+    pub ram_gb: u32,
+    pub num_gpus: usize,
+    /// `b_j` of Eq. 4.
+    pub weight: f64,
+}
+
+/// A VM that is already placed (for the migration objective).
+#[derive(Debug, Clone, Copy)]
+pub struct PriorPlacement {
+    pub host: usize,
+    pub gpu: usize,
+    /// `δ_i` of Eq. 5 (0 disables migration cost for new VMs).
+    pub delta: f64,
+}
+
+/// A small placement instance.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementInstance {
+    pub hosts: Vec<IlpHost>,
+    pub vms: Vec<VmSpec>,
+    /// Previous assignments `x'`, `y'` for resident VMs.
+    pub prior: HashMap<VmId, PriorPlacement>,
+}
+
+/// Lexicographic solution.
+#[derive(Debug, Clone)]
+pub struct PlacementSolution {
+    /// `(host, gpu, start)` per accepted VM.
+    pub assignment: HashMap<VmId, (usize, usize, u8)>,
+    /// Eq. 3 value (weighted acceptance).
+    pub acceptance: f64,
+    /// Eq. 4 value (weighted active PMs + GPUs).
+    pub active_hardware: f64,
+    /// Eq. 5 value (weighted migrations).
+    pub migrations: f64,
+    /// Total branch-and-bound nodes across the three stages.
+    pub nodes: usize,
+}
+
+/// Index bookkeeping for the flattened variable vector.
+struct VarMap {
+    n: usize,               // VMs
+    m: usize,               // hosts
+    gpus: Vec<usize>,       // GPUs per host
+    gpu_offsets: Vec<usize>, // global GPU index base per host
+    total_gpus: usize,
+    x0: usize,
+    y0: usize,
+    z0: usize,
+    beta0: usize,
+    alpha0: usize,
+    phi0: usize,
+    gamma0: usize,
+    mig0: usize,
+    omega0: usize,
+    num_vars: usize,
+    pairs: Vec<(usize, usize)>, // i < i'
+}
+
+impl VarMap {
+    fn new(inst: &PlacementInstance) -> VarMap {
+        let n = inst.vms.len();
+        let m = inst.hosts.len();
+        let gpus: Vec<usize> = inst.hosts.iter().map(|h| h.num_gpus).collect();
+        let mut gpu_offsets = Vec::with_capacity(m);
+        let mut total = 0usize;
+        for &g in &gpus {
+            gpu_offsets.push(total);
+            total += g;
+        }
+        let pairs: Vec<(usize, usize)> =
+            (0..n).flat_map(|i| (i + 1..n).map(move |i2| (i, i2))).collect();
+        let x0 = 0;
+        let y0 = x0 + n * m;
+        let z0 = y0 + n * total;
+        let beta0 = z0 + n * total;
+        let alpha0 = beta0 + n;
+        let phi0 = alpha0 + pairs.len() * total;
+        let gamma0 = phi0 + m;
+        let mig0 = gamma0 + total;
+        let omega0 = mig0 + n * m;
+        let num_vars = omega0 + n * total;
+        VarMap { n, m, gpus, gpu_offsets, total_gpus: total, x0, y0, z0, beta0, alpha0, phi0, gamma0, mig0, omega0, num_vars, pairs }
+    }
+    fn g(&self, j: usize, k: usize) -> usize {
+        self.gpu_offsets[j] + k
+    }
+    fn x(&self, i: usize, j: usize) -> usize {
+        self.x0 + i * self.m + j
+    }
+    fn y(&self, i: usize, j: usize, k: usize) -> usize {
+        self.y0 + i * self.total_gpus + self.g(j, k)
+    }
+    fn z(&self, i: usize, j: usize, k: usize) -> usize {
+        self.z0 + i * self.total_gpus + self.g(j, k)
+    }
+    fn beta(&self, i: usize) -> usize {
+        self.beta0 + i
+    }
+    fn alpha(&self, pair: usize, j: usize, k: usize) -> usize {
+        self.alpha0 + pair * self.total_gpus + self.g(j, k)
+    }
+    fn phi(&self, j: usize) -> usize {
+        self.phi0 + j
+    }
+    fn gamma(&self, j: usize, k: usize) -> usize {
+        self.gamma0 + self.g(j, k)
+    }
+    fn mig(&self, i: usize, j: usize) -> usize {
+        self.mig0 + i * self.m + j
+    }
+    fn omega(&self, i: usize, j: usize, k: usize) -> usize {
+        self.omega0 + i * self.total_gpus + self.g(j, k)
+    }
+}
+
+/// The `B` constant of Eq. 12–18: larger than any block index.
+const BIG_B: f64 = NUM_BLOCKS as f64 + 1.0;
+
+/// Builder + lexicographic solver.
+pub struct IlpSolver {
+    inst: PlacementInstance,
+}
+
+impl IlpSolver {
+    pub fn new(inst: PlacementInstance) -> IlpSolver {
+        IlpSolver { inst }
+    }
+
+    /// Build the constraint system (everything except the objective).
+    fn build_base(&self, vars: &VarMap) -> Milp {
+        let inst = &self.inst;
+        let mut milp = Milp::new(vars.num_vars, vec![0.0; vars.num_vars], true);
+
+        // Variable domains (Eq. 26).
+        for i in 0..vars.n {
+            let vm = &inst.vms[i];
+            let g_i = vm.profile.size() as f64;
+            let s_i = vm.profile.last_start() as f64;
+            for j in 0..vars.m {
+                milp.set_binary(vars.x(i, j));
+                milp.set_binary(vars.mig(i, j));
+                for k in 0..vars.gpus[j] {
+                    milp.set_binary(vars.y(i, j, k));
+                    milp.set_binary(vars.omega(i, j, k));
+                    // z_ijk ∈ Z+, bounded by s_i (Eq. 16). Branch last:
+                    // a fractional z of an unplaced GI is meaningless.
+                    milp.set_integer(vars.z(i, j, k), 0.0, s_i);
+                    milp.branch_priority[vars.z(i, j, k)] = 2;
+                }
+            }
+            // β_i ∈ Z (Eq. 26), z = g_i β_i ≤ s_i → β ≤ s_i / g_i.
+            milp.set_integer(vars.beta(i), 0.0, (s_i / g_i).floor());
+            milp.branch_priority[vars.beta(i)] = 1;
+        }
+        for (p, _) in vars.pairs.iter().enumerate() {
+            for j in 0..vars.m {
+                for k in 0..vars.gpus[j] {
+                    milp.set_binary(vars.alpha(p, j, k));
+                }
+            }
+        }
+        for j in 0..vars.m {
+            milp.set_binary(vars.phi(j));
+            for k in 0..vars.gpus[j] {
+                milp.set_binary(vars.gamma(j, k));
+            }
+        }
+
+        // Eq. 6–7: CPU and RAM capacities.
+        for j in 0..vars.m {
+            let cpu_row: Vec<(usize, f64)> =
+                (0..vars.n).map(|i| (vars.x(i, j), inst.vms[i].cpus as f64)).collect();
+            milp.constrain(cpu_row, Cmp::Le, inst.hosts[j].cpus as f64);
+            let ram_row: Vec<(usize, f64)> =
+                (0..vars.n).map(|i| (vars.x(i, j), inst.vms[i].ram_gb as f64)).collect();
+            milp.constrain(ram_row, Cmp::Le, inst.hosts[j].ram_gb as f64);
+        }
+
+        for i in 0..vars.n {
+            // Eq. 8: at most one PM.
+            let row: Vec<(usize, f64)> = (0..vars.m).map(|j| (vars.x(i, j), 1.0)).collect();
+            milp.constrain(row, Cmp::Le, 1.0);
+            // Eq. 9: at most one GPU.
+            let mut row = Vec::new();
+            for j in 0..vars.m {
+                for k in 0..vars.gpus[j] {
+                    row.push((vars.y(i, j, k), 1.0));
+                }
+            }
+            milp.constrain(row, Cmp::Le, 1.0);
+            for j in 0..vars.m {
+                // Eq. 10: x_ij ≤ Σ_k y_ijk.
+                let mut row = vec![(vars.x(i, j), 1.0)];
+                for k in 0..vars.gpus[j] {
+                    row.push((vars.y(i, j, k), -1.0));
+                }
+                milp.constrain(row, Cmp::Le, 0.0);
+                for k in 0..vars.gpus[j] {
+                    // Eq. 11: y_ijk ≤ x_ij.
+                    milp.constrain(
+                        vec![(vars.y(i, j, k), 1.0), (vars.x(i, j), -1.0)],
+                        Cmp::Le,
+                        0.0,
+                    );
+                }
+            }
+        }
+
+        // Eq. 12–13: non-overlap of GIs sharing a GPU.
+        for (p, &(i, i2)) in vars.pairs.iter().enumerate() {
+            let g_i = inst.vms[i].profile.size() as f64;
+            let g_i2 = inst.vms[i2].profile.size() as f64;
+            for j in 0..vars.m {
+                for k in 0..vars.gpus[j] {
+                    // z_i + g_i y_i ≤ z_i' + B α  (+B slack unless both placed)
+                    milp.constrain(
+                        vec![
+                            (vars.z(i, j, k), 1.0),
+                            (vars.y(i, j, k), g_i),
+                            (vars.z(i2, j, k), -1.0),
+                            (vars.alpha(p, j, k), -BIG_B),
+                        ],
+                        Cmp::Le,
+                        0.0,
+                    );
+                    // z_i' + g_i' y_i' ≤ z_i + B(1-α)
+                    milp.constrain(
+                        vec![
+                            (vars.z(i2, j, k), 1.0),
+                            (vars.y(i2, j, k), g_i2),
+                            (vars.z(i, j, k), -1.0),
+                            (vars.alpha(p, j, k), BIG_B),
+                        ],
+                        Cmp::Le,
+                        BIG_B,
+                    );
+                }
+            }
+        }
+
+        // Eq. 14–16: z = g_i β_i when placed, z ≤ s_i.
+        for i in 0..vars.n {
+            let vm = &inst.vms[i];
+            let g_i = vm.profile.size() as f64;
+            for j in 0..vars.m {
+                for k in 0..vars.gpus[j] {
+                    // z ≤ g β + B(1-y)
+                    milp.constrain(
+                        vec![
+                            (vars.z(i, j, k), 1.0),
+                            (vars.beta(i), -g_i),
+                            (vars.y(i, j, k), BIG_B),
+                        ],
+                        Cmp::Le,
+                        BIG_B,
+                    );
+                    // -z ≤ -g β + B(1-y)
+                    milp.constrain(
+                        vec![
+                            (vars.z(i, j, k), -1.0),
+                            (vars.beta(i), g_i),
+                            (vars.y(i, j, k), BIG_B),
+                        ],
+                        Cmp::Le,
+                        BIG_B,
+                    );
+                    // Eq. 17–18 (h_i = H_jk = 100 for A100-only clusters)
+                    // are trivially satisfied; a heterogeneous extension
+                    // would forbid y_ijk here instead.
+                }
+            }
+        }
+
+        // Eq. 19–21: power indicators.
+        for i in 0..vars.n {
+            for j in 0..vars.m {
+                milp.constrain(vec![(vars.x(i, j), 1.0), (vars.phi(j), -1.0)], Cmp::Le, 0.0);
+                for k in 0..vars.gpus[j] {
+                    milp.constrain(
+                        vec![(vars.y(i, j, k), 1.0), (vars.gamma(j, k), -1.0)],
+                        Cmp::Le,
+                        0.0,
+                    );
+                }
+            }
+        }
+        for j in 0..vars.m {
+            for k in 0..vars.gpus[j] {
+                // Eq. 21: γ_jk ≤ Σ_i y_ijk.
+                let mut row = vec![(vars.gamma(j, k), 1.0)];
+                for i in 0..vars.n {
+                    row.push((vars.y(i, j, k), -1.0));
+                }
+                milp.constrain(row, Cmp::Le, 0.0);
+            }
+        }
+
+        // Symmetry breaking (valid only without prior placements, when
+        // identical hosts/GPUs are interchangeable): order the power
+        // indicators — φ_j ≥ φ_{j+1} for identical adjacent hosts,
+        // γ_{j,k} ≥ γ_{j,k+1} within each host. Cuts factorially many
+        // equivalent branch-and-bound subtrees.
+        if self.inst.prior.is_empty() {
+            for j in 0..vars.m.saturating_sub(1) {
+                let (a, b) = (&inst.hosts[j], &inst.hosts[j + 1]);
+                if a.cpus == b.cpus
+                    && a.ram_gb == b.ram_gb
+                    && a.num_gpus == b.num_gpus
+                    && a.weight == b.weight
+                {
+                    milp.constrain(
+                        vec![(vars.phi(j), 1.0), (vars.phi(j + 1), -1.0)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                }
+            }
+            for j in 0..vars.m {
+                for k in 0..vars.gpus[j].saturating_sub(1) {
+                    milp.constrain(
+                        vec![(vars.gamma(j, k), 1.0), (vars.gamma(j, k + 1), -1.0)],
+                        Cmp::Ge,
+                        0.0,
+                    );
+                }
+            }
+        }
+
+        // Eq. 22–25: migration indicators vs prior assignment.
+        for i in 0..vars.n {
+            let prior = self.inst.prior.get(&inst.vms[i].id);
+            for j in 0..vars.m {
+                let x_prev = match prior {
+                    Some(p) if p.host == j => 1.0,
+                    _ => 0.0,
+                };
+                // x - x' ≤ m and x' - x ≤ m.
+                milp.constrain(
+                    vec![(vars.x(i, j), 1.0), (vars.mig(i, j), -1.0)],
+                    Cmp::Le,
+                    x_prev,
+                );
+                milp.constrain(
+                    vec![(vars.x(i, j), -1.0), (vars.mig(i, j), -1.0)],
+                    Cmp::Le,
+                    -x_prev,
+                );
+                for k in 0..vars.gpus[j] {
+                    let y_prev = match prior {
+                        Some(p) if p.host == j && p.gpu == k => 1.0,
+                        _ => 0.0,
+                    };
+                    milp.constrain(
+                        vec![(vars.y(i, j, k), 1.0), (vars.omega(i, j, k), -1.0)],
+                        Cmp::Le,
+                        y_prev,
+                    );
+                    milp.constrain(
+                        vec![(vars.y(i, j, k), -1.0), (vars.omega(i, j, k), -1.0)],
+                        Cmp::Le,
+                        -y_prev,
+                    );
+                }
+            }
+        }
+
+        milp
+    }
+
+    fn objective_acceptance(&self, vars: &VarMap) -> Vec<f64> {
+        let mut c = vec![0.0; vars.num_vars];
+        for i in 0..vars.n {
+            for j in 0..vars.m {
+                c[vars.x(i, j)] = self.inst.vms[i].weight;
+            }
+        }
+        c
+    }
+
+    fn objective_hardware(&self, vars: &VarMap) -> Vec<f64> {
+        let mut c = vec![0.0; vars.num_vars];
+        for j in 0..vars.m {
+            c[vars.phi(j)] = self.inst.hosts[j].weight;
+            for k in 0..vars.gpus[j] {
+                c[vars.gamma(j, k)] = self.inst.hosts[j].weight;
+            }
+        }
+        c
+    }
+
+    fn objective_migrations(&self, vars: &VarMap) -> Vec<f64> {
+        let mut c = vec![0.0; vars.num_vars];
+        for i in 0..vars.n {
+            let delta =
+                self.inst.prior.get(&self.inst.vms[i].id).map(|p| p.delta).unwrap_or(0.0);
+            for j in 0..vars.m {
+                c[vars.mig(i, j)] = delta;
+                for k in 0..vars.gpus[j] {
+                    c[vars.omega(i, j, k)] = delta;
+                }
+            }
+        }
+        c
+    }
+
+    /// Solve the three objectives lexicographically.
+    pub fn solve(&self) -> Option<PlacementSolution> {
+        let vars = VarMap::new(&self.inst);
+        let mut milp = self.build_base(&vars);
+        let mut nodes = 0usize;
+
+        // Objectives over binary variables with integer weights have
+        // integral values — unlock the unit pruning gap.
+        let integral = |c: &[f64]| c.iter().all(|v| v.fract() == 0.0);
+
+        // Stage 1: maximize acceptance.
+        let c1 = self.objective_acceptance(&vars);
+        milp.objective = c1.clone();
+        milp.integral_objective = integral(&c1);
+        milp.maximize = true;
+        let s1 = milp.solve(0)?;
+        nodes += s1.nodes;
+        let acceptance = s1.objective;
+        let row: Vec<(usize, f64)> =
+            c1.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(i, &v)| (i, v)).collect();
+        milp.constrain(row, Cmp::Ge, acceptance - 0.25);
+
+        // Stage 2: minimize active hardware.
+        let c2 = self.objective_hardware(&vars);
+        milp.objective = c2.clone();
+        milp.integral_objective = integral(&c2);
+        milp.maximize = false;
+        let s2 = milp.solve(0)?;
+        nodes += s2.nodes;
+        let active = s2.objective;
+        let row: Vec<(usize, f64)> =
+            c2.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(i, &v)| (i, v)).collect();
+        milp.constrain(row, Cmp::Le, active + 0.25);
+
+        // Stage 3: minimize migrations.
+        let c3 = self.objective_migrations(&vars);
+        let all_zero = c3.iter().all(|&v| v == 0.0);
+        milp.integral_objective = integral(&c3);
+        milp.objective = c3;
+        milp.maximize = false;
+        let s3 = if all_zero {
+            // No resident VMs: stage 2's solution is final.
+            s2.clone()
+        } else {
+            let s = milp.solve(0)?;
+            nodes += s.nodes;
+            s
+        };
+        let migrations = if all_zero { 0.0 } else { s3.objective };
+
+        // Extract the assignment from the final solution vector.
+        let values = &s3.values;
+        let mut assignment = HashMap::new();
+        for i in 0..vars.n {
+            for j in 0..vars.m {
+                for k in 0..vars.gpus[j] {
+                    if values[vars.y(i, j, k)] > 0.5 {
+                        let start = values[vars.z(i, j, k)].round() as u8;
+                        assignment.insert(self.inst.vms[i].id, (j, k, start));
+                    }
+                }
+            }
+        }
+        Some(PlacementSolution { assignment, acceptance, active_hardware: active, migrations, nodes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::Profile;
+
+    fn vm(id: VmId, profile: Profile, weight: f64) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 10, weight }
+    }
+
+    fn host(num_gpus: usize) -> IlpHost {
+        IlpHost { cpus: 64, ram_gb: 256, num_gpus, weight: 1.0 }
+    }
+
+    #[test]
+    fn single_vm_single_gpu() {
+        let inst = PlacementInstance {
+            hosts: vec![host(1)],
+            vms: vec![vm(1, Profile::P3g20gb, 1.0)],
+            prior: HashMap::new(),
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert!((s.acceptance - 1.0).abs() < 1e-6);
+        // 1 PM + 1 GPU active.
+        assert!((s.active_hardware - 2.0).abs() < 1e-6);
+        let (_, _, start) = s.assignment[&1];
+        assert!(start == 0 || start == 4);
+    }
+
+    #[test]
+    fn two_3g_share_one_gpu() {
+        let inst = PlacementInstance {
+            hosts: vec![host(2)],
+            vms: vec![vm(1, Profile::P3g20gb, 1.0), vm(2, Profile::P3g20gb, 1.0)],
+            prior: HashMap::new(),
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert!((s.acceptance - 2.0).abs() < 1e-6);
+        // Hardware-minimal: both on one GPU → 1 PM + 1 GPU = 2.
+        assert!((s.active_hardware - 2.0).abs() < 1e-6, "{s:?}");
+        let (_, k1, s1) = s.assignment[&1];
+        let (_, k2, s2) = s.assignment[&2];
+        assert_eq!(k1, k2);
+        assert_ne!(s1, s2);
+        assert_eq!(s1.min(s2), 0);
+        assert_eq!(s1.max(s2), 4);
+    }
+
+    #[test]
+    fn capacity_forces_rejection() {
+        // Two 7g.40gb on one GPU: only one fits.
+        let inst = PlacementInstance {
+            hosts: vec![host(1)],
+            vms: vec![vm(1, Profile::P7g40gb, 1.0), vm(2, Profile::P7g40gb, 1.0)],
+            prior: HashMap::new(),
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert!((s.acceptance - 1.0).abs() < 1e-6);
+        assert_eq!(s.assignment.len(), 1);
+    }
+
+    #[test]
+    fn weights_prioritize_large_vm() {
+        // One GPU; a 7g (weight 5) vs two 1g (weight 1 each): accepting
+        // the 7g wins 5 > 2.
+        let inst = PlacementInstance {
+            hosts: vec![host(1)],
+            vms: vec![
+                vm(1, Profile::P7g40gb, 5.0),
+                vm(2, Profile::P1g5gb, 1.0),
+                vm(3, Profile::P1g5gb, 1.0),
+            ],
+            prior: HashMap::new(),
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert!((s.acceptance - 5.0).abs() < 1e-6);
+        assert!(s.assignment.contains_key(&1));
+        assert!(!s.assignment.contains_key(&2));
+    }
+
+    #[test]
+    fn cpu_constraint_respected() {
+        // Host CPU fits only one VM despite GPU space for both.
+        let inst = PlacementInstance {
+            hosts: vec![IlpHost { cpus: 3, ram_gb: 256, num_gpus: 1, weight: 1.0 }],
+            vms: vec![vm(1, Profile::P1g5gb, 1.0), vm(2, Profile::P1g5gb, 1.0)],
+            prior: HashMap::new(),
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert!((s.acceptance - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn consolidation_preferred_over_spreading() {
+        // Two hosts, one GPU each; two 2g VMs → both on one host.
+        let inst = PlacementInstance {
+            hosts: vec![host(1), host(1)],
+            vms: vec![vm(1, Profile::P2g10gb, 1.0), vm(2, Profile::P2g10gb, 1.0)],
+            prior: HashMap::new(),
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert!((s.acceptance - 2.0).abs() < 1e-6);
+        assert!((s.active_hardware - 2.0).abs() < 1e-6);
+        let (j1, _, _) = s.assignment[&1];
+        let (j2, _, _) = s.assignment[&2];
+        assert_eq!(j1, j2);
+    }
+
+    #[test]
+    fn migration_minimized_for_resident_vm() {
+        // VM 1 already on host 0; consolidating onto host 1 would not
+        // change hardware count, so stage 3 keeps it in place.
+        let mut prior = HashMap::new();
+        prior.insert(1, PriorPlacement { host: 0, gpu: 0, delta: 1.0 });
+        let inst = PlacementInstance {
+            hosts: vec![host(1), host(1)],
+            vms: vec![vm(1, Profile::P2g10gb, 1.0), vm(2, Profile::P2g10gb, 1.0)],
+            prior,
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert!((s.acceptance - 2.0).abs() < 1e-6);
+        assert!((s.migrations - 0.0).abs() < 1e-6, "{s:?}");
+        let (j1, _, _) = s.assignment[&1];
+        assert_eq!(j1, 0, "resident VM should stay on host 0");
+        let (j2, _, _) = s.assignment[&2];
+        assert_eq!(j2, 0, "new VM joins the already-active host");
+    }
+
+    #[test]
+    fn start_blocks_are_legal_multiples() {
+        // A 2g.10gb's start must be ∈ {0, 2, 4}: fill a GPU with one
+        // 1g.10gb and one 2g.10gb and check both starts are even.
+        let inst = PlacementInstance {
+            hosts: vec![host(1)],
+            vms: vec![vm(1, Profile::P1g10gb, 1.0), vm(2, Profile::P2g10gb, 1.0)],
+            prior: HashMap::new(),
+        };
+        let s = IlpSolver::new(inst).solve().unwrap();
+        assert_eq!(s.assignment.len(), 2);
+        for (_, (_, _, start)) in &s.assignment {
+            assert_eq!(start % 2, 0, "{s:?}");
+        }
+        // And 2g.10gb specifically must not start at 6.
+        let (_, _, s2) = s.assignment[&2];
+        assert!(s2 <= 4);
+    }
+}

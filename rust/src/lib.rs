@@ -1,0 +1,45 @@
+//! # GRMU — Multi-Objective MIG-Enabled VM Placement
+//!
+//! A from-scratch reproduction of *"A Multi-Objective Framework for
+//! Optimizing GPU-Enabled VM Placement in Cloud Data Centers with
+//! Multi-Instance GPU Technology"* (Siavashi & Momtazpour, 2025).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — in-tree substrates for the offline build environment:
+//!   seeded RNG and distributions, JSON, CLI parsing, a bench harness and
+//!   a property-testing helper.
+//! * [`mig`] — the NVIDIA Multi-Instance GPU substrate: profiles and
+//!   placement rules (Table 1 / Fig. 1), the Configuration-Capability
+//!   metric (Eq. 1–2), the default driver placement policy (Alg. 1), the
+//!   723-node configuration space (§5.1) and the fragmentation metric
+//!   (Alg. 4).
+//! * [`trace`] — Alibaba-2023-like workload synthesis with the paper's
+//!   IQR outlier filter and Eq. 27–30 GPU-fraction→profile mapping.
+//! * [`cluster`] — physical machines (CPU/RAM/GPUs), VMs and the
+//!   data-center state.
+//! * [`sim`] — the discrete-event simulation engine and metric sampling
+//!   (replaces the paper's "Cloudy" simulator).
+//! * [`policies`] — the five placement policies evaluated in §8:
+//!   First-Fit, Best-Fit, MCC, MECC and GRMU (dual-basket pooling,
+//!   defragmentation, consolidation — Alg. 2–7).
+//! * [`ilp`] — the paper's multi-objective ILP (Eq. 3–26) plus an exact
+//!   in-house MILP solver (dense simplex + branch & bound) used to
+//!   validate the heuristics on small instances.
+//! * [`runtime`] — the PJRT/XLA runtime that loads the AOT-compiled
+//!   batched configuration scorer (`artifacts/cc_scorer.hlo.txt`).
+//! * [`coordinator`] — the online placement service: request loop,
+//!   admission, migration ticks and metrics export.
+//! * [`report`] — renderers that regenerate every table and figure of the
+//!   paper's evaluation section.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod ilp;
+pub mod mig;
+pub mod policies;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;

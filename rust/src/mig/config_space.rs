@@ -1,0 +1,459 @@
+//! Exhaustive analysis of the single- and multi-GPU configuration space
+//! (§5.1).
+//!
+//! A *configuration* is a set of non-overlapping legal placements,
+//! represented as an 18-bit mask over [`PLACEMENTS`]. Depth-first search
+//! from the empty GPU enumerates all 723 configurations with 78 maximal
+//! (terminal) ones; grouping configurations by their profile *multiset*
+//! identifies arrangements that are suboptimal in CC, and a sweep over the
+//! grouped per-profile capacities identifies configurations for which an
+//! alternative arrangement of the same profiles accommodates some profile
+//! better at the same or lower CC (the paper's 19% / 79% analyses).
+//!
+//! Paper-vs-measured note: 723 / 78 / 482 and the two-GPU pair count
+//! 261,726 reproduce exactly. The paper's "248 default-policy reachable
+//! configurations (172 suboptimal)" does **not** reproduce under any
+//! tie-breaking of Algorithm 1 we tried (first/last/all-maximal yield
+//! 179/179/297); EXPERIMENTS.md reports all variants.
+
+use super::gpu::cc;
+use super::placement::mock_assign;
+use super::profiles::{ALL_PROFILES, PLACEMENTS};
+use std::collections::HashMap;
+
+/// A configuration: bit `i` set means `PLACEMENTS[i]` is allocated.
+pub type Config = u32;
+
+/// Occupancy mask of a configuration.
+pub fn occupancy_of(config: Config) -> u8 {
+    let mut occ = 0u8;
+    for (i, pl) in PLACEMENTS.iter().enumerate() {
+        if config & (1 << i) != 0 {
+            occ |= pl.mask();
+        }
+    }
+    occ
+}
+
+/// Profile multiset of a configuration, as counts per profile index.
+pub fn profile_multiset(config: Config) -> [u8; 6] {
+    let mut counts = [0u8; 6];
+    for (i, pl) in PLACEMENTS.iter().enumerate() {
+        if config & (1 << i) != 0 {
+            counts[pl.profile.index()] += 1;
+        }
+    }
+    counts
+}
+
+/// Pack a profile multiset into a compact sortable key.
+fn multiset_key(counts: [u8; 6]) -> u32 {
+    counts.iter().fold(0u32, |acc, &c| (acc << 4) | c as u32)
+}
+
+/// Enumerate every reachable configuration (sorted, deduplicated).
+pub fn enumerate_all() -> Vec<Config> {
+    let mut seen: Vec<bool> = vec![false; 1 << PLACEMENTS.len()];
+    let mut out = Vec::new();
+    let mut stack: Vec<(Config, u8)> = vec![(0, 0)];
+    while let Some((cfg, occ)) = stack.pop() {
+        if seen[cfg as usize] {
+            continue;
+        }
+        seen[cfg as usize] = true;
+        out.push(cfg);
+        for (i, pl) in PLACEMENTS.iter().enumerate() {
+            if occ & pl.mask() == 0 {
+                stack.push((cfg | (1 << i), occ | pl.mask()));
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// A configuration is maximal (a terminal DFS node) if no placement fits.
+pub fn is_maximal(config: Config) -> bool {
+    cc(occupancy_of(config)) == 0
+}
+
+/// Tie-breaking variants for the default policy's `Assign`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TieBreak {
+    /// First CC-maximizing start in `startBlocks` order (our Alg. 1).
+    First,
+    /// Last CC-maximizing start.
+    Last,
+    /// Branch on every CC-maximizing start (upper bound on reachability).
+    AllMaximal,
+}
+
+/// Configurations reachable from empty by repeated default-policy
+/// assignment (arrivals only, no departures) under a tie-break rule.
+pub fn default_policy_reachable(tie: TieBreak) -> Vec<Config> {
+    let mut seen: Vec<bool> = vec![false; 1 << PLACEMENTS.len()];
+    let mut out = Vec::new();
+    let mut stack: Vec<(Config, u8)> = vec![(0, 0)];
+    while let Some((cfg, occ)) = stack.pop() {
+        if seen[cfg as usize] {
+            continue;
+        }
+        seen[cfg as usize] = true;
+        out.push(cfg);
+        for profile in ALL_PROFILES {
+            match tie {
+                TieBreak::First => {
+                    if let Some((pl, new_occ)) = mock_assign(occ, profile) {
+                        let idx = placement_index(pl.profile.index(), pl.start);
+                        stack.push((cfg | (1 << idx), new_occ));
+                    }
+                }
+                TieBreak::Last | TieBreak::AllMaximal => {
+                    // Recompute the maximizing set explicitly.
+                    let mut best_score = 0u32;
+                    let mut cands: Vec<(usize, u8)> = Vec::new();
+                    for &start in profile.start_blocks() {
+                        let pl = super::profiles::Placement { profile, start };
+                        if occ & pl.mask() != 0 {
+                            continue;
+                        }
+                        let score = cc(occ | pl.mask());
+                        if cands.is_empty() || score > best_score {
+                            best_score = score;
+                            cands.clear();
+                        }
+                        if score == best_score {
+                            cands.push((placement_index(profile.index(), start), pl.mask() as u8));
+                        }
+                    }
+                    let chosen: Vec<(usize, u8)> = match tie {
+                        TieBreak::Last => cands.last().copied().into_iter().collect(),
+                        _ => cands,
+                    };
+                    for (idx, mask) in chosen {
+                        stack.push((cfg | (1 << idx), occ | mask));
+                    }
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Index of a `(profile_index, start)` pair in `PLACEMENTS`.
+fn placement_index(profile_index: usize, start: u8) -> usize {
+    PLACEMENTS
+        .iter()
+        .position(|pl| pl.profile.index() == profile_index && pl.start == start)
+        .expect("legal placement")
+}
+
+/// Group configurations by profile multiset; map key → member configs.
+pub fn group_by_multiset(configs: &[Config]) -> HashMap<u32, Vec<Config>> {
+    let mut groups: HashMap<u32, Vec<Config>> = HashMap::new();
+    for &cfg in configs {
+        groups.entry(multiset_key(profile_multiset(cfg))).or_default().push(cfg);
+    }
+    groups
+}
+
+/// Count configurations whose CC is strictly below the best CC achievable
+/// by rearranging the same profile multiset (the paper's "suboptimal
+/// arrangements": 482 of 723).
+pub fn count_suboptimal(configs: &[Config], groups: &HashMap<u32, Vec<Config>>) -> usize {
+    let mut best: HashMap<u32, u32> = HashMap::new();
+    for (&key, members) in groups {
+        let max_cc = members.iter().map(|&c| cc(occupancy_of(c))).max().unwrap();
+        best.insert(key, max_cc);
+    }
+    configs
+        .iter()
+        .filter(|&&c| cc(occupancy_of(c)) < best[&multiset_key(profile_multiset(c))])
+        .count()
+}
+
+/// Count configurations for which an alternative arrangement of the same
+/// profiles accommodates at least one profile type better while having the
+/// same or lower CC (the paper's 19%-of-723 single-GPU analysis).
+pub fn count_improvable(groups: &HashMap<u32, Vec<Config>>) -> usize {
+    let mut improvable = 0usize;
+    for members in groups.values() {
+        improvable += count_improvable_in_group(
+            &members
+                .iter()
+                .map(|&c| {
+                    let occ = occupancy_of(c);
+                    (cc(occ), super::gpu::profile_capacity(occ))
+                })
+                .collect::<Vec<_>>(),
+        );
+    }
+    improvable
+}
+
+/// Core sweep: items are `(cc, per-profile capacity)`. An item is
+/// improvable iff some other item in the group has `cc' <= cc` and a
+/// strictly larger capacity for at least one profile.
+pub fn count_improvable_in_group(items: &[(u32, [u8; 6])]) -> usize {
+    if items.len() < 2 {
+        return 0;
+    }
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by_key(|&i| items[i].0);
+    let mut improvable = 0usize;
+    let mut max_low = [0u8; 6]; // per-profile max capacity among strictly lower CC
+    let mut i = 0;
+    while i < order.len() {
+        // Block of equal CC.
+        let cc_i = items[order[i]].0;
+        let mut j = i;
+        let mut block_max = [0u8; 6];
+        while j < order.len() && items[order[j]].0 == cc_i {
+            for p in 0..6 {
+                block_max[p] = block_max[p].max(items[order[j]].1[p]);
+            }
+            j += 1;
+        }
+        for &idx in &order[i..j] {
+            let cap = items[idx].1;
+            let better_exists = (0..6).any(|p| max_low[p].max(block_max[p]) > cap[p]);
+            if better_exists {
+                improvable += 1;
+            }
+        }
+        for p in 0..6 {
+            max_low[p] = max_low[p].max(block_max[p]);
+        }
+        i = j;
+    }
+    improvable
+}
+
+/// Summary of the §5.1 configuration-space analysis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpaceStats {
+    /// Unique configurations of one GPU (paper: 723).
+    pub total: usize,
+    /// Maximal/terminal configurations (paper: 78).
+    pub maximal: usize,
+    /// Arrangement-suboptimal configurations (paper: 482, 67%).
+    pub suboptimal: usize,
+    /// Default-policy reachable (paper: 248; measured: 179 first-tie).
+    pub default_reachable: usize,
+    /// Suboptimal among reachable (paper: 172, 69%; measured: 59).
+    pub default_reachable_suboptimal: usize,
+    /// Reachable when branching all CC-ties (measured: 297).
+    pub default_reachable_all_ties: usize,
+    /// Single-GPU improvable configurations (paper: 138, 19%).
+    pub improvable: usize,
+    /// Distinct two-GPU configurations C(723+1, 2) (paper: 261,726).
+    pub two_gpu_total: usize,
+    /// Improvable two-GPU pairs (paper: 205,575, 79%).
+    pub two_gpu_improvable: usize,
+}
+
+/// Run the complete §5.1 analysis. The two-GPU sweep is the expensive part
+/// (~260k pairs grouped by combined multiset); it is skipped when
+/// `with_two_gpu` is false.
+pub fn analyze(with_two_gpu: bool) -> SpaceStats {
+    let configs = enumerate_all();
+    let groups = group_by_multiset(&configs);
+    let maximal = configs.iter().filter(|&&c| is_maximal(c)).count();
+    let suboptimal = count_suboptimal(&configs, &groups);
+    let improvable = count_improvable(&groups);
+
+    let reach_first = default_policy_reachable(TieBreak::First);
+    let reach_groups = group_by_multiset(&configs);
+    let mut best: HashMap<u32, u32> = HashMap::new();
+    for (&key, members) in &reach_groups {
+        best.insert(key, members.iter().map(|&c| cc(occupancy_of(c))).max().unwrap());
+    }
+    let reach_subopt = reach_first
+        .iter()
+        .filter(|&&c| cc(occupancy_of(c)) < best[&multiset_key(profile_multiset(c))])
+        .count();
+    let reach_all = default_policy_reachable(TieBreak::AllMaximal).len();
+
+    let (two_total, two_improvable) = if with_two_gpu {
+        two_gpu_analysis(&configs)
+    } else {
+        (0, 0)
+    };
+
+    SpaceStats {
+        total: configs.len(),
+        maximal,
+        suboptimal,
+        default_reachable: reach_first.len(),
+        default_reachable_suboptimal: reach_subopt,
+        default_reachable_all_ties: reach_all,
+        improvable,
+        two_gpu_total: two_total,
+        two_gpu_improvable: two_improvable,
+    }
+}
+
+/// Two-GPU analysis: unordered pairs of configurations grouped by their
+/// *combined* profile multiset; a pair is improvable if another pair with
+/// the same combined multiset accommodates some profile better at the same
+/// or lower total CC.
+pub fn two_gpu_analysis(configs: &[Config]) -> (usize, usize) {
+    // Precompute per-config data.
+    let data: Vec<(u32, [u8; 6], [u8; 6])> = configs
+        .iter()
+        .map(|&c| {
+            let occ = occupancy_of(c);
+            (cc(occ), super::gpu::profile_capacity(occ), profile_multiset(c))
+        })
+        .collect();
+
+    // Group pairs by combined multiset key. Counts fit in 4 bits per
+    // profile only up to 14 instances of 1g.5gb across two GPUs — max is
+    // 14, which overflows a nibble, so use 5 bits per profile.
+    let pack = |a: [u8; 6], b: [u8; 6]| -> u32 {
+        let mut key = 0u32;
+        for p in 0..6 {
+            key = (key << 5) | (a[p] + b[p]) as u32;
+        }
+        key
+    };
+
+    let mut groups: HashMap<u32, Vec<(u32, [u8; 6])>> = HashMap::new();
+    let n = configs.len();
+    let mut total_pairs = 0usize;
+    for i in 0..n {
+        for j in i..n {
+            let (cc_i, cap_i, ms_i) = data[i];
+            let (cc_j, cap_j, ms_j) = data[j];
+            let mut cap = [0u8; 6];
+            for p in 0..6 {
+                cap[p] = cap_i[p] + cap_j[p];
+            }
+            groups.entry(pack(ms_i, ms_j)).or_default().push((cc_i + cc_j, cap));
+            total_pairs += 1;
+        }
+    }
+    let improvable: usize = groups.values().map(|g| count_improvable_in_group(g)).sum();
+    (total_pairs, improvable)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::profile_capacity;
+    use crate::mig::profiles::Profile;
+
+    #[test]
+    fn paper_723_unique_configurations() {
+        assert_eq!(enumerate_all().len(), 723);
+    }
+
+    #[test]
+    fn paper_78_maximal_configurations() {
+        let configs = enumerate_all();
+        assert_eq!(configs.iter().filter(|&&c| is_maximal(c)).count(), 78);
+    }
+
+    #[test]
+    fn paper_482_suboptimal_arrangements() {
+        let configs = enumerate_all();
+        let groups = group_by_multiset(&configs);
+        assert_eq!(count_suboptimal(&configs, &groups), 482);
+    }
+
+    #[test]
+    fn default_policy_reachability_measured() {
+        // Paper claims 248/172; measured values under deterministic and
+        // all-ties branching (documented discrepancy — see DESIGN.md §3).
+        assert_eq!(default_policy_reachable(TieBreak::First).len(), 179);
+        assert_eq!(default_policy_reachable(TieBreak::Last).len(), 179);
+        assert_eq!(default_policy_reachable(TieBreak::AllMaximal).len(), 297);
+    }
+
+    #[test]
+    fn reachable_is_subset_of_all() {
+        let all: std::collections::HashSet<Config> = enumerate_all().into_iter().collect();
+        for c in default_policy_reachable(TieBreak::AllMaximal) {
+            assert!(all.contains(&c));
+        }
+    }
+
+    #[test]
+    fn two_gpu_pair_count_matches_paper() {
+        // C(723 + 2 - 1, 2) = 723 * 724 / 2 = 261,726.
+        let configs = enumerate_all();
+        let n = configs.len();
+        assert_eq!(n * (n + 1) / 2, 261_726);
+    }
+
+    /// Table 3 / Fig. 3: two arrangements of the same profiles with equal
+    /// CC but different per-profile capacity exist in the space.
+    #[test]
+    fn table3_same_cc_different_capacity_exists() {
+        let configs = enumerate_all();
+        let groups = group_by_multiset(&configs);
+        let mut found = false;
+        'outer: for members in groups.values() {
+            for (a_i, &a) in members.iter().enumerate() {
+                for &b in &members[a_i + 1..] {
+                    let (occ_a, occ_b) = (occupancy_of(a), occupancy_of(b));
+                    if cc(occ_a) == cc(occ_b) && profile_capacity(occ_a) != profile_capacity(occ_b)
+                    {
+                        found = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert!(found, "no same-CC different-capacity pair found");
+    }
+
+    #[test]
+    fn multiset_and_occupancy_consistent() {
+        for &cfg in enumerate_all().iter().step_by(7) {
+            let counts = profile_multiset(cfg);
+            let blocks: u32 = counts
+                .iter()
+                .enumerate()
+                .map(|(p, &c)| c as u32 * Profile::from_index(p).size() as u32)
+                .sum();
+            assert_eq!(occupancy_of(cfg).count_ones(), blocks);
+        }
+    }
+
+    #[test]
+    fn improvable_in_group_sweep_correct_bruteforce() {
+        // Compare the sweep against an O(n^2) brute force on small groups.
+        let configs = enumerate_all();
+        let groups = group_by_multiset(&configs);
+        for members in groups.values().filter(|m| m.len() >= 2).take(50) {
+            let items: Vec<(u32, [u8; 6])> = members
+                .iter()
+                .map(|&c| {
+                    let occ = occupancy_of(c);
+                    (cc(occ), profile_capacity(occ))
+                })
+                .collect();
+            let brute = items
+                .iter()
+                .enumerate()
+                .filter(|(i, (cc_i, cap_i))| {
+                    items.iter().enumerate().any(|(j, (cc_j, cap_j))| {
+                        j != *i && cc_j <= cc_i && (0..6).any(|p| cap_j[p] > cap_i[p])
+                    })
+                })
+                .count();
+            assert_eq!(count_improvable_in_group(&items), brute);
+        }
+    }
+
+    #[test]
+    fn analyze_fast_path() {
+        let stats = analyze(false);
+        assert_eq!(stats.total, 723);
+        assert_eq!(stats.maximal, 78);
+        assert_eq!(stats.suboptimal, 482);
+        assert!(stats.improvable > 0 && stats.improvable < stats.total);
+    }
+}

@@ -1,0 +1,150 @@
+//! The GRMU fragmentation metric (Algorithm 4's `Fragmentation`).
+//!
+//! For each profile that could fit in the remaining free blocks, the
+//! metric greedily packs as many instances of the profile as possible and
+//! adds the ratio of *still-free* blocks to the profile size — i.e. how
+//! much space remains unusable at that granularity. High values indicate
+//! GPUs whose free blocks are poorly shaped for future requests; GRMU
+//! defragments the GPU with the maximal value.
+//!
+//! The pseudocode iterates `{p ∈ Profiles | Size(p) ≤ |gpu'|}` without
+//! fixing an order; we iterate profiles from largest to smallest so that
+//! the packing at each granularity measures the space *large* profiles
+//! cannot use before small profiles consume everything (iterating
+//! smallest-first would immediately pack 1g.5gb into every free block and
+//! collapse the metric to "is block 7 stranded"). The choice is
+//! documented here and exercised by the unit tests.
+
+use super::gpu::BlockMask;
+use super::profiles::{Placement, ALL_PROFILES};
+
+/// Fragmentation value of an occupancy mask (Algorithm 4, lines 8–17).
+pub fn fragmentation_value(occ: BlockMask) -> f64 {
+    let mut frag = 0.0;
+    let mut work = occ;
+    // Largest-to-smallest profile order (see module docs).
+    for profile in ALL_PROFILES.iter().rev() {
+        let free = 8 - work.count_ones() as u8;
+        if profile.size() > free {
+            continue;
+        }
+        // Greedily pack this profile at its start blocks.
+        for &start in profile.start_blocks() {
+            let mask = Placement { profile: *profile, start }.mask();
+            if work & mask == 0 {
+                work |= mask;
+            }
+        }
+        let remaining = 8 - work.count_ones() as u8;
+        frag += remaining as f64 / profile.size() as f64;
+    }
+    frag
+}
+
+/// Convenience: fragmentation of a [`super::gpu::GpuState`].
+pub fn gpu_fragmentation(gpu: &super::gpu::GpuState) -> f64 {
+    fragmentation_value(gpu.occupancy())
+}
+
+/// A fragmentation-free reference point: the GPU that packs perfectly at
+/// every granularity (fully occupied) scores zero.
+pub fn is_fragmentation_free(occ: BlockMask) -> bool {
+    fragmentation_value(occ) == 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::{cc, FULL_GPU};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_gpu_not_fragmented() {
+        assert_eq!(fragmentation_value(FULL_GPU), 0.0);
+    }
+
+    #[test]
+    fn empty_gpu_not_fragmented() {
+        // An empty GPU packs perfectly at every granularity: 7g.40gb
+        // consumes all 8 blocks immediately.
+        assert_eq!(fragmentation_value(0), 0.0);
+    }
+
+    #[test]
+    fn checkerboard_highly_fragmented() {
+        // Blocks 1,3,5,7 occupied: free blocks exist but no 2-block or
+        // larger profile fits, and block 7's neighbour situation strands
+        // space at every granularity above 1g.5gb.
+        let occ: BlockMask = 0b1010_1010;
+        let frag = fragmentation_value(occ);
+        assert!(frag > 0.0, "checkerboard should be fragmented, got {frag}");
+    }
+
+    #[test]
+    fn contiguous_half_less_fragmented_than_checkerboard() {
+        // 4 occupied blocks in one half vs 4 scattered.
+        let contiguous = fragmentation_value(0b0000_1111);
+        let scattered = fragmentation_value(0b1010_1010);
+        assert!(
+            contiguous < scattered,
+            "contiguous={contiguous} scattered={scattered}"
+        );
+    }
+
+    #[test]
+    fn stranded_block7_detected() {
+        // Blocks 0..=6 occupied; block 7 free but unusable by most
+        // profiles (only 1g.10gb@6 would need 6 and 7).
+        let occ: BlockMask = 0b0111_1111;
+        assert!(fragmentation_value(occ) > 0.0);
+        assert_eq!(cc(occ), 0); // nothing fits at all
+    }
+
+    #[test]
+    fn defrag_target_ranking_matches_intuition() {
+        // The paper's §7.1 example: 1g.5gb stranded at block 4 (suboptimal
+        // after a departure) vs the same instance at block 6.
+        let at_4: BlockMask = 0b0001_0000;
+        let at_6: BlockMask = 0b0100_0000;
+        assert!(
+            fragmentation_value(at_4) >= fragmentation_value(at_6),
+            "block-4 arrangement should be at least as fragmented"
+        );
+        // And CC agrees it is strictly worse.
+        assert!(cc(at_4) < cc(at_6));
+    }
+
+    #[test]
+    fn prop_fragmentation_nonnegative_and_bounded() {
+        forall(
+            "frag-bounds",
+            |r: &mut Rng| r.below(256) as u8,
+            |&occ| {
+                let f = fragmentation_value(occ);
+                // Max possible: 7 free at granularity 1 + padding at
+                // larger granularities (7/1 + 7/2 + 7/4 + 7/8 < 14).
+                if (0.0..14.0).contains(&f) {
+                    Ok(())
+                } else {
+                    Err(format!("frag({occ:08b}) = {f} out of bounds"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_zero_free_blocks_means_zero_fragmentation() {
+        forall(
+            "frag-full-zero",
+            |r: &mut Rng| r.below(256) as u8,
+            |&occ| {
+                if occ == FULL_GPU && fragmentation_value(occ) != 0.0 {
+                    Err("full GPU must have zero fragmentation".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

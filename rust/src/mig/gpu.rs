@@ -1,0 +1,380 @@
+//! GPU occupancy masks, the Configuration Capability metric (Eq. 1) and
+//! live GPU state.
+//!
+//! A GPU configuration is a bitmask over 8 memory blocks (`1` = occupied).
+//! CC and per-profile capacities are functions of the mask alone, so both
+//! are precomputed for all 256 masks at first use — the native scoring
+//! hot path is then a single table lookup (see EXPERIMENTS.md §Perf).
+
+use super::profiles::{Placement, Profile, PLACEMENTS};
+use std::sync::OnceLock;
+
+/// Occupancy bitmask over the 8 memory blocks. Bit `i` set = block `i` occupied.
+pub type BlockMask = u8;
+
+/// Mask with every block occupied.
+pub const FULL_GPU: BlockMask = 0xFF;
+
+/// Number of memory blocks (re-export for convenience).
+pub use super::profiles::NUM_BLOCKS;
+
+struct CcTables {
+    /// CC value per occupancy mask (Eq. 1).
+    cc: [u16; 256],
+    /// Per-profile feasible-start counts per occupancy mask.
+    capacity: [[u8; 6]; 256],
+}
+
+fn tables() -> &'static CcTables {
+    static TABLES: OnceLock<CcTables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut cc = [0u16; 256];
+        let mut capacity = [[0u8; 6]; 256];
+        for occ in 0usize..256 {
+            for pl in PLACEMENTS {
+                if occ as u8 & pl.mask() == 0 {
+                    cc[occ] += 1;
+                    capacity[occ][pl.profile.index()] += 1;
+                }
+            }
+        }
+        CcTables { cc, capacity }
+    })
+}
+
+/// Configuration Capability (Eq. 1): the number of legal placements that
+/// still fit in configuration `occ`.
+#[inline]
+pub fn cc(occ: BlockMask) -> u32 {
+    tables().cc[occ as usize] as u32
+}
+
+/// Feasible-start count for each profile under `occ` (indexed by
+/// [`Profile::index`]). The per-profile capacity columns of Table 3.
+#[inline]
+pub fn profile_capacity(occ: BlockMask) -> [u8; 6] {
+    tables().capacity[occ as usize]
+}
+
+/// Iterator over the start blocks where `profile` fits under `occ`.
+pub fn feasible_starts(profile: Profile, occ: BlockMask) -> impl Iterator<Item = u8> {
+    profile.start_blocks().iter().copied().filter(move |&s| {
+        let m = Placement { profile, start: s }.mask();
+        occ & m == 0
+    })
+}
+
+/// Identifier of a VM owning a GPU instance.
+pub type VmId = u64;
+
+/// One allocated GPU instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instance {
+    pub vm: VmId,
+    pub placement: Placement,
+}
+
+/// Live state of a single MIG-enabled GPU: occupancy plus owned instances.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GpuState {
+    occ: BlockMask,
+    instances: Vec<Instance>,
+}
+
+impl GpuState {
+    /// An empty (fully free) GPU.
+    pub fn new() -> GpuState {
+        GpuState::default()
+    }
+
+    /// Current occupancy mask.
+    #[inline]
+    pub fn occupancy(&self) -> BlockMask {
+        self.occ
+    }
+
+    /// Allocated instances.
+    #[inline]
+    pub fn instances(&self) -> &[Instance] {
+        &self.instances
+    }
+
+    /// Number of free memory blocks.
+    #[inline]
+    pub fn free_blocks(&self) -> u32 {
+        8 - self.occ.count_ones()
+    }
+
+    /// True if nothing is allocated.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.occ == 0
+    }
+
+    /// Configuration Capability of the current state.
+    #[inline]
+    pub fn cc(&self) -> u32 {
+        cc(self.occ)
+    }
+
+    /// `HalfFull` helper (Table 2): exactly one half (blocks 0–3 or 4–7)
+    /// fully occupied, the other fully free.
+    pub fn half_full(&self) -> bool {
+        (self.occ == 0x0F) || (self.occ == 0xF0)
+    }
+
+    /// `SingleProfile` helper (Table 2): exactly one instance allocated.
+    pub fn single_profile(&self) -> bool {
+        self.instances.len() == 1
+    }
+
+    /// Place an instance at a specific placement. Panics in debug builds
+    /// if the placement overlaps existing instances.
+    pub fn place(&mut self, vm: VmId, placement: Placement) {
+        debug_assert_eq!(
+            self.occ & placement.mask(),
+            0,
+            "placement {placement} overlaps occupancy {:08b}",
+            self.occ
+        );
+        self.occ |= placement.mask();
+        self.instances.push(Instance { vm, placement });
+    }
+
+    /// Remove the instance owned by `vm`, returning its placement.
+    pub fn remove_vm(&mut self, vm: VmId) -> Option<Placement> {
+        let idx = self.instances.iter().position(|inst| inst.vm == vm)?;
+        let inst = self.instances.swap_remove(idx);
+        self.occ &= !inst.placement.mask();
+        Some(inst.placement)
+    }
+
+    /// Find the instance owned by `vm`.
+    pub fn find_vm(&self, vm: VmId) -> Option<Instance> {
+        self.instances.iter().copied().find(|inst| inst.vm == vm)
+    }
+
+    /// Multiset of allocated profiles as counts indexed by profile.
+    pub fn profile_counts(&self) -> [u8; 6] {
+        let mut counts = [0u8; 6];
+        for inst in &self.instances {
+            counts[inst.placement.profile.index()] += 1;
+        }
+        counts
+    }
+
+    /// Total compute engines in use (for utilisation accounting).
+    pub fn compute_engines_used(&self) -> u8 {
+        self.instances.iter().map(|i| i.placement.profile.compute_engines()).sum()
+    }
+
+    /// Render the block map like Fig. 2 (e.g. `"115_22__"` — profile size
+    /// digit per block, `_` free).
+    pub fn block_map(&self) -> String {
+        let mut map = ['_'; 8];
+        for inst in &self.instances {
+            let digit =
+                char::from_digit(inst.placement.profile.compute_engines() as u32, 10).unwrap();
+            for b in 0..8u8 {
+                if inst.placement.mask() & (1 << b) != 0 {
+                    map[b as usize] = digit;
+                }
+            }
+        }
+        map.iter().collect()
+    }
+}
+
+/// Exhaustively verify an occupancy decomposition: does `occ` equal the
+/// union of the instance masks with no overlap? Used by tests and the
+/// simulator's integrity checks.
+pub fn consistent(state: &GpuState) -> bool {
+    let mut acc: BlockMask = 0;
+    for inst in state.instances() {
+        let m = inst.placement.mask();
+        if acc & m != 0 {
+            return false;
+        }
+        acc |= m;
+    }
+    acc == state.occupancy()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profiles::ALL_PROFILES;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    /// The paper's worked example (§5): G = {1,2,4,5,6,7} free, i.e.
+    /// blocks 0 and 3 occupied, has CC = 9.
+    #[test]
+    fn paper_example_cc_9() {
+        let occ: BlockMask = 0b0000_1001; // blocks 0 and 3 occupied
+        assert_eq!(cc(occ), 9);
+        let cap = profile_capacity(occ);
+        assert_eq!(cap[Profile::P1g5gb.index()], 5);
+        assert_eq!(cap[Profile::P1g10gb.index()], 2);
+        assert_eq!(cap[Profile::P2g10gb.index()], 1);
+        assert_eq!(cap[Profile::P3g20gb.index()], 1);
+        assert_eq!(cap[Profile::P4g20gb.index()], 0);
+        assert_eq!(cap[Profile::P7g40gb.index()], 0);
+    }
+
+    #[test]
+    fn empty_gpu_cc_is_18() {
+        assert_eq!(cc(0), 18);
+        assert_eq!(cc(FULL_GPU), 0);
+    }
+
+    /// Fig. 2(a): non-contiguous free blocks where neither 1g.10gb nor
+    /// 2g.10gb fit. Occupy blocks 1,3,5,7 — free blocks 0,2,4,6 are all
+    /// even, but each 2-block placement needs start and start+1.
+    #[test]
+    fn fig2a_fragmentation_no_two_block_fit() {
+        let occ: BlockMask = 0b1010_1010;
+        let cap = profile_capacity(occ);
+        assert_eq!(cap[Profile::P1g10gb.index()], 0);
+        assert_eq!(cap[Profile::P2g10gb.index()], 0);
+        assert_eq!(cap[Profile::P1g5gb.index()], 4); // 0,2,4,6 all fit 1g.5gb
+    }
+
+    /// Fig. 2(b): contiguous free blocks that still cannot host profiles
+    /// because the required *starting* blocks are unavailable. Blocks
+    /// 1..=3 free (0,4,5,6,7 occupied): 2g.10gb needs start ∈ {0,2,4} and
+    /// two free blocks — start 2 gives blocks 2,3: fits. But 3g.20gb
+    /// (starts 0,4) cannot despite... use blocks 3..=5 free instead:
+    /// starts {0,2,4}: only start 4 has 4,5 free → check a case with no
+    /// valid start: free = {1,2,3}: 1g.10gb starts {0,2,4,6} → start 2
+    /// fits blocks 2,3. Free = {1,3,5}: contiguity absent. True "(b)"
+    /// case: free blocks {5,6,7} are contiguous but 3g.20gb/4g.20gb can't
+    /// start there, and 2g.10gb only fits at one position.
+    #[test]
+    fn fig2b_contiguous_but_unplaceable() {
+        let occ: BlockMask = 0b0001_1111; // blocks 0..=4 occupied; 5,6,7 free
+        let cap = profile_capacity(occ);
+        // Three contiguous free blocks, yet no 3- or 4-block profile fits
+        // (3g.20gb requires start 0 or 4), and 2g.10gb has no legal start.
+        assert_eq!(cap[Profile::P3g20gb.index()], 0);
+        assert_eq!(cap[Profile::P4g20gb.index()], 0);
+        assert_eq!(cap[Profile::P2g10gb.index()], 0);
+        // 1g.10gb fits only at start 6.
+        assert_eq!(cap[Profile::P1g10gb.index()], 1);
+    }
+
+    #[test]
+    fn place_and_remove_roundtrip() {
+        let mut g = GpuState::new();
+        g.place(1, Placement { profile: Profile::P3g20gb, start: 0 });
+        g.place(2, Placement { profile: Profile::P2g10gb, start: 4 });
+        assert!(consistent(&g));
+        assert_eq!(g.occupancy(), 0b0011_1111);
+        assert_eq!(g.free_blocks(), 2);
+        assert_eq!(g.remove_vm(1), Some(Placement { profile: Profile::P3g20gb, start: 0 }));
+        assert_eq!(g.occupancy(), 0b0011_0000);
+        assert!(consistent(&g));
+        assert_eq!(g.remove_vm(99), None);
+    }
+
+    #[test]
+    fn half_full_detection() {
+        let mut g = GpuState::new();
+        g.place(1, Placement { profile: Profile::P3g20gb, start: 4 });
+        assert!(g.half_full());
+        assert!(g.single_profile());
+        g.place(2, Placement { profile: Profile::P1g5gb, start: 0 });
+        assert!(!g.half_full());
+        assert!(!g.single_profile());
+    }
+
+    #[test]
+    fn block_map_rendering() {
+        let mut g = GpuState::new();
+        g.place(1, Placement { profile: Profile::P3g20gb, start: 0 });
+        g.place(2, Placement { profile: Profile::P1g5gb, start: 5 });
+        assert_eq!(g.block_map(), "3333_1__");
+    }
+
+    #[test]
+    fn cc_table_matches_direct_computation() {
+        for occ in 0u16..256 {
+            let occ = occ as u8;
+            let direct: u32 =
+                PLACEMENTS.iter().filter(|pl| occ & pl.mask() == 0).count() as u32;
+            assert_eq!(cc(occ), direct, "occ={occ:08b}");
+            let cap = profile_capacity(occ);
+            let total: u32 = cap.iter().map(|&c| c as u32).sum();
+            assert_eq!(total, direct, "capacity sum mismatch at occ={occ:08b}");
+        }
+    }
+
+    #[test]
+    fn prop_cc_monotone_under_occupation() {
+        // Occupying more blocks never increases CC.
+        forall(
+            "cc-monotone",
+            |r: &mut Rng| {
+                let occ = r.below(256) as u8;
+                let extra = 1u8 << r.below(8);
+                (occ, extra)
+            },
+            |&(occ, extra)| {
+                if cc(occ | extra) <= cc(occ) {
+                    Ok(())
+                } else {
+                    Err(format!("cc({:08b}) > cc({:08b})", occ | extra, occ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_feasible_starts_agree_with_capacity() {
+        forall(
+            "feasible-starts-vs-capacity",
+            |r: &mut Rng| r.below(256) as u8,
+            |&occ| {
+                for p in ALL_PROFILES {
+                    let n = feasible_starts(p, occ).count() as u8;
+                    if n != profile_capacity(occ)[p.index()] {
+                        return Err(format!("mismatch for {p} at occ={occ:08b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_random_place_remove_consistency() {
+        forall(
+            "gpu-state-consistency",
+            |r: &mut Rng| {
+                // A random sequence of place/remove operations.
+                let mut g = GpuState::new();
+                let mut next_vm: VmId = 0;
+                for _ in 0..32 {
+                    if r.chance(0.6) {
+                        let p = ALL_PROFILES[r.below(6) as usize];
+                        if let Some(s) = feasible_starts(p, g.occupancy()).next() {
+                            g.place(next_vm, Placement { profile: p, start: s });
+                            next_vm += 1;
+                        }
+                    } else if !g.instances().is_empty() {
+                        let vm = g.instances()[r.below(g.instances().len() as u64) as usize].vm;
+                        g.remove_vm(vm);
+                    }
+                }
+                g
+            },
+            |g| {
+                if consistent(g) {
+                    Ok(())
+                } else {
+                    Err(format!("inconsistent state: occ={:08b}", g.occupancy()))
+                }
+            },
+        );
+    }
+}

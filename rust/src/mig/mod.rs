@@ -1,0 +1,29 @@
+//! The NVIDIA Multi-Instance GPU (MIG) substrate.
+//!
+//! Models an A100 as 8 memory blocks with the placement rules of §3
+//! (Table 1 / Fig. 1 / Table 5): six GPU-instance profiles, each with a
+//! fixed size in blocks and a fixed set of legal starting blocks. On top
+//! of that this module provides:
+//!
+//! * [`profiles`] — the profile table and the 18 legal `(profile, start)`
+//!   placements.
+//! * [`gpu`] — occupancy bitmasks, the Configuration Capability metric
+//!   (Eq. 1) via a precomputed 256-entry table, per-profile capacities and
+//!   the [`gpu::GpuState`] carrying live instances.
+//! * [`placement`] — the default NVIDIA driver placement policy
+//!   (Algorithm 1): place a profile at the start block that maximizes the
+//!   post-allocation CC.
+//! * [`config_space`] — exhaustive enumeration of the 723-configuration
+//!   space and the §5.1 optimality analyses.
+//! * [`fragmentation`] — the GRMU fragmentation metric (Algorithm 4).
+
+pub mod config_space;
+pub mod fragmentation;
+pub mod gpu;
+pub mod placement;
+pub mod profiles;
+
+pub use fragmentation::fragmentation_value;
+pub use gpu::{cc, profile_capacity, BlockMask, GpuState, Instance, FULL_GPU, NUM_BLOCKS};
+pub use placement::{assign, mock_assign, unassign_vm};
+pub use profiles::{Placement, Profile, PLACEMENTS};

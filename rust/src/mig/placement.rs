@@ -1,0 +1,238 @@
+//! The default NVIDIA driver placement policy (Algorithm 1).
+//!
+//! Observed with driver 530.30.02: a GI profile is placed at the starting
+//! block whose resulting configuration maximizes the Configuration
+//! Capability (Eq. 2). Ties resolve to the first maximizing start in
+//! `startBlocks` order — this reproduces the paper's documented behaviour
+//! (on an empty GPU the first 1g.5gb lands on block 6, the second on
+//! block 4).
+//!
+//! NVIDIA does not allow overriding this intra-GPU policy, so every
+//! placement policy in [`crate::policies`] funnels through [`assign`].
+
+use super::gpu::{cc, BlockMask, GpuState, VmId};
+use super::profiles::{Placement, Profile, ALL_PROFILES};
+use std::sync::OnceLock;
+
+/// Reference implementation of Algorithm 1's start selection — used to
+/// build the lookup table and kept for the property tests.
+fn mock_assign_uncached(occ: BlockMask, profile: Profile) -> Option<(Placement, BlockMask)> {
+    let mut best: Option<(u32, Placement, BlockMask)> = None;
+    for &start in profile.start_blocks() {
+        let pl = Placement { profile, start };
+        let mask = pl.mask();
+        if occ & mask != 0 {
+            continue;
+        }
+        let new_occ = occ | mask;
+        let score = cc(new_occ);
+        match best {
+            Some((best_score, _, _)) if score <= best_score => {}
+            _ => best = Some((score, pl, new_occ)),
+        }
+    }
+    best.map(|(_, pl, new_occ)| (pl, new_occ))
+}
+
+/// Precomputed Algorithm 1 decisions: `(start + 1, new_occ)` per
+/// (occupancy, profile), 0 = no fit. The decision is a pure function of
+/// an 8-bit mask and one of six profiles, so the full table is 1.5 K
+/// entries — this is the single hottest lookup in every policy's scan
+/// (see EXPERIMENTS.md §Perf).
+fn assign_table() -> &'static [[(u8, u8); 6]; 256] {
+    static TABLE: OnceLock<[[(u8, u8); 6]; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [[(0u8, 0u8); 6]; 256];
+        for occ in 0usize..256 {
+            for profile in ALL_PROFILES {
+                if let Some((pl, new_occ)) = mock_assign_uncached(occ as u8, profile) {
+                    table[occ][profile.index()] = (pl.start + 1, new_occ);
+                }
+            }
+        }
+        table
+    })
+}
+
+/// Pick the start block for `profile` under occupancy `occ` per
+/// Algorithm 1 (maximize post-allocation CC; first max wins ties).
+/// Returns the chosen placement and the new occupancy.
+#[inline]
+pub fn mock_assign(occ: BlockMask, profile: Profile) -> Option<(Placement, BlockMask)> {
+    let (start_plus_1, new_occ) = assign_table()[occ as usize][profile.index()];
+    if start_plus_1 == 0 {
+        None
+    } else {
+        Some((Placement { profile, start: start_plus_1 - 1 }, new_occ))
+    }
+}
+
+/// Algorithm 1's `Assign`: place `profile` for `vm` on `gpu`, choosing the
+/// CC-maximizing start. Returns the placement, or `None` if it doesn't fit.
+pub fn assign(gpu: &mut GpuState, vm: VmId, profile: Profile) -> Option<Placement> {
+    let (pl, _) = mock_assign(gpu.occupancy(), profile)?;
+    gpu.place(vm, pl);
+    Some(pl)
+}
+
+/// Reverse of [`assign`] (Algorithm 6's `UnAssign`).
+pub fn unassign_vm(gpu: &mut GpuState, vm: VmId) -> Option<Placement> {
+    gpu.remove_vm(vm)
+}
+
+/// Would `profile` fit at all under `occ`? (Cheaper than `mock_assign`
+/// when the chosen start is irrelevant.)
+#[inline]
+pub fn fits(occ: BlockMask, profile: Profile) -> bool {
+    super::gpu::profile_capacity(occ)[profile.index()] > 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::consistent;
+    use crate::mig::profiles::ALL_PROFILES;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    /// §5.1: "a 1g.5gb profile is placed on block 6. The second 1g.5gb
+    /// profile is positioned on block 4."
+    #[test]
+    fn paper_documented_behaviour_1g5gb() {
+        let mut g = GpuState::new();
+        let p1 = assign(&mut g, 1, Profile::P1g5gb).unwrap();
+        assert_eq!(p1.start, 6);
+        let p2 = assign(&mut g, 2, Profile::P1g5gb).unwrap();
+        assert_eq!(p2.start, 4);
+    }
+
+    /// §7.1 defragmentation rationale: with 1g.5gb at 4 and 6, removing
+    /// the one at 6 leaves a suboptimal configuration; re-placing the
+    /// remaining profile at 6 restores the maximum CC.
+    #[test]
+    fn defrag_motivating_example() {
+        let mut g = GpuState::new();
+        assign(&mut g, 1, Profile::P1g5gb).unwrap(); // block 6
+        assign(&mut g, 2, Profile::P1g5gb).unwrap(); // block 4
+        g.remove_vm(1);
+        let cc_suboptimal = g.cc(); // 1g.5gb stranded on block 4
+        let mut fresh = GpuState::new();
+        assign(&mut fresh, 2, Profile::P1g5gb).unwrap(); // block 6
+        assert!(fresh.cc() > cc_suboptimal);
+    }
+
+    #[test]
+    fn full_gpu_rejects() {
+        let mut g = GpuState::new();
+        assert!(assign(&mut g, 1, Profile::P7g40gb).is_some());
+        for p in ALL_PROFILES {
+            assert!(assign(&mut g, 2, p).is_none(), "{p} placed on a full GPU");
+        }
+    }
+
+    #[test]
+    fn seven_small_instances_fit() {
+        let mut g = GpuState::new();
+        for vm in 0..7 {
+            assert!(assign(&mut g, vm, Profile::P1g5gb).is_some(), "vm {vm}");
+        }
+        assert!(assign(&mut g, 7, Profile::P1g5gb).is_none());
+        // Block 7 is never usable by 1g.5gb.
+        assert_eq!(g.free_blocks(), 1);
+        assert!(consistent(&g));
+    }
+
+    #[test]
+    fn max_instances_reachable_for_all_profiles() {
+        for p in ALL_PROFILES {
+            let mut g = GpuState::new();
+            let mut placed = 0;
+            while assign(&mut g, placed as u64, p).is_some() {
+                placed += 1;
+            }
+            assert_eq!(placed, p.max_instances(), "{p}");
+        }
+    }
+
+    #[test]
+    fn mock_assign_matches_assign() {
+        let mut g = GpuState::new();
+        for (vm, p) in [Profile::P2g10gb, Profile::P1g10gb, Profile::P3g20gb]
+            .into_iter()
+            .enumerate()
+        {
+            let (expected, _) = mock_assign(g.occupancy(), p).unwrap();
+            let actual = assign(&mut g, vm as u64, p).unwrap();
+            assert_eq!(expected, actual);
+        }
+    }
+
+    #[test]
+    fn unassign_restores_occupancy() {
+        let mut g = GpuState::new();
+        let before = g.occupancy();
+        assign(&mut g, 1, Profile::P4g20gb).unwrap();
+        unassign_vm(&mut g, 1).unwrap();
+        assert_eq!(g.occupancy(), before);
+    }
+
+    #[test]
+    fn prop_assign_always_chooses_cc_maximal_start() {
+        forall(
+            "assign-cc-maximal",
+            |r: &mut Rng| {
+                // Random reachable occupancy + random profile.
+                let mut g = GpuState::new();
+                for vm in 0..r.below(6) {
+                    let p = ALL_PROFILES[r.below(6) as usize];
+                    let _ = assign(&mut g, vm, p);
+                }
+                (g.occupancy(), ALL_PROFILES[r.below(6) as usize])
+            },
+            |&(occ, profile)| {
+                let Some((chosen, new_occ)) = mock_assign(occ, profile) else {
+                    return Ok(());
+                };
+                // No alternative start yields a strictly higher CC.
+                for &s in profile.start_blocks() {
+                    let pl = Placement { profile, start: s };
+                    if occ & pl.mask() == 0 && cc(occ | pl.mask()) > cc(new_occ) {
+                        return Err(format!(
+                            "start {s} beats chosen {} under occ={occ:08b}",
+                            chosen.start
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn table_matches_uncached_reference_exhaustively() {
+        for occ in 0u16..256 {
+            for profile in ALL_PROFILES {
+                assert_eq!(
+                    mock_assign(occ as u8, profile),
+                    mock_assign_uncached(occ as u8, profile),
+                    "occ={occ:08b} profile={profile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_fits_iff_mock_assign_some() {
+        forall(
+            "fits-consistent",
+            |r: &mut Rng| (r.below(256) as u8, ALL_PROFILES[r.below(6) as usize]),
+            |&(occ, p)| {
+                if fits(occ, p) == mock_assign(occ, p).is_some() {
+                    Ok(())
+                } else {
+                    Err(format!("fits disagrees at occ={occ:08b} profile={p}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,308 @@
+//! A100 GPU-instance profiles and legal placements (Table 1, Table 5, Fig. 1).
+//!
+//! Naming follows NVIDIA's `Cg.Mgb` convention: `C` compute engines and
+//! `M` GB of memory. An A100 has 7 compute engines and 8 memory blocks of
+//! 5 GB each. Only memory blocks constrain placement (the paper's
+//! block-centric view); compute engines are tracked for Eq. 28's
+//! `U_k = compute_k × memory_k` workload mapping.
+
+use std::fmt;
+
+/// Number of memory blocks on an A100.
+pub const NUM_BLOCKS: u8 = 8;
+
+/// The six GPU-instance (GI) profiles supported on an A100.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Profile {
+    /// MIG 1g.5gb — 1 block, 1 compute engine, up to 7 instances.
+    P1g5gb,
+    /// MIG 1g.10gb — 2 blocks, 1 compute engine, up to 4 instances.
+    P1g10gb,
+    /// MIG 2g.10gb — 2 blocks, 2 compute engines, up to 3 instances.
+    P2g10gb,
+    /// MIG 3g.20gb — 4 blocks, 3 compute engines, up to 2 instances.
+    P3g20gb,
+    /// MIG 4g.20gb — 4 blocks, 4 compute engines, 1 instance.
+    P4g20gb,
+    /// MIG 7g.40gb — 8 blocks, 7 compute engines, 1 instance (whole GPU).
+    P7g40gb,
+}
+
+/// All profiles in Algorithm 1's `startBlocks` table order.
+pub const ALL_PROFILES: [Profile; 6] = [
+    Profile::P1g5gb,
+    Profile::P1g10gb,
+    Profile::P2g10gb,
+    Profile::P3g20gb,
+    Profile::P4g20gb,
+    Profile::P7g40gb,
+];
+
+impl Profile {
+    /// Dense index 0..6 in `ALL_PROFILES` order.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Profile from dense index.
+    pub fn from_index(i: usize) -> Profile {
+        ALL_PROFILES[i]
+    }
+
+    /// Size in memory blocks (`g_i` in Table 5).
+    #[inline]
+    pub const fn size(self) -> u8 {
+        match self {
+            Profile::P1g5gb => 1,
+            Profile::P1g10gb | Profile::P2g10gb => 2,
+            Profile::P3g20gb | Profile::P4g20gb => 4,
+            Profile::P7g40gb => 8,
+        }
+    }
+
+    /// Number of compute engines (the `C` in `Cg.Mgb`).
+    #[inline]
+    pub const fn compute_engines(self) -> u8 {
+        match self {
+            Profile::P1g5gb | Profile::P1g10gb => 1,
+            Profile::P2g10gb => 2,
+            Profile::P3g20gb => 3,
+            Profile::P4g20gb => 4,
+            Profile::P7g40gb => 7,
+        }
+    }
+
+    /// Memory in GB (the `M` in `Cg.Mgb`).
+    #[inline]
+    pub const fn memory_gb(self) -> u8 {
+        self.size() * 5
+    }
+
+    /// Legal starting blocks (Algorithm 1's `startBlocks`).
+    pub const fn start_blocks(self) -> &'static [u8] {
+        match self {
+            Profile::P1g5gb => &[0, 1, 2, 3, 4, 5, 6],
+            Profile::P1g10gb => &[0, 2, 4, 6],
+            Profile::P2g10gb => &[0, 2, 4],
+            Profile::P3g20gb => &[0, 4],
+            Profile::P4g20gb => &[0],
+            Profile::P7g40gb => &[0],
+        }
+    }
+
+    /// Last permissible starting index (`s_i` in Table 5).
+    #[inline]
+    pub const fn last_start(self) -> u8 {
+        match self {
+            Profile::P1g5gb | Profile::P1g10gb => 6,
+            Profile::P2g10gb | Profile::P3g20gb => 4,
+            Profile::P4g20gb | Profile::P7g40gb => 0,
+        }
+    }
+
+    /// GPU characteristic required by this GI (`h_i` in Table 5; 100 for
+    /// every A100 profile — the compatibility constraint of Eq. 17–18).
+    #[inline]
+    pub const fn characteristic(self) -> u32 {
+        100
+    }
+
+    /// Maximum simultaneous instances on one GPU (Table 1).
+    #[inline]
+    pub const fn max_instances(self) -> u8 {
+        match self {
+            Profile::P1g5gb => 7,
+            Profile::P1g10gb => 4,
+            Profile::P2g10gb => 3,
+            Profile::P3g20gb => 2,
+            Profile::P4g20gb | Profile::P7g40gb => 1,
+        }
+    }
+
+    /// Eq. 28: combined compute×memory value used for workload mapping.
+    #[inline]
+    pub fn combined_value(self) -> f64 {
+        (self.compute_engines() as f64 / 7.0) * (self.size() as f64 / 8.0)
+    }
+
+    /// Canonical NVIDIA profile name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Profile::P1g5gb => "1g.5gb",
+            Profile::P1g10gb => "1g.10gb",
+            Profile::P2g10gb => "2g.10gb",
+            Profile::P3g20gb => "3g.20gb",
+            Profile::P4g20gb => "4g.20gb",
+            Profile::P7g40gb => "7g.40gb",
+        }
+    }
+
+    /// Parse a canonical profile name.
+    pub fn parse(s: &str) -> Option<Profile> {
+        ALL_PROFILES.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Whether this profile consumes the whole GPU (routes to the heavy
+    /// basket in GRMU's dual-basket pooling).
+    #[inline]
+    pub const fn is_heavy(self) -> bool {
+        matches!(self, Profile::P7g40gb)
+    }
+}
+
+impl fmt::Display for Profile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One legal `(profile, start)` placement with its block mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Placement {
+    pub profile: Profile,
+    pub start: u8,
+}
+
+impl Placement {
+    /// Bitmask over the 8 memory blocks this placement occupies.
+    #[inline]
+    pub const fn mask(self) -> u8 {
+        (((1u16 << self.profile.size()) - 1) << self.start) as u8
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.profile, self.start)
+    }
+}
+
+/// All 18 legal placements in Algorithm 1 table order (profiles in
+/// `startBlocks` order, starts ascending). Fig. 1's placement diagram.
+pub const PLACEMENTS: [Placement; 18] = {
+    const fn p(profile: Profile, start: u8) -> Placement {
+        Placement { profile, start }
+    }
+    [
+        p(Profile::P1g5gb, 0),
+        p(Profile::P1g5gb, 1),
+        p(Profile::P1g5gb, 2),
+        p(Profile::P1g5gb, 3),
+        p(Profile::P1g5gb, 4),
+        p(Profile::P1g5gb, 5),
+        p(Profile::P1g5gb, 6),
+        p(Profile::P1g10gb, 0),
+        p(Profile::P1g10gb, 2),
+        p(Profile::P1g10gb, 4),
+        p(Profile::P1g10gb, 6),
+        p(Profile::P2g10gb, 0),
+        p(Profile::P2g10gb, 2),
+        p(Profile::P2g10gb, 4),
+        p(Profile::P3g20gb, 0),
+        p(Profile::P3g20gb, 4),
+        p(Profile::P4g20gb, 0),
+        p(Profile::P7g40gb, 0),
+    ]
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_profile_parameters() {
+        // (name, mem fraction numerator /8, compute /7, instances)
+        let rows = [
+            (Profile::P1g5gb, 1, 1, 7),
+            (Profile::P1g10gb, 2, 1, 4),
+            (Profile::P2g10gb, 2, 2, 3),
+            (Profile::P3g20gb, 4, 3, 2),
+            (Profile::P4g20gb, 4, 4, 1),
+            (Profile::P7g40gb, 8, 7, 1),
+        ];
+        for (p, mem, ce, inst) in rows {
+            assert_eq!(p.size(), mem, "{p}");
+            assert_eq!(p.compute_engines(), ce, "{p}");
+            assert_eq!(p.max_instances(), inst, "{p}");
+        }
+    }
+
+    #[test]
+    fn table5_gi_si_hi() {
+        let rows = [
+            (Profile::P1g5gb, 1, 6),
+            (Profile::P1g10gb, 2, 6),
+            (Profile::P2g10gb, 2, 4),
+            (Profile::P3g20gb, 4, 4),
+            (Profile::P4g20gb, 4, 0),
+            (Profile::P7g40gb, 8, 0),
+        ];
+        for (p, g, s) in rows {
+            assert_eq!(p.size(), g);
+            assert_eq!(p.last_start(), s);
+            assert_eq!(p.characteristic(), 100);
+        }
+    }
+
+    #[test]
+    fn start_blocks_match_last_start() {
+        for p in ALL_PROFILES {
+            let starts = p.start_blocks();
+            assert_eq!(*starts.last().unwrap(), p.last_start(), "{p}");
+            // Starts strictly increasing and within bounds.
+            for w in starts.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for &s in starts {
+                assert!(s + p.size() <= NUM_BLOCKS, "{p}@{s} overflows");
+            }
+        }
+    }
+
+    #[test]
+    fn eighteen_placements() {
+        assert_eq!(PLACEMENTS.len(), 18);
+        // Masks are consistent with profile size/start.
+        for pl in PLACEMENTS {
+            assert_eq!(pl.mask().count_ones() as u8, pl.profile.size(), "{pl}");
+            assert_eq!(pl.mask().trailing_zeros() as u8, pl.start, "{pl}");
+        }
+        // Ordered by profile then start; no duplicates.
+        for w in PLACEMENTS.windows(2) {
+            assert!(
+                (w[0].profile.index(), w[0].start) < (w[1].profile.index(), w[1].start),
+                "{} !< {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for p in ALL_PROFILES {
+            assert_eq!(Profile::parse(p.name()), Some(p));
+        }
+        assert_eq!(Profile::parse("8g.80gb"), None);
+    }
+
+    #[test]
+    fn combined_value_ordering_eq28() {
+        // U_k is strictly increasing with profile "size" on A100.
+        let mut prev = 0.0;
+        for p in ALL_PROFILES {
+            let v = p.combined_value();
+            assert!(v > prev, "{p} combined value should increase");
+            prev = v;
+        }
+        assert!((Profile::P7g40gb.combined_value() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heavy_profile_is_only_7g() {
+        for p in ALL_PROFILES {
+            assert_eq!(p.is_heavy(), p == Profile::P7g40gb);
+        }
+    }
+}

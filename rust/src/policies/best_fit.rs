@@ -1,0 +1,109 @@
+//! Best-Fit (BF, §8.3): among all GPUs that can host the request, pick
+//! the one minimizing the blocks left unallocated after placement.
+
+use super::Policy;
+use crate::cluster::vm::{Time, VmSpec};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::placement::mock_assign;
+
+/// Best-Fit placement.
+#[derive(Debug, Default)]
+pub struct BestFit {
+    refs: Vec<GpuRef>,
+}
+
+impl BestFit {
+    pub fn new() -> BestFit {
+        BestFit::default()
+    }
+}
+
+impl Policy for BestFit {
+    fn name(&self) -> &str {
+        "BF"
+    }
+
+    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+        if self.refs.is_empty() {
+            self.refs = dc.gpu_refs();
+        }
+        vms.iter()
+            .map(|vm| {
+                let mut best: Option<(u32, GpuRef, crate::mig::Placement)> = None;
+                let mut skip_host: Option<u32> = None;
+                for &r in &self.refs {
+                    if skip_host == Some(r.host) {
+                        continue;
+                    }
+                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+                        skip_host = Some(r.host);
+                        continue;
+                    }
+                    if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
+                        let remaining = 8 - new_occ.count_ones();
+                        // Strictly-less keeps the first (lowest index) on ties.
+                        if best.map(|(b, _, _)| remaining < b).unwrap_or(true) {
+                            best = Some((remaining, r, pl));
+                            if remaining == 0 {
+                                break; // perfect fit
+                            }
+                        }
+                    }
+                }
+                match best {
+                    Some((_, r, pl)) => {
+                        dc.place(vm, r, pl);
+                        true
+                    }
+                    None => false,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::{Placement, Profile};
+
+    fn vm(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
+    }
+
+    #[test]
+    fn prefers_tighter_gpu() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        // Pre-occupy GPU 1 with a 4-block instance: it becomes the
+        // tighter fit for a 3g.20gb request (0 remaining vs 4 on GPU 0).
+        let filler = vm(99, Profile::P4g20gb);
+        dc.place(&filler, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P4g20gb, start: 0 });
+        let mut p = BestFit::new();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb)], 0);
+        assert_eq!(out, vec![true]);
+        assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 1 });
+    }
+
+    #[test]
+    fn falls_back_when_tight_gpu_cannot_host() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        // GPU 1 has 6 blocks taken: a 3g.20gb no longer fits there.
+        let f1 = vm(98, Profile::P4g20gb);
+        let f2 = vm(99, Profile::P2g10gb);
+        dc.place(&f1, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P4g20gb, start: 0 });
+        dc.place(&f2, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P2g10gb, start: 4 });
+        let mut p = BestFit::new();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb)], 0);
+        assert_eq!(out, vec![true]);
+        assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
+    }
+
+    #[test]
+    fn ties_resolve_to_lowest_global_index() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 3)]);
+        let mut p = BestFit::new();
+        p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
+        assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
+    }
+}

@@ -1,0 +1,97 @@
+//! First-Fit (FF): the commercial-solution baseline of §8.3.
+//!
+//! Sequentially scans hosts and their GPUs in `globalIndex` order and
+//! places the request on the first compatible resource.
+
+use super::{try_place_on_gpu, Policy};
+use crate::cluster::vm::{Time, VmSpec};
+use crate::cluster::{DataCenter, GpuRef};
+
+/// First-Fit placement.
+#[derive(Debug, Default)]
+pub struct FirstFit {
+    refs: Vec<GpuRef>,
+}
+
+impl FirstFit {
+    pub fn new() -> FirstFit {
+        FirstFit::default()
+    }
+}
+
+impl Policy for FirstFit {
+    fn name(&self) -> &str {
+        "FF"
+    }
+
+    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+        if self.refs.is_empty() {
+            self.refs = dc.gpu_refs();
+        }
+        vms.iter()
+            .map(|vm| {
+                // Skip hosts that cannot fit CPU/RAM without probing
+                // every GPU on them.
+                let mut skip_host: Option<u32> = None;
+                for &r in &self.refs {
+                    if skip_host == Some(r.host) {
+                        continue;
+                    }
+                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+                        skip_host = Some(r.host);
+                        continue;
+                    }
+                    if try_place_on_gpu(dc, vm, r) {
+                        return true;
+                    }
+                }
+                false
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::Profile;
+
+    fn vm(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
+    }
+
+    #[test]
+    fn fills_first_gpu_first() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2), Host::new(1, 64, 256, 2)]);
+        let mut p = FirstFit::new();
+        let out = p.place_batch(
+            &mut dc,
+            &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb), vm(3, Profile::P3g20gb)],
+            0,
+        );
+        assert_eq!(out, vec![true, true, true]);
+        // First two on GPU (0,0); third on GPU (0,1).
+        assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
+        assert_eq!(dc.locate(2).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
+        assert_eq!(dc.locate(3).unwrap().gpu, GpuRef { host: 0, gpu: 1 });
+    }
+
+    #[test]
+    fn rejects_when_no_fit() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let mut p = FirstFit::new();
+        let out =
+            p.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P1g5gb)], 0);
+        assert_eq!(out, vec![true, false]);
+    }
+
+    #[test]
+    fn skips_cpu_exhausted_host() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 1, 256, 1), Host::new(1, 64, 256, 1)]);
+        let mut p = FirstFit::new();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
+        assert_eq!(out, vec![true]);
+        assert_eq!(dc.locate(1).unwrap().gpu.host, 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! Light-basket consolidation via inter-GPU migration (Algorithm 5).
+//!
+//! Periodically, GRMU looks for half-full single-profile GPUs in the
+//! light basket — GPUs holding exactly one 3g.20gb or 4g.20gb instance
+//! that occupies one half of the device. Pairs of such GPUs are merged:
+//! the guest of the source migrates into the free half of the target, the
+//! source empties and returns to the pool (by `globalIndex` order, so it
+//! is the first to be reused).
+//!
+//! Placement-rule subtlety the pseudocode glosses over: a 4g.20gb can
+//! only start at block 0, so two 4g.20gb-bearing GPUs can never merge —
+//! the fit check below (via the default placement) rejects such pairs.
+
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::placement::mock_assign;
+use std::collections::BTreeSet;
+
+/// One consolidation round. Returns the GPUs drained back to the pool;
+/// `inter_migrations` is incremented per migrated VM.
+pub fn consolidate_light_basket(
+    dc: &mut DataCenter,
+    light: &mut BTreeSet<GpuRef>,
+    inter_migrations: &mut u64,
+) -> Vec<GpuRef> {
+    // Candidates: half-full, single-profile GPUs (Algorithm 5 line 1).
+    let mut candidates: Vec<GpuRef> = light
+        .iter()
+        .copied()
+        .filter(|&r| {
+            let g = dc.gpu(r);
+            g.half_full() && g.single_profile()
+        })
+        .collect();
+
+    let mut freed = Vec::new();
+    // Greedy pairing: take each source in order, find any compatible
+    // target among the remaining candidates.
+    let mut i = 0;
+    while i < candidates.len() {
+        let source = candidates[i];
+        let Some(inst) = dc.gpu(source).instances().first().copied() else {
+            i += 1;
+            continue;
+        };
+        // Find a target whose free half accepts the source's profile.
+        let mut chosen: Option<(usize, crate::mig::Placement)> = None;
+        for (j, &target) in candidates.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            // CPU/RAM must also follow the VM when hosts differ; the
+            // paper's model migrates the whole VM.
+            if source.host != target.host {
+                let (cpus, ram) = dc.vm_demands(inst.vm).unwrap_or((0, 0));
+                if !dc.host(target.host).fits_resources(cpus, ram) {
+                    continue;
+                }
+            }
+            if let Some((placement, _)) =
+                mock_assign(dc.gpu(target).occupancy(), inst.placement.profile)
+            {
+                chosen = Some((j, placement));
+                break;
+            }
+        }
+        if let Some((j, placement)) = chosen {
+            let target = candidates[j];
+            dc.migrate(inst.vm, target, placement);
+            *inter_migrations += 1;
+            light.remove(&source);
+            freed.push(source);
+            // Source leaves the candidate list; target is now full and
+            // leaves as well.
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            candidates.remove(hi);
+            candidates.remove(lo);
+            // Restart scan from the beginning of the shrunk list.
+            i = 0;
+        } else {
+            i += 1;
+        }
+    }
+    freed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Host, VmSpec};
+    use crate::mig::{Placement, Profile};
+
+    fn place(dc: &mut DataCenter, id: u64, profile: Profile, r: GpuRef, start: u8) {
+        let vm = VmSpec {
+            id,
+            profile,
+            cpus: 4,
+            ram_gb: 8,
+            arrival: 0,
+            departure: 10,
+            weight: 1.0,
+        };
+        dc.place(&vm, r, Placement { profile, start });
+    }
+
+    fn refs(n: u8) -> Vec<GpuRef> {
+        (0..n).map(|g| GpuRef { host: 0, gpu: g }).collect()
+    }
+
+    #[test]
+    fn merges_two_half_full_3g_gpus() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P3g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
+        let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let mut migs = 0;
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
+        assert_eq!(migs, 1);
+        assert_eq!(freed.len(), 1);
+        assert_eq!(light.len(), 1);
+        // One GPU holds both instances, the other is empty.
+        let full = *light.iter().next().unwrap();
+        assert_eq!(dc.gpu(full).instances().len(), 2);
+        assert_eq!(dc.gpu(freed[0]).instances().len(), 0);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn two_4g_gpus_cannot_merge() {
+        // 4g.20gb must start at block 0 — both GPUs have block 0 taken.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P4g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P4g20gb, refs(2)[1], 0);
+        let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let mut migs = 0;
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
+        assert_eq!(migs, 0);
+        assert!(freed.is_empty());
+        assert_eq!(light.len(), 2);
+    }
+
+    #[test]
+    fn mixed_3g_4g_merge_in_the_feasible_direction() {
+        // 4g@0 on GPU 0, 3g@0 on GPU 1: only the 3g can move (to start 4
+        // of GPU 0) — the 4g cannot start at 4.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P4g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
+        let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let mut migs = 0;
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
+        assert_eq!(migs, 1);
+        assert_eq!(freed, vec![GpuRef { host: 0, gpu: 1 }]);
+        let loc = dc.locate(2).unwrap();
+        assert_eq!(loc.gpu, GpuRef { host: 0, gpu: 0 });
+        assert_eq!(loc.placement.start, 4);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn multi_instance_gpus_not_candidates() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        // Half-full but with two instances (2×2g) — not single-profile.
+        place(&mut dc, 1, Profile::P2g10gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P2g10gb, refs(2)[0], 2);
+        place(&mut dc, 3, Profile::P3g20gb, refs(2)[1], 0);
+        let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let mut migs = 0;
+        consolidate_light_basket(&mut dc, &mut light, &mut migs);
+        assert_eq!(migs, 0);
+    }
+
+    #[test]
+    fn cross_host_migration_checks_resources() {
+        // Target host has no CPU headroom → no migration.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 1), Host::new(1, 4, 8, 1)]);
+        place(&mut dc, 1, Profile::P3g20gb, GpuRef { host: 0, gpu: 0 }, 0);
+        // Fill host 1's CPU with its own VM.
+        place(&mut dc, 2, Profile::P3g20gb, GpuRef { host: 1, gpu: 0 }, 0);
+        // Migrating VM 1 → host 1 impossible (CPU), VM 2 → host 0 fine.
+        let mut light: BTreeSet<GpuRef> =
+            [GpuRef { host: 0, gpu: 0 }, GpuRef { host: 1, gpu: 0 }].into_iter().collect();
+        let mut migs = 0;
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
+        assert_eq!(migs, 1);
+        assert_eq!(freed, vec![GpuRef { host: 1, gpu: 0 }]);
+        assert_eq!(dc.locate(2).unwrap().gpu.host, 0);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn four_gpus_pair_into_two_merges() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 4)]);
+        for (i, r) in refs(4).into_iter().enumerate() {
+            place(&mut dc, i as u64 + 1, Profile::P3g20gb, r, 0);
+        }
+        let mut light: BTreeSet<GpuRef> = refs(4).into_iter().collect();
+        let mut migs = 0;
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
+        assert_eq!(migs, 2);
+        assert_eq!(freed.len(), 2);
+        assert_eq!(light.len(), 2);
+        dc.check_integrity().unwrap();
+    }
+}

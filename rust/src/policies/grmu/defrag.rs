@@ -1,0 +1,190 @@
+//! Defragmentation via intra-GPU migration (Algorithm 4).
+//!
+//! When an allocation round rejects any VM, GRMU selects the most
+//! fragmented GPU in the light basket and re-packs it: the GPU's current
+//! instances are replayed onto an empty *mock* GPU using the default
+//! NVIDIA placement (largest profiles first, so the replay reproduces a
+//! fresh-arrival packing), and every instance whose mock position differs
+//! from its live position is relocated (`Relocated` + `IntraMigrate` of
+//! Table 2). The replay is simulation-only — the data center is mutated
+//! only if the complete re-pack is feasible.
+
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::fragmentation::fragmentation_value;
+use crate::mig::placement::mock_assign;
+use crate::mig::{GpuState, Instance, Placement};
+use std::collections::BTreeSet;
+
+/// Pick the most fragmented GPU (Algorithm 4's `Max(lightBasket,
+/// Fragmentation)`); ties resolve to the lowest global index. GPUs with
+/// zero fragmentation are skipped entirely.
+pub fn most_fragmented(dc: &DataCenter, basket: &BTreeSet<GpuRef>) -> Option<GpuRef> {
+    let mut best: Option<(f64, GpuRef)> = None;
+    for &r in basket {
+        let frag = fragmentation_value(dc.gpu(r).occupancy());
+        if frag <= 0.0 {
+            continue;
+        }
+        if best.map(|(b, _)| frag > b).unwrap_or(true) {
+            best = Some((frag, r));
+        }
+    }
+    best.map(|(_, r)| r)
+}
+
+/// Compute the re-pack plan for one GPU: replay instances onto a mock GPU
+/// with the default placement and return the instances that move, paired
+/// with their new placements. Returns `None` if the replay cannot fit
+/// every instance (the greedy default policy is not guaranteed to re-pack
+/// arbitrary multisets) — in that case no migration is performed.
+pub fn repack_plan(gpu: &GpuState) -> Option<Vec<(Instance, Placement)>> {
+    let mut instances: Vec<Instance> = gpu.instances().to_vec();
+    // Replay order: largest profile first, then current start — a
+    // fresh-arrival order that the default policy packs tightly.
+    instances.sort_by_key(|inst| {
+        (std::cmp::Reverse(inst.placement.profile.size()), inst.placement.start)
+    });
+    let mut mock: u8 = 0;
+    let mut moves = Vec::new();
+    for inst in &instances {
+        let (placement, new_occ) = mock_assign(mock, inst.placement.profile)?;
+        mock = new_occ;
+        if placement != inst.placement {
+            moves.push((*inst, placement));
+        }
+    }
+    // Migrations are costly (Eq. 5): only relocate when the re-pack
+    // *strictly improves* the configuration's CC — a same-CC shuffle
+    // would burn migrations for nothing.
+    if crate::mig::gpu::cc(mock) <= gpu.cc() {
+        return Some(Vec::new());
+    }
+    Some(moves)
+}
+
+/// Algorithm 4's `Defragmentation`: re-pack the most fragmented GPU of
+/// the light basket. Returns the number of intra-GPU migrations performed.
+pub fn defragment_light_basket(dc: &mut DataCenter, basket: &BTreeSet<GpuRef>) -> u64 {
+    let Some(target) = most_fragmented(dc, basket) else {
+        return 0;
+    };
+    let Some(moves) = repack_plan(dc.gpu(target)) else {
+        return 0;
+    };
+    if moves.is_empty() {
+        return 0;
+    }
+    apply_repack(dc, target, &moves)
+}
+
+/// Apply a re-pack plan: remove all moving instances first, then place at
+/// their new positions (avoids transient overlaps when instances swap).
+pub fn apply_repack(dc: &mut DataCenter, gpu_ref: GpuRef, moves: &[(Instance, Placement)]) -> u64 {
+    let gpu = dc.gpu_mut(gpu_ref);
+    for (inst, _) in moves {
+        gpu.remove_vm(inst.vm).expect("moving instance present");
+    }
+    for (inst, new_placement) in moves {
+        dc.gpu_mut(gpu_ref).place(inst.vm, *new_placement);
+        // Keep the location index coherent.
+        dc.relocate_index(inst.vm, gpu_ref, *new_placement);
+    }
+    moves.len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Host, VmSpec};
+    use crate::mig::Profile;
+
+    fn dc_one_gpu() -> DataCenter {
+        DataCenter::new(vec![Host::new(0, 256, 1024, 1)])
+    }
+
+    fn place(dc: &mut DataCenter, id: u64, profile: Profile, start: u8) {
+        let vm = VmSpec { id, profile, cpus: 1, ram_gb: 1, arrival: 0, departure: 10, weight: 1.0 };
+        dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement { profile, start });
+    }
+
+    #[test]
+    fn paper_stray_1g_relocated_to_block_6() {
+        // §7.1: a 1g.5gb left at block 4 after its block-6 neighbour
+        // departed should move to block 6.
+        let mut dc = dc_one_gpu();
+        place(&mut dc, 1, Profile::P1g5gb, 4);
+        let r = GpuRef { host: 0, gpu: 0 };
+        let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
+        let migrations = defragment_light_basket(&mut dc, &basket);
+        assert_eq!(migrations, 1);
+        assert_eq!(dc.gpu(r).instances()[0].placement.start, 6);
+        assert_eq!(dc.locate(1).unwrap().placement.start, 6);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn repack_improves_or_preserves_cc() {
+        let mut dc = dc_one_gpu();
+        // Fragmented layout: 1g.5gb at 0 and 3 (the CC=9 example).
+        place(&mut dc, 1, Profile::P1g5gb, 0);
+        place(&mut dc, 2, Profile::P1g5gb, 3);
+        let r = GpuRef { host: 0, gpu: 0 };
+        let cc_before = dc.gpu(r).cc();
+        let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
+        defragment_light_basket(&mut dc, &basket);
+        assert!(dc.gpu(r).cc() > cc_before);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn already_optimal_gpu_untouched() {
+        let mut dc = dc_one_gpu();
+        place(&mut dc, 1, Profile::P1g5gb, 6); // where the default puts it
+        let r = GpuRef { host: 0, gpu: 0 };
+        let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
+        // Fragmentation of this state may be zero or the replay may be a
+        // no-op; either way no migration happens.
+        let migrations = defragment_light_basket(&mut dc, &basket);
+        assert_eq!(migrations, 0);
+        assert_eq!(dc.gpu(r).instances()[0].placement.start, 6);
+    }
+
+    #[test]
+    fn empty_basket_no_op() {
+        let mut dc = dc_one_gpu();
+        assert_eq!(defragment_light_basket(&mut dc, &BTreeSet::new()), 0);
+    }
+
+    #[test]
+    fn most_fragmented_picks_worst() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        // GPU 0: tight (3g at 0). GPU 1: stray 1g at 4.
+        let a = VmSpec {
+            id: 1,
+            profile: Profile::P3g20gb,
+            cpus: 1,
+            ram_gb: 1,
+            arrival: 0,
+            departure: 10,
+            weight: 1.0,
+        };
+        dc.place(&a, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P3g20gb, start: 0 });
+        let b = VmSpec { id: 2, profile: Profile::P1g5gb, ..a };
+        dc.place(&b, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P1g5gb, start: 4 });
+        let basket: BTreeSet<GpuRef> = dc.gpu_refs().into_iter().collect();
+        let worst = most_fragmented(&dc, &basket).unwrap();
+        assert_eq!(worst, GpuRef { host: 0, gpu: 1 });
+    }
+
+    #[test]
+    fn repack_plan_handles_full_multiset() {
+        // 7 × 1g.5gb: replay fills blocks 0..=6 — all must fit.
+        let mut g = GpuState::new();
+        for (i, s) in [0u8, 1, 2, 3, 4, 5, 6].iter().enumerate() {
+            g.place(i as u64, Placement { profile: Profile::P1g5gb, start: *s });
+        }
+        let plan = repack_plan(&g).expect("full multiset re-packs");
+        // Already at every legal start; the plan may shuffle but count ≤ 7.
+        assert!(plan.len() <= 7);
+    }
+}

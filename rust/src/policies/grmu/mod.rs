@@ -1,0 +1,341 @@
+//! GRMU — the GPU Resource Management Unit (§7).
+//!
+//! A multi-stage placement framework combining:
+//!
+//! * **Dual-Basket Pooling** (Algorithms 2–3): GPUs live in a pool ordered
+//!   by `globalIndex`; a *heavy* basket (capped at a configurable share of
+//!   all GPUs) serves 7g.40gb requests, a *light* basket serves everything
+//!   else. Baskets grow on demand by drawing the lowest-index GPU from the
+//!   pool; first-fit within a basket promotes consolidation.
+//! * **Defragmentation / intra-GPU migration** (Algorithm 4,
+//!   [`defrag`]): when a batch sees any rejection, the most fragmented
+//!   light-basket GPU is re-packed by replaying its instances onto a mock
+//!   GPU with the default placement policy and relocating the ones that
+//!   land elsewhere.
+//! * **Consolidation / inter-GPU migration** (Algorithm 5,
+//!   [`consolidation`]): periodically, half-full single-profile GPUs
+//!   (one 3g.20gb or 4g.20gb) are merged pairwise; emptied GPUs return to
+//!   the pool.
+//!
+//! Implementation note on Algorithm 3 line 13: the pseudocode's
+//! `|basket| ≤ basketCapacity` would let a basket reach capacity+1; we
+//! use strict `<` so the heavy basket never exceeds its quota.
+
+pub mod consolidation;
+pub mod defrag;
+
+use super::{try_place_on_gpu, Policy};
+use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
+use crate::cluster::{DataCenter, GpuRef};
+use std::collections::BTreeSet;
+
+/// GRMU tuning knobs (§8.2's sweep parameters).
+#[derive(Debug, Clone)]
+pub struct GrmuConfig {
+    /// Share of all GPUs reserved for the heavy basket (paper knee: 0.30).
+    pub heavy_capacity_frac: f64,
+    /// Consolidation period; `None` disables it (the paper's pick for the
+    /// evaluated workload).
+    pub consolidation_interval_hours: Option<u64>,
+    /// Defragmentation on rejection (Algorithm 4).
+    pub defrag_enabled: bool,
+}
+
+impl Default for GrmuConfig {
+    fn default() -> Self {
+        GrmuConfig {
+            heavy_capacity_frac: 0.30,
+            consolidation_interval_hours: None,
+            defrag_enabled: true,
+        }
+    }
+}
+
+/// The GRMU policy state.
+pub struct Grmu {
+    config: GrmuConfig,
+    /// Unused GPUs, ordered by `globalIndex` (`Get` pops the first).
+    pool: BTreeSet<GpuRef>,
+    /// Heavy basket (7g.40gb), ordered by `globalIndex`.
+    heavy: BTreeSet<GpuRef>,
+    /// Light basket (all other profiles), ordered by `globalIndex`.
+    light: BTreeSet<GpuRef>,
+    heavy_capacity: usize,
+    light_capacity: usize,
+    intra_migrations: u64,
+    inter_migrations: u64,
+    last_consolidation: Time,
+    initialized: bool,
+}
+
+impl Grmu {
+    pub fn new(config: GrmuConfig) -> Grmu {
+        Grmu {
+            config,
+            pool: BTreeSet::new(),
+            heavy: BTreeSet::new(),
+            light: BTreeSet::new(),
+            heavy_capacity: 0,
+            light_capacity: 0,
+            intra_migrations: 0,
+            inter_migrations: 0,
+            last_consolidation: 0,
+            initialized: false,
+        }
+    }
+
+    /// Algorithm 2: pool every GPU by global index, fix basket capacities,
+    /// seed each basket with one GPU.
+    fn initialize(&mut self, dc: &DataCenter) {
+        let refs = dc.gpu_refs();
+        let num_gpus = refs.len();
+        self.pool = refs.into_iter().collect();
+        self.heavy_capacity =
+            ((num_gpus as f64 * self.config.heavy_capacity_frac).round() as usize).max(1);
+        self.light_capacity = num_gpus - self.heavy_capacity;
+        if let Some(g) = self.pop_pool() {
+            self.heavy.insert(g);
+        }
+        if let Some(g) = self.pop_pool() {
+            self.light.insert(g);
+        }
+        self.initialized = true;
+    }
+
+    fn pop_pool(&mut self) -> Option<GpuRef> {
+        let first = *self.pool.iter().next()?;
+        self.pool.remove(&first);
+        Some(first)
+    }
+
+    /// Algorithm 3 for one VM: scan the basket first-fit, then grow it
+    /// from the pool if allowed.
+    fn place_one(&mut self, dc: &mut DataCenter, vm: &VmSpec) -> bool {
+        let heavy = vm.profile.is_heavy();
+        let capacity = if heavy { self.heavy_capacity } else { self.light_capacity };
+        let basket = if heavy { &self.heavy } else { &self.light };
+
+        for &r in basket.iter() {
+            if try_place_on_gpu(dc, vm, r) {
+                return true;
+            }
+        }
+        // Grow the basket from the pool (strict capacity check; see
+        // module docs). Pool GPUs are empty, but their host may be unable
+        // to take the VM's CPU/RAM — skip such GPUs without consuming them.
+        if basket.len() < capacity {
+            let candidates: Vec<GpuRef> = self.pool.iter().copied().collect();
+            for r in candidates {
+                if try_place_on_gpu(dc, vm, r) {
+                    self.pool.remove(&r);
+                    if heavy {
+                        self.heavy.insert(r);
+                    } else {
+                        self.light.insert(r);
+                    }
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+impl Policy for Grmu {
+    fn name(&self) -> &str {
+        "GRMU"
+    }
+
+    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+        if !self.initialized {
+            self.initialize(dc);
+        }
+        let decisions: Vec<bool> = vms.iter().map(|vm| self.place_one(dc, vm)).collect();
+        // Any rejection triggers light-basket defragmentation (§7.1).
+        if self.config.defrag_enabled && decisions.iter().any(|ok| !ok) {
+            self.intra_migrations += defrag::defragment_light_basket(dc, &self.light);
+        }
+        decisions
+    }
+
+    fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId) {
+        // Basket membership is sticky: emptied GPUs return to the pool
+        // only through consolidation (Algorithm 5).
+    }
+
+    fn on_tick(&mut self, dc: &mut DataCenter, now: Time) {
+        if let Some(hours) = self.config.consolidation_interval_hours {
+            if now.saturating_sub(self.last_consolidation) >= hours * HOUR {
+                self.last_consolidation = now;
+                let freed = consolidation::consolidate_light_basket(
+                    dc,
+                    &mut self.light,
+                    &mut self.inter_migrations,
+                );
+                for g in freed {
+                    self.pool.insert(g);
+                }
+            }
+        }
+    }
+
+    fn intra_migrations(&self) -> u64 {
+        self.intra_migrations
+    }
+
+    fn inter_migrations(&self) -> u64 {
+        self.inter_migrations
+    }
+}
+
+/// Test-support accessors (used by integration tests and examples).
+impl Grmu {
+    pub fn heavy_basket(&self) -> &BTreeSet<GpuRef> {
+        &self.heavy
+    }
+    pub fn light_basket(&self) -> &BTreeSet<GpuRef> {
+        &self.light
+    }
+    pub fn pool_size(&self) -> usize {
+        self.pool.len()
+    }
+    pub fn heavy_capacity(&self) -> usize {
+        self.heavy_capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::Profile;
+
+    fn vm(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100_000, weight: 1.0 }
+    }
+
+    fn dc(gpus_per_host: usize, hosts: u32) -> DataCenter {
+        DataCenter::new(
+            (0..hosts).map(|i| Host::new(i, 256, 1024, gpus_per_host)).collect(),
+        )
+    }
+
+    #[test]
+    fn initialization_seeds_baskets() {
+        let mut dc = dc(2, 5); // 10 GPUs
+        let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.3, ..Default::default() });
+        g.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
+        assert_eq!(g.heavy_capacity(), 3);
+        assert_eq!(g.heavy_basket().len(), 1);
+        assert_eq!(g.light_basket().len(), 1);
+        assert_eq!(g.pool_size(), 8);
+    }
+
+    #[test]
+    fn heavy_quota_enforced() {
+        let mut dcx = dc(1, 10); // 10 GPUs, heavy capacity = 3
+        let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.3, ..Default::default() });
+        let heavy: Vec<VmSpec> = (1..=5).map(|i| vm(i, Profile::P7g40gb)).collect();
+        let out = g.place_batch(&mut dcx, &heavy, 0);
+        // Only 3 GPUs may serve 7g.40gb.
+        assert_eq!(out.iter().filter(|&&x| x).count(), 3);
+        assert_eq!(g.heavy_basket().len(), 3);
+        // Light profiles still have the remaining GPUs.
+        let out = g.place_batch(&mut dcx, &[vm(10, Profile::P3g20gb)], 0);
+        assert_eq!(out, vec![true]);
+    }
+
+    #[test]
+    fn light_profiles_never_use_heavy_basket() {
+        let mut dcx = dc(1, 4);
+        let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.5, ..Default::default() });
+        g.place_batch(&mut dcx, &[vm(1, Profile::P7g40gb)], 0);
+        let heavy_gpu = *g.heavy_basket().iter().next().unwrap();
+        // Fill the light basket to capacity with small VMs; none may land
+        // on the heavy GPU even after the 7g departs.
+        dcx.remove(1);
+        let small: Vec<VmSpec> = (2..30).map(|i| vm(i, Profile::P3g20gb)).collect();
+        g.place_batch(&mut dcx, &small, 0);
+        assert!(dcx.gpu(heavy_gpu).is_empty(), "light VM placed on heavy-basket GPU");
+    }
+
+    #[test]
+    fn first_fit_within_basket_consolidates() {
+        let mut dcx = dc(2, 3);
+        let mut g = Grmu::new(GrmuConfig::default());
+        let out = g.place_batch(
+            &mut dcx,
+            &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb), vm(3, Profile::P1g5gb)],
+            0,
+        );
+        assert_eq!(out, vec![true, true, true]);
+        // Both 3g VMs share the first light GPU; light basket grew for the
+        // third VM only if needed.
+        assert_eq!(dcx.locate(1).unwrap().gpu, dcx.locate(2).unwrap().gpu);
+    }
+
+    #[test]
+    fn defrag_triggered_on_rejection() {
+        // Build fragmentation on the single light GPU: place 1g.5gb VMs,
+        // remove some to leave a suboptimal layout, then send a request
+        // that must be rejected — defrag should relocate instances.
+        let mut dcx = dc(1, 2); // 2 GPUs: 1 heavy + 1 light, pool empty
+        let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.5, ..Default::default() });
+        let batch: Vec<VmSpec> = (1..=3).map(|i| vm(i, Profile::P1g5gb)).collect();
+        g.place_batch(&mut dcx, &batch, 0);
+        // Placed at 6, 4, 5 (default policy). Remove VM at block 6 and 5:
+        dcx.remove(1);
+        dcx.remove(3);
+        // Now a lone 1g.5gb sits at block 4 — fragmented. A 4g.20gb fits
+        // at blocks 0–3. A 2g.10gb then needs start 0, 2 or 4 — all
+        // blocked → rejection → defrag relocates the stray 1g to block 6.
+        let out = g.place_batch(&mut dcx, &[vm(10, Profile::P4g20gb)], 0);
+        assert_eq!(out, vec![true]);
+        let out = g.place_batch(&mut dcx, &[vm(11, Profile::P2g10gb)], 0);
+        assert_eq!(out, vec![false]);
+        assert!(g.intra_migrations() > 0, "defrag should have relocated the stray instance");
+        // After defrag the 2g.10gb fits at start 4.
+        let out = g.place_batch(&mut dcx, &[vm(12, Profile::P2g10gb)], 0);
+        assert_eq!(out, vec![true]);
+        assert_eq!(dcx.locate(12).unwrap().placement.start, 4);
+    }
+
+    #[test]
+    fn consolidation_returns_gpus_to_pool() {
+        let mut dcx = dc(1, 6);
+        let mut g = Grmu::new(GrmuConfig {
+            heavy_capacity_frac: 0.17, // 1 GPU heavy, 5 light
+            consolidation_interval_hours: Some(1),
+            defrag_enabled: true,
+        });
+        // Two 3g.20gb VMs forced onto two different GPUs: fill first GPU's
+        // other half with a temporary 3g, then remove it.
+        let out = g.place_batch(
+            &mut dcx,
+            &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb), vm(3, Profile::P3g20gb)],
+            0,
+        );
+        assert_eq!(out, vec![true, true, true]);
+        // VMs 1,2 share GPU A; VM 3 on GPU B. Remove VM 1: A half-full.
+        dcx.remove(1);
+        let pool_before = g.pool_size();
+        g.on_tick(&mut dcx, 2 * HOUR);
+        // VM 3 (or 2) migrated so one GPU drained back to the pool.
+        assert_eq!(g.inter_migrations(), 1);
+        assert_eq!(g.pool_size(), pool_before + 1);
+        dcx.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn no_consolidation_when_disabled() {
+        let mut dcx = dc(1, 6);
+        let mut g = Grmu::new(GrmuConfig {
+            heavy_capacity_frac: 0.17,
+            consolidation_interval_hours: None,
+            defrag_enabled: true,
+        });
+        g.place_batch(&mut dcx, &[vm(1, Profile::P3g20gb), vm(2, Profile::P4g20gb)], 0);
+        g.on_tick(&mut dcx, 100 * HOUR);
+        assert_eq!(g.inter_migrations(), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Max Configuration Capacity (MCC, Algorithm 6): evaluate every GPU in
+//! the data center and keep the one whose *post-allocation* CC is
+//! highest. Ties resolve to the lowest `globalIndex`.
+//!
+//! Because an empty GPU retains a high CC after hosting a small profile,
+//! MCC tends to spread load across many GPUs — the behaviour §8.3.2
+//! observes as higher active-hardware usage.
+
+use super::Policy;
+use crate::cluster::vm::{Time, VmSpec};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::gpu::cc;
+use crate::mig::placement::mock_assign;
+
+/// Scoring backend for the post-allocation CC evaluation. The XLA backend
+/// (see [`crate::runtime::scorer`]) computes the same scores via the
+/// AOT-compiled batched kernel; results are bit-identical.
+pub trait CcScorer: Send {
+    /// CC of each candidate occupancy in `occs`.
+    fn score(&mut self, occs: &[u8]) -> Vec<u32>;
+}
+
+/// Native table-lookup scorer (the default).
+#[derive(Debug, Default)]
+pub struct NativeScorer;
+
+impl CcScorer for NativeScorer {
+    fn score(&mut self, occs: &[u8]) -> Vec<u32> {
+        occs.iter().map(|&o| cc(o)).collect()
+    }
+}
+
+/// MCC placement with a pluggable scoring backend.
+pub struct Mcc {
+    refs: Vec<GpuRef>,
+    scorer: Box<dyn CcScorer>,
+    /// Scratch buffers reused across decisions (hot-path allocation-free).
+    cand_refs: Vec<(GpuRef, crate::mig::Placement)>,
+    cand_occs: Vec<u8>,
+}
+
+impl Mcc {
+    pub fn new() -> Mcc {
+        Mcc::with_scorer(Box::new(NativeScorer))
+    }
+
+    pub fn with_scorer(scorer: Box<dyn CcScorer>) -> Mcc {
+        Mcc { refs: Vec::new(), scorer, cand_refs: Vec::new(), cand_occs: Vec::new() }
+    }
+}
+
+impl Default for Mcc {
+    fn default() -> Self {
+        Mcc::new()
+    }
+}
+
+impl Policy for Mcc {
+    fn name(&self) -> &str {
+        "MCC"
+    }
+
+    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+        if self.refs.is_empty() {
+            self.refs = dc.gpu_refs();
+        }
+        vms.iter()
+            .map(|vm| {
+                // Gather candidates: (gpu, default placement, resulting occ).
+                self.cand_refs.clear();
+                self.cand_occs.clear();
+                let mut skip_host: Option<u32> = None;
+                for &r in &self.refs {
+                    if skip_host == Some(r.host) {
+                        continue;
+                    }
+                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+                        skip_host = Some(r.host);
+                        continue;
+                    }
+                    if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
+                        self.cand_refs.push((r, pl));
+                        self.cand_occs.push(new_occ);
+                    }
+                }
+                if self.cand_refs.is_empty() {
+                    return false;
+                }
+                let scores = self.scorer.score(&self.cand_occs);
+                let mut best = 0usize;
+                for (i, &s) in scores.iter().enumerate() {
+                    if s > scores[best] {
+                        best = i;
+                    }
+                }
+                let (r, pl) = self.cand_refs[best];
+                dc.place(vm, r, pl);
+                true
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::{Placement, Profile};
+
+    fn vm(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
+    }
+
+    #[test]
+    fn spreads_across_empty_gpus() {
+        // Unlike BF, MCC places the second small VM on a *fresh* GPU:
+        // an empty GPU's post-allocation CC beats packing.
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let mut p = Mcc::new();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb)], 0);
+        assert_eq!(out, vec![true, true]);
+        assert_ne!(dc.locate(1).unwrap().gpu, dc.locate(2).unwrap().gpu);
+    }
+
+    #[test]
+    fn picks_cc_maximal_gpu() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        // GPU 0: blocks 0 and 3 occupied (the CC=9 example); GPU 1: 7 blocks
+        // occupied. A 1g.5gb lands where post-CC is higher (GPU 0).
+        let a = vm(90, Profile::P1g5gb);
+        let b = vm(91, Profile::P1g5gb);
+        dc.place(&a, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P1g5gb, start: 0 });
+        dc.place(&b, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P1g5gb, start: 3 });
+        let c = vm(92, Profile::P7g40gb);
+        // Can't place 7g on partially full GPU — occupy GPU 1 with 4g+2g+1g.
+        let d = vm(93, Profile::P4g20gb);
+        let e = vm(94, Profile::P2g10gb);
+        let f = vm(95, Profile::P1g5gb);
+        let _ = c;
+        dc.place(&d, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P4g20gb, start: 0 });
+        dc.place(&e, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P2g10gb, start: 4 });
+        dc.place(&f, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P1g5gb, start: 6 });
+        let mut p = Mcc::new();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
+        assert_eq!(out, vec![true]);
+        assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
+    }
+
+    #[test]
+    fn rejects_when_nothing_fits() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let mut p = Mcc::new();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P7g40gb)], 0);
+        assert_eq!(out, vec![true, false]);
+    }
+}

@@ -1,0 +1,208 @@
+//! Max Expected Configuration Capacity (MECC, Algorithm 7): like MCC but
+//! each profile's feasible-start count is weighted by the probability of
+//! that profile appearing, estimated from an `n`-hour trailing window of
+//! requested profiles (the paper picks n = 24 h, the lowest-error
+//! look-back among {1, 12, 24, 48, 96}).
+
+use super::Policy;
+use crate::cluster::vm::{Time, VmSpec};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::gpu::profile_capacity;
+use crate::mig::placement::mock_assign;
+use crate::mig::profiles::ALL_PROFILES;
+use std::collections::VecDeque;
+
+/// MECC placement.
+pub struct Mecc {
+    refs: Vec<GpuRef>,
+    /// Look-back window (hours).
+    window_hours: u64,
+    /// Requested profiles with timestamps, pruned to the window.
+    history: VecDeque<(Time, usize)>,
+    /// Current per-profile counts within the window.
+    counts: [u64; 6],
+}
+
+impl Mecc {
+    pub fn new(window_hours: u64) -> Mecc {
+        Mecc { refs: Vec::new(), window_hours, history: VecDeque::new(), counts: [0; 6] }
+    }
+
+    /// Profile probabilities from the window; uniform when empty.
+    pub fn probabilities(&self) -> [f64; 6] {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return [1.0 / 6.0; 6];
+        }
+        let mut p = [0.0; 6];
+        for i in 0..6 {
+            p[i] = self.counts[i] as f64 / total as f64;
+        }
+        p
+    }
+
+    /// GetECC (Algorithm 7): probability-weighted feasible-start count.
+    pub fn ecc(&self, occ: u8, probs: &[f64; 6]) -> f64 {
+        let cap = profile_capacity(occ);
+        let mut e = 0.0;
+        for i in 0..6 {
+            e += probs[i] * cap[i] as f64;
+        }
+        e
+    }
+
+    fn observe(&mut self, vms: &[VmSpec], now: Time) {
+        for vm in vms {
+            let idx = vm.profile.index();
+            self.history.push_back((now, idx));
+            self.counts[idx] += 1;
+        }
+        let horizon = now.saturating_sub(self.window_hours * crate::cluster::vm::HOUR);
+        while let Some(&(t, idx)) = self.history.front() {
+            if t >= horizon {
+                break;
+            }
+            self.history.pop_front();
+            self.counts[idx] -= 1;
+        }
+    }
+
+    /// Most probable profile in the current window (used by the paper's
+    /// look-back error analysis).
+    pub fn predicted_profile(&self) -> crate::mig::Profile {
+        let probs = self.probabilities();
+        let mut best = 0usize;
+        for i in 1..6 {
+            if probs[i] > probs[best] {
+                best = i;
+            }
+        }
+        ALL_PROFILES[best]
+    }
+}
+
+impl Policy for Mecc {
+    fn name(&self) -> &str {
+        "MECC"
+    }
+
+    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], now: Time) -> Vec<bool> {
+        if self.refs.is_empty() {
+            self.refs = dc.gpu_refs();
+        }
+        // The window reflects requests seen up to and including this batch.
+        self.observe(vms, now);
+        let probs = self.probabilities();
+        // The probabilities are fixed for the whole batch, so ECC is a
+        // pure function of the 8-bit occupancy — precompute all 256
+        // values once per batch (EXPERIMENTS.md §Perf iteration 4).
+        let mut ecc_table = [0.0f64; 256];
+        for (occ, slot) in ecc_table.iter_mut().enumerate() {
+            *slot = self.ecc(occ as u8, &probs);
+        }
+        vms.iter()
+            .map(|vm| {
+                let mut best: Option<(f64, GpuRef, crate::mig::Placement)> = None;
+                let mut skip_host: Option<u32> = None;
+                for &r in &self.refs {
+                    if skip_host == Some(r.host) {
+                        continue;
+                    }
+                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+                        skip_host = Some(r.host);
+                        continue;
+                    }
+                    if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
+                        let score = ecc_table[new_occ as usize];
+                        if best.map(|(b, _, _)| score > b).unwrap_or(true) {
+                            best = Some((score, r, pl));
+                        }
+                    }
+                }
+                match best {
+                    Some((_, r, pl)) => {
+                        dc.place(vm, r, pl);
+                        true
+                    }
+                    None => false,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::cluster::vm::HOUR;
+    use crate::mig::Profile;
+
+    fn vm(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
+    }
+
+    #[test]
+    fn window_prunes_old_history() {
+        let mut m = Mecc::new(24);
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 8)]);
+        m.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], HOUR);
+        m.place_batch(&mut dc, &[vm(2, Profile::P7g40gb)], 30 * HOUR);
+        // After 30h, the 1g.5gb observation (at 1h) left the 24h window.
+        assert_eq!(m.counts[Profile::P1g5gb.index()], 0);
+        assert_eq!(m.counts[Profile::P7g40gb.index()], 1);
+        assert_eq!(m.predicted_profile(), Profile::P7g40gb);
+    }
+
+    #[test]
+    fn uniform_prior_when_no_history() {
+        let m = Mecc::new(24);
+        let p = m.probabilities();
+        assert!(p.iter().all(|&x| (x - 1.0 / 6.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn ecc_weighted_by_probabilities() {
+        let m = Mecc::new(24);
+        // All mass on 7g.40gb: ECC of the empty GPU = cap(7g) = 1.
+        let mut probs = [0.0; 6];
+        probs[Profile::P7g40gb.index()] = 1.0;
+        assert!((m.ecc(0, &probs) - 1.0).abs() < 1e-12);
+        // All mass on 1g.5gb: ECC of the empty GPU = 7.
+        let mut probs = [0.0; 6];
+        probs[Profile::P1g5gb.index()] = 1.0;
+        assert!((m.ecc(0, &probs) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scoring_is_local_to_the_chosen_gpu() {
+        // GetECC (like GetCC) scores only the GPU that receives the GI, so
+        // even a 7g-heavy prior cannot make MECC "protect" other GPUs:
+        // the second small VM lands on the fresh GPU whose post-allocation
+        // expected capacity is higher. This locality is exactly why MECC
+        // tracks MCC so closely in §8.3.1.
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let mut m = Mecc::new(24);
+        // Seed a 7g-dominated window (placements may be rejected; the
+        // observation still counts).
+        let heavy: Vec<VmSpec> = (10..30).map(|i| vm(i, Profile::P7g40gb)).collect();
+        m.place_batch(&mut dc, &heavy, HOUR);
+        let placed: Vec<u64> = (10..30).filter(|i| dc.locate(*i).is_some()).collect();
+        for id in placed {
+            dc.remove(id);
+        }
+        assert!((m.probabilities()[Profile::P7g40gb.index()]) > 0.9);
+        let out =
+            m.place_batch(&mut dc, &[vm(1, Profile::P1g5gb), vm(2, Profile::P1g5gb)], 2 * HOUR);
+        assert_eq!(out, vec![true, true]);
+        assert_ne!(dc.locate(1).unwrap().gpu, dc.locate(2).unwrap().gpu);
+    }
+
+    #[test]
+    fn behaves_like_mcc_under_uniform_prior_for_acceptance() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let mut m = Mecc::new(24);
+        let out = m.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P1g5gb)], 0);
+        assert_eq!(out, vec![true, false]);
+    }
+}

@@ -1,0 +1,124 @@
+//! VM placement policies (§8.3).
+//!
+//! All policies operate at the paper's *upper* placement level: they pick
+//! the host/GPU for each VM. The *lower* level — which blocks a GI lands
+//! on within the chosen GPU — is always NVIDIA's fixed default policy
+//! ([`crate::mig::placement::assign`]), which cannot be overridden on real
+//! hardware.
+//!
+//! * [`first_fit`] — FF: first GPU in `globalIndex` order that fits.
+//! * [`best_fit`] — BF: GPU minimizing remaining free blocks.
+//! * [`mcc`] — Max Configuration Capacity (Algorithm 6).
+//! * [`mecc`] — Max *Expected* CC (Algorithm 7) with an n-hour
+//!   profile-frequency window.
+//! * [`grmu`] — the paper's contribution: dual-basket pooling,
+//!   defragmentation and consolidation (Algorithms 2–5).
+
+pub mod best_fit;
+pub mod first_fit;
+pub mod grmu;
+pub mod mcc;
+pub mod mecc;
+
+use crate::cluster::vm::{Time, VmId, VmSpec};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::placement::mock_assign;
+
+/// A VM placement policy driven by the simulation engine. `Send` so the
+/// coordinator can own a policy on its service thread.
+pub trait Policy: Send {
+    /// Short name used in reports ("FF", "GRMU", ...).
+    fn name(&self) -> &str;
+
+    /// Decide placement for a batch of VMs that arrived in the current
+    /// interval. Returns one accept/reject decision per VM, in order.
+    /// Accepted VMs must have been placed into `dc`.
+    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], now: Time) -> Vec<bool>;
+
+    /// Called after a VM departed (its resources are already released).
+    fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId) {}
+
+    /// Periodic maintenance hook (once per simulated hour).
+    fn on_tick(&mut self, _dc: &mut DataCenter, _now: Time) {}
+
+    /// Intra-GPU relocations performed so far (defragmentation).
+    fn intra_migrations(&self) -> u64 {
+        0
+    }
+
+    /// Inter-GPU migrations performed so far (consolidation).
+    fn inter_migrations(&self) -> u64 {
+        0
+    }
+}
+
+/// Try to place `vm` on the specific GPU: host CPU/RAM must fit (Eq. 6–7)
+/// and the GI must fit under the default block placement. Returns success.
+pub fn try_place_on_gpu(dc: &mut DataCenter, vm: &VmSpec, r: GpuRef) -> bool {
+    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+        return false;
+    }
+    match mock_assign(dc.gpu(r).occupancy(), vm.profile) {
+        Some((placement, _)) => {
+            dc.place(vm, r, placement);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Construct a policy by name (CLI / figure harness entry point).
+/// `heavy_frac` and `consolidation_hours` configure GRMU only.
+pub fn by_name(
+    name: &str,
+    heavy_frac: f64,
+    consolidation_hours: Option<u64>,
+) -> Option<Box<dyn Policy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "ff" | "first-fit" => Some(Box::new(first_fit::FirstFit::new())),
+        "bf" | "best-fit" => Some(Box::new(best_fit::BestFit::new())),
+        "mcc" => Some(Box::new(mcc::Mcc::new())),
+        "mecc" => Some(Box::new(mecc::Mecc::new(24))),
+        "grmu" => Some(Box::new(grmu::Grmu::new(grmu::GrmuConfig {
+            heavy_capacity_frac: heavy_frac,
+            consolidation_interval_hours: consolidation_hours,
+            ..grmu::GrmuConfig::default()
+        }))),
+        "grmu-db" => Some(Box::new(grmu::Grmu::new(grmu::GrmuConfig {
+            heavy_capacity_frac: heavy_frac,
+            consolidation_interval_hours: None,
+            defrag_enabled: false,
+        }))),
+        _ => None,
+    }
+}
+
+/// Names accepted by [`by_name`], for CLI help and sweeps.
+pub const POLICY_NAMES: [&str; 5] = ["ff", "bf", "mcc", "mecc", "grmu"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::Profile;
+
+    fn vm(id: VmId, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 4, ram_gb: 8, arrival: 0, departure: 1000, weight: 1.0 }
+    }
+
+    #[test]
+    fn try_place_respects_cpu() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 3, 256, 1)]);
+        assert!(!try_place_on_gpu(&mut dc, &vm(1, Profile::P1g5gb), GpuRef { host: 0, gpu: 0 }));
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        assert!(try_place_on_gpu(&mut dc, &vm(1, Profile::P1g5gb), GpuRef { host: 0, gpu: 0 }));
+    }
+
+    #[test]
+    fn by_name_constructs_all() {
+        for n in POLICY_NAMES {
+            assert!(by_name(n, 0.3, None).is_some(), "{n}");
+        }
+        assert!(by_name("nope", 0.3, None).is_none());
+    }
+}

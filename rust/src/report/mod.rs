@@ -1,0 +1,15 @@
+//! Experiment runners and renderers for every table and figure of §8.
+//!
+//! * [`experiments`] — parameterized runners: one simulation, the
+//!   heavy-basket capacity sweep (Figs. 6–8), the consolidation-interval
+//!   sweep (Fig. 9), and the five-policy comparison (Figs. 10–12,
+//!   Table 6).
+//! * [`tables`] — plain-text table/series rendering in the paper's shape.
+
+pub mod experiments;
+pub mod tables;
+
+pub use experiments::{
+    consolidation_sweep, grmu_ablation, heavy_capacity_sweep, policy_comparison, run_once,
+    ExperimentConfig,
+};

@@ -1,0 +1,264 @@
+//! Plain-text rendering of the paper's tables and figure series.
+
+use crate::mig::profiles::ALL_PROFILES;
+use crate::sim::SimResult;
+use crate::util::json::Json;
+
+/// Fixed-width row helper.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = w))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+/// Fig. 5: the workload's profile distribution.
+pub fn fig5(counts: &[usize; 6]) -> String {
+    let total: usize = counts.iter().sum();
+    let mut out = String::from("Figure 5 — Distribution of profiles in the workload\n");
+    out.push_str(&format!("{:<10} {:>8} {:>8}\n", "profile", "count", "share"));
+    for (i, p) in ALL_PROFILES.iter().enumerate() {
+        out.push_str(&format!(
+            "{:<10} {:>8} {:>7.1}%\n",
+            p.name(),
+            counts[i],
+            100.0 * counts[i] as f64 / total.max(1) as f64
+        ));
+    }
+    out.push_str(&format!("{:<10} {:>8}\n", "total", total));
+    out
+}
+
+/// Fig. 6: average active-hardware rate + overall acceptance per
+/// heavy-basket capacity.
+pub fn fig6(sweep: &[(f64, SimResult)]) -> String {
+    let mut out = String::from(
+        "Figure 6 — Impact of heavy basket capacity (DB only: defrag+consolidation off)\n",
+    );
+    out.push_str(&format!(
+        "{:>8} {:>22} {:>24}\n",
+        "capacity", "avg active hw rate", "overall acceptance rate"
+    ));
+    for (frac, r) in sweep {
+        out.push_str(&format!(
+            "{:>7.0}% {:>21.4} {:>23.4}\n",
+            100.0 * frac,
+            r.average_active_rate(),
+            r.overall_acceptance()
+        ));
+    }
+    out
+}
+
+/// Fig. 7: per-profile acceptance across heavy-basket capacities.
+pub fn fig7(sweep: &[(f64, SimResult)]) -> String {
+    let mut out =
+        String::from("Figure 7 — Acceptance of requested profiles across heavy basket capacities\n");
+    out.push_str(&format!("{:>8}", "capacity"));
+    for p in ALL_PROFILES {
+        out.push_str(&format!(" {:>9}", p.name()));
+    }
+    out.push('\n');
+    for (frac, r) in sweep {
+        out.push_str(&format!("{:>7.0}%", 100.0 * frac));
+        for rate in r.per_profile_acceptance() {
+            out.push_str(&format!(" {rate:>9.3}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 8: overall vs average acceptance rates across capacities.
+pub fn fig8(sweep: &[(f64, SimResult)]) -> String {
+    let mut out =
+        String::from("Figure 8 — Overall vs average acceptance across heavy basket capacities\n");
+    out.push_str(&format!("{:>8} {:>10} {:>10}\n", "capacity", "overall", "average"));
+    for (frac, r) in sweep {
+        out.push_str(&format!(
+            "{:>7.0}% {:>10.4} {:>10.4}\n",
+            100.0 * frac,
+            r.overall_acceptance(),
+            r.average_profile_acceptance()
+        ));
+    }
+    out
+}
+
+/// Fig. 9: the three objective values per consolidation setting.
+pub fn fig9(sweep: &[(String, SimResult)]) -> String {
+    let mut out = String::from("Figure 9 — Objective values per consolidation interval\n");
+    out.push_str(&format!(
+        "{:>9} {:>12} {:>20} {:>12}\n",
+        "interval", "acceptance", "avg active hw rate", "migrations"
+    ));
+    for (label, r) in sweep {
+        out.push_str(&format!(
+            "{:>9} {:>12.4} {:>20.4} {:>12}\n",
+            label,
+            r.overall_acceptance(),
+            r.average_active_rate(),
+            r.migrations()
+        ));
+    }
+    out
+}
+
+/// Fig. 10: final acceptance rate per policy (+ hourly series length).
+pub fn fig10(results: &[SimResult]) -> String {
+    let mut out = String::from("Figure 10 — Acceptance rates by policy\n");
+    out.push_str(&format!("{:>6} {:>12} {:>10} {:>10}\n", "policy", "acceptance", "accepted", "requested"));
+    for r in results {
+        out.push_str(&format!(
+            "{:>6} {:>12.4} {:>10} {:>10}\n",
+            r.policy,
+            r.overall_acceptance(),
+            r.accepted,
+            r.requested
+        ));
+    }
+    out
+}
+
+/// Fig. 11: per-profile acceptance per policy.
+pub fn fig11(results: &[SimResult]) -> String {
+    let mut out = String::from("Figure 11 — Acceptance rates per policy across GPU profiles\n");
+    out.push_str(&format!("{:>6}", "policy"));
+    for p in ALL_PROFILES {
+        out.push_str(&format!(" {:>9}", p.name()));
+    }
+    out.push('\n');
+    for r in results {
+        out.push_str(&format!("{:>6}", r.policy));
+        for rate in r.per_profile_acceptance() {
+            out.push_str(&format!(" {rate:>9.3}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 12: average active-hardware rate per policy (the series' level).
+pub fn fig12(results: &[SimResult]) -> String {
+    let mut out = String::from("Figure 12 — Active hardware rates per policy\n");
+    out.push_str(&format!("{:>6} {:>20} {:>14}\n", "policy", "avg active hw rate", "peak rate"));
+    for r in results {
+        let peak = r.samples.iter().map(|s| s.active_rate).fold(0.0, f64::max);
+        out.push_str(&format!(
+            "{:>6} {:>20.4} {:>14.4}\n",
+            r.policy,
+            r.average_active_rate(),
+            peak
+        ));
+    }
+    out
+}
+
+/// Table 6: cumulative active-resource AUC, normalized to the max.
+pub fn table6(results: &[SimResult]) -> String {
+    let max_auc = results.iter().map(|r| r.active_auc()).fold(0.0, f64::max);
+    let mut out = String::from("Table 6 — Cumulative active resource rate\n");
+    out.push_str(&format!(
+        "{:>6} {:>22} {:>18}\n",
+        "policy", "area under the curve", "normalized value"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:>6} {:>22.2} {:>18.4}\n",
+            r.policy,
+            r.active_auc(),
+            r.active_auc() / max_auc.max(1e-12)
+        ));
+    }
+    out
+}
+
+/// §8.3.3: migration summary.
+pub fn migrations_summary(results: &[SimResult]) -> String {
+    let mut out = String::from("§8.3.3 — Migrations\n");
+    out.push_str(&format!(
+        "{:>6} {:>8} {:>8} {:>10} {:>18}\n",
+        "policy", "intra", "inter", "total", "share of accepted"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:>6} {:>8} {:>8} {:>10} {:>17.2}%\n",
+            r.policy,
+            r.intra_migrations,
+            r.inter_migrations,
+            r.migrations(),
+            100.0 * r.migration_share()
+        ));
+    }
+    out
+}
+
+/// JSON export of a policy-comparison run (used by `--json`).
+pub fn comparison_json(results: &[SimResult]) -> Json {
+    Json::arr(results.iter().map(|r| r.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Sample;
+
+    fn fake(policy: &str, acc: u64) -> SimResult {
+        SimResult {
+            policy: policy.into(),
+            samples: vec![
+                Sample { hour: 0, active_rate: 0.5, acceptance_rate: 1.0, resident: 1 },
+                Sample { hour: 1, active_rate: 0.7, acceptance_rate: 0.9, resident: 2 },
+            ],
+            requested: 10,
+            accepted: acc,
+            per_profile: [(10, acc), (0, 0), (0, 0), (0, 0), (0, 0), (0, 0)],
+            intra_migrations: 1,
+            inter_migrations: 0,
+            wall_seconds: 0.0,
+        }
+    }
+
+    #[test]
+    fn renders_all_tables() {
+        let results = vec![fake("FF", 5), fake("GRMU", 8)];
+        for text in [
+            fig10(&results),
+            fig11(&results),
+            fig12(&results),
+            table6(&results),
+            migrations_summary(&results),
+        ] {
+            assert!(text.contains("FF"));
+            assert!(text.contains("GRMU"));
+            assert!(text.lines().count() >= 3);
+        }
+    }
+
+    #[test]
+    fn fig5_shares_sum_to_100() {
+        let text = fig5(&[10, 0, 30, 20, 0, 40]);
+        assert!(text.contains("40.0%"));
+        assert!(text.contains("total"));
+    }
+
+    #[test]
+    fn table6_normalizes_to_max() {
+        let results = vec![fake("FF", 5), fake("GRMU", 8)];
+        let text = table6(&results);
+        // Equal sample curves → both normalized to 1.0.
+        assert_eq!(text.matches("1.0000").count(), 2);
+    }
+
+    #[test]
+    fn sweep_tables_render() {
+        let sweep = vec![(0.2, fake("GRMU", 5)), (0.3, fake("GRMU", 6))];
+        assert!(fig6(&sweep).contains("20%"));
+        assert!(fig7(&sweep).contains("7g.40gb"));
+        assert!(fig8(&sweep).contains("30%"));
+        let csweep = vec![("DB".to_string(), fake("GRMU", 5))];
+        assert!(fig9(&csweep).contains("DB"));
+    }
+}

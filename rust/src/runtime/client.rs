@@ -1,0 +1,102 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are HLO *text*: jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU plugin).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: the `xla` crate wraps raw PJRT pointers without declaring Send,
+// but PJRT objects are not tied to their creating thread (the C API is
+// thread-compatible). We only ever *move* these values into the
+// coordinator thread — single ownership, no concurrent sharing — which is
+// exactly the Send contract.
+unsafe impl Send for Runtime {}
+unsafe impl Send for Executable {}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string (e.g. "cpu") for diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&computation)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled executable with tuple-output convention
+/// (`return_tuple=True` on the python side).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the elements of the output
+    /// tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs).context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let tuple = result.to_tuple().context("decomposing output tuple")?;
+        Ok(tuple)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/cc_scorer.hlo.txt");
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn loads_and_runs_artifact_when_present() {
+        // Gated on `make artifacts` having run (CI runs it first).
+        let Some(path) = artifact() else {
+            eprintln!("skipping: artifacts/cc_scorer.hlo.txt not built");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&path).unwrap();
+        // Batch of 1024 empty GPUs: CC = 18 everywhere.
+        let occ = xla::Literal::vec1(&vec![0f32; 1024 * 8]).reshape(&[1024, 8]).unwrap();
+        let out = exe.run(&[occ]).unwrap();
+        assert_eq!(out.len(), 2);
+        let cc = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(cc.len(), 1024);
+        assert!(cc.iter().all(|&v| v == 18.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! The PJRT/XLA runtime: load AOT-compiled artifacts and run them from
+//! the Rust hot path (python never runs at request time).
+//!
+//! * [`client`] — thin wrapper over the `xla` crate: CPU PJRT client,
+//!   HLO-text loading (the id-safe interchange format — see
+//!   `python/compile/aot.py`), compilation, tuple-output execution.
+//! * [`scorer`] — the batched CC scorer backed by
+//!   `artifacts/cc_scorer.hlo.txt`; implements
+//!   [`crate::policies::mcc::CcScorer`] so MCC/MECC can score through
+//!   XLA interchangeably with the native table (bit-identical results,
+//!   verified by integration tests).
+
+pub mod client;
+pub mod scorer;
+
+pub use client::{Executable, Runtime};
+pub use scorer::XlaScorer;

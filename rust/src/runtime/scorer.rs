@@ -1,0 +1,152 @@
+//! The XLA-backed batched CC scorer.
+//!
+//! Loads `artifacts/cc_scorer.hlo.txt` (the AOT-lowered L2 graph wrapping
+//! the L1 Pallas kernel) and exposes it as a
+//! [`crate::policies::mcc::CcScorer`]: occupancy bitmasks in, CC values
+//! out. The artifact's batch dimension is fixed at export time; inputs
+//! are padded to the batch and results truncated. Scores are bit-identical
+//! to the native table (`mig::gpu::cc`) — asserted by tests.
+
+use super::client::{Executable, Runtime};
+use crate::policies::mcc::CcScorer;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// The XLA scorer: compiled executable + fixed batch size.
+pub struct XlaScorer {
+    exe: Executable,
+    batch: usize,
+    /// Reusable host-side staging buffer.
+    staging: Vec<f32>,
+    /// Calls and configs scored (perf accounting).
+    pub calls: u64,
+    pub configs_scored: u64,
+}
+
+impl XlaScorer {
+    /// Load an artifact (and its `.meta.json` sidecar for the batch size).
+    pub fn load(hlo_path: &Path) -> Result<XlaScorer> {
+        let meta_path = hlo_path
+            .to_str()
+            .context("path not UTF-8")?
+            .replace(".hlo.txt", ".meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path} (run `make artifacts`)"))?;
+        let meta = Json::parse(&meta_text).map_err(|e| anyhow!("bad meta JSON: {e}"))?;
+        let batch = meta
+            .get("batch")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("meta missing 'batch'"))? as usize;
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo_text(hlo_path)?;
+        Ok(XlaScorer { exe, batch, staging: Vec::new(), calls: 0, configs_scored: 0 })
+    }
+
+    /// Batch size the artifact was exported with.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Score occupancy masks, returning `(cc, per-profile capacities)`.
+    pub fn score_full(&mut self, occs: &[u8]) -> Result<(Vec<u32>, Vec<[u8; 6]>)> {
+        let mut cc_out = Vec::with_capacity(occs.len());
+        let mut cap_out = Vec::with_capacity(occs.len());
+        for chunk in occs.chunks(self.batch) {
+            // Stage the chunk into a padded [batch, 8] 0/1 buffer.
+            self.staging.clear();
+            self.staging.resize(self.batch * 8, 0.0);
+            for (i, &occ) in chunk.iter().enumerate() {
+                for b in 0..8 {
+                    if occ & (1u8 << b) != 0 {
+                        self.staging[i * 8 + b] = 1.0;
+                    }
+                }
+            }
+            let input = xla::Literal::vec1(&self.staging)
+                .reshape(&[self.batch as i64, 8])
+                .context("reshaping input")?;
+            let out = self.exe.run(&[input])?;
+            let cc = out[0].to_vec::<f32>().context("cc output")?;
+            let cap = out[1].to_vec::<f32>().context("capacity output")?;
+            for i in 0..chunk.len() {
+                cc_out.push(cc[i] as u32);
+                let mut caps = [0u8; 6];
+                for p in 0..6 {
+                    caps[p] = cap[i * 6 + p] as u8;
+                }
+                cap_out.push(caps);
+            }
+            self.calls += 1;
+            self.configs_scored += chunk.len() as u64;
+        }
+        Ok((cc_out, cap_out))
+    }
+}
+
+impl CcScorer for XlaScorer {
+    fn score(&mut self, occs: &[u8]) -> Vec<u32> {
+        self.score_full(occs).expect("XLA scorer execution").0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::gpu::{cc, profile_capacity};
+
+    fn load_scorer() -> Option<XlaScorer> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/cc_scorer.hlo.txt");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(XlaScorer::load(&p).unwrap())
+    }
+
+    #[test]
+    fn bit_identical_to_native_table_all_masks() {
+        let Some(mut scorer) = load_scorer() else { return };
+        let masks: Vec<u8> = (0..=255).collect();
+        let (ccs, caps) = scorer.score_full(&masks).unwrap();
+        for (i, &m) in masks.iter().enumerate() {
+            assert_eq!(ccs[i], cc(m), "cc mismatch at {m:08b}");
+            assert_eq!(caps[i], profile_capacity(m), "capacity mismatch at {m:08b}");
+        }
+    }
+
+    #[test]
+    fn padding_and_chunking() {
+        let Some(mut scorer) = load_scorer() else { return };
+        // More masks than one batch → two executions; odd remainder padded.
+        let n = scorer.batch() + 37;
+        let masks: Vec<u8> = (0..n).map(|i| (i % 256) as u8).collect();
+        let (ccs, _) = scorer.score_full(&masks).unwrap();
+        assert_eq!(ccs.len(), n);
+        assert_eq!(scorer.calls, 2);
+        for (i, &m) in masks.iter().enumerate() {
+            assert_eq!(ccs[i], cc(m));
+        }
+    }
+
+    #[test]
+    fn usable_as_mcc_backend() {
+        let Some(scorer) = load_scorer() else { return };
+        use crate::cluster::{DataCenter, Host, VmSpec};
+        use crate::mig::Profile;
+        use crate::policies::{mcc::Mcc, Policy};
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let mut policy = Mcc::with_scorer(Box::new(scorer));
+        let vm = VmSpec {
+            id: 1,
+            profile: Profile::P3g20gb,
+            cpus: 2,
+            ram_gb: 4,
+            arrival: 0,
+            departure: 100,
+            weight: 1.0,
+        };
+        let out = policy.place_batch(&mut dc, &[vm], 0);
+        assert_eq!(out, vec![true]);
+    }
+}

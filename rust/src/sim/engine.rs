@@ -1,0 +1,234 @@
+//! The discrete-event simulation loop (§6's online stochastic process).
+//!
+//! Time advances hour by hour (the paper's discrete intervals). Within an
+//! hour the engine: (1) releases VMs whose departure time has passed,
+//! (2) presents the hour's arrivals to the policy as one batch, (3) fires
+//! the policy's maintenance tick (GRMU's consolidation interval is a
+//! multiple of this), and (4) samples metrics. Departures inside an hour
+//! are processed *before* that hour's arrivals — blocks freed during the
+//! interval are available to the interval's requests, as in an online
+//! system with immediate reclamation.
+
+use super::metrics::{Sample, SimResult};
+use crate::cluster::vm::{Time, VmSpec, HOUR};
+use crate::cluster::DataCenter;
+use crate::policies::Policy;
+use std::collections::BinaryHeap;
+
+/// Engine knobs.
+#[derive(Debug, Clone)]
+pub struct SimulationOptions {
+    /// Metric sampling period (seconds). Default: hourly.
+    pub sample_period: Time,
+    /// Run integrity checks every N hours (0 = disabled). Expensive;
+    /// enabled in tests.
+    pub integrity_every: u64,
+    /// Stop this many hours after the last arrival even if VMs remain
+    /// (0 = run to last departure).
+    pub drain_cap_hours: u64,
+}
+
+impl Default for SimulationOptions {
+    fn default() -> Self {
+        SimulationOptions { sample_period: HOUR, integrity_every: 0, drain_cap_hours: 0 }
+    }
+}
+
+/// A configured simulation run.
+pub struct Simulation<'a> {
+    pub dc: DataCenter,
+    pub policy: Box<dyn Policy>,
+    pub vms: &'a [VmSpec],
+    pub options: SimulationOptions,
+}
+
+impl<'a> Simulation<'a> {
+    pub fn new(dc: DataCenter, policy: Box<dyn Policy>, vms: &'a [VmSpec]) -> Simulation<'a> {
+        Simulation { dc, policy, vms, options: SimulationOptions::default() }
+    }
+
+    /// Run to completion and collect metrics.
+    pub fn run(mut self) -> SimResult {
+        let t_start = std::time::Instant::now();
+        let mut samples = Vec::new();
+        let mut requested = 0u64;
+        let mut accepted = 0u64;
+        let mut per_profile = [(0u64, 0u64); 6];
+
+        // Departure min-heap of accepted VMs: (time, vm id).
+        let mut departures: BinaryHeap<std::cmp::Reverse<(Time, u64)>> = BinaryHeap::new();
+
+        let last_arrival = self.vms.last().map(|v| v.arrival).unwrap_or(0);
+        let mut next_vm = 0usize;
+        let mut hour = 0u64;
+
+        loop {
+            let t_end = (hour + 1) * HOUR;
+
+            // (1) departures due in (hour*HOUR, t_end] — processed first.
+            while let Some(&std::cmp::Reverse((t, vm))) = departures.peek() {
+                if t > t_end {
+                    break;
+                }
+                departures.pop();
+                self.dc.remove(vm);
+                self.policy.on_departure(&mut self.dc, vm);
+            }
+
+            // (2) arrivals due in this hour, as one batch.
+            let batch_start = next_vm;
+            while next_vm < self.vms.len() && self.vms[next_vm].arrival <= t_end {
+                next_vm += 1;
+            }
+            let batch = &self.vms[batch_start..next_vm];
+            if !batch.is_empty() {
+                let decisions = self.policy.place_batch(&mut self.dc, batch, t_end);
+                debug_assert_eq!(decisions.len(), batch.len());
+                for (vm, ok) in batch.iter().zip(&decisions) {
+                    requested += 1;
+                    per_profile[vm.profile.index()].0 += 1;
+                    if *ok {
+                        accepted += 1;
+                        per_profile[vm.profile.index()].1 += 1;
+                        departures.push(std::cmp::Reverse((vm.departure.max(t_end + 1), vm.id)));
+                    }
+                }
+            }
+
+            // (3) maintenance tick.
+            self.policy.on_tick(&mut self.dc, t_end);
+
+            // (4) metric sample.
+            samples.push(Sample {
+                hour,
+                active_rate: self.dc.active_hardware_rate(),
+                acceptance_rate: if requested == 0 {
+                    1.0
+                } else {
+                    accepted as f64 / requested as f64
+                },
+                resident: self.dc.resident_count(),
+            });
+
+            if self.options.integrity_every > 0 && hour % self.options.integrity_every == 0 {
+                self.dc.check_integrity().expect("datacenter integrity");
+            }
+
+            hour += 1;
+            let drained = next_vm >= self.vms.len() && departures.is_empty();
+            let capped = self.options.drain_cap_hours > 0
+                && hour * HOUR > last_arrival + self.options.drain_cap_hours * HOUR;
+            if drained || capped {
+                break;
+            }
+        }
+
+        SimResult {
+            policy: self.policy.name().to_string(),
+            samples,
+            requested,
+            accepted,
+            per_profile,
+            intra_migrations: self.policy.intra_migrations(),
+            inter_migrations: self.policy.inter_migrations(),
+            wall_seconds: t_start.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Host, VmId};
+    use crate::mig::Profile;
+    use crate::policies::first_fit::FirstFit;
+
+    fn vm(id: VmId, profile: Profile, arrival_h: u64, dur_h: u64) -> VmSpec {
+        VmSpec {
+            id,
+            profile,
+            cpus: 2,
+            ram_gb: 8,
+            arrival: arrival_h * HOUR + 60,
+            departure: (arrival_h + dur_h) * HOUR + 60,
+            weight: 1.0,
+        }
+    }
+
+    fn one_gpu_dc() -> DataCenter {
+        DataCenter::new(vec![Host::new(0, 64, 256, 1)])
+    }
+
+    #[test]
+    fn accepts_when_capacity_available() {
+        let vms = vec![vm(1, Profile::P3g20gb, 0, 5), vm(2, Profile::P3g20gb, 0, 5)];
+        let mut sim = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms);
+        sim.options.integrity_every = 1;
+        let res = sim.run();
+        assert_eq!(res.accepted, 2);
+        assert_eq!(res.requested, 2);
+        assert!((res.overall_acceptance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_when_full_then_frees_on_departure() {
+        // One 7g.40gb occupies the GPU for 2 h; another arrives during,
+        // gets rejected; a third arrives after departure and is accepted.
+        let vms = vec![
+            vm(1, Profile::P7g40gb, 0, 2),
+            vm(2, Profile::P7g40gb, 1, 2),
+            vm(3, Profile::P7g40gb, 5, 2),
+        ];
+        let mut sim = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms);
+        sim.options.integrity_every = 1;
+        let res = sim.run();
+        assert_eq!(res.accepted, 2);
+        assert_eq!(res.requested, 3);
+        let (req, acc) = res.per_profile[Profile::P7g40gb.index()];
+        assert_eq!((req, acc), (3, 2));
+    }
+
+    #[test]
+    fn departures_before_arrivals_within_hour() {
+        // VM 1 departs at hour 3; VM 2 arrives in the same hour — the
+        // freed GPU must be reusable immediately.
+        let vms = vec![vm(1, Profile::P7g40gb, 0, 3), vm(2, Profile::P7g40gb, 3, 1)];
+        let res = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms).run();
+        assert_eq!(res.accepted, 2);
+    }
+
+    #[test]
+    fn samples_track_active_hardware() {
+        let vms = vec![vm(1, Profile::P1g5gb, 0, 3)];
+        let res = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms).run();
+        // Host + 1 GPU both active while VM resident.
+        assert!(res.samples[0].active_rate > 0.99);
+        // After departure the cluster drains to zero.
+        assert!(res.samples.last().unwrap().active_rate < 0.01);
+    }
+
+    #[test]
+    fn cpu_exhaustion_rejects() {
+        // Host with only 3 CPUs: second VM (2 CPUs each) cannot fit.
+        let dc = DataCenter::new(vec![Host::new(0, 3, 256, 1)]);
+        let vms = vec![vm(1, Profile::P1g5gb, 0, 5), vm(2, Profile::P1g5gb, 0, 5)];
+        let res = Simulation::new(dc, Box::new(FirstFit::new()), &vms).run();
+        assert_eq!(res.accepted, 1);
+    }
+
+    #[test]
+    fn empty_workload() {
+        let res = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &[]).run();
+        assert_eq!(res.requested, 0);
+        assert_eq!(res.samples.len(), 1);
+    }
+
+    #[test]
+    fn drain_cap_stops_long_tails() {
+        let vms = vec![vm(1, Profile::P1g5gb, 0, 10_000)];
+        let mut sim = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms);
+        sim.options.drain_cap_hours = 5;
+        let res = sim.run();
+        assert!(res.samples.len() < 20);
+    }
+}

@@ -1,0 +1,211 @@
+//! Metric collection for the §8 evaluation.
+
+use crate::mig::profiles::ALL_PROFILES;
+use crate::util::json::Json;
+use crate::util::stats::auc;
+
+/// One hourly sample (the points of Figs. 10 and 12).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Simulation hour.
+    pub hour: u64,
+    /// Strict active-hardware rate (active PMs+GPUs / total).
+    pub active_rate: f64,
+    /// Cumulative acceptance rate up to this hour.
+    pub acceptance_rate: f64,
+    /// VMs resident at sampling time.
+    pub resident: usize,
+}
+
+/// Full result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub policy: String,
+    pub samples: Vec<Sample>,
+    /// Requests seen / accepted, total.
+    pub requested: u64,
+    pub accepted: u64,
+    /// Per-profile `(requested, accepted)` in `ALL_PROFILES` order.
+    pub per_profile: [(u64, u64); 6],
+    /// Intra-GPU relocations performed (defragmentation).
+    pub intra_migrations: u64,
+    /// Inter-GPU migrations performed (consolidation).
+    pub inter_migrations: u64,
+    /// Wall-time of the run (for perf reporting), seconds.
+    pub wall_seconds: f64,
+}
+
+impl SimResult {
+    /// Overall acceptance rate at the end of the simulation (Fig. 10's
+    /// terminal value).
+    pub fn overall_acceptance(&self) -> f64 {
+        if self.requested == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.requested as f64
+        }
+    }
+
+    /// Mean of hourly active-hardware rates (Fig. 6's left axis).
+    pub fn average_active_rate(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.active_rate).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Table 6: area under the active-hardware-rate curve over simulation
+    /// hours (trapezoidal). The paper's absolute values depend on its
+    /// sampling units; the *normalized* column is what we compare.
+    pub fn active_auc(&self) -> f64 {
+        let pts: Vec<(f64, f64)> =
+            self.samples.iter().map(|s| (s.hour as f64, 100.0 * s.active_rate)).collect();
+        auc(&pts)
+    }
+
+    /// Per-profile acceptance rates (Figs. 7 and 11).
+    pub fn per_profile_acceptance(&self) -> [f64; 6] {
+        let mut out = [0.0; 6];
+        for (i, (req, acc)) in self.per_profile.iter().enumerate() {
+            out[i] = if *req == 0 { 0.0 } else { *acc as f64 / *req as f64 };
+        }
+        out
+    }
+
+    /// Mean of per-profile acceptance rates (Fig. 8's "average" line).
+    pub fn average_profile_acceptance(&self) -> f64 {
+        let rates = self.per_profile_acceptance();
+        let used: Vec<f64> = self
+            .per_profile
+            .iter()
+            .zip(rates)
+            .filter(|((req, _), _)| *req > 0)
+            .map(|(_, r)| r)
+            .collect();
+        if used.is_empty() {
+            0.0
+        } else {
+            used.iter().sum::<f64>() / used.len() as f64
+        }
+    }
+
+    /// Total migrations (§8.3.3).
+    pub fn migrations(&self) -> u64 {
+        self.intra_migrations + self.inter_migrations
+    }
+
+    /// Migrated share of accepted VMs (§8.3.3's "1%"). Upper bound: a VM
+    /// may migrate more than once; the paper counts migration events.
+    pub fn migration_share(&self) -> f64 {
+        if self.accepted == 0 {
+            0.0
+        } else {
+            self.migrations() as f64 / self.accepted as f64
+        }
+    }
+
+    /// JSON export for the figure harness.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", self.policy.as_str().into()),
+            ("requested", self.requested.into()),
+            ("accepted", self.accepted.into()),
+            ("overall_acceptance", self.overall_acceptance().into()),
+            ("average_active_rate", self.average_active_rate().into()),
+            ("active_auc", self.active_auc().into()),
+            ("intra_migrations", self.intra_migrations.into()),
+            ("inter_migrations", self.inter_migrations.into()),
+            (
+                "per_profile",
+                Json::Obj(
+                    ALL_PROFILES
+                        .iter()
+                        .enumerate()
+                        .map(|(i, p)| {
+                            (
+                                p.name().to_string(),
+                                Json::obj(vec![
+                                    ("requested", self.per_profile[i].0.into()),
+                                    ("accepted", self.per_profile[i].1.into()),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "samples",
+                Json::arr(
+                    self.samples
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("hour", s.hour.into()),
+                                ("active_rate", s.active_rate.into()),
+                                ("acceptance_rate", s.acceptance_rate.into()),
+                                ("resident", s.resident.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result() -> SimResult {
+        SimResult {
+            policy: "test".into(),
+            samples: vec![
+                Sample { hour: 0, active_rate: 0.0, acceptance_rate: 1.0, resident: 0 },
+                Sample { hour: 1, active_rate: 0.5, acceptance_rate: 0.8, resident: 5 },
+                Sample { hour: 2, active_rate: 1.0, acceptance_rate: 0.6, resident: 9 },
+            ],
+            requested: 10,
+            accepted: 6,
+            per_profile: [(2, 1), (0, 0), (4, 3), (2, 1), (1, 1), (1, 0)],
+            intra_migrations: 2,
+            inter_migrations: 1,
+            wall_seconds: 0.1,
+        }
+    }
+
+    #[test]
+    fn rates() {
+        let r = result();
+        assert!((r.overall_acceptance() - 0.6).abs() < 1e-12);
+        assert!((r.average_active_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(r.migrations(), 3);
+        assert!((r.migration_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_profile_rates_skip_unrequested() {
+        let r = result();
+        let rates = r.per_profile_acceptance();
+        assert_eq!(rates[1], 0.0);
+        assert!((rates[2] - 0.75).abs() < 1e-12);
+        // Average over the 5 requested profiles only.
+        let expected = (0.5 + 0.75 + 0.5 + 1.0 + 0.0) / 5.0;
+        assert!((r.average_profile_acceptance() - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_trapezoid() {
+        let r = result();
+        // (0+50)/2 + (50+100)/2 = 100.
+        assert!((r.active_auc() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = result().to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("accepted").unwrap().as_f64(), Some(6.0));
+        assert_eq!(parsed.get("samples").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

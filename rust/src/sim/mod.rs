@@ -1,0 +1,17 @@
+//! Discrete-event simulation (replaces the paper's "Cloudy" simulator,
+//! ref. [30]).
+//!
+//! The paper models placement as an online stochastic process on a
+//! discrete clock (§6): each interval evaluates the requests that arrived
+//! during it and makes placement decisions. [`engine`] implements that
+//! loop — hourly arrival batches, exact-time departures, periodic
+//! maintenance ticks for policies that migrate, and hourly metric
+//! sampling. [`metrics`] accumulates the quantities behind every figure
+//! of §8: acceptance rates (overall, hourly, per profile), the strict
+//! active-hardware rate, migrations and Table 6's area under the curve.
+
+pub mod engine;
+pub mod metrics;
+
+pub use engine::{Simulation, SimulationOptions};
+pub use metrics::{Sample, SimResult};

@@ -1,0 +1,115 @@
+//! CSV trace ingestion — runs the *same* cleaning pipeline as the
+//! generator, so a real Alibaba-derived CSV can replace synthesis without
+//! touching the rest of the stack.
+//!
+//! Expected header (column order free, extra columns ignored):
+//! `arrival,duration,num_gpus,gpu_frac,cpus,ram_gb` — times in seconds.
+
+use super::mapping::{map_pods_to_profiles, MappingReport, PodRecord};
+use crate::cluster::vm::VmSpec;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Parse a trace CSV into raw pod records.
+pub fn parse_pods_csv(text: &str) -> Result<Vec<PodRecord>> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| anyhow!("empty CSV"))?;
+    let cols: Vec<&str> = header.split(',').map(|c| c.trim()).collect();
+    let col = |name: &str| -> Result<usize> {
+        cols.iter().position(|&c| c == name).ok_or_else(|| anyhow!("missing column '{name}'"))
+    };
+    let (i_arr, i_dur, i_num, i_frac, i_cpu, i_ram) = (
+        col("arrival")?,
+        col("duration")?,
+        col("num_gpus")?,
+        col("gpu_frac")?,
+        col("cpus")?,
+        col("ram_gb")?,
+    );
+    let mut pods = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
+        let get = |i: usize| -> Result<&str> {
+            fields.get(i).copied().ok_or_else(|| anyhow!("line {}: too few fields", lineno + 2))
+        };
+        let parse_f = |s: &str| -> Result<f64> {
+            s.parse().with_context(|| format!("line {}: bad number '{s}'", lineno + 2))
+        };
+        pods.push(PodRecord {
+            arrival: parse_f(get(i_arr)?)? as u64,
+            duration: parse_f(get(i_dur)?)? as u64,
+            num_gpus: parse_f(get(i_num)?)?,
+            gpu_frac: parse_f(get(i_frac)?)?,
+            cpus: parse_f(get(i_cpu)?)? as u32,
+            ram_gb: parse_f(get(i_ram)?)? as u32,
+        });
+    }
+    Ok(pods)
+}
+
+/// Load a CSV file and run the §8.1 pipeline.
+pub fn load_trace(path: &Path) -> Result<(Vec<VmSpec>, MappingReport)> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let pods = parse_pods_csv(&text)?;
+    Ok(map_pods_to_profiles(&pods))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::Profile;
+
+    const SAMPLE: &str = "\
+arrival,duration,num_gpus,gpu_frac,cpus,ram_gb
+0,3600,1,1.0,8,32
+60,7200,1,0.5,4,16
+120,1800,1,0.02,2,8
+180,3600,2,1.0,16,64
+";
+
+    #[test]
+    fn parses_and_maps() {
+        let pods = parse_pods_csv(SAMPLE).unwrap();
+        assert_eq!(pods.len(), 4);
+        let (vms, report) = map_pods_to_profiles(&pods);
+        // The 2-GPU pod is dropped.
+        assert_eq!(report.multi_gpu_removed, 1);
+        assert_eq!(vms.len(), 3);
+        assert_eq!(vms[0].profile, Profile::P7g40gb);
+        // 0.02 ≈ 1/56 → 1g.5gb.
+        assert_eq!(vms[2].profile, Profile::P1g5gb);
+    }
+
+    #[test]
+    fn header_order_free() {
+        let reordered = "\
+cpus,ram_gb,arrival,duration,gpu_frac,num_gpus
+8,32,0,3600,1.0,1
+";
+        let pods = parse_pods_csv(reordered).unwrap();
+        assert_eq!(pods[0].cpus, 8);
+        assert_eq!(pods[0].gpu_frac, 1.0);
+    }
+
+    #[test]
+    fn missing_column_rejected() {
+        assert!(parse_pods_csv("arrival,duration\n1,2\n").is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let bad = "arrival,duration,num_gpus,gpu_frac,cpus,ram_gb\nx,1,1,1,1,1\n";
+        assert!(parse_pods_csv(bad).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir().join("grmu_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pods.csv");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let (vms, _) = load_trace(&path).unwrap();
+        assert_eq!(vms.len(), 3);
+    }
+}

@@ -1,0 +1,201 @@
+//! Pod→MIG-profile mapping (Eq. 27–30) and the trace-cleaning pipeline.
+
+use crate::cluster::vm::{Time, VmSpec};
+use crate::mig::profiles::{Profile, ALL_PROFILES};
+use crate::util::stats::iqr_bounds;
+
+/// A raw pod record before mapping (one row of the cleaned trace).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PodRecord {
+    /// Arrival time in seconds.
+    pub arrival: Time,
+    /// Duration in seconds.
+    pub duration: Time,
+    /// Number of GPUs requested (may be fractional per GPU, e.g. 2 × 0.5).
+    pub num_gpus: f64,
+    /// Fraction of each GPU requested, in `(0, 1]`.
+    pub gpu_frac: f64,
+    /// CPU cores requested.
+    pub cpus: u32,
+    /// RAM in GB requested.
+    pub ram_gb: u32,
+}
+
+impl PodRecord {
+    /// Total GPU requirement `u`: GPUs × fraction each (§8.1).
+    pub fn total_gpu_requirement(&self) -> f64 {
+        self.num_gpus * self.gpu_frac
+    }
+}
+
+/// Eq. 28–29: normalized combined compute×memory value per profile.
+/// `max(U_k)` is 7g.40gb's value, so Û_(7g.40gb) = 1.
+pub fn normalized_profile_values() -> [f64; 6] {
+    let max = Profile::P7g40gb.combined_value();
+    let mut out = [0.0; 6];
+    for p in ALL_PROFILES {
+        out[p.index()] = p.combined_value() / max;
+    }
+    out
+}
+
+/// Eq. 30: the profile whose normalized value is closest to `u_hat`.
+/// Ties resolve to the smaller profile (first in table order).
+pub fn nearest_profile(u_hat: f64) -> Profile {
+    let values = normalized_profile_values();
+    let mut best = Profile::P1g5gb;
+    let mut best_d = f64::INFINITY;
+    for p in ALL_PROFILES {
+        let d = (values[p.index()] - u_hat).abs();
+        if d < best_d {
+            best_d = d;
+            best = p;
+        }
+    }
+    best
+}
+
+/// Outcome of the full §8.1 cleaning pipeline.
+#[derive(Debug, Clone)]
+pub struct MappingReport {
+    /// Pods dropped by the IQR arrival filter.
+    pub outliers_removed: usize,
+    /// Pods dropped for requiring more than one full GPU.
+    pub multi_gpu_removed: usize,
+    /// Final per-profile counts (Fig. 5's distribution).
+    pub profile_counts: [usize; 6],
+}
+
+/// Run the paper's pipeline over raw pods: IQR-filter arrivals, drop
+/// pods needing more than one full GPU (<1% in the paper), normalize the
+/// requirement by the post-filter maximum (Eq. 27) and map each pod to the
+/// nearest profile (Eq. 30). Returns VM specs sorted by arrival.
+pub fn map_pods_to_profiles(pods: &[PodRecord]) -> (Vec<VmSpec>, MappingReport) {
+    // IQR filter on arrival times (§8.1).
+    let arrivals: Vec<f64> = pods.iter().map(|p| p.arrival as f64).collect();
+    let (lo, hi) = if arrivals.is_empty() { (0.0, 0.0) } else { iqr_bounds(&arrivals) };
+    let kept: Vec<&PodRecord> =
+        pods.iter().filter(|p| (p.arrival as f64) >= lo && (p.arrival as f64) <= hi).collect();
+    let outliers_removed = pods.len() - kept.len();
+
+    // Drop pods requiring more than one full GPU.
+    let single: Vec<&PodRecord> =
+        kept.iter().copied().filter(|p| p.total_gpu_requirement() <= 1.0).collect();
+    let multi_gpu_removed = kept.len() - single.len();
+
+    // Eq. 27: normalize by the maximum requirement across retained pods.
+    let max_u = single.iter().map(|p| p.total_gpu_requirement()).fold(0.0f64, f64::max);
+
+    let mut vms: Vec<VmSpec> = Vec::with_capacity(single.len());
+    let mut profile_counts = [0usize; 6];
+    for pod in &single {
+        let u_hat = if max_u > 0.0 { pod.total_gpu_requirement() / max_u } else { 0.0 };
+        let profile = nearest_profile(u_hat);
+        profile_counts[profile.index()] += 1;
+        vms.push(VmSpec {
+            id: 0, // assigned after sorting
+            profile,
+            cpus: pod.cpus,
+            ram_gb: pod.ram_gb,
+            arrival: pod.arrival,
+            departure: pod.arrival + pod.duration.max(1),
+            weight: 1.0,
+        });
+    }
+    vms.sort_by_key(|v| (v.arrival, v.departure));
+    for (i, vm) in vms.iter_mut().enumerate() {
+        vm.id = i as u64 + 1;
+    }
+    (vms, MappingReport { outliers_removed, multi_gpu_removed, profile_counts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod(arrival: Time, u: f64) -> PodRecord {
+        PodRecord { arrival, duration: 3_600, num_gpus: 1.0, gpu_frac: u, cpus: 4, ram_gb: 16 }
+    }
+
+    #[test]
+    fn normalized_values_increasing_to_one() {
+        let v = normalized_profile_values();
+        for w in v.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!((v[5] - 1.0).abs() < 1e-12);
+        // Spot values: 1g.5gb = (1/7)(1/8) = 1/56 of 1.0.
+        assert!((v[0] - 1.0 / 56.0).abs() < 1e-12);
+        // 2g.10gb = (2/7)(2/8) = 4/56.
+        assert!((v[2] - 4.0 / 56.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_profile_extremes() {
+        assert_eq!(nearest_profile(0.0), Profile::P1g5gb);
+        assert_eq!(nearest_profile(1.0), Profile::P7g40gb);
+        assert_eq!(nearest_profile(0.99), Profile::P7g40gb);
+    }
+
+    #[test]
+    fn nearest_profile_midpoints() {
+        let v = normalized_profile_values();
+        // Just above the 4g.20gb value → still 4g.20gb.
+        assert_eq!(nearest_profile(v[4] + 1e-6), Profile::P4g20gb);
+        // Midpoint between 4g.20gb and 7g.40gb, slightly above → 7g.40gb.
+        let mid = (v[4] + v[5]) / 2.0;
+        assert_eq!(nearest_profile(mid + 1e-6), Profile::P7g40gb);
+        assert_eq!(nearest_profile(mid - 1e-6), Profile::P4g20gb);
+    }
+
+    #[test]
+    fn pipeline_filters_outliers_and_multigpu() {
+        let mut pods: Vec<PodRecord> = (0..100).map(|i| pod(i * 60, 1.0)).collect();
+        pods.push(pod(10_000_000, 1.0)); // arrival outlier
+        pods.push(PodRecord {
+            arrival: 300,
+            duration: 60,
+            num_gpus: 4.0,
+            gpu_frac: 1.0,
+            cpus: 4,
+            ram_gb: 16,
+        }); // multi-GPU
+        let (vms, report) = map_pods_to_profiles(&pods);
+        assert_eq!(report.outliers_removed, 1);
+        assert_eq!(report.multi_gpu_removed, 1);
+        assert_eq!(vms.len(), 100);
+    }
+
+    #[test]
+    fn ids_sequential_by_arrival() {
+        let pods = vec![pod(500, 0.5), pod(100, 0.2), pod(300, 1.0)];
+        let (vms, _) = map_pods_to_profiles(&pods);
+        assert_eq!(vms.len(), 3);
+        assert!(vms.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert_eq!(vms.iter().map(|v| v.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn departure_strictly_after_arrival() {
+        let pods = vec![PodRecord {
+            arrival: 100,
+            duration: 0,
+            num_gpus: 1.0,
+            gpu_frac: 0.3,
+            cpus: 1,
+            ram_gb: 1,
+        }];
+        let (vms, _) = map_pods_to_profiles(&pods);
+        assert!(vms[0].departure > vms[0].arrival);
+    }
+
+    #[test]
+    fn fractional_pods_map_to_small_profiles() {
+        // u = 0.02 ≈ 1/56 → 1g.5gb when max u is 1.0.
+        let pods = vec![pod(0, 1.0), pod(1, 1.0 / 56.0)];
+        let (vms, report) = map_pods_to_profiles(&pods);
+        assert_eq!(vms[1].profile, Profile::P1g5gb);
+        assert_eq!(report.profile_counts[Profile::P7g40gb.index()], 1);
+        assert_eq!(report.profile_counts[Profile::P1g5gb.index()], 1);
+    }
+}

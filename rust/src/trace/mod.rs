@@ -1,0 +1,22 @@
+//! Workload construction (§8.1).
+//!
+//! The paper builds its workload from the Alibaba GPU cluster trace 2023:
+//! nodes become hosts, pods become VMs, arrival-time outliers are removed
+//! with the IQR rule, pods needing more than one full GPU are dropped, and
+//! each pod's fractional GPU requirement is mapped to the nearest MIG
+//! profile by normalized compute×memory value (Eq. 27–30).
+//!
+//! The proprietary trace is not available in this environment, so
+//! [`generator`] synthesizes a statistically equivalent workload (same
+//! host/VM counts, 7g.40gb-heavy profile mix, heavy-tailed durations,
+//! diurnal arrivals, injected arrival outliers for the IQR stage to
+//! remove). [`loader`] ingests a real trace CSV with the same pipeline
+//! when one is available, so the substitution is contained to record
+//! *synthesis*, not processing.
+
+pub mod generator;
+pub mod loader;
+pub mod mapping;
+
+pub use generator::{TraceConfig, Workload};
+pub use mapping::{map_pods_to_profiles, PodRecord};

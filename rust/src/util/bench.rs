@@ -1,0 +1,187 @@
+//! A criterion-style micro-benchmark harness (criterion is unavailable in
+//! the offline build environment).
+//!
+//! Auto-calibrates the iteration count to a target measurement time, runs
+//! multiple samples and reports mean / median / p99 plus throughput. All
+//! `benches/*.rs` binaries (`harness = false`) are built on this.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    /// Nanoseconds per iteration.
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub std_dev_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    /// Iterations per second implied by the mean.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    /// Human-readable single-line summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (median {:>10}, p99 {:>10}, {:.2e} it/s)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p99_ns),
+            self.throughput(),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a shared time budget per benchmark.
+pub struct Bench {
+    /// Target wall time per sample.
+    sample_time: Duration,
+    /// Number of samples.
+    samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Honour the same quick-run env knob everywhere.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            sample_time: if quick { Duration::from_millis(20) } else { Duration::from_millis(120) },
+            samples: if quick { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly, timing it; `f`'s return value is black-boxed.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // Calibrate: how many iterations fit in sample_time?
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= self.sample_time / 4 || iters > (1 << 30) {
+                let scale = self.sample_time.as_secs_f64() / dt.as_secs_f64().max(1e-9);
+                iters = ((iters as f64 * scale).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 8;
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = per_iter.len();
+        let mean = per_iter.iter().sum::<f64>() / n as f64;
+        let var = per_iter.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            mean_ns: mean,
+            median_ns: per_iter[n / 2],
+            p99_ns: per_iter[(n as f64 * 0.99) as usize % n],
+            std_dev_ns: var.sqrt(),
+            iters_per_sample: iters,
+            samples: n,
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print a compact comparison of two named results as a ratio.
+    pub fn compare(&self, base: &str, contender: &str) {
+        let find = |n: &str| self.results.iter().find(|r| r.name == n);
+        if let (Some(b), Some(c)) = (find(base), find(contender)) {
+            println!(
+                "  ratio {}/{} = {:.2}x",
+                base,
+                contender,
+                b.mean_ns / c.mean_ns
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let s = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..32u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.throughput() > 0.0);
+    }
+
+    #[test]
+    fn ordering_sane() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let fast = b.run("fast", || 1u64 + 1).mean_ns;
+        let slow = b
+            .run("slow", || {
+                let mut acc = 0u64;
+                for i in 0..20_000u64 {
+                    acc = acc.wrapping_add(std::hint::black_box(i));
+                }
+                acc
+            })
+            .mean_ns;
+        assert!(slow > fast * 10.0, "slow={slow} fast={fast}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal command-line parsing: `binary <subcommand> --key value --flag`.
+//!
+//! A tiny replacement for `clap` (unavailable offline). Collects the first
+//! positional token as the subcommand, remaining positionals in order, and
+//! `--key value` / `--switch` options. `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token, if any (the subcommand).
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` options; bare switches map to "".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (exclude `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), String::new());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// True if `--key` was present (with or without a value).
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).map(|s| s.to_string()).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; panics with a clear message on bad input.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => panic!("invalid value for --{key}: {s:?} ({e})"),
+            },
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--caps 20,30,40`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| match p.trim().parse() {
+                    Ok(v) => v,
+                    Err(e) => panic!("invalid element in --{key}: {p:?} ({e})"),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["simulate", "--policy", "grmu", "--seed", "42", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get("policy"), Some("grmu"));
+        assert_eq!(a.num_or("seed", 0u64), 42);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["figures", "--fig=9", "--out=/tmp/x.json"]);
+        assert_eq!(a.num_or("fig", 0u32), 9);
+        assert_eq!(a.get("out"), Some("/tmp/x.json"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["analyze", "one", "two", "--k", "v", "three"]);
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["sweep", "--caps", "20,30,40"]);
+        assert_eq!(a.list_or("caps", &[50u32]), vec![20, 30, 40]);
+        assert_eq!(a.list_or("other", &[50u32]), vec![50]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["run", "--json"]);
+        assert!(a.flag("json"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert!(a.command.is_none());
+        assert_eq!(a.str_or("policy", "ff"), "ff");
+        assert_eq!(a.num_or("seed", 7u64), 7);
+    }
+}

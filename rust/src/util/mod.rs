@@ -1,0 +1,26 @@
+//! In-tree substrates for the offline build environment.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so
+//! the ecosystem crates a project like this would normally pull in
+//! (`rand`, `serde_json`, `clap`, `criterion`, `proptest`) are replaced by
+//! small, tested, purpose-built equivalents:
+//!
+//! * [`rng`] — a seeded PCG-family PRNG plus the distributions the
+//!   workload generator needs (uniform, normal, lognormal, exponential,
+//!   Poisson, weighted choice, shuffle).
+//! * [`json`] — a JSON value model with serializer and parser, used for
+//!   metrics export and config files.
+//! * [`cli`] — a minimal subcommand + `--flag value` argument parser.
+//! * [`bench`] — a criterion-style timing harness (auto-calibrated
+//!   iteration counts, mean/median/p99 reporting).
+//! * [`prop`] — a property-testing runner: seeded random cases with
+//!   failing-seed reporting.
+//! * [`stats`] — descriptive statistics and the IQR outlier rule used by
+//!   the trace pipeline (§8.1).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,94 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports
+//! the case index and the derived seed so the exact case can be replayed
+//! with `PROP_SEED`. Shrinking is intentionally out of scope — failures
+//! carry the full generated value via `Debug`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `PROP_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(256)
+}
+
+/// Root seed (override with `PROP_SEED` to replay).
+pub fn root_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `prop` over `default_cases()` random cases. `gen` builds a case
+/// from a seeded RNG; `prop` returns `Err(reason)` to fail.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let root = root_seed();
+    for case in 0..cases {
+        let seed = root.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if let Err(reason) = prop(&value) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (PROP_SEED={root}, case seed {seed}):\n  \
+                 value: {value:?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            "reverse-reverse-identity",
+            |r| (0..r.below(64)).map(|_| r.next_u64()).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if &w == v {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed the vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        forall("always-fails", |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        forall("collect-1", |r| r.next_u64(), |v| {
+            first.push(*v);
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall("collect-2", |r| r.next_u64(), |v| {
+            second.push(*v);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

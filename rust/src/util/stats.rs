@@ -1,0 +1,116 @@
+//! Descriptive statistics and the IQR outlier rule from §8.1.
+
+/// Linear-interpolated percentile (`q` in `[0, 100]`) of unsorted data.
+pub fn percentile(data: &[f64], q: f64) -> f64 {
+    assert!(!data.is_empty(), "percentile of empty slice");
+    let mut v: Vec<f64> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile of already-sorted data.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 100.0);
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Arithmetic mean.
+pub fn mean(data: &[f64]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter().sum::<f64>() / data.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(data: &[f64]) -> f64 {
+    if data.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(data);
+    (data.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / data.len() as f64).sqrt()
+}
+
+/// IQR bounds per §8.1: `[Q1 - 1.5·IQR, Q3 + 1.5·IQR]`.
+pub fn iqr_bounds(data: &[f64]) -> (f64, f64) {
+    let mut v: Vec<f64> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q1 = percentile_sorted(&v, 25.0);
+    let q3 = percentile_sorted(&v, 75.0);
+    let iqr = q3 - q1;
+    (q1 - 1.5 * iqr, q3 + 1.5 * iqr)
+}
+
+/// Retain values inside the IQR bounds (the paper's arrival-time filter).
+pub fn iqr_filter(data: &[f64]) -> Vec<f64> {
+    if data.is_empty() {
+        return Vec::new();
+    }
+    let (lo, hi) = iqr_bounds(data);
+    data.iter().copied().filter(|&x| x >= lo && x <= hi).collect()
+}
+
+/// Trapezoidal area under a sampled curve `(x, y)` (Table 6's AUC).
+pub fn auc(points: &[(f64, f64)]) -> f64 {
+    points
+        .windows(2)
+        .map(|w| {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            (x1 - x0) * (y0 + y1) / 2.0
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&v, 50.0), 2.5);
+        assert_eq!(percentile(&v, 25.0), 1.75);
+    }
+
+    #[test]
+    fn iqr_filter_removes_outliers() {
+        let mut data: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        data.push(10_000.0);
+        data.push(-10_000.0);
+        let kept = iqr_filter(&data);
+        assert_eq!(kept.len(), 100);
+        assert!(kept.iter().all(|&x| (0.0..100.0).contains(&x)));
+    }
+
+    #[test]
+    fn iqr_filter_keeps_uniform_data() {
+        let data: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        assert_eq!(iqr_filter(&data).len(), 50);
+    }
+
+    #[test]
+    fn auc_rectangle_and_triangle() {
+        assert!((auc(&[(0.0, 1.0), (2.0, 1.0)]) - 2.0).abs() < 1e-12);
+        assert!((auc(&[(0.0, 0.0), (1.0, 1.0)]) - 0.5).abs() < 1e-12);
+        assert_eq!(auc(&[(0.0, 5.0)]), 0.0);
+    }
+
+    #[test]
+    fn mean_std() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&v) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&v) - 2.0).abs() < 1e-12);
+    }
+}

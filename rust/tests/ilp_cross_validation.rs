@@ -1,0 +1,259 @@
+//! Integration tests: the exact ILP (Eq. 3–26) against an independent
+//! brute-force enumerator and against the heuristics.
+//!
+//! The brute-force enumerator shares *no code* with the MILP: it searches
+//! over explicit (GPU, start-block) assignments using the placement
+//! bitmasks, so agreement pins both the model and the solver.
+
+use grmu::cluster::VmSpec;
+use grmu::ilp::model::{IlpHost, PlacementInstance};
+use grmu::ilp::IlpSolver;
+use grmu::mig::profiles::{Placement, ALL_PROFILES};
+use grmu::mig::Profile;
+use grmu::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Exhaustive optimum: maximize accepted weight, then minimize active
+/// hardware among weight-optimal solutions. Exponential — tiny inputs only.
+fn brute_force(inst: &PlacementInstance) -> (f64, f64) {
+    struct State {
+        gpu_occ: Vec<u8>,
+        host_cpu: Vec<u32>,
+        host_ram: Vec<u32>,
+    }
+    fn gpu_host(inst: &PlacementInstance, gpu: usize) -> usize {
+        let mut g = gpu;
+        for (j, h) in inst.hosts.iter().enumerate() {
+            if g < h.num_gpus {
+                return j;
+            }
+            g -= h.num_gpus;
+        }
+        unreachable!()
+    }
+    fn active_hw(inst: &PlacementInstance, placed: &[Option<(usize, u8)>], vms: &[VmSpec]) -> f64 {
+        let total_gpus: usize = inst.hosts.iter().map(|h| h.num_gpus).sum();
+        let mut host_active = vec![false; inst.hosts.len()];
+        let mut gpu_active = vec![false; total_gpus];
+        for (i, p) in placed.iter().enumerate() {
+            let _ = &vms[i];
+            if let Some((gpu, _)) = p {
+                host_active[gpu_host(inst, *gpu)] = true;
+                gpu_active[*gpu] = true;
+            }
+        }
+        let mut units = 0.0;
+        for (j, h) in inst.hosts.iter().enumerate() {
+            if host_active[j] {
+                units += h.weight;
+            }
+        }
+        for (g, active) in gpu_active.iter().enumerate() {
+            if *active {
+                units += inst.hosts[gpu_host(inst, g)].weight;
+            }
+        }
+        units
+    }
+    fn recurse(
+        inst: &PlacementInstance,
+        vms: &[VmSpec],
+        i: usize,
+        state: &mut State,
+        placed: &mut Vec<Option<(usize, u8)>>,
+        best: &mut (f64, f64),
+    ) {
+        if i == vms.len() {
+            let weight: f64 = placed
+                .iter()
+                .zip(vms)
+                .filter(|(p, _)| p.is_some())
+                .map(|(_, vm)| vm.weight)
+                .sum();
+            let hw = active_hw(inst, placed, vms);
+            if weight > best.0 + 1e-9 || (weight > best.0 - 1e-9 && hw < best.1 - 1e-9) {
+                *best = (weight, hw);
+            }
+            return;
+        }
+        // Option 1: reject VM i.
+        placed.push(None);
+        recurse(inst, vms, i + 1, state, placed, best);
+        placed.pop();
+        // Option 2: every legal (gpu, start).
+        let vm = &vms[i];
+        for gpu in 0..state.gpu_occ.len() {
+            let host = gpu_host(inst, gpu);
+            if state.host_cpu[host] < vm.cpus || state.host_ram[host] < vm.ram_gb {
+                continue;
+            }
+            for &start in vm.profile.start_blocks() {
+                let mask = Placement { profile: vm.profile, start }.mask();
+                if state.gpu_occ[gpu] & mask != 0 {
+                    continue;
+                }
+                state.gpu_occ[gpu] |= mask;
+                state.host_cpu[host] -= vm.cpus;
+                state.host_ram[host] -= vm.ram_gb;
+                placed.push(Some((gpu, start)));
+                recurse(inst, vms, i + 1, state, placed, best);
+                placed.pop();
+                state.host_cpu[host] += vm.cpus;
+                state.host_ram[host] += vm.ram_gb;
+                state.gpu_occ[gpu] &= !mask;
+            }
+        }
+    }
+    let total_gpus: usize = inst.hosts.iter().map(|h| h.num_gpus).sum();
+    let mut state = State {
+        gpu_occ: vec![0; total_gpus],
+        host_cpu: inst.hosts.iter().map(|h| h.cpus).collect(),
+        host_ram: inst.hosts.iter().map(|h| h.ram_gb).collect(),
+    };
+    let mut best = (0.0, f64::INFINITY);
+    recurse(inst, &inst.vms, 0, &mut state, &mut Vec::new(), &mut best);
+    if best.1.is_infinite() {
+        best.1 = 0.0;
+    }
+    best
+}
+
+fn vm(id: u64, profile: Profile, weight: f64) -> VmSpec {
+    VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 10, weight }
+}
+
+#[test]
+fn ilp_matches_brute_force_on_fixed_cases() {
+    let cases: Vec<PlacementInstance> = vec![
+        // One GPU, competing pair.
+        PlacementInstance {
+            hosts: vec![IlpHost { cpus: 16, ram_gb: 64, num_gpus: 1, weight: 1.0 }],
+            vms: vec![vm(1, Profile::P7g40gb, 1.0), vm(2, Profile::P3g20gb, 1.0)],
+            prior: HashMap::new(),
+        },
+        // Two GPUs on one host, mixed profiles.
+        PlacementInstance {
+            hosts: vec![IlpHost { cpus: 32, ram_gb: 128, num_gpus: 2, weight: 1.0 }],
+            vms: vec![
+                vm(1, Profile::P4g20gb, 1.0),
+                vm(2, Profile::P4g20gb, 1.0),
+                vm(3, Profile::P3g20gb, 1.0),
+            ],
+            prior: HashMap::new(),
+        },
+        // Weighted: big VM worth more than two smalls.
+        PlacementInstance {
+            hosts: vec![IlpHost { cpus: 16, ram_gb: 64, num_gpus: 1, weight: 1.0 }],
+            vms: vec![
+                vm(1, Profile::P7g40gb, 5.0),
+                vm(2, Profile::P2g10gb, 1.0),
+                vm(3, Profile::P2g10gb, 1.0),
+            ],
+            prior: HashMap::new(),
+        },
+        // CPU-bound host.
+        PlacementInstance {
+            hosts: vec![IlpHost { cpus: 3, ram_gb: 64, num_gpus: 2, weight: 1.0 }],
+            vms: vec![vm(1, Profile::P1g5gb, 1.0), vm(2, Profile::P1g5gb, 1.0)],
+            prior: HashMap::new(),
+        },
+    ];
+    for (idx, inst) in cases.iter().enumerate() {
+        let (bf_weight, bf_hw) = brute_force(inst);
+        let sol = IlpSolver::new(inst.clone()).solve().expect("feasible");
+        assert!(
+            (sol.acceptance - bf_weight).abs() < 1e-6,
+            "case {idx}: ILP acceptance {} vs brute force {bf_weight}",
+            sol.acceptance
+        );
+        assert!(
+            (sol.active_hardware - bf_hw).abs() < 1e-6,
+            "case {idx}: ILP hardware {} vs brute force {bf_hw}",
+            sol.active_hardware
+        );
+    }
+}
+
+#[test]
+fn ilp_matches_brute_force_on_random_cases() {
+    let mut rng = Rng::new(777);
+    for case in 0..8 {
+        let n_vms = 3;
+        let vms: Vec<VmSpec> = (0..n_vms)
+            .map(|i| {
+                vm(
+                    i as u64 + 1,
+                    *rng.pick(&ALL_PROFILES),
+                    rng.range_inclusive(1, 3) as f64,
+                )
+            })
+            .collect();
+        let inst = PlacementInstance {
+            hosts: vec![IlpHost { cpus: 32, ram_gb: 128, num_gpus: 2, weight: 1.0 }],
+            vms,
+            prior: HashMap::new(),
+        };
+        let (bf_weight, bf_hw) = brute_force(&inst);
+        let sol = IlpSolver::new(inst).solve().expect("feasible");
+        assert!(
+            (sol.acceptance - bf_weight).abs() < 1e-6,
+            "case {case}: {} vs {bf_weight}",
+            sol.acceptance
+        );
+        assert!(
+            (sol.active_hardware - bf_hw).abs() < 1e-6,
+            "case {case}: hw {} vs {bf_hw}",
+            sol.active_hardware
+        );
+    }
+}
+
+#[test]
+fn heuristics_never_beat_the_ilp_bound() {
+    use grmu::cluster::{DataCenter, Host};
+    use grmu::policies::{self, Policy};
+    let mut rng = Rng::new(31337);
+    for _ in 0..6 {
+        let vms: Vec<VmSpec> =
+            (0..4).map(|i| vm(i as u64 + 1, *rng.pick(&ALL_PROFILES), 1.0)).collect();
+        let inst = PlacementInstance {
+            hosts: vec![IlpHost { cpus: 64, ram_gb: 256, num_gpus: 2, weight: 1.0 }],
+            vms: vms.clone(),
+            prior: HashMap::new(),
+        };
+        let sol = IlpSolver::new(inst).solve().unwrap();
+        for policy in policies::POLICY_NAMES {
+            let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+            let mut p = policies::by_name(policy, 0.5, None).unwrap();
+            let accepted =
+                p.place_batch(&mut dc, &vms, 0).iter().filter(|&&ok| ok).count() as f64;
+            assert!(
+                accepted <= sol.acceptance + 1e-6,
+                "{policy} beat the exact optimum: {accepted} > {}",
+                sol.acceptance
+            );
+        }
+    }
+}
+
+#[test]
+fn ilp_start_blocks_always_legal() {
+    let mut rng = Rng::new(99);
+    for _ in 0..5 {
+        let vms: Vec<VmSpec> =
+            (0..3).map(|i| vm(i as u64 + 1, *rng.pick(&ALL_PROFILES), 1.0)).collect();
+        let inst = PlacementInstance {
+            hosts: vec![IlpHost { cpus: 64, ram_gb: 256, num_gpus: 2, weight: 1.0 }],
+            vms: vms.clone(),
+            prior: HashMap::new(),
+        };
+        let sol = IlpSolver::new(inst).solve().unwrap();
+        for (&id, &(_, _, start)) in &sol.assignment {
+            let profile = vms.iter().find(|v| v.id == id).unwrap().profile;
+            assert!(
+                profile.start_blocks().contains(&start),
+                "{profile} assigned illegal start {start}"
+            );
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Integration tests: whole-simulation invariants across all policies.
+//!
+//! These run the real engine over generated workloads and check the
+//! properties every correct placement system must satisfy, independent
+//! of policy quality: conservation (no VM lost or duplicated), capacity
+//! safety (CPU/RAM/blocks never oversubscribed), determinism, and
+//! identical request streams across policies.
+
+use grmu::cluster::{DataCenter, Host};
+use grmu::mig::gpu::consistent;
+use grmu::policies::{self, Policy};
+use grmu::sim::{Simulation, SimulationOptions};
+use grmu::trace::{TraceConfig, Workload};
+
+fn run(policy: &str, seed: u64, heavy: f64, consolidation: Option<u64>) -> grmu::sim::SimResult {
+    let workload = Workload::generate(TraceConfig::small(seed));
+    let dc = DataCenter::new(workload.hosts.clone());
+    let p = policies::by_name(policy, heavy, consolidation).unwrap();
+    let mut sim = Simulation::new(dc, p, &workload.vms);
+    sim.options = SimulationOptions {
+        integrity_every: 13,
+        drain_cap_hours: 10 * 24,
+        ..Default::default()
+    };
+    sim.run()
+}
+
+#[test]
+fn all_policies_complete_with_integrity_checks_on() {
+    for policy in policies::POLICY_NAMES {
+        for seed in [1u64, 2, 3] {
+            let r = run(policy, seed, 0.3, Some(24));
+            assert!(r.requested > 0);
+            assert!(r.accepted <= r.requested, "{policy} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn identical_request_streams_across_policies() {
+    let results: Vec<_> =
+        policies::POLICY_NAMES.iter().map(|p| run(p, 7, 0.3, None)).collect();
+    for r in &results[1..] {
+        assert_eq!(r.requested, results[0].requested);
+        for i in 0..6 {
+            assert_eq!(
+                r.per_profile[i].0, results[0].per_profile[i].0,
+                "policy {} sees a different stream",
+                r.policy
+            );
+        }
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_result() {
+    for policy in policies::POLICY_NAMES {
+        let a = run(policy, 11, 0.3, Some(12));
+        let b = run(policy, 11, 0.3, Some(12));
+        assert_eq!(a.accepted, b.accepted, "{policy}");
+        assert_eq!(a.intra_migrations, b.intra_migrations, "{policy}");
+        assert_eq!(a.inter_migrations, b.inter_migrations, "{policy}");
+        assert_eq!(a.samples.len(), b.samples.len(), "{policy}");
+        for (sa, sb) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(sa, sb, "{policy}");
+        }
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let a = run("ff", 1, 0.3, None);
+    let b = run("ff", 2, 0.3, None);
+    assert_ne!(
+        (a.accepted, a.requested),
+        (b.accepted, b.requested),
+        "two seeds produced identical workload outcomes — suspicious"
+    );
+}
+
+#[test]
+fn cluster_fully_drains_after_last_departure() {
+    for policy in policies::POLICY_NAMES {
+        let workload = Workload::generate(TraceConfig {
+            num_hosts: 10,
+            num_pods: 60,
+            horizon_hours: 48,
+            duration_mu: 2.0, // short-lived: everything departs
+            ..TraceConfig::default()
+        });
+        let dc = DataCenter::new(workload.hosts.clone());
+        let p = policies::by_name(policy, 0.3, Some(6)).unwrap();
+        let mut sim = Simulation::new(dc, p, &workload.vms);
+        sim.options.integrity_every = 1;
+        let r = sim.run();
+        let last = r.samples.last().unwrap();
+        assert_eq!(last.resident, 0, "{policy}: residents remain after drain");
+        assert!(last.active_rate < 1e-9, "{policy}: hardware active after drain");
+    }
+}
+
+#[test]
+fn acceptance_rate_monotone_niceness_of_capacity() {
+    // Doubling every host's GPU count can only help (same stream).
+    let base = TraceConfig::small(5);
+    let workload = Workload::generate(base.clone());
+    let small_dc = DataCenter::new(workload.hosts.clone());
+    let big_hosts: Vec<Host> = workload
+        .hosts
+        .iter()
+        .map(|h| Host::new(h.id, h.cpus * 2, h.ram_gb * 2, h.gpus().len() * 2))
+        .collect();
+    let big_dc = DataCenter::new(big_hosts);
+    for policy in ["ff", "bf", "grmu"] {
+        let mut p1 = policies::by_name(policy, 0.3, None).unwrap();
+        let mut small = small_dc.clone();
+        let acc_small: usize =
+            p1.place_batch(&mut small, &workload.vms, 0).iter().filter(|&&x| x).count();
+        let mut p2 = policies::by_name(policy, 0.3, None).unwrap();
+        let mut big = big_dc.clone();
+        let acc_big: usize =
+            p2.place_batch(&mut big, &workload.vms, 0).iter().filter(|&&x| x).count();
+        assert!(
+            acc_big >= acc_small,
+            "{policy}: more capacity lowered acceptance ({acc_big} < {acc_small})"
+        );
+    }
+}
+
+#[test]
+fn no_gpu_ever_oversubscribed() {
+    // Deep check on a dense single-batch placement.
+    let workload = Workload::generate(TraceConfig::small(21));
+    for policy in policies::POLICY_NAMES {
+        let mut dc = DataCenter::new(workload.hosts.clone());
+        let mut p = policies::by_name(policy, 0.3, None).unwrap();
+        p.place_batch(&mut dc, &workload.vms, 0);
+        dc.check_integrity().unwrap();
+        for host in dc.hosts() {
+            assert!(host.free_cpus() <= host.cpus);
+            assert!(host.free_ram() <= host.ram_gb);
+            for gpu in host.gpus() {
+                assert!(consistent(gpu), "{policy}: inconsistent GPU");
+                // No profile exceeds its Table 1 instance limit.
+                let counts = gpu.profile_counts();
+                for (i, &c) in counts.iter().enumerate() {
+                    let max = grmu::mig::Profile::from_index(i).max_instances();
+                    assert!(c <= max, "{policy}: {c} instances of profile {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grmu_components_toggle_cleanly() {
+    // DB-only vs defrag vs defrag+consolidation: migrations appear only
+    // with the responsible component enabled.
+    let workload = Workload::generate(TraceConfig::small(9));
+    let run_grmu = |defrag: bool, consolidation: Option<u64>| {
+        let dc = DataCenter::new(workload.hosts.clone());
+        let policy = Box::new(grmu::policies::grmu::Grmu::new(grmu::policies::grmu::GrmuConfig {
+            heavy_capacity_frac: 0.3,
+            consolidation_interval_hours: consolidation,
+            defrag_enabled: defrag,
+        }));
+        let mut sim = Simulation::new(dc, policy, &workload.vms);
+        sim.options.integrity_every = 7;
+        sim.run()
+    };
+    let db_only = run_grmu(false, None);
+    assert_eq!(db_only.intra_migrations, 0);
+    assert_eq!(db_only.inter_migrations, 0);
+    let defrag = run_grmu(true, None);
+    assert_eq!(defrag.inter_migrations, 0);
+    let full = run_grmu(true, Some(6));
+    // Consolidation may or may not find candidates on a small trace, but
+    // it must never *reduce* intra-migrations bookkeeping.
+    assert!(full.intra_migrations + full.inter_migrations >= defrag.intra_migrations);
+}
+
+#[test]
+fn weighted_metrics_consistent() {
+    let r = run("grmu", 3, 0.3, None);
+    // Per-profile accepted sums to total accepted.
+    let sum: u64 = r.per_profile.iter().map(|(_, a)| a).sum();
+    assert_eq!(sum, r.accepted);
+    let req: u64 = r.per_profile.iter().map(|(q, _)| q).sum();
+    assert_eq!(req, r.requested);
+    // Acceptance-rate samples are monotone results of cumulative counts.
+    for s in &r.samples {
+        assert!((0.0..=1.0).contains(&s.acceptance_rate));
+        assert!((0.0..=1.0).contains(&s.active_rate));
+    }
+}

@@ -1,0 +1,128 @@
+//! Integration tests: the §8.1 workload pipeline end to end — synthesis
+//! → CSV export → loader → mapping — and its statistical properties.
+
+use grmu::trace::loader::parse_pods_csv;
+use grmu::trace::mapping::{map_pods_to_profiles, nearest_profile, normalized_profile_values};
+use grmu::trace::{TraceConfig, Workload};
+use grmu::util::stats::{iqr_filter, mean};
+
+#[test]
+fn csv_roundtrip_preserves_vm_stream() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    // Export the mapped VMs in pod format (as `repro trace` does).
+    let mut csv = String::from("arrival,duration,num_gpus,gpu_frac,cpus,ram_gb\n");
+    for vm in &workload.vms {
+        csv.push_str(&format!(
+            "{},{},1,{:.6},{},{}\n",
+            vm.arrival,
+            vm.departure - vm.arrival,
+            vm.profile.combined_value(),
+            vm.cpus,
+            vm.ram_gb
+        ));
+    }
+    let pods = parse_pods_csv(&csv).unwrap();
+    let (vms, report) = map_pods_to_profiles(&pods);
+    assert_eq!(vms.len(), workload.vms.len());
+    assert_eq!(report.outliers_removed, 0, "round-trip must not re-filter");
+    // Profiles survive the round trip exactly: each exported frac is the
+    // profile's own normalized value.
+    for (a, b) in vms.iter().zip(&workload.vms) {
+        assert_eq!(a.profile, b.profile);
+        assert_eq!(a.arrival, b.arrival);
+    }
+}
+
+#[test]
+fn iqr_filter_matches_report() {
+    let config = TraceConfig::small(3);
+    let workload = Workload::generate(config.clone());
+    // The generator plants ~outlier_frac extreme arrivals.
+    let expected = (config.num_pods as f64 * config.outlier_frac) as f64;
+    let removed = workload.report.outliers_removed as f64;
+    assert!(
+        removed > 0.0 && removed < 4.0 * expected.max(1.0),
+        "removed {removed} vs expected ≈ {expected}"
+    );
+}
+
+#[test]
+fn profile_mapping_covers_all_profiles() {
+    let values = normalized_profile_values();
+    for (i, v) in values.iter().enumerate() {
+        // The profile's own normalized value maps back to itself.
+        assert_eq!(nearest_profile(*v).index(), i);
+    }
+}
+
+#[test]
+fn mapping_boundaries_are_midpoints() {
+    let values = normalized_profile_values();
+    for w in values.windows(2) {
+        let mid = (w[0] + w[1]) / 2.0;
+        let below = nearest_profile(mid - 1e-9);
+        let above = nearest_profile(mid + 1e-9);
+        assert_ne!(below, above, "midpoint {mid} must separate profiles");
+    }
+}
+
+#[test]
+fn workload_statistics_sane_at_paper_scale() {
+    let workload = Workload::generate(TraceConfig::default());
+    assert_eq!(workload.hosts.len(), 1_213);
+    // VM count lands near the paper's 8,063 (±5%).
+    let n = workload.vms.len() as f64;
+    assert!((7_660.0..=8_470.0).contains(&n), "VM count {n}");
+    // 7g.40gb is the single most common profile (paper Fig. 5).
+    let dist = workload.profile_distribution();
+    let max_idx = (0..6).max_by(|&a, &b| dist[a].partial_cmp(&dist[b]).unwrap()).unwrap();
+    assert_eq!(max_idx, grmu::mig::Profile::P7g40gb.index());
+    // Durations are heavy-tailed: mean far above median.
+    let durations: Vec<f64> = workload.vms.iter().map(|v| v.duration() as f64).collect();
+    let mut sorted = durations.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2];
+    // Long-lived services: the median VM outlives most of the 30-day
+    // horizon (this scarcity is what produces the paper's ~40% regime),
+    // while a short-lived head still exists (churn for defrag to act on).
+    assert!(median as u64 > 14 * 24 * 3_600, "median duration too short: {median}");
+    let p10 = sorted[sorted.len() / 10];
+    assert!(median > 3.0 * p10, "no dynamic range in durations");
+    assert!(mean(&durations) > 0.0);
+}
+
+#[test]
+fn arrivals_uniformish_after_filter() {
+    // Post-IQR arrivals span the horizon with no huge gaps.
+    let config = TraceConfig::small(8);
+    let workload = Workload::generate(config.clone());
+    let arrivals: Vec<f64> = workload.vms.iter().map(|v| v.arrival as f64).collect();
+    let kept = iqr_filter(&arrivals);
+    assert_eq!(kept.len(), arrivals.len(), "pipeline output must already be IQR-clean");
+    let horizon = (config.horizon_hours * 3_600) as f64;
+    let spread = arrivals.last().unwrap() - arrivals.first().unwrap();
+    assert!(spread > 0.5 * horizon, "arrivals bunched: spread {spread} of {horizon}");
+}
+
+#[test]
+fn cpu_ram_demands_scale_with_profile() {
+    let workload = Workload::generate(TraceConfig::small(12));
+    let avg = |p: grmu::mig::Profile| -> f64 {
+        let xs: Vec<f64> = workload
+            .vms
+            .iter()
+            .filter(|v| v.profile == p)
+            .map(|v| v.cpus as f64)
+            .collect();
+        if xs.is_empty() {
+            f64::NAN
+        } else {
+            mean(&xs)
+        }
+    };
+    let small = avg(grmu::mig::Profile::P1g5gb);
+    let large = avg(grmu::mig::Profile::P7g40gb);
+    if small.is_finite() && large.is_finite() {
+        assert!(large > small, "7g VMs should demand more CPU than 1g VMs");
+    }
+}

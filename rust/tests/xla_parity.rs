@@ -1,0 +1,108 @@
+//! Integration tests: the AOT-compiled XLA scorer against the native
+//! implementation, end to end.
+//!
+//! Gated on `artifacts/cc_scorer.hlo.txt` (built by `make artifacts`);
+//! each test skips with a message when the artifact is absent so
+//! `cargo test` stays green in a fresh checkout.
+
+use grmu::cluster::DataCenter;
+use grmu::mig::gpu::{cc, profile_capacity};
+use grmu::policies::mcc::{Mcc, NativeScorer};
+use grmu::policies::Policy;
+use grmu::runtime::XlaScorer;
+use grmu::trace::{TraceConfig, Workload};
+use std::path::PathBuf;
+
+fn artifact() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/cc_scorer.hlo.txt");
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn all_256_masks_bit_identical() {
+    let Some(path) = artifact() else { return };
+    let mut scorer = XlaScorer::load(&path).unwrap();
+    let masks: Vec<u8> = (0..=255).collect();
+    let (ccs, caps) = scorer.score_full(&masks).unwrap();
+    for (i, &m) in masks.iter().enumerate() {
+        assert_eq!(ccs[i], cc(m));
+        assert_eq!(caps[i], profile_capacity(m));
+    }
+}
+
+#[test]
+fn whole_trace_decision_parity() {
+    let Some(path) = artifact() else { return };
+    let workload = Workload::generate(TraceConfig::small(13));
+    let run = |use_xla: bool| {
+        let mut dc = DataCenter::new(workload.hosts.clone());
+        let mut policy = if use_xla {
+            Mcc::with_scorer(Box::new(XlaScorer::load(&path).unwrap()))
+        } else {
+            Mcc::with_scorer(Box::new(NativeScorer))
+        };
+        let decisions = policy.place_batch(&mut dc, &workload.vms, 0);
+        let locs: Vec<_> = workload.vms.iter().map(|v| dc.locate(v.id)).collect();
+        (decisions, locs)
+    };
+    let native = run(false);
+    let xla = run(true);
+    assert_eq!(native.0, xla.0, "decisions diverge");
+    assert_eq!(native.1, xla.1, "placements diverge");
+}
+
+#[test]
+fn odd_batch_sizes_and_remainders() {
+    let Some(path) = artifact() else { return };
+    let mut scorer = XlaScorer::load(&path).unwrap();
+    for n in [1usize, 7, 255, 1024, 1025, 2048 + 13] {
+        let masks: Vec<u8> = (0..n).map(|i| ((i * 37) % 256) as u8).collect();
+        let (ccs, _) = scorer.score_full(&masks).unwrap();
+        assert_eq!(ccs.len(), n);
+        for (i, &m) in masks.iter().enumerate() {
+            assert_eq!(ccs[i], cc(m), "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn scorer_accounting_tracks_calls() {
+    let Some(path) = artifact() else { return };
+    let mut scorer = XlaScorer::load(&path).unwrap();
+    let batch = scorer.batch();
+    scorer.score_full(&vec![0u8; batch * 2 + 1]).unwrap();
+    assert_eq!(scorer.calls, 3);
+    assert_eq!(scorer.configs_scored, (batch * 2 + 1) as u64);
+}
+
+#[test]
+fn coordinator_serves_through_xla_scorer() {
+    let Some(path) = artifact() else { return };
+    use grmu::coordinator::{Coordinator, CoordinatorConfig, Request};
+    use std::sync::mpsc;
+    let workload = Workload::generate(TraceConfig::small(17));
+    let policy = Mcc::with_scorer(Box::new(XlaScorer::load(&path).unwrap()));
+    let coordinator = Coordinator::new(
+        DataCenter::new(workload.hosts.clone()),
+        Box::new(policy),
+        CoordinatorConfig::default(),
+    );
+    let (req_tx, req_rx) = mpsc::channel();
+    let (resp_tx, resp_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || coordinator.serve(req_rx, resp_tx));
+    for vmspec in workload.vms.iter().take(100) {
+        req_tx.send(Request { vm: *vmspec }).unwrap();
+    }
+    drop(req_tx);
+    let responses: Vec<_> = resp_rx.iter().collect();
+    let stats = handle.join().unwrap();
+    assert_eq!(responses.len(), 100);
+    assert_eq!(stats.requests, 100);
+    assert!(stats.accepted > 0);
+    assert!(stats.throughput() > 0.0);
+}
