@@ -1,15 +1,21 @@
 //! Placement-decision benchmarks: per-policy batch latency on a loaded
 //! mid-size data center — the coordinator's request-path cost.
 //!
+//! Policies are constructed through the `PolicyRegistry`, so every
+//! advertised variant (including `grmu-db`) gets a row.
+//!
 //! Run: `cargo bench --bench policies`
 
 use grmu::cluster::DataCenter;
-use grmu::policies;
+use grmu::policies::{Policy, PolicyConfig, PolicyCtx, PolicyRegistry};
 use grmu::trace::{TraceConfig, Workload};
 use grmu::util::bench::Bench;
 
 fn main() {
     let mut b = Bench::new();
+    let registry = PolicyRegistry::standard();
+    let cfg = PolicyConfig::new().heavy_frac(0.15);
+
     // A 200-host cluster pre-loaded to ~60% with the first half of the
     // trace; then benchmark decisions on the second half.
     let config = TraceConfig {
@@ -22,20 +28,22 @@ fn main() {
     let (warmup, probe) = workload.vms.split_at(half);
     let probe: Vec<_> = probe.iter().take(512).cloned().collect();
 
-    for name in policies::POLICY_NAMES {
+    for name in registry.names() {
         let mut dc = DataCenter::new(workload.hosts.clone());
-        let mut policy = policies::by_name(name, 0.15, None).unwrap();
-        policy.place_batch(&mut dc, warmup, 0);
+        let mut policy = registry.build(name, &cfg).unwrap();
+        let mut ctx = PolicyCtx::default();
+        policy.place_batch(&mut dc, warmup, &mut ctx);
         // Benchmark: decide the probe batch against a snapshot each time.
         let base = dc.clone();
         b.run(&format!("place-batch-512/{name}"), || {
             let mut dc = base.clone();
-            let mut p = policies::by_name(name, 0.15, None).unwrap();
+            let mut p = registry.build(name, &cfg).unwrap();
+            let mut ctx = PolicyCtx::default();
+            ctx.now = 3_600;
             // Rebuild policy state quickly from scratch for GRMU et al.:
             // placement decisions dominate; basket init is O(#GPUs).
-            p.place_batch(&mut dc, &probe, 3_600)
+            p.place_batch(&mut dc, &probe, &mut ctx)
         });
-        let _ = policy;
     }
 
     // Per-decision latency at full data-center scale (5k GPUs) for the
@@ -45,13 +53,16 @@ fn main() {
     let probe_big: Vec<_> = rest.iter().take(64).cloned().collect();
     for name in ["ff", "mcc", "grmu"] {
         let mut dc = DataCenter::new(big.hosts.clone());
-        let mut policy = policies::by_name(name, 0.15, None).unwrap();
-        policy.place_batch(&mut dc, warm, 0);
+        let mut policy = registry.build(name, &cfg).unwrap();
+        let mut ctx = PolicyCtx::default();
+        policy.place_batch(&mut dc, warm, &mut ctx);
         let base = dc.clone();
         b.run(&format!("place-batch-64/paper-scale/{name}"), || {
             let mut dc = base.clone();
-            let mut p = policies::by_name(name, 0.15, None).unwrap();
-            p.place_batch(&mut dc, &probe_big, 3_600)
+            let mut p = registry.build(name, &cfg).unwrap();
+            let mut ctx = PolicyCtx::default();
+            ctx.now = 3_600;
+            p.place_batch(&mut dc, &probe_big, &mut ctx)
         });
     }
 }

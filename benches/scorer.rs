@@ -59,12 +59,17 @@ fn main() {
     let mut native = NativeScorer;
     b.run("scorer/native-1024-batch", || native.score(&batch));
 
-    let artifact = std::path::Path::new("artifacts/cc_scorer.hlo.txt");
-    if artifact.exists() {
-        let mut xla = grmu::runtime::XlaScorer::load(artifact).expect("artifact");
-        b.run("scorer/xla-pjrt-1024-batch", || xla.score(&batch));
-        b.compare("scorer/xla-pjrt-1024-batch", "scorer/native-1024-batch");
-    } else {
-        eprintln!("(skipping XLA scorer bench: run `make artifacts`)");
+    #[cfg(feature = "xla")]
+    {
+        let artifact = std::path::Path::new("artifacts/cc_scorer.hlo.txt");
+        if artifact.exists() {
+            let mut xla = grmu::runtime::XlaScorer::load(artifact).expect("artifact");
+            b.run("scorer/xla-pjrt-1024-batch", || xla.score(&batch));
+            b.compare("scorer/xla-pjrt-1024-batch", "scorer/native-1024-batch");
+        } else {
+            eprintln!("(skipping XLA scorer bench: run `make artifacts`)");
+        }
     }
+    #[cfg(not(feature = "xla"))]
+    eprintln!("(skipping XLA scorer bench: built without the `xla` feature)");
 }

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate: build, test, and (when available) check
+# formatting. Run before every merge; CI runs exactly this script.
+#
+#   ./ci.sh            # release build + tests + fmt check
+#   SKIP_FMT=1 ./ci.sh # skip the formatting gate
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo check --all-targets"
+cargo check --all-targets --quiet   # benches are only compiled here
+
+echo "== cargo test -q"
+cargo test -q
+
+if [ "${SKIP_FMT:-0}" != "1" ]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== cargo fmt --check"
+        cargo fmt --check
+    else
+        echo "== cargo fmt unavailable (rustfmt not installed); skipping"
+    fi
+fi
+
+echo "CI OK"

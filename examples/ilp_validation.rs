@@ -12,7 +12,7 @@ use grmu::cluster::{DataCenter, Host, VmSpec};
 use grmu::ilp::model::{IlpHost, PlacementInstance};
 use grmu::ilp::IlpSolver;
 use grmu::mig::profiles::ALL_PROFILES;
-use grmu::policies;
+use grmu::policies::{Policy, PolicyConfig, PolicyCtx, PolicyRegistry};
 use grmu::util::rng::Rng;
 use std::collections::HashMap;
 
@@ -40,8 +40,12 @@ fn heuristic_accepted(name: &str, inst: &PlacementInstance) -> u64 {
         .map(|(i, h)| Host::new(i as u32, h.cpus, h.ram_gb, h.num_gpus))
         .collect();
     let mut dc = DataCenter::new(hosts);
-    let mut policy = policies::by_name(name, 0.34, None).unwrap();
-    policy.place_batch(&mut dc, &inst.vms, 0).iter().filter(|&&ok| ok).count() as u64
+    let mut policy = PolicyRegistry::standard()
+        .build(name, &PolicyConfig::new().heavy_frac(0.34))
+        .unwrap();
+    let mut ctx = PolicyCtx::default();
+    policy.place_batch(&mut dc, &inst.vms, &mut ctx).iter().filter(|d| d.is_placed()).count()
+        as u64
 }
 
 fn main() {

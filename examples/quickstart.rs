@@ -1,16 +1,16 @@
 //! Quickstart: the GRMU public API in ~60 lines.
 //!
 //! Builds a 3-host data center, routes a handful of MIG-enabled VM
-//! requests through GRMU, prints each placement decision with the GPU
-//! block maps (Fig. 2-style), and shows the CC metric and defragmentation
-//! in action.
+//! requests through GRMU, prints each typed placement decision — the
+//! chosen GPU or the [`RejectReason`] — with the GPU block maps
+//! (Fig. 2-style), and shows the CC metric and defragmentation in action.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use grmu::cluster::{DataCenter, Host, VmSpec};
 use grmu::mig::Profile;
 use grmu::policies::grmu::{Grmu, GrmuConfig};
-use grmu::policies::Policy;
+use grmu::policies::{Decision, Policy, PolicyCtx, RejectReason};
 
 fn vm(id: u64, profile: Profile) -> VmSpec {
     VmSpec { id, profile, cpus: 4, ram_gb: 16, arrival: 0, departure: 3_600_000, weight: 1.0 }
@@ -41,32 +41,36 @@ fn main() {
         consolidation_interval_hours: Some(1),
         defrag_enabled: true,
     });
+    let mut ctx = PolicyCtx::new(0);
 
     // A mixed batch: two whole-GPU requests plus assorted slices.
     let batch = vec![
         vm(1, Profile::P7g40gb),
         vm(2, Profile::P7g40gb),
-        vm(3, Profile::P7g40gb), // exceeds the heavy quota -> rejected
+        vm(3, Profile::P7g40gb), // exceeds the heavy quota -> QuotaDenied
         vm(4, Profile::P3g20gb),
         vm(5, Profile::P2g10gb),
         vm(6, Profile::P1g5gb),
         vm(7, Profile::P1g5gb),
     ];
-    let decisions = policy.place_batch(&mut dc, &batch, 0);
+    let decisions = policy.place_batch(&mut dc, &batch, &mut ctx);
     println!("placement decisions:");
-    for (vm, ok) in batch.iter().zip(&decisions) {
-        match (ok, dc.locate(vm.id)) {
-            (true, Some(loc)) => println!(
+    for (vm, decision) in batch.iter().zip(&decisions) {
+        match decision {
+            Decision::Placed { gpu, placement } => println!(
                 "  VM {} ({:<8}) -> host {} gpu {} start {}",
                 vm.id,
                 vm.profile.name(),
-                loc.gpu.host,
-                loc.gpu.gpu,
-                loc.placement.start
+                gpu.host,
+                gpu.gpu,
+                placement.start
             ),
-            _ => println!("  VM {} ({:<8}) -> REJECTED", vm.id, vm.profile.name()),
+            Decision::Rejected(reason) => {
+                println!("  VM {} ({:<8}) -> REJECTED ({reason})", vm.id, vm.profile.name())
+            }
         }
     }
+    assert_eq!(decisions[2], Decision::Rejected(RejectReason::QuotaDenied));
     println!("\ncluster state (block maps; digit = compute engines of the instance):");
     print_cluster(&dc);
 
@@ -76,8 +80,12 @@ fn main() {
     println!("\nafter VMs 5 and 7 depart:");
     print_cluster(&dc);
     let retry = vec![vm(8, Profile::P4g20gb), vm(9, Profile::P4g20gb)];
-    let decisions = policy.place_batch(&mut dc, &retry, 3_600);
-    println!("\nretry batch accepted: {decisions:?}");
+    ctx.now = 3_600;
+    let decisions = policy.place_batch(&mut dc, &retry, &mut ctx);
+    println!(
+        "\nretry batch accepted: {:?}",
+        decisions.iter().map(|d| d.is_placed()).collect::<Vec<_>>()
+    );
     print_cluster(&dc);
 
     let (active, total) = dc.active_hardware();
@@ -88,7 +96,8 @@ fn main() {
     // --- §7.1's defragmentation worked example, in isolation ---------
     // Two 1g.5gb instances land on blocks 6 and 4 (Algorithm 1). When
     // the block-6 tenant departs, the survivor is stranded at block 4 —
-    // a suboptimal arrangement. Intra-GPU migration moves it back to 6.
+    // a suboptimal arrangement. Intra-GPU migration moves it back to 6,
+    // reported as a first-class MigrationEvent.
     use grmu::cluster::GpuRef;
     use grmu::mig::placement::assign;
     use grmu::policies::grmu::defrag;
@@ -108,11 +117,13 @@ fn main() {
     dc2.remove(100); // the block-6 tenant departs
     println!("  before: [{}] CC={}", dc2.gpu(r).block_map(), dc2.gpu(r).cc());
     let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
-    let moved = defrag::defragment_light_basket(&mut dc2, &basket);
+    let moves = defrag::defragment_light_basket(&mut dc2, &basket);
     println!(
-        "  after:  [{}] CC={}  ({moved} intra-GPU migration)",
+        "  after:  [{}] CC={}  ({} intra-GPU migration: {:?})",
         dc2.gpu(r).block_map(),
-        dc2.gpu(r).cc()
+        dc2.gpu(r).cc(),
+        moves.len(),
+        moves
     );
     assert_eq!(dc2.locate(101).unwrap().placement.start, 6);
 }

@@ -15,8 +15,8 @@
 
 use grmu::cluster::DataCenter;
 use grmu::mig::gpu::{cc, profile_capacity};
-use grmu::policies::mcc::{CcScorer, Mcc, NativeScorer};
-use grmu::policies::Policy;
+use grmu::policies::mcc::Mcc;
+use grmu::policies::{CcScorer, NativeScorer, Policy, PolicyCtx};
 use grmu::runtime::XlaScorer;
 use grmu::trace::{TraceConfig, Workload};
 use std::path::Path;
@@ -44,8 +44,9 @@ fn main() {
     let workload = Workload::generate(TraceConfig::small(7));
     let run = |scorer: Box<dyn CcScorer>| {
         let mut dc = DataCenter::new(workload.hosts.clone());
-        let mut policy = Mcc::with_scorer(scorer);
-        let decisions = policy.place_batch(&mut dc, &workload.vms, 0);
+        let mut policy = Mcc::new();
+        let mut ctx = PolicyCtx::with_scorer(0, scorer);
+        let decisions = policy.place_batch(&mut dc, &workload.vms, &mut ctx);
         let placements: Vec<_> =
             workload.vms.iter().map(|vm| dc.locate(vm.id)).collect();
         (decisions, placements)
@@ -56,7 +57,7 @@ fn main() {
     assert_eq!(native.1, xla.1, "placements diverge");
     println!(
         "MCC decision parity: {} VMs placed identically under native and XLA scoring",
-        native.0.iter().filter(|&&b| b).count()
+        native.0.iter().filter(|d| d.is_placed()).count()
     );
 
     // (4) throughput comparison.

@@ -1,13 +1,41 @@
 //! `repro serve` — replay a trace through the coordinator service and
-//! report serving metrics (acceptance, decision latency, throughput).
+//! report serving metrics (acceptance with per-reason rejections,
+//! decision latency, throughput).
 
 use super::service::{Coordinator, CoordinatorConfig, Request, Response};
 use crate::cluster::DataCenter;
-use crate::policies::{self, mcc::Mcc};
-use crate::runtime::scorer::XlaScorer;
+use crate::policies::{format_reject_counts, PolicyConfig, PolicyCtx, PolicyRegistry};
 use crate::trace::{TraceConfig, Workload};
 use crate::util::cli::Args;
 use std::sync::mpsc;
+
+/// Build the policy context for the selected scorer backend. Only MCC
+/// consumes the ctx scorer, so the artifact is loaded only when it
+/// will actually be used — other policies serve natively even when the
+/// artifact is absent (matching the pre-redesign behaviour).
+#[cfg(feature = "xla")]
+fn scorer_ctx(seed: u64, policy_name: &str, scorer: &str, args: &Args) -> PolicyCtx {
+    if scorer == "xla" && policy_name == "mcc" {
+        let artifact = args.str_or("artifact", "artifacts/cc_scorer.hlo.txt");
+        let xla = crate::runtime::XlaScorer::load(std::path::Path::new(&artifact))
+            .expect("loading XLA scorer artifact (run `make artifacts` first)");
+        eprintln!("scoring through PJRT: {artifact}");
+        PolicyCtx::with_scorer(seed, Box::new(xla))
+    } else {
+        if scorer == "xla" {
+            eprintln!("--scorer xla only affects mcc; using the native scorer");
+        }
+        PolicyCtx::new(seed)
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn scorer_ctx(seed: u64, _policy_name: &str, scorer: &str, _args: &Args) -> PolicyCtx {
+    if scorer == "xla" {
+        eprintln!("--scorer xla requires a build with `--features xla`; using the native scorer");
+    }
+    PolicyCtx::new(seed)
+}
 
 /// Entry point for the `serve` subcommand.
 pub fn run(args: &Args) {
@@ -23,15 +51,14 @@ pub fn run(args: &Args) {
     let heavy_frac = args.num_or("heavy-frac", 0.30f64);
     let consolidation = args.get("consolidation").and_then(|s| s.parse().ok());
 
-    let policy: Box<dyn policies::Policy> = if policy_name == "mcc" && scorer == "xla" {
-        let artifact = args.str_or("artifact", "artifacts/cc_scorer.hlo.txt");
-        let xla = XlaScorer::load(std::path::Path::new(&artifact))
-            .expect("loading XLA scorer artifact (run `make artifacts` first)");
-        eprintln!("scoring through PJRT: {artifact}");
-        Box::new(Mcc::with_scorer(Box::new(xla)))
-    } else {
-        policies::by_name(&policy_name, heavy_frac, consolidation).expect("known policy")
-    };
+    let registry = PolicyRegistry::standard();
+    let policy_cfg =
+        PolicyConfig::new().heavy_frac(heavy_frac).consolidation_hours(consolidation);
+    let policy = registry.build(&policy_name, &policy_cfg).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let ctx = scorer_ctx(seed, &policy_name.to_ascii_lowercase(), &scorer, args);
 
     eprintln!(
         "serving {} VMs over {} hosts / {} GPUs with {} (scorer: {})",
@@ -42,10 +69,11 @@ pub fn run(args: &Args) {
         scorer
     );
 
-    let coordinator = Coordinator::new(
+    let coordinator = Coordinator::with_ctx(
         DataCenter::new(workload.hosts.clone()),
         policy,
         CoordinatorConfig::default(),
+        ctx,
     );
 
     let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -62,23 +90,27 @@ pub fn run(args: &Args) {
         }
     });
 
-    let mut accepted = 0u64;
-    let mut total = 0u64;
-    for resp in resp_rx {
-        total += 1;
-        if resp.accepted {
-            accepted += 1;
-        }
-    }
+    // Drain the response channel so the feeder/server can finish; the
+    // authoritative accounting (acceptance, per-reason rejections)
+    // comes back from the coordinator's event core via the stats.
+    let responses: u64 = resp_rx.iter().count() as u64;
     feeder.join().unwrap();
     let stats = server.join().unwrap();
+    if responses != stats.requests {
+        eprintln!("warning: {responses} responses for {} requests", stats.requests);
+    }
 
     println!(
-        "served={total} accepted={accepted} ({:.1}%)  batches={}  p50={:.1}µs p99={:.1}µs  throughput={:.0} decisions/s",
-        100.0 * accepted as f64 / total.max(1) as f64,
+        "served={} accepted={} ({:.1}%)  batches={}  p50={:.1}µs p99={:.1}µs  throughput={:.0} decisions/s",
+        stats.requests,
+        stats.accepted,
+        100.0 * stats.acceptance_rate(),
         stats.batches,
         stats.latency_p50_us(),
         stats.latency_p99_us(),
         stats.throughput(),
     );
+    if stats.rejections.iter().sum::<u64>() > 0 {
+        println!("rejections: {}", format_reject_counts(&stats.rejections));
+    }
 }

@@ -2,11 +2,15 @@
 //!
 //! Wraps the placement policies in a request/response service loop with
 //! admission metrics, periodic maintenance ticks, and pluggable CC
-//! scoring (native table lookups or the AOT-compiled XLA artifact).
-//! See [`service`] for the event loop and [`cli`] for the `repro serve`
-//! entry point.
+//! scoring (native table lookups or the AOT-compiled XLA artifact,
+//! selected through the [`crate::policies::PolicyCtx`]). The event
+//! mechanics are the simulator's shared [`crate::sim::EventCore`], so a
+//! coordinator run reports the same [`crate::sim::SimResult`] metrics —
+//! per-reason rejections, migration events, hourly samples — as an
+//! offline simulation of the same trace. See [`service`] for the event
+//! loop and [`cli`] for the `repro serve` entry point.
 
 pub mod cli;
 pub mod service;
 
-pub use service::{Coordinator, CoordinatorConfig, Request, Response};
+pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats, Request, Response};

@@ -3,9 +3,17 @@
 //!
 //! Requests (VM specifications) arrive on a channel; the coordinator
 //! batches them per simulated interval, releases departed VMs, asks the
-//! policy for decisions and answers on the response channel. Python is
-//! never involved: when the XLA scorer is selected, the coordinator calls
-//! the AOT-compiled artifact through the PJRT runtime.
+//! policy for typed [`Decision`]s and answers on the response channel.
+//! The event mechanics — departure heap, interval clock, maintenance
+//! ticks, metric samples — are the simulator's [`EventCore`], so a
+//! coordinator run yields the same [`SimResult`] a simulation of the
+//! same trace would (locked by the equivalence integration test). On top
+//! of the core the coordinator adds serving concerns only: batching
+//! bounds, decision latency, throughput.
+//!
+//! Python is never involved: when the XLA scorer is selected, the
+//! coordinator's [`PolicyCtx`] calls the AOT-compiled artifact through
+//! the PJRT runtime.
 //!
 //! The offline build environment has no tokio, so concurrency uses
 //! `std::thread` + `std::sync::mpsc` — the event-loop structure (bounded
@@ -14,9 +22,10 @@
 
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::{DataCenter, GpuRef};
-use crate::policies::Policy;
+use crate::policies::{Policy, PolicyCtx, RejectCounts, RejectReason};
+use crate::sim::metrics::acceptance_rate;
+use crate::sim::{EventCore, SimResult};
 use crate::util::stats::percentile;
-use std::collections::BinaryHeap;
 use std::sync::mpsc::{Receiver, Sender};
 
 /// A placement request: the VM spec (arrival acts as virtual time).
@@ -32,6 +41,8 @@ pub struct Response {
     pub accepted: bool,
     /// GPU hosting the VM when accepted.
     pub gpu: Option<GpuRef>,
+    /// Why the request was refused, when it was.
+    pub reason: Option<RejectReason>,
     /// Wall-clock decision latency for the batch containing this VM, µs.
     pub decision_us: f64,
 }
@@ -39,7 +50,9 @@ pub struct Response {
 /// Coordinator knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Max requests folded into one placement batch.
+    /// Max requests folded into one placement batch. Splitting an
+    /// interval across batches is a serving knob; simulator equivalence
+    /// holds when an interval's requests fit in one batch.
     pub max_batch: usize,
     /// Virtual interval length for batching and maintenance ticks.
     pub interval: Time,
@@ -56,6 +69,9 @@ impl Default for CoordinatorConfig {
 pub struct CoordinatorStats {
     pub requests: u64,
     pub accepted: u64,
+    /// Rejections per [`RejectReason`] (indexed by `RejectReason::index`),
+    /// taken from the event core's accounting.
+    pub rejections: RejectCounts,
     pub batches: u64,
     /// Per-batch decision latencies (µs).
     pub batch_latencies_us: Vec<f64>,
@@ -64,12 +80,10 @@ pub struct CoordinatorStats {
 }
 
 impl CoordinatorStats {
+    /// Uses the crate-wide convention ([`acceptance_rate`]): 1.0 when no
+    /// request has been seen.
     pub fn acceptance_rate(&self) -> f64 {
-        if self.requests == 0 {
-            0.0
-        } else {
-            self.accepted as f64 / self.requests as f64
-        }
+        acceptance_rate(self.accepted, self.requests)
     }
 
     pub fn latency_p50_us(&self) -> f64 {
@@ -98,95 +112,107 @@ impl CoordinatorStats {
     }
 }
 
-/// The coordinator: data-center state + policy + virtual clock.
+/// The coordinator: the shared event core plus serving statistics.
 pub struct Coordinator {
-    dc: DataCenter,
-    policy: Box<dyn Policy>,
+    core: EventCore,
     config: CoordinatorConfig,
-    departures: BinaryHeap<std::cmp::Reverse<(Time, VmId)>>,
-    now: Time,
-    last_tick: Time,
-    stats: CoordinatorStats,
+    batches: u64,
+    batch_latencies_us: Vec<f64>,
+    decision_seconds: f64,
 }
 
 impl Coordinator {
     pub fn new(dc: DataCenter, policy: Box<dyn Policy>, config: CoordinatorConfig) -> Coordinator {
-        Coordinator {
-            dc,
-            policy,
-            config,
-            departures: BinaryHeap::new(),
-            now: 0,
-            last_tick: 0,
-            stats: CoordinatorStats::default(),
-        }
+        Coordinator::with_ctx(dc, policy, config, PolicyCtx::default())
     }
 
-    /// Advance virtual time: release departures due by `t`, fire the
-    /// policy tick at interval boundaries.
-    fn advance_to(&mut self, t: Time) {
-        while let Some(&std::cmp::Reverse((due, vm))) = self.departures.peek() {
-            if due > t {
-                break;
-            }
-            self.departures.pop();
-            self.dc.remove(vm);
-            self.policy.on_departure(&mut self.dc, vm);
-        }
-        if t.saturating_sub(self.last_tick) >= self.config.interval {
-            self.policy.on_tick(&mut self.dc, t);
-            self.last_tick = t;
-        }
-        self.now = self.now.max(t);
+    /// A coordinator with an explicit policy context (seeded RNG, custom
+    /// scorer backend such as the XLA artifact).
+    pub fn with_ctx(
+        dc: DataCenter,
+        policy: Box<dyn Policy>,
+        config: CoordinatorConfig,
+        ctx: PolicyCtx,
+    ) -> Coordinator {
+        let core = EventCore::with_interval(dc, policy, ctx, config.interval);
+        Coordinator { core, config, batches: 0, batch_latencies_us: Vec::new(), decision_seconds: 0.0 }
     }
 
-    /// Decide one batch synchronously. Requests must be time-ordered.
+    /// The interval owning an arrival at `t` (see [`EventCore::window_of`]).
+    pub fn window_of(&self, t: Time) -> u64 {
+        self.core.window_of(t)
+    }
+
+    /// Decide one batch synchronously. Requests must be time-ordered;
+    /// the batch is decided at the end of the interval owning its latest
+    /// arrival (the simulator's clock — time never moves backwards).
+    ///
+    /// Catching up across a request-free gap costs one empty interval
+    /// step (departure release, tick, sample) per elapsed interval —
+    /// the price of sample-for-sample equivalence with the simulator.
+    /// Feed arrivals on a contiguous virtual clock; a caller that jumps
+    /// the clock by years pays for the skipped intervals.
     pub fn decide_batch(&mut self, batch: &[Request]) -> Vec<Response> {
         if batch.is_empty() {
             return Vec::new();
         }
         let t = batch.iter().map(|r| r.vm.arrival).max().unwrap();
-        self.advance_to(t);
+        // Catch up on request-free intervals exactly as the simulator
+        // would: per-interval departure releases, ticks and samples.
+        self.core.run_until(self.core.window_of(t));
+        self.core.release_due(self.core.interval_end());
         let specs: Vec<VmSpec> = batch.iter().map(|r| r.vm).collect();
         let t0 = std::time::Instant::now();
-        let decisions = self.policy.place_batch(&mut self.dc, &specs, self.now);
+        let decisions = self.core.place(&specs);
         let dt = t0.elapsed();
         let us = dt.as_secs_f64() * 1e6;
-        self.stats.batches += 1;
-        self.stats.batch_latencies_us.push(us);
-        self.stats.decision_seconds += dt.as_secs_f64();
+        self.batches += 1;
+        self.batch_latencies_us.push(us);
+        self.decision_seconds += dt.as_secs_f64();
         specs
             .iter()
             .zip(&decisions)
-            .map(|(vm, &accepted)| {
-                self.stats.requests += 1;
-                if accepted {
-                    self.stats.accepted += 1;
-                    self.departures
-                        .push(std::cmp::Reverse((vm.departure.max(vm.arrival + 1), vm.id)));
-                }
-                Response {
-                    vm: vm.id,
-                    accepted,
-                    gpu: self.dc.locate(vm.id).map(|loc| loc.gpu),
-                    decision_us: us,
-                }
+            .map(|(vm, d)| Response {
+                vm: vm.id,
+                accepted: d.is_placed(),
+                gpu: d.gpu(),
+                reason: d.reject_reason(),
+                decision_us: us,
             })
             .collect()
     }
 
-    /// Serve a request channel until it closes. Requests are batched by
-    /// virtual interval (same `interval` as maintenance) and bounded by
-    /// `max_batch`.
+    /// Close the open interval (fire its tick and metric sample). Called
+    /// at end of service so the final interval is accounted like the
+    /// simulator would.
+    pub fn close_interval(&mut self) {
+        self.core.step(&[]);
+    }
+
+    /// Run empty intervals until the cluster drains (or `cap_hours`
+    /// intervals pass) — gives a served trace the same post-arrival
+    /// lifecycle a simulation run has.
+    pub fn drain(&mut self, cap_hours: u64) {
+        let mut steps = 0u64;
+        while self.core.pending_departures() > 0 {
+            self.core.step(&[]);
+            steps += 1;
+            if cap_hours > 0 && steps >= cap_hours {
+                break;
+            }
+        }
+    }
+
+    /// Serve a request channel until it closes. Requests are batched per
+    /// virtual interval (the same absolute interval grid the simulator
+    /// uses) and bounded by `max_batch`.
     pub fn serve(mut self, rx: Receiver<Request>, tx: Sender<Response>) -> CoordinatorStats {
         let mut pending: Vec<Request> = Vec::new();
-        let mut batch_open: Option<Time> = None;
+        let mut open_window: Option<u64> = None;
         for req in rx {
-            let t = req.vm.arrival;
-            let flush = match batch_open {
-                Some(t0) => {
-                    t >= t0 + self.config.interval || pending.len() >= self.config.max_batch
-                }
+            let w = self.core.window_of(req.vm.arrival);
+            let flush = match open_window {
+                Some(w0) => w != w0 || pending.len() >= self.config.max_batch,
                 None => false,
             };
             if flush {
@@ -194,29 +220,43 @@ impl Coordinator {
                     let _ = tx.send(resp);
                 }
                 pending.clear();
-                batch_open = None;
+                open_window = None;
             }
-            if batch_open.is_none() {
-                batch_open = Some(t);
+            if open_window.is_none() {
+                open_window = Some(w);
             }
             pending.push(req);
         }
         for resp in self.decide_batch(&pending) {
             let _ = tx.send(resp);
         }
-        self.stats
+        self.close_interval();
+        self.stats()
     }
 
-    pub fn stats(&self) -> &CoordinatorStats {
-        &self.stats
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            requests: self.core.requested(),
+            accepted: self.core.accepted(),
+            rejections: self.core.rejections(),
+            batches: self.batches,
+            batch_latencies_us: self.batch_latencies_us.clone(),
+            decision_seconds: self.decision_seconds,
+        }
+    }
+
+    /// Full metrics in the simulator's result type — acceptance (overall,
+    /// per profile, per reject reason), samples, migration events.
+    pub fn into_result(self) -> SimResult {
+        self.core.into_result(self.decision_seconds)
     }
 
     pub fn datacenter(&self) -> &DataCenter {
-        &self.dc
+        &self.core.dc
     }
 
     pub fn policy(&self) -> &dyn Policy {
-        self.policy.as_ref()
+        self.core.policy.as_ref()
     }
 }
 
@@ -246,8 +286,10 @@ mod tests {
         let r = c.decide_batch(&[Request { vm: vm(1, Profile::P7g40gb, 10, 10_000) }]);
         assert!(r[0].accepted);
         assert!(r[0].gpu.is_some());
+        assert!(r[0].reason.is_none());
         let r = c.decide_batch(&[Request { vm: vm(2, Profile::P1g5gb, 20, 10_000) }]);
         assert!(!r[0].accepted);
+        assert_eq!(r[0].reason, Some(RejectReason::NoGpuFit));
         assert_eq!(c.stats().requests, 2);
         assert_eq!(c.stats().accepted, 1);
     }
@@ -256,8 +298,10 @@ mod tests {
     fn departures_release_capacity() {
         let mut c = coord(1);
         c.decide_batch(&[Request { vm: vm(1, Profile::P7g40gb, 0, 100) }]);
-        // Arrives after the departure: accepted.
-        let r = c.decide_batch(&[Request { vm: vm(2, Profile::P7g40gb, 200, 500) }]);
+        // Arrives in a later interval, after the departure: accepted.
+        // (On the simulator clock a VM placed in interval 0 departs no
+        // earlier than the start of interval 1.)
+        let r = c.decide_batch(&[Request { vm: vm(2, Profile::P7g40gb, 2 * HOUR, 5 * HOUR) }]);
         assert!(r[0].accepted);
     }
 
@@ -296,5 +340,53 @@ mod tests {
         let _: Vec<Response> = resp_rx.iter().collect();
         let stats = handle.join().unwrap();
         assert_eq!(stats.batches, 2, "expected [vm1,vm2] then [vm3]");
+    }
+
+    #[test]
+    fn empty_stats_acceptance_is_vacuous_one() {
+        let c = coord(1);
+        assert!((c.stats().acceptance_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_carry_core_rejection_breakdown() {
+        let mut c = coord(1);
+        c.decide_batch(&[
+            Request { vm: vm(1, Profile::P7g40gb, 10, 10 * HOUR) },
+            Request { vm: vm(2, Profile::P7g40gb, 20, 10 * HOUR) },
+        ]);
+        let stats = c.stats();
+        assert_eq!(stats.rejections[RejectReason::NoGpuFit.index()], 1);
+        assert_eq!(stats.rejections.iter().sum::<u64>(), stats.requests - stats.accepted);
+    }
+
+    #[test]
+    fn drain_runs_the_post_arrival_lifecycle() {
+        let mut c = coord(1);
+        c.decide_batch(&[Request { vm: vm(1, Profile::P7g40gb, 10, 3 * HOUR) }]);
+        c.close_interval();
+        assert_eq!(c.datacenter().resident_count(), 1);
+        c.drain(0);
+        // The VM departed and each drained interval was sampled.
+        assert_eq!(c.datacenter().resident_count(), 0);
+        let result = c.into_result();
+        assert_eq!(result.samples.last().unwrap().resident, 0);
+        assert!(result.samples.len() >= 3);
+    }
+
+    #[test]
+    fn result_carries_samples_and_reasons() {
+        let mut c = coord(1);
+        c.decide_batch(&[
+            Request { vm: vm(1, Profile::P7g40gb, 10, 10 * HOUR) },
+            Request { vm: vm(2, Profile::P7g40gb, 20, 10 * HOUR) },
+        ]);
+        c.close_interval();
+        let result = c.into_result();
+        assert_eq!(result.requested, 2);
+        assert_eq!(result.accepted, 1);
+        assert_eq!(result.rejected(RejectReason::NoGpuFit), 1);
+        assert_eq!(result.samples.len(), 1);
+        assert!((result.samples[0].acceptance_rate - 0.5).abs() < 1e-12);
     }
 }

@@ -18,20 +18,54 @@
 //!   IQR outlier filter and Eq. 27–30 GPU-fraction→profile mapping.
 //! * [`cluster`] — physical machines (CPU/RAM/GPUs), VMs and the
 //!   data-center state.
-//! * [`sim`] — the discrete-event simulation engine and metric sampling
-//!   (replaces the paper's "Cloudy" simulator).
-//! * [`policies`] — the five placement policies evaluated in §8:
-//!   First-Fit, Best-Fit, MCC, MECC and GRMU (dual-basket pooling,
-//!   defragmentation, consolidation — Alg. 2–7).
+//! * [`policies`] — the typed placement-decision API and the five §8
+//!   policies (First-Fit, Best-Fit, MCC, MECC, GRMU). A policy answers
+//!   each request with a [`policies::Decision`] — `Placed` with the
+//!   chosen GPU and block placement, or `Rejected` with a
+//!   [`policies::RejectReason`] (CPU/RAM exhaustion, fragmentation,
+//!   basket-quota denial) — and reports defragmentation/consolidation
+//!   moves as [`policies::MigrationEvent`] records. Policies are built
+//!   through the [`policies::PolicyRegistry`] and run against a
+//!   [`policies::PolicyCtx`] (virtual clock, seeded RNG, pluggable CC
+//!   scorer).
+//! * [`sim`] — the shared [`sim::EventCore`] (departure heap, interval
+//!   batching, maintenance ticks, metric sampling) plus the offline
+//!   trace-replay [`sim::Simulation`] built on it. Results carry
+//!   per-reason rejection breakdowns and full migration-event logs.
 //! * [`ilp`] — the paper's multi-objective ILP (Eq. 3–26) plus an exact
 //!   in-house MILP solver (dense simplex + branch & bound) used to
 //!   validate the heuristics on small instances.
-//! * [`runtime`] — the PJRT/XLA runtime that loads the AOT-compiled
-//!   batched configuration scorer (`artifacts/cc_scorer.hlo.txt`).
-//! * [`coordinator`] — the online placement service: request loop,
-//!   admission, migration ticks and metrics export.
+//! * [`runtime`] *(feature `xla`)* — the PJRT/XLA runtime that loads the
+//!   AOT-compiled batched configuration scorer
+//!   (`artifacts/cc_scorer.hlo.txt`) behind the [`policies::CcScorer`]
+//!   trait.
+//! * [`coordinator`] — the online placement service: the same
+//!   [`sim::EventCore`] driven by a request channel, with serving
+//!   metrics (latency percentiles, throughput) on top. Coordinator runs
+//!   report the simulator's [`sim::SimResult`].
 //! * [`report`] — renderers that regenerate every table and figure of the
 //!   paper's evaluation section.
+//!
+//! ## Migration note (decision API)
+//!
+//! Earlier revisions had `Policy::place_batch(..) -> Vec<bool>` with two
+//! cumulative migration counters and duplicated event loops in
+//! `sim::engine` and `coordinator::service`. Code written against that
+//! contract maps as follows:
+//!
+//! * `Vec<bool>` → `Vec<Decision>`; use `Decision::is_placed()` for the
+//!   old boolean, `Decision::gpu()` for the placement address,
+//!   `Decision::reject_reason()` for the new diagnostics.
+//! * `policy.intra_migrations()` / `policy.inter_migrations()` →
+//!   `policy.take_migrations()` (drained by the event core);
+//!   `SimResult::{intra_migrations, inter_migrations}` fields →
+//!   methods over `SimResult::migration_events`.
+//! * `policies::by_name(..)` / `POLICY_NAMES` →
+//!   [`policies::PolicyRegistry::standard`] with
+//!   [`policies::PolicyConfig`] builders; unknown names now report the
+//!   accepted list (which includes `grmu-db`).
+//! * `place_batch(dc, vms, now)` → `place_batch(dc, vms, &mut ctx)` with
+//!   the time on `ctx.now`.
 
 pub mod cluster;
 pub mod coordinator;
@@ -39,6 +73,7 @@ pub mod ilp;
 pub mod mig;
 pub mod policies;
 pub mod report;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
 pub mod trace;

@@ -16,6 +16,7 @@
 
 use grmu::coordinator;
 use grmu::mig::config_space;
+use grmu::policies::{PolicyConfig, PolicyRegistry};
 use grmu::report::{experiments, tables};
 use grmu::trace::{loader, TraceConfig, Workload};
 use grmu::util::cli::Args;
@@ -48,28 +49,34 @@ fn cmd_ablate(args: &Args) {
             "{label:<36} {:>12.4} {:>16.4} {:>8} {:>8}",
             r.overall_acceptance(),
             r.average_active_rate(),
-            r.intra_migrations,
-            r.inter_migrations
+            r.intra_migrations(),
+            r.inter_migrations()
         );
     }
 }
 
 fn print_help() {
+    let registry = PolicyRegistry::standard();
     println!(
         "repro — GRMU paper reproduction\n\
          \n\
          USAGE: repro <command> [flags]\n\
          \n\
          COMMANDS:\n\
-           simulate  --policy ff|bf|mcc|mecc|grmu [--seed N] [--hosts N] [--pods N]\n\
+           simulate  --policy NAME [--seed N] [--hosts N] [--pods N]\n\
                      [--heavy-frac 0.3] [--consolidation HOURS] [--trace FILE.csv]\n\
                      [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
            trace     [--seed N] [--out FILE.csv]      dump the synthetic trace\n\
-           serve     --policy grmu [--scorer native|xla] [--quick]   online coordinator\n"
+           serve     --policy NAME [--scorer native|xla] [--quick]   online coordinator\n\
+         \n\
+         POLICIES:"
     );
+    for e in registry.entries() {
+        println!("           {:<8} {}", e.name, e.summary);
+    }
 }
 
 fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
@@ -124,8 +131,14 @@ fn write_json(args: &Args, json: &Json) {
 
 fn cmd_simulate(args: &Args) {
     let cfg = experiment_config(args);
-    let workload = load_workload(args, &cfg);
     let policy = args.str_or("policy", "grmu");
+    // Validate the name up front so typos fail with the accepted list
+    // before the (expensive) workload generation.
+    if let Err(e) = PolicyRegistry::standard().build(&policy, &PolicyConfig::new()) {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+    let workload = load_workload(args, &cfg);
     eprintln!(
         "workload: {} hosts / {} GPUs / {} VMs (seed {})",
         workload.hosts.len(),
@@ -142,8 +155,8 @@ fn cmd_simulate(args: &Args) {
         result.requested,
         result.average_active_rate(),
         result.active_auc(),
-        result.intra_migrations,
-        result.inter_migrations,
+        result.intra_migrations(),
+        result.inter_migrations(),
         result.wall_seconds,
     );
     let rates = result.per_profile_acceptance();
@@ -155,6 +168,9 @@ fn cmd_simulate(args: &Args) {
             result.per_profile[i].1,
             rates[i]
         );
+    }
+    if result.requested > result.accepted {
+        println!("  rejections: {}", grmu::policies::format_reject_counts(&result.rejections));
     }
     write_json(args, &result.to_json());
 }
@@ -225,6 +241,7 @@ fn cmd_figures(args: &Args) {
         if all || table == 6 {
             println!("{}", tables::table6(&results));
             println!("{}", tables::migrations_summary(&results));
+            println!("{}", tables::rejections_breakdown(&results));
         }
         exported.push(("policy_comparison", tables::comparison_json(&results)));
     }

@@ -1,8 +1,8 @@
 //! Best-Fit (BF, §8.3): among all GPUs that can host the request, pick
 //! the one minimizing the blocks left unallocated after placement.
 
-use super::Policy;
-use crate::cluster::vm::{Time, VmSpec};
+use super::{classify_rejection, Decision, Policy, PolicyCtx};
+use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::placement::mock_assign;
 
@@ -23,7 +23,12 @@ impl Policy for BestFit {
         "BF"
     }
 
-    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+    fn place_batch(
+        &mut self,
+        dc: &mut DataCenter,
+        vms: &[VmSpec],
+        _ctx: &mut PolicyCtx,
+    ) -> Vec<Decision> {
         if self.refs.is_empty() {
             self.refs = dc.gpu_refs();
         }
@@ -53,9 +58,9 @@ impl Policy for BestFit {
                 match best {
                     Some((_, r, pl)) => {
                         dc.place(vm, r, pl);
-                        true
+                        Decision::Placed { gpu: r, placement: pl }
                     }
-                    None => false,
+                    None => Decision::Rejected(classify_rejection(dc, vm, &self.refs)),
                 }
             })
             .collect()
@@ -80,8 +85,10 @@ mod tests {
         let filler = vm(99, Profile::P4g20gb);
         dc.place(&filler, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P4g20gb, start: 0 });
         let mut p = BestFit::new();
-        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb)], 0);
-        assert_eq!(out, vec![true]);
+        let mut ctx = PolicyCtx::default();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb)], &mut ctx);
+        assert!(out[0].is_placed());
+        assert_eq!(out[0].gpu(), Some(GpuRef { host: 0, gpu: 1 }));
         assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 1 });
     }
 
@@ -94,8 +101,9 @@ mod tests {
         dc.place(&f1, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P4g20gb, start: 0 });
         dc.place(&f2, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P2g10gb, start: 4 });
         let mut p = BestFit::new();
-        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb)], 0);
-        assert_eq!(out, vec![true]);
+        let mut ctx = PolicyCtx::default();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb)], &mut ctx);
+        assert!(out[0].is_placed());
         assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
     }
 
@@ -103,7 +111,8 @@ mod tests {
     fn ties_resolve_to_lowest_global_index() {
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 3)]);
         let mut p = BestFit::new();
-        p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
+        let mut ctx = PolicyCtx::default();
+        p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], &mut ctx);
         assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
     }
 }

@@ -3,8 +3,8 @@
 //! Sequentially scans hosts and their GPUs in `globalIndex` order and
 //! places the request on the first compatible resource.
 
-use super::{try_place_on_gpu, Policy};
-use crate::cluster::vm::{Time, VmSpec};
+use super::{classify_rejection, try_place_on_gpu, Decision, Policy, PolicyCtx};
+use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, GpuRef};
 
 /// First-Fit placement.
@@ -24,7 +24,12 @@ impl Policy for FirstFit {
         "FF"
     }
 
-    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+    fn place_batch(
+        &mut self,
+        dc: &mut DataCenter,
+        vms: &[VmSpec],
+        _ctx: &mut PolicyCtx,
+    ) -> Vec<Decision> {
         if self.refs.is_empty() {
             self.refs = dc.gpu_refs();
         }
@@ -41,11 +46,11 @@ impl Policy for FirstFit {
                         skip_host = Some(r.host);
                         continue;
                     }
-                    if try_place_on_gpu(dc, vm, r) {
-                        return true;
+                    if let Some(placement) = try_place_on_gpu(dc, vm, r) {
+                        return Decision::Placed { gpu: r, placement };
                     }
                 }
-                false
+                Decision::Rejected(classify_rejection(dc, vm, &self.refs))
             })
             .collect()
     }
@@ -56,42 +61,64 @@ mod tests {
     use super::*;
     use crate::cluster::Host;
     use crate::mig::Profile;
+    use crate::policies::RejectReason;
 
     fn vm(id: u64, profile: Profile) -> VmSpec {
         VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
+    }
+
+    fn placed(out: &[Decision]) -> Vec<bool> {
+        out.iter().map(|d| d.is_placed()).collect()
     }
 
     #[test]
     fn fills_first_gpu_first() {
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2), Host::new(1, 64, 256, 2)]);
         let mut p = FirstFit::new();
+        let mut ctx = PolicyCtx::default();
         let out = p.place_batch(
             &mut dc,
             &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb), vm(3, Profile::P3g20gb)],
-            0,
+            &mut ctx,
         );
-        assert_eq!(out, vec![true, true, true]);
-        // First two on GPU (0,0); third on GPU (0,1).
+        assert_eq!(placed(&out), vec![true, true, true]);
+        // First two on GPU (0,0); third on GPU (0,1) — and the decisions
+        // carry the same addresses as the location index.
         assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
         assert_eq!(dc.locate(2).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
         assert_eq!(dc.locate(3).unwrap().gpu, GpuRef { host: 0, gpu: 1 });
+        for (v, d) in [1u64, 2, 3].iter().zip(&out) {
+            assert_eq!(d.gpu(), Some(dc.locate(*v).unwrap().gpu));
+        }
     }
 
     #[test]
-    fn rejects_when_no_fit() {
+    fn rejects_with_fragmentation_reason_when_no_fit() {
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
         let mut p = FirstFit::new();
+        let mut ctx = PolicyCtx::default();
         let out =
-            p.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P1g5gb)], 0);
-        assert_eq!(out, vec![true, false]);
+            p.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P1g5gb)], &mut ctx);
+        assert!(out[0].is_placed());
+        assert_eq!(out[1], Decision::Rejected(RejectReason::NoGpuFit));
     }
 
     #[test]
     fn skips_cpu_exhausted_host() {
         let mut dc = DataCenter::new(vec![Host::new(0, 1, 256, 1), Host::new(1, 64, 256, 1)]);
         let mut p = FirstFit::new();
-        let out = p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
-        assert_eq!(out, vec![true]);
+        let mut ctx = PolicyCtx::default();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], &mut ctx);
+        assert!(out[0].is_placed());
         assert_eq!(dc.locate(1).unwrap().gpu.host, 1);
+    }
+
+    #[test]
+    fn cpu_exhaustion_reason_surfaces() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 1, 256, 1)]);
+        let mut p = FirstFit::new();
+        let mut ctx = PolicyCtx::default();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], &mut ctx);
+        assert_eq!(out[0], Decision::Rejected(RejectReason::CpuExhausted));
     }
 }

@@ -5,7 +5,8 @@
 //! that occupies one half of the device. Pairs of such GPUs are merged:
 //! the guest of the source migrates into the free half of the target, the
 //! source empties and returns to the pool (by `globalIndex` order, so it
-//! is the first to be reused).
+//! is the first to be reused). Every move is recorded as a
+//! [`MigrationEvent`] of kind [`MigrationKind::Inter`].
 //!
 //! Placement-rule subtlety the pseudocode glosses over: a 4g.20gb can
 //! only start at block 0, so two 4g.20gb-bearing GPUs can never merge —
@@ -13,14 +14,15 @@
 
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::placement::mock_assign;
+use crate::policies::{MigrationEvent, MigrationKind};
 use std::collections::BTreeSet;
 
 /// One consolidation round. Returns the GPUs drained back to the pool;
-/// `inter_migrations` is incremented per migrated VM.
+/// each migrated VM is appended to `events`.
 pub fn consolidate_light_basket(
     dc: &mut DataCenter,
     light: &mut BTreeSet<GpuRef>,
-    inter_migrations: &mut u64,
+    events: &mut Vec<MigrationEvent>,
 ) -> Vec<GpuRef> {
     // Candidates: half-full, single-profile GPUs (Algorithm 5 line 1).
     let mut candidates: Vec<GpuRef> = light
@@ -66,7 +68,12 @@ pub fn consolidate_light_basket(
         if let Some((j, placement)) = chosen {
             let target = candidates[j];
             dc.migrate(inst.vm, target, placement);
-            *inter_migrations += 1;
+            events.push(MigrationEvent {
+                vm: inst.vm,
+                from: source,
+                to: target,
+                kind: MigrationKind::Inter,
+            });
             light.remove(&source);
             freed.push(source);
             // Source leaves the candidate list; target is now full and
@@ -112,9 +119,11 @@ mod tests {
         place(&mut dc, 1, Profile::P3g20gb, refs(2)[0], 0);
         place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
         let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
-        let mut migs = 0;
-        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
-        assert_eq!(migs, 1);
+        let mut events = Vec::new();
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut events);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, MigrationKind::Inter);
+        assert_ne!(events[0].from, events[0].to);
         assert_eq!(freed.len(), 1);
         assert_eq!(light.len(), 1);
         // One GPU holds both instances, the other is empty.
@@ -131,9 +140,9 @@ mod tests {
         place(&mut dc, 1, Profile::P4g20gb, refs(2)[0], 0);
         place(&mut dc, 2, Profile::P4g20gb, refs(2)[1], 0);
         let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
-        let mut migs = 0;
-        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
-        assert_eq!(migs, 0);
+        let mut events = Vec::new();
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut events);
+        assert!(events.is_empty());
         assert!(freed.is_empty());
         assert_eq!(light.len(), 2);
     }
@@ -146,9 +155,10 @@ mod tests {
         place(&mut dc, 1, Profile::P4g20gb, refs(2)[0], 0);
         place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
         let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
-        let mut migs = 0;
-        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
-        assert_eq!(migs, 1);
+        let mut events = Vec::new();
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut events);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].vm, 2);
         assert_eq!(freed, vec![GpuRef { host: 0, gpu: 1 }]);
         let loc = dc.locate(2).unwrap();
         assert_eq!(loc.gpu, GpuRef { host: 0, gpu: 0 });
@@ -164,9 +174,9 @@ mod tests {
         place(&mut dc, 2, Profile::P2g10gb, refs(2)[0], 2);
         place(&mut dc, 3, Profile::P3g20gb, refs(2)[1], 0);
         let mut light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
-        let mut migs = 0;
-        consolidate_light_basket(&mut dc, &mut light, &mut migs);
-        assert_eq!(migs, 0);
+        let mut events = Vec::new();
+        consolidate_light_basket(&mut dc, &mut light, &mut events);
+        assert!(events.is_empty());
     }
 
     #[test]
@@ -179,9 +189,9 @@ mod tests {
         // Migrating VM 1 → host 1 impossible (CPU), VM 2 → host 0 fine.
         let mut light: BTreeSet<GpuRef> =
             [GpuRef { host: 0, gpu: 0 }, GpuRef { host: 1, gpu: 0 }].into_iter().collect();
-        let mut migs = 0;
-        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
-        assert_eq!(migs, 1);
+        let mut events = Vec::new();
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut events);
+        assert_eq!(events.len(), 1);
         assert_eq!(freed, vec![GpuRef { host: 1, gpu: 0 }]);
         assert_eq!(dc.locate(2).unwrap().gpu.host, 0);
         dc.check_integrity().unwrap();
@@ -194,9 +204,9 @@ mod tests {
             place(&mut dc, i as u64 + 1, Profile::P3g20gb, r, 0);
         }
         let mut light: BTreeSet<GpuRef> = refs(4).into_iter().collect();
-        let mut migs = 0;
-        let freed = consolidate_light_basket(&mut dc, &mut light, &mut migs);
-        assert_eq!(migs, 2);
+        let mut events = Vec::new();
+        let freed = consolidate_light_basket(&mut dc, &mut light, &mut events);
+        assert_eq!(events.len(), 2);
         assert_eq!(freed.len(), 2);
         assert_eq!(light.len(), 2);
         dc.check_integrity().unwrap();

@@ -7,12 +7,14 @@
 //! fresh-arrival packing), and every instance whose mock position differs
 //! from its live position is relocated (`Relocated` + `IntraMigrate` of
 //! Table 2). The replay is simulation-only — the data center is mutated
-//! only if the complete re-pack is feasible.
+//! only if the complete re-pack is feasible. Every relocation is reported
+//! as a [`MigrationEvent`] of kind [`MigrationKind::Intra`].
 
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::fragmentation::fragmentation_value;
 use crate::mig::placement::mock_assign;
 use crate::mig::{GpuState, Instance, Placement};
+use crate::policies::{MigrationEvent, MigrationKind};
 use std::collections::BTreeSet;
 
 /// Pick the most fragmented GPU (Algorithm 4's `Max(lightBasket,
@@ -63,23 +65,29 @@ pub fn repack_plan(gpu: &GpuState) -> Option<Vec<(Instance, Placement)>> {
 }
 
 /// Algorithm 4's `Defragmentation`: re-pack the most fragmented GPU of
-/// the light basket. Returns the number of intra-GPU migrations performed.
-pub fn defragment_light_basket(dc: &mut DataCenter, basket: &BTreeSet<GpuRef>) -> u64 {
+/// the light basket. Returns one intra-GPU [`MigrationEvent`] per
+/// relocated instance.
+pub fn defragment_light_basket(dc: &mut DataCenter, basket: &BTreeSet<GpuRef>) -> Vec<MigrationEvent> {
     let Some(target) = most_fragmented(dc, basket) else {
-        return 0;
+        return Vec::new();
     };
     let Some(moves) = repack_plan(dc.gpu(target)) else {
-        return 0;
+        return Vec::new();
     };
     if moves.is_empty() {
-        return 0;
+        return Vec::new();
     }
     apply_repack(dc, target, &moves)
 }
 
 /// Apply a re-pack plan: remove all moving instances first, then place at
 /// their new positions (avoids transient overlaps when instances swap).
-pub fn apply_repack(dc: &mut DataCenter, gpu_ref: GpuRef, moves: &[(Instance, Placement)]) -> u64 {
+/// Returns the performed relocations as migration events.
+pub fn apply_repack(
+    dc: &mut DataCenter,
+    gpu_ref: GpuRef,
+    moves: &[(Instance, Placement)],
+) -> Vec<MigrationEvent> {
     let gpu = dc.gpu_mut(gpu_ref);
     for (inst, _) in moves {
         gpu.remove_vm(inst.vm).expect("moving instance present");
@@ -89,7 +97,15 @@ pub fn apply_repack(dc: &mut DataCenter, gpu_ref: GpuRef, moves: &[(Instance, Pl
         // Keep the location index coherent.
         dc.relocate_index(inst.vm, gpu_ref, *new_placement);
     }
-    moves.len() as u64
+    moves
+        .iter()
+        .map(|(inst, _)| MigrationEvent {
+            vm: inst.vm,
+            from: gpu_ref,
+            to: gpu_ref,
+            kind: MigrationKind::Intra,
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -115,8 +131,9 @@ mod tests {
         place(&mut dc, 1, Profile::P1g5gb, 4);
         let r = GpuRef { host: 0, gpu: 0 };
         let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
-        let migrations = defragment_light_basket(&mut dc, &basket);
-        assert_eq!(migrations, 1);
+        let events = defragment_light_basket(&mut dc, &basket);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0], MigrationEvent { vm: 1, from: r, to: r, kind: MigrationKind::Intra });
         assert_eq!(dc.gpu(r).instances()[0].placement.start, 6);
         assert_eq!(dc.locate(1).unwrap().placement.start, 6);
         dc.check_integrity().unwrap();
@@ -144,15 +161,15 @@ mod tests {
         let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
         // Fragmentation of this state may be zero or the replay may be a
         // no-op; either way no migration happens.
-        let migrations = defragment_light_basket(&mut dc, &basket);
-        assert_eq!(migrations, 0);
+        let events = defragment_light_basket(&mut dc, &basket);
+        assert!(events.is_empty());
         assert_eq!(dc.gpu(r).instances()[0].placement.start, 6);
     }
 
     #[test]
     fn empty_basket_no_op() {
         let mut dc = dc_one_gpu();
-        assert_eq!(defragment_light_basket(&mut dc, &BTreeSet::new()), 0);
+        assert!(defragment_light_basket(&mut dc, &BTreeSet::new()).is_empty());
     }
 
     #[test]

@@ -6,16 +6,19 @@
 //!   by `globalIndex`; a *heavy* basket (capped at a configurable share of
 //!   all GPUs) serves 7g.40gb requests, a *light* basket serves everything
 //!   else. Baskets grow on demand by drawing the lowest-index GPU from the
-//!   pool; first-fit within a basket promotes consolidation.
+//!   pool; first-fit within a basket promotes consolidation. A request the
+//!   quota locks out of an otherwise-serviceable pool is rejected with
+//!   [`RejectReason::QuotaDenied`].
 //! * **Defragmentation / intra-GPU migration** (Algorithm 4,
 //!   [`defrag`]): when a batch sees any rejection, the most fragmented
 //!   light-basket GPU is re-packed by replaying its instances onto a mock
 //!   GPU with the default placement policy and relocating the ones that
-//!   land elsewhere.
+//!   land elsewhere. Each relocation is recorded as an
+//!   [`MigrationEvent`] of kind [`MigrationKind::Intra`].
 //! * **Consolidation / inter-GPU migration** (Algorithm 5,
 //!   [`consolidation`]): periodically, half-full single-profile GPUs
 //!   (one 3g.20gb or 4g.20gb) are merged pairwise; emptied GPUs return to
-//!   the pool.
+//!   the pool. Each move is an [`MigrationKind::Inter`] event.
 //!
 //! Implementation note on Algorithm 3 line 13: the pseudocode's
 //! `|basket| ≤ basketCapacity` would let a basket reach capacity+1; we
@@ -24,7 +27,10 @@
 pub mod consolidation;
 pub mod defrag;
 
-use super::{try_place_on_gpu, Policy};
+use super::{
+    classify_rejection, try_place_on_gpu, Decision, MigrationEvent, Policy, PolicyCtx,
+    RejectReason,
+};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::{DataCenter, GpuRef};
 use std::collections::BTreeSet;
@@ -62,8 +68,8 @@ pub struct Grmu {
     light: BTreeSet<GpuRef>,
     heavy_capacity: usize,
     light_capacity: usize,
-    intra_migrations: u64,
-    inter_migrations: u64,
+    /// Migrations performed and not yet drained by the event core.
+    events: Vec<MigrationEvent>,
     last_consolidation: Time,
     initialized: bool,
 }
@@ -77,8 +83,7 @@ impl Grmu {
             light: BTreeSet::new(),
             heavy_capacity: 0,
             light_capacity: 0,
-            intra_migrations: 0,
-            inter_migrations: 0,
+            events: Vec::new(),
             last_consolidation: 0,
             initialized: false,
         }
@@ -109,35 +114,52 @@ impl Grmu {
     }
 
     /// Algorithm 3 for one VM: scan the basket first-fit, then grow it
-    /// from the pool if allowed.
-    fn place_one(&mut self, dc: &mut DataCenter, vm: &VmSpec) -> bool {
+    /// from the pool if allowed. Rejections distinguish a binding basket
+    /// quota from genuine resource/fragmentation shortage.
+    fn place_one(&mut self, dc: &mut DataCenter, vm: &VmSpec) -> Decision {
         let heavy = vm.profile.is_heavy();
         let capacity = if heavy { self.heavy_capacity } else { self.light_capacity };
         let basket = if heavy { &self.heavy } else { &self.light };
 
         for &r in basket.iter() {
-            if try_place_on_gpu(dc, vm, r) {
-                return true;
+            if let Some(placement) = try_place_on_gpu(dc, vm, r) {
+                return Decision::Placed { gpu: r, placement };
             }
         }
-        // Grow the basket from the pool (strict capacity check; see
-        // module docs). Pool GPUs are empty, but their host may be unable
-        // to take the VM's CPU/RAM — skip such GPUs without consuming them.
-        if basket.len() < capacity {
+        let at_quota = basket.len() >= capacity;
+        if !at_quota {
+            // Grow the basket from the pool (strict capacity check; see
+            // module docs). Pool GPUs are empty, but their host may be
+            // unable to take the VM's CPU/RAM — skip such GPUs without
+            // consuming them.
             let candidates: Vec<GpuRef> = self.pool.iter().copied().collect();
             for r in candidates {
-                if try_place_on_gpu(dc, vm, r) {
+                if let Some(placement) = try_place_on_gpu(dc, vm, r) {
                     self.pool.remove(&r);
                     if heavy {
                         self.heavy.insert(r);
                     } else {
                         self.light.insert(r);
                     }
-                    return true;
+                    return Decision::Placed { gpu: r, placement };
                 }
             }
+        } else if self
+            .pool
+            .iter()
+            .any(|&r| dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb))
+        {
+            // A pool GPU (empty, so any GI fits) could serve this VM;
+            // only the basket quota stands in the way.
+            return Decision::Rejected(RejectReason::QuotaDenied);
         }
-        false
+        let basket = if heavy { &self.heavy } else { &self.light };
+        let reason = if at_quota {
+            classify_rejection(dc, vm, basket)
+        } else {
+            classify_rejection(dc, vm, basket.iter().chain(self.pool.iter()))
+        };
+        Decision::Rejected(reason)
     }
 }
 
@@ -146,32 +168,35 @@ impl Policy for Grmu {
         "GRMU"
     }
 
-    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+    fn place_batch(
+        &mut self,
+        dc: &mut DataCenter,
+        vms: &[VmSpec],
+        _ctx: &mut PolicyCtx,
+    ) -> Vec<Decision> {
         if !self.initialized {
             self.initialize(dc);
         }
-        let decisions: Vec<bool> = vms.iter().map(|vm| self.place_one(dc, vm)).collect();
+        let decisions: Vec<Decision> = vms.iter().map(|vm| self.place_one(dc, vm)).collect();
         // Any rejection triggers light-basket defragmentation (§7.1).
-        if self.config.defrag_enabled && decisions.iter().any(|ok| !ok) {
-            self.intra_migrations += defrag::defragment_light_basket(dc, &self.light);
+        if self.config.defrag_enabled && decisions.iter().any(|d| !d.is_placed()) {
+            let moved = defrag::defragment_light_basket(dc, &self.light);
+            self.events.extend(moved);
         }
         decisions
     }
 
-    fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId) {
+    fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId, _ctx: &mut PolicyCtx) {
         // Basket membership is sticky: emptied GPUs return to the pool
         // only through consolidation (Algorithm 5).
     }
 
-    fn on_tick(&mut self, dc: &mut DataCenter, now: Time) {
+    fn on_tick(&mut self, dc: &mut DataCenter, ctx: &mut PolicyCtx) {
         if let Some(hours) = self.config.consolidation_interval_hours {
-            if now.saturating_sub(self.last_consolidation) >= hours * HOUR {
-                self.last_consolidation = now;
-                let freed = consolidation::consolidate_light_basket(
-                    dc,
-                    &mut self.light,
-                    &mut self.inter_migrations,
-                );
+            if ctx.now.saturating_sub(self.last_consolidation) >= hours * HOUR {
+                self.last_consolidation = ctx.now;
+                let freed =
+                    consolidation::consolidate_light_basket(dc, &mut self.light, &mut self.events);
                 for g in freed {
                     self.pool.insert(g);
                 }
@@ -179,12 +204,8 @@ impl Policy for Grmu {
         }
     }
 
-    fn intra_migrations(&self) -> u64 {
-        self.intra_migrations
-    }
-
-    fn inter_migrations(&self) -> u64 {
-        self.inter_migrations
+    fn take_migrations(&mut self) -> Vec<MigrationEvent> {
+        std::mem::take(&mut self.events)
     }
 }
 
@@ -202,6 +223,10 @@ impl Grmu {
     pub fn heavy_capacity(&self) -> usize {
         self.heavy_capacity
     }
+    /// Migrations recorded and not yet drained via `take_migrations`.
+    pub fn pending_migrations(&self) -> &[MigrationEvent] {
+        &self.events
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +234,7 @@ mod tests {
     use super::*;
     use crate::cluster::Host;
     use crate::mig::Profile;
+    use crate::policies::MigrationKind;
 
     fn vm(id: u64, profile: Profile) -> VmSpec {
         VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100_000, weight: 1.0 }
@@ -220,11 +246,20 @@ mod tests {
         )
     }
 
+    fn batch(g: &mut Grmu, dcx: &mut DataCenter, vms: &[VmSpec]) -> Vec<Decision> {
+        let mut ctx = PolicyCtx::default();
+        g.place_batch(dcx, vms, &mut ctx)
+    }
+
+    fn accepted(out: &[Decision]) -> usize {
+        out.iter().filter(|d| d.is_placed()).count()
+    }
+
     #[test]
     fn initialization_seeds_baskets() {
         let mut dc = dc(2, 5); // 10 GPUs
         let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.3, ..Default::default() });
-        g.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
+        batch(&mut g, &mut dc, &[vm(1, Profile::P1g5gb)]);
         assert_eq!(g.heavy_capacity(), 3);
         assert_eq!(g.heavy_basket().len(), 1);
         assert_eq!(g.light_basket().len(), 1);
@@ -232,30 +267,34 @@ mod tests {
     }
 
     #[test]
-    fn heavy_quota_enforced() {
+    fn heavy_quota_enforced_with_quota_reason() {
         let mut dcx = dc(1, 10); // 10 GPUs, heavy capacity = 3
         let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.3, ..Default::default() });
         let heavy: Vec<VmSpec> = (1..=5).map(|i| vm(i, Profile::P7g40gb)).collect();
-        let out = g.place_batch(&mut dcx, &heavy, 0);
-        // Only 3 GPUs may serve 7g.40gb.
-        assert_eq!(out.iter().filter(|&&x| x).count(), 3);
+        let out = batch(&mut g, &mut dcx, &heavy);
+        // Only 3 GPUs may serve 7g.40gb; the overflow is a quota denial,
+        // not a capacity shortage (the pool still has empty GPUs).
+        assert_eq!(accepted(&out), 3);
         assert_eq!(g.heavy_basket().len(), 3);
+        for d in &out[3..] {
+            assert_eq!(d.reject_reason(), Some(RejectReason::QuotaDenied));
+        }
         // Light profiles still have the remaining GPUs.
-        let out = g.place_batch(&mut dcx, &[vm(10, Profile::P3g20gb)], 0);
-        assert_eq!(out, vec![true]);
+        let out = batch(&mut g, &mut dcx, &[vm(10, Profile::P3g20gb)]);
+        assert_eq!(accepted(&out), 1);
     }
 
     #[test]
     fn light_profiles_never_use_heavy_basket() {
         let mut dcx = dc(1, 4);
         let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.5, ..Default::default() });
-        g.place_batch(&mut dcx, &[vm(1, Profile::P7g40gb)], 0);
+        batch(&mut g, &mut dcx, &[vm(1, Profile::P7g40gb)]);
         let heavy_gpu = *g.heavy_basket().iter().next().unwrap();
         // Fill the light basket to capacity with small VMs; none may land
         // on the heavy GPU even after the 7g departs.
         dcx.remove(1);
         let small: Vec<VmSpec> = (2..30).map(|i| vm(i, Profile::P3g20gb)).collect();
-        g.place_batch(&mut dcx, &small, 0);
+        batch(&mut g, &mut dcx, &small);
         assert!(dcx.gpu(heavy_gpu).is_empty(), "light VM placed on heavy-basket GPU");
     }
 
@@ -263,12 +302,12 @@ mod tests {
     fn first_fit_within_basket_consolidates() {
         let mut dcx = dc(2, 3);
         let mut g = Grmu::new(GrmuConfig::default());
-        let out = g.place_batch(
+        let out = batch(
+            &mut g,
             &mut dcx,
             &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb), vm(3, Profile::P1g5gb)],
-            0,
         );
-        assert_eq!(out, vec![true, true, true]);
+        assert_eq!(accepted(&out), 3);
         // Both 3g VMs share the first light GPU; light basket grew for the
         // third VM only if needed.
         assert_eq!(dcx.locate(1).unwrap().gpu, dcx.locate(2).unwrap().gpu);
@@ -281,22 +320,30 @@ mod tests {
         // that must be rejected — defrag should relocate instances.
         let mut dcx = dc(1, 2); // 2 GPUs: 1 heavy + 1 light, pool empty
         let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.5, ..Default::default() });
-        let batch: Vec<VmSpec> = (1..=3).map(|i| vm(i, Profile::P1g5gb)).collect();
-        g.place_batch(&mut dcx, &batch, 0);
+        let b: Vec<VmSpec> = (1..=3).map(|i| vm(i, Profile::P1g5gb)).collect();
+        batch(&mut g, &mut dcx, &b);
         // Placed at 6, 4, 5 (default policy). Remove VM at block 6 and 5:
         dcx.remove(1);
         dcx.remove(3);
         // Now a lone 1g.5gb sits at block 4 — fragmented. A 4g.20gb fits
         // at blocks 0–3. A 2g.10gb then needs start 0, 2 or 4 — all
         // blocked → rejection → defrag relocates the stray 1g to block 6.
-        let out = g.place_batch(&mut dcx, &[vm(10, Profile::P4g20gb)], 0);
-        assert_eq!(out, vec![true]);
-        let out = g.place_batch(&mut dcx, &[vm(11, Profile::P2g10gb)], 0);
-        assert_eq!(out, vec![false]);
-        assert!(g.intra_migrations() > 0, "defrag should have relocated the stray instance");
+        let out = batch(&mut g, &mut dcx, &[vm(10, Profile::P4g20gb)]);
+        assert_eq!(accepted(&out), 1);
+        let out = batch(&mut g, &mut dcx, &[vm(11, Profile::P2g10gb)]);
+        assert_eq!(accepted(&out), 0);
+        let intra = g
+            .pending_migrations()
+            .iter()
+            .filter(|e| e.kind == MigrationKind::Intra)
+            .count();
+        assert!(intra > 0, "defrag should have relocated the stray instance");
+        // Draining hands the events to the caller exactly once.
+        assert_eq!(g.take_migrations().len(), intra);
+        assert!(g.pending_migrations().is_empty());
         // After defrag the 2g.10gb fits at start 4.
-        let out = g.place_batch(&mut dcx, &[vm(12, Profile::P2g10gb)], 0);
-        assert_eq!(out, vec![true]);
+        let out = batch(&mut g, &mut dcx, &[vm(12, Profile::P2g10gb)]);
+        assert_eq!(accepted(&out), 1);
         assert_eq!(dcx.locate(12).unwrap().placement.start, 4);
     }
 
@@ -310,18 +357,26 @@ mod tests {
         });
         // Two 3g.20gb VMs forced onto two different GPUs: fill first GPU's
         // other half with a temporary 3g, then remove it.
-        let out = g.place_batch(
+        let out = batch(
+            &mut g,
             &mut dcx,
             &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb), vm(3, Profile::P3g20gb)],
-            0,
         );
-        assert_eq!(out, vec![true, true, true]);
+        assert_eq!(accepted(&out), 3);
         // VMs 1,2 share GPU A; VM 3 on GPU B. Remove VM 1: A half-full.
         dcx.remove(1);
         let pool_before = g.pool_size();
-        g.on_tick(&mut dcx, 2 * HOUR);
+        let mut ctx = PolicyCtx::default();
+        ctx.now = 2 * HOUR;
+        g.on_tick(&mut dcx, &mut ctx);
         // VM 3 (or 2) migrated so one GPU drained back to the pool.
-        assert_eq!(g.inter_migrations(), 1);
+        let inter: Vec<_> = g
+            .pending_migrations()
+            .iter()
+            .filter(|e| e.kind == MigrationKind::Inter)
+            .collect();
+        assert_eq!(inter.len(), 1);
+        assert_ne!(inter[0].from, inter[0].to);
         assert_eq!(g.pool_size(), pool_before + 1);
         dcx.check_integrity().unwrap();
     }
@@ -334,8 +389,10 @@ mod tests {
             consolidation_interval_hours: None,
             defrag_enabled: true,
         });
-        g.place_batch(&mut dcx, &[vm(1, Profile::P3g20gb), vm(2, Profile::P4g20gb)], 0);
-        g.on_tick(&mut dcx, 100 * HOUR);
-        assert_eq!(g.inter_migrations(), 0);
+        batch(&mut g, &mut dcx, &[vm(1, Profile::P3g20gb), vm(2, Profile::P4g20gb)]);
+        let mut ctx = PolicyCtx::default();
+        ctx.now = 100 * HOUR;
+        g.on_tick(&mut dcx, &mut ctx);
+        assert!(g.pending_migrations().is_empty());
     }
 }

@@ -5,35 +5,24 @@
 //! Because an empty GPU retains a high CC after hosting a small profile,
 //! MCC tends to spread load across many GPUs — the behaviour §8.3.2
 //! observes as higher active-hardware usage.
+//!
+//! Scoring goes through the [`CcScorer`] handle of the [`PolicyCtx`], so
+//! the same policy instance can score natively or through the
+//! AOT-compiled XLA artifact with bit-identical results.
 
-use super::Policy;
-use crate::cluster::vm::{Time, VmSpec};
+use super::{classify_rejection, Decision, Policy, PolicyCtx};
+use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, GpuRef};
-use crate::mig::gpu::cc;
 use crate::mig::placement::mock_assign;
 
-/// Scoring backend for the post-allocation CC evaluation. The XLA backend
-/// (see [`crate::runtime::scorer`]) computes the same scores via the
-/// AOT-compiled batched kernel; results are bit-identical.
-pub trait CcScorer: Send {
-    /// CC of each candidate occupancy in `occs`.
-    fn score(&mut self, occs: &[u8]) -> Vec<u32>;
-}
+// Scorer types live in the crate's policy root since the decision-API
+// redesign; re-exported here for the historical import path.
+pub use super::{CcScorer, NativeScorer};
 
-/// Native table-lookup scorer (the default).
+/// MCC placement. The scoring backend comes from the [`PolicyCtx`].
 #[derive(Debug, Default)]
-pub struct NativeScorer;
-
-impl CcScorer for NativeScorer {
-    fn score(&mut self, occs: &[u8]) -> Vec<u32> {
-        occs.iter().map(|&o| cc(o)).collect()
-    }
-}
-
-/// MCC placement with a pluggable scoring backend.
 pub struct Mcc {
     refs: Vec<GpuRef>,
-    scorer: Box<dyn CcScorer>,
     /// Scratch buffers reused across decisions (hot-path allocation-free).
     cand_refs: Vec<(GpuRef, crate::mig::Placement)>,
     cand_occs: Vec<u8>,
@@ -41,17 +30,7 @@ pub struct Mcc {
 
 impl Mcc {
     pub fn new() -> Mcc {
-        Mcc::with_scorer(Box::new(NativeScorer))
-    }
-
-    pub fn with_scorer(scorer: Box<dyn CcScorer>) -> Mcc {
-        Mcc { refs: Vec::new(), scorer, cand_refs: Vec::new(), cand_occs: Vec::new() }
-    }
-}
-
-impl Default for Mcc {
-    fn default() -> Self {
-        Mcc::new()
+        Mcc::default()
     }
 }
 
@@ -60,7 +39,12 @@ impl Policy for Mcc {
         "MCC"
     }
 
-    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], _now: Time) -> Vec<bool> {
+    fn place_batch(
+        &mut self,
+        dc: &mut DataCenter,
+        vms: &[VmSpec],
+        ctx: &mut PolicyCtx,
+    ) -> Vec<Decision> {
         if self.refs.is_empty() {
             self.refs = dc.gpu_refs();
         }
@@ -84,9 +68,9 @@ impl Policy for Mcc {
                     }
                 }
                 if self.cand_refs.is_empty() {
-                    return false;
+                    return Decision::Rejected(classify_rejection(dc, vm, &self.refs));
                 }
-                let scores = self.scorer.score(&self.cand_occs);
+                let scores = ctx.scorer.score(&self.cand_occs);
                 let mut best = 0usize;
                 for (i, &s) in scores.iter().enumerate() {
                     if s > scores[best] {
@@ -95,7 +79,7 @@ impl Policy for Mcc {
                 }
                 let (r, pl) = self.cand_refs[best];
                 dc.place(vm, r, pl);
-                true
+                Decision::Placed { gpu: r, placement: pl }
             })
             .collect()
     }
@@ -106,6 +90,7 @@ mod tests {
     use super::*;
     use crate::cluster::Host;
     use crate::mig::{Placement, Profile};
+    use crate::policies::RejectReason;
 
     fn vm(id: u64, profile: Profile) -> VmSpec {
         VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
@@ -117,8 +102,10 @@ mod tests {
         // an empty GPU's post-allocation CC beats packing.
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
         let mut p = Mcc::new();
-        let out = p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb)], 0);
-        assert_eq!(out, vec![true, true]);
+        let mut ctx = PolicyCtx::default();
+        let out =
+            p.place_batch(&mut dc, &[vm(1, Profile::P3g20gb), vm(2, Profile::P3g20gb)], &mut ctx);
+        assert!(out.iter().all(|d| d.is_placed()));
         assert_ne!(dc.locate(1).unwrap().gpu, dc.locate(2).unwrap().gpu);
     }
 
@@ -141,8 +128,9 @@ mod tests {
         dc.place(&e, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P2g10gb, start: 4 });
         dc.place(&f, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P1g5gb, start: 6 });
         let mut p = Mcc::new();
-        let out = p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], 0);
-        assert_eq!(out, vec![true]);
+        let mut ctx = PolicyCtx::default();
+        let out = p.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], &mut ctx);
+        assert!(out[0].is_placed());
         assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
     }
 
@@ -150,7 +138,10 @@ mod tests {
     fn rejects_when_nothing_fits() {
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
         let mut p = Mcc::new();
-        let out = p.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P7g40gb)], 0);
-        assert_eq!(out, vec![true, false]);
+        let mut ctx = PolicyCtx::default();
+        let out =
+            p.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P7g40gb)], &mut ctx);
+        assert!(out[0].is_placed());
+        assert_eq!(out[1], Decision::Rejected(RejectReason::NoGpuFit));
     }
 }

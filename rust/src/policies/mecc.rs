@@ -4,7 +4,7 @@
 //! requested profiles (the paper picks n = 24 h, the lowest-error
 //! look-back among {1, 12, 24, 48, 96}).
 
-use super::Policy;
+use super::{classify_rejection, Decision, Policy, PolicyCtx};
 use crate::cluster::vm::{Time, VmSpec};
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::gpu::profile_capacity;
@@ -86,12 +86,17 @@ impl Policy for Mecc {
         "MECC"
     }
 
-    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], now: Time) -> Vec<bool> {
+    fn place_batch(
+        &mut self,
+        dc: &mut DataCenter,
+        vms: &[VmSpec],
+        ctx: &mut PolicyCtx,
+    ) -> Vec<Decision> {
         if self.refs.is_empty() {
             self.refs = dc.gpu_refs();
         }
         // The window reflects requests seen up to and including this batch.
-        self.observe(vms, now);
+        self.observe(vms, ctx.now);
         let probs = self.probabilities();
         // The probabilities are fixed for the whole batch, so ECC is a
         // pure function of the 8-bit occupancy — precompute all 256
@@ -122,9 +127,9 @@ impl Policy for Mecc {
                 match best {
                     Some((_, r, pl)) => {
                         dc.place(vm, r, pl);
-                        true
+                        Decision::Placed { gpu: r, placement: pl }
                     }
-                    None => false,
+                    None => Decision::Rejected(classify_rejection(dc, vm, &self.refs)),
                 }
             })
             .collect()
@@ -134,20 +139,26 @@ impl Policy for Mecc {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Host;
     use crate::cluster::vm::HOUR;
+    use crate::cluster::Host;
     use crate::mig::Profile;
 
     fn vm(id: u64, profile: Profile) -> VmSpec {
         VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
     }
 
+    fn batch_at(m: &mut Mecc, dc: &mut DataCenter, vms: &[VmSpec], now: Time) -> Vec<Decision> {
+        let mut ctx = PolicyCtx::default();
+        ctx.now = now;
+        m.place_batch(dc, vms, &mut ctx)
+    }
+
     #[test]
     fn window_prunes_old_history() {
         let mut m = Mecc::new(24);
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 8)]);
-        m.place_batch(&mut dc, &[vm(1, Profile::P1g5gb)], HOUR);
-        m.place_batch(&mut dc, &[vm(2, Profile::P7g40gb)], 30 * HOUR);
+        batch_at(&mut m, &mut dc, &[vm(1, Profile::P1g5gb)], HOUR);
+        batch_at(&mut m, &mut dc, &[vm(2, Profile::P7g40gb)], 30 * HOUR);
         // After 30h, the 1g.5gb observation (at 1h) left the 24h window.
         assert_eq!(m.counts[Profile::P1g5gb.index()], 0);
         assert_eq!(m.counts[Profile::P7g40gb.index()], 1);
@@ -186,15 +197,19 @@ mod tests {
         // Seed a 7g-dominated window (placements may be rejected; the
         // observation still counts).
         let heavy: Vec<VmSpec> = (10..30).map(|i| vm(i, Profile::P7g40gb)).collect();
-        m.place_batch(&mut dc, &heavy, HOUR);
+        batch_at(&mut m, &mut dc, &heavy, HOUR);
         let placed: Vec<u64> = (10..30).filter(|i| dc.locate(*i).is_some()).collect();
         for id in placed {
             dc.remove(id);
         }
         assert!((m.probabilities()[Profile::P7g40gb.index()]) > 0.9);
-        let out =
-            m.place_batch(&mut dc, &[vm(1, Profile::P1g5gb), vm(2, Profile::P1g5gb)], 2 * HOUR);
-        assert_eq!(out, vec![true, true]);
+        let out = batch_at(
+            &mut m,
+            &mut dc,
+            &[vm(1, Profile::P1g5gb), vm(2, Profile::P1g5gb)],
+            2 * HOUR,
+        );
+        assert!(out.iter().all(|d| d.is_placed()));
         assert_ne!(dc.locate(1).unwrap().gpu, dc.locate(2).unwrap().gpu);
     }
 
@@ -202,7 +217,9 @@ mod tests {
     fn behaves_like_mcc_under_uniform_prior_for_acceptance() {
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
         let mut m = Mecc::new(24);
-        let out = m.place_batch(&mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P1g5gb)], 0);
-        assert_eq!(out, vec![true, false]);
+        let out =
+            batch_at(&mut m, &mut dc, &[vm(1, Profile::P7g40gb), vm(2, Profile::P1g5gb)], 0);
+        assert!(out[0].is_placed());
+        assert!(!out[1].is_placed());
     }
 }

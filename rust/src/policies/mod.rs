@@ -1,10 +1,30 @@
-//! VM placement policies (§8.3).
+//! VM placement policies (§8.3) and the typed decision API they speak.
 //!
 //! All policies operate at the paper's *upper* placement level: they pick
 //! the host/GPU for each VM. The *lower* level — which blocks a GI lands
 //! on within the chosen GPU — is always NVIDIA's fixed default policy
 //! ([`crate::mig::placement::assign`]), which cannot be overridden on real
 //! hardware.
+//!
+//! ## The decision API
+//!
+//! A policy answers every request with a [`Decision`]: either
+//! [`Decision::Placed`] carrying the chosen [`GpuRef`] and the exact
+//! [`Placement`] the GI received, or [`Decision::Rejected`] carrying a
+//! [`RejectReason`] that distinguishes CPU exhaustion, RAM exhaustion,
+//! fragmentation (no fitting GI anywhere) and GRMU's basket-quota denial.
+//! Migrations performed by a policy (defragmentation, consolidation) are
+//! recorded as first-class [`MigrationEvent`]s and drained by the engine
+//! via [`Policy::take_migrations`] — the evaluation's per-reason rejection
+//! breakdown and migration-cost accounting (Eq. 3–26) fall out of these
+//! records instead of opaque booleans and counters.
+//!
+//! Policies receive a [`PolicyCtx`] with the batch: the virtual decision
+//! time, a per-run seeded RNG for randomized policies, and the shared
+//! [`CcScorer`] backend (native table lookups or the AOT-compiled XLA
+//! artifact).
+//!
+//! ## The policies
 //!
 //! * [`first_fit`] — FF: first GPU in `globalIndex` order that fits.
 //! * [`best_fit`] — BF: GPU minimizing remaining free blocks.
@@ -13,6 +33,10 @@
 //!   profile-frequency window.
 //! * [`grmu`] — the paper's contribution: dual-basket pooling,
 //!   defragmentation and consolidation (Algorithms 2–5).
+//!
+//! Construction goes through the [`PolicyRegistry`], which advertises
+//! every variant (including `grmu-db`, the dual-basket-only ablation) and
+//! reports unknown names with the accepted list.
 
 pub mod best_fit;
 pub mod first_fit;
@@ -22,79 +46,434 @@ pub mod mecc;
 
 use crate::cluster::vm::{Time, VmId, VmSpec};
 use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::gpu::cc;
 use crate::mig::placement::mock_assign;
+use crate::mig::Placement;
+use crate::util::rng::Rng;
+use std::fmt;
 
-/// A VM placement policy driven by the simulation engine. `Send` so the
+/// Why a request was rejected. The taxonomy mirrors the admission
+/// constraints of the model: host resources (Eq. 6–7), GI feasibility
+/// under the default placement (Alg. 1), and GRMU's basket quotas
+/// (Alg. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RejectReason {
+    /// No host had enough free CPU cores (Eq. 6).
+    CpuExhausted,
+    /// No host had enough free RAM (Eq. 7).
+    RamExhausted,
+    /// Some host had CPU/RAM headroom but no GPU could fit the GI —
+    /// the fragmentation case the paper's defragmentation targets.
+    NoGpuFit,
+    /// GRMU only: the responsible basket is at its quota and may not
+    /// grow, although the pool could otherwise serve the request.
+    QuotaDenied,
+}
+
+impl RejectReason {
+    /// All reasons, in [`RejectReason::index`] order.
+    pub const ALL: [RejectReason; 4] = [
+        RejectReason::CpuExhausted,
+        RejectReason::RamExhausted,
+        RejectReason::NoGpuFit,
+        RejectReason::QuotaDenied,
+    ];
+
+    /// Dense index for per-reason accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            RejectReason::CpuExhausted => 0,
+            RejectReason::RamExhausted => 1,
+            RejectReason::NoGpuFit => 2,
+            RejectReason::QuotaDenied => 3,
+        }
+    }
+
+    /// Stable name used in reports and JSON exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::CpuExhausted => "cpu_exhausted",
+            RejectReason::RamExhausted => "ram_exhausted",
+            RejectReason::NoGpuFit => "no_gpu_fit",
+            RejectReason::QuotaDenied => "quota_denied",
+        }
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-reason rejection counters, indexed by [`RejectReason::index`].
+pub type RejectCounts = [u64; 4];
+
+/// Compact `name=count` summary of the non-zero rejection counters
+/// (shared by the `simulate` and `serve` CLI outputs). Empty string
+/// when nothing was rejected.
+pub fn format_reject_counts(counts: &RejectCounts) -> String {
+    RejectReason::ALL
+        .iter()
+        .filter(|r| counts[r.index()] > 0)
+        .map(|r| format!("{}={}", r.name(), counts[r.index()]))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// One placement decision. `Placed` VMs have already been inserted into
+/// the data center by the policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Accepted: the GI landed on `gpu` at `placement`.
+    Placed { gpu: GpuRef, placement: Placement },
+    /// Refused, with the binding constraint.
+    Rejected(RejectReason),
+}
+
+impl Decision {
+    pub fn is_placed(&self) -> bool {
+        matches!(self, Decision::Placed { .. })
+    }
+
+    /// The hosting GPU when accepted.
+    pub fn gpu(&self) -> Option<GpuRef> {
+        match self {
+            Decision::Placed { gpu, .. } => Some(*gpu),
+            Decision::Rejected(_) => None,
+        }
+    }
+
+    /// The rejection cause when refused.
+    pub fn reject_reason(&self) -> Option<RejectReason> {
+        match self {
+            Decision::Placed { .. } => None,
+            Decision::Rejected(r) => Some(*r),
+        }
+    }
+}
+
+/// Migration flavor (Table 2): intra-GPU relocation vs inter-GPU move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MigrationKind {
+    /// Defragmentation relocation within one GPU (Alg. 4, `ω_ijk` only).
+    Intra,
+    /// Consolidation move to a different GPU (Alg. 5).
+    Inter,
+}
+
+/// One migration performed by a policy. For [`MigrationKind::Intra`]
+/// events `from == to` (the GI moved between blocks of the same GPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MigrationEvent {
+    pub vm: VmId,
+    pub from: GpuRef,
+    pub to: GpuRef,
+    pub kind: MigrationKind,
+}
+
+/// Scoring backend for post-allocation CC evaluation (used by MCC). The
+/// XLA backend ([`crate::runtime`], behind the `xla` feature) computes
+/// the same scores via the AOT-compiled batched kernel; results are
+/// bit-identical.
+pub trait CcScorer: Send {
+    /// CC of each candidate occupancy in `occs`.
+    fn score(&mut self, occs: &[u8]) -> Vec<u32>;
+}
+
+/// Native table-lookup scorer (the default).
+#[derive(Debug, Default)]
+pub struct NativeScorer;
+
+impl CcScorer for NativeScorer {
+    fn score(&mut self, occs: &[u8]) -> Vec<u32> {
+        occs.iter().map(|&o| cc(o)).collect()
+    }
+}
+
+/// Per-run context handed to every policy hook: the virtual clock, a
+/// deterministic RNG split from the experiment seed, and the shared CC
+/// scoring backend. Owned by the event core ([`crate::sim::EventCore`]),
+/// which advances `now` to the end of the interval being decided.
+pub struct PolicyCtx {
+    /// Virtual decision time (end of the current interval).
+    pub now: Time,
+    /// Seeded per-run generator for randomized policies.
+    pub rng: Rng,
+    /// CC scoring backend (native table or AOT/XLA artifact).
+    pub scorer: Box<dyn CcScorer>,
+}
+
+impl PolicyCtx {
+    pub fn new(seed: u64) -> PolicyCtx {
+        PolicyCtx { now: 0, rng: Rng::new(seed), scorer: Box::new(NativeScorer) }
+    }
+
+    /// Context scoring through a custom backend (e.g. the XLA artifact).
+    pub fn with_scorer(seed: u64, scorer: Box<dyn CcScorer>) -> PolicyCtx {
+        PolicyCtx { now: 0, rng: Rng::new(seed), scorer }
+    }
+}
+
+impl Default for PolicyCtx {
+    fn default() -> Self {
+        PolicyCtx::new(0)
+    }
+}
+
+/// A VM placement policy driven by the event core. `Send` so the
 /// coordinator can own a policy on its service thread.
+///
+/// Migration note: before the decision API, `place_batch` returned
+/// `Vec<bool>` and migrations were exposed as two cumulative counters
+/// (`intra_migrations`/`inter_migrations`). Decisions now carry the
+/// chosen GPU or the [`RejectReason`], and migrations are drained as
+/// [`MigrationEvent`] records via [`Policy::take_migrations`].
 pub trait Policy: Send {
     /// Short name used in reports ("FF", "GRMU", ...).
     fn name(&self) -> &str;
 
     /// Decide placement for a batch of VMs that arrived in the current
-    /// interval. Returns one accept/reject decision per VM, in order.
-    /// Accepted VMs must have been placed into `dc`.
-    fn place_batch(&mut self, dc: &mut DataCenter, vms: &[VmSpec], now: Time) -> Vec<bool>;
+    /// interval. Returns one [`Decision`] per VM, in order. Placed VMs
+    /// must have been inserted into `dc`.
+    fn place_batch(
+        &mut self,
+        dc: &mut DataCenter,
+        vms: &[VmSpec],
+        ctx: &mut PolicyCtx,
+    ) -> Vec<Decision>;
 
     /// Called after a VM departed (its resources are already released).
-    fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId) {}
+    fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId, _ctx: &mut PolicyCtx) {}
 
-    /// Periodic maintenance hook (once per simulated hour).
-    fn on_tick(&mut self, _dc: &mut DataCenter, _now: Time) {}
+    /// Periodic maintenance hook, fired once per interval at `ctx.now`.
+    fn on_tick(&mut self, _dc: &mut DataCenter, _ctx: &mut PolicyCtx) {}
 
-    /// Intra-GPU relocations performed so far (defragmentation).
-    fn intra_migrations(&self) -> u64 {
-        0
-    }
-
-    /// Inter-GPU migrations performed so far (consolidation).
-    fn inter_migrations(&self) -> u64 {
-        0
+    /// Drain the migrations performed since the last call. The event
+    /// core collects these after every batch and tick.
+    fn take_migrations(&mut self) -> Vec<MigrationEvent> {
+        Vec::new()
     }
 }
 
 /// Try to place `vm` on the specific GPU: host CPU/RAM must fit (Eq. 6–7)
-/// and the GI must fit under the default block placement. Returns success.
-pub fn try_place_on_gpu(dc: &mut DataCenter, vm: &VmSpec, r: GpuRef) -> bool {
+/// and the GI must fit under the default block placement. On success the
+/// VM is inserted into `dc` and the chosen placement returned.
+pub fn try_place_on_gpu(dc: &mut DataCenter, vm: &VmSpec, r: GpuRef) -> Option<Placement> {
     if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
-        return false;
+        return None;
     }
     match mock_assign(dc.gpu(r).occupancy(), vm.profile) {
         Some((placement, _)) => {
             dc.place(vm, r, placement);
-            true
+            Some(placement)
         }
-        None => false,
+        None => None,
     }
 }
 
-/// Construct a policy by name (CLI / figure harness entry point).
-/// `heavy_frac` and `consolidation_hours` configure GRMU only.
-pub fn by_name(
-    name: &str,
-    heavy_frac: f64,
-    consolidation_hours: Option<u64>,
-) -> Option<Box<dyn Policy>> {
-    match name.to_ascii_lowercase().as_str() {
-        "ff" | "first-fit" => Some(Box::new(first_fit::FirstFit::new())),
-        "bf" | "best-fit" => Some(Box::new(best_fit::BestFit::new())),
-        "mcc" => Some(Box::new(mcc::Mcc::new())),
-        "mecc" => Some(Box::new(mecc::Mecc::new(24))),
-        "grmu" => Some(Box::new(grmu::Grmu::new(grmu::GrmuConfig {
-            heavy_capacity_frac: heavy_frac,
-            consolidation_interval_hours: consolidation_hours,
-            ..grmu::GrmuConfig::default()
-        }))),
-        "grmu-db" => Some(Box::new(grmu::Grmu::new(grmu::GrmuConfig {
-            heavy_capacity_frac: heavy_frac,
-            consolidation_interval_hours: None,
-            defrag_enabled: false,
-        }))),
-        _ => None,
+/// Classify why `vm` fit on none of `refs` (called by policies after an
+/// unsuccessful scan). Precedence: if any candidate host has CPU *and*
+/// RAM headroom the blocker was GI fragmentation ([`RejectReason::
+/// NoGpuFit`]); otherwise CPU shortage wins over RAM shortage, matching
+/// the constraint order of the model (Eq. 6 before Eq. 7).
+pub fn classify_rejection<'a, I>(dc: &DataCenter, vm: &VmSpec, refs: I) -> RejectReason
+where
+    I: IntoIterator<Item = &'a GpuRef>,
+{
+    let mut cpu_short = false;
+    let mut ram_short = false;
+    let mut resource_fit = false;
+    for &r in refs {
+        let host = dc.host(r.host);
+        let cpu_ok = host.free_cpus() >= vm.cpus;
+        let ram_ok = host.free_ram() >= vm.ram_gb;
+        if cpu_ok && ram_ok {
+            // Resources fit here, yet the scan failed — the GI was the
+            // binding constraint somewhere, i.e. fragmentation.
+            resource_fit = true;
+        } else {
+            cpu_short |= !cpu_ok;
+            ram_short |= !ram_ok;
+        }
+    }
+    if resource_fit {
+        RejectReason::NoGpuFit
+    } else if cpu_short {
+        RejectReason::CpuExhausted
+    } else if ram_short {
+        RejectReason::RamExhausted
+    } else {
+        // No candidate GPU at all (empty basket/cluster).
+        RejectReason::NoGpuFit
     }
 }
 
-/// Names accepted by [`by_name`], for CLI help and sweeps.
-pub const POLICY_NAMES: [&str; 5] = ["ff", "bf", "mcc", "mecc", "grmu"];
+/// Builder-style configuration consumed by the [`PolicyRegistry`].
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// GRMU heavy-basket share of all GPUs (paper knee: 0.30).
+    pub heavy_frac: f64,
+    /// GRMU consolidation period; `None` disables it.
+    pub consolidation_hours: Option<u64>,
+    /// MECC profile-frequency look-back window (paper pick: 24 h).
+    pub mecc_window_hours: u64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig { heavy_frac: 0.30, consolidation_hours: None, mecc_window_hours: 24 }
+    }
+}
+
+impl PolicyConfig {
+    pub fn new() -> PolicyConfig {
+        PolicyConfig::default()
+    }
+
+    pub fn heavy_frac(mut self, frac: f64) -> PolicyConfig {
+        self.heavy_frac = frac;
+        self
+    }
+
+    pub fn consolidation_hours(mut self, hours: Option<u64>) -> PolicyConfig {
+        self.consolidation_hours = hours;
+        self
+    }
+
+    pub fn mecc_window_hours(mut self, hours: u64) -> PolicyConfig {
+        self.mecc_window_hours = hours;
+        self
+    }
+}
+
+/// One registry row: canonical name, accepted aliases, one-line summary
+/// and the constructor.
+pub struct PolicyEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    build: fn(&PolicyConfig) -> Box<dyn Policy>,
+}
+
+/// Error for a name the registry does not know; its `Display` lists the
+/// accepted names.
+#[derive(Debug, Clone)]
+pub struct UnknownPolicy {
+    pub requested: String,
+    pub known: Vec<&'static str>,
+}
+
+impl fmt::Display for UnknownPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown policy '{}'; known policies: {}", self.requested, self.known.join(", "))
+    }
+}
+
+impl std::error::Error for UnknownPolicy {}
+
+/// The policy registry: every constructible variant, including `grmu-db`
+/// (dual-basket only), with builder-style configuration. CLI, figure
+/// harness, benches and examples all construct policies through it.
+pub struct PolicyRegistry {
+    entries: Vec<PolicyEntry>,
+}
+
+impl PolicyRegistry {
+    /// The §8.3 five-policy comparison set (Figs. 10–12, Table 6).
+    pub const COMPARISON: [&'static str; 5] = ["ff", "bf", "mcc", "mecc", "grmu"];
+
+    /// The standard registry with all six variants.
+    pub fn standard() -> PolicyRegistry {
+        fn ff(_: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(first_fit::FirstFit::new())
+        }
+        fn bf(_: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(best_fit::BestFit::new())
+        }
+        fn build_mcc(_: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(mcc::Mcc::new())
+        }
+        fn build_mecc(cfg: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(mecc::Mecc::new(cfg.mecc_window_hours))
+        }
+        fn build_grmu(cfg: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(grmu::Grmu::new(grmu::GrmuConfig {
+                heavy_capacity_frac: cfg.heavy_frac,
+                consolidation_interval_hours: cfg.consolidation_hours,
+                defrag_enabled: true,
+            }))
+        }
+        fn build_grmu_db(cfg: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(grmu::Grmu::new(grmu::GrmuConfig {
+                heavy_capacity_frac: cfg.heavy_frac,
+                consolidation_interval_hours: None,
+                defrag_enabled: false,
+            }))
+        }
+        PolicyRegistry {
+            entries: vec![
+                PolicyEntry {
+                    name: "ff",
+                    aliases: &["first-fit"],
+                    summary: "First-Fit: first GPU in globalIndex order that fits",
+                    build: ff,
+                },
+                PolicyEntry {
+                    name: "bf",
+                    aliases: &["best-fit"],
+                    summary: "Best-Fit: GPU minimizing remaining free blocks",
+                    build: bf,
+                },
+                PolicyEntry {
+                    name: "mcc",
+                    aliases: &[],
+                    summary: "Max Configuration Capacity (Algorithm 6)",
+                    build: build_mcc,
+                },
+                PolicyEntry {
+                    name: "mecc",
+                    aliases: &[],
+                    summary: "Max Expected CC with a trailing profile window (Algorithm 7)",
+                    build: build_mecc,
+                },
+                PolicyEntry {
+                    name: "grmu",
+                    aliases: &[],
+                    summary: "GRMU: dual-basket pooling + defrag + consolidation (Alg. 2-5)",
+                    build: build_grmu,
+                },
+                PolicyEntry {
+                    name: "grmu-db",
+                    aliases: &[],
+                    summary: "GRMU ablation: dual-basket pooling only (no defrag/consolidation)",
+                    build: build_grmu_db,
+                },
+            ],
+        }
+    }
+
+    /// All advertised canonical names.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// Registry rows (for CLI help listings).
+    pub fn entries(&self) -> &[PolicyEntry] {
+        &self.entries
+    }
+
+    /// Construct a policy by (case-insensitive) name or alias.
+    pub fn build(&self, name: &str, cfg: &PolicyConfig) -> Result<Box<dyn Policy>, UnknownPolicy> {
+        let needle = name.to_ascii_lowercase();
+        for e in &self.entries {
+            if e.name == needle || e.aliases.contains(&needle.as_str()) {
+                return Ok((e.build)(cfg));
+            }
+        }
+        Err(UnknownPolicy { requested: name.to_string(), known: self.names() })
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -109,16 +488,72 @@ mod tests {
     #[test]
     fn try_place_respects_cpu() {
         let mut dc = DataCenter::new(vec![Host::new(0, 3, 256, 1)]);
-        assert!(!try_place_on_gpu(&mut dc, &vm(1, Profile::P1g5gb), GpuRef { host: 0, gpu: 0 }));
+        assert!(try_place_on_gpu(&mut dc, &vm(1, Profile::P1g5gb), GpuRef { host: 0, gpu: 0 })
+            .is_none());
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
-        assert!(try_place_on_gpu(&mut dc, &vm(1, Profile::P1g5gb), GpuRef { host: 0, gpu: 0 }));
+        assert!(try_place_on_gpu(&mut dc, &vm(1, Profile::P1g5gb), GpuRef { host: 0, gpu: 0 })
+            .is_some());
     }
 
     #[test]
-    fn by_name_constructs_all() {
-        for n in POLICY_NAMES {
-            assert!(by_name(n, 0.3, None).is_some(), "{n}");
+    fn registry_constructs_all_advertised_names() {
+        let registry = PolicyRegistry::standard();
+        let cfg = PolicyConfig::new().heavy_frac(0.3);
+        for n in registry.names() {
+            assert!(registry.build(n, &cfg).is_ok(), "{n}");
         }
-        assert!(by_name("nope", 0.3, None).is_none());
+        // Aliases and case-insensitivity.
+        assert!(registry.build("First-Fit", &cfg).is_ok());
+        assert!(registry.build("GRMU", &cfg).is_ok());
+    }
+
+    #[test]
+    fn registry_advertises_grmu_db() {
+        let registry = PolicyRegistry::standard();
+        assert!(registry.names().contains(&"grmu-db"));
+        assert!(PolicyRegistry::COMPARISON.iter().all(|n| registry.names().contains(n)));
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_names() {
+        let registry = PolicyRegistry::standard();
+        let err = registry.build("nope", &PolicyConfig::new()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("nope"));
+        for n in registry.names() {
+            assert!(msg.contains(n), "error should list {n}: {msg}");
+        }
+    }
+
+    #[test]
+    fn classify_cpu_vs_ram_vs_fragmentation() {
+        // CPU short, RAM fine.
+        let mut dc = DataCenter::new(vec![Host::new(0, 2, 256, 1)]);
+        let refs = dc.gpu_refs();
+        let v = vm(1, Profile::P1g5gb);
+        assert_eq!(classify_rejection(&dc, &v, &refs), RejectReason::CpuExhausted);
+        // RAM short, CPU fine.
+        let dc2 = DataCenter::new(vec![Host::new(0, 64, 4, 1)]);
+        assert_eq!(classify_rejection(&dc2, &v, &dc2.gpu_refs()), RejectReason::RamExhausted);
+        // Resources fine but GPU full → fragmentation.
+        let full = vm(9, Profile::P7g40gb);
+        let r = GpuRef { host: 0, gpu: 0 };
+        dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        assert!(try_place_on_gpu(&mut dc, &full, r).is_some());
+        assert_eq!(classify_rejection(&dc, &v, &dc.gpu_refs()), RejectReason::NoGpuFit);
+    }
+
+    #[test]
+    fn reject_reason_indices_dense() {
+        for (i, r) in RejectReason::ALL.iter().enumerate() {
+            assert_eq!(r.index(), i);
+        }
+    }
+
+    #[test]
+    fn reject_counts_format_skips_zeroes() {
+        let counts: RejectCounts = [0, 2, 1, 0];
+        assert_eq!(format_reject_counts(&counts), "ram_exhausted=2 no_gpu_fit=1");
+        assert_eq!(format_reject_counts(&[0; 4]), "");
     }
 }

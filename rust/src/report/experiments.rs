@@ -1,7 +1,7 @@
 //! Parameterized experiment runners behind the figure harness.
 
 use crate::cluster::DataCenter;
-use crate::policies::{self, grmu};
+use crate::policies::{grmu, PolicyConfig, PolicyCtx, PolicyRegistry};
 use crate::sim::{SimResult, Simulation, SimulationOptions};
 use crate::trace::{TraceConfig, Workload};
 
@@ -40,11 +40,18 @@ impl ExperimentConfig {
             ..ExperimentConfig::default()
         }
     }
+
+    /// The registry-facing policy configuration for these parameters.
+    pub fn policy_config(&self) -> PolicyConfig {
+        PolicyConfig::new()
+            .heavy_frac(self.heavy_frac)
+            .consolidation_hours(self.consolidation_hours)
+    }
 }
 
-/// Run one policy over the workload. `policy` is a [`policies::by_name`]
-/// name; `grmu_defrag=false` gives the paper's "DB" (dual-basket only)
-/// variant.
+/// Run one policy over the workload. `policy` is a
+/// [`PolicyRegistry`] name; `grmu_defrag=false` gives the paper's "DB"
+/// (dual-basket only) variant.
 pub fn run_once(
     workload: &Workload,
     policy: &str,
@@ -52,10 +59,12 @@ pub fn run_once(
     grmu_defrag: bool,
 ) -> SimResult {
     let name = if policy == "grmu" && !grmu_defrag { "grmu-db" } else { policy };
-    let policy_box =
-        policies::by_name(name, cfg.heavy_frac, cfg.consolidation_hours).expect("known policy");
+    let policy_box = PolicyRegistry::standard()
+        .build(name, &cfg.policy_config())
+        .unwrap_or_else(|e| panic!("{e}"));
     let dc = DataCenter::new(workload.hosts.clone());
     let mut sim = Simulation::new(dc, policy_box, &workload.vms);
+    sim.ctx = PolicyCtx::new(cfg.trace.seed);
     sim.options = SimulationOptions {
         drain_cap_hours: cfg.drain_cap_hours,
         ..SimulationOptions::default()
@@ -104,7 +113,7 @@ pub fn consolidation_sweep(
 
 /// §8.3: the five-policy comparison (Figs. 10–12, Table 6).
 pub fn policy_comparison(workload: &Workload, cfg: &ExperimentConfig) -> Vec<SimResult> {
-    policies::POLICY_NAMES
+    PolicyRegistry::COMPARISON
         .iter()
         .map(|name| run_once(workload, name, cfg, true))
         .collect()
@@ -138,6 +147,7 @@ pub fn grmu_config(cfg: &ExperimentConfig, defrag: bool) -> grmu::GrmuConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mig::Profile;
 
     fn quick_workload() -> (Workload, ExperimentConfig) {
         let cfg = ExperimentConfig::quick(11);
@@ -154,6 +164,13 @@ mod tests {
             assert_eq!(r.requested, w.vms.len() as u64);
             assert!(r.accepted > 0, "{} accepted nothing", r.policy);
             assert!(r.accepted <= r.requested);
+            // The typed rejection breakdown accounts for every refusal.
+            assert_eq!(
+                r.rejections.iter().sum::<u64>(),
+                r.requested - r.accepted,
+                "{}: breakdown does not sum",
+                r.policy
+            );
         }
         // Identical workload across policies: per-profile requested equal.
         for r in &results[1..] {
@@ -172,6 +189,23 @@ mod tests {
                 continue;
             }
             assert_eq!(r.migrations(), 0, "{} migrated", r.policy);
+            assert!(r.migration_events.is_empty());
+        }
+    }
+
+    #[test]
+    fn quota_denials_only_from_grmu() {
+        use crate::policies::RejectReason;
+        let (w, cfg) = quick_workload();
+        for r in policy_comparison(&w, &cfg) {
+            if r.policy != "GRMU" {
+                assert_eq!(
+                    r.rejected(RejectReason::QuotaDenied),
+                    0,
+                    "{} has no basket quota to deny on",
+                    r.policy
+                );
+            }
         }
     }
 
@@ -179,7 +213,7 @@ mod tests {
     fn capacity_sweep_monotone_heavy_acceptance() {
         let (w, cfg) = quick_workload();
         let sweep = heavy_capacity_sweep(&w, &[0.2, 0.8], &cfg);
-        let heavy_idx = crate::mig::Profile::P7g40gb.index();
+        let heavy_idx = Profile::P7g40gb.index();
         let rate = |r: &SimResult| {
             let (req, acc) = r.per_profile[heavy_idx];
             if req == 0 { 0.0 } else { acc as f64 / req as f64 }

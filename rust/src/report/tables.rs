@@ -175,7 +175,7 @@ pub fn table6(results: &[SimResult]) -> String {
     out
 }
 
-/// §8.3.3: migration summary.
+/// §8.3.3: migration summary (counts derived from the event log).
 pub fn migrations_summary(results: &[SimResult]) -> String {
     let mut out = String::from("§8.3.3 — Migrations\n");
     out.push_str(&format!(
@@ -186,11 +186,31 @@ pub fn migrations_summary(results: &[SimResult]) -> String {
         out.push_str(&format!(
             "{:>6} {:>8} {:>8} {:>10} {:>17.2}%\n",
             r.policy,
-            r.intra_migrations,
-            r.inter_migrations,
+            r.intra_migrations(),
+            r.inter_migrations(),
             r.migrations(),
             100.0 * r.migration_share()
         ));
+    }
+    out
+}
+
+/// Per-reason rejection breakdown — the diagnostic the typed decision
+/// API surfaces (CPU/RAM exhaustion vs fragmentation vs quota denial).
+pub fn rejections_breakdown(results: &[SimResult]) -> String {
+    use crate::policies::RejectReason;
+    let mut out = String::from("Rejection breakdown by reason\n");
+    out.push_str(&format!("{:>6} {:>10}", "policy", "rejected"));
+    for reason in RejectReason::ALL {
+        out.push_str(&format!(" {:>14}", reason.name()));
+    }
+    out.push('\n');
+    for r in results {
+        out.push_str(&format!("{:>6} {:>10}", r.policy, r.requested - r.accepted));
+        for reason in RejectReason::ALL {
+            out.push_str(&format!(" {:>14}", r.rejected(reason)));
+        }
+        out.push('\n');
     }
     out
 }
@@ -206,6 +226,9 @@ mod tests {
     use crate::sim::Sample;
 
     fn fake(policy: &str, acc: u64) -> SimResult {
+        use crate::cluster::GpuRef;
+        use crate::policies::{MigrationEvent, MigrationKind};
+        let g = GpuRef { host: 0, gpu: 0 };
         SimResult {
             policy: policy.into(),
             samples: vec![
@@ -215,8 +238,13 @@ mod tests {
             requested: 10,
             accepted: acc,
             per_profile: [(10, acc), (0, 0), (0, 0), (0, 0), (0, 0), (0, 0)],
-            intra_migrations: 1,
-            inter_migrations: 0,
+            rejections: [0, 0, 10 - acc, 0],
+            migration_events: vec![MigrationEvent {
+                vm: 1,
+                from: g,
+                to: g,
+                kind: MigrationKind::Intra,
+            }],
             wall_seconds: 0.0,
         }
     }
@@ -230,11 +258,20 @@ mod tests {
             fig12(&results),
             table6(&results),
             migrations_summary(&results),
+            rejections_breakdown(&results),
         ] {
             assert!(text.contains("FF"));
             assert!(text.contains("GRMU"));
             assert!(text.lines().count() >= 3);
         }
+    }
+
+    #[test]
+    fn rejection_breakdown_names_reasons() {
+        let text = rejections_breakdown(&[fake("FF", 4)]);
+        assert!(text.contains("no_gpu_fit"));
+        assert!(text.contains("quota_denied"));
+        assert!(text.contains(" 6"), "10 requested - 4 accepted: {text}");
     }
 
     #[test]

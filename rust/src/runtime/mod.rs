@@ -1,14 +1,16 @@
 //! The PJRT/XLA runtime: load AOT-compiled artifacts and run them from
-//! the Rust hot path (python never runs at request time).
+//! the Rust hot path (python never runs at request time). Built only
+//! with the `xla` cargo feature, which pulls the external `xla`/`anyhow`
+//! crates; the default build uses the native table scorer.
 //!
 //! * [`client`] — thin wrapper over the `xla` crate: CPU PJRT client,
 //!   HLO-text loading (the id-safe interchange format — see
 //!   `python/compile/aot.py`), compilation, tuple-output execution.
 //! * [`scorer`] — the batched CC scorer backed by
 //!   `artifacts/cc_scorer.hlo.txt`; implements
-//!   [`crate::policies::mcc::CcScorer`] so MCC/MECC can score through
-//!   XLA interchangeably with the native table (bit-identical results,
-//!   verified by integration tests).
+//!   [`crate::policies::CcScorer`] so MCC can score through XLA (via
+//!   `PolicyCtx::with_scorer`) interchangeably with the native table
+//!   (bit-identical results, verified by integration tests).
 
 pub mod client;
 pub mod scorer;

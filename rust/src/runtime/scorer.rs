@@ -2,13 +2,13 @@
 //!
 //! Loads `artifacts/cc_scorer.hlo.txt` (the AOT-lowered L2 graph wrapping
 //! the L1 Pallas kernel) and exposes it as a
-//! [`crate::policies::mcc::CcScorer`]: occupancy bitmasks in, CC values
+//! [`crate::policies::CcScorer`]: occupancy bitmasks in, CC values
 //! out. The artifact's batch dimension is fixed at export time; inputs
 //! are padded to the batch and results truncated. Scores are bit-identical
 //! to the native table (`mig::gpu::cc`) — asserted by tests.
 
 use super::client::{Executable, Runtime};
-use crate::policies::mcc::CcScorer;
+use crate::policies::CcScorer;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
@@ -134,9 +134,10 @@ mod tests {
         let Some(scorer) = load_scorer() else { return };
         use crate::cluster::{DataCenter, Host, VmSpec};
         use crate::mig::Profile;
-        use crate::policies::{mcc::Mcc, Policy};
+        use crate::policies::{mcc::Mcc, Policy, PolicyCtx};
         let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
-        let mut policy = Mcc::with_scorer(Box::new(scorer));
+        let mut policy = Mcc::new();
+        let mut ctx = PolicyCtx::with_scorer(0, Box::new(scorer));
         let vm = VmSpec {
             id: 1,
             profile: Profile::P3g20gb,
@@ -146,7 +147,7 @@ mod tests {
             departure: 100,
             weight: 1.0,
         };
-        let out = policy.place_batch(&mut dc, &[vm], 0);
-        assert_eq!(out, vec![true]);
+        let out = policy.place_batch(&mut dc, &[vm], &mut ctx);
+        assert!(out[0].is_placed());
     }
 }

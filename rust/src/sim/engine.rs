@@ -1,25 +1,22 @@
 //! The discrete-event simulation loop (§6's online stochastic process).
 //!
-//! Time advances hour by hour (the paper's discrete intervals). Within an
-//! hour the engine: (1) releases VMs whose departure time has passed,
-//! (2) presents the hour's arrivals to the policy as one batch, (3) fires
-//! the policy's maintenance tick (GRMU's consolidation interval is a
-//! multiple of this), and (4) samples metrics. Departures inside an hour
-//! are processed *before* that hour's arrivals — blocks freed during the
-//! interval are available to the interval's requests, as in an online
-//! system with immediate reclamation.
+//! Time advances hour by hour (the paper's discrete intervals); the
+//! actual per-interval mechanics — departures before arrivals, batch
+//! placement, maintenance tick, metric sample — live in the shared
+//! [`EventCore`], which the online coordinator drives with the same
+//! semantics. The simulator's job reduces to slicing the trace into
+//! interval batches and deciding when the run is over (trace drained or
+//! the drain cap reached).
 
-use super::metrics::{Sample, SimResult};
-use crate::cluster::vm::{Time, VmSpec, HOUR};
+use super::event_core::EventCore;
+use super::metrics::SimResult;
+use crate::cluster::vm::{VmSpec, HOUR};
 use crate::cluster::DataCenter;
-use crate::policies::Policy;
-use std::collections::BinaryHeap;
+use crate::policies::{Policy, PolicyCtx};
 
 /// Engine knobs.
 #[derive(Debug, Clone)]
 pub struct SimulationOptions {
-    /// Metric sampling period (seconds). Default: hourly.
-    pub sample_period: Time,
     /// Run integrity checks every N hours (0 = disabled). Expensive;
     /// enabled in tests.
     pub integrity_every: u64,
@@ -30,7 +27,7 @@ pub struct SimulationOptions {
 
 impl Default for SimulationOptions {
     fn default() -> Self {
-        SimulationOptions { sample_period: HOUR, integrity_every: 0, drain_cap_hours: 0 }
+        SimulationOptions { integrity_every: 0, drain_cap_hours: 0 }
     }
 }
 
@@ -40,99 +37,45 @@ pub struct Simulation<'a> {
     pub policy: Box<dyn Policy>,
     pub vms: &'a [VmSpec],
     pub options: SimulationOptions,
+    /// Per-run policy context (clock, RNG, scorer backend). Replace it
+    /// to seed the RNG or score through the XLA artifact.
+    pub ctx: PolicyCtx,
 }
 
 impl<'a> Simulation<'a> {
     pub fn new(dc: DataCenter, policy: Box<dyn Policy>, vms: &'a [VmSpec]) -> Simulation<'a> {
-        Simulation { dc, policy, vms, options: SimulationOptions::default() }
+        Simulation {
+            dc,
+            policy,
+            vms,
+            options: SimulationOptions::default(),
+            ctx: PolicyCtx::default(),
+        }
     }
 
     /// Run to completion and collect metrics.
-    pub fn run(mut self) -> SimResult {
+    pub fn run(self) -> SimResult {
         let t_start = std::time::Instant::now();
-        let mut samples = Vec::new();
-        let mut requested = 0u64;
-        let mut accepted = 0u64;
-        let mut per_profile = [(0u64, 0u64); 6];
-
-        // Departure min-heap of accepted VMs: (time, vm id).
-        let mut departures: BinaryHeap<std::cmp::Reverse<(Time, u64)>> = BinaryHeap::new();
-
         let last_arrival = self.vms.last().map(|v| v.arrival).unwrap_or(0);
+        let mut core = EventCore::new(self.dc, self.policy, self.ctx);
+        core.set_integrity_every(self.options.integrity_every);
         let mut next_vm = 0usize;
-        let mut hour = 0u64;
-
         loop {
-            let t_end = (hour + 1) * HOUR;
-
-            // (1) departures due in (hour*HOUR, t_end] — processed first.
-            while let Some(&std::cmp::Reverse((t, vm))) = departures.peek() {
-                if t > t_end {
-                    break;
-                }
-                departures.pop();
-                self.dc.remove(vm);
-                self.policy.on_departure(&mut self.dc, vm);
-            }
-
-            // (2) arrivals due in this hour, as one batch.
+            let t_end = core.interval_end();
             let batch_start = next_vm;
             while next_vm < self.vms.len() && self.vms[next_vm].arrival <= t_end {
                 next_vm += 1;
             }
-            let batch = &self.vms[batch_start..next_vm];
-            if !batch.is_empty() {
-                let decisions = self.policy.place_batch(&mut self.dc, batch, t_end);
-                debug_assert_eq!(decisions.len(), batch.len());
-                for (vm, ok) in batch.iter().zip(&decisions) {
-                    requested += 1;
-                    per_profile[vm.profile.index()].0 += 1;
-                    if *ok {
-                        accepted += 1;
-                        per_profile[vm.profile.index()].1 += 1;
-                        departures.push(std::cmp::Reverse((vm.departure.max(t_end + 1), vm.id)));
-                    }
-                }
-            }
+            core.step(&self.vms[batch_start..next_vm]);
 
-            // (3) maintenance tick.
-            self.policy.on_tick(&mut self.dc, t_end);
-
-            // (4) metric sample.
-            samples.push(Sample {
-                hour,
-                active_rate: self.dc.active_hardware_rate(),
-                acceptance_rate: if requested == 0 {
-                    1.0
-                } else {
-                    accepted as f64 / requested as f64
-                },
-                resident: self.dc.resident_count(),
-            });
-
-            if self.options.integrity_every > 0 && hour % self.options.integrity_every == 0 {
-                self.dc.check_integrity().expect("datacenter integrity");
-            }
-
-            hour += 1;
-            let drained = next_vm >= self.vms.len() && departures.is_empty();
+            let drained = next_vm >= self.vms.len() && core.pending_departures() == 0;
             let capped = self.options.drain_cap_hours > 0
-                && hour * HOUR > last_arrival + self.options.drain_cap_hours * HOUR;
+                && core.hour() * HOUR > last_arrival + self.options.drain_cap_hours * HOUR;
             if drained || capped {
                 break;
             }
         }
-
-        SimResult {
-            policy: self.policy.name().to_string(),
-            samples,
-            requested,
-            accepted,
-            per_profile,
-            intra_migrations: self.policy.intra_migrations(),
-            inter_migrations: self.policy.inter_migrations(),
-            wall_seconds: t_start.elapsed().as_secs_f64(),
-        }
+        core.into_result(t_start.elapsed().as_secs_f64())
     }
 }
 
@@ -142,6 +85,7 @@ mod tests {
     use crate::cluster::{Host, VmId};
     use crate::mig::Profile;
     use crate::policies::first_fit::FirstFit;
+    use crate::policies::RejectReason;
 
     fn vm(id: VmId, profile: Profile, arrival_h: u64, dur_h: u64) -> VmSpec {
         VmSpec {
@@ -168,6 +112,7 @@ mod tests {
         assert_eq!(res.accepted, 2);
         assert_eq!(res.requested, 2);
         assert!((res.overall_acceptance() - 1.0).abs() < 1e-12);
+        assert_eq!(res.rejections.iter().sum::<u64>(), 0);
     }
 
     #[test]
@@ -186,6 +131,8 @@ mod tests {
         assert_eq!(res.requested, 3);
         let (req, acc) = res.per_profile[Profile::P7g40gb.index()];
         assert_eq!((req, acc), (3, 2));
+        // The mid-flight rejection was a fragmentation (no-GI-fit) case.
+        assert_eq!(res.rejected(RejectReason::NoGpuFit), 1);
     }
 
     #[test]
@@ -208,12 +155,13 @@ mod tests {
     }
 
     #[test]
-    fn cpu_exhaustion_rejects() {
+    fn cpu_exhaustion_rejects_with_reason() {
         // Host with only 3 CPUs: second VM (2 CPUs each) cannot fit.
         let dc = DataCenter::new(vec![Host::new(0, 3, 256, 1)]);
         let vms = vec![vm(1, Profile::P1g5gb, 0, 5), vm(2, Profile::P1g5gb, 0, 5)];
         let res = Simulation::new(dc, Box::new(FirstFit::new()), &vms).run();
         assert_eq!(res.accepted, 1);
+        assert_eq!(res.rejected(RejectReason::CpuExhausted), 1);
     }
 
     #[test]
@@ -221,6 +169,8 @@ mod tests {
         let res = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &[]).run();
         assert_eq!(res.requested, 0);
         assert_eq!(res.samples.len(), 1);
+        // Empty-denominator convention: no request refused → 1.0.
+        assert!((res.overall_acceptance() - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -230,5 +180,18 @@ mod tests {
         sim.options.drain_cap_hours = 5;
         let res = sim.run();
         assert!(res.samples.len() < 20);
+    }
+
+    #[test]
+    fn seeded_ctx_is_deterministic() {
+        let vms = vec![vm(1, Profile::P2g10gb, 0, 5), vm(2, Profile::P2g10gb, 1, 5)];
+        let run = |seed: u64| {
+            let mut sim = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms);
+            sim.ctx = PolicyCtx::new(seed);
+            sim.run()
+        };
+        let (a, b) = (run(7), run(7));
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.samples, b.samples);
     }
 }

@@ -1,0 +1,288 @@
+//! The shared event core driving both the offline simulator and the
+//! online coordinator.
+//!
+//! Before the decision-API redesign, `sim::engine` and
+//! `coordinator::service` each carried their own departure heap, interval
+//! batching, maintenance-tick and metric-sampling loop — and disagreed on
+//! details (departure deadlines, empty-denominator conventions). The
+//! [`EventCore`] owns that loop once:
+//!
+//! * a departure min-heap of accepted VMs, released *before* the
+//!   interval's arrivals (blocks freed during an interval serve the
+//!   interval's requests, as in an online system with immediate
+//!   reclamation);
+//! * interval-batched placement through the [`Policy`] trait's typed
+//!   [`Decision`]s, with per-[`crate::policies::RejectReason`] accounting;
+//! * the per-interval maintenance tick (GRMU's consolidation clock) and
+//!   hourly metric sample;
+//! * collection of the policy's [`MigrationEvent`] records.
+//!
+//! The simulator calls [`EventCore::step`] for every interval of a trace;
+//! the coordinator calls [`EventCore::run_until`]/[`EventCore::place`] as
+//! requests arrive. Both end in the same [`SimResult`], which is what the
+//! simulator-vs-coordinator equivalence test locks down.
+
+use super::metrics::{acceptance_rate, Sample, SimResult};
+use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
+use crate::cluster::DataCenter;
+use crate::policies::{Decision, MigrationEvent, Policy, PolicyCtx, RejectCounts};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// The unified departure-heap / batch / tick / sample loop.
+pub struct EventCore {
+    pub dc: DataCenter,
+    pub policy: Box<dyn Policy>,
+    pub ctx: PolicyCtx,
+    interval: Time,
+    /// Run integrity checks every N intervals (0 = disabled). Expensive;
+    /// enabled in tests.
+    integrity_every: u64,
+    /// Departure min-heap of accepted VMs: (time, vm id).
+    departures: BinaryHeap<Reverse<(Time, VmId)>>,
+    /// Index of the currently open (not yet closed) interval.
+    hour: u64,
+    samples: Vec<Sample>,
+    requested: u64,
+    accepted: u64,
+    per_profile: [(u64, u64); 6],
+    rejections: RejectCounts,
+    migrations: Vec<MigrationEvent>,
+}
+
+impl EventCore {
+    /// A core with hourly intervals (the paper's discrete clock).
+    pub fn new(dc: DataCenter, policy: Box<dyn Policy>, ctx: PolicyCtx) -> EventCore {
+        EventCore::with_interval(dc, policy, ctx, HOUR)
+    }
+
+    pub fn with_interval(
+        dc: DataCenter,
+        policy: Box<dyn Policy>,
+        ctx: PolicyCtx,
+        interval: Time,
+    ) -> EventCore {
+        EventCore {
+            dc,
+            policy,
+            ctx,
+            interval: interval.max(1),
+            integrity_every: 0,
+            departures: BinaryHeap::new(),
+            hour: 0,
+            samples: Vec::new(),
+            requested: 0,
+            accepted: 0,
+            per_profile: [(0, 0); 6],
+            rejections: [0; 4],
+            migrations: Vec::new(),
+        }
+    }
+
+    pub fn set_integrity_every(&mut self, every: u64) {
+        self.integrity_every = every;
+    }
+
+    pub fn interval(&self) -> Time {
+        self.interval
+    }
+
+    /// Index of the open interval.
+    pub fn hour(&self) -> u64 {
+        self.hour
+    }
+
+    /// End time of the open interval.
+    pub fn interval_end(&self) -> Time {
+        (self.hour + 1) * self.interval
+    }
+
+    /// The interval that owns an arrival at `t`: intervals cover
+    /// `(w·interval, (w+1)·interval]`, with `t = 0` in interval 0.
+    pub fn window_of(&self, t: Time) -> u64 {
+        if t == 0 {
+            0
+        } else {
+            (t - 1) / self.interval
+        }
+    }
+
+    pub fn pending_departures(&self) -> usize {
+        self.departures.len()
+    }
+
+    pub fn requested(&self) -> u64 {
+        self.requested
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Rejections so far, indexed by [`crate::policies::RejectReason::index`].
+    pub fn rejections(&self) -> RejectCounts {
+        self.rejections
+    }
+
+    /// Migrations recorded so far.
+    pub fn migration_events(&self) -> &[MigrationEvent] {
+        &self.migrations
+    }
+
+    fn absorb_migrations(&mut self) {
+        self.migrations.extend(self.policy.take_migrations());
+    }
+
+    /// Release departures due by `t` (inclusive), oldest first.
+    pub fn release_due(&mut self, t: Time) {
+        while let Some(&Reverse((due, vm))) = self.departures.peek() {
+            if due > t {
+                break;
+            }
+            self.departures.pop();
+            self.dc.remove(vm);
+            self.policy.on_departure(&mut self.dc, vm, &mut self.ctx);
+        }
+    }
+
+    /// Present `batch` to the policy at the end of the open interval and
+    /// account the decisions. A VM placed in interval `w` departs no
+    /// earlier than the start of interval `w+1`.
+    pub fn place(&mut self, batch: &[VmSpec]) -> Vec<Decision> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let t_end = self.interval_end();
+        self.ctx.now = t_end;
+        let decisions = self.policy.place_batch(&mut self.dc, batch, &mut self.ctx);
+        debug_assert_eq!(decisions.len(), batch.len());
+        for (vm, d) in batch.iter().zip(&decisions) {
+            self.requested += 1;
+            self.per_profile[vm.profile.index()].0 += 1;
+            match d {
+                Decision::Placed { .. } => {
+                    self.accepted += 1;
+                    self.per_profile[vm.profile.index()].1 += 1;
+                    self.departures.push(Reverse((vm.departure.max(t_end + 1), vm.id)));
+                }
+                Decision::Rejected(reason) => self.rejections[reason.index()] += 1,
+            }
+        }
+        self.absorb_migrations();
+        decisions
+    }
+
+    /// Close the open interval: fire the maintenance tick, take the
+    /// metric sample, advance the clock.
+    pub fn close_interval(&mut self) {
+        let t_end = self.interval_end();
+        self.ctx.now = t_end;
+        self.policy.on_tick(&mut self.dc, &mut self.ctx);
+        self.absorb_migrations();
+        self.samples.push(Sample {
+            hour: self.hour,
+            active_rate: self.dc.active_hardware_rate(),
+            acceptance_rate: acceptance_rate(self.accepted, self.requested),
+            resident: self.dc.resident_count(),
+        });
+        if self.integrity_every > 0 && self.hour % self.integrity_every == 0 {
+            self.dc.check_integrity().expect("datacenter integrity");
+        }
+        self.hour += 1;
+    }
+
+    /// One full interval: departures, arrivals, tick, sample.
+    pub fn step(&mut self, batch: &[VmSpec]) -> Vec<Decision> {
+        self.release_due(self.interval_end());
+        let decisions = self.place(batch);
+        self.close_interval();
+        decisions
+    }
+
+    /// Run empty intervals until `window` is the open interval. Lets the
+    /// coordinator catch up on request-free intervals exactly as the
+    /// simulator would have (departures released per interval, ticks at
+    /// every boundary).
+    pub fn run_until(&mut self, window: u64) {
+        while self.hour < window {
+            self.step(&[]);
+        }
+    }
+
+    /// Finish: package everything into the shared result type.
+    pub fn into_result(self, wall_seconds: f64) -> SimResult {
+        SimResult {
+            policy: self.policy.name().to_string(),
+            samples: self.samples,
+            requested: self.requested,
+            accepted: self.accepted,
+            per_profile: self.per_profile,
+            rejections: self.rejections,
+            migration_events: self.migrations,
+            wall_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::Profile;
+    use crate::policies::first_fit::FirstFit;
+    use crate::policies::RejectReason;
+
+    fn core(gpus: usize) -> EventCore {
+        EventCore::new(
+            DataCenter::new(vec![Host::new(0, 64, 256, gpus)]),
+            Box::new(FirstFit::new()),
+            PolicyCtx::default(),
+        )
+    }
+
+    fn vm(id: VmId, profile: Profile, arrival: Time, departure: Time) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival, departure, weight: 1.0 }
+    }
+
+    #[test]
+    fn windows_partition_the_clock() {
+        let c = core(1);
+        assert_eq!(c.window_of(0), 0);
+        assert_eq!(c.window_of(1), 0);
+        assert_eq!(c.window_of(HOUR), 0);
+        assert_eq!(c.window_of(HOUR + 1), 1);
+        assert_eq!(c.window_of(2 * HOUR), 1);
+    }
+
+    #[test]
+    fn departures_released_before_next_window_arrivals() {
+        let mut c = core(1);
+        // Placed in interval 0, departs at 100 → deadline clamps to the
+        // start of interval 1.
+        c.step(&[vm(1, Profile::P7g40gb, 10, 100)]);
+        assert_eq!(c.pending_departures(), 1);
+        let d = c.step(&[vm(2, Profile::P7g40gb, HOUR + 5, 9 * HOUR)]);
+        assert!(d[0].is_placed(), "freed GPU must be reusable");
+    }
+
+    #[test]
+    fn empty_steps_sample_and_advance() {
+        let mut c = core(1);
+        c.run_until(3);
+        assert_eq!(c.hour(), 3);
+        let r = c.into_result(0.0);
+        assert_eq!(r.samples.len(), 3);
+        assert_eq!(r.requested, 0);
+        // Empty-denominator convention: vacuous acceptance is 1.0.
+        assert!((r.samples[0].acceptance_rate - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejection_reasons_accumulate() {
+        let mut c = core(1);
+        c.step(&[vm(1, Profile::P7g40gb, 0, 99 * HOUR), vm(2, Profile::P1g5gb, 0, 99 * HOUR)]);
+        let rej = c.rejections();
+        assert_eq!(rej[RejectReason::NoGpuFit.index()], 1);
+        assert_eq!(rej.iter().sum::<u64>(), 1);
+    }
+}

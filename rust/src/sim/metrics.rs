@@ -1,8 +1,22 @@
 //! Metric collection for the §8 evaluation.
 
 use crate::mig::profiles::ALL_PROFILES;
+use crate::policies::{MigrationEvent, MigrationKind, RejectCounts, RejectReason};
 use crate::util::json::Json;
 use crate::util::stats::auc;
+
+/// The crate-wide empty-denominator convention: with zero requests the
+/// acceptance rate is **1.0** — vacuously perfect, since nothing was
+/// refused. Shared by [`Sample`], [`SimResult::overall_acceptance`] and
+/// the coordinator's stats so offline and online reports agree on an
+/// idle system.
+pub fn acceptance_rate(accepted: u64, requested: u64) -> f64 {
+    if requested == 0 {
+        1.0
+    } else {
+        accepted as f64 / requested as f64
+    }
+}
 
 /// One hourly sample (the points of Figs. 10 and 12).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -17,7 +31,9 @@ pub struct Sample {
     pub resident: usize,
 }
 
-/// Full result of one simulation run.
+/// Full result of one run — produced identically by the offline
+/// simulator and the online coordinator (both drive the shared
+/// [`crate::sim::EventCore`]).
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub policy: String,
@@ -27,23 +43,27 @@ pub struct SimResult {
     pub accepted: u64,
     /// Per-profile `(requested, accepted)` in `ALL_PROFILES` order.
     pub per_profile: [(u64, u64); 6],
-    /// Intra-GPU relocations performed (defragmentation).
-    pub intra_migrations: u64,
-    /// Inter-GPU migrations performed (consolidation).
-    pub inter_migrations: u64,
+    /// Rejections per [`RejectReason`] (indexed by `RejectReason::index`);
+    /// sums to `requested - accepted`.
+    pub rejections: RejectCounts,
+    /// Every migration performed, in order (defragmentation relocations
+    /// and consolidation moves).
+    pub migration_events: Vec<MigrationEvent>,
     /// Wall-time of the run (for perf reporting), seconds.
     pub wall_seconds: f64,
 }
 
 impl SimResult {
     /// Overall acceptance rate at the end of the simulation (Fig. 10's
-    /// terminal value).
+    /// terminal value). Uses the crate-wide [`acceptance_rate`]
+    /// convention (1.0 with zero requests).
     pub fn overall_acceptance(&self) -> f64 {
-        if self.requested == 0 {
-            0.0
-        } else {
-            self.accepted as f64 / self.requested as f64
-        }
+        acceptance_rate(self.accepted, self.requested)
+    }
+
+    /// Rejections attributed to one reason.
+    pub fn rejected(&self, reason: RejectReason) -> u64 {
+        self.rejections[reason.index()]
     }
 
     /// Mean of hourly active-hardware rates (Fig. 6's left axis).
@@ -63,7 +83,9 @@ impl SimResult {
         auc(&pts)
     }
 
-    /// Per-profile acceptance rates (Figs. 7 and 11).
+    /// Per-profile acceptance rates (Figs. 7 and 11). Profiles with zero
+    /// requests report 0.0 here and are excluded from averages — the
+    /// figures never plot an unrequested profile.
     pub fn per_profile_acceptance(&self) -> [f64; 6] {
         let mut out = [0.0; 6];
         for (i, (req, acc)) in self.per_profile.iter().enumerate() {
@@ -89,9 +111,19 @@ impl SimResult {
         }
     }
 
+    /// Intra-GPU relocations performed (defragmentation).
+    pub fn intra_migrations(&self) -> u64 {
+        self.migration_events.iter().filter(|e| e.kind == MigrationKind::Intra).count() as u64
+    }
+
+    /// Inter-GPU migrations performed (consolidation).
+    pub fn inter_migrations(&self) -> u64 {
+        self.migration_events.iter().filter(|e| e.kind == MigrationKind::Inter).count() as u64
+    }
+
     /// Total migrations (§8.3.3).
     pub fn migrations(&self) -> u64 {
-        self.intra_migrations + self.inter_migrations
+        self.migration_events.len() as u64
     }
 
     /// Migrated share of accepted VMs (§8.3.3's "1%"). Upper bound: a VM
@@ -113,8 +145,17 @@ impl SimResult {
             ("overall_acceptance", self.overall_acceptance().into()),
             ("average_active_rate", self.average_active_rate().into()),
             ("active_auc", self.active_auc().into()),
-            ("intra_migrations", self.intra_migrations.into()),
-            ("inter_migrations", self.inter_migrations.into()),
+            ("intra_migrations", self.intra_migrations().into()),
+            ("inter_migrations", self.inter_migrations().into()),
+            (
+                "rejections",
+                Json::Obj(
+                    RejectReason::ALL
+                        .iter()
+                        .map(|r| (r.name().to_string(), self.rejected(*r).into()))
+                        .collect(),
+                ),
+            ),
             (
                 "per_profile",
                 Json::Obj(
@@ -156,8 +197,11 @@ impl SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::GpuRef;
 
     fn result() -> SimResult {
+        let g0 = GpuRef { host: 0, gpu: 0 };
+        let g1 = GpuRef { host: 0, gpu: 1 };
         SimResult {
             policy: "test".into(),
             samples: vec![
@@ -168,8 +212,12 @@ mod tests {
             requested: 10,
             accepted: 6,
             per_profile: [(2, 1), (0, 0), (4, 3), (2, 1), (1, 1), (1, 0)],
-            intra_migrations: 2,
-            inter_migrations: 1,
+            rejections: [1, 0, 2, 1],
+            migration_events: vec![
+                MigrationEvent { vm: 1, from: g0, to: g0, kind: MigrationKind::Intra },
+                MigrationEvent { vm: 2, from: g0, to: g0, kind: MigrationKind::Intra },
+                MigrationEvent { vm: 3, from: g0, to: g1, kind: MigrationKind::Inter },
+            ],
             wall_seconds: 0.1,
         }
     }
@@ -179,8 +227,28 @@ mod tests {
         let r = result();
         assert!((r.overall_acceptance() - 0.6).abs() < 1e-12);
         assert!((r.average_active_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(r.intra_migrations(), 2);
+        assert_eq!(r.inter_migrations(), 1);
         assert_eq!(r.migrations(), 3);
         assert!((r.migration_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejection_breakdown_sums_to_refused() {
+        let r = result();
+        assert_eq!(r.rejections.iter().sum::<u64>(), r.requested - r.accepted);
+        assert_eq!(r.rejected(RejectReason::CpuExhausted), 1);
+        assert_eq!(r.rejected(RejectReason::NoGpuFit), 2);
+        assert_eq!(r.rejected(RejectReason::QuotaDenied), 1);
+    }
+
+    #[test]
+    fn empty_denominator_convention_is_one() {
+        let mut r = result();
+        r.requested = 0;
+        r.accepted = 0;
+        assert!((r.overall_acceptance() - 1.0).abs() < 1e-12);
+        assert!((acceptance_rate(0, 0) - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -207,5 +275,8 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
         assert_eq!(parsed.get("accepted").unwrap().as_f64(), Some(6.0));
         assert_eq!(parsed.get("samples").unwrap().as_arr().unwrap().len(), 3);
+        let rej = parsed.get("rejections").unwrap();
+        assert_eq!(rej.get("no_gpu_fit").unwrap().as_f64(), Some(2.0));
+        assert_eq!(rej.get("quota_denied").unwrap().as_f64(), Some(1.0));
     }
 }

@@ -3,15 +3,20 @@
 //!
 //! The paper models placement as an online stochastic process on a
 //! discrete clock (§6): each interval evaluates the requests that arrived
-//! during it and makes placement decisions. [`engine`] implements that
-//! loop — hourly arrival batches, exact-time departures, periodic
-//! maintenance ticks for policies that migrate, and hourly metric
-//! sampling. [`metrics`] accumulates the quantities behind every figure
-//! of §8: acceptance rates (overall, hourly, per profile), the strict
-//! active-hardware rate, migrations and Table 6's area under the curve.
+//! during it and makes placement decisions. [`event_core`] implements
+//! that loop once — departures before arrivals, typed placement
+//! decisions, maintenance ticks, hourly metric samples — and is shared
+//! with the online coordinator, so offline simulations and live serving
+//! produce the same [`SimResult`]. [`engine`] wraps the core in a
+//! trace-replay driver; [`metrics`] accumulates the quantities behind
+//! every figure of §8: acceptance rates (overall, hourly, per profile,
+//! and per [`crate::policies::RejectReason`]), the strict active-hardware
+//! rate, migration events and Table 6's area under the curve.
 
 pub mod engine;
+pub mod event_core;
 pub mod metrics;
 
 pub use engine::{Simulation, SimulationOptions};
-pub use metrics::{Sample, SimResult};
+pub use event_core::EventCore;
+pub use metrics::{acceptance_rate, Sample, SimResult};

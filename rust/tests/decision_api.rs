@@ -1,0 +1,212 @@
+//! Integration tests for the typed placement-decision API:
+//!
+//! * the [`RejectReason`] taxonomy — one engine-level test per reason,
+//!   asserting the reason surfaces in [`SimResult`];
+//! * the simulator-vs-coordinator equivalence — both drive the shared
+//!   `EventCore`, so the same seeded trace must produce identical
+//!   acceptance counts, per-reason rejections, migration events and
+//!   sample prefixes (the regression lock for the core extraction).
+
+use grmu::cluster::vm::HOUR;
+use grmu::cluster::{DataCenter, Host, VmSpec};
+use grmu::coordinator::{Coordinator, CoordinatorConfig, Request};
+use grmu::mig::Profile;
+use grmu::policies::{PolicyConfig, PolicyCtx, PolicyRegistry, RejectReason};
+use grmu::sim::{SimResult, Simulation, SimulationOptions};
+use grmu::trace::{TraceConfig, Workload};
+
+fn vm(id: u64, profile: Profile, cpus: u32, ram_gb: u32, arrival_h: u64, dur_h: u64) -> VmSpec {
+    VmSpec {
+        id,
+        profile,
+        cpus,
+        ram_gb,
+        arrival: arrival_h * HOUR + 60,
+        departure: (arrival_h + dur_h) * HOUR + 60,
+        weight: 1.0,
+    }
+}
+
+fn run_ff(dc: DataCenter, vms: &[VmSpec]) -> SimResult {
+    let policy = PolicyRegistry::standard().build("ff", &PolicyConfig::new()).unwrap();
+    let mut sim = Simulation::new(dc, policy, vms);
+    sim.options.integrity_every = 1;
+    sim.run()
+}
+
+// ---------------------------------------------------------------- taxonomy
+
+#[test]
+fn cpu_exhaustion_surfaces_in_result() {
+    // 3 CPUs, ample RAM and GPU blocks: the second 2-CPU VM starves.
+    let dc = DataCenter::new(vec![Host::new(0, 3, 256, 1)]);
+    let vms =
+        vec![vm(1, Profile::P1g5gb, 2, 4, 0, 9), vm(2, Profile::P1g5gb, 2, 4, 0, 9)];
+    let res = run_ff(dc, &vms);
+    assert_eq!(res.accepted, 1);
+    assert_eq!(res.rejected(RejectReason::CpuExhausted), 1);
+    assert_eq!(res.rejections.iter().sum::<u64>(), 1);
+}
+
+#[test]
+fn ram_exhaustion_surfaces_in_result() {
+    // 10 GB RAM, ample CPU: the second 8 GB VM starves on RAM.
+    let dc = DataCenter::new(vec![Host::new(0, 64, 10, 1)]);
+    let vms =
+        vec![vm(1, Profile::P1g5gb, 2, 8, 0, 9), vm(2, Profile::P1g5gb, 2, 8, 0, 9)];
+    let res = run_ff(dc, &vms);
+    assert_eq!(res.accepted, 1);
+    assert_eq!(res.rejected(RejectReason::RamExhausted), 1);
+}
+
+#[test]
+fn fragmentation_no_gpu_fit_surfaces_in_result() {
+    // Host resources are plentiful; the single GPU is fully occupied by a
+    // 7g.40gb, so a 1g.5gb has no fitting GI — the fragmentation bucket.
+    let dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+    let vms =
+        vec![vm(1, Profile::P7g40gb, 2, 4, 0, 9), vm(2, Profile::P1g5gb, 2, 4, 0, 9)];
+    let res = run_ff(dc, &vms);
+    assert_eq!(res.accepted, 1);
+    assert_eq!(res.rejected(RejectReason::NoGpuFit), 1);
+}
+
+#[test]
+fn grmu_quota_denial_surfaces_in_result() {
+    // 10 single-GPU hosts, heavy quota 30% → 3 GPUs. Five 7g.40gb
+    // requests: three accepted, two rejected by the basket quota even
+    // though the pool still holds empty GPUs.
+    let dc = DataCenter::new((0..10).map(|i| Host::new(i, 64, 256, 1)).collect());
+    let vms: Vec<VmSpec> = (1..=5).map(|i| vm(i, Profile::P7g40gb, 2, 4, 0, 9)).collect();
+    let policy = PolicyRegistry::standard()
+        .build("grmu", &PolicyConfig::new().heavy_frac(0.3))
+        .unwrap();
+    let mut sim = Simulation::new(dc, policy, &vms);
+    sim.options.integrity_every = 1;
+    let res = sim.run();
+    assert_eq!(res.accepted, 3);
+    assert_eq!(res.rejected(RejectReason::QuotaDenied), 2);
+    assert_eq!(res.rejections.iter().sum::<u64>(), 2);
+}
+
+#[test]
+fn grmu_reports_fragmentation_when_pool_is_spent() {
+    // 2 GPUs (1 heavy + 1 light, empty pool): once the light GPU is full,
+    // a light request is a fragmentation rejection, not a quota denial.
+    let dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+    let vms = vec![
+        vm(1, Profile::P4g20gb, 2, 4, 0, 9),
+        vm(2, Profile::P3g20gb, 2, 4, 0, 9),
+        vm(3, Profile::P3g20gb, 2, 4, 0, 9),
+    ];
+    let policy = PolicyRegistry::standard()
+        .build("grmu", &PolicyConfig::new().heavy_frac(0.5))
+        .unwrap();
+    let res = Simulation::new(dc, policy, &vms).run();
+    assert_eq!(res.accepted, 2);
+    assert_eq!(res.rejected(RejectReason::NoGpuFit), 1);
+    assert_eq!(res.rejected(RejectReason::QuotaDenied), 0);
+}
+
+#[test]
+fn breakdown_accounts_for_every_refusal_on_generated_traces() {
+    // Acceptance criterion: per-reason breakdown for FF and GRMU on a
+    // generated trace.
+    let workload = Workload::generate(TraceConfig::small(33));
+    for name in ["ff", "grmu"] {
+        let policy = PolicyRegistry::standard()
+            .build(name, &PolicyConfig::new().heavy_frac(0.2))
+            .unwrap();
+        let dc = DataCenter::new(workload.hosts.clone());
+        let mut sim = Simulation::new(dc, policy, &workload.vms);
+        sim.options.drain_cap_hours = 10 * 24;
+        let res = sim.run();
+        assert_eq!(
+            res.rejections.iter().sum::<u64>(),
+            res.requested - res.accepted,
+            "{name}: breakdown must sum to refusals"
+        );
+    }
+}
+
+// ------------------------------------------------------------- equivalence
+
+/// Replay the trace through the coordinator, batched on the simulator's
+/// absolute interval grid, and return the shared result type.
+fn coordinator_replay(name: &str, heavy: f64, workload: &Workload, seed: u64) -> SimResult {
+    let policy = PolicyRegistry::standard()
+        .build(name, &PolicyConfig::new().heavy_frac(heavy))
+        .unwrap();
+    let mut coord = Coordinator::with_ctx(
+        DataCenter::new(workload.hosts.clone()),
+        policy,
+        CoordinatorConfig { max_batch: usize::MAX, interval: HOUR },
+        PolicyCtx::new(seed),
+    );
+    let vms = &workload.vms;
+    let mut i = 0usize;
+    while i < vms.len() {
+        let w = coord.window_of(vms[i].arrival);
+        let mut j = i;
+        while j < vms.len() && coord.window_of(vms[j].arrival) == w {
+            j += 1;
+        }
+        let batch: Vec<Request> = vms[i..j].iter().map(|&vm| Request { vm }).collect();
+        let responses = coord.decide_batch(&batch);
+        assert_eq!(responses.len(), batch.len());
+        i = j;
+    }
+    coord.close_interval();
+    coord.into_result()
+}
+
+fn simulator_replay(name: &str, heavy: f64, workload: &Workload, seed: u64) -> SimResult {
+    let policy = PolicyRegistry::standard()
+        .build(name, &PolicyConfig::new().heavy_frac(heavy))
+        .unwrap();
+    let dc = DataCenter::new(workload.hosts.clone());
+    let mut sim = Simulation::new(dc, policy, &workload.vms);
+    sim.ctx = PolicyCtx::new(seed);
+    sim.options = SimulationOptions { integrity_every: 0, drain_cap_hours: 5 * 24 };
+    sim.run()
+}
+
+#[test]
+fn simulator_and_coordinator_agree_on_the_same_trace() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    // FF (no migrations) and GRMU with defragmentation (batch-triggered
+    // intra migrations); consolidation stays off so no migration can
+    // happen outside a request batch.
+    for name in ["ff", "grmu"] {
+        let sim = simulator_replay(name, 0.25, &workload, 42);
+        let coord = coordinator_replay(name, 0.25, &workload, 42);
+        assert_eq!(coord.requested, sim.requested, "{name}: requested diverged");
+        assert_eq!(coord.accepted, sim.accepted, "{name}: accepted diverged");
+        assert_eq!(coord.per_profile, sim.per_profile, "{name}: per-profile diverged");
+        assert_eq!(coord.rejections, sim.rejections, "{name}: rejections diverged");
+        assert_eq!(
+            coord.migration_events, sim.migration_events,
+            "{name}: migration events diverged"
+        );
+        // The coordinator's closed intervals sample identically to the
+        // simulator's (the simulator continues into the drain phase).
+        assert!(
+            coord.samples.len() <= sim.samples.len(),
+            "{name}: coordinator sampled past the simulator"
+        );
+        for (h, (cs, ss)) in coord.samples.iter().zip(&sim.samples).enumerate() {
+            assert_eq!(cs, ss, "{name}: sample {h} diverged");
+        }
+    }
+}
+
+#[test]
+fn equivalence_holds_across_seeds() {
+    for seed in [7u64, 19] {
+        let workload = Workload::generate(TraceConfig::small(seed));
+        let sim = simulator_replay("grmu", 0.3, &workload, seed);
+        let coord = coordinator_replay("grmu", 0.3, &workload, seed);
+        assert_eq!((coord.requested, coord.accepted), (sim.requested, sim.accepted));
+        assert_eq!(coord.migrations(), sim.migrations(), "seed {seed}");
+    }
+}

@@ -211,8 +211,10 @@ fn ilp_matches_brute_force_on_random_cases() {
 #[test]
 fn heuristics_never_beat_the_ilp_bound() {
     use grmu::cluster::{DataCenter, Host};
-    use grmu::policies::{self, Policy};
+    use grmu::policies::{Policy, PolicyConfig, PolicyCtx, PolicyRegistry};
     let mut rng = Rng::new(31337);
+    let registry = PolicyRegistry::standard();
+    let cfg = PolicyConfig::new().heavy_frac(0.5);
     for _ in 0..6 {
         let vms: Vec<VmSpec> =
             (0..4).map(|i| vm(i as u64 + 1, *rng.pick(&ALL_PROFILES), 1.0)).collect();
@@ -222,11 +224,15 @@ fn heuristics_never_beat_the_ilp_bound() {
             prior: HashMap::new(),
         };
         let sol = IlpSolver::new(inst).solve().unwrap();
-        for policy in policies::POLICY_NAMES {
+        for policy in registry.names() {
             let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
-            let mut p = policies::by_name(policy, 0.5, None).unwrap();
-            let accepted =
-                p.place_batch(&mut dc, &vms, 0).iter().filter(|&&ok| ok).count() as f64;
+            let mut p = registry.build(policy, &cfg).unwrap();
+            let mut ctx = PolicyCtx::default();
+            let accepted = p
+                .place_batch(&mut dc, &vms, &mut ctx)
+                .iter()
+                .filter(|d| d.is_placed())
+                .count() as f64;
             assert!(
                 accepted <= sol.acceptance + 1e-6,
                 "{policy} beat the exact optimum: {accepted} > {}",

@@ -135,7 +135,7 @@ fn fig9_consolidation_tradeoff() {
     // DB performs zero migrations; consolidation variants migrate more
     // the shorter the interval.
     assert_eq!(db.migrations(), 0);
-    assert!(fast.inter_migrations >= slow.inter_migrations);
+    assert!(fast.inter_migrations() >= slow.inter_migrations());
     // Consolidation cannot hurt acceptance on the same stream.
     assert!(fast.overall_acceptance() >= disabled.overall_acceptance() - 0.02);
     // And it reduces (or equals) active hardware vs Disabled.

@@ -3,35 +3,55 @@
 //! These run the real engine over generated workloads and check the
 //! properties every correct placement system must satisfy, independent
 //! of policy quality: conservation (no VM lost or duplicated), capacity
-//! safety (CPU/RAM/blocks never oversubscribed), determinism, and
-//! identical request streams across policies.
+//! safety (CPU/RAM/blocks never oversubscribed), determinism, identical
+//! request streams across policies, and a rejection breakdown that
+//! accounts for every refusal.
 
 use grmu::cluster::{DataCenter, Host};
 use grmu::mig::gpu::consistent;
-use grmu::policies::{self, Policy};
+use grmu::policies::{Policy, PolicyConfig, PolicyCtx, PolicyRegistry};
 use grmu::sim::{Simulation, SimulationOptions};
 use grmu::trace::{TraceConfig, Workload};
+
+fn build(policy: &str, heavy: f64, consolidation: Option<u64>) -> Box<dyn grmu::policies::Policy> {
+    PolicyRegistry::standard()
+        .build(
+            policy,
+            &PolicyConfig::new().heavy_frac(heavy).consolidation_hours(consolidation),
+        )
+        .unwrap()
+}
 
 fn run(policy: &str, seed: u64, heavy: f64, consolidation: Option<u64>) -> grmu::sim::SimResult {
     let workload = Workload::generate(TraceConfig::small(seed));
     let dc = DataCenter::new(workload.hosts.clone());
-    let p = policies::by_name(policy, heavy, consolidation).unwrap();
+    let p = build(policy, heavy, consolidation);
     let mut sim = Simulation::new(dc, p, &workload.vms);
+    sim.ctx = PolicyCtx::new(seed);
     sim.options = SimulationOptions {
         integrity_every: 13,
         drain_cap_hours: 10 * 24,
-        ..Default::default()
     };
     sim.run()
 }
 
+fn all_names() -> Vec<&'static str> {
+    PolicyRegistry::standard().names()
+}
+
 #[test]
 fn all_policies_complete_with_integrity_checks_on() {
-    for policy in policies::POLICY_NAMES {
+    for policy in all_names() {
         for seed in [1u64, 2, 3] {
             let r = run(policy, seed, 0.3, Some(24));
             assert!(r.requested > 0);
             assert!(r.accepted <= r.requested, "{policy} seed {seed}");
+            // The typed breakdown accounts for every refusal.
+            assert_eq!(
+                r.rejections.iter().sum::<u64>(),
+                r.requested - r.accepted,
+                "{policy} seed {seed}: rejection breakdown mismatch"
+            );
         }
     }
 }
@@ -39,7 +59,7 @@ fn all_policies_complete_with_integrity_checks_on() {
 #[test]
 fn identical_request_streams_across_policies() {
     let results: Vec<_> =
-        policies::POLICY_NAMES.iter().map(|p| run(p, 7, 0.3, None)).collect();
+        PolicyRegistry::COMPARISON.iter().map(|p| run(p, 7, 0.3, None)).collect();
     for r in &results[1..] {
         assert_eq!(r.requested, results[0].requested);
         for i in 0..6 {
@@ -54,12 +74,12 @@ fn identical_request_streams_across_policies() {
 
 #[test]
 fn determinism_same_seed_same_result() {
-    for policy in policies::POLICY_NAMES {
+    for policy in all_names() {
         let a = run(policy, 11, 0.3, Some(12));
         let b = run(policy, 11, 0.3, Some(12));
         assert_eq!(a.accepted, b.accepted, "{policy}");
-        assert_eq!(a.intra_migrations, b.intra_migrations, "{policy}");
-        assert_eq!(a.inter_migrations, b.inter_migrations, "{policy}");
+        assert_eq!(a.rejections, b.rejections, "{policy}");
+        assert_eq!(a.migration_events, b.migration_events, "{policy}");
         assert_eq!(a.samples.len(), b.samples.len(), "{policy}");
         for (sa, sb) in a.samples.iter().zip(&b.samples) {
             assert_eq!(sa, sb, "{policy}");
@@ -80,7 +100,7 @@ fn different_seeds_differ() {
 
 #[test]
 fn cluster_fully_drains_after_last_departure() {
-    for policy in policies::POLICY_NAMES {
+    for policy in all_names() {
         let workload = Workload::generate(TraceConfig {
             num_hosts: 10,
             num_pods: 60,
@@ -89,7 +109,7 @@ fn cluster_fully_drains_after_last_departure() {
             ..TraceConfig::default()
         });
         let dc = DataCenter::new(workload.hosts.clone());
-        let p = policies::by_name(policy, 0.3, Some(6)).unwrap();
+        let p = build(policy, 0.3, Some(6));
         let mut sim = Simulation::new(dc, p, &workload.vms);
         sim.options.integrity_every = 1;
         let r = sim.run();
@@ -112,14 +132,22 @@ fn acceptance_rate_monotone_niceness_of_capacity() {
         .collect();
     let big_dc = DataCenter::new(big_hosts);
     for policy in ["ff", "bf", "grmu"] {
-        let mut p1 = policies::by_name(policy, 0.3, None).unwrap();
+        let mut p1 = build(policy, 0.3, None);
         let mut small = small_dc.clone();
-        let acc_small: usize =
-            p1.place_batch(&mut small, &workload.vms, 0).iter().filter(|&&x| x).count();
-        let mut p2 = policies::by_name(policy, 0.3, None).unwrap();
+        let mut ctx1 = PolicyCtx::default();
+        let acc_small: usize = p1
+            .place_batch(&mut small, &workload.vms, &mut ctx1)
+            .iter()
+            .filter(|d| d.is_placed())
+            .count();
+        let mut p2 = build(policy, 0.3, None);
         let mut big = big_dc.clone();
-        let acc_big: usize =
-            p2.place_batch(&mut big, &workload.vms, 0).iter().filter(|&&x| x).count();
+        let mut ctx2 = PolicyCtx::default();
+        let acc_big: usize = p2
+            .place_batch(&mut big, &workload.vms, &mut ctx2)
+            .iter()
+            .filter(|d| d.is_placed())
+            .count();
         assert!(
             acc_big >= acc_small,
             "{policy}: more capacity lowered acceptance ({acc_big} < {acc_small})"
@@ -131,11 +159,16 @@ fn acceptance_rate_monotone_niceness_of_capacity() {
 fn no_gpu_ever_oversubscribed() {
     // Deep check on a dense single-batch placement.
     let workload = Workload::generate(TraceConfig::small(21));
-    for policy in policies::POLICY_NAMES {
+    for policy in all_names() {
         let mut dc = DataCenter::new(workload.hosts.clone());
-        let mut p = policies::by_name(policy, 0.3, None).unwrap();
-        p.place_batch(&mut dc, &workload.vms, 0);
+        let mut p = build(policy, 0.3, None);
+        let mut ctx = PolicyCtx::default();
+        let decisions = p.place_batch(&mut dc, &workload.vms, &mut ctx);
         dc.check_integrity().unwrap();
+        // Every accepted decision's address matches the location index.
+        for (vm, d) in workload.vms.iter().zip(&decisions) {
+            assert_eq!(d.gpu(), dc.locate(vm.id).map(|loc| loc.gpu), "{policy}: VM {}", vm.id);
+        }
         for host in dc.hosts() {
             assert!(host.free_cpus() <= host.cpus);
             assert!(host.free_ram() <= host.ram_gb);
@@ -169,14 +202,14 @@ fn grmu_components_toggle_cleanly() {
         sim.run()
     };
     let db_only = run_grmu(false, None);
-    assert_eq!(db_only.intra_migrations, 0);
-    assert_eq!(db_only.inter_migrations, 0);
+    assert_eq!(db_only.intra_migrations(), 0);
+    assert_eq!(db_only.inter_migrations(), 0);
     let defrag = run_grmu(true, None);
-    assert_eq!(defrag.inter_migrations, 0);
+    assert_eq!(defrag.inter_migrations(), 0);
     let full = run_grmu(true, Some(6));
     // Consolidation may or may not find candidates on a small trace, but
     // it must never *reduce* intra-migrations bookkeeping.
-    assert!(full.intra_migrations + full.inter_migrations >= defrag.intra_migrations);
+    assert!(full.intra_migrations() + full.inter_migrations() >= defrag.intra_migrations());
 }
 
 #[test]

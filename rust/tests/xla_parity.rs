@@ -1,5 +1,5 @@
 //! Integration tests: the AOT-compiled XLA scorer against the native
-//! implementation, end to end.
+//! implementation, end to end. Compiled only with `--features xla`.
 //!
 //! Gated on `artifacts/cc_scorer.hlo.txt` (built by `make artifacts`);
 //! each test skips with a message when the artifact is absent so
@@ -7,8 +7,7 @@
 
 use grmu::cluster::DataCenter;
 use grmu::mig::gpu::{cc, profile_capacity};
-use grmu::policies::mcc::{Mcc, NativeScorer};
-use grmu::policies::Policy;
+use grmu::policies::{mcc::Mcc, CcScorer, NativeScorer, Policy, PolicyCtx};
 use grmu::runtime::XlaScorer;
 use grmu::trace::{TraceConfig, Workload};
 use std::path::PathBuf;
@@ -39,19 +38,16 @@ fn all_256_masks_bit_identical() {
 fn whole_trace_decision_parity() {
     let Some(path) = artifact() else { return };
     let workload = Workload::generate(TraceConfig::small(13));
-    let run = |use_xla: bool| {
+    let run = |scorer: Box<dyn CcScorer>| {
         let mut dc = DataCenter::new(workload.hosts.clone());
-        let mut policy = if use_xla {
-            Mcc::with_scorer(Box::new(XlaScorer::load(&path).unwrap()))
-        } else {
-            Mcc::with_scorer(Box::new(NativeScorer))
-        };
-        let decisions = policy.place_batch(&mut dc, &workload.vms, 0);
+        let mut policy = Mcc::new();
+        let mut ctx = PolicyCtx::with_scorer(0, scorer);
+        let decisions = policy.place_batch(&mut dc, &workload.vms, &mut ctx);
         let locs: Vec<_> = workload.vms.iter().map(|v| dc.locate(v.id)).collect();
         (decisions, locs)
     };
-    let native = run(false);
-    let xla = run(true);
+    let native = run(Box::new(NativeScorer));
+    let xla = run(Box::new(XlaScorer::load(&path).unwrap()));
     assert_eq!(native.0, xla.0, "decisions diverge");
     assert_eq!(native.1, xla.1, "placements diverge");
 }
@@ -86,11 +82,12 @@ fn coordinator_serves_through_xla_scorer() {
     use grmu::coordinator::{Coordinator, CoordinatorConfig, Request};
     use std::sync::mpsc;
     let workload = Workload::generate(TraceConfig::small(17));
-    let policy = Mcc::with_scorer(Box::new(XlaScorer::load(&path).unwrap()));
-    let coordinator = Coordinator::new(
+    let ctx = PolicyCtx::with_scorer(17, Box::new(XlaScorer::load(&path).unwrap()));
+    let coordinator = Coordinator::with_ctx(
         DataCenter::new(workload.hosts.clone()),
-        Box::new(policy),
+        Box::new(Mcc::new()),
         CoordinatorConfig::default(),
+        ctx,
     );
     let (req_tx, req_rx) = mpsc::channel();
     let (resp_tx, resp_rx) = mpsc::channel();
