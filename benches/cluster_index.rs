@@ -1,0 +1,104 @@
+//! Large-cluster placement benchmarks: the `ClusterIndex` hot path vs
+//! the brute-force full scan at 10,000 GPUs (EXPERIMENTS.md §Perf
+//! iteration 5).
+//!
+//! The cluster is loaded so that only a small tail of GPUs can host
+//! anything — the regime where a per-request O(cluster) scan hurts and
+//! the per-profile feasibility buckets pay off. Placements made during a
+//! timed batch are removed again inside the iteration, so every
+//! iteration sees the same cluster state and the measured cost is the
+//! decision path itself (plus the symmetric O(log n) index updates both
+//! variants pay).
+//!
+//! Run: `cargo bench --bench cluster_index` (BENCH_QUICK=1 for a fast
+//! pass). The acceptance bar for the index refactor is a ≥ 5× speedup
+//! per placed batch for the scanning policies at this scale.
+
+use grmu::cluster::vm::VmSpec;
+use grmu::cluster::{DataCenter, GpuRef, Host};
+use grmu::mig::{Placement, Profile};
+use grmu::policies::{Policy, PolicyConfig, PolicyCtx, PolicyRegistry};
+use grmu::util::bench::Bench;
+
+const HOSTS: u32 = 1_250;
+const GPUS_PER_HOST: usize = 8; // 10,000 GPUs total
+const FREE_TAIL_HOSTS: u32 = 2; // only the last 16 GPUs accept anything
+
+/// 10k GPUs, everything full except the last `FREE_TAIL_HOSTS` hosts —
+/// a first-fit scan wades through ~9,984 full GPUs per request.
+fn loaded_cluster() -> DataCenter {
+    let hosts: Vec<Host> = (0..HOSTS).map(|i| Host::new(i, 512, 2_048, GPUS_PER_HOST)).collect();
+    let mut dc = DataCenter::new(hosts);
+    let mut id = 1u64;
+    for h in 0..HOSTS - FREE_TAIL_HOSTS {
+        for g in 0..GPUS_PER_HOST {
+            let vm = VmSpec {
+                id,
+                profile: Profile::P7g40gb,
+                cpus: 1,
+                ram_gb: 1,
+                arrival: 0,
+                departure: 1_000_000,
+                weight: 1.0,
+            };
+            dc.place(
+                &vm,
+                GpuRef { host: h, gpu: g as u8 },
+                Placement { profile: Profile::P7g40gb, start: 0 },
+            );
+            id += 1;
+        }
+    }
+    dc
+}
+
+fn probe_batch() -> Vec<VmSpec> {
+    (0..64u64)
+        .map(|i| VmSpec {
+            id: 1_000_000 + i,
+            profile: Profile::P1g5gb,
+            cpus: 1,
+            ram_gb: 1,
+            arrival: 0,
+            departure: 1_000_000,
+            weight: 1.0,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let registry = PolicyRegistry::standard();
+    let mut dc = loaded_cluster();
+    let probe = probe_batch();
+    println!(
+        "cluster: {} GPUs, {} with free blocks; probe batch: {} × 1g.5gb",
+        HOSTS as usize * GPUS_PER_HOST,
+        dc.index().fitting_count(Profile::P1g5gb),
+        probe.len()
+    );
+
+    // FF stops at the first fit; MCC must consider every candidate —
+    // together they bracket the scanning policies.
+    for name in ["ff", "mcc"] {
+        for (mode, use_index) in [("indexed", true), ("scan", false)] {
+            let cfg = PolicyConfig::new().use_index(use_index);
+            let mut policy = registry.build(name, &cfg).unwrap();
+            let mut ctx = PolicyCtx::default();
+            b.run(&format!("place-batch-64/10k-gpus/{name}/{mode}"), || {
+                let decisions = policy.place_batch(&mut dc, &probe, &mut ctx);
+                // Undo, so each iteration replays the same state.
+                for (vm, d) in probe.iter().zip(&decisions) {
+                    if d.is_placed() {
+                        dc.remove(vm.id);
+                    }
+                }
+                decisions.len()
+            });
+        }
+        b.compare(
+            &format!("place-batch-64/10k-gpus/{name}/scan"),
+            &format!("place-batch-64/10k-gpus/{name}/indexed"),
+        );
+    }
+}

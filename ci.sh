@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate: build, test, and (when available) check
-# formatting. Run before every merge; CI runs exactly this script.
+# formatting and lints. Run before every merge; CI runs exactly this
+# script.
 #
-#   ./ci.sh            # release build + tests + fmt check
-#   SKIP_FMT=1 ./ci.sh # skip the formatting gate
+#   ./ci.sh               # release build + tests + fmt + clippy gates
+#   SKIP_FMT=1 ./ci.sh    # skip the formatting gate
+#   SKIP_CLIPPY=1 ./ci.sh # skip the lint gate
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -22,6 +24,15 @@ if [ "${SKIP_FMT:-0}" != "1" ]; then
         cargo fmt --check
     else
         echo "== cargo fmt unavailable (rustfmt not installed); skipping"
+    fi
+fi
+
+if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== cargo clippy --all-targets -- -D warnings"
+        cargo clippy --all-targets --quiet -- -D warnings
+    else
+        echo "== cargo clippy unavailable; skipping"
     fi
 fi
 

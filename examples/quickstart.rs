@@ -39,7 +39,7 @@ fn main() {
     let mut policy = Grmu::new(GrmuConfig {
         heavy_capacity_frac: 0.34,
         consolidation_interval_hours: Some(1),
-        defrag_enabled: true,
+        ..GrmuConfig::default()
     });
     let mut ctx = PolicyCtx::new(0);
 

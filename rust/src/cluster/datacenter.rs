@@ -1,9 +1,15 @@
 //! The cluster state: hosts, GPU addressing, VM placement bookkeeping and
 //! active-hardware accounting.
+//!
+//! Every mutation (`place`, `remove`, `migrate`, `relocate_within_gpu`,
+//! `repack_gpu`) also maintains the [`ClusterIndex`] incrementally, so
+//! policies query per-profile feasibility buckets and host headroom
+//! instead of scanning the cluster.
 
 use super::host::Host;
+use super::index::ClusterIndex;
 use super::vm::{VmId, VmSpec};
-use crate::mig::{GpuState, Placement};
+use crate::mig::{GpuState, Instance, Placement};
 use std::collections::HashMap;
 
 /// Address of one GPU: `(host index, GPU index within host)`. Ordering is
@@ -22,18 +28,29 @@ pub struct VmLocation {
     pub placement: Placement,
 }
 
-/// The data center: all hosts plus a VM→location index.
+/// The data center: all hosts plus a VM→location index and the
+/// incrementally maintained [`ClusterIndex`].
 #[derive(Debug, Clone, Default)]
 pub struct DataCenter {
     hosts: Vec<Host>,
     locations: HashMap<VmId, VmLocation>,
     /// CPU/RAM demands of resident VMs (needed on departure).
     demands: HashMap<VmId, (u32, u32)>,
+    /// Placement index, kept coherent by every mutation below.
+    index: ClusterIndex,
 }
 
 impl DataCenter {
     pub fn new(hosts: Vec<Host>) -> DataCenter {
-        DataCenter { hosts, locations: HashMap::new(), demands: HashMap::new() }
+        let index = ClusterIndex::build(&hosts);
+        DataCenter { hosts, locations: HashMap::new(), demands: HashMap::new(), index }
+    }
+
+    /// The placement index (per-profile feasibility buckets + host
+    /// headroom). Read-only: coherence is this type's responsibility.
+    #[inline]
+    pub fn index(&self) -> &ClusterIndex {
+        &self.index
     }
 
     pub fn hosts(&self) -> &[Host] {
@@ -68,6 +85,10 @@ impl DataCenter {
         &self.hosts[r.host as usize].gpus()[r.gpu as usize]
     }
 
+    /// Raw mutable GPU access. **Bypasses the [`ClusterIndex`]** — only
+    /// for tests that deliberately corrupt state; production mutation
+    /// goes through `place`/`remove`/`migrate`/`relocate_within_gpu`/
+    /// [`DataCenter::repack_gpu`], which keep the index coherent.
     pub fn gpu_mut(&mut self, r: GpuRef) -> &mut GpuState {
         self.hosts[r.host as usize].gpu_mut(r.gpu as usize)
     }
@@ -93,8 +114,15 @@ impl DataCenter {
     pub fn place(&mut self, vm: &VmSpec, gpu_ref: GpuRef, placement: Placement) {
         debug_assert!(self.locations.get(&vm.id).is_none(), "VM {} already placed", vm.id);
         let host = &mut self.hosts[gpu_ref.host as usize];
+        let old_free = (host.free_cpus(), host.free_ram());
         host.reserve(vm.cpus, vm.ram_gb);
-        host.gpu_mut(gpu_ref.gpu as usize).place(vm.id, placement);
+        let new_free = (host.free_cpus(), host.free_ram());
+        let gpu = host.gpu_mut(gpu_ref.gpu as usize);
+        let old_occ = gpu.occupancy();
+        gpu.place(vm.id, placement);
+        let new_occ = gpu.occupancy();
+        self.index.update_host(old_free, new_free);
+        self.index.update_gpu(gpu_ref, old_occ, new_occ);
         self.locations.insert(vm.id, VmLocation { gpu: gpu_ref, placement });
         self.demands.insert(vm.id, (vm.cpus, vm.ram_gb));
     }
@@ -105,8 +133,15 @@ impl DataCenter {
         let loc = self.locations.remove(&vm)?;
         let (cpus, ram) = self.demands.remove(&vm).unwrap_or((0, 0));
         let host = &mut self.hosts[loc.gpu.host as usize];
-        host.gpu_mut(loc.gpu.gpu as usize).remove_vm(vm);
+        let old_free = (host.free_cpus(), host.free_ram());
+        let gpu = host.gpu_mut(loc.gpu.gpu as usize);
+        let old_occ = gpu.occupancy();
+        gpu.remove_vm(vm);
+        let new_occ = gpu.occupancy();
         host.release(cpus, ram);
+        let new_free = (host.free_cpus(), host.free_ram());
+        self.index.update_host(old_free, new_free);
+        self.index.update_gpu(loc.gpu, old_occ, new_occ);
         Some(loc)
     }
 
@@ -117,15 +152,33 @@ impl DataCenter {
         let gpu_ref = loc.gpu;
         loc.placement = new_placement;
         let gpu = self.hosts[gpu_ref.host as usize].gpu_mut(gpu_ref.gpu as usize);
+        let old_occ = gpu.occupancy();
         gpu.remove_vm(vm).expect("instance present");
         gpu.place(vm, new_placement);
+        let new_occ = gpu.occupancy();
+        self.index.update_gpu(gpu_ref, old_occ, new_occ);
     }
 
-    /// Update the location index after an externally performed intra-GPU
-    /// move (used by the defragmentation re-pack, which manipulates the
-    /// `GpuState` in bulk to avoid transient overlaps).
-    pub(crate) fn relocate_index(&mut self, vm: VmId, gpu: GpuRef, placement: Placement) {
-        self.locations.insert(vm, VmLocation { gpu, placement });
+    /// Apply an intra-GPU re-pack plan (the defragmentation path): all
+    /// moving instances are removed first, then placed at their new
+    /// positions — avoiding transient overlaps when instances swap.
+    /// Host resources are untouched; the location and cluster indices
+    /// stay coherent.
+    pub fn repack_gpu(&mut self, gpu_ref: GpuRef, moves: &[(Instance, Placement)]) {
+        let gpu = self.hosts[gpu_ref.host as usize].gpu_mut(gpu_ref.gpu as usize);
+        let old_occ = gpu.occupancy();
+        for (inst, _) in moves {
+            gpu.remove_vm(inst.vm).expect("moving instance present");
+        }
+        for (inst, new_placement) in moves {
+            gpu.place(inst.vm, *new_placement);
+        }
+        let new_occ = gpu.occupancy();
+        for (inst, new_placement) in moves {
+            self.locations
+                .insert(inst.vm, VmLocation { gpu: gpu_ref, placement: *new_placement });
+        }
+        self.index.update_gpu(gpu_ref, old_occ, new_occ);
     }
 
     /// Move a VM's GI to a different GPU (inter-GPU migration). Host
@@ -135,12 +188,26 @@ impl DataCenter {
         let loc = *self.locations.get(&vm).expect("VM resident");
         let (cpus, ram) = *self.demands.get(&vm).expect("VM demands known");
         let src = loc.gpu;
-        self.hosts[src.host as usize].gpu_mut(src.gpu as usize).remove_vm(vm);
+        let src_gpu = self.hosts[src.host as usize].gpu_mut(src.gpu as usize);
+        let src_old_occ = src_gpu.occupancy();
+        src_gpu.remove_vm(vm);
+        let src_new_occ = src_gpu.occupancy();
+        self.index.update_gpu(src, src_old_occ, src_new_occ);
         if src.host != dst.host {
-            self.hosts[src.host as usize].release(cpus, ram);
-            self.hosts[dst.host as usize].reserve(cpus, ram);
+            let src_host = &mut self.hosts[src.host as usize];
+            let old_free = (src_host.free_cpus(), src_host.free_ram());
+            src_host.release(cpus, ram);
+            self.index.update_host(old_free, (src_host.free_cpus(), src_host.free_ram()));
+            let dst_host = &mut self.hosts[dst.host as usize];
+            let old_free = (dst_host.free_cpus(), dst_host.free_ram());
+            dst_host.reserve(cpus, ram);
+            self.index.update_host(old_free, (dst_host.free_cpus(), dst_host.free_ram()));
         }
-        self.hosts[dst.host as usize].gpu_mut(dst.gpu as usize).place(vm, placement);
+        let dst_gpu = self.hosts[dst.host as usize].gpu_mut(dst.gpu as usize);
+        let dst_old_occ = dst_gpu.occupancy();
+        dst_gpu.place(vm, placement);
+        let dst_new_occ = dst_gpu.occupancy();
+        self.index.update_gpu(dst, dst_old_occ, dst_new_occ);
         self.locations.insert(vm, VmLocation { gpu: dst, placement });
     }
 
@@ -187,8 +254,15 @@ impl DataCenter {
     }
 
     /// Integrity check: every location index entry matches the GPU state,
-    /// and host counters equal the sums of resident demands.
+    /// host ids equal their positions (the `globalIndex` addressing
+    /// invariant the [`ClusterIndex`] ordering relies on), and the
+    /// incrementally maintained index equals a brute-force rebuild.
     pub fn check_integrity(&self) -> Result<(), String> {
+        for (i, h) in self.hosts.iter().enumerate() {
+            if h.id as usize != i {
+                return Err(format!("host id {} at position {i}", h.id));
+            }
+        }
         for (vm, loc) in &self.locations {
             let gpu = self.gpu(loc.gpu);
             match gpu.find_vm(*vm) {
@@ -214,6 +288,9 @@ impl DataCenter {
                     }
                 }
             }
+        }
+        if ClusterIndex::build(&self.hosts) != self.index {
+            return Err("cluster index out of sync with GPU/host state".into());
         }
         Ok(())
     }
@@ -298,6 +375,37 @@ mod tests {
         let mut sorted = refs.clone();
         sorted.sort();
         assert_eq!(refs, sorted);
+    }
+
+    #[test]
+    fn index_maintained_across_lifecycle() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P7g40gb);
+        let r = GpuRef { host: 0, gpu: 0 };
+        dc.place(&vm, r, Placement { profile: Profile::P7g40gb, start: 0 });
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        dc.check_integrity().unwrap();
+        let dst = GpuRef { host: 1, gpu: 0 };
+        dc.migrate(1, dst, Placement { profile: Profile::P7g40gb, start: 0 });
+        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&dst));
+        dc.check_integrity().unwrap();
+        dc.remove(1);
+        assert!(dc.index().gpus_fitting(Profile::P7g40gb).contains(&dst));
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn repack_gpu_keeps_indices_coherent() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P1g5gb);
+        let r = GpuRef { host: 0, gpu: 0 };
+        dc.place(&vm, r, Placement { profile: Profile::P1g5gb, start: 4 });
+        let inst = dc.gpu(r).find_vm(1).unwrap();
+        dc.repack_gpu(r, &[(inst, Placement { profile: Profile::P1g5gb, start: 6 })]);
+        assert_eq!(dc.locate(1).unwrap().placement.start, 6);
+        assert_eq!(dc.gpu(r).instances()[0].placement.start, 6);
+        dc.check_integrity().unwrap();
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! The incrementally maintained cluster placement index.
+//!
+//! Every policy used to re-materialize `gpu_refs()` and linearly probe
+//! all GPUs per request — O(cluster) per VM. The [`ClusterIndex`] turns
+//! both admission questions into indexed lookups, maintained by
+//! [`super::DataCenter`] on every `place`/`remove`/`migrate`/
+//! `relocate_within_gpu`/`repack_gpu`:
+//!
+//! * **Per-profile GPU feasibility buckets**, keyed off the occupancy
+//!   mask: GPU `r` is in bucket `p` iff `profile_capacity(occ)[p] > 0`.
+//!   A state change moves a GPU in or out of a bucket only when that
+//!   profile's feasible-start count crosses zero, so an update is six
+//!   table lookups plus O(log #GPUs) set operations.
+//! * **Host headroom multisets** of free CPU / free RAM over
+//!   GPU-equipped hosts, answering "could any host take this VM?" and
+//!   the CPU-vs-RAM rejection classification from the maxima/minima in
+//!   O(log #hosts).
+//!
+//! ## Determinism contract
+//!
+//! Buckets iterate in ascending [`GpuRef`] order — the paper's
+//! `globalIndex` (Algorithm 2). A bucket is therefore exactly the
+//! feasible *subsequence* of a full `globalIndex` scan, which is what
+//! makes first-fit and best-scoring selections over bucket candidates
+//! byte-identical to the pre-index full scans (locked by the
+//! indexed-vs-scan equivalence tests in `rust/tests/decision_api.rs`).
+
+use super::datacenter::GpuRef;
+use super::host::Host;
+use crate::mig::gpu::profile_capacity;
+use crate::mig::{BlockMask, Profile};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Index over the live cluster state. Owned and kept coherent by
+/// [`super::DataCenter`]; consumers only read it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClusterIndex {
+    /// `buckets[p]` = GPUs where profile `p` currently fits, in
+    /// `globalIndex` order.
+    buckets: [BTreeSet<GpuRef>; 6],
+    /// Multiset of free CPU cores per GPU-equipped host.
+    free_cpus: BTreeMap<u32, u32>,
+    /// Multiset of free RAM (GB) per GPU-equipped host.
+    free_ram: BTreeMap<u32, u32>,
+    /// Number of GPU-equipped hosts (hosts without GPUs never receive a
+    /// VM and are excluded from the headroom multisets).
+    host_count: u32,
+}
+
+impl ClusterIndex {
+    /// Brute-force (re)construction from host/GPU states — the reference
+    /// the incremental maintenance is tested against, and what
+    /// [`super::DataCenter::check_integrity`] compares with.
+    pub fn build(hosts: &[Host]) -> ClusterIndex {
+        let mut idx = ClusterIndex::default();
+        for h in hosts {
+            if h.gpus().is_empty() {
+                continue;
+            }
+            idx.host_count += 1;
+            *idx.free_cpus.entry(h.free_cpus()).or_insert(0) += 1;
+            *idx.free_ram.entry(h.free_ram()).or_insert(0) += 1;
+            for (g, gpu) in h.gpus().iter().enumerate() {
+                let r = GpuRef { host: h.id, gpu: g as u8 };
+                let cap = profile_capacity(gpu.occupancy());
+                for (p, bucket) in idx.buckets.iter_mut().enumerate() {
+                    if cap[p] > 0 {
+                        bucket.insert(r);
+                    }
+                }
+            }
+        }
+        idx
+    }
+
+    /// GPUs where `profile` currently fits, in `globalIndex` order.
+    #[inline]
+    pub fn gpus_fitting(&self, profile: Profile) -> &BTreeSet<GpuRef> {
+        &self.buckets[profile.index()]
+    }
+
+    /// Number of GPUs with at least one feasible start for `profile`.
+    pub fn fitting_count(&self, profile: Profile) -> usize {
+        self.buckets[profile.index()].len()
+    }
+
+    /// Number of GPU-equipped hosts.
+    #[inline]
+    pub fn num_hosts(&self) -> u32 {
+        self.host_count
+    }
+
+    /// Largest free-CPU headroom of any GPU-equipped host (0 when empty).
+    #[inline]
+    pub fn max_free_cpus(&self) -> u32 {
+        self.free_cpus.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Smallest free-CPU headroom of any GPU-equipped host (0 when empty).
+    #[inline]
+    pub fn min_free_cpus(&self) -> u32 {
+        self.free_cpus.keys().next().copied().unwrap_or(0)
+    }
+
+    /// Largest free-RAM headroom of any GPU-equipped host (0 when empty).
+    #[inline]
+    pub fn max_free_ram(&self) -> u32 {
+        self.free_ram.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Smallest free-RAM headroom of any GPU-equipped host (0 when empty).
+    #[inline]
+    pub fn min_free_ram(&self) -> u32 {
+        self.free_ram.keys().next().copied().unwrap_or(0)
+    }
+
+    /// Admission precheck: `false` guarantees no GPU-equipped host has
+    /// both the CPU and the RAM for this request (the maxima already
+    /// fail one-sidedly), so a full scan can be skipped. `true` is
+    /// one-sided — the CPU and RAM maxima may live on different hosts.
+    #[inline]
+    pub fn host_may_fit(&self, cpus: u32, ram_gb: u32) -> bool {
+        self.max_free_cpus() >= cpus && self.max_free_ram() >= ram_gb
+    }
+
+    /// Re-bucket one GPU after its occupancy changed.
+    pub(crate) fn update_gpu(&mut self, r: GpuRef, old_occ: BlockMask, new_occ: BlockMask) {
+        if old_occ == new_occ {
+            return;
+        }
+        let old_cap = profile_capacity(old_occ);
+        let new_cap = profile_capacity(new_occ);
+        for (p, bucket) in self.buckets.iter_mut().enumerate() {
+            match (old_cap[p] > 0, new_cap[p] > 0) {
+                (false, true) => {
+                    bucket.insert(r);
+                }
+                (true, false) => {
+                    bucket.remove(&r);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Move one host between headroom classes after a reserve/release.
+    pub(crate) fn update_host(&mut self, old_free: (u32, u32), new_free: (u32, u32)) {
+        Self::multiset_move(&mut self.free_cpus, old_free.0, new_free.0);
+        Self::multiset_move(&mut self.free_ram, old_free.1, new_free.1);
+    }
+
+    fn multiset_move(set: &mut BTreeMap<u32, u32>, old: u32, new: u32) {
+        if old == new {
+            return;
+        }
+        match set.get_mut(&old) {
+            Some(n) if *n > 1 => *n -= 1,
+            Some(_) => {
+                set.remove(&old);
+            }
+            None => debug_assert!(false, "headroom multiset missing class {old}"),
+        }
+        *set.entry(new).or_insert(0) += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DataCenter, Host, VmSpec};
+    use crate::mig::gpu::feasible_starts;
+    use crate::mig::placement::mock_assign;
+    use crate::mig::profiles::ALL_PROFILES;
+    use crate::mig::Placement;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn spec(id: u64, profile: Profile, cpus: u32, ram_gb: u32) -> VmSpec {
+        VmSpec { id, profile, cpus, ram_gb, arrival: 0, departure: 1_000, weight: 1.0 }
+    }
+
+    fn small_dc() -> DataCenter {
+        DataCenter::new(vec![
+            Host::new(0, 16, 64, 2),
+            Host::new(1, 16, 64, 3),
+            Host::new(2, 8, 32, 1),
+        ])
+    }
+
+    #[test]
+    fn build_on_empty_cluster_buckets_every_gpu() {
+        let dc = small_dc();
+        for p in ALL_PROFILES {
+            assert_eq!(dc.index().fitting_count(p), 6, "{p}");
+        }
+        assert_eq!(dc.index().num_hosts(), 3);
+        assert_eq!(dc.index().max_free_cpus(), 16);
+        assert_eq!(dc.index().min_free_cpus(), 8);
+        assert_eq!(dc.index().max_free_ram(), 64);
+        assert_eq!(dc.index().min_free_ram(), 32);
+    }
+
+    #[test]
+    fn full_gpu_leaves_every_bucket() {
+        let mut dc = small_dc();
+        let r = GpuRef { host: 0, gpu: 0 };
+        let pl = Placement { profile: Profile::P7g40gb, start: 0 };
+        dc.place(&spec(1, Profile::P7g40gb, 4, 8), r, pl);
+        for p in ALL_PROFILES {
+            assert!(!dc.index().gpus_fitting(p).contains(&r), "{p}");
+        }
+        dc.remove(1);
+        for p in ALL_PROFILES {
+            assert!(dc.index().gpus_fitting(p).contains(&r), "{p}");
+        }
+    }
+
+    #[test]
+    fn headroom_tracks_reservations() {
+        let mut dc = small_dc();
+        let r = GpuRef { host: 0, gpu: 0 };
+        let pl = Placement { profile: Profile::P1g5gb, start: 6 };
+        dc.place(&spec(1, Profile::P1g5gb, 10, 40), r, pl);
+        assert_eq!(dc.index().max_free_cpus(), 16); // host 1 untouched
+        assert!(dc.index().host_may_fit(16, 64));
+        assert!(!dc.index().host_may_fit(17, 1));
+        assert!(!dc.index().host_may_fit(1, 65));
+        assert_eq!(dc.index().min_free_cpus(), 6); // host 0: 16 - 10
+        dc.remove(1);
+        assert_eq!(dc.index().min_free_cpus(), 8); // back to host 2's 8
+    }
+
+    #[test]
+    fn partial_occupancy_tracks_capacity_zero_crossings() {
+        let mut dc = small_dc();
+        let r = GpuRef { host: 1, gpu: 2 };
+        // 3g.20gb at start 0: blocks 0-3 occupied. 4g.20gb (start 0 only)
+        // no longer fits; 3g.20gb still fits at start 4.
+        let pl = Placement { profile: Profile::P3g20gb, start: 0 };
+        dc.place(&spec(1, Profile::P3g20gb, 1, 1), r, pl);
+        assert!(!dc.index().gpus_fitting(Profile::P4g20gb).contains(&r));
+        assert!(!dc.index().gpus_fitting(Profile::P7g40gb).contains(&r));
+        assert!(dc.index().gpus_fitting(Profile::P3g20gb).contains(&r));
+        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+    }
+
+    /// Satellite acceptance: after random place/remove/migrate/relocate
+    /// sequences, every bucket and headroom class equals a brute-force
+    /// recomputation from the GPU/host states, and `check_integrity`
+    /// (which embeds the same comparison) passes.
+    #[test]
+    fn prop_incremental_index_matches_brute_force() {
+        forall(
+            "cluster-index-vs-brute-force",
+            |r: &mut Rng| {
+                let mut dc = small_dc();
+                let mut next_vm: u64 = 1;
+                let mut resident: Vec<u64> = Vec::new();
+                let refs: Vec<GpuRef> = dc.gpu_refs();
+                for _ in 0..48 {
+                    match r.below(4) {
+                        0 | 1 => {
+                            // Place on a random feasible GPU.
+                            let gr = refs[r.below(refs.len() as u64) as usize];
+                            let profile = ALL_PROFILES[r.below(6) as usize];
+                            let (cpus, ram) = (1 + r.below(3) as u32, 1 + r.below(4) as u32);
+                            let vm = spec(next_vm, profile, cpus, ram);
+                            let host_ok = dc.host(gr.host).fits_resources(vm.cpus, vm.ram_gb);
+                            if let (true, Some((pl, _))) =
+                                (host_ok, mock_assign(dc.gpu(gr).occupancy(), profile))
+                            {
+                                dc.place(&vm, gr, pl);
+                                resident.push(next_vm);
+                                next_vm += 1;
+                            }
+                        }
+                        2 => {
+                            // Remove a random resident VM.
+                            if !resident.is_empty() {
+                                let i = r.below(resident.len() as u64) as usize;
+                                let vm = resident.swap_remove(i);
+                                dc.remove(vm);
+                            }
+                        }
+                        _ => {
+                            if resident.is_empty() {
+                                continue;
+                            }
+                            let vm = resident[r.below(resident.len() as u64) as usize];
+                            let loc = dc.locate(vm).unwrap();
+                            if r.chance(0.5) {
+                                // Intra-GPU relocation to another legal start.
+                                let occ = dc.gpu(loc.gpu).occupancy() & !loc.placement.mask();
+                                let starts: Vec<u8> =
+                                    feasible_starts(loc.placement.profile, occ).collect();
+                                let s = starts[r.below(starts.len() as u64) as usize];
+                                dc.relocate_within_gpu(
+                                    vm,
+                                    Placement { profile: loc.placement.profile, start: s },
+                                );
+                            } else {
+                                // Inter-GPU migration to a random feasible GPU.
+                                let dst = refs[r.below(refs.len() as u64) as usize];
+                                if dst == loc.gpu {
+                                    continue;
+                                }
+                                let (cpus, ram) = dc.vm_demands(vm).unwrap();
+                                if dst.host != loc.gpu.host
+                                    && !dc.host(dst.host).fits_resources(cpus, ram)
+                                {
+                                    continue;
+                                }
+                                if let Some((pl, _)) =
+                                    mock_assign(dc.gpu(dst).occupancy(), loc.placement.profile)
+                                {
+                                    dc.migrate(vm, dst, pl);
+                                }
+                            }
+                        }
+                    }
+                }
+                dc
+            },
+            |dc| {
+                let rebuilt = ClusterIndex::build(dc.hosts());
+                if &rebuilt != dc.index() {
+                    return Err("incremental index diverged from brute-force rebuild".into());
+                }
+                dc.check_integrity().map_err(|e| format!("integrity: {e}"))
+            },
+        );
+    }
+}

@@ -8,11 +8,17 @@
 //! * [`datacenter`] — the cluster state: placement/removal of VMs with a
 //!   VM→location index, GPU addressing by global index, and the paper's
 //!   strict active-hardware accounting.
+//! * [`index`] — the [`index::ClusterIndex`]: per-profile GPU feasibility
+//!   buckets and host headroom multisets, maintained incrementally by
+//!   every `DataCenter` mutation so policies answer placement queries
+//!   without scanning the cluster.
 
 pub mod datacenter;
 pub mod host;
+pub mod index;
 pub mod vm;
 
 pub use datacenter::{DataCenter, GpuRef, VmLocation};
 pub use host::Host;
+pub use index::ClusterIndex;
 pub use vm::{Time, VmId, VmSpec, HOUR};

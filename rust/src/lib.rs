@@ -17,7 +17,12 @@
 //! * [`trace`] — Alibaba-2023-like workload synthesis with the paper's
 //!   IQR outlier filter and Eq. 27–30 GPU-fraction→profile mapping.
 //! * [`cluster`] — physical machines (CPU/RAM/GPUs), VMs and the
-//!   data-center state.
+//!   data-center state, plus the [`cluster::ClusterIndex`]: per-profile
+//!   GPU feasibility buckets and host headroom multisets maintained
+//!   incrementally by every `DataCenter` mutation. The determinism
+//!   contract — buckets iterate in ascending [`cluster::GpuRef`] order,
+//!   the paper's `globalIndex` — is what makes indexed policy decisions
+//!   byte-identical to full scans.
 //! * [`policies`] — the typed placement-decision API and the five §8
 //!   policies (First-Fit, Best-Fit, MCC, MECC, GRMU). A policy answers
 //!   each request with a [`policies::Decision`] — `Placed` with the
@@ -27,7 +32,9 @@
 //!   moves as [`policies::MigrationEvent`] records. Policies are built
 //!   through the [`policies::PolicyRegistry`] and run against a
 //!   [`policies::PolicyCtx`] (virtual clock, seeded RNG, pluggable CC
-//!   scorer).
+//!   scorer). Placement candidates come from the cluster index;
+//!   `PolicyConfig::use_index(false)` rebuilds the brute-force
+//!   full-scan variants used by the equivalence tests and benches.
 //! * [`sim`] — the shared [`sim::EventCore`] (departure heap, interval
 //!   batching, maintenance ticks, metric sampling) plus the offline
 //!   trace-replay [`sim::Simulation`] built on it. Results carry
@@ -44,7 +51,9 @@
 //!   metrics (latency percentiles, throughput) on top. Coordinator runs
 //!   report the simulator's [`sim::SimResult`].
 //! * [`report`] — renderers that regenerate every table and figure of the
-//!   paper's evaluation section.
+//!   paper's evaluation section, plus the parallel multi-seed ×
+//!   multi-policy sweep runner behind the `sweep` CLI subcommand
+//!   (scoped threads, deterministic seed-major output).
 //!
 //! ## Migration note (decision API)
 //!

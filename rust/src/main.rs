@@ -8,6 +8,9 @@
 //!   (`--fig 5|6|7|8|9|10|11|12`, `--table 6`, or `--all`).
 //! * `analyze` — the §5.1 configuration-space analysis
 //!   (`--two-gpu` for the 261,726-pair sweep).
+//! * `sweep` — parallel multi-seed × multi-policy sweep (scoped
+//!   threads), one `SimResult` per `(seed, policy)` cell plus per-policy
+//!   mean ± std summaries.
 //! * `trace` — emit the synthetic workload as CSV (the loader's format).
 //! * `serve` — run the online placement coordinator on a trace replay,
 //!   optionally scoring through the AOT-compiled XLA artifact.
@@ -29,6 +32,7 @@ fn main() {
         Some("figures") => cmd_figures(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("ablate") => cmd_ablate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("trace") => cmd_trace(&args),
         Some("serve") => coordinator::cli::run(&args),
         _ => print_help(),
@@ -69,6 +73,8 @@ fn print_help() {
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
+           sweep     [--seeds 1,2,3] [--policies ff,grmu] [--threads N]\n\
+                     [--quick] [--json FILE]   parallel seeds × policies sweep\n\
            trace     [--seed N] [--out FILE.csv]      dump the synthetic trace\n\
            serve     --policy NAME [--scorer native|xla] [--quick]   online coordinator\n\
          \n\
@@ -173,6 +179,66 @@ fn cmd_simulate(args: &Args) {
         println!("  rejections: {}", grmu::policies::format_reject_counts(&result.rejections));
     }
     write_json(args, &result.to_json());
+}
+
+fn cmd_sweep(args: &Args) {
+    let cfg = experiment_config(args);
+    let registry = PolicyRegistry::standard();
+    let policies: Vec<String> =
+        args.list_or("policies", &PolicyRegistry::COMPARISON.map(|s| s.to_string()));
+    // Fail on typos before any (expensive) workload generation.
+    for p in &policies {
+        if let Err(e) = registry.build(p, &PolicyConfig::new()) {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+    let seeds: Vec<u64> = args.list_or("seeds", &[1u64, 2, 3, 4, 5]);
+    let threads: usize = args.num_or("threads", 0usize);
+    eprintln!(
+        "sweep: {} seeds × {} policies on {} threads",
+        seeds.len(),
+        policies.len(),
+        if threads == 0 { "auto".to_string() } else { threads.to_string() }
+    );
+    let t0 = std::time::Instant::now();
+    let runs = experiments::sweep(&cfg, &seeds, &policies, threads);
+    println!(
+        "{:<8} {:<8} {:>12} {:>16} {:>8} {:>8} {:>9}",
+        "seed", "policy", "acceptance", "avg active hw", "intra", "inter", "wall"
+    );
+    for run in &runs {
+        println!(
+            "{:<8} {:<8} {:>12.4} {:>16.4} {:>8} {:>8} {:>8.2}s",
+            run.seed,
+            run.policy,
+            run.result.overall_acceptance(),
+            run.result.average_active_rate(),
+            run.result.intra_migrations(),
+            run.result.inter_migrations(),
+            run.result.wall_seconds,
+        );
+    }
+    println!("\nper-policy summary over {} seeds (mean ± std):", seeds.len());
+    for (policy, acc_mean, acc_std, act_mean, act_std) in experiments::sweep_summary(&runs) {
+        println!(
+            "{policy:<8} acceptance {acc_mean:.4} ± {acc_std:.4}   \
+             avg active hw {act_mean:.4} ± {act_std:.4}"
+        );
+    }
+    eprintln!("sweep wall time: {:.2}s", t0.elapsed().as_secs_f64());
+    let json = Json::arr(
+        runs.iter()
+            .map(|run| {
+                Json::obj(vec![
+                    ("seed", run.seed.into()),
+                    ("policy", run.policy.as_str().into()),
+                    ("result", run.result.to_json()),
+                ])
+            })
+            .collect(),
+    );
+    write_json(args, &json);
 }
 
 fn cmd_figures(args: &Args) {

@@ -102,7 +102,7 @@ impl GpuState {
     /// Number of free memory blocks.
     #[inline]
     pub fn free_blocks(&self) -> u32 {
-        8 - self.occ.count_ones()
+        NUM_BLOCKS as u32 - self.occ.count_ones()
     }
 
     /// True if nothing is allocated.

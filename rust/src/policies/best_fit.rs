@@ -1,20 +1,34 @@
 //! Best-Fit (BF, §8.3): among all GPUs that can host the request, pick
-//! the one minimizing the blocks left unallocated after placement.
+//! the one minimizing the blocks left unallocated after placement. The
+//! candidate set comes from the cluster index (decision-identical to the
+//! historical full scan; see [`super::visit_candidates`]).
 
-use super::{classify_rejection, Decision, Policy, PolicyCtx};
+use super::{reject_cluster, visit_candidates, Decision, Policy, PolicyCtx};
 use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::placement::mock_assign;
+use crate::mig::{Placement, NUM_BLOCKS};
 
 /// Best-Fit placement.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct BestFit {
-    refs: Vec<GpuRef>,
+    use_index: bool,
 }
 
 impl BestFit {
     pub fn new() -> BestFit {
-        BestFit::default()
+        BestFit::with_index(true)
+    }
+
+    /// `use_index = false` restores the brute-force full scan.
+    pub fn with_index(use_index: bool) -> BestFit {
+        BestFit { use_index }
+    }
+}
+
+impl Default for BestFit {
+    fn default() -> Self {
+        BestFit::new()
     }
 }
 
@@ -29,38 +43,39 @@ impl Policy for BestFit {
         vms: &[VmSpec],
         _ctx: &mut PolicyCtx,
     ) -> Vec<Decision> {
-        if self.refs.is_empty() {
-            self.refs = dc.gpu_refs();
-        }
         vms.iter()
             .map(|vm| {
-                let mut best: Option<(u32, GpuRef, crate::mig::Placement)> = None;
+                if self.use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                    return reject_cluster(dc, vm, self.use_index);
+                }
+                let mut best: Option<(u32, GpuRef, Placement)> = None;
                 let mut skip_host: Option<u32> = None;
-                for &r in &self.refs {
+                visit_candidates(dc, vm.profile, self.use_index, |r| {
                     if skip_host == Some(r.host) {
-                        continue;
+                        return true;
                     }
                     if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
                         skip_host = Some(r.host);
-                        continue;
+                        return true;
                     }
                     if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
-                        let remaining = 8 - new_occ.count_ones();
+                        let remaining = NUM_BLOCKS as u32 - new_occ.count_ones();
                         // Strictly-less keeps the first (lowest index) on ties.
                         if best.map(|(b, _, _)| remaining < b).unwrap_or(true) {
                             best = Some((remaining, r, pl));
                             if remaining == 0 {
-                                break; // perfect fit
+                                return false; // perfect fit
                             }
                         }
                     }
-                }
+                    true
+                });
                 match best {
                     Some((_, r, pl)) => {
                         dc.place(vm, r, pl);
                         Decision::Placed { gpu: r, placement: pl }
                     }
-                    None => Decision::Rejected(classify_rejection(dc, vm, &self.refs)),
+                    None => reject_cluster(dc, vm, self.use_index),
                 }
             })
             .collect()

@@ -1,21 +1,37 @@
 //! First-Fit (FF): the commercial-solution baseline of §8.3.
 //!
-//! Sequentially scans hosts and their GPUs in `globalIndex` order and
-//! places the request on the first compatible resource.
+//! Walks the candidate GPUs in `globalIndex` order and places the
+//! request on the first compatible resource. With the cluster index the
+//! walk covers only the GPUs where the profile currently fits, which is
+//! decision-identical to the historical full scan (see
+//! [`super::visit_candidates`]).
 
-use super::{classify_rejection, try_place_on_gpu, Decision, Policy, PolicyCtx};
+use super::{probe_gpu, reject_cluster, visit_candidates, Decision, Policy, PolicyCtx};
 use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::Placement;
 
 /// First-Fit placement.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct FirstFit {
-    refs: Vec<GpuRef>,
+    use_index: bool,
 }
 
 impl FirstFit {
     pub fn new() -> FirstFit {
-        FirstFit::default()
+        FirstFit::with_index(true)
+    }
+
+    /// `use_index = false` restores the brute-force full scan (the
+    /// equivalence-test / benchmark reference).
+    pub fn with_index(use_index: bool) -> FirstFit {
+        FirstFit { use_index }
+    }
+}
+
+impl Default for FirstFit {
+    fn default() -> Self {
+        FirstFit::new()
     }
 }
 
@@ -30,27 +46,28 @@ impl Policy for FirstFit {
         vms: &[VmSpec],
         _ctx: &mut PolicyCtx,
     ) -> Vec<Decision> {
-        if self.refs.is_empty() {
-            self.refs = dc.gpu_refs();
-        }
         vms.iter()
             .map(|vm| {
-                // Skip hosts that cannot fit CPU/RAM without probing
-                // every GPU on them.
-                let mut skip_host: Option<u32> = None;
-                for &r in &self.refs {
-                    if skip_host == Some(r.host) {
-                        continue;
-                    }
-                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
-                        skip_host = Some(r.host);
-                        continue;
-                    }
-                    if let Some(placement) = try_place_on_gpu(dc, vm, r) {
-                        return Decision::Placed { gpu: r, placement };
-                    }
+                if self.use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                    // No host anywhere has the CPU (or the RAM): the scan
+                    // below cannot succeed, skip straight to the reason.
+                    return reject_cluster(dc, vm, self.use_index);
                 }
-                Decision::Rejected(classify_rejection(dc, vm, &self.refs))
+                let mut found: Option<(GpuRef, Placement)> = None;
+                visit_candidates(dc, vm.profile, self.use_index, |r| {
+                    if let Some(pl) = probe_gpu(dc, vm, r) {
+                        found = Some((r, pl));
+                        return false;
+                    }
+                    true
+                });
+                match found {
+                    Some((r, pl)) => {
+                        dc.place(vm, r, pl);
+                        Decision::Placed { gpu: r, placement: pl }
+                    }
+                    None => reject_cluster(dc, vm, self.use_index),
+                }
             })
             .collect()
     }

@@ -45,6 +45,9 @@ pub fn consolidate_light_basket(
             continue;
         };
         // Find a target whose free half accepts the source's profile.
+        // (Feasibility is a single `mock_assign` table lookup per target,
+        // so this path deliberately stays index-free: it behaves the same
+        // under both candidate-iteration modes of the policies.)
         let mut chosen: Option<(usize, crate::mig::Placement)> = None;
         for (j, &target) in candidates.iter().enumerate() {
             if j == i {

@@ -80,23 +80,15 @@ pub fn defragment_light_basket(dc: &mut DataCenter, basket: &BTreeSet<GpuRef>) -
     apply_repack(dc, target, &moves)
 }
 
-/// Apply a re-pack plan: remove all moving instances first, then place at
-/// their new positions (avoids transient overlaps when instances swap).
-/// Returns the performed relocations as migration events.
+/// Apply a re-pack plan through [`DataCenter::repack_gpu`] (which keeps
+/// the location and cluster indices coherent while avoiding transient
+/// overlaps). Returns the performed relocations as migration events.
 pub fn apply_repack(
     dc: &mut DataCenter,
     gpu_ref: GpuRef,
     moves: &[(Instance, Placement)],
 ) -> Vec<MigrationEvent> {
-    let gpu = dc.gpu_mut(gpu_ref);
-    for (inst, _) in moves {
-        gpu.remove_vm(inst.vm).expect("moving instance present");
-    }
-    for (inst, new_placement) in moves {
-        dc.gpu_mut(gpu_ref).place(inst.vm, *new_placement);
-        // Keep the location index coherent.
-        dc.relocate_index(inst.vm, gpu_ref, *new_placement);
-    }
+    dc.repack_gpu(gpu_ref, moves);
     moves
         .iter()
         .map(|(inst, _)| MigrationEvent {

@@ -28,8 +28,7 @@ pub mod consolidation;
 pub mod defrag;
 
 use super::{
-    classify_rejection, try_place_on_gpu, Decision, MigrationEvent, Policy, PolicyCtx,
-    RejectReason,
+    classify_rejection, probe_gpu, Decision, MigrationEvent, Policy, PolicyCtx, RejectReason,
 };
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::{DataCenter, GpuRef};
@@ -45,6 +44,10 @@ pub struct GrmuConfig {
     pub consolidation_interval_hours: Option<u64>,
     /// Defragmentation on rejection (Algorithm 4).
     pub defrag_enabled: bool,
+    /// Probe only basket GPUs where the profile currently fits (the
+    /// cluster-index intersection; decision-identical to the plain
+    /// basket walk, which `false` restores as the brute-force reference).
+    pub use_index: bool,
 }
 
 impl Default for GrmuConfig {
@@ -53,6 +56,7 @@ impl Default for GrmuConfig {
             heavy_capacity_frac: 0.30,
             consolidation_interval_hours: None,
             defrag_enabled: true,
+            use_index: true,
         }
     }
 }
@@ -116,33 +120,43 @@ impl Grmu {
     /// Algorithm 3 for one VM: scan the basket first-fit, then grow it
     /// from the pool if allowed. Rejections distinguish a binding basket
     /// quota from genuine resource/fragmentation shortage.
+    ///
+    /// With the cluster index the basket walk is intersected with the
+    /// profile's feasibility bucket, so only GPUs that can actually host
+    /// the GI are probed; both walks are ascending `globalIndex`, so the
+    /// first fit — and every decision — is identical.
     fn place_one(&mut self, dc: &mut DataCenter, vm: &VmSpec) -> Decision {
         let heavy = vm.profile.is_heavy();
         let capacity = if heavy { self.heavy_capacity } else { self.light_capacity };
         let basket = if heavy { &self.heavy } else { &self.light };
 
-        for &r in basket.iter() {
-            if let Some(placement) = try_place_on_gpu(dc, vm, r) {
-                return Decision::Placed { gpu: r, placement };
-            }
+        let probe = |dc: &DataCenter, r: GpuRef| probe_gpu(dc, vm, r).map(|pl| (r, pl));
+        let found = if self.config.use_index {
+            basket
+                .intersection(dc.index().gpus_fitting(vm.profile))
+                .find_map(|&r| probe(dc, r))
+        } else {
+            basket.iter().find_map(|&r| probe(dc, r))
+        };
+        if let Some((r, placement)) = found {
+            dc.place(vm, r, placement);
+            return Decision::Placed { gpu: r, placement };
         }
         let at_quota = basket.len() >= capacity;
         if !at_quota {
             // Grow the basket from the pool (strict capacity check; see
             // module docs). Pool GPUs are empty, but their host may be
             // unable to take the VM's CPU/RAM — skip such GPUs without
-            // consuming them.
-            let candidates: Vec<GpuRef> = self.pool.iter().copied().collect();
-            for r in candidates {
-                if let Some(placement) = try_place_on_gpu(dc, vm, r) {
-                    self.pool.remove(&r);
-                    if heavy {
-                        self.heavy.insert(r);
-                    } else {
-                        self.light.insert(r);
-                    }
-                    return Decision::Placed { gpu: r, placement };
+            // consuming them (and without materializing a candidate Vec).
+            if let Some((r, placement)) = self.pool.iter().find_map(|&r| probe(dc, r)) {
+                self.pool.remove(&r);
+                if heavy {
+                    self.heavy.insert(r);
+                } else {
+                    self.light.insert(r);
                 }
+                dc.place(vm, r, placement);
+                return Decision::Placed { gpu: r, placement };
             }
         } else if self
             .pool
@@ -353,7 +367,7 @@ mod tests {
         let mut g = Grmu::new(GrmuConfig {
             heavy_capacity_frac: 0.17, // 1 GPU heavy, 5 light
             consolidation_interval_hours: Some(1),
-            defrag_enabled: true,
+            ..Default::default()
         });
         // Two 3g.20gb VMs forced onto two different GPUs: fill first GPU's
         // other half with a temporary 3g, then remove it.
@@ -387,7 +401,7 @@ mod tests {
         let mut g = Grmu::new(GrmuConfig {
             heavy_capacity_frac: 0.17,
             consolidation_interval_hours: None,
-            defrag_enabled: true,
+            ..Default::default()
         });
         batch(&mut g, &mut dcx, &[vm(1, Profile::P3g20gb), vm(2, Profile::P4g20gb)]);
         let mut ctx = PolicyCtx::default();

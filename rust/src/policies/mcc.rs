@@ -10,7 +10,7 @@
 //! the same policy instance can score natively or through the
 //! AOT-compiled XLA artifact with bit-identical results.
 
-use super::{classify_rejection, Decision, Policy, PolicyCtx};
+use super::{reject_cluster, visit_candidates, Decision, Policy, PolicyCtx};
 use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::placement::mock_assign;
@@ -20,9 +20,9 @@ use crate::mig::placement::mock_assign;
 pub use super::{CcScorer, NativeScorer};
 
 /// MCC placement. The scoring backend comes from the [`PolicyCtx`].
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Mcc {
-    refs: Vec<GpuRef>,
+    use_index: bool,
     /// Scratch buffers reused across decisions (hot-path allocation-free).
     cand_refs: Vec<(GpuRef, crate::mig::Placement)>,
     cand_occs: Vec<u8>,
@@ -30,7 +30,18 @@ pub struct Mcc {
 
 impl Mcc {
     pub fn new() -> Mcc {
-        Mcc::default()
+        Mcc::with_index(true)
+    }
+
+    /// `use_index = false` restores the brute-force full scan.
+    pub fn with_index(use_index: bool) -> Mcc {
+        Mcc { use_index, cand_refs: Vec::new(), cand_occs: Vec::new() }
+    }
+}
+
+impl Default for Mcc {
+    fn default() -> Self {
+        Mcc::new()
     }
 }
 
@@ -45,30 +56,33 @@ impl Policy for Mcc {
         vms: &[VmSpec],
         ctx: &mut PolicyCtx,
     ) -> Vec<Decision> {
-        if self.refs.is_empty() {
-            self.refs = dc.gpu_refs();
-        }
+        let use_index = self.use_index;
         vms.iter()
             .map(|vm| {
+                if use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                    return reject_cluster(dc, vm, use_index);
+                }
                 // Gather candidates: (gpu, default placement, resulting occ).
                 self.cand_refs.clear();
                 self.cand_occs.clear();
                 let mut skip_host: Option<u32> = None;
-                for &r in &self.refs {
+                let (cand_refs, cand_occs) = (&mut self.cand_refs, &mut self.cand_occs);
+                visit_candidates(dc, vm.profile, use_index, |r| {
                     if skip_host == Some(r.host) {
-                        continue;
+                        return true;
                     }
                     if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
                         skip_host = Some(r.host);
-                        continue;
+                        return true;
                     }
                     if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
-                        self.cand_refs.push((r, pl));
-                        self.cand_occs.push(new_occ);
+                        cand_refs.push((r, pl));
+                        cand_occs.push(new_occ);
                     }
-                }
+                    true
+                });
                 if self.cand_refs.is_empty() {
-                    return Decision::Rejected(classify_rejection(dc, vm, &self.refs));
+                    return reject_cluster(dc, vm, use_index);
                 }
                 let scores = ctx.scorer.score(&self.cand_occs);
                 let mut best = 0usize;

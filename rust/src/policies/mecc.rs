@@ -4,7 +4,7 @@
 //! requested profiles (the paper picks n = 24 h, the lowest-error
 //! look-back among {1, 12, 24, 48, 96}).
 
-use super::{classify_rejection, Decision, Policy, PolicyCtx};
+use super::{reject_cluster, visit_candidates, Decision, Policy, PolicyCtx};
 use crate::cluster::vm::{Time, VmSpec};
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::gpu::profile_capacity;
@@ -14,7 +14,7 @@ use std::collections::VecDeque;
 
 /// MECC placement.
 pub struct Mecc {
-    refs: Vec<GpuRef>,
+    use_index: bool,
     /// Look-back window (hours).
     window_hours: u64,
     /// Requested profiles with timestamps, pruned to the window.
@@ -25,7 +25,12 @@ pub struct Mecc {
 
 impl Mecc {
     pub fn new(window_hours: u64) -> Mecc {
-        Mecc { refs: Vec::new(), window_hours, history: VecDeque::new(), counts: [0; 6] }
+        Mecc::with_index(window_hours, true)
+    }
+
+    /// `use_index = false` restores the brute-force full scan.
+    pub fn with_index(window_hours: u64, use_index: bool) -> Mecc {
+        Mecc { use_index, window_hours, history: VecDeque::new(), counts: [0; 6] }
     }
 
     /// Profile probabilities from the window; uniform when empty.
@@ -92,9 +97,6 @@ impl Policy for Mecc {
         vms: &[VmSpec],
         ctx: &mut PolicyCtx,
     ) -> Vec<Decision> {
-        if self.refs.is_empty() {
-            self.refs = dc.gpu_refs();
-        }
         // The window reflects requests seen up to and including this batch.
         self.observe(vms, ctx.now);
         let probs = self.probabilities();
@@ -105,17 +107,21 @@ impl Policy for Mecc {
         for (occ, slot) in ecc_table.iter_mut().enumerate() {
             *slot = self.ecc(occ as u8, &probs);
         }
+        let use_index = self.use_index;
         vms.iter()
             .map(|vm| {
+                if use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                    return reject_cluster(dc, vm, use_index);
+                }
                 let mut best: Option<(f64, GpuRef, crate::mig::Placement)> = None;
                 let mut skip_host: Option<u32> = None;
-                for &r in &self.refs {
+                visit_candidates(dc, vm.profile, use_index, |r| {
                     if skip_host == Some(r.host) {
-                        continue;
+                        return true;
                     }
                     if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
                         skip_host = Some(r.host);
-                        continue;
+                        return true;
                     }
                     if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
                         let score = ecc_table[new_occ as usize];
@@ -123,13 +129,14 @@ impl Policy for Mecc {
                             best = Some((score, r, pl));
                         }
                     }
-                }
+                    true
+                });
                 match best {
                     Some((_, r, pl)) => {
                         dc.place(vm, r, pl);
                         Decision::Placed { gpu: r, placement: pl }
                     }
-                    None => Decision::Rejected(classify_rejection(dc, vm, &self.refs)),
+                    None => reject_cluster(dc, vm, use_index),
                 }
             })
             .collect()

@@ -37,6 +37,17 @@
 //! Construction goes through the [`PolicyRegistry`], which advertises
 //! every variant (including `grmu-db`, the dual-basket-only ablation) and
 //! reports unknown names with the accepted list.
+//!
+//! ## Candidate iteration and the cluster index
+//!
+//! Policies no longer scan `gpu_refs()` vectors: candidates come from
+//! the [`crate::cluster::ClusterIndex`] feasibility buckets (via
+//! [`visit_candidates`]), and cluster-wide rejection classification from
+//! the host headroom index ([`classify_rejection_cluster`]). Bucket
+//! iteration follows ascending [`GpuRef`] order — the paper's
+//! `globalIndex` — so indexed decisions are byte-identical to the
+//! pre-index full scans; `PolicyConfig::use_index(false)` rebuilds the
+//! full-scan variants as the brute-force reference.
 
 pub mod best_fit;
 pub mod first_fit;
@@ -48,7 +59,7 @@ use crate::cluster::vm::{Time, VmId, VmSpec};
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::gpu::cc;
 use crate::mig::placement::mock_assign;
-use crate::mig::Placement;
+use crate::mig::{Placement, Profile};
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -256,20 +267,59 @@ pub trait Policy: Send {
     }
 }
 
-/// Try to place `vm` on the specific GPU: host CPU/RAM must fit (Eq. 6–7)
-/// and the GI must fit under the default block placement. On success the
-/// VM is inserted into `dc` and the chosen placement returned.
-pub fn try_place_on_gpu(dc: &mut DataCenter, vm: &VmSpec, r: GpuRef) -> Option<Placement> {
+/// Visit placement candidates for `profile` in `globalIndex` order,
+/// until the visitor returns `false`.
+///
+/// With `use_index` the walk covers only the
+/// [`crate::cluster::ClusterIndex`] bucket — exactly the GPUs where the
+/// profile currently fits; the full scan covers every GPU. Both orders
+/// are ascending
+/// [`GpuRef`], and the bucket is the feasible subsequence of the full
+/// scan, so any first-match or best-scoring selection over the
+/// candidates is byte-identical between the two modes (the
+/// indexed-vs-scan equivalence tests in `rust/tests/decision_api.rs`
+/// lock this). The scan mode is retained as the brute-force reference
+/// for those tests and the `benches/cluster_index.rs` comparison.
+pub fn visit_candidates(
+    dc: &DataCenter,
+    profile: Profile,
+    use_index: bool,
+    mut visit: impl FnMut(GpuRef) -> bool,
+) {
+    if use_index {
+        for &r in dc.index().gpus_fitting(profile) {
+            if !visit(r) {
+                return;
+            }
+        }
+    } else {
+        for h in dc.hosts() {
+            for g in 0..h.gpus().len() {
+                if !visit(GpuRef { host: h.id, gpu: g as u8 }) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Probe one GPU without mutating anything: the host must have the
+/// CPU/RAM (Eq. 6–7) and the GI must fit under the default block
+/// placement. The non-committing core of [`try_place_on_gpu`], shared
+/// by the first-fit scan paths (FF and GRMU's basket/pool walks).
+pub fn probe_gpu(dc: &DataCenter, vm: &VmSpec, r: GpuRef) -> Option<Placement> {
     if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
         return None;
     }
-    match mock_assign(dc.gpu(r).occupancy(), vm.profile) {
-        Some((placement, _)) => {
-            dc.place(vm, r, placement);
-            Some(placement)
-        }
-        None => None,
-    }
+    mock_assign(dc.gpu(r).occupancy(), vm.profile).map(|(placement, _)| placement)
+}
+
+/// [`probe_gpu`], then commit: on success the VM is inserted into `dc`
+/// and the chosen placement returned.
+pub fn try_place_on_gpu(dc: &mut DataCenter, vm: &VmSpec, r: GpuRef) -> Option<Placement> {
+    let placement = probe_gpu(dc, vm, r)?;
+    dc.place(vm, r, placement);
+    Some(placement)
 }
 
 /// Classify why `vm` fit on none of `refs` (called by policies after an
@@ -309,6 +359,73 @@ where
     }
 }
 
+/// Cluster-wide [`classify_rejection`] over every GPU-equipped host,
+/// answered from the host headroom index when the maxima alone decide
+/// (no host anywhere has the CPU, or the RAM) and by a single host scan
+/// otherwise.
+///
+/// Byte-identical to `classify_rejection(dc, vm, &dc.gpu_refs())`: that
+/// scan evaluated the same three per-host existentials, just once per
+/// GPU instead of once per host, and hosts without GPUs appear in
+/// neither walk.
+pub fn classify_rejection_cluster(dc: &DataCenter, vm: &VmSpec) -> RejectReason {
+    let idx = dc.index();
+    if idx.num_hosts() == 0 {
+        // Empty cluster — same convention as an empty candidate set.
+        return RejectReason::NoGpuFit;
+    }
+    if idx.max_free_cpus() < vm.cpus {
+        // Every host is CPU-short, so nothing can have joint headroom.
+        return RejectReason::CpuExhausted;
+    }
+    if idx.max_free_ram() < vm.ram_gb {
+        // No host has the RAM; a CPU shortage anywhere still takes
+        // precedence (Eq. 6 before Eq. 7).
+        return if idx.min_free_cpus() < vm.cpus {
+            RejectReason::CpuExhausted
+        } else {
+            RejectReason::RamExhausted
+        };
+    }
+    // Some host has the CPU and some host has the RAM — whether one host
+    // has both takes a scan (hosts, not GPUs).
+    let mut cpu_short = false;
+    let mut ram_short = false;
+    for host in dc.hosts() {
+        if host.gpus().is_empty() {
+            continue;
+        }
+        let cpu_ok = host.free_cpus() >= vm.cpus;
+        let ram_ok = host.free_ram() >= vm.ram_gb;
+        if cpu_ok && ram_ok {
+            return RejectReason::NoGpuFit;
+        }
+        cpu_short |= !cpu_ok;
+        ram_short |= !ram_ok;
+    }
+    if cpu_short {
+        RejectReason::CpuExhausted
+    } else if ram_short {
+        RejectReason::RamExhausted
+    } else {
+        RejectReason::NoGpuFit
+    }
+}
+
+/// Shared rejection path for the cluster-scanning policies. In indexed
+/// mode the reason comes from [`classify_rejection_cluster`]; in scan
+/// mode from the original full-GPU-ref walk, so the brute-force
+/// reference stays fully index-free.
+pub(crate) fn reject_cluster(dc: &DataCenter, vm: &VmSpec, use_index: bool) -> Decision {
+    let reason = if use_index {
+        classify_rejection_cluster(dc, vm)
+    } else {
+        let refs = dc.gpu_refs();
+        classify_rejection(dc, vm, &refs)
+    };
+    Decision::Rejected(reason)
+}
+
 /// Builder-style configuration consumed by the [`PolicyRegistry`].
 #[derive(Debug, Clone)]
 pub struct PolicyConfig {
@@ -318,11 +435,21 @@ pub struct PolicyConfig {
     pub consolidation_hours: Option<u64>,
     /// MECC profile-frequency look-back window (paper pick: 24 h).
     pub mecc_window_hours: u64,
+    /// Query the [`crate::cluster::ClusterIndex`] for placement
+    /// candidates (the default). `false` restores the brute-force full
+    /// scan — decision-identical, kept as the equivalence-test and
+    /// benchmark reference.
+    pub use_index: bool,
 }
 
 impl Default for PolicyConfig {
     fn default() -> Self {
-        PolicyConfig { heavy_frac: 0.30, consolidation_hours: None, mecc_window_hours: 24 }
+        PolicyConfig {
+            heavy_frac: 0.30,
+            consolidation_hours: None,
+            mecc_window_hours: 24,
+            use_index: true,
+        }
     }
 }
 
@@ -343,6 +470,11 @@ impl PolicyConfig {
 
     pub fn mecc_window_hours(mut self, hours: u64) -> PolicyConfig {
         self.mecc_window_hours = hours;
+        self
+    }
+
+    pub fn use_index(mut self, use_index: bool) -> PolicyConfig {
+        self.use_index = use_index;
         self
     }
 }
@@ -385,23 +517,24 @@ impl PolicyRegistry {
 
     /// The standard registry with all six variants.
     pub fn standard() -> PolicyRegistry {
-        fn ff(_: &PolicyConfig) -> Box<dyn Policy> {
-            Box::new(first_fit::FirstFit::new())
+        fn ff(cfg: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(first_fit::FirstFit::with_index(cfg.use_index))
         }
-        fn bf(_: &PolicyConfig) -> Box<dyn Policy> {
-            Box::new(best_fit::BestFit::new())
+        fn bf(cfg: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(best_fit::BestFit::with_index(cfg.use_index))
         }
-        fn build_mcc(_: &PolicyConfig) -> Box<dyn Policy> {
-            Box::new(mcc::Mcc::new())
+        fn build_mcc(cfg: &PolicyConfig) -> Box<dyn Policy> {
+            Box::new(mcc::Mcc::with_index(cfg.use_index))
         }
         fn build_mecc(cfg: &PolicyConfig) -> Box<dyn Policy> {
-            Box::new(mecc::Mecc::new(cfg.mecc_window_hours))
+            Box::new(mecc::Mecc::with_index(cfg.mecc_window_hours, cfg.use_index))
         }
         fn build_grmu(cfg: &PolicyConfig) -> Box<dyn Policy> {
             Box::new(grmu::Grmu::new(grmu::GrmuConfig {
                 heavy_capacity_frac: cfg.heavy_frac,
                 consolidation_interval_hours: cfg.consolidation_hours,
                 defrag_enabled: true,
+                use_index: cfg.use_index,
             }))
         }
         fn build_grmu_db(cfg: &PolicyConfig) -> Box<dyn Policy> {
@@ -409,6 +542,7 @@ impl PolicyRegistry {
                 heavy_capacity_frac: cfg.heavy_frac,
                 consolidation_interval_hours: None,
                 defrag_enabled: false,
+                use_index: cfg.use_index,
             }))
         }
         PolicyRegistry {
@@ -541,6 +675,52 @@ mod tests {
         dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
         assert!(try_place_on_gpu(&mut dc, &full, r).is_some());
         assert_eq!(classify_rejection(&dc, &v, &dc.gpu_refs()), RejectReason::NoGpuFit);
+    }
+
+    #[test]
+    fn prop_cluster_classification_matches_full_ref_walk() {
+        use crate::util::prop::forall;
+        use crate::util::rng::Rng;
+        // classify_rejection_cluster (headroom fast paths + host scan)
+        // must agree with the original classify_rejection over every GPU
+        // ref, for arbitrary host loads and demands.
+        forall(
+            "classify-cluster-vs-refs",
+            |r: &mut Rng| {
+                let hosts = (0..1 + r.below(5))
+                    .map(|i| {
+                        Host::new(
+                            i as u32,
+                            r.below(16) as u32,
+                            r.below(64) as u32,
+                            1 + r.below(3) as usize,
+                        )
+                    })
+                    .collect();
+                let dc = DataCenter::new(hosts);
+                let demand = (r.below(16) as u32, r.below(64) as u32);
+                (dc, demand)
+            },
+            |(dc, (cpus, ram_gb))| {
+                let v = VmSpec {
+                    id: 1,
+                    profile: Profile::P1g5gb,
+                    cpus: *cpus,
+                    ram_gb: *ram_gb,
+                    arrival: 0,
+                    departure: 10,
+                    weight: 1.0,
+                };
+                let refs = dc.gpu_refs();
+                let expected = classify_rejection(dc, &v, &refs);
+                let got = classify_rejection_cluster(dc, &v);
+                if got == expected {
+                    Ok(())
+                } else {
+                    Err(format!("cluster={got:?} refs={expected:?}"))
+                }
+            },
+        );
     }
 
     #[test]

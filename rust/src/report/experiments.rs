@@ -1,9 +1,13 @@
-//! Parameterized experiment runners behind the figure harness.
+//! Parameterized experiment runners behind the figure harness, plus the
+//! parallel multi-seed × multi-policy [`sweep`] runner.
 
 use crate::cluster::DataCenter;
 use crate::policies::{grmu, PolicyConfig, PolicyCtx, PolicyRegistry};
 use crate::sim::{SimResult, Simulation, SimulationOptions};
 use crate::trace::{TraceConfig, Workload};
+use crate::util::stats::{mean, std_dev};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Shared experiment parameters (CLI-controllable).
 #[derive(Debug, Clone)]
@@ -134,6 +138,123 @@ pub fn grmu_ablation(workload: &Workload, cfg: &ExperimentConfig) -> Vec<(String
     out
 }
 
+/// One `(seed, policy)` cell of a [`sweep`].
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    pub seed: u64,
+    pub policy: String,
+    pub result: SimResult,
+}
+
+/// Parallel multi-seed × multi-policy sweep.
+///
+/// Workloads are generated once per seed (each seed reconfigures
+/// `base.trace`) on the worker pool, then every `(seed, policy)` pair
+/// runs as an independent simulation pulled from a shared work queue by
+/// `std::thread::scope` workers — no external dependencies, and the
+/// per-run determinism (seeded trace + seeded `PolicyCtx`) makes the
+/// output independent of thread interleaving. `threads = 0` uses the
+/// machine's available parallelism. Results return in seed-major,
+/// policy-minor order.
+///
+/// Panics (after joining all workers) if `policies` contains a name the
+/// [`PolicyRegistry`] does not know.
+pub fn sweep(
+    base: &ExperimentConfig,
+    seeds: &[u64],
+    policies: &[String],
+    threads: usize,
+) -> Vec<SweepRun> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let seed_cfgs: Vec<ExperimentConfig> = seeds
+        .iter()
+        .map(|&seed| {
+            let mut cfg = base.clone();
+            cfg.trace.seed = seed;
+            cfg
+        })
+        .collect();
+    // Per-seed workload synthesis is the expensive part of startup and
+    // every seed is independent — generate on the worker pool too.
+    let generated: Vec<Mutex<Option<Workload>>> = seeds.iter().map(|_| Mutex::new(None)).collect();
+    let next_gen = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(seed_cfgs.len()).max(1) {
+            scope.spawn(|| loop {
+                let i = next_gen.fetch_add(1, Ordering::Relaxed);
+                if i >= seed_cfgs.len() {
+                    break;
+                }
+                let workload = Workload::generate(seed_cfgs[i].trace.clone());
+                *generated[i].lock().unwrap() = Some(workload);
+            });
+        }
+    });
+    let workloads: Vec<Workload> = generated
+        .into_iter()
+        .map(|cell| cell.into_inner().unwrap().expect("workload generated"))
+        .collect();
+    let tasks: Vec<(usize, &str)> = (0..workloads.len())
+        .flat_map(|wi| policies.iter().map(move |p| (wi, p.as_str())))
+        .collect();
+    let next = AtomicUsize::new(0);
+    let cells: Vec<Mutex<Option<SimResult>>> = tasks.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(tasks.len()).max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                let (wi, policy) = tasks[i];
+                let result = run_once(&workloads[wi], policy, &seed_cfgs[wi], true);
+                *cells[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    tasks
+        .iter()
+        .zip(cells)
+        .map(|(&(wi, policy), cell)| SweepRun {
+            seed: seeds[wi],
+            policy: policy.to_string(),
+            result: cell.into_inner().unwrap().expect("sweep cell filled"),
+        })
+        .collect()
+}
+
+/// Per-policy summary row of a sweep: `(policy, mean/std overall
+/// acceptance, mean/std average active-hardware rate)` across seeds, in
+/// first-appearance order.
+pub fn sweep_summary(runs: &[SweepRun]) -> Vec<(String, f64, f64, f64, f64)> {
+    let mut order: Vec<&str> = Vec::new();
+    for run in runs {
+        if !order.contains(&run.policy.as_str()) {
+            order.push(run.policy.as_str());
+        }
+    }
+    order
+        .into_iter()
+        .map(|policy| {
+            let acc: Vec<f64> = runs
+                .iter()
+                .filter(|r| r.policy == policy)
+                .map(|r| r.result.overall_acceptance())
+                .collect();
+            let active: Vec<f64> = runs
+                .iter()
+                .filter(|r| r.policy == policy)
+                .map(|r| r.result.average_active_rate())
+                .collect();
+            (policy.to_string(), mean(&acc), std_dev(&acc), mean(&active), std_dev(&active))
+        })
+        .collect()
+}
+
 /// GRMU config helper mirroring [`grmu::GrmuConfig`] from experiment
 /// parameters (exposed for examples).
 pub fn grmu_config(cfg: &ExperimentConfig, defrag: bool) -> grmu::GrmuConfig {
@@ -141,6 +262,7 @@ pub fn grmu_config(cfg: &ExperimentConfig, defrag: bool) -> grmu::GrmuConfig {
         heavy_capacity_frac: cfg.heavy_frac,
         consolidation_interval_hours: cfg.consolidation_hours,
         defrag_enabled: defrag,
+        use_index: true,
     }
 }
 
@@ -234,6 +356,38 @@ mod tests {
         for (_, r) in &rows[1..] {
             assert_eq!(r.requested, rows[0].1.requested);
         }
+    }
+
+    #[test]
+    fn sweep_runs_every_cell_deterministically() {
+        let base = ExperimentConfig::quick(0);
+        let seeds = [5u64, 6];
+        let policies: Vec<String> = vec!["ff".into(), "grmu".into()];
+        let par = sweep(&base, &seeds, &policies, 2);
+        assert_eq!(par.len(), 4);
+        // Seed-major, policy-minor order.
+        let keys: Vec<(u64, &str)> = par.iter().map(|r| (r.seed, r.policy.as_str())).collect();
+        assert_eq!(keys, vec![(5, "ff"), (5, "grmu"), (6, "ff"), (6, "grmu")]);
+        // Thread count must not affect any result.
+        let seq = sweep(&base, &seeds, &policies, 1);
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!(a.result.requested, b.result.requested);
+            assert_eq!(a.result.accepted, b.result.accepted);
+            assert_eq!(a.result.rejections, b.result.rejections);
+            assert_eq!(a.result.samples, b.result.samples);
+        }
+        // And each cell equals a standalone run on the same seed.
+        let mut cfg5 = base.clone();
+        cfg5.trace.seed = 5;
+        let w5 = Workload::generate(cfg5.trace.clone());
+        let solo = run_once(&w5, "ff", &cfg5, true);
+        assert_eq!(par[0].result.requested, solo.requested);
+        assert_eq!(par[0].result.accepted, solo.accepted);
+        // Summary: one row per policy, in first-appearance order.
+        let summary = sweep_summary(&par);
+        assert_eq!(summary.len(), 2);
+        assert_eq!(summary[0].0, "ff");
+        assert_eq!(summary[1].0, "grmu");
     }
 
     #[test]

@@ -2,14 +2,15 @@
 //!
 //! * [`experiments`] — parameterized runners: one simulation, the
 //!   heavy-basket capacity sweep (Figs. 6–8), the consolidation-interval
-//!   sweep (Fig. 9), and the five-policy comparison (Figs. 10–12,
-//!   Table 6).
+//!   sweep (Fig. 9), the five-policy comparison (Figs. 10–12, Table 6),
+//!   and the parallel multi-seed × multi-policy [`experiments::sweep`]
+//!   behind the `sweep` CLI subcommand.
 //! * [`tables`] — plain-text table/series rendering in the paper's shape.
 
 pub mod experiments;
 pub mod tables;
 
 pub use experiments::{
-    consolidation_sweep, grmu_ablation, heavy_capacity_sweep, policy_comparison, run_once,
-    ExperimentConfig,
+    consolidation_sweep, grmu_ablation, heavy_capacity_sweep, policy_comparison, run_once, sweep,
+    sweep_summary, ExperimentConfig, SweepRun,
 };

@@ -5,14 +5,19 @@
 //! * the simulator-vs-coordinator equivalence — both drive the shared
 //!   `EventCore`, so the same seeded trace must produce identical
 //!   acceptance counts, per-reason rejections, migration events and
-//!   sample prefixes (the regression lock for the core extraction).
+//!   sample prefixes (the regression lock for the core extraction);
+//! * the indexed-vs-scan equivalence — every policy built with the
+//!   cluster index (`PolicyConfig::use_index(true)`, the default) must
+//!   produce the exact `Decision` sequence and `SimResult` of its
+//!   brute-force full-scan variant (the regression lock for the
+//!   `ClusterIndex` maintenance).
 
 use grmu::cluster::vm::HOUR;
 use grmu::cluster::{DataCenter, Host, VmSpec};
 use grmu::coordinator::{Coordinator, CoordinatorConfig, Request};
 use grmu::mig::Profile;
-use grmu::policies::{PolicyConfig, PolicyCtx, PolicyRegistry, RejectReason};
-use grmu::sim::{SimResult, Simulation, SimulationOptions};
+use grmu::policies::{Decision, PolicyConfig, PolicyCtx, PolicyRegistry, RejectReason};
+use grmu::sim::{EventCore, SimResult, Simulation, SimulationOptions};
 use grmu::trace::{TraceConfig, Workload};
 
 fn vm(id: u64, profile: Profile, cpus: u32, ram_gb: u32, arrival_h: u64, dur_h: u64) -> VmSpec {
@@ -209,4 +214,80 @@ fn equivalence_holds_across_seeds() {
         assert_eq!((coord.requested, coord.accepted), (sim.requested, sim.accepted));
         assert_eq!(coord.migrations(), sim.migrations(), "seed {seed}");
     }
+}
+
+// ------------------------------------------------------ index equivalence
+
+/// Drive one policy over the workload exactly like `Simulation::run`
+/// does, recording every `Decision` the policy emits. The periodic
+/// integrity check also re-validates the incrementally maintained
+/// cluster index against a brute-force rebuild.
+fn replay_decisions(
+    name: &str,
+    cfg: &PolicyConfig,
+    workload: &Workload,
+    seed: u64,
+) -> (Vec<Decision>, SimResult) {
+    let policy = PolicyRegistry::standard().build(name, cfg).unwrap();
+    let mut core = EventCore::new(
+        DataCenter::new(workload.hosts.clone()),
+        policy,
+        PolicyCtx::new(seed),
+    );
+    core.set_integrity_every(8);
+    let vms = &workload.vms;
+    let last_arrival = vms.last().map(|v| v.arrival).unwrap_or(0);
+    let mut decisions = Vec::new();
+    let mut next = 0usize;
+    loop {
+        let t_end = core.interval_end();
+        let start = next;
+        while next < vms.len() && vms[next].arrival <= t_end {
+            next += 1;
+        }
+        decisions.extend(core.step(&vms[start..next]));
+        let drained = next >= vms.len() && core.pending_departures() == 0;
+        let capped = core.hour() * HOUR > last_arrival + 5 * 24 * HOUR;
+        if drained || capped {
+            break;
+        }
+    }
+    (decisions, core.into_result(0.0))
+}
+
+fn assert_equivalent(name: &str, cfg: &PolicyConfig, workload: &Workload, seed: u64) {
+    let indexed = replay_decisions(name, &cfg.clone().use_index(true), workload, seed);
+    let scanned = replay_decisions(name, &cfg.clone().use_index(false), workload, seed);
+    assert_eq!(indexed.0, scanned.0, "{name}: decision sequences diverged");
+    let (ri, rs) = (indexed.1, scanned.1);
+    assert_eq!(ri.requested, rs.requested, "{name}: requested diverged");
+    assert_eq!(ri.accepted, rs.accepted, "{name}: accepted diverged");
+    assert_eq!(ri.per_profile, rs.per_profile, "{name}: per-profile diverged");
+    assert_eq!(ri.rejections, rs.rejections, "{name}: rejections diverged");
+    assert_eq!(
+        ri.migration_events, rs.migration_events,
+        "{name}: migration events diverged"
+    );
+    assert_eq!(ri.samples, rs.samples, "{name}: samples diverged");
+}
+
+/// Acceptance criterion: all five §8.3 policies plus the `grmu-db`
+/// ablation decide byte-identically with and without the index on the
+/// quick workload.
+#[test]
+fn indexed_and_scan_policies_decide_identically() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    let cfg = PolicyConfig::new().heavy_frac(0.25);
+    for name in ["ff", "bf", "mcc", "mecc", "grmu", "grmu-db"] {
+        assert_equivalent(name, &cfg, &workload, 42);
+    }
+}
+
+/// Same lock with GRMU's consolidation clock running, so inter-GPU
+/// migrations (and the index updates they trigger) are covered too.
+#[test]
+fn index_equivalence_survives_consolidation() {
+    let workload = Workload::generate(TraceConfig::small(19));
+    let cfg = PolicyConfig::new().heavy_frac(0.2).consolidation_hours(Some(12));
+    assert_equivalent("grmu", &cfg, &workload, 19);
 }

@@ -196,6 +196,7 @@ fn grmu_components_toggle_cleanly() {
             heavy_capacity_frac: 0.3,
             consolidation_interval_hours: consolidation,
             defrag_enabled: defrag,
+            ..Default::default()
         }));
         let mut sim = Simulation::new(dc, policy, &workload.vms);
         sim.options.integrity_every = 7;
