@@ -16,7 +16,7 @@
 
 use grmu::cluster::vm::VmSpec;
 use grmu::cluster::{DataCenter, GpuRef, Host};
-use grmu::mig::{Placement, Profile};
+use grmu::mig::{GpuModel, Placement, Profile};
 use grmu::policies::{Policy, PolicyConfig, PolicyCtx, PolicyRegistry};
 use grmu::util::bench::Bench;
 
@@ -45,6 +45,45 @@ fn loaded_cluster() -> DataCenter {
                 &vm,
                 GpuRef { host: h, gpu: g as u8 },
                 Placement { profile: Profile::P7g40gb, start: 0 },
+            );
+            id += 1;
+        }
+    }
+    dc
+}
+
+/// Mixed-fleet variant: the same 10k-GPU scarcity regime, but hosts
+/// cycle A30 / A100-40 / H100-80 parts. The scan walk now wades through
+/// both full *and* model-incompatible GPUs, while the per-(model,
+/// profile) buckets jump straight to the compatible tail — the index
+/// speedup measured under heterogeneity.
+fn loaded_mixed_cluster() -> DataCenter {
+    const MODELS: [GpuModel; 3] = [GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80];
+    let hosts: Vec<Host> = (0..HOSTS)
+        .map(|i| {
+            let models = vec![MODELS[i as usize % MODELS.len()]; GPUS_PER_HOST];
+            Host::with_models(i, 512, 2_048, &models)
+        })
+        .collect();
+    let mut dc = DataCenter::new(hosts);
+    let mut id = 1u64;
+    for h in 0..HOSTS - FREE_TAIL_HOSTS {
+        let model = MODELS[h as usize % MODELS.len()];
+        let heavy = model.profile(model.num_profiles() - 1); // whole-GPU GI
+        for g in 0..GPUS_PER_HOST {
+            let vm = VmSpec {
+                id,
+                profile: heavy,
+                cpus: 1,
+                ram_gb: 1,
+                arrival: 0,
+                departure: 1_000_000,
+                weight: 1.0,
+            };
+            dc.place(
+                &vm,
+                GpuRef { host: h, gpu: g as u8 },
+                Placement { profile: heavy, start: 0 },
             );
             id += 1;
         }
@@ -99,6 +138,44 @@ fn main() {
         b.compare(
             &format!("place-batch-64/10k-gpus/{name}/scan"),
             &format!("place-batch-64/10k-gpus/{name}/indexed"),
+        );
+    }
+
+    // Mixed fleet: A30/A100-40/H100-80 in equal thirds, same scarcity.
+    // The probe alternates models so every bucket family is exercised.
+    let mut dc = loaded_mixed_cluster();
+    let probe: Vec<VmSpec> = probe_batch()
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut vm)| {
+            let model = [GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80][i % 3];
+            vm.profile = model.profile(0); // smallest GI of each model
+            vm
+        })
+        .collect();
+    println!(
+        "mixed cluster: {} GPUs over 3 models; probe batch: {} × smallest-GI",
+        HOSTS as usize * GPUS_PER_HOST,
+        probe.len()
+    );
+    for name in ["ff", "mcc"] {
+        for (mode, use_index) in [("indexed", true), ("scan", false)] {
+            let cfg = PolicyConfig::new().use_index(use_index);
+            let mut policy = registry.build(name, &cfg).unwrap();
+            let mut ctx = PolicyCtx::default();
+            b.run(&format!("place-batch-64/10k-gpus-mixed/{name}/{mode}"), || {
+                let decisions = policy.place_batch(&mut dc, &probe, &mut ctx);
+                for (vm, d) in probe.iter().zip(&decisions) {
+                    if d.is_placed() {
+                        dc.remove(vm.id);
+                    }
+                }
+                decisions.len()
+            });
+        }
+        b.compare(
+            &format!("place-batch-64/10k-gpus-mixed/{name}/scan"),
+            &format!("place-batch-64/10k-gpus-mixed/{name}/indexed"),
         );
     }
 }

@@ -8,6 +8,7 @@
 
 use grmu::mig::fragmentation::fragmentation_value;
 use grmu::mig::gpu::{cc, profile_capacity};
+use grmu::mig::GpuModel;
 use grmu::mig::placement::mock_assign;
 use grmu::mig::profiles::ALL_PROFILES;
 use grmu::policies::mcc::{CcScorer, NativeScorer};
@@ -48,7 +49,7 @@ fn main() {
     b.run("fragmentation-value-256", || {
         let mut acc = 0.0f64;
         for &m in &masks {
-            acc += fragmentation_value(m);
+            acc += fragmentation_value(GpuModel::A100_40, m);
         }
         acc
     });
@@ -57,14 +58,14 @@ fn main() {
     // candidate-scan shape at data-center scale).
     let batch: Vec<u8> = (0..1024).map(|i| (i % 256) as u8).collect();
     let mut native = NativeScorer;
-    b.run("scorer/native-1024-batch", || native.score(&batch));
+    b.run("scorer/native-1024-batch", || native.score(GpuModel::A100_40, &batch));
 
     #[cfg(feature = "xla")]
     {
         let artifact = std::path::Path::new("artifacts/cc_scorer.hlo.txt");
         if artifact.exists() {
             let mut xla = grmu::runtime::XlaScorer::load(artifact).expect("artifact");
-            b.run("scorer/xla-pjrt-1024-batch", || xla.score(&batch));
+            b.run("scorer/xla-pjrt-1024-batch", || xla.score(GpuModel::A100_40, &batch));
             b.compare("scorer/xla-pjrt-1024-batch", "scorer/native-1024-batch");
         } else {
             eprintln!("(skipping XLA scorer bench: run `make artifacts`)");

@@ -25,7 +25,7 @@ fn print_cluster(dc: &DataCenter) {
                 g,
                 gpu.block_map(),
                 gpu.cc(),
-                grmu::mig::fragmentation_value(gpu.occupancy()),
+                grmu::mig::fragmentation::gpu_fragmentation(gpu),
             );
         }
     }

@@ -15,6 +15,7 @@
 
 use grmu::cluster::DataCenter;
 use grmu::mig::gpu::{cc, profile_capacity};
+use grmu::mig::GpuModel;
 use grmu::policies::mcc::Mcc;
 use grmu::policies::{CcScorer, NativeScorer, Policy, PolicyCtx};
 use grmu::runtime::XlaScorer;
@@ -67,13 +68,13 @@ fn main() {
     let mut sink = 0u64;
     let native_iters = 2_000;
     for _ in 0..native_iters {
-        sink += native_scorer.score(&batch).iter().map(|&x| x as u64).sum::<u64>();
+        sink += native_scorer.score(GpuModel::A100_40, &batch).iter().map(|&x| x as u64).sum::<u64>();
     }
     let native_dt = t0.elapsed();
     let t0 = Instant::now();
     let xla_iters = 50;
     for _ in 0..xla_iters {
-        sink += scorer.score(&batch).iter().map(|&x| x as u64).sum::<u64>();
+        sink += scorer.score(GpuModel::A100_40, &batch).iter().map(|&x| x as u64).sum::<u64>();
     }
     let xla_dt = t0.elapsed();
     let native_rate = (native_iters * batch.len()) as f64 / native_dt.as_secs_f64();

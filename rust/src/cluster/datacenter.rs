@@ -118,11 +118,12 @@ impl DataCenter {
         host.reserve(vm.cpus, vm.ram_gb);
         let new_free = (host.free_cpus(), host.free_ram());
         let gpu = host.gpu_mut(gpu_ref.gpu as usize);
+        let model = gpu.model();
         let old_occ = gpu.occupancy();
         gpu.place(vm.id, placement);
         let new_occ = gpu.occupancy();
         self.index.update_host(old_free, new_free);
-        self.index.update_gpu(gpu_ref, old_occ, new_occ);
+        self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
         self.locations.insert(vm.id, VmLocation { gpu: gpu_ref, placement });
         self.demands.insert(vm.id, (vm.cpus, vm.ram_gb));
     }
@@ -135,13 +136,14 @@ impl DataCenter {
         let host = &mut self.hosts[loc.gpu.host as usize];
         let old_free = (host.free_cpus(), host.free_ram());
         let gpu = host.gpu_mut(loc.gpu.gpu as usize);
+        let model = gpu.model();
         let old_occ = gpu.occupancy();
         gpu.remove_vm(vm);
         let new_occ = gpu.occupancy();
         host.release(cpus, ram);
         let new_free = (host.free_cpus(), host.free_ram());
         self.index.update_host(old_free, new_free);
-        self.index.update_gpu(loc.gpu, old_occ, new_occ);
+        self.index.update_gpu(loc.gpu, model, old_occ, new_occ);
         Some(loc)
     }
 
@@ -152,11 +154,12 @@ impl DataCenter {
         let gpu_ref = loc.gpu;
         loc.placement = new_placement;
         let gpu = self.hosts[gpu_ref.host as usize].gpu_mut(gpu_ref.gpu as usize);
+        let model = gpu.model();
         let old_occ = gpu.occupancy();
         gpu.remove_vm(vm).expect("instance present");
         gpu.place(vm, new_placement);
         let new_occ = gpu.occupancy();
-        self.index.update_gpu(gpu_ref, old_occ, new_occ);
+        self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
     }
 
     /// Apply an intra-GPU re-pack plan (the defragmentation path): all
@@ -166,6 +169,7 @@ impl DataCenter {
     /// stay coherent.
     pub fn repack_gpu(&mut self, gpu_ref: GpuRef, moves: &[(Instance, Placement)]) {
         let gpu = self.hosts[gpu_ref.host as usize].gpu_mut(gpu_ref.gpu as usize);
+        let model = gpu.model();
         let old_occ = gpu.occupancy();
         for (inst, _) in moves {
             gpu.remove_vm(inst.vm).expect("moving instance present");
@@ -178,7 +182,7 @@ impl DataCenter {
             self.locations
                 .insert(inst.vm, VmLocation { gpu: gpu_ref, placement: *new_placement });
         }
-        self.index.update_gpu(gpu_ref, old_occ, new_occ);
+        self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
     }
 
     /// Move a VM's GI to a different GPU (inter-GPU migration). Host
@@ -189,10 +193,11 @@ impl DataCenter {
         let (cpus, ram) = *self.demands.get(&vm).expect("VM demands known");
         let src = loc.gpu;
         let src_gpu = self.hosts[src.host as usize].gpu_mut(src.gpu as usize);
+        let src_model = src_gpu.model();
         let src_old_occ = src_gpu.occupancy();
         src_gpu.remove_vm(vm);
         let src_new_occ = src_gpu.occupancy();
-        self.index.update_gpu(src, src_old_occ, src_new_occ);
+        self.index.update_gpu(src, src_model, src_old_occ, src_new_occ);
         if src.host != dst.host {
             let src_host = &mut self.hosts[src.host as usize];
             let old_free = (src_host.free_cpus(), src_host.free_ram());
@@ -204,10 +209,11 @@ impl DataCenter {
             self.index.update_host(old_free, (dst_host.free_cpus(), dst_host.free_ram()));
         }
         let dst_gpu = self.hosts[dst.host as usize].gpu_mut(dst.gpu as usize);
+        let dst_model = dst_gpu.model();
         let dst_old_occ = dst_gpu.occupancy();
         dst_gpu.place(vm, placement);
         let dst_new_occ = dst_gpu.occupancy();
-        self.index.update_gpu(dst, dst_old_occ, dst_new_occ);
+        self.index.update_gpu(dst, dst_model, dst_old_occ, dst_new_occ);
         self.locations.insert(vm, VmLocation { gpu: dst, placement });
     }
 
@@ -236,6 +242,31 @@ impl DataCenter {
         } else {
             active as f64 / total as f64
         }
+    }
+
+    /// GPU count per catalog model, indexed by `GpuModel as usize`
+    /// (the fleet composition).
+    pub fn gpus_by_model(&self) -> [usize; crate::mig::NUM_MODELS] {
+        super::host::gpus_by_model(&self.hosts)
+    }
+
+    /// Per-model `(active, total)` GPU counts under the strict §2 rule
+    /// (every GPU of an active PM counts as active), indexed by
+    /// `GpuModel as usize`. The per-model breakdown of Eq. 4's
+    /// `Σ_k γ_jk` term.
+    pub fn active_gpus_by_model(&self) -> [(usize, usize); crate::mig::NUM_MODELS] {
+        let mut out = [(0usize, 0usize); crate::mig::NUM_MODELS];
+        for h in &self.hosts {
+            let active = h.is_active();
+            for g in h.gpus() {
+                let slot = &mut out[g.model() as usize];
+                slot.1 += 1;
+                if active {
+                    slot.0 += 1;
+                }
+            }
+        }
+        out
     }
 
     /// Looser accounting for ablation: GPUs count individually (`γ_jk`
@@ -405,6 +436,30 @@ mod tests {
         dc.repack_gpu(r, &[(inst, Placement { profile: Profile::P1g5gb, start: 6 })]);
         assert_eq!(dc.locate(1).unwrap().placement.start, 6);
         assert_eq!(dc.gpu(r).instances()[0].placement.start, 6);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn per_model_hardware_accounting() {
+        use crate::mig::GpuModel;
+        let mut dc = DataCenter::new(vec![
+            Host::with_models(0, 64, 256, &[GpuModel::A30, GpuModel::A100_40]),
+            Host::with_models(1, 64, 256, &[GpuModel::H100_80]),
+        ]);
+        let total = dc.gpus_by_model();
+        assert_eq!(total[GpuModel::A100_40 as usize], 1);
+        assert_eq!(total[GpuModel::A30 as usize], 1);
+        assert_eq!(total[GpuModel::H100_80 as usize], 1);
+        assert_eq!(total[GpuModel::A100_80 as usize], 0);
+        // Place on the A30: host 0 activates, so BOTH its GPUs (A30 and
+        // A100) count active under the strict rule; host 1's H100 idles.
+        let k = GpuModel::A30.profile(0);
+        let vm = spec(1, k);
+        dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement { profile: k, start: 3 });
+        let by_model = dc.active_gpus_by_model();
+        assert_eq!(by_model[GpuModel::A30 as usize], (1, 1));
+        assert_eq!(by_model[GpuModel::A100_40 as usize], (1, 1));
+        assert_eq!(by_model[GpuModel::H100_80 as usize], (0, 1));
         dc.check_integrity().unwrap();
     }
 

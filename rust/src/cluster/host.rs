@@ -1,9 +1,11 @@
 //! Physical machines (`PM_j` of §6) with CPU/RAM capacities and GPUs.
 
-use crate::mig::GpuState;
+use crate::mig::{GpuModel, GpuState};
 
 /// A physical machine: CPU/RAM capacities (`C_j`, `R_j` of Eq. 6–7) and a
-/// collection of MIG-enabled GPUs (`P_j`).
+/// collection of MIG-enabled GPUs (`P_j`), each tagged with its catalog
+/// model. The GPU characteristic (`H_jk` of Eq. 17–18) is per GPU now:
+/// `gpu.model().characteristic()`.
 #[derive(Debug, Clone)]
 pub struct Host {
     pub id: u32,
@@ -13,8 +15,6 @@ pub struct Host {
     pub ram_gb: u32,
     /// Power/priority weight (`b_j` of Eq. 4).
     pub weight: f64,
-    /// GPU characteristic (`H_jk` of Eq. 17–18); 100 for A100s.
-    pub gpu_characteristic: u32,
     pub(crate) used_cpus: u32,
     pub(crate) used_ram: u32,
     pub(crate) gpus: Vec<GpuState>,
@@ -23,17 +23,22 @@ pub struct Host {
 }
 
 impl Host {
-    /// Create a host with `num_gpus` empty A100s.
+    /// Create a host with `num_gpus` empty A100-40s (the historical
+    /// single-model constructor).
     pub fn new(id: u32, cpus: u32, ram_gb: u32, num_gpus: usize) -> Host {
+        Host::with_models(id, cpus, ram_gb, &vec![GpuModel::A100_40; num_gpus])
+    }
+
+    /// Create a host with one empty GPU per entry of `models`.
+    pub fn with_models(id: u32, cpus: u32, ram_gb: u32, models: &[GpuModel]) -> Host {
         Host {
             id,
             cpus,
             ram_gb,
             weight: 1.0,
-            gpu_characteristic: 100,
             used_cpus: 0,
             used_ram: 0,
-            gpus: vec![GpuState::new(); num_gpus],
+            gpus: models.iter().map(|&m| GpuState::with_model(m)).collect(),
             resident_vms: 0,
         }
     }
@@ -91,6 +96,20 @@ impl Host {
     }
 }
 
+/// GPU count per catalog model over a host slice, indexed by
+/// `GpuModel as usize` — the fleet composition. Shared by
+/// [`super::DataCenter::gpus_by_model`] and the trace generator's
+/// workload summary so the two can never diverge.
+pub fn gpus_by_model(hosts: &[Host]) -> [usize; crate::mig::NUM_MODELS] {
+    let mut out = [0usize; crate::mig::NUM_MODELS];
+    for h in hosts {
+        for g in h.gpus() {
+            out[g.model() as usize] += 1;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +133,20 @@ mod tests {
         let h = Host::new(1, 8, 32, 8);
         assert_eq!(h.gpus().len(), 8);
         assert!(h.gpus().iter().all(|g| g.is_empty()));
+        assert!(h.gpus().iter().all(|g| g.model() == GpuModel::A100_40));
+    }
+
+    #[test]
+    fn mixed_model_host() {
+        let h = Host::with_models(
+            2,
+            64,
+            256,
+            &[GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80],
+        );
+        let models: Vec<GpuModel> = h.gpus().iter().map(|g| g.model()).collect();
+        assert_eq!(models, vec![GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80]);
+        assert_eq!(h.gpus()[0].free_blocks(), 4);
+        assert_eq!(h.gpus()[2].free_blocks(), 8);
     }
 }

@@ -6,11 +6,15 @@
 //! [`super::DataCenter`] on every `place`/`remove`/`migrate`/
 //! `relocate_within_gpu`/`repack_gpu`:
 //!
-//! * **Per-profile GPU feasibility buckets**, keyed off the occupancy
-//!   mask: GPU `r` is in bucket `p` iff `profile_capacity(occ)[p] > 0`.
-//!   A state change moves a GPU in or out of a bucket only when that
-//!   profile's feasible-start count crosses zero, so an update is six
-//!   table lookups plus O(log #GPUs) set operations.
+//! * **Per-profile GPU feasibility buckets**, keyed by the dense
+//!   cross-model [`Profile::dense`] index: GPU `r` is in bucket `k` iff
+//!   `r`'s model owns key `k` and `profile_capacity_for(model,
+//!   occ)[k.index()] > 0`. A GPU therefore only ever appears in buckets
+//!   of its own model's profiles, which is what confines every policy
+//!   scan to model-compatible candidates. A state change moves a GPU in
+//!   or out of a bucket only when that profile's feasible-start count
+//!   crosses zero, so an update is a handful of table lookups plus
+//!   O(log #GPUs) set operations.
 //! * **Host headroom multisets** of free CPU / free RAM over
 //!   GPU-equipped hosts, answering "could any host take this VM?" and
 //!   the CPU-vs-RAM rejection classification from the maxima/minima in
@@ -20,24 +24,25 @@
 //!
 //! Buckets iterate in ascending [`GpuRef`] order — the paper's
 //! `globalIndex` (Algorithm 2). A bucket is therefore exactly the
-//! feasible *subsequence* of a full `globalIndex` scan, which is what
-//! makes first-fit and best-scoring selections over bucket candidates
-//! byte-identical to the pre-index full scans (locked by the
-//! indexed-vs-scan equivalence tests in `rust/tests/decision_api.rs`).
+//! feasible *subsequence* of a full `globalIndex` scan (foreign-model
+//! GPUs are infeasible by definition), which is what makes first-fit
+//! and best-scoring selections over bucket candidates byte-identical to
+//! the pre-index full scans (locked by the indexed-vs-scan equivalence
+//! tests in `rust/tests/decision_api.rs`).
 
 use super::datacenter::GpuRef;
 use super::host::Host;
-use crate::mig::gpu::profile_capacity;
-use crate::mig::{BlockMask, Profile};
+use crate::mig::gpu::profile_capacity_for;
+use crate::mig::{BlockMask, GpuModel, Profile, NUM_MODELS, NUM_PROFILE_KEYS};
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Index over the live cluster state. Owned and kept coherent by
 /// [`super::DataCenter`]; consumers only read it.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClusterIndex {
-    /// `buckets[p]` = GPUs where profile `p` currently fits, in
-    /// `globalIndex` order.
-    buckets: [BTreeSet<GpuRef>; 6],
+    /// `buckets[k]` = GPUs where the profile with dense index `k`
+    /// currently fits, in `globalIndex` order.
+    buckets: Vec<BTreeSet<GpuRef>>,
     /// Multiset of free CPU cores per GPU-equipped host.
     free_cpus: BTreeMap<u32, u32>,
     /// Multiset of free RAM (GB) per GPU-equipped host.
@@ -45,6 +50,22 @@ pub struct ClusterIndex {
     /// Number of GPU-equipped hosts (hosts without GPUs never receive a
     /// VM and are excluded from the headroom multisets).
     host_count: u32,
+    /// Hosts carrying at least one GPU of each model (static per fleet:
+    /// GPU models never change after construction). Drives the
+    /// model-aware rejection classification fast paths.
+    hosts_with_model: [u32; NUM_MODELS],
+}
+
+impl Default for ClusterIndex {
+    fn default() -> Self {
+        ClusterIndex {
+            buckets: vec![BTreeSet::new(); NUM_PROFILE_KEYS],
+            free_cpus: BTreeMap::new(),
+            free_ram: BTreeMap::new(),
+            host_count: 0,
+            hosts_with_model: [0; NUM_MODELS],
+        }
+    }
 }
 
 impl ClusterIndex {
@@ -60,12 +81,21 @@ impl ClusterIndex {
             idx.host_count += 1;
             *idx.free_cpus.entry(h.free_cpus()).or_insert(0) += 1;
             *idx.free_ram.entry(h.free_ram()).or_insert(0) += 1;
+            let mut present = [false; NUM_MODELS];
+            for gpu in h.gpus() {
+                present[gpu.model() as usize] = true;
+            }
+            for (m, here) in present.into_iter().enumerate() {
+                if here {
+                    idx.hosts_with_model[m] += 1;
+                }
+            }
             for (g, gpu) in h.gpus().iter().enumerate() {
                 let r = GpuRef { host: h.id, gpu: g as u8 };
-                let cap = profile_capacity(gpu.occupancy());
-                for (p, bucket) in idx.buckets.iter_mut().enumerate() {
-                    if cap[p] > 0 {
-                        bucket.insert(r);
+                let cap = profile_capacity_for(gpu.model(), gpu.occupancy());
+                for key in gpu.model().profile_keys() {
+                    if cap[key.index()] > 0 {
+                        idx.buckets[key.dense()].insert(r);
                     }
                 }
             }
@@ -73,21 +103,30 @@ impl ClusterIndex {
         idx
     }
 
-    /// GPUs where `profile` currently fits, in `globalIndex` order.
+    /// GPUs where `profile` currently fits (all of the profile's model),
+    /// in `globalIndex` order.
     #[inline]
     pub fn gpus_fitting(&self, profile: Profile) -> &BTreeSet<GpuRef> {
-        &self.buckets[profile.index()]
+        &self.buckets[profile.dense()]
     }
 
     /// Number of GPUs with at least one feasible start for `profile`.
     pub fn fitting_count(&self, profile: Profile) -> usize {
-        self.buckets[profile.index()].len()
+        self.buckets[profile.dense()].len()
     }
 
     /// Number of GPU-equipped hosts.
     #[inline]
     pub fn num_hosts(&self) -> u32 {
         self.host_count
+    }
+
+    /// Number of hosts carrying at least one GPU of `model` — the
+    /// candidate-host population for a request of that model (Eq. 17–18
+    /// compatibility).
+    #[inline]
+    pub fn hosts_with_model(&self, model: GpuModel) -> u32 {
+        self.hosts_with_model[model as usize]
     }
 
     /// Largest free-CPU headroom of any GPU-equipped host (0 when empty).
@@ -123,20 +162,27 @@ impl ClusterIndex {
         self.max_free_cpus() >= cpus && self.max_free_ram() >= ram_gb
     }
 
-    /// Re-bucket one GPU after its occupancy changed.
-    pub(crate) fn update_gpu(&mut self, r: GpuRef, old_occ: BlockMask, new_occ: BlockMask) {
+    /// Re-bucket one GPU of `model` after its occupancy changed.
+    pub(crate) fn update_gpu(
+        &mut self,
+        r: GpuRef,
+        model: GpuModel,
+        old_occ: BlockMask,
+        new_occ: BlockMask,
+    ) {
         if old_occ == new_occ {
             return;
         }
-        let old_cap = profile_capacity(old_occ);
-        let new_cap = profile_capacity(new_occ);
-        for (p, bucket) in self.buckets.iter_mut().enumerate() {
+        let old_cap = profile_capacity_for(model, old_occ);
+        let new_cap = profile_capacity_for(model, new_occ);
+        for key in model.profile_keys() {
+            let p = key.index();
             match (old_cap[p] > 0, new_cap[p] > 0) {
                 (false, true) => {
-                    bucket.insert(r);
+                    self.buckets[key.dense()].insert(r);
                 }
                 (true, false) => {
-                    bucket.remove(&r);
+                    self.buckets[key.dense()].remove(&r);
                 }
                 _ => {}
             }
@@ -171,7 +217,7 @@ mod tests {
     use crate::mig::gpu::feasible_starts;
     use crate::mig::placement::mock_assign;
     use crate::mig::profiles::ALL_PROFILES;
-    use crate::mig::Placement;
+    use crate::mig::{Placement, ProfileKey};
     use crate::util::prop::forall;
     use crate::util::rng::Rng;
 
@@ -187,6 +233,15 @@ mod tests {
         ])
     }
 
+    /// Mixed A30 / A100-40 / H100-80 cluster for the heterogeneity tests.
+    fn mixed_dc() -> DataCenter {
+        DataCenter::new(vec![
+            Host::with_models(0, 16, 64, &[GpuModel::A30, GpuModel::A100_40]),
+            Host::with_models(1, 16, 64, &[GpuModel::H100_80, GpuModel::A30, GpuModel::A100_40]),
+            Host::with_models(2, 8, 32, &[GpuModel::H100_80]),
+        ])
+    }
+
     #[test]
     fn build_on_empty_cluster_buckets_every_gpu() {
         let dc = small_dc();
@@ -198,6 +253,25 @@ mod tests {
         assert_eq!(dc.index().min_free_cpus(), 8);
         assert_eq!(dc.index().max_free_ram(), 64);
         assert_eq!(dc.index().min_free_ram(), 32);
+    }
+
+    #[test]
+    fn buckets_are_model_segregated() {
+        let dc = mixed_dc();
+        // Two A100-40 GPUs, two A30s, two H100-80s.
+        for p in ALL_PROFILES {
+            assert_eq!(dc.index().fitting_count(p), 2, "{p}");
+        }
+        for k in GpuModel::A30.profile_keys() {
+            assert_eq!(dc.index().fitting_count(k), 2, "{k}");
+            for r in dc.index().gpus_fitting(k) {
+                assert_eq!(dc.gpu(*r).model(), GpuModel::A30, "{k}");
+            }
+        }
+        // No A100-80s in this fleet: buckets empty.
+        for k in GpuModel::A100_80.profile_keys() {
+            assert_eq!(dc.index().fitting_count(k), 0, "{k}");
+        }
     }
 
     #[test]
@@ -244,25 +318,45 @@ mod tests {
         assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
     }
 
+    #[test]
+    fn a30_occupancy_tracks_its_own_buckets() {
+        let mut dc = mixed_dc();
+        let r = GpuRef { host: 0, gpu: 0 }; // the A30
+        let k2g = GpuModel::A30.profile(1);
+        let k4g = GpuModel::A30.profile(2);
+        dc.place(&spec(1, k2g, 1, 1), r, Placement { profile: k2g, start: 0 });
+        assert!(!dc.index().gpus_fitting(k4g).contains(&r));
+        assert!(dc.index().gpus_fitting(k2g).contains(&r)); // start 2 free
+        // The A100 buckets are untouched by A30 occupancy changes.
+        for p in ALL_PROFILES {
+            assert_eq!(dc.index().fitting_count(p), 2, "{p}");
+        }
+        dc.check_integrity().unwrap();
+    }
+
     /// Satellite acceptance: after random place/remove/migrate/relocate
-    /// sequences, every bucket and headroom class equals a brute-force
-    /// recomputation from the GPU/host states, and `check_integrity`
-    /// (which embeds the same comparison) passes.
+    /// sequences — on a single-model *or* mixed-model cluster — every
+    /// bucket and headroom class equals a brute-force recomputation from
+    /// the GPU/host states, and `check_integrity` (which embeds the same
+    /// comparison) passes.
     #[test]
     fn prop_incremental_index_matches_brute_force() {
         forall(
             "cluster-index-vs-brute-force",
             |r: &mut Rng| {
-                let mut dc = small_dc();
+                let mut dc = if r.chance(0.5) { small_dc() } else { mixed_dc() };
                 let mut next_vm: u64 = 1;
                 let mut resident: Vec<u64> = Vec::new();
                 let refs: Vec<GpuRef> = dc.gpu_refs();
                 for _ in 0..48 {
                     match r.below(4) {
                         0 | 1 => {
-                            // Place on a random feasible GPU.
+                            // Place on a random feasible GPU (a profile of
+                            // that GPU's own model).
                             let gr = refs[r.below(refs.len() as u64) as usize];
-                            let profile = ALL_PROFILES[r.below(6) as usize];
+                            let model = dc.gpu(gr).model();
+                            let profile =
+                                model.profile(r.below(model.num_profiles() as u64) as usize);
                             let (cpus, ram) = (1 + r.below(3) as u32, 1 + r.below(4) as u32);
                             let vm = spec(next_vm, profile, cpus, ram);
                             let host_ok = dc.host(gr.host).fits_resources(vm.cpus, vm.ram_gb);
@@ -299,9 +393,12 @@ mod tests {
                                     Placement { profile: loc.placement.profile, start: s },
                                 );
                             } else {
-                                // Inter-GPU migration to a random feasible GPU.
+                                // Inter-GPU migration to a random feasible
+                                // GPU of the same model.
                                 let dst = refs[r.below(refs.len() as u64) as usize];
-                                if dst == loc.gpu {
+                                if dst == loc.gpu
+                                    || dc.gpu(dst).model() != loc.placement.profile.model()
+                                {
                                     continue;
                                 }
                                 let (cpus, ram) = dc.vm_demands(vm).unwrap();
@@ -325,6 +422,14 @@ mod tests {
                 let rebuilt = ClusterIndex::build(dc.hosts());
                 if &rebuilt != dc.index() {
                     return Err("incremental index diverged from brute-force rebuild".into());
+                }
+                // GPUs only ever sit in buckets of their own model.
+                for key in ProfileKey::all() {
+                    for r in dc.index().gpus_fitting(key) {
+                        if dc.gpu(*r).model() != key.model() {
+                            return Err(format!("{key}: foreign-model GPU in bucket"));
+                        }
+                    }
                 }
                 dc.check_integrity().map_err(|e| format!("integrity: {e}"))
             },

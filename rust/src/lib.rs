@@ -9,11 +9,12 @@
 //! * [`util`] — in-tree substrates for the offline build environment:
 //!   seeded RNG and distributions, JSON, CLI parsing, a bench harness and
 //!   a property-testing helper.
-//! * [`mig`] — the NVIDIA Multi-Instance GPU substrate: profiles and
-//!   placement rules (Table 1 / Fig. 1), the Configuration-Capability
-//!   metric (Eq. 1–2), the default driver placement policy (Alg. 1), the
-//!   723-node configuration space (§5.1) and the fragmentation metric
-//!   (Alg. 4).
+//! * [`mig`] — the NVIDIA Multi-Instance GPU substrate, parameterized
+//!   over the [`mig::GpuModel`] catalog (A100-40 / A30 / A100-80 /
+//!   H100-80): per-model profiles and placement rules (Table 1 /
+//!   Fig. 1), the Configuration-Capability metric (Eq. 1–2), the default
+//!   driver placement policy (Alg. 1), the A100-40's 723-node
+//!   configuration space (§5.1) and the fragmentation metric (Alg. 4).
 //! * [`trace`] — Alibaba-2023-like workload synthesis with the paper's
 //!   IQR outlier filter and Eq. 27–30 GPU-fraction→profile mapping.
 //! * [`cluster`] — physical machines (CPU/RAM/GPUs), VMs and the
@@ -54,6 +55,37 @@
 //!   paper's evaluation section, plus the parallel multi-seed ×
 //!   multi-policy sweep runner behind the `sweep` CLI subcommand
 //!   (scoped threads, deterministic seed-major output).
+//!
+//! ## Migration note (GpuModel catalog / ProfileKey)
+//!
+//! The MIG layer used to hardcode one part — the A100-40GB (8 blocks,
+//! a closed six-variant `Profile` enum, `[_; 6]` accounting arrays).
+//! It is now parameterized over the [`mig::GpuModel`] catalog. Code
+//! written against the old surface maps as follows:
+//!
+//! * `Profile` is now an alias for [`mig::ProfileKey`] — a
+//!   `(model, per-model index)` pair. The A100-40 constants
+//!   (`Profile::P1g5gb` .. `Profile::P7g40gb`), `ALL_PROFILES`,
+//!   `NUM_BLOCKS`, `PLACEMENTS` and `Profile::parse("2g.10gb")` keep
+//!   their historical meanings.
+//! * `Profile::index()` remains the *per-model* index (per-GPU capacity
+//!   arrays); cluster-wide accounting (`SimResult::per_profile`, MECC
+//!   windows, `ClusterIndex` buckets) is keyed by the new dense
+//!   cross-model [`mig::ProfileKey::dense`] index
+//!   (`0..mig::NUM_PROFILE_KEYS`). The A100-40's dense indices equal its
+//!   historical 0..6, so A100-only layouts are unchanged with a zero
+//!   tail.
+//! * Model-less table lookups grew `_for` variants: `cc(occ)` →
+//!   [`mig::cc_for`]`(model, occ)` (the bare names remain as A100-40
+//!   shorthands); `fragmentation_value(occ)` →
+//!   `fragmentation_value(model, occ)`;
+//!   [`policies::CcScorer::score`] takes the candidates' model.
+//! * [`mig::GpuState`], [`cluster::Host`] (via `Host::with_models`) and
+//!   the trace generator (`TraceConfig::gpu_models`, CLI
+//!   `--gpu-models a30:0.3,a100-40:0.7`) carry per-GPU models; requests
+//!   only ever place on GPUs of their profile's model (Eq. 17–18).
+//!   Single-model defaults are byte-identical to the pre-catalog
+//!   behaviour (locked in `rust/tests/decision_api.rs`).
 //!
 //! ## Migration note (decision API)
 //!

@@ -69,14 +69,17 @@ fn print_help() {
          COMMANDS:\n\
            simulate  --policy NAME [--seed N] [--hosts N] [--pods N]\n\
                      [--heavy-frac 0.3] [--consolidation HOURS] [--trace FILE.csv]\n\
-                     [--quick] [--json FILE]\n\
+                     [--gpu-models a100-40:0.7,h100-80:0.3] [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
            sweep     [--seeds 1,2,3] [--policies ff,grmu] [--threads N]\n\
+                     [--mix ..] [--duration-mu F] [--gpu-models a30:0.3,a100-40:0.7]\n\
                      [--quick] [--json FILE]   parallel seeds × policies sweep\n\
            trace     [--seed N] [--out FILE.csv]      dump the synthetic trace\n\
            serve     --policy NAME [--scorer native|xla] [--quick]   online coordinator\n\
+         \n\
+         GPU MODELS: a100-40 (default) | a30 | a100-80 | h100-80\n\
          \n\
          POLICIES:"
     );
@@ -110,6 +113,15 @@ fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
     }
     if let Some(h) = args.get("consolidation") {
         cfg.consolidation_hours = h.parse().ok();
+    }
+    if let Some(models) = args.get("gpu-models") {
+        match grmu::mig::parse_fleet_mix(models) {
+            Ok(mix) => cfg.trace.gpu_models = mix,
+            Err(e) => {
+                eprintln!("--gpu-models: {e}");
+                std::process::exit(2);
+            }
+        }
     }
     cfg
 }
@@ -166,14 +178,32 @@ fn cmd_simulate(args: &Args) {
         result.wall_seconds,
     );
     let rates = result.per_profile_acceptance();
-    for (i, p) in grmu::mig::profiles::ALL_PROFILES.iter().enumerate() {
+    for p in result.reported_profiles() {
+        let d = p.dense();
         println!(
-            "  {:<8} requested={:>5} accepted={:>5} rate={:.3}",
-            p.name(),
-            result.per_profile[i].0,
-            result.per_profile[i].1,
-            rates[i]
+            "  {:<16} requested={:>5} accepted={:>5} rate={:.3}",
+            p.to_string(),
+            result.per_profile[d].0,
+            result.per_profile[d].1,
+            rates[d]
         );
+    }
+    let fleet_models = result.fleet_models();
+    if fleet_models.len() > 1 {
+        println!("  per-model breakdown:");
+        let per_model = result.per_model_requests();
+        for m in fleet_models {
+            let (req, acc) = per_model[m as usize];
+            println!(
+                "  {:<9} gpus={:>5} requested={:>5} accepted={:>5} acceptance={:.3} active_gpu_rate={:.3}",
+                m.name(),
+                result.gpus_by_model[m as usize],
+                req,
+                acc,
+                grmu::sim::metrics::acceptance_rate(acc, req),
+                result.model_active_rate(m)
+            );
+        }
     }
     if result.requested > result.accepted {
         println!("  rejections: {}", grmu::policies::format_reject_counts(&result.rejections));
@@ -230,9 +260,12 @@ fn cmd_sweep(args: &Args) {
     let json = Json::arr(
         runs.iter()
             .map(|run| {
+                // The fleet/workload-shape knobs are sweep-wide; the
+                // per-cell seed is the sibling field.
                 Json::obj(vec![
                     ("seed", run.seed.into()),
                     ("policy", run.policy.as_str().into()),
+                    ("fleet", experiments::fleet_json(&cfg)),
                     ("result", run.result.to_json()),
                 ])
             })

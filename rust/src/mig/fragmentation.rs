@@ -1,41 +1,47 @@
-//! The GRMU fragmentation metric (Algorithm 4's `Fragmentation`).
+//! The GRMU fragmentation metric (Algorithm 4's `Fragmentation`),
+//! parameterized over the [`GpuModel`] catalog.
 //!
-//! For each profile that could fit in the remaining free blocks, the
-//! metric greedily packs as many instances of the profile as possible and
-//! adds the ratio of *still-free* blocks to the profile size — i.e. how
-//! much space remains unusable at that granularity. High values indicate
-//! GPUs whose free blocks are poorly shaped for future requests; GRMU
-//! defragments the GPU with the maximal value.
+//! For each profile of the GPU's model that could fit in the remaining
+//! free blocks, the metric greedily packs as many instances of the
+//! profile as possible and adds the ratio of *still-free* blocks to the
+//! profile size — i.e. how much space remains unusable at that
+//! granularity. High values indicate GPUs whose free blocks are poorly
+//! shaped for future requests; GRMU defragments the GPU with the maximal
+//! value.
 //!
 //! The pseudocode iterates `{p ∈ Profiles | Size(p) ≤ |gpu'|}` without
 //! fixing an order; we iterate profiles from largest to smallest so that
 //! the packing at each granularity measures the space *large* profiles
 //! cannot use before small profiles consume everything (iterating
-//! smallest-first would immediately pack 1g.5gb into every free block and
-//! collapse the metric to "is block 7 stranded"). The choice is
-//! documented here and exercised by the unit tests.
+//! smallest-first would immediately pack the 1-block profile into every
+//! free block and collapse the metric to "is the last block stranded").
+//! The choice is documented here and exercised by the unit tests.
 
 use super::gpu::BlockMask;
-use super::profiles::{Placement, ALL_PROFILES};
+use super::model::GpuModel;
+use super::profiles::Placement;
 
-/// Fragmentation value of an occupancy mask (Algorithm 4, lines 8–17).
-pub fn fragmentation_value(occ: BlockMask) -> f64 {
+/// Fragmentation value of an occupancy mask of `model` (Algorithm 4,
+/// lines 8–17).
+pub fn fragmentation_value(model: GpuModel, occ: BlockMask) -> f64 {
+    let num_blocks = model.num_blocks() as u32;
     let mut frag = 0.0;
     let mut work = occ;
     // Largest-to-smallest profile order (see module docs).
-    for profile in ALL_PROFILES.iter().rev() {
-        let free = 8 - work.count_ones() as u8;
-        if profile.size() > free {
+    for idx in (0..model.num_profiles()).rev() {
+        let profile = model.profile(idx);
+        let free = num_blocks - work.count_ones();
+        if profile.size() as u32 > free {
             continue;
         }
         // Greedily pack this profile at its start blocks.
         for &start in profile.start_blocks() {
-            let mask = Placement { profile: *profile, start }.mask();
+            let mask = Placement { profile, start }.mask();
             if work & mask == 0 {
                 work |= mask;
             }
         }
-        let remaining = 8 - work.count_ones() as u8;
+        let remaining = num_blocks - work.count_ones();
         frag += remaining as f64 / profile.size() as f64;
     }
     frag
@@ -43,32 +49,40 @@ pub fn fragmentation_value(occ: BlockMask) -> f64 {
 
 /// Convenience: fragmentation of a [`super::gpu::GpuState`].
 pub fn gpu_fragmentation(gpu: &super::gpu::GpuState) -> f64 {
-    fragmentation_value(gpu.occupancy())
+    fragmentation_value(gpu.model(), gpu.occupancy())
 }
 
-/// A fragmentation-free reference point: the GPU that packs perfectly at
-/// every granularity (fully occupied) scores zero.
-pub fn is_fragmentation_free(occ: BlockMask) -> bool {
-    fragmentation_value(occ) == 0.0
+/// A fragmentation-free reference point: a GPU that packs perfectly at
+/// every granularity (e.g. fully occupied) scores zero.
+pub fn is_fragmentation_free(model: GpuModel, occ: BlockMask) -> bool {
+    fragmentation_value(model, occ) == 0.0
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mig::gpu::{cc, FULL_GPU};
+    use crate::mig::model::ALL_MODELS;
     use crate::util::prop::forall;
     use crate::util::rng::Rng;
 
+    const A100: GpuModel = GpuModel::A100_40;
+
     #[test]
     fn full_gpu_not_fragmented() {
-        assert_eq!(fragmentation_value(FULL_GPU), 0.0);
+        for m in ALL_MODELS {
+            assert_eq!(fragmentation_value(m, m.full_mask()), 0.0, "{m}");
+        }
+        assert_eq!(fragmentation_value(A100, FULL_GPU), 0.0);
     }
 
     #[test]
     fn empty_gpu_not_fragmented() {
-        // An empty GPU packs perfectly at every granularity: 7g.40gb
-        // consumes all 8 blocks immediately.
-        assert_eq!(fragmentation_value(0), 0.0);
+        // An empty GPU packs perfectly at every granularity: the heavy
+        // profile consumes all blocks immediately.
+        for m in ALL_MODELS {
+            assert_eq!(fragmentation_value(m, 0), 0.0, "{m}");
+        }
     }
 
     #[test]
@@ -77,15 +91,18 @@ mod tests {
         // larger profile fits, and block 7's neighbour situation strands
         // space at every granularity above 1g.5gb.
         let occ: BlockMask = 0b1010_1010;
-        let frag = fragmentation_value(occ);
+        let frag = fragmentation_value(A100, occ);
         assert!(frag > 0.0, "checkerboard should be fragmented, got {frag}");
+        // Same shape on the A30's 4 blocks.
+        let a30 = fragmentation_value(GpuModel::A30, 0b1010);
+        assert!(a30 > 0.0, "A30 checkerboard should be fragmented, got {a30}");
     }
 
     #[test]
     fn contiguous_half_less_fragmented_than_checkerboard() {
         // 4 occupied blocks in one half vs 4 scattered.
-        let contiguous = fragmentation_value(0b0000_1111);
-        let scattered = fragmentation_value(0b1010_1010);
+        let contiguous = fragmentation_value(A100, 0b0000_1111);
+        let scattered = fragmentation_value(A100, 0b1010_1010);
         assert!(
             contiguous < scattered,
             "contiguous={contiguous} scattered={scattered}"
@@ -97,7 +114,7 @@ mod tests {
         // Blocks 0..=6 occupied; block 7 free but unusable by most
         // profiles (only 1g.10gb@6 would need 6 and 7).
         let occ: BlockMask = 0b0111_1111;
-        assert!(fragmentation_value(occ) > 0.0);
+        assert!(fragmentation_value(A100, occ) > 0.0);
         assert_eq!(cc(occ), 0); // nothing fits at all
     }
 
@@ -108,7 +125,7 @@ mod tests {
         let at_4: BlockMask = 0b0001_0000;
         let at_6: BlockMask = 0b0100_0000;
         assert!(
-            fragmentation_value(at_4) >= fragmentation_value(at_6),
+            fragmentation_value(A100, at_4) >= fragmentation_value(A100, at_6),
             "block-4 arrangement should be at least as fragmented"
         );
         // And CC agrees it is strictly worse.
@@ -119,15 +136,19 @@ mod tests {
     fn prop_fragmentation_nonnegative_and_bounded() {
         forall(
             "frag-bounds",
-            |r: &mut Rng| r.below(256) as u8,
-            |&occ| {
-                let f = fragmentation_value(occ);
-                // Max possible: 7 free at granularity 1 + padding at
-                // larger granularities (7/1 + 7/2 + 7/4 + 7/8 < 14).
-                if (0.0..14.0).contains(&f) {
+            |r: &mut Rng| {
+                let model = ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize];
+                (model, r.below(model.num_masks() as u64) as u8)
+            },
+            |&(model, occ)| {
+                let f = fragmentation_value(model, occ);
+                // Loose bound: (blocks-1) free at granularity 1 plus
+                // padding at larger granularities stays under 2×blocks.
+                let bound = 2.0 * model.num_blocks() as f64;
+                if (0.0..bound).contains(&f) {
                     Ok(())
                 } else {
-                    Err(format!("frag({occ:08b}) = {f} out of bounds"))
+                    Err(format!("{model}: frag({occ:08b}) = {f} out of bounds"))
                 }
             },
         );
@@ -137,9 +158,12 @@ mod tests {
     fn prop_zero_free_blocks_means_zero_fragmentation() {
         forall(
             "frag-full-zero",
-            |r: &mut Rng| r.below(256) as u8,
-            |&occ| {
-                if occ == FULL_GPU && fragmentation_value(occ) != 0.0 {
+            |r: &mut Rng| {
+                let model = ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize];
+                (model, r.below(model.num_masks() as u64) as u8)
+            },
+            |&(model, occ)| {
+                if occ == model.full_mask() && fragmentation_value(model, occ) != 0.0 {
                     Err("full GPU must have zero fragmentation".into())
                 } else {
                     Ok(())

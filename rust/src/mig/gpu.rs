@@ -1,62 +1,91 @@
 //! GPU occupancy masks, the Configuration Capability metric (Eq. 1) and
-//! live GPU state.
+//! live GPU state — parameterized over the [`GpuModel`] catalog.
 //!
-//! A GPU configuration is a bitmask over 8 memory blocks (`1` = occupied).
-//! CC and per-profile capacities are functions of the mask alone, so both
-//! are precomputed for all 256 masks at first use — the native scoring
-//! hot path is then a single table lookup (see EXPERIMENTS.md §Perf).
+//! A GPU configuration is a bitmask over the model's memory blocks
+//! (`1` = occupied; every catalog model has ≤ 8 blocks, so a `u8` mask
+//! suffices). CC and per-profile capacities are functions of the
+//! `(model, mask)` pair alone, so both are precomputed per model at
+//! first use — the native scoring hot path is then a single table lookup
+//! (see EXPERIMENTS.md §Perf). The model-less [`cc`] /
+//! [`profile_capacity`] shorthands evaluate the A100-40GB (the paper's
+//! part), which the §5.1 analyses are written against.
 
-use super::profiles::{Placement, Profile, PLACEMENTS};
+use super::model::{GpuModel, ALL_MODELS, MAX_MODEL_PROFILES, NUM_MODELS};
+use super::profiles::{placements_for, Placement, Profile};
 use std::sync::OnceLock;
 
-/// Occupancy bitmask over the 8 memory blocks. Bit `i` set = block `i` occupied.
+/// Occupancy bitmask over a model's memory blocks. Bit `i` set = block
+/// `i` occupied. Masks of a model with `b` blocks use only the low `b`
+/// bits.
 pub type BlockMask = u8;
 
-/// Mask with every block occupied.
+/// Mask with every block of an A100-40 occupied. Model-aware code uses
+/// [`GpuModel::full_mask`].
 pub const FULL_GPU: BlockMask = 0xFF;
 
-/// Number of memory blocks (re-export for convenience).
+/// Number of memory blocks on an A100-40 (re-export for convenience).
 pub use super::profiles::NUM_BLOCKS;
 
-struct CcTables {
-    /// CC value per occupancy mask (Eq. 1).
-    cc: [u16; 256],
-    /// Per-profile feasible-start counts per occupancy mask.
-    capacity: [[u8; 6]; 256],
+struct ModelTables {
+    /// CC value per occupancy mask (Eq. 1), `1 << num_blocks` entries.
+    cc: Vec<u16>,
+    /// Per-profile feasible-start counts per occupancy mask, indexed by
+    /// the per-model [`Profile::index`].
+    capacity: Vec<[u8; MAX_MODEL_PROFILES]>,
 }
 
-fn tables() -> &'static CcTables {
-    static TABLES: OnceLock<CcTables> = OnceLock::new();
+fn tables() -> &'static [ModelTables; NUM_MODELS] {
+    static TABLES: OnceLock<[ModelTables; NUM_MODELS]> = OnceLock::new();
     TABLES.get_or_init(|| {
-        let mut cc = [0u16; 256];
-        let mut capacity = [[0u8; 6]; 256];
-        for occ in 0usize..256 {
-            for pl in PLACEMENTS {
-                if occ as u8 & pl.mask() == 0 {
-                    cc[occ] += 1;
-                    capacity[occ][pl.profile.index()] += 1;
+        ALL_MODELS.map(|model| {
+            let placements = placements_for(model);
+            let masks = model.num_masks();
+            let mut cc = vec![0u16; masks];
+            let mut capacity = vec![[0u8; MAX_MODEL_PROFILES]; masks];
+            for occ in 0..masks {
+                for pl in &placements {
+                    if occ as u8 & pl.mask() == 0 {
+                        cc[occ] += 1;
+                        capacity[occ][pl.profile.index()] += 1;
+                    }
                 }
             }
-        }
-        CcTables { cc, capacity }
+            ModelTables { cc, capacity }
+        })
     })
 }
 
-/// Configuration Capability (Eq. 1): the number of legal placements that
-/// still fit in configuration `occ`.
+/// Configuration Capability (Eq. 1) of `occ` on `model`: the number of
+/// legal placements that still fit. `occ` must only use the model's low
+/// `num_blocks` bits.
+#[inline]
+pub fn cc_for(model: GpuModel, occ: BlockMask) -> u32 {
+    tables()[model as usize].cc[occ as usize] as u32
+}
+
+/// Feasible-start count for each of `model`'s profiles under `occ`,
+/// indexed by the per-model [`Profile::index`] (entries past
+/// `model.num_profiles()` stay zero). The per-profile capacity columns
+/// of Table 3.
+#[inline]
+pub fn profile_capacity_for(model: GpuModel, occ: BlockMask) -> [u8; MAX_MODEL_PROFILES] {
+    tables()[model as usize].capacity[occ as usize]
+}
+
+/// [`cc_for`] on the A100-40GB (the paper's single-model analyses).
 #[inline]
 pub fn cc(occ: BlockMask) -> u32 {
-    tables().cc[occ as usize] as u32
+    cc_for(GpuModel::A100_40, occ)
 }
 
-/// Feasible-start count for each profile under `occ` (indexed by
-/// [`Profile::index`]). The per-profile capacity columns of Table 3.
+/// [`profile_capacity_for`] on the A100-40GB.
 #[inline]
-pub fn profile_capacity(occ: BlockMask) -> [u8; 6] {
-    tables().capacity[occ as usize]
+pub fn profile_capacity(occ: BlockMask) -> [u8; MAX_MODEL_PROFILES] {
+    profile_capacity_for(GpuModel::A100_40, occ)
 }
 
-/// Iterator over the start blocks where `profile` fits under `occ`.
+/// Iterator over the start blocks where `profile` fits under `occ`
+/// (an occupancy of a GPU of the profile's model).
 pub fn feasible_starts(profile: Profile, occ: BlockMask) -> impl Iterator<Item = u8> {
     profile.start_blocks().iter().copied().filter(move |&s| {
         let m = Placement { profile, start: s }.mask();
@@ -74,17 +103,36 @@ pub struct Instance {
     pub placement: Placement,
 }
 
-/// Live state of a single MIG-enabled GPU: occupancy plus owned instances.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+/// Live state of a single MIG-enabled GPU: the part's model, occupancy,
+/// and owned instances.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GpuState {
+    model: GpuModel,
     occ: BlockMask,
     instances: Vec<Instance>,
 }
 
+impl Default for GpuState {
+    fn default() -> Self {
+        GpuState::new()
+    }
+}
+
 impl GpuState {
-    /// An empty (fully free) GPU.
+    /// An empty (fully free) A100-40 — the historical default part.
     pub fn new() -> GpuState {
-        GpuState::default()
+        GpuState::with_model(GpuModel::A100_40)
+    }
+
+    /// An empty GPU of the given model.
+    pub fn with_model(model: GpuModel) -> GpuState {
+        GpuState { model, occ: 0, instances: Vec::new() }
+    }
+
+    /// The part's model.
+    #[inline]
+    pub fn model(&self) -> GpuModel {
+        self.model
     }
 
     /// Current occupancy mask.
@@ -102,7 +150,7 @@ impl GpuState {
     /// Number of free memory blocks.
     #[inline]
     pub fn free_blocks(&self) -> u32 {
-        NUM_BLOCKS as u32 - self.occ.count_ones()
+        self.model.num_blocks() as u32 - self.occ.count_ones()
     }
 
     /// True if nothing is allocated.
@@ -114,13 +162,17 @@ impl GpuState {
     /// Configuration Capability of the current state.
     #[inline]
     pub fn cc(&self) -> u32 {
-        cc(self.occ)
+        cc_for(self.model, self.occ)
     }
 
-    /// `HalfFull` helper (Table 2): exactly one half (blocks 0–3 or 4–7)
-    /// fully occupied, the other fully free.
+    /// `HalfFull` helper (Table 2): exactly one half of the model's
+    /// blocks fully occupied, the other fully free (blocks 0–3 / 4–7 on
+    /// an 8-block part).
     pub fn half_full(&self) -> bool {
-        (self.occ == 0x0F) || (self.occ == 0xF0)
+        let half = self.model.num_blocks() / 2;
+        let lo = ((1u16 << half) - 1) as u8;
+        let hi = lo << half;
+        (self.occ == lo) || (self.occ == hi)
     }
 
     /// `SingleProfile` helper (Table 2): exactly one instance allocated.
@@ -129,8 +181,15 @@ impl GpuState {
     }
 
     /// Place an instance at a specific placement. Panics in debug builds
-    /// if the placement overlaps existing instances.
+    /// if the placement overlaps existing instances or belongs to a
+    /// different model.
     pub fn place(&mut self, vm: VmId, placement: Placement) {
+        debug_assert_eq!(
+            placement.profile.model(),
+            self.model,
+            "placement {placement} on a {} GPU",
+            self.model
+        );
         debug_assert_eq!(
             self.occ & placement.mask(),
             0,
@@ -154,9 +213,10 @@ impl GpuState {
         self.instances.iter().copied().find(|inst| inst.vm == vm)
     }
 
-    /// Multiset of allocated profiles as counts indexed by profile.
-    pub fn profile_counts(&self) -> [u8; 6] {
-        let mut counts = [0u8; 6];
+    /// Multiset of allocated profiles as counts indexed by the per-model
+    /// [`Profile::index`].
+    pub fn profile_counts(&self) -> [u8; MAX_MODEL_PROFILES] {
+        let mut counts = [0u8; MAX_MODEL_PROFILES];
         for inst in &self.instances {
             counts[inst.placement.profile.index()] += 1;
         }
@@ -168,14 +228,15 @@ impl GpuState {
         self.instances.iter().map(|i| i.placement.profile.compute_engines()).sum()
     }
 
-    /// Render the block map like Fig. 2 (e.g. `"115_22__"` — profile size
-    /// digit per block, `_` free).
+    /// Render the block map like Fig. 2 (e.g. `"115_22__"` — compute
+    /// digit per block, `_` free); one character per model block.
     pub fn block_map(&self) -> String {
-        let mut map = ['_'; 8];
+        let blocks = self.model.num_blocks();
+        let mut map = vec!['_'; blocks as usize];
         for inst in &self.instances {
             let digit =
                 char::from_digit(inst.placement.profile.compute_engines() as u32, 10).unwrap();
-            for b in 0..8u8 {
+            for b in 0..blocks {
                 if inst.placement.mask() & (1 << b) != 0 {
                     map[b as usize] = digit;
                 }
@@ -186,24 +247,28 @@ impl GpuState {
 }
 
 /// Exhaustively verify an occupancy decomposition: does `occ` equal the
-/// union of the instance masks with no overlap? Used by tests and the
-/// simulator's integrity checks.
+/// union of the instance masks with no overlap, and does every instance
+/// belong to the GPU's model? Used by tests and the simulator's
+/// integrity checks.
 pub fn consistent(state: &GpuState) -> bool {
     let mut acc: BlockMask = 0;
     for inst in state.instances() {
+        if inst.placement.profile.model() != state.model() {
+            return false;
+        }
         let m = inst.placement.mask();
         if acc & m != 0 {
             return false;
         }
         acc |= m;
     }
-    acc == state.occupancy()
+    acc == state.occupancy() && state.occupancy() & !state.model().full_mask() == 0
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mig::profiles::ALL_PROFILES;
+    use crate::mig::profiles::{ALL_PROFILES, PLACEMENTS};
     use crate::util::prop::forall;
     use crate::util::rng::Rng;
 
@@ -228,6 +293,33 @@ mod tests {
         assert_eq!(cc(FULL_GPU), 0);
     }
 
+    #[test]
+    fn per_model_cc_of_empty_and_full() {
+        // Empty CC = the model's placement count; full CC = 0.
+        for m in ALL_MODELS {
+            let placements = crate::mig::profiles::placements_for(m).len() as u32;
+            assert_eq!(cc_for(m, 0), placements, "{m}");
+            assert_eq!(cc_for(m, m.full_mask()), 0, "{m}");
+        }
+        // A30: 4 + 2 + 1 legal placements.
+        assert_eq!(cc_for(GpuModel::A30, 0), 7);
+    }
+
+    #[test]
+    fn a30_capacity_tables() {
+        let keys: Vec<Profile> = GpuModel::A30.profile_keys().collect();
+        let cap = profile_capacity_for(GpuModel::A30, 0);
+        assert_eq!(cap[keys[0].index()], 4); // 1g.6gb anywhere
+        assert_eq!(cap[keys[1].index()], 2); // 2g.12gb at 0, 2
+        assert_eq!(cap[keys[2].index()], 1); // 4g.24gb at 0
+        assert_eq!(cap[3..], [0u8; 3]); // unused tail stays zero
+        // Block 1 occupied: 2g.12gb@0 and 4g.24gb die, 2g.12gb@2 lives.
+        let cap = profile_capacity_for(GpuModel::A30, 0b0010);
+        assert_eq!(cap[keys[0].index()], 3);
+        assert_eq!(cap[keys[1].index()], 1);
+        assert_eq!(cap[keys[2].index()], 0);
+    }
+
     /// Fig. 2(a): non-contiguous free blocks where neither 1g.10gb nor
     /// 2g.10gb fit. Occupy blocks 1,3,5,7 — free blocks 0,2,4,6 are all
     /// even, but each 2-block placement needs start and start+1.
@@ -241,15 +333,7 @@ mod tests {
     }
 
     /// Fig. 2(b): contiguous free blocks that still cannot host profiles
-    /// because the required *starting* blocks are unavailable. Blocks
-    /// 1..=3 free (0,4,5,6,7 occupied): 2g.10gb needs start ∈ {0,2,4} and
-    /// two free blocks — start 2 gives blocks 2,3: fits. But 3g.20gb
-    /// (starts 0,4) cannot despite... use blocks 3..=5 free instead:
-    /// starts {0,2,4}: only start 4 has 4,5 free → check a case with no
-    /// valid start: free = {1,2,3}: 1g.10gb starts {0,2,4,6} → start 2
-    /// fits blocks 2,3. Free = {1,3,5}: contiguity absent. True "(b)"
-    /// case: free blocks {5,6,7} are contiguous but 3g.20gb/4g.20gb can't
-    /// start there, and 2g.10gb only fits at one position.
+    /// because the required *starting* blocks are unavailable.
     #[test]
     fn fig2b_contiguous_but_unplaceable() {
         let occ: BlockMask = 0b0001_1111; // blocks 0..=4 occupied; 5,6,7 free
@@ -278,6 +362,22 @@ mod tests {
     }
 
     #[test]
+    fn a30_state_and_halves() {
+        let k2g = GpuModel::A30.profile(1); // 2g.12gb
+        let mut g = GpuState::with_model(GpuModel::A30);
+        assert_eq!(g.free_blocks(), 4);
+        g.place(1, Placement { profile: k2g, start: 0 });
+        assert!(g.half_full(), "2 of 4 blocks in the low half");
+        assert!(g.single_profile());
+        assert_eq!(g.free_blocks(), 2);
+        assert_eq!(g.block_map(), "22__");
+        assert!(consistent(&g));
+        g.place(2, Placement { profile: GpuModel::A30.profile(0), start: 2 });
+        assert!(!g.half_full());
+        assert_eq!(g.cc(), cc_for(GpuModel::A30, 0b0111));
+    }
+
+    #[test]
     fn half_full_detection() {
         let mut g = GpuState::new();
         g.place(1, Placement { profile: Profile::P3g20gb, start: 4 });
@@ -298,32 +398,36 @@ mod tests {
 
     #[test]
     fn cc_table_matches_direct_computation() {
-        for occ in 0u16..256 {
-            let occ = occ as u8;
-            let direct: u32 =
-                PLACEMENTS.iter().filter(|pl| occ & pl.mask() == 0).count() as u32;
-            assert_eq!(cc(occ), direct, "occ={occ:08b}");
-            let cap = profile_capacity(occ);
-            let total: u32 = cap.iter().map(|&c| c as u32).sum();
-            assert_eq!(total, direct, "capacity sum mismatch at occ={occ:08b}");
+        for model in ALL_MODELS {
+            let placements = crate::mig::profiles::placements_for(model);
+            for occ in 0..model.num_masks() {
+                let occ = occ as u8;
+                let direct: u32 =
+                    placements.iter().filter(|pl| occ & pl.mask() == 0).count() as u32;
+                assert_eq!(cc_for(model, occ), direct, "{model} occ={occ:08b}");
+                let cap = profile_capacity_for(model, occ);
+                let total: u32 = cap.iter().map(|&c| c as u32).sum();
+                assert_eq!(total, direct, "{model}: capacity sum mismatch at occ={occ:08b}");
+            }
         }
     }
 
     #[test]
     fn prop_cc_monotone_under_occupation() {
-        // Occupying more blocks never increases CC.
+        // Occupying more blocks never increases CC, on any model.
         forall(
             "cc-monotone",
             |r: &mut Rng| {
-                let occ = r.below(256) as u8;
-                let extra = 1u8 << r.below(8);
-                (occ, extra)
+                let model = ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize];
+                let occ = r.below(model.num_masks() as u64) as u8;
+                let extra = 1u8 << r.below(model.num_blocks() as u64);
+                (model, occ, extra)
             },
-            |&(occ, extra)| {
-                if cc(occ | extra) <= cc(occ) {
+            |&(model, occ, extra)| {
+                if cc_for(model, occ | extra) <= cc_for(model, occ) {
                     Ok(())
                 } else {
-                    Err(format!("cc({:08b}) > cc({:08b})", occ | extra, occ))
+                    Err(format!("{model}: cc({:08b}) > cc({:08b})", occ | extra, occ))
                 }
             },
         );
@@ -333,11 +437,14 @@ mod tests {
     fn prop_feasible_starts_agree_with_capacity() {
         forall(
             "feasible-starts-vs-capacity",
-            |r: &mut Rng| r.below(256) as u8,
-            |&occ| {
-                for p in ALL_PROFILES {
+            |r: &mut Rng| {
+                let model = ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize];
+                (model, r.below(model.num_masks() as u64) as u8)
+            },
+            |&(model, occ)| {
+                for p in model.profile_keys() {
                     let n = feasible_starts(p, occ).count() as u8;
-                    if n != profile_capacity(occ)[p.index()] {
+                    if n != profile_capacity_for(model, occ)[p.index()] {
                         return Err(format!("mismatch for {p} at occ={occ:08b}"));
                     }
                 }
@@ -376,5 +483,13 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn placements_table_sanity() {
+        // Kept from the pre-catalog suite: PLACEMENTS is the A100-40
+        // table the CC tables are built from.
+        assert_eq!(PLACEMENTS.len(), 18);
+        assert_eq!(cc(0) as usize, PLACEMENTS.len());
     }
 }

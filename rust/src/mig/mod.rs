@@ -1,29 +1,43 @@
 //! The NVIDIA Multi-Instance GPU (MIG) substrate.
 //!
-//! Models an A100 as 8 memory blocks with the placement rules of §3
-//! (Table 1 / Fig. 1 / Table 5): six GPU-instance profiles, each with a
-//! fixed size in blocks and a fixed set of legal starting blocks. On top
-//! of that this module provides:
+//! Models every catalog GPU as up to 8 memory blocks with the placement
+//! rules of §3 (Table 1 / Fig. 1 / Table 5): per-model GPU-instance
+//! profiles, each with a fixed size in blocks and a fixed set of legal
+//! starting blocks. On top of that this module provides:
 //!
-//! * [`profiles`] — the profile table and the 18 legal `(profile, start)`
-//!   placements.
+//! * [`model`] — the [`model::GpuModel`] catalog (A100-40 / A30 /
+//!   A100-80 / H100-80) and the cross-model [`model::ProfileKey`]
+//!   replacing the closed A100-only profile enum.
+//! * [`profiles`] — the historical A100-40 surface: `Profile` (now an
+//!   alias for `ProfileKey`), `ALL_PROFILES`, and the 18 legal
+//!   `(profile, start)` placements of Fig. 1, plus
+//!   [`profiles::placements_for`] generating any model's table.
 //! * [`gpu`] — occupancy bitmasks, the Configuration Capability metric
-//!   (Eq. 1) via a precomputed 256-entry table, per-profile capacities and
-//!   the [`gpu::GpuState`] carrying live instances.
+//!   (Eq. 1) via precomputed per-model tables, per-profile capacities and
+//!   the [`gpu::GpuState`] carrying a model tag and live instances.
 //! * [`placement`] — the default NVIDIA driver placement policy
 //!   (Algorithm 1): place a profile at the start block that maximizes the
-//!   post-allocation CC.
-//! * [`config_space`] — exhaustive enumeration of the 723-configuration
-//!   space and the §5.1 optimality analyses.
-//! * [`fragmentation`] — the GRMU fragmentation metric (Algorithm 4).
+//!   post-allocation CC, per model.
+//! * [`config_space`] — exhaustive enumeration of the A100-40's
+//!   723-configuration space and the §5.1 optimality analyses.
+//! * [`fragmentation`] — the GRMU fragmentation metric (Algorithm 4),
+//!   per model.
 
 pub mod config_space;
 pub mod fragmentation;
 pub mod gpu;
+pub mod model;
 pub mod placement;
 pub mod profiles;
 
 pub use fragmentation::fragmentation_value;
-pub use gpu::{cc, profile_capacity, BlockMask, GpuState, Instance, FULL_GPU, NUM_BLOCKS};
+pub use gpu::{
+    cc, cc_for, profile_capacity, profile_capacity_for, BlockMask, GpuState, Instance, FULL_GPU,
+    NUM_BLOCKS,
+};
+pub use model::{
+    parse_fleet_mix, GpuModel, ProfileKey, ALL_MODELS, MAX_MODEL_PROFILES, NUM_MODELS,
+    NUM_PROFILE_KEYS,
+};
 pub use placement::{assign, mock_assign, unassign_vm};
-pub use profiles::{Placement, Profile, PLACEMENTS};
+pub use profiles::{placements_for, Placement, Profile, PLACEMENTS};

@@ -1,0 +1,713 @@
+//! The GPU-model catalog: per-model MIG geometry for heterogeneous
+//! fleets.
+//!
+//! The paper (and this crate's original MIG layer) hardcodes one part —
+//! the A100-40GB with its 8 memory blocks and six GI profiles. Real MIG
+//! clouds mix parts with different block counts and legal-placement
+//! tables (A30, A100-80GB, H100-80GB, ...). This module is the single
+//! source of truth for that geometry:
+//!
+//! * [`GpuModel`] — the supported parts, each with a [`ModelSpec`]
+//!   (block count, compute engines, per-profile tables).
+//! * [`ProfileKey`] — a `(model, per-model index)` pair replacing the old
+//!   closed six-variant `Profile` enum. `Profile` is now a type alias for
+//!   `ProfileKey`; the A100-40 profiles keep their historical associated
+//!   constants (`Profile::P1g5gb` .. `Profile::P7g40gb`).
+//!
+//! ## Dense-index determinism contract
+//!
+//! Catalog order puts the A100-40GB **first**, so the dense cross-model
+//! index ([`ProfileKey::dense`], `0..NUM_PROFILE_KEYS`) of every A100-40
+//! profile equals its historical `Profile::index()` value (0..6). All
+//! cluster-wide accounting arrays (`SimResult::per_profile`, MECC
+//! windows, `ClusterIndex` buckets) are keyed by the dense index, which
+//! keeps A100-only runs byte-identical to the pre-catalog layout: the
+//! first six slots carry exactly the old contents and every other slot
+//! stays zero/empty. Per-GPU arrays (capacity tables, instance counts)
+//! stay keyed by the *per-model* index `0..MAX_MODEL_PROFILES`.
+
+use std::fmt;
+
+/// Number of models in the catalog.
+pub const NUM_MODELS: usize = 4;
+
+/// Upper bound on profiles per model (sizes per-GPU capacity arrays).
+pub const MAX_MODEL_PROFILES: usize = 6;
+
+/// Total profile keys across the catalog (the dense index space).
+pub const NUM_PROFILE_KEYS: usize = 21;
+
+/// A MIG-capable GPU part. Catalog order (= `as usize` = dense-offset
+/// order) intentionally puts the A100-40GB first — see the module docs'
+/// determinism contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[allow(non_camel_case_types)] // hardware part names: A100_40, H100_80
+pub enum GpuModel {
+    /// NVIDIA A100 40GB: 8 × 5 GB blocks, 7 compute engines (the paper's
+    /// part; Table 1 / Table 5).
+    A100_40,
+    /// NVIDIA A30 24GB: 4 × 6 GB blocks, 4 compute engines.
+    A30,
+    /// NVIDIA A100 80GB: 8 × 10 GB blocks, 7 compute engines.
+    A100_80,
+    /// NVIDIA H100 80GB: 8 × 10 GB blocks, 7 compute engines (A100-80
+    /// geometry, distinct characteristic `h_i`).
+    H100_80,
+}
+
+/// All models in catalog order.
+pub const ALL_MODELS: [GpuModel; NUM_MODELS] =
+    [GpuModel::A100_40, GpuModel::A30, GpuModel::A100_80, GpuModel::H100_80];
+
+/// One GI profile row of a model's table (`Cg.Mgb`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProfileSpec {
+    /// Canonical NVIDIA name, e.g. `"2g.10gb"`.
+    pub name: &'static str,
+    /// Size in memory blocks (`g_i`).
+    pub blocks: u8,
+    /// Compute engines (the `C` in `Cg.Mgb`).
+    pub compute: u8,
+    /// Memory in GB (the `M` in `Cg.Mgb`).
+    pub memory_gb: u8,
+    /// Legal starting blocks (the model's Algorithm-1 `startBlocks` row).
+    pub start_blocks: &'static [u8],
+    /// Maximum simultaneous instances on one GPU.
+    pub max_instances: u8,
+}
+
+/// Static geometry of one GPU model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Canonical lowercase name used by `--gpu-models` and reports.
+    pub name: &'static str,
+    /// Memory blocks on the part (≤ 8, so occupancy fits a `u8` mask).
+    pub num_blocks: u8,
+    /// Total compute engines.
+    pub total_compute: u8,
+    /// GB per memory block.
+    pub block_gb: u8,
+    /// GPU characteristic (`h_i` / `H_jk` of Eq. 17–18) — the
+    /// compatibility code a request's profile must match.
+    pub characteristic: u32,
+    /// First dense index of this model's profiles.
+    pub dense_offset: usize,
+    /// The profile table, ordered smallest-to-largest (the per-model
+    /// analogue of `ALL_PROFILES` order).
+    pub profiles: &'static [ProfileSpec],
+}
+
+const A100_40_PROFILES: [ProfileSpec; 6] = [
+    ProfileSpec {
+        name: "1g.5gb",
+        blocks: 1,
+        compute: 1,
+        memory_gb: 5,
+        start_blocks: &[0, 1, 2, 3, 4, 5, 6],
+        max_instances: 7,
+    },
+    ProfileSpec {
+        name: "1g.10gb",
+        blocks: 2,
+        compute: 1,
+        memory_gb: 10,
+        start_blocks: &[0, 2, 4, 6],
+        max_instances: 4,
+    },
+    ProfileSpec {
+        name: "2g.10gb",
+        blocks: 2,
+        compute: 2,
+        memory_gb: 10,
+        start_blocks: &[0, 2, 4],
+        max_instances: 3,
+    },
+    ProfileSpec {
+        name: "3g.20gb",
+        blocks: 4,
+        compute: 3,
+        memory_gb: 20,
+        start_blocks: &[0, 4],
+        max_instances: 2,
+    },
+    ProfileSpec {
+        name: "4g.20gb",
+        blocks: 4,
+        compute: 4,
+        memory_gb: 20,
+        start_blocks: &[0],
+        max_instances: 1,
+    },
+    ProfileSpec {
+        name: "7g.40gb",
+        blocks: 8,
+        compute: 7,
+        memory_gb: 40,
+        start_blocks: &[0],
+        max_instances: 1,
+    },
+];
+
+const A30_PROFILES: [ProfileSpec; 3] = [
+    ProfileSpec {
+        name: "1g.6gb",
+        blocks: 1,
+        compute: 1,
+        memory_gb: 6,
+        start_blocks: &[0, 1, 2, 3],
+        max_instances: 4,
+    },
+    ProfileSpec {
+        name: "2g.12gb",
+        blocks: 2,
+        compute: 2,
+        memory_gb: 12,
+        start_blocks: &[0, 2],
+        max_instances: 2,
+    },
+    ProfileSpec {
+        name: "4g.24gb",
+        blocks: 4,
+        compute: 4,
+        memory_gb: 24,
+        start_blocks: &[0],
+        max_instances: 1,
+    },
+];
+
+const A100_80_PROFILES: [ProfileSpec; 6] = [
+    ProfileSpec {
+        name: "1g.10gb",
+        blocks: 1,
+        compute: 1,
+        memory_gb: 10,
+        start_blocks: &[0, 1, 2, 3, 4, 5, 6],
+        max_instances: 7,
+    },
+    ProfileSpec {
+        name: "1g.20gb",
+        blocks: 2,
+        compute: 1,
+        memory_gb: 20,
+        start_blocks: &[0, 2, 4, 6],
+        max_instances: 4,
+    },
+    ProfileSpec {
+        name: "2g.20gb",
+        blocks: 2,
+        compute: 2,
+        memory_gb: 20,
+        start_blocks: &[0, 2, 4],
+        max_instances: 3,
+    },
+    ProfileSpec {
+        name: "3g.40gb",
+        blocks: 4,
+        compute: 3,
+        memory_gb: 40,
+        start_blocks: &[0, 4],
+        max_instances: 2,
+    },
+    ProfileSpec {
+        name: "4g.40gb",
+        blocks: 4,
+        compute: 4,
+        memory_gb: 40,
+        start_blocks: &[0],
+        max_instances: 1,
+    },
+    ProfileSpec {
+        name: "7g.80gb",
+        blocks: 8,
+        compute: 7,
+        memory_gb: 80,
+        start_blocks: &[0],
+        max_instances: 1,
+    },
+];
+
+// The H100-80GB shares the A100-80GB MIG geometry (8 × 10 GB blocks,
+// 7 engines, same profile names and placement rules); only the
+// characteristic code distinguishes it for Eq. 17–18 compatibility.
+const H100_80_PROFILES: [ProfileSpec; 6] = A100_80_PROFILES;
+
+static MODEL_SPECS: [ModelSpec; NUM_MODELS] = [
+    ModelSpec {
+        name: "a100-40",
+        num_blocks: 8,
+        total_compute: 7,
+        block_gb: 5,
+        characteristic: 100,
+        dense_offset: 0,
+        profiles: &A100_40_PROFILES,
+    },
+    ModelSpec {
+        name: "a30",
+        num_blocks: 4,
+        total_compute: 4,
+        block_gb: 6,
+        characteristic: 30,
+        dense_offset: 6,
+        profiles: &A30_PROFILES,
+    },
+    ModelSpec {
+        name: "a100-80",
+        num_blocks: 8,
+        total_compute: 7,
+        block_gb: 10,
+        characteristic: 101,
+        dense_offset: 9,
+        profiles: &A100_80_PROFILES,
+    },
+    ModelSpec {
+        name: "h100-80",
+        num_blocks: 8,
+        total_compute: 7,
+        block_gb: 10,
+        characteristic: 900,
+        dense_offset: 15,
+        profiles: &H100_80_PROFILES,
+    },
+];
+
+impl GpuModel {
+    /// The model's static geometry.
+    #[inline]
+    pub fn spec(self) -> &'static ModelSpec {
+        &MODEL_SPECS[self as usize]
+    }
+
+    /// Canonical lowercase name (`"a100-40"`, `"a30"`, ...).
+    #[inline]
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Memory blocks on the part.
+    #[inline]
+    pub fn num_blocks(self) -> u8 {
+        self.spec().num_blocks
+    }
+
+    /// Total compute engines.
+    #[inline]
+    pub fn total_compute(self) -> u8 {
+        self.spec().total_compute
+    }
+
+    /// GPU characteristic (`H_jk` of Eq. 17–18).
+    #[inline]
+    pub fn characteristic(self) -> u32 {
+        self.spec().characteristic
+    }
+
+    /// Occupancy mask with every block of this model occupied.
+    #[inline]
+    pub fn full_mask(self) -> u8 {
+        ((1u16 << self.num_blocks()) - 1) as u8
+    }
+
+    /// Number of occupancy masks (`2^num_blocks`) — per-model table size.
+    #[inline]
+    pub fn num_masks(self) -> usize {
+        1usize << self.num_blocks()
+    }
+
+    /// Number of GI profiles this model supports.
+    #[inline]
+    pub fn num_profiles(self) -> usize {
+        self.spec().profiles.len()
+    }
+
+    /// First dense index of this model's profile keys.
+    #[inline]
+    pub fn dense_offset(self) -> usize {
+        self.spec().dense_offset
+    }
+
+    /// The profile key at per-model index `idx`.
+    #[inline]
+    pub fn profile(self, idx: usize) -> ProfileKey {
+        debug_assert!(idx < self.num_profiles());
+        ProfileKey { model: self, idx: idx as u8 }
+    }
+
+    /// All of this model's profile keys, smallest profile first.
+    pub fn profile_keys(self) -> impl Iterator<Item = ProfileKey> {
+        (0..self.num_profiles()).map(move |i| self.profile(i))
+    }
+
+    /// Parse a model name (case-insensitive; accepts the aliases `a100`
+    /// for `a100-40` and `h100` for `h100-80`).
+    pub fn parse(s: &str) -> Option<GpuModel> {
+        let needle = s.trim().to_ascii_lowercase();
+        match needle.as_str() {
+            "a100" => return Some(GpuModel::A100_40),
+            "h100" => return Some(GpuModel::H100_80),
+            _ => {}
+        }
+        ALL_MODELS.iter().copied().find(|m| m.name() == needle)
+    }
+}
+
+impl fmt::Display for GpuModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A GI profile of one catalog model: the open-world replacement for the
+/// closed A100-only `Profile` enum. Ordering is `(model, idx)` — the
+/// A100-40 subset keeps its historical order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ProfileKey {
+    model: GpuModel,
+    idx: u8,
+}
+
+// The historical `Profile::P1g5gb` .. `Profile::P7g40gb` spellings are
+// kept verbatim (they are NVIDIA profile names, not globals).
+#[allow(non_upper_case_globals)]
+impl ProfileKey {
+    /// MIG 1g.5gb (A100-40) — 1 block, 1 compute engine, up to 7 instances.
+    pub const P1g5gb: ProfileKey = ProfileKey { model: GpuModel::A100_40, idx: 0 };
+    /// MIG 1g.10gb (A100-40) — 2 blocks, 1 compute engine, up to 4 instances.
+    pub const P1g10gb: ProfileKey = ProfileKey { model: GpuModel::A100_40, idx: 1 };
+    /// MIG 2g.10gb (A100-40) — 2 blocks, 2 compute engines, up to 3 instances.
+    pub const P2g10gb: ProfileKey = ProfileKey { model: GpuModel::A100_40, idx: 2 };
+    /// MIG 3g.20gb (A100-40) — 4 blocks, 3 compute engines, up to 2 instances.
+    pub const P3g20gb: ProfileKey = ProfileKey { model: GpuModel::A100_40, idx: 3 };
+    /// MIG 4g.20gb (A100-40) — 4 blocks, 4 compute engines, 1 instance.
+    pub const P4g20gb: ProfileKey = ProfileKey { model: GpuModel::A100_40, idx: 4 };
+    /// MIG 7g.40gb (A100-40) — 8 blocks, 7 compute engines, whole GPU.
+    pub const P7g40gb: ProfileKey = ProfileKey { model: GpuModel::A100_40, idx: 5 };
+
+    /// The owning model.
+    #[inline]
+    pub fn model(self) -> GpuModel {
+        self.model
+    }
+
+    /// Per-model index `0..model.num_profiles()` — indexes per-GPU
+    /// capacity/count arrays. For A100-40 profiles this equals the
+    /// historical `Profile::index()`.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.idx as usize
+    }
+
+    /// Dense cross-model index `0..NUM_PROFILE_KEYS` — indexes
+    /// cluster-wide accounting (buckets, per-profile counters).
+    #[inline]
+    pub fn dense(self) -> usize {
+        self.model.dense_offset() + self.idx as usize
+    }
+
+    /// Profile key from a dense index.
+    pub fn from_dense(d: usize) -> ProfileKey {
+        for m in ALL_MODELS {
+            let off = m.dense_offset();
+            if d < off + m.num_profiles() {
+                return m.profile(d - off);
+            }
+        }
+        panic!("dense profile index {d} out of range");
+    }
+
+    /// A100-40 profile from its historical dense index (compatibility
+    /// accessor for the old `Profile::from_index`).
+    #[inline]
+    pub fn from_index(i: usize) -> ProfileKey {
+        GpuModel::A100_40.profile(i)
+    }
+
+    /// Every catalog profile key in dense order.
+    pub fn all() -> impl Iterator<Item = ProfileKey> {
+        ALL_MODELS.into_iter().flat_map(|m| m.profile_keys())
+    }
+
+    #[inline]
+    fn spec(self) -> &'static ProfileSpec {
+        &self.model.spec().profiles[self.idx as usize]
+    }
+
+    /// Size in memory blocks (`g_i` in Table 5).
+    #[inline]
+    pub fn size(self) -> u8 {
+        self.spec().blocks
+    }
+
+    /// Number of compute engines (the `C` in `Cg.Mgb`).
+    #[inline]
+    pub fn compute_engines(self) -> u8 {
+        self.spec().compute
+    }
+
+    /// Memory in GB (the `M` in `Cg.Mgb`).
+    #[inline]
+    pub fn memory_gb(self) -> u8 {
+        self.spec().memory_gb
+    }
+
+    /// Legal starting blocks (the model's Algorithm-1 `startBlocks` row).
+    #[inline]
+    pub fn start_blocks(self) -> &'static [u8] {
+        self.spec().start_blocks
+    }
+
+    /// Last permissible starting index (`s_i` in Table 5).
+    #[inline]
+    pub fn last_start(self) -> u8 {
+        *self.spec().start_blocks.last().expect("non-empty start table")
+    }
+
+    /// GPU characteristic required by this GI (`h_i` in Table 5; the
+    /// compatibility constraint of Eq. 17–18 — a GI only lands on a GPU
+    /// of the same model).
+    #[inline]
+    pub fn characteristic(self) -> u32 {
+        self.model.characteristic()
+    }
+
+    /// Maximum simultaneous instances on one GPU (Table 1).
+    #[inline]
+    pub fn max_instances(self) -> u8 {
+        self.spec().max_instances
+    }
+
+    /// Eq. 28: combined compute×memory value used for workload mapping,
+    /// normalized within the owning model.
+    #[inline]
+    pub fn combined_value(self) -> f64 {
+        let spec = self.model.spec();
+        (self.compute_engines() as f64 / spec.total_compute as f64)
+            * (self.size() as f64 / spec.num_blocks as f64)
+    }
+
+    /// Canonical NVIDIA profile name (unqualified, e.g. `"2g.10gb"`).
+    #[inline]
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Model-qualified name, e.g. `"h100-80:3g.40gb"`. Unambiguous even
+    /// where two models share profile names (A100-80 / H100-80).
+    pub fn qualified_name(self) -> String {
+        format!("{}:{}", self.model.name(), self.name())
+    }
+
+    /// Parse a profile name. Bare names (`"2g.10gb"`) resolve against the
+    /// A100-40 table (the historical behaviour); model-qualified names
+    /// (`"a30:2g.12gb"`) resolve against the named model.
+    pub fn parse(s: &str) -> Option<ProfileKey> {
+        match s.split_once(':') {
+            Some((model, profile)) => {
+                let m = GpuModel::parse(model)?;
+                m.profile_keys().find(|k| k.name() == profile.trim())
+            }
+            None => GpuModel::A100_40.profile_keys().find(|k| k.name() == s),
+        }
+    }
+
+    /// Whether this profile consumes the whole GPU (routes to the heavy
+    /// basket in GRMU's dual-basket pooling). Generalizes the A100-only
+    /// `== P7g40gb` check to "size equals the model's block count".
+    #[inline]
+    pub fn is_heavy(self) -> bool {
+        self.size() == self.model.num_blocks()
+    }
+}
+
+/// A100-40 profiles display bare (the historical output format); other
+/// models display model-qualified to stay unambiguous.
+impl fmt::Display for ProfileKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.model == GpuModel::A100_40 {
+            f.write_str(self.name())
+        } else {
+            write!(f, "{}:{}", self.model.name(), self.name())
+        }
+    }
+}
+
+/// Parse a `--gpu-models` fleet mix like `"a100-40:0.7,h100-80:0.3"`.
+/// A bare model name gets weight 1. Returns `(model, weight)` pairs in
+/// input order; weights need not sum to 1 (samplers normalize).
+pub fn parse_fleet_mix(s: &str) -> Result<Vec<(GpuModel, f64)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, weight) = match part.rsplit_once(':') {
+            Some((name, w)) => {
+                let weight: f64 =
+                    w.trim().parse().map_err(|_| format!("bad weight in '{part}'"))?;
+                (name, weight)
+            }
+            None => (part, 1.0),
+        };
+        let model = GpuModel::parse(name).ok_or_else(|| {
+            let known: Vec<&str> = ALL_MODELS.iter().map(|m| m.name()).collect();
+            format!("unknown GPU model '{}'; known models: {}", name.trim(), known.join(", "))
+        })?;
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(format!("non-positive weight for '{}'", model.name()));
+        }
+        out.push((model, weight));
+    }
+    if out.is_empty() {
+        return Err("empty --gpu-models list".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_offsets_partition_the_key_space() {
+        let mut next = 0usize;
+        for m in ALL_MODELS {
+            assert_eq!(m.dense_offset(), next, "{m}");
+            next += m.num_profiles();
+        }
+        assert_eq!(next, NUM_PROFILE_KEYS);
+        assert!(ALL_MODELS.iter().all(|m| m.num_profiles() <= MAX_MODEL_PROFILES));
+    }
+
+    #[test]
+    fn a100_40_dense_equals_historical_index() {
+        // The determinism contract: A100-40 keys occupy dense 0..6 in
+        // historical `Profile::index()` order.
+        for (i, k) in GpuModel::A100_40.profile_keys().enumerate() {
+            assert_eq!(k.dense(), i);
+            assert_eq!(k.index(), i);
+        }
+        assert_eq!(ProfileKey::P7g40gb.dense(), 5);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        for (d, k) in ProfileKey::all().enumerate() {
+            assert_eq!(k.dense(), d);
+            assert_eq!(ProfileKey::from_dense(d), k);
+        }
+    }
+
+    #[test]
+    fn start_tables_are_legal() {
+        for k in ProfileKey::all() {
+            let starts = k.start_blocks();
+            assert!(!starts.is_empty(), "{k}");
+            for w in starts.windows(2) {
+                assert!(w[0] < w[1], "{k}: starts not increasing");
+            }
+            for &s in starts {
+                assert!(s + k.size() <= k.model().num_blocks(), "{k}@{s} overflows");
+                // Starts align to multiples of the size except the
+                // 1-block profiles (the ILP's Eq. 14–15 invariant).
+                assert_eq!(s % k.size(), 0, "{k}@{s} misaligned");
+            }
+            assert_eq!(*starts.last().unwrap(), k.last_start());
+        }
+    }
+
+    #[test]
+    fn a30_geometry() {
+        let m = GpuModel::A30;
+        assert_eq!(m.num_blocks(), 4);
+        assert_eq!(m.total_compute(), 4);
+        assert_eq!(m.full_mask(), 0b0000_1111);
+        assert_eq!(m.num_profiles(), 3);
+        let names: Vec<&str> = m.profile_keys().map(|k| k.name()).collect();
+        assert_eq!(names, vec!["1g.6gb", "2g.12gb", "4g.24gb"]);
+        // 4g.24gb is the whole part → heavy.
+        assert!(m.profile(2).is_heavy());
+        assert!(!m.profile(1).is_heavy());
+        assert_eq!(m.profile(2).memory_gb(), 24);
+        assert!((m.profile(2).combined_value() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn h100_shares_a100_80_geometry_not_identity() {
+        let a = GpuModel::A100_80;
+        let h = GpuModel::H100_80;
+        assert_eq!(a.num_profiles(), h.num_profiles());
+        for (ka, kh) in a.profile_keys().zip(h.profile_keys()) {
+            assert_eq!(ka.name(), kh.name());
+            assert_eq!(ka.size(), kh.size());
+            assert_ne!(ka, kh, "keys must stay model-distinct");
+            assert_ne!(ka.dense(), kh.dense());
+        }
+        assert_ne!(a.characteristic(), h.characteristic());
+    }
+
+    #[test]
+    fn heavy_iff_whole_part() {
+        for k in ProfileKey::all() {
+            assert_eq!(k.is_heavy(), k.size() == k.model().num_blocks(), "{k}");
+        }
+        // Exactly one heavy profile per model.
+        for m in ALL_MODELS {
+            assert_eq!(m.profile_keys().filter(|k| k.is_heavy()).count(), 1, "{m}");
+        }
+    }
+
+    #[test]
+    fn model_parse_roundtrip_and_aliases() {
+        for m in ALL_MODELS {
+            assert_eq!(GpuModel::parse(m.name()), Some(m));
+            assert_eq!(GpuModel::parse(&m.name().to_uppercase()), Some(m));
+        }
+        assert_eq!(GpuModel::parse("a100"), Some(GpuModel::A100_40));
+        assert_eq!(GpuModel::parse("h100"), Some(GpuModel::H100_80));
+        assert_eq!(GpuModel::parse("v100"), None);
+    }
+
+    #[test]
+    fn qualified_parse_and_names() {
+        assert_eq!(ProfileKey::parse("1g.5gb"), Some(ProfileKey::P1g5gb));
+        assert_eq!(ProfileKey::parse("a30:2g.12gb"), Some(GpuModel::A30.profile(1)));
+        let a80 = ProfileKey::parse("a100-80:1g.10gb").unwrap();
+        let h80 = ProfileKey::parse("h100-80:1g.10gb").unwrap();
+        assert_ne!(a80, h80);
+        assert_eq!(h80.qualified_name(), "h100-80:1g.10gb");
+        // Bare non-A100-40 names do not resolve (1g.6gb is A30-only).
+        assert_eq!(ProfileKey::parse("1g.6gb"), None);
+    }
+
+    #[test]
+    fn display_qualifies_non_default_models() {
+        assert_eq!(ProfileKey::P2g10gb.to_string(), "2g.10gb");
+        assert_eq!(GpuModel::A30.profile(0).to_string(), "a30:1g.6gb");
+    }
+
+    #[test]
+    fn fleet_mix_parsing() {
+        let mix = parse_fleet_mix("a30:0.3,a100-40:0.4,h100-80:0.3").unwrap();
+        assert_eq!(
+            mix,
+            vec![
+                (GpuModel::A30, 0.3),
+                (GpuModel::A100_40, 0.4),
+                (GpuModel::H100_80, 0.3)
+            ]
+        );
+        assert_eq!(parse_fleet_mix("a100-40").unwrap(), vec![(GpuModel::A100_40, 1.0)]);
+        assert!(parse_fleet_mix("v100:1.0").unwrap_err().contains("known models"));
+        assert!(parse_fleet_mix("a30:0").is_err());
+        assert!(parse_fleet_mix("").is_err());
+    }
+
+    #[test]
+    fn combined_values_increase_within_each_model_to_one() {
+        for m in ALL_MODELS {
+            let mut prev = 0.0;
+            for k in m.profile_keys() {
+                let v = k.combined_value();
+                assert!(v > prev, "{k}: combined value should increase");
+                prev = v;
+            }
+            assert!((prev - 1.0).abs() < 1e-12, "{m}: heavy profile must normalize to 1");
+        }
+    }
+}

@@ -4,19 +4,24 @@
 //! block whose resulting configuration maximizes the Configuration
 //! Capability (Eq. 2). Ties resolve to the first maximizing start in
 //! `startBlocks` order — this reproduces the paper's documented behaviour
-//! (on an empty GPU the first 1g.5gb lands on block 6, the second on
+//! (on an empty A100 the first 1g.5gb lands on block 6, the second on
 //! block 4).
 //!
 //! NVIDIA does not allow overriding this intra-GPU policy, so every
 //! placement policy in [`crate::policies`] funnels through [`assign`].
+//! The decision is a pure function of `(model, occupancy, profile)`, so
+//! one lookup table per catalog model is precomputed at first use — the
+//! single hottest lookup in every policy's scan (EXPERIMENTS.md §Perf).
 
-use super::gpu::{cc, BlockMask, GpuState, VmId};
-use super::profiles::{Placement, Profile, ALL_PROFILES};
+use super::gpu::{cc_for, BlockMask, GpuState, VmId};
+use super::model::{ALL_MODELS, MAX_MODEL_PROFILES, NUM_MODELS};
+use super::profiles::{Placement, Profile};
 use std::sync::OnceLock;
 
 /// Reference implementation of Algorithm 1's start selection — used to
-/// build the lookup table and kept for the property tests.
+/// build the lookup tables and kept for the property tests.
 fn mock_assign_uncached(occ: BlockMask, profile: Profile) -> Option<(Placement, BlockMask)> {
+    let model = profile.model();
     let mut best: Option<(u32, Placement, BlockMask)> = None;
     for &start in profile.start_blocks() {
         let pl = Placement { profile, start };
@@ -25,7 +30,7 @@ fn mock_assign_uncached(occ: BlockMask, profile: Profile) -> Option<(Placement, 
             continue;
         }
         let new_occ = occ | mask;
-        let score = cc(new_occ);
+        let score = cc_for(model, new_occ);
         match best {
             Some((best_score, _, _)) if score <= best_score => {}
             _ => best = Some((score, pl, new_occ)),
@@ -34,32 +39,33 @@ fn mock_assign_uncached(occ: BlockMask, profile: Profile) -> Option<(Placement, 
     best.map(|(_, pl, new_occ)| (pl, new_occ))
 }
 
-/// Precomputed Algorithm 1 decisions: `(start + 1, new_occ)` per
-/// (occupancy, profile), 0 = no fit. The decision is a pure function of
-/// an 8-bit mask and one of six profiles, so the full table is 1.5 K
-/// entries — this is the single hottest lookup in every policy's scan
-/// (see EXPERIMENTS.md §Perf).
-fn assign_table() -> &'static [[(u8, u8); 6]; 256] {
-    static TABLE: OnceLock<[[(u8, u8); 6]; 256]> = OnceLock::new();
-    TABLE.get_or_init(|| {
-        let mut table = [[(0u8, 0u8); 6]; 256];
-        for occ in 0usize..256 {
-            for profile in ALL_PROFILES {
-                if let Some((pl, new_occ)) = mock_assign_uncached(occ as u8, profile) {
-                    table[occ][profile.index()] = (pl.start + 1, new_occ);
+/// Precomputed Algorithm 1 decisions per model: `(start + 1, new_occ)`
+/// per (occupancy, per-model profile index), 0 = no fit.
+fn assign_tables() -> &'static [Vec<[(u8, u8); MAX_MODEL_PROFILES]>; NUM_MODELS] {
+    static TABLES: OnceLock<[Vec<[(u8, u8); MAX_MODEL_PROFILES]>; NUM_MODELS]> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        ALL_MODELS.map(|model| {
+            let mut table = vec![[(0u8, 0u8); MAX_MODEL_PROFILES]; model.num_masks()];
+            for (occ, row) in table.iter_mut().enumerate() {
+                for profile in model.profile_keys() {
+                    if let Some((pl, new_occ)) = mock_assign_uncached(occ as u8, profile) {
+                        row[profile.index()] = (pl.start + 1, new_occ);
+                    }
                 }
             }
-        }
-        table
+            table
+        })
     })
 }
 
 /// Pick the start block for `profile` under occupancy `occ` per
 /// Algorithm 1 (maximize post-allocation CC; first max wins ties).
-/// Returns the chosen placement and the new occupancy.
+/// `occ` must come from a GPU of the profile's model. Returns the chosen
+/// placement and the new occupancy.
 #[inline]
 pub fn mock_assign(occ: BlockMask, profile: Profile) -> Option<(Placement, BlockMask)> {
-    let (start_plus_1, new_occ) = assign_table()[occ as usize][profile.index()];
+    let (start_plus_1, new_occ) =
+        assign_tables()[profile.model() as usize][occ as usize][profile.index()];
     if start_plus_1 == 0 {
         None
     } else {
@@ -68,8 +74,12 @@ pub fn mock_assign(occ: BlockMask, profile: Profile) -> Option<(Placement, Block
 }
 
 /// Algorithm 1's `Assign`: place `profile` for `vm` on `gpu`, choosing the
-/// CC-maximizing start. Returns the placement, or `None` if it doesn't fit.
+/// CC-maximizing start. Returns the placement, or `None` if it doesn't
+/// fit (or the profile belongs to a different model).
 pub fn assign(gpu: &mut GpuState, vm: VmId, profile: Profile) -> Option<Placement> {
+    if profile.model() != gpu.model() {
+        return None;
+    }
     let (pl, _) = mock_assign(gpu.occupancy(), profile)?;
     gpu.place(vm, pl);
     Some(pl)
@@ -80,17 +90,19 @@ pub fn unassign_vm(gpu: &mut GpuState, vm: VmId) -> Option<Placement> {
     gpu.remove_vm(vm)
 }
 
-/// Would `profile` fit at all under `occ`? (Cheaper than `mock_assign`
-/// when the chosen start is irrelevant.)
+/// Would `profile` fit at all under `occ` (an occupancy of the profile's
+/// model)? Cheaper than `mock_assign` when the chosen start is
+/// irrelevant.
 #[inline]
 pub fn fits(occ: BlockMask, profile: Profile) -> bool {
-    super::gpu::profile_capacity(occ)[profile.index()] > 0
+    super::gpu::profile_capacity_for(profile.model(), occ)[profile.index()] > 0
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mig::gpu::consistent;
+    use crate::mig::gpu::{cc, consistent};
+    use crate::mig::model::GpuModel;
     use crate::mig::profiles::ALL_PROFILES;
     use crate::util::prop::forall;
     use crate::util::rng::Rng;
@@ -143,15 +155,27 @@ mod tests {
     }
 
     #[test]
-    fn max_instances_reachable_for_all_profiles() {
-        for p in ALL_PROFILES {
-            let mut g = GpuState::new();
-            let mut placed = 0;
-            while assign(&mut g, placed as u64, p).is_some() {
-                placed += 1;
+    fn max_instances_reachable_for_all_profiles_on_every_model() {
+        for model in ALL_MODELS {
+            for p in model.profile_keys() {
+                let mut g = GpuState::with_model(model);
+                let mut placed = 0;
+                while assign(&mut g, placed as u64, p).is_some() {
+                    placed += 1;
+                }
+                assert_eq!(placed, p.max_instances(), "{p}");
             }
-            assert_eq!(placed, p.max_instances(), "{p}");
         }
+    }
+
+    #[test]
+    fn foreign_model_profile_never_assigns() {
+        let mut a30 = GpuState::with_model(GpuModel::A30);
+        assert!(assign(&mut a30, 1, Profile::P1g5gb).is_none());
+        assert!(a30.is_empty());
+        let h100_heavy = GpuModel::H100_80.profile(5);
+        let mut a100 = GpuState::new();
+        assert!(assign(&mut a100, 1, h100_heavy).is_none());
     }
 
     #[test]
@@ -181,22 +205,26 @@ mod tests {
         forall(
             "assign-cc-maximal",
             |r: &mut Rng| {
-                // Random reachable occupancy + random profile.
-                let mut g = GpuState::new();
+                // Random model, random reachable occupancy, random profile.
+                let model = ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize];
+                let keys: Vec<Profile> = model.profile_keys().collect();
+                let mut g = GpuState::with_model(model);
                 for vm in 0..r.below(6) {
-                    let p = ALL_PROFILES[r.below(6) as usize];
+                    let p = keys[r.below(keys.len() as u64) as usize];
                     let _ = assign(&mut g, vm, p);
                 }
-                (g.occupancy(), ALL_PROFILES[r.below(6) as usize])
+                (g.occupancy(), keys[r.below(keys.len() as u64) as usize])
             },
             |&(occ, profile)| {
+                let model = profile.model();
                 let Some((chosen, new_occ)) = mock_assign(occ, profile) else {
                     return Ok(());
                 };
                 // No alternative start yields a strictly higher CC.
                 for &s in profile.start_blocks() {
                     let pl = Placement { profile, start: s };
-                    if occ & pl.mask() == 0 && cc(occ | pl.mask()) > cc(new_occ) {
+                    if occ & pl.mask() == 0 && cc_for(model, occ | pl.mask()) > cc_for(model, new_occ)
+                    {
                         return Err(format!(
                             "start {s} beats chosen {} under occ={occ:08b}",
                             chosen.start
@@ -210,22 +238,45 @@ mod tests {
 
     #[test]
     fn table_matches_uncached_reference_exhaustively() {
-        for occ in 0u16..256 {
-            for profile in ALL_PROFILES {
-                assert_eq!(
-                    mock_assign(occ as u8, profile),
-                    mock_assign_uncached(occ as u8, profile),
-                    "occ={occ:08b} profile={profile}"
-                );
+        for model in ALL_MODELS {
+            for occ in 0..model.num_masks() {
+                for profile in model.profile_keys() {
+                    assert_eq!(
+                        mock_assign(occ as u8, profile),
+                        mock_assign_uncached(occ as u8, profile),
+                        "occ={occ:08b} profile={profile}"
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn a30_default_policy_mirrors_a100_shape() {
+        // On an empty A30 the first 1g.6gb lands on the *last* block the
+        // CC-maximizing rule prefers — the same end-of-part bias the
+        // paper documents on the A100.
+        let mut g = GpuState::with_model(GpuModel::A30);
+        let k1g = GpuModel::A30.profile(0);
+        let p1 = assign(&mut g, 1, k1g).unwrap();
+        let p2 = assign(&mut g, 2, k1g).unwrap();
+        assert!(p1.start > p2.start, "first lands high ({p1}), second below ({p2})");
+        // cc comparison confirms the choice was maximal.
+        assert_eq!(cc(0), 18); // A100 table untouched by A30 queries
     }
 
     #[test]
     fn prop_fits_iff_mock_assign_some() {
         forall(
             "fits-consistent",
-            |r: &mut Rng| (r.below(256) as u8, ALL_PROFILES[r.below(6) as usize]),
+            |r: &mut Rng| {
+                let model = ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize];
+                let keys: Vec<Profile> = model.profile_keys().collect();
+                (
+                    r.below(model.num_masks() as u64) as u8,
+                    keys[r.below(keys.len() as u64) as usize],
+                )
+            },
             |&(occ, p)| {
                 if fits(occ, p) == mock_assign(occ, p).is_some() {
                     Ok(())

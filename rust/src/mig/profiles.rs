@@ -1,34 +1,36 @@
-//! A100 GPU-instance profiles and legal placements (Table 1, Table 5, Fig. 1).
+//! GPU-instance profiles and legal placements (Table 1, Table 5, Fig. 1).
+//!
+//! Since the model-catalog redesign the profile tables live in
+//! [`super::model`]: [`Profile`] is an alias for the cross-model
+//! [`ProfileKey`] and the per-model geometry comes from the
+//! [`GpuModel`] catalog. This module keeps the historical A100-40GB
+//! surface — [`NUM_BLOCKS`], [`ALL_PROFILES`], the 18-entry
+//! [`PLACEMENTS`] table and the `Profile::P1g5gb`-style constants —
+//! which the paper's single-model analyses (§5.1) and the trace mapping
+//! defaults are written against.
 //!
 //! Naming follows NVIDIA's `Cg.Mgb` convention: `C` compute engines and
-//! `M` GB of memory. An A100 has 7 compute engines and 8 memory blocks of
-//! 5 GB each. Only memory blocks constrain placement (the paper's
+//! `M` GB of memory. Only memory blocks constrain placement (the paper's
 //! block-centric view); compute engines are tracked for Eq. 28's
 //! `U_k = compute_k × memory_k` workload mapping.
 
+use super::model::GpuModel;
 use std::fmt;
 
-/// Number of memory blocks on an A100.
+pub use super::model::ProfileKey;
+
+/// A GI profile: an alias for the cross-model [`ProfileKey`]. The six
+/// A100-40 profiles keep their historical constants
+/// (`Profile::P1g5gb` .. `Profile::P7g40gb`).
+pub type Profile = ProfileKey;
+
+/// Number of memory blocks on the paper's part (the A100-40GB). Other
+/// models carry their own count — see [`GpuModel::num_blocks`].
 pub const NUM_BLOCKS: u8 = 8;
 
-/// The six GPU-instance (GI) profiles supported on an A100.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum Profile {
-    /// MIG 1g.5gb — 1 block, 1 compute engine, up to 7 instances.
-    P1g5gb,
-    /// MIG 1g.10gb — 2 blocks, 1 compute engine, up to 4 instances.
-    P1g10gb,
-    /// MIG 2g.10gb — 2 blocks, 2 compute engines, up to 3 instances.
-    P2g10gb,
-    /// MIG 3g.20gb — 4 blocks, 3 compute engines, up to 2 instances.
-    P3g20gb,
-    /// MIG 4g.20gb — 4 blocks, 4 compute engines, 1 instance.
-    P4g20gb,
-    /// MIG 7g.40gb — 8 blocks, 7 compute engines, 1 instance (whole GPU).
-    P7g40gb,
-}
-
-/// All profiles in Algorithm 1's `startBlocks` table order.
+/// The six A100-40 GPU-instance profiles in Algorithm 1's `startBlocks`
+/// table order (the historical `Profile` enum order; their
+/// [`ProfileKey::dense`] indices are 0..6 in this order).
 pub const ALL_PROFILES: [Profile; 6] = [
     Profile::P1g5gb,
     Profile::P1g10gb,
@@ -38,125 +40,6 @@ pub const ALL_PROFILES: [Profile; 6] = [
     Profile::P7g40gb,
 ];
 
-impl Profile {
-    /// Dense index 0..6 in `ALL_PROFILES` order.
-    #[inline]
-    pub fn index(self) -> usize {
-        self as usize
-    }
-
-    /// Profile from dense index.
-    pub fn from_index(i: usize) -> Profile {
-        ALL_PROFILES[i]
-    }
-
-    /// Size in memory blocks (`g_i` in Table 5).
-    #[inline]
-    pub const fn size(self) -> u8 {
-        match self {
-            Profile::P1g5gb => 1,
-            Profile::P1g10gb | Profile::P2g10gb => 2,
-            Profile::P3g20gb | Profile::P4g20gb => 4,
-            Profile::P7g40gb => 8,
-        }
-    }
-
-    /// Number of compute engines (the `C` in `Cg.Mgb`).
-    #[inline]
-    pub const fn compute_engines(self) -> u8 {
-        match self {
-            Profile::P1g5gb | Profile::P1g10gb => 1,
-            Profile::P2g10gb => 2,
-            Profile::P3g20gb => 3,
-            Profile::P4g20gb => 4,
-            Profile::P7g40gb => 7,
-        }
-    }
-
-    /// Memory in GB (the `M` in `Cg.Mgb`).
-    #[inline]
-    pub const fn memory_gb(self) -> u8 {
-        self.size() * 5
-    }
-
-    /// Legal starting blocks (Algorithm 1's `startBlocks`).
-    pub const fn start_blocks(self) -> &'static [u8] {
-        match self {
-            Profile::P1g5gb => &[0, 1, 2, 3, 4, 5, 6],
-            Profile::P1g10gb => &[0, 2, 4, 6],
-            Profile::P2g10gb => &[0, 2, 4],
-            Profile::P3g20gb => &[0, 4],
-            Profile::P4g20gb => &[0],
-            Profile::P7g40gb => &[0],
-        }
-    }
-
-    /// Last permissible starting index (`s_i` in Table 5).
-    #[inline]
-    pub const fn last_start(self) -> u8 {
-        match self {
-            Profile::P1g5gb | Profile::P1g10gb => 6,
-            Profile::P2g10gb | Profile::P3g20gb => 4,
-            Profile::P4g20gb | Profile::P7g40gb => 0,
-        }
-    }
-
-    /// GPU characteristic required by this GI (`h_i` in Table 5; 100 for
-    /// every A100 profile — the compatibility constraint of Eq. 17–18).
-    #[inline]
-    pub const fn characteristic(self) -> u32 {
-        100
-    }
-
-    /// Maximum simultaneous instances on one GPU (Table 1).
-    #[inline]
-    pub const fn max_instances(self) -> u8 {
-        match self {
-            Profile::P1g5gb => 7,
-            Profile::P1g10gb => 4,
-            Profile::P2g10gb => 3,
-            Profile::P3g20gb => 2,
-            Profile::P4g20gb | Profile::P7g40gb => 1,
-        }
-    }
-
-    /// Eq. 28: combined compute×memory value used for workload mapping.
-    #[inline]
-    pub fn combined_value(self) -> f64 {
-        (self.compute_engines() as f64 / 7.0) * (self.size() as f64 / 8.0)
-    }
-
-    /// Canonical NVIDIA profile name.
-    pub const fn name(self) -> &'static str {
-        match self {
-            Profile::P1g5gb => "1g.5gb",
-            Profile::P1g10gb => "1g.10gb",
-            Profile::P2g10gb => "2g.10gb",
-            Profile::P3g20gb => "3g.20gb",
-            Profile::P4g20gb => "4g.20gb",
-            Profile::P7g40gb => "7g.40gb",
-        }
-    }
-
-    /// Parse a canonical profile name.
-    pub fn parse(s: &str) -> Option<Profile> {
-        ALL_PROFILES.iter().copied().find(|p| p.name() == s)
-    }
-
-    /// Whether this profile consumes the whole GPU (routes to the heavy
-    /// basket in GRMU's dual-basket pooling).
-    #[inline]
-    pub const fn is_heavy(self) -> bool {
-        matches!(self, Profile::P7g40gb)
-    }
-}
-
-impl fmt::Display for Profile {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(self.name())
-    }
-}
-
 /// One legal `(profile, start)` placement with its block mask.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Placement {
@@ -165,9 +48,9 @@ pub struct Placement {
 }
 
 impl Placement {
-    /// Bitmask over the 8 memory blocks this placement occupies.
+    /// Bitmask over the model's memory blocks this placement occupies.
     #[inline]
-    pub const fn mask(self) -> u8 {
+    pub fn mask(self) -> u8 {
         (((1u16 << self.profile.size()) - 1) << self.start) as u8
     }
 }
@@ -178,8 +61,19 @@ impl fmt::Display for Placement {
     }
 }
 
-/// All 18 legal placements in Algorithm 1 table order (profiles in
-/// `startBlocks` order, starts ascending). Fig. 1's placement diagram.
+/// All legal placements of one model in Algorithm 1 table order
+/// (profiles in `startBlocks` order, starts ascending). The A100-40
+/// yields the paper's 18 placements of Fig. 1.
+pub fn placements_for(model: GpuModel) -> Vec<Placement> {
+    model
+        .profile_keys()
+        .flat_map(|profile| {
+            profile.start_blocks().iter().map(move |&start| Placement { profile, start })
+        })
+        .collect()
+}
+
+/// The A100-40's 18 legal placements (Fig. 1's placement diagram).
 pub const PLACEMENTS: [Placement; 18] = {
     const fn p(profile: Profile, start: u8) -> Placement {
         Placement { profile, start }
@@ -277,6 +171,16 @@ mod tests {
                 w[1]
             );
         }
+    }
+
+    #[test]
+    fn catalog_placements_match_the_historical_table() {
+        // The generated A100-40 placement list is exactly the hardcoded
+        // PLACEMENTS constant (part of the catalog's golden lock).
+        assert_eq!(placements_for(GpuModel::A100_40), PLACEMENTS.to_vec());
+        // Per-model placement counts: Σ per-profile start counts.
+        assert_eq!(placements_for(GpuModel::A30).len(), 4 + 2 + 1);
+        assert_eq!(placements_for(GpuModel::H100_80).len(), 18);
     }
 
     #[test]

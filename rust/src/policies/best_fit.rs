@@ -7,7 +7,7 @@ use super::{reject_cluster, visit_candidates, Decision, Policy, PolicyCtx};
 use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, GpuRef};
 use crate::mig::placement::mock_assign;
-use crate::mig::{Placement, NUM_BLOCKS};
+use crate::mig::Placement;
 
 /// Best-Fit placement.
 #[derive(Debug)]
@@ -48,6 +48,7 @@ impl Policy for BestFit {
                 if self.use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
                     return reject_cluster(dc, vm, self.use_index);
                 }
+                let num_blocks = vm.profile.model().num_blocks() as u32;
                 let mut best: Option<(u32, GpuRef, Placement)> = None;
                 let mut skip_host: Option<u32> = None;
                 visit_candidates(dc, vm.profile, self.use_index, |r| {
@@ -59,7 +60,7 @@ impl Policy for BestFit {
                         return true;
                     }
                     if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
-                        let remaining = NUM_BLOCKS as u32 - new_occ.count_ones();
+                        let remaining = num_blocks - new_occ.count_ones();
                         // Strictly-less keeps the first (lowest index) on ties.
                         if best.map(|(b, _, _)| remaining < b).unwrap_or(true) {
                             best = Some((remaining, r, pl));

@@ -53,6 +53,11 @@ pub fn consolidate_light_basket(
             if j == i {
                 continue;
             }
+            // Only GPUs of the instance's model can receive it
+            // (Eq. 17–18): a mixed light basket pairs per model.
+            if dc.gpu(target).model() != inst.placement.profile.model() {
+                continue;
+            }
             // CPU/RAM must also follow the VM when hosts differ; the
             // paper's model migrates the whole VM.
             if source.host != target.host {

@@ -23,7 +23,8 @@ use std::collections::BTreeSet;
 pub fn most_fragmented(dc: &DataCenter, basket: &BTreeSet<GpuRef>) -> Option<GpuRef> {
     let mut best: Option<(f64, GpuRef)> = None;
     for &r in basket {
-        let frag = fragmentation_value(dc.gpu(r).occupancy());
+        let gpu = dc.gpu(r);
+        let frag = fragmentation_value(gpu.model(), gpu.occupancy());
         if frag <= 0.0 {
             continue;
         }
@@ -58,7 +59,7 @@ pub fn repack_plan(gpu: &GpuState) -> Option<Vec<(Instance, Placement)>> {
     // Migrations are costly (Eq. 5): only relocate when the re-pack
     // *strictly improves* the configuration's CC — a same-CC shuffle
     // would burn migrations for nothing.
-    if crate::mig::gpu::cc(mock) <= gpu.cc() {
+    if crate::mig::gpu::cc_for(gpu.model(), mock) <= gpu.cc() {
         return Some(Vec::new());
     }
     Some(moves)

@@ -4,9 +4,12 @@
 //!
 //! * **Dual-Basket Pooling** (Algorithms 2–3): GPUs live in a pool ordered
 //!   by `globalIndex`; a *heavy* basket (capped at a configurable share of
-//!   all GPUs) serves 7g.40gb requests, a *light* basket serves everything
-//!   else. Baskets grow on demand by drawing the lowest-index GPU from the
-//!   pool; first-fit within a basket promotes consolidation. A request the
+//!   all GPUs) serves whole-GPU requests (7g.40gb on the A100-40 and its
+//!   per-model analogues — [`crate::mig::Profile::is_heavy`]), a *light*
+//!   basket serves everything else. Baskets span all fleet models; a
+//!   request only probes model-compatible GPUs within its basket. Baskets
+//!   grow on demand by drawing the lowest-index GPU from the pool;
+//!   first-fit within a basket promotes consolidation. A request the
 //!   quota locks out of an otherwise-serviceable pool is rejected with
 //!   [`RejectReason::QuotaDenied`].
 //! * **Defragmentation / intra-GPU migration** (Algorithm 4,
@@ -158,13 +161,13 @@ impl Grmu {
                 dc.place(vm, r, placement);
                 return Decision::Placed { gpu: r, placement };
             }
-        } else if self
-            .pool
-            .iter()
-            .any(|&r| dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb))
-        {
-            // A pool GPU (empty, so any GI fits) could serve this VM;
-            // only the basket quota stands in the way.
+        } else if self.pool.iter().any(|&r| {
+            dc.gpu(r).model() == vm.profile.model()
+                && dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb)
+        }) {
+            // A pool GPU of the request's model (empty, so any of its GIs
+            // fits) could serve this VM; only the basket quota stands in
+            // the way.
             return Decision::Rejected(RejectReason::QuotaDenied);
         }
         let basket = if heavy { &self.heavy } else { &self.light };

@@ -84,7 +84,9 @@ impl Policy for Mcc {
                 if self.cand_refs.is_empty() {
                     return reject_cluster(dc, vm, use_index);
                 }
-                let scores = ctx.scorer.score(&self.cand_occs);
+                // All candidates share the request's model (Eq. 17–18),
+                // so one scorer call covers the batch.
+                let scores = ctx.scorer.score(vm.profile.model(), &self.cand_occs);
                 let mut best = 0usize;
                 for (i, &s) in scores.iter().enumerate() {
                     if s > scores[best] {

@@ -3,13 +3,21 @@
 //! that profile appearing, estimated from an `n`-hour trailing window of
 //! requested profiles (the paper picks n = 24 h, the lowest-error
 //! look-back among {1, 12, 24, 48, 96}).
+//!
+//! The window spans the whole catalog: requests are counted per dense
+//! [`Profile::dense`] key, and a candidate GPU's expected capacity sums
+//! only over its own model's profiles (foreign-model profiles can never
+//! land there, so they contribute zero capacity by construction). On an
+//! A100-only fleet this reduces exactly to the historical six-profile
+//! window — the uniform empty-window prior scales every candidate's
+//! score by the same constant, leaving every argmax unchanged.
 
 use super::{reject_cluster, visit_candidates, Decision, Policy, PolicyCtx};
 use crate::cluster::vm::{Time, VmSpec};
 use crate::cluster::{DataCenter, GpuRef};
-use crate::mig::gpu::profile_capacity;
+use crate::mig::gpu::profile_capacity_for;
 use crate::mig::placement::mock_assign;
-use crate::mig::profiles::ALL_PROFILES;
+use crate::mig::{GpuModel, Profile, ProfileKey, ALL_MODELS, NUM_MODELS, NUM_PROFILE_KEYS};
 use std::collections::VecDeque;
 
 /// MECC placement.
@@ -17,10 +25,11 @@ pub struct Mecc {
     use_index: bool,
     /// Look-back window (hours).
     window_hours: u64,
-    /// Requested profiles with timestamps, pruned to the window.
+    /// Requested profiles (dense keys) with timestamps, pruned to the
+    /// window.
     history: VecDeque<(Time, usize)>,
-    /// Current per-profile counts within the window.
-    counts: [u64; 6],
+    /// Current per-profile counts within the window, by dense key.
+    counts: [u64; NUM_PROFILE_KEYS],
 }
 
 impl Mecc {
@@ -30,35 +39,37 @@ impl Mecc {
 
     /// `use_index = false` restores the brute-force full scan.
     pub fn with_index(window_hours: u64, use_index: bool) -> Mecc {
-        Mecc { use_index, window_hours, history: VecDeque::new(), counts: [0; 6] }
+        Mecc { use_index, window_hours, history: VecDeque::new(), counts: [0; NUM_PROFILE_KEYS] }
     }
 
-    /// Profile probabilities from the window; uniform when empty.
-    pub fn probabilities(&self) -> [f64; 6] {
+    /// Profile probabilities from the window (by dense key); uniform
+    /// when empty.
+    pub fn probabilities(&self) -> [f64; NUM_PROFILE_KEYS] {
         let total: u64 = self.counts.iter().sum();
         if total == 0 {
-            return [1.0 / 6.0; 6];
+            return [1.0 / NUM_PROFILE_KEYS as f64; NUM_PROFILE_KEYS];
         }
-        let mut p = [0.0; 6];
-        for i in 0..6 {
+        let mut p = [0.0; NUM_PROFILE_KEYS];
+        for i in 0..NUM_PROFILE_KEYS {
             p[i] = self.counts[i] as f64 / total as f64;
         }
         p
     }
 
-    /// GetECC (Algorithm 7): probability-weighted feasible-start count.
-    pub fn ecc(&self, occ: u8, probs: &[f64; 6]) -> f64 {
-        let cap = profile_capacity(occ);
+    /// GetECC (Algorithm 7): probability-weighted feasible-start count
+    /// of `occ` on a GPU of `model`.
+    pub fn ecc(&self, model: GpuModel, occ: u8, probs: &[f64; NUM_PROFILE_KEYS]) -> f64 {
+        let cap = profile_capacity_for(model, occ);
         let mut e = 0.0;
-        for i in 0..6 {
-            e += probs[i] * cap[i] as f64;
+        for key in model.profile_keys() {
+            e += probs[key.dense()] * cap[key.index()] as f64;
         }
         e
     }
 
     fn observe(&mut self, vms: &[VmSpec], now: Time) {
         for vm in vms {
-            let idx = vm.profile.index();
+            let idx = vm.profile.dense();
             self.history.push_back((now, idx));
             self.counts[idx] += 1;
         }
@@ -74,15 +85,15 @@ impl Mecc {
 
     /// Most probable profile in the current window (used by the paper's
     /// look-back error analysis).
-    pub fn predicted_profile(&self) -> crate::mig::Profile {
+    pub fn predicted_profile(&self) -> Profile {
         let probs = self.probabilities();
         let mut best = 0usize;
-        for i in 1..6 {
+        for i in 1..NUM_PROFILE_KEYS {
             if probs[i] > probs[best] {
                 best = i;
             }
         }
-        ALL_PROFILES[best]
+        ProfileKey::from_dense(best)
     }
 }
 
@@ -101,11 +112,15 @@ impl Policy for Mecc {
         self.observe(vms, ctx.now);
         let probs = self.probabilities();
         // The probabilities are fixed for the whole batch, so ECC is a
-        // pure function of the 8-bit occupancy — precompute all 256
-        // values once per batch (EXPERIMENTS.md §Perf iteration 4).
-        let mut ecc_table = [0.0f64; 256];
-        for (occ, slot) in ecc_table.iter_mut().enumerate() {
-            *slot = self.ecc(occ as u8, &probs);
+        // pure function of the (model, occupancy) pair — precompute every
+        // model's table once per batch (EXPERIMENTS.md §Perf iteration 4;
+        // ≤ 4 × 256 sums, amortized over the whole batch).
+        let mut ecc_tables = vec![[0.0f64; 256]; NUM_MODELS];
+        for model in ALL_MODELS {
+            let table = &mut ecc_tables[model as usize];
+            for occ in 0..model.num_masks() {
+                table[occ] = self.ecc(model, occ as u8, &probs);
+            }
         }
         let use_index = self.use_index;
         vms.iter()
@@ -113,6 +128,7 @@ impl Policy for Mecc {
                 if use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
                     return reject_cluster(dc, vm, use_index);
                 }
+                let ecc_table = &ecc_tables[vm.profile.model() as usize];
                 let mut best: Option<(f64, GpuRef, crate::mig::Placement)> = None;
                 let mut skip_host: Option<u32> = None;
                 visit_candidates(dc, vm.profile, use_index, |r| {
@@ -148,7 +164,6 @@ mod tests {
     use super::*;
     use crate::cluster::vm::HOUR;
     use crate::cluster::Host;
-    use crate::mig::Profile;
 
     fn vm(id: u64, profile: Profile) -> VmSpec {
         VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100, weight: 1.0 }
@@ -167,8 +182,8 @@ mod tests {
         batch_at(&mut m, &mut dc, &[vm(1, Profile::P1g5gb)], HOUR);
         batch_at(&mut m, &mut dc, &[vm(2, Profile::P7g40gb)], 30 * HOUR);
         // After 30h, the 1g.5gb observation (at 1h) left the 24h window.
-        assert_eq!(m.counts[Profile::P1g5gb.index()], 0);
-        assert_eq!(m.counts[Profile::P7g40gb.index()], 1);
+        assert_eq!(m.counts[Profile::P1g5gb.dense()], 0);
+        assert_eq!(m.counts[Profile::P7g40gb.dense()], 1);
         assert_eq!(m.predicted_profile(), Profile::P7g40gb);
     }
 
@@ -176,20 +191,48 @@ mod tests {
     fn uniform_prior_when_no_history() {
         let m = Mecc::new(24);
         let p = m.probabilities();
-        assert!(p.iter().all(|&x| (x - 1.0 / 6.0).abs() < 1e-12));
+        assert!(p.iter().all(|&x| (x - 1.0 / NUM_PROFILE_KEYS as f64).abs() < 1e-12));
     }
 
     #[test]
     fn ecc_weighted_by_probabilities() {
         let m = Mecc::new(24);
+        let a100 = GpuModel::A100_40;
         // All mass on 7g.40gb: ECC of the empty GPU = cap(7g) = 1.
-        let mut probs = [0.0; 6];
-        probs[Profile::P7g40gb.index()] = 1.0;
-        assert!((m.ecc(0, &probs) - 1.0).abs() < 1e-12);
+        let mut probs = [0.0; NUM_PROFILE_KEYS];
+        probs[Profile::P7g40gb.dense()] = 1.0;
+        assert!((m.ecc(a100, 0, &probs) - 1.0).abs() < 1e-12);
         // All mass on 1g.5gb: ECC of the empty GPU = 7.
-        let mut probs = [0.0; 6];
-        probs[Profile::P1g5gb.index()] = 1.0;
-        assert!((m.ecc(0, &probs) - 7.0).abs() < 1e-12);
+        let mut probs = [0.0; NUM_PROFILE_KEYS];
+        probs[Profile::P1g5gb.dense()] = 1.0;
+        assert!((m.ecc(a100, 0, &probs) - 7.0).abs() < 1e-12);
+        // Foreign-model mass contributes nothing on an A100.
+        let mut probs = [0.0; NUM_PROFILE_KEYS];
+        probs[GpuModel::A30.profile(0).dense()] = 1.0;
+        assert_eq!(m.ecc(a100, 0, &probs), 0.0);
+        // ... and everything on an A30 (cap(1g.6gb) of the empty part = 4).
+        assert!((m.ecc(GpuModel::A30, 0, &probs) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_window_counts_per_model() {
+        let mut m = Mecc::new(24);
+        let mut dc = DataCenter::new(vec![
+            Host::with_models(0, 64, 256, &[GpuModel::A100_40, GpuModel::A30]),
+        ]);
+        let k_a30 = GpuModel::A30.profile(1); // 2g.12gb
+        let out = batch_at(
+            &mut m,
+            &mut dc,
+            &[vm(1, Profile::P2g10gb), vm(2, k_a30)],
+            HOUR,
+        );
+        assert!(out.iter().all(|d| d.is_placed()));
+        assert_eq!(m.counts[Profile::P2g10gb.dense()], 1);
+        assert_eq!(m.counts[k_a30.dense()], 1);
+        // The A30 VM landed on the A30, the A100 VM on the A100.
+        assert_eq!(dc.locate(2).unwrap().gpu.gpu, 1);
+        assert_eq!(dc.locate(1).unwrap().gpu.gpu, 0);
     }
 
     #[test]
@@ -209,7 +252,7 @@ mod tests {
         for id in placed {
             dc.remove(id);
         }
-        assert!((m.probabilities()[Profile::P7g40gb.index()]) > 0.9);
+        assert!((m.probabilities()[Profile::P7g40gb.dense()]) > 0.9);
         let out = batch_at(
             &mut m,
             &mut dc,

@@ -57,9 +57,9 @@ pub mod mecc;
 
 use crate::cluster::vm::{Time, VmId, VmSpec};
 use crate::cluster::{DataCenter, GpuRef};
-use crate::mig::gpu::cc;
+use crate::mig::gpu::cc_for;
 use crate::mig::placement::mock_assign;
-use crate::mig::{Placement, Profile};
+use crate::mig::{GpuModel, Placement, Profile};
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -188,8 +188,10 @@ pub struct MigrationEvent {
 /// the same scores via the AOT-compiled batched kernel; results are
 /// bit-identical.
 pub trait CcScorer: Send {
-    /// CC of each candidate occupancy in `occs`.
-    fn score(&mut self, occs: &[u8]) -> Vec<u32>;
+    /// CC of each candidate occupancy in `occs`, all of GPUs of `model`.
+    /// (Candidates of one request always share a model: a GI only lands
+    /// on GPUs of its own model, Eq. 17–18.)
+    fn score(&mut self, model: GpuModel, occs: &[u8]) -> Vec<u32>;
 }
 
 /// Native table-lookup scorer (the default).
@@ -197,8 +199,8 @@ pub trait CcScorer: Send {
 pub struct NativeScorer;
 
 impl CcScorer for NativeScorer {
-    fn score(&mut self, occs: &[u8]) -> Vec<u32> {
-        occs.iter().map(|&o| cc(o)).collect()
+    fn score(&mut self, model: GpuModel, occs: &[u8]) -> Vec<u32> {
+        occs.iter().map(|&o| cc_for(model, o)).collect()
     }
 }
 
@@ -268,12 +270,13 @@ pub trait Policy: Send {
 }
 
 /// Visit placement candidates for `profile` in `globalIndex` order,
-/// until the visitor returns `false`.
+/// until the visitor returns `false`. Only GPUs of the profile's model
+/// are candidates (the Eq. 17–18 compatibility constraint).
 ///
 /// With `use_index` the walk covers only the
 /// [`crate::cluster::ClusterIndex`] bucket — exactly the GPUs where the
-/// profile currently fits; the full scan covers every GPU. Both orders
-/// are ascending
+/// profile currently fits; the full scan covers every model-compatible
+/// GPU. Both orders are ascending
 /// [`GpuRef`], and the bucket is the feasible subsequence of the full
 /// scan, so any first-match or best-scoring selection over the
 /// candidates is byte-identical between the two modes (the
@@ -293,8 +296,12 @@ pub fn visit_candidates(
             }
         }
     } else {
+        let model = profile.model();
         for h in dc.hosts() {
-            for g in 0..h.gpus().len() {
+            for (g, gpu) in h.gpus().iter().enumerate() {
+                if gpu.model() != model {
+                    continue;
+                }
                 if !visit(GpuRef { host: h.id, gpu: g as u8 }) {
                     return;
                 }
@@ -303,15 +310,17 @@ pub fn visit_candidates(
     }
 }
 
-/// Probe one GPU without mutating anything: the host must have the
-/// CPU/RAM (Eq. 6–7) and the GI must fit under the default block
-/// placement. The non-committing core of [`try_place_on_gpu`], shared
-/// by the first-fit scan paths (FF and GRMU's basket/pool walks).
+/// Probe one GPU without mutating anything: the GPU must be of the
+/// request's model (Eq. 17–18), the host must have the CPU/RAM
+/// (Eq. 6–7) and the GI must fit under the default block placement. The
+/// non-committing core of [`try_place_on_gpu`], shared by the first-fit
+/// scan paths (FF and GRMU's basket/pool walks).
 pub fn probe_gpu(dc: &DataCenter, vm: &VmSpec, r: GpuRef) -> Option<Placement> {
-    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+    let gpu = dc.gpu(r);
+    if gpu.model() != vm.profile.model() || !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
         return None;
     }
-    mock_assign(dc.gpu(r).occupancy(), vm.profile).map(|(placement, _)| placement)
+    mock_assign(gpu.occupancy(), vm.profile).map(|(placement, _)| placement)
 }
 
 /// [`probe_gpu`], then commit: on success the VM is inserted into `dc`
@@ -323,18 +332,27 @@ pub fn try_place_on_gpu(dc: &mut DataCenter, vm: &VmSpec, r: GpuRef) -> Option<P
 }
 
 /// Classify why `vm` fit on none of `refs` (called by policies after an
-/// unsuccessful scan). Precedence: if any candidate host has CPU *and*
+/// unsuccessful scan). Only GPUs of the request's model count as
+/// candidates (Eq. 17–18) — a host whose only headroom sits next to
+/// foreign-model GPUs cannot serve the VM, so it must not steer the
+/// reason. Precedence: if any compatible candidate's host has CPU *and*
 /// RAM headroom the blocker was GI fragmentation ([`RejectReason::
 /// NoGpuFit`]); otherwise CPU shortage wins over RAM shortage, matching
-/// the constraint order of the model (Eq. 6 before Eq. 7).
+/// the constraint order of the model (Eq. 6 before Eq. 7); an all-
+/// foreign (or empty) candidate set is a no-compatible-GPU case, i.e.
+/// [`RejectReason::NoGpuFit`].
 pub fn classify_rejection<'a, I>(dc: &DataCenter, vm: &VmSpec, refs: I) -> RejectReason
 where
     I: IntoIterator<Item = &'a GpuRef>,
 {
+    let model = vm.profile.model();
     let mut cpu_short = false;
     let mut ram_short = false;
     let mut resource_fit = false;
     for &r in refs {
+        if dc.gpu(r).model() != model {
+            continue;
+        }
         let host = dc.host(r.host);
         let cpu_ok = host.free_cpus() >= vm.cpus;
         let ram_ok = host.free_ram() >= vm.ram_gb;
@@ -354,7 +372,8 @@ where
     } else if ram_short {
         RejectReason::RamExhausted
     } else {
-        // No candidate GPU at all (empty basket/cluster).
+        // No compatible candidate GPU at all (empty basket/cluster, or
+        // a fleet without the request's model).
         RejectReason::NoGpuFit
     }
 }
@@ -370,29 +389,35 @@ where
 /// neither walk.
 pub fn classify_rejection_cluster(dc: &DataCenter, vm: &VmSpec) -> RejectReason {
     let idx = dc.index();
-    if idx.num_hosts() == 0 {
-        // Empty cluster — same convention as an empty candidate set.
+    let model = vm.profile.model();
+    let compat_hosts = idx.hosts_with_model(model);
+    if compat_hosts == 0 {
+        // Empty cluster, or a fleet without the request's model — same
+        // no-compatible-GPU convention as an empty candidate set.
         return RejectReason::NoGpuFit;
     }
     if idx.max_free_cpus() < vm.cpus {
-        // Every host is CPU-short, so nothing can have joint headroom.
+        // Every host (compatible ones included) is CPU-short, so nothing
+        // can have joint headroom.
         return RejectReason::CpuExhausted;
     }
-    if idx.max_free_ram() < vm.ram_gb {
-        // No host has the RAM; a CPU shortage anywhere still takes
-        // precedence (Eq. 6 before Eq. 7).
+    if compat_hosts == idx.num_hosts() && idx.max_free_ram() < vm.ram_gb {
+        // Homogeneous-for-this-model fleet and no host has the RAM; a
+        // CPU shortage anywhere still takes precedence (Eq. 6 before
+        // Eq. 7). (On a mixed fleet the cluster-wide minima may belong
+        // to foreign-model hosts, so fall through to the host scan.)
         return if idx.min_free_cpus() < vm.cpus {
             RejectReason::CpuExhausted
         } else {
             RejectReason::RamExhausted
         };
     }
-    // Some host has the CPU and some host has the RAM — whether one host
-    // has both takes a scan (hosts, not GPUs).
+    // Some host has the CPU and some host has the RAM — whether one
+    // *compatible* host has both takes a scan (hosts, not GPUs).
     let mut cpu_short = false;
     let mut ram_short = false;
     for host in dc.hosts() {
-        if host.gpus().is_empty() {
+        if !host.gpus().iter().any(|g| g.model() == model) {
             continue;
         }
         let cpu_ok = host.free_cpus() >= vm.cpus;
@@ -679,32 +704,39 @@ mod tests {
 
     #[test]
     fn prop_cluster_classification_matches_full_ref_walk() {
+        use crate::mig::ALL_MODELS;
         use crate::util::prop::forall;
         use crate::util::rng::Rng;
         // classify_rejection_cluster (headroom fast paths + host scan)
         // must agree with the original classify_rejection over every GPU
-        // ref, for arbitrary host loads and demands.
+        // ref, for arbitrary host loads, fleet mixes and demands — and
+        // for requests whose model may or may not exist in the fleet.
         forall(
             "classify-cluster-vs-refs",
             |r: &mut Rng| {
                 let hosts = (0..1 + r.below(5))
                     .map(|i| {
-                        Host::new(
+                        let models: Vec<crate::mig::GpuModel> = (0..1 + r.below(3))
+                            .map(|_| ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize])
+                            .collect();
+                        Host::with_models(
                             i as u32,
                             r.below(16) as u32,
                             r.below(64) as u32,
-                            1 + r.below(3) as usize,
+                            &models,
                         )
                     })
                     .collect();
                 let dc = DataCenter::new(hosts);
+                let model = ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize];
+                let profile = model.profile(r.below(model.num_profiles() as u64) as usize);
                 let demand = (r.below(16) as u32, r.below(64) as u32);
-                (dc, demand)
+                (dc, profile, demand)
             },
-            |(dc, (cpus, ram_gb))| {
+            |(dc, profile, (cpus, ram_gb))| {
                 let v = VmSpec {
                     id: 1,
-                    profile: Profile::P1g5gb,
+                    profile: *profile,
                     cpus: *cpus,
                     ram_gb: *ram_gb,
                     arrival: 0,
@@ -717,10 +749,38 @@ mod tests {
                 if got == expected {
                     Ok(())
                 } else {
-                    Err(format!("cluster={got:?} refs={expected:?}"))
+                    Err(format!("{profile}: cluster={got:?} refs={expected:?}"))
                 }
             },
         );
+    }
+
+    #[test]
+    fn classification_ignores_foreign_model_headroom() {
+        use crate::mig::GpuModel;
+        // A30 host with zero free CPU + roomy H100 host: an A30 request
+        // is CPU-bound (the H100 host's headroom is irrelevant to it).
+        let mut dc = DataCenter::new(vec![
+            Host::with_models(0, 2, 256, &[GpuModel::A30]),
+            Host::with_models(1, 64, 256, &[GpuModel::H100_80]),
+        ]);
+        let a30_vm = vm(1, GpuModel::A30.profile(0));
+        assert_eq!(classify_rejection_cluster(&dc, &a30_vm), RejectReason::CpuExhausted);
+        assert_eq!(
+            classify_rejection(&dc, &a30_vm, &dc.gpu_refs()),
+            RejectReason::CpuExhausted
+        );
+        // A request for a model absent from the fleet is a
+        // no-compatible-GPU case, whatever the headroom.
+        let a100_vm = vm(2, Profile::P1g5gb);
+        assert_eq!(classify_rejection_cluster(&dc, &a100_vm), RejectReason::NoGpuFit);
+        // Fill the H100 completely: its *host* still has headroom, but an
+        // H100 request is blocked by the GI — fragmentation, not CPU.
+        let h100_heavy = GpuModel::H100_80.profile(5);
+        let filler = vm(3, h100_heavy);
+        assert!(try_place_on_gpu(&mut dc, &filler, GpuRef { host: 1, gpu: 0 }).is_some());
+        let h100_vm = vm(4, GpuModel::H100_80.profile(0));
+        assert_eq!(classify_rejection_cluster(&dc, &h100_vm), RejectReason::NoGpuFit);
     }
 
     #[test]

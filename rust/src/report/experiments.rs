@@ -255,6 +255,33 @@ pub fn sweep_summary(runs: &[SweepRun]) -> Vec<(String, f64, f64, f64, f64)> {
         .collect()
 }
 
+/// Per-cell fleet/workload metadata for sweep JSON exports: the
+/// workload-shape knobs (`--hosts`, `--pods`, `--mix`, `--duration-mu`)
+/// and the `--gpu-models` fleet mix that produced a cell, so a sweep
+/// file is self-describing.
+pub fn fleet_json(cfg: &ExperimentConfig) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let t = &cfg.trace;
+    Json::obj(vec![
+        ("hosts", (t.num_hosts as u64).into()),
+        ("pods", (t.num_pods as u64).into()),
+        ("horizon_hours", t.horizon_hours.into()),
+        ("duration_mu", t.duration_mu.into()),
+        ("duration_sigma", t.duration_sigma.into()),
+        ("heavy_frac", cfg.heavy_frac.into()),
+        ("profile_mix", Json::arr(t.profile_mix.iter().map(|&m| m.into()).collect())),
+        (
+            "gpu_models",
+            Json::Obj(
+                t.gpu_models
+                    .iter()
+                    .map(|(m, w)| (m.name().to_string(), (*w).into()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// GRMU config helper mirroring [`grmu::GrmuConfig`] from experiment
 /// parameters (exposed for examples).
 pub fn grmu_config(cfg: &ExperimentConfig, defrag: bool) -> grmu::GrmuConfig {
@@ -335,7 +362,7 @@ mod tests {
     fn capacity_sweep_monotone_heavy_acceptance() {
         let (w, cfg) = quick_workload();
         let sweep = heavy_capacity_sweep(&w, &[0.2, 0.8], &cfg);
-        let heavy_idx = Profile::P7g40gb.index();
+        let heavy_idx = Profile::P7g40gb.dense();
         let rate = |r: &SimResult| {
             let (req, acc) = r.per_profile[heavy_idx];
             if req == 0 { 0.0 } else { acc as f64 / req as f64 }

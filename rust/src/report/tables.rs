@@ -1,6 +1,12 @@
 //! Plain-text rendering of the paper's tables and figure series.
+//!
+//! Heterogeneous fleets: profile-keyed tables always show the paper's
+//! six A100-40 columns (bare names, the historical output), and append a
+//! model-qualified column for every other catalog profile that saw
+//! requests — so A100-only runs render byte-identically to the
+//! pre-catalog reports.
 
-use crate::mig::profiles::ALL_PROFILES;
+use crate::mig::{GpuModel, ProfileKey, NUM_PROFILE_KEYS};
 use crate::sim::SimResult;
 use crate::util::json::Json;
 
@@ -14,17 +20,43 @@ pub fn row(cells: &[String], widths: &[usize]) -> String {
         .join("  ")
 }
 
-/// Fig. 5: the workload's profile distribution.
-pub fn fig5(counts: &[usize; 6]) -> String {
+/// Column set for profile-keyed tables: the A100-40 six plus every other
+/// key some result requested, as `(key, label, column width)`.
+fn profile_columns<'a>(
+    results: impl Iterator<Item = &'a SimResult>,
+) -> Vec<(ProfileKey, String, usize)> {
+    let mut requested = [false; NUM_PROFILE_KEYS];
+    for r in results {
+        for (d, (req, _)) in r.per_profile.iter().enumerate() {
+            requested[d] |= *req > 0;
+        }
+    }
+    ProfileKey::all()
+        .filter(|k| k.model() == GpuModel::A100_40 || requested[k.dense()])
+        .map(|k| {
+            let label = k.to_string();
+            let width = label.len().max(9);
+            (k, label, width)
+        })
+        .collect()
+}
+
+/// Fig. 5: the workload's profile distribution (dense-keyed counts; the
+/// A100-40 rows always print, other models only when present).
+pub fn fig5(counts: &[usize; NUM_PROFILE_KEYS]) -> String {
     let total: usize = counts.iter().sum();
     let mut out = String::from("Figure 5 — Distribution of profiles in the workload\n");
     out.push_str(&format!("{:<10} {:>8} {:>8}\n", "profile", "count", "share"));
-    for (i, p) in ALL_PROFILES.iter().enumerate() {
+    for k in ProfileKey::all() {
+        let count = counts[k.dense()];
+        if k.model() != GpuModel::A100_40 && count == 0 {
+            continue;
+        }
+        let label = k.to_string();
         out.push_str(&format!(
-            "{:<10} {:>8} {:>7.1}%\n",
-            p.name(),
-            counts[i],
-            100.0 * counts[i] as f64 / total.max(1) as f64
+            "{label:<10} {:>8} {:>7.1}%\n",
+            count,
+            100.0 * count as f64 / total.max(1) as f64
         ));
     }
     out.push_str(&format!("{:<10} {:>8}\n", "total", total));
@@ -54,17 +86,21 @@ pub fn fig6(sweep: &[(f64, SimResult)]) -> String {
 
 /// Fig. 7: per-profile acceptance across heavy-basket capacities.
 pub fn fig7(sweep: &[(f64, SimResult)]) -> String {
+    let cols = profile_columns(sweep.iter().map(|(_, r)| r));
     let mut out =
         String::from("Figure 7 — Acceptance of requested profiles across heavy basket capacities\n");
     out.push_str(&format!("{:>8}", "capacity"));
-    for p in ALL_PROFILES {
-        out.push_str(&format!(" {:>9}", p.name()));
+    for (_, label, width) in &cols {
+        let w = *width;
+        out.push_str(&format!(" {label:>w$}"));
     }
     out.push('\n');
     for (frac, r) in sweep {
         out.push_str(&format!("{:>7.0}%", 100.0 * frac));
-        for rate in r.per_profile_acceptance() {
-            out.push_str(&format!(" {rate:>9.3}"));
+        let rates = r.per_profile_acceptance();
+        for (k, _, width) in &cols {
+            let w = *width;
+            out.push_str(&format!(" {:>w$.3}", rates[k.dense()]));
         }
         out.push('\n');
     }
@@ -124,18 +160,50 @@ pub fn fig10(results: &[SimResult]) -> String {
 
 /// Fig. 11: per-profile acceptance per policy.
 pub fn fig11(results: &[SimResult]) -> String {
+    let cols = profile_columns(results.iter());
     let mut out = String::from("Figure 11 — Acceptance rates per policy across GPU profiles\n");
     out.push_str(&format!("{:>6}", "policy"));
-    for p in ALL_PROFILES {
-        out.push_str(&format!(" {:>9}", p.name()));
+    for (_, label, width) in &cols {
+        let w = *width;
+        out.push_str(&format!(" {label:>w$}"));
     }
     out.push('\n');
     for r in results {
         out.push_str(&format!("{:>6}", r.policy));
-        for rate in r.per_profile_acceptance() {
-            out.push_str(&format!(" {rate:>9.3}"));
+        let rates = r.per_profile_acceptance();
+        for (k, _, width) in &cols {
+            let w = *width;
+            out.push_str(&format!(" {:>w$.3}", rates[k.dense()]));
         }
         out.push('\n');
+    }
+    out
+}
+
+/// Per-model fleet breakdown: GPU counts, acceptance and active-GPU
+/// rates per catalog model present in the fleet (the heterogeneous-fleet
+/// companion of Figs. 10/12; one row per policy × model).
+pub fn fleet_breakdown(results: &[SimResult]) -> String {
+    let mut out = String::from("Fleet breakdown — per-model acceptance and active GPUs\n");
+    out.push_str(&format!(
+        "{:>6} {:>9} {:>6} {:>10} {:>10} {:>12} {:>16}\n",
+        "policy", "model", "gpus", "requested", "accepted", "acceptance", "active gpu rate"
+    ));
+    for r in results {
+        let per_model = r.per_model_requests();
+        for m in r.fleet_models() {
+            let (req, acc) = per_model[m as usize];
+            out.push_str(&format!(
+                "{:>6} {:>9} {:>6} {:>10} {:>10} {:>12.4} {:>16.4}\n",
+                r.policy,
+                m.name(),
+                r.gpus_by_model[m as usize],
+                req,
+                acc,
+                crate::sim::metrics::acceptance_rate(acc, req),
+                r.model_active_rate(m)
+            ));
+        }
     }
     out
 }
@@ -227,8 +295,15 @@ mod tests {
 
     fn fake(policy: &str, acc: u64) -> SimResult {
         use crate::cluster::GpuRef;
+        use crate::mig::{NUM_MODELS, NUM_PROFILE_KEYS};
         use crate::policies::{MigrationEvent, MigrationKind};
         let g = GpuRef { host: 0, gpu: 0 };
+        let mut per_profile = [(0u64, 0u64); NUM_PROFILE_KEYS];
+        per_profile[0] = (10, acc);
+        let mut gpus_by_model = [0usize; NUM_MODELS];
+        gpus_by_model[GpuModel::A100_40 as usize] = 1;
+        let mut gpu_activity = [(0u64, 0u64); NUM_MODELS];
+        gpu_activity[GpuModel::A100_40 as usize] = (1, 2);
         SimResult {
             policy: policy.into(),
             samples: vec![
@@ -237,7 +312,7 @@ mod tests {
             ],
             requested: 10,
             accepted: acc,
-            per_profile: [(10, acc), (0, 0), (0, 0), (0, 0), (0, 0), (0, 0)],
+            per_profile,
             rejections: [0, 0, 10 - acc, 0],
             migration_events: vec![MigrationEvent {
                 vm: 1,
@@ -245,6 +320,8 @@ mod tests {
                 to: g,
                 kind: MigrationKind::Intra,
             }],
+            gpus_by_model,
+            gpu_activity,
             wall_seconds: 0.0,
         }
     }
@@ -259,11 +336,30 @@ mod tests {
             table6(&results),
             migrations_summary(&results),
             rejections_breakdown(&results),
+            fleet_breakdown(&results),
         ] {
             assert!(text.contains("FF"));
             assert!(text.contains("GRMU"));
             assert!(text.lines().count() >= 3);
         }
+    }
+
+    #[test]
+    fn mixed_fleet_columns_append_qualified_names() {
+        let mut r = fake("FF", 5);
+        let k = GpuModel::A30.profile(2); // a30:4g.24gb
+        r.per_profile[k.dense()] = (4, 2);
+        r.gpus_by_model[GpuModel::A30 as usize] = 1;
+        r.gpu_activity[GpuModel::A30 as usize] = (1, 2);
+        let text = fig11(&[r.clone()]);
+        // The six A100-40 columns stay; the requested A30 key appends.
+        assert!(text.contains("7g.40gb"));
+        assert!(text.contains("a30:4g.24gb"));
+        // Unrequested foreign keys stay hidden.
+        assert!(!text.contains("h100-80"));
+        let fleet = fleet_breakdown(&[r]);
+        assert!(fleet.contains("a30"));
+        assert!(fleet.contains("a100-40"));
     }
 
     #[test]
@@ -276,9 +372,15 @@ mod tests {
 
     #[test]
     fn fig5_shares_sum_to_100() {
-        let text = fig5(&[10, 0, 30, 20, 0, 40]);
+        let mut counts = [0usize; crate::mig::NUM_PROFILE_KEYS];
+        counts[..6].copy_from_slice(&[10, 0, 30, 20, 0, 40]);
+        let text = fig5(&counts);
         assert!(text.contains("40.0%"));
         assert!(text.contains("total"));
+        // Mixed-fleet rows appear once a foreign model has counts.
+        counts[GpuModel::A30.profile(0).dense()] = 5;
+        let text = fig5(&counts);
+        assert!(text.contains("a30:1g.6gb"));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! to the native table (`mig::gpu::cc`) — asserted by tests.
 
 use super::client::{Executable, Runtime};
+use crate::mig::GpuModel;
 use crate::policies::CcScorer;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
@@ -85,7 +86,13 @@ impl XlaScorer {
 }
 
 impl CcScorer for XlaScorer {
-    fn score(&mut self, occs: &[u8]) -> Vec<u32> {
+    fn score(&mut self, model: GpuModel, occs: &[u8]) -> Vec<u32> {
+        // The AOT artifact bakes in the A100-40 placement table; other
+        // catalog models score through the native per-model tables
+        // (bit-identical semantics, no artifact available for them yet).
+        if model != GpuModel::A100_40 {
+            return occs.iter().map(|&o| crate::mig::cc_for(model, o)).collect();
+        }
         self.score_full(occs).expect("XLA scorer execution").0
     }
 }

@@ -129,7 +129,7 @@ mod tests {
         let res = sim.run();
         assert_eq!(res.accepted, 2);
         assert_eq!(res.requested, 3);
-        let (req, acc) = res.per_profile[Profile::P7g40gb.index()];
+        let (req, acc) = res.per_profile[Profile::P7g40gb.dense()];
         assert_eq!((req, acc), (3, 2));
         // The mid-flight rejection was a fragmentation (no-GI-fit) case.
         assert_eq!(res.rejected(RejectReason::NoGpuFit), 1);

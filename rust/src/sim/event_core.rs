@@ -25,6 +25,7 @@
 use super::metrics::{acceptance_rate, Sample, SimResult};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::DataCenter;
+use crate::mig::{NUM_MODELS, NUM_PROFILE_KEYS};
 use crate::policies::{Decision, MigrationEvent, Policy, PolicyCtx, RejectCounts};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -45,9 +46,14 @@ pub struct EventCore {
     samples: Vec<Sample>,
     requested: u64,
     accepted: u64,
-    per_profile: [(u64, u64); 6],
+    /// Per-profile `(requested, accepted)` by dense cross-model key.
+    per_profile: [(u64, u64); NUM_PROFILE_KEYS],
     rejections: RejectCounts,
     migrations: Vec<MigrationEvent>,
+    /// Cumulative per-model `(active, total)` GPU-interval counts,
+    /// accumulated at every sample (the per-model active-hardware
+    /// breakdown of heterogeneous fleets).
+    gpu_activity: [(u64, u64); NUM_MODELS],
 }
 
 impl EventCore {
@@ -73,9 +79,10 @@ impl EventCore {
             samples: Vec::new(),
             requested: 0,
             accepted: 0,
-            per_profile: [(0, 0); 6],
+            per_profile: [(0, 0); NUM_PROFILE_KEYS],
             rejections: [0; 4],
             migrations: Vec::new(),
+            gpu_activity: [(0, 0); NUM_MODELS],
         }
     }
 
@@ -158,11 +165,11 @@ impl EventCore {
         debug_assert_eq!(decisions.len(), batch.len());
         for (vm, d) in batch.iter().zip(&decisions) {
             self.requested += 1;
-            self.per_profile[vm.profile.index()].0 += 1;
+            self.per_profile[vm.profile.dense()].0 += 1;
             match d {
                 Decision::Placed { .. } => {
                     self.accepted += 1;
-                    self.per_profile[vm.profile.index()].1 += 1;
+                    self.per_profile[vm.profile.dense()].1 += 1;
                     self.departures.push(Reverse((vm.departure.max(t_end + 1), vm.id)));
                 }
                 Decision::Rejected(reason) => self.rejections[reason.index()] += 1,
@@ -179,6 +186,12 @@ impl EventCore {
         self.ctx.now = t_end;
         self.policy.on_tick(&mut self.dc, &mut self.ctx);
         self.absorb_migrations();
+        for (acc, (active, total)) in
+            self.gpu_activity.iter_mut().zip(self.dc.active_gpus_by_model())
+        {
+            acc.0 += active as u64;
+            acc.1 += total as u64;
+        }
         self.samples.push(Sample {
             hour: self.hour,
             active_rate: self.dc.active_hardware_rate(),
@@ -219,6 +232,8 @@ impl EventCore {
             per_profile: self.per_profile,
             rejections: self.rejections,
             migration_events: self.migrations,
+            gpus_by_model: self.dc.gpus_by_model(),
+            gpu_activity: self.gpu_activity,
             wall_seconds,
         }
     }

@@ -1,6 +1,6 @@
 //! Metric collection for the §8 evaluation.
 
-use crate::mig::profiles::ALL_PROFILES;
+use crate::mig::{GpuModel, ProfileKey, ALL_MODELS, NUM_MODELS, NUM_PROFILE_KEYS};
 use crate::policies::{MigrationEvent, MigrationKind, RejectCounts, RejectReason};
 use crate::util::json::Json;
 use crate::util::stats::auc;
@@ -41,14 +41,22 @@ pub struct SimResult {
     /// Requests seen / accepted, total.
     pub requested: u64,
     pub accepted: u64,
-    /// Per-profile `(requested, accepted)` in `ALL_PROFILES` order.
-    pub per_profile: [(u64, u64); 6],
+    /// Per-profile `(requested, accepted)` indexed by the dense
+    /// cross-model [`ProfileKey::dense`] key. The first six slots are
+    /// the A100-40 profiles in historical `ALL_PROFILES` order, so
+    /// A100-only runs carry the pre-catalog layout with a zero tail.
+    pub per_profile: [(u64, u64); NUM_PROFILE_KEYS],
     /// Rejections per [`RejectReason`] (indexed by `RejectReason::index`);
     /// sums to `requested - accepted`.
     pub rejections: RejectCounts,
     /// Every migration performed, in order (defragmentation relocations
     /// and consolidation moves).
     pub migration_events: Vec<MigrationEvent>,
+    /// Fleet composition: GPU count per model (`GpuModel as usize`).
+    pub gpus_by_model: [usize; NUM_MODELS],
+    /// Cumulative per-model `(active, total)` GPU-interval counts across
+    /// all samples — the per-model active-hardware breakdown.
+    pub gpu_activity: [(u64, u64); NUM_MODELS],
     /// Wall-time of the run (for perf reporting), seconds.
     pub wall_seconds: f64,
 }
@@ -83,11 +91,11 @@ impl SimResult {
         auc(&pts)
     }
 
-    /// Per-profile acceptance rates (Figs. 7 and 11). Profiles with zero
-    /// requests report 0.0 here and are excluded from averages — the
-    /// figures never plot an unrequested profile.
-    pub fn per_profile_acceptance(&self) -> [f64; 6] {
-        let mut out = [0.0; 6];
+    /// Per-profile acceptance rates (Figs. 7 and 11), by dense key.
+    /// Profiles with zero requests report 0.0 here and are excluded from
+    /// averages — the figures never plot an unrequested profile.
+    pub fn per_profile_acceptance(&self) -> [f64; NUM_PROFILE_KEYS] {
+        let mut out = [0.0; NUM_PROFILE_KEYS];
         for (i, (req, acc)) in self.per_profile.iter().enumerate() {
             out[i] = if *req == 0 { 0.0 } else { *acc as f64 / *req as f64 };
         }
@@ -109,6 +117,34 @@ impl SimResult {
         } else {
             used.iter().sum::<f64>() / used.len() as f64
         }
+    }
+
+    /// Per-model `(requested, accepted)` — `per_profile` folded over each
+    /// model's dense range.
+    pub fn per_model_requests(&self) -> [(u64, u64); NUM_MODELS] {
+        let mut out = [(0u64, 0u64); NUM_MODELS];
+        for (d, (req, acc)) in self.per_profile.iter().enumerate() {
+            let m = ProfileKey::from_dense(d).model() as usize;
+            out[m].0 += req;
+            out[m].1 += acc;
+        }
+        out
+    }
+
+    /// Mean active-GPU rate of one model across the run's samples
+    /// (0.0 when the fleet has no GPUs of the model).
+    pub fn model_active_rate(&self, model: GpuModel) -> f64 {
+        let (active, total) = self.gpu_activity[model as usize];
+        if total == 0 {
+            0.0
+        } else {
+            active as f64 / total as f64
+        }
+    }
+
+    /// Models present in the fleet, in catalog order.
+    pub fn fleet_models(&self) -> Vec<GpuModel> {
+        ALL_MODELS.into_iter().filter(|&m| self.gpus_by_model[m as usize] > 0).collect()
     }
 
     /// Intra-GPU relocations performed (defragmentation).
@@ -136,7 +172,18 @@ impl SimResult {
         }
     }
 
-    /// JSON export for the figure harness.
+    /// The profile keys a report should show for this result: the six
+    /// A100-40 profiles (the paper's fixed column set) plus any other
+    /// catalog key that saw requests, in dense order.
+    pub fn reported_profiles(&self) -> Vec<ProfileKey> {
+        ProfileKey::all()
+            .filter(|k| k.model() == GpuModel::A100_40 || self.per_profile[k.dense()].0 > 0)
+            .collect()
+    }
+
+    /// JSON export for the figure harness. A100-40 profiles keep their
+    /// historical bare names; other models' entries are model-qualified
+    /// (`"a30:2g.12gb"`) since profile names recur across models.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("policy", self.policy.as_str().into()),
@@ -159,15 +206,39 @@ impl SimResult {
             (
                 "per_profile",
                 Json::Obj(
-                    ALL_PROFILES
-                        .iter()
-                        .enumerate()
-                        .map(|(i, p)| {
+                    self.reported_profiles()
+                        .into_iter()
+                        .map(|k| {
+                            let (req, acc) = self.per_profile[k.dense()];
                             (
-                                p.name().to_string(),
+                                k.to_string(),
                                 Json::obj(vec![
-                                    ("requested", self.per_profile[i].0.into()),
-                                    ("accepted", self.per_profile[i].1.into()),
+                                    ("requested", req.into()),
+                                    ("accepted", acc.into()),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "models",
+                Json::Obj(
+                    self.fleet_models()
+                        .into_iter()
+                        .map(|m| {
+                            let (req, acc) = self.per_model_requests()[m as usize];
+                            (
+                                m.name().to_string(),
+                                Json::obj(vec![
+                                    ("gpus", self.gpus_by_model[m as usize].into()),
+                                    ("requested", req.into()),
+                                    ("accepted", acc.into()),
+                                    (
+                                        "acceptance",
+                                        acceptance_rate(acc, req).into(),
+                                    ),
+                                    ("active_gpu_rate", self.model_active_rate(m).into()),
                                 ]),
                             )
                         })
@@ -202,6 +273,13 @@ mod tests {
     fn result() -> SimResult {
         let g0 = GpuRef { host: 0, gpu: 0 };
         let g1 = GpuRef { host: 0, gpu: 1 };
+        let mut per_profile = [(0u64, 0u64); NUM_PROFILE_KEYS];
+        per_profile[..6]
+            .copy_from_slice(&[(2, 1), (0, 0), (4, 3), (2, 1), (1, 1), (1, 0)]);
+        let mut gpus_by_model = [0usize; NUM_MODELS];
+        gpus_by_model[GpuModel::A100_40 as usize] = 2;
+        let mut gpu_activity = [(0u64, 0u64); NUM_MODELS];
+        gpu_activity[GpuModel::A100_40 as usize] = (3, 6);
         SimResult {
             policy: "test".into(),
             samples: vec![
@@ -211,13 +289,15 @@ mod tests {
             ],
             requested: 10,
             accepted: 6,
-            per_profile: [(2, 1), (0, 0), (4, 3), (2, 1), (1, 1), (1, 0)],
+            per_profile,
             rejections: [1, 0, 2, 1],
             migration_events: vec![
                 MigrationEvent { vm: 1, from: g0, to: g0, kind: MigrationKind::Intra },
                 MigrationEvent { vm: 2, from: g0, to: g0, kind: MigrationKind::Intra },
                 MigrationEvent { vm: 3, from: g0, to: g1, kind: MigrationKind::Inter },
             ],
+            gpus_by_model,
+            gpu_activity,
             wall_seconds: 0.1,
         }
     }
@@ -263,6 +343,29 @@ mod tests {
     }
 
     #[test]
+    fn per_model_rollups() {
+        let mut r = result();
+        // Route one request stream through an A30 key too.
+        let k = GpuModel::A30.profile(1);
+        r.per_profile[k.dense()] = (3, 2);
+        r.requested += 3;
+        r.accepted += 2;
+        r.gpus_by_model[GpuModel::A30 as usize] = 1;
+        r.gpu_activity[GpuModel::A30 as usize] = (1, 3);
+        let by_model = r.per_model_requests();
+        assert_eq!(by_model[GpuModel::A100_40 as usize], (10, 6));
+        assert_eq!(by_model[GpuModel::A30 as usize], (3, 2));
+        assert_eq!(r.fleet_models(), vec![GpuModel::A100_40, GpuModel::A30]);
+        assert!((r.model_active_rate(GpuModel::A100_40) - 0.5).abs() < 1e-12);
+        assert!((r.model_active_rate(GpuModel::A30) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.model_active_rate(GpuModel::H100_80), 0.0);
+        // Reported columns: the A100-40 six plus the requested A30 key.
+        let cols = r.reported_profiles();
+        assert_eq!(cols.len(), 7);
+        assert!(cols.contains(&k));
+    }
+
+    #[test]
     fn auc_trapezoid() {
         let r = result();
         // (0+50)/2 + (50+100)/2 = 100.
@@ -278,5 +381,12 @@ mod tests {
         let rej = parsed.get("rejections").unwrap();
         assert_eq!(rej.get("no_gpu_fit").unwrap().as_f64(), Some(2.0));
         assert_eq!(rej.get("quota_denied").unwrap().as_f64(), Some(1.0));
+        // Historical bare profile keys survive for the A100-40.
+        let pp = parsed.get("per_profile").unwrap();
+        assert_eq!(pp.get("2g.10gb").unwrap().get("accepted").unwrap().as_f64(), Some(3.0));
+        // Per-model rollup present for the fleet's models only.
+        let models = parsed.get("models").unwrap();
+        assert_eq!(models.get("a100-40").unwrap().get("gpus").unwrap().as_f64(), Some(2.0));
+        assert!(models.get("a30").is_none());
     }
 }

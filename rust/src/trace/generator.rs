@@ -17,9 +17,12 @@
 //! Everything is keyed by a single seed: the five policies compared in §8
 //! replay byte-identical workloads.
 
-use super::mapping::{map_pods_to_profiles, normalized_profile_values, MappingReport, PodRecord};
+use super::mapping::{
+    map_pods_to_profiles_fleet, normalized_profile_values, MappingReport, PodRecord,
+};
 use crate::cluster::host::Host;
 use crate::cluster::vm::{Time, VmSpec, HOUR};
+use crate::mig::{GpuModel, NUM_PROFILE_KEYS};
 use crate::util::rng::Rng;
 
 /// Configuration of the synthetic trace.
@@ -44,6 +47,12 @@ pub struct TraceConfig {
     pub multi_gpu_frac: f64,
     /// Host GPU-count weights for 1..=8 GPUs per host.
     pub host_gpu_weights: [f64; 8],
+    /// Fleet mix: `(model, weight)` pairs. Every GPU's model is drawn
+    /// from this distribution and every pod's requirement maps onto its
+    /// assigned model's ladder. A single-entry mix (the default,
+    /// A100-40-only) consumes no randomness, keeping the historical
+    /// byte-identical streams.
+    pub gpu_models: Vec<(GpuModel, f64)>,
 }
 
 impl Default for TraceConfig {
@@ -63,6 +72,7 @@ impl Default for TraceConfig {
             // mostly single-GPU nodes: ~1,450 GPUs total, the scarcity regime
             // that produces the paper's ~30-40% acceptance rates.
             host_gpu_weights: [0.90, 0.07, 0.01, 0.01, 0.005, 0.002, 0.002, 0.001],
+            gpu_models: vec![(GpuModel::A100_40, 1.0)],
         }
     }
 }
@@ -95,7 +105,8 @@ impl Workload {
         let mut rng = Rng::new(config.seed);
         let hosts = generate_hosts(&config, &mut rng.split());
         let pods = generate_pods(&config, &mut rng.split());
-        let (vms, report) = map_pods_to_profiles(&pods);
+        let (vms, report) =
+            map_pods_to_profiles_fleet(&pods, &config.gpu_models, &mut rng.split());
         Workload { hosts, vms, report, config }
     }
 
@@ -104,12 +115,18 @@ impl Workload {
         self.hosts.iter().map(|h| h.gpus().len()).sum()
     }
 
-    /// Fig. 5 data: per-profile share of the cleaned workload.
-    pub fn profile_distribution(&self) -> [f64; 6] {
+    /// Per-model GPU counts of the generated fleet.
+    pub fn gpus_by_model(&self) -> [usize; crate::mig::NUM_MODELS] {
+        crate::cluster::host::gpus_by_model(&self.hosts)
+    }
+
+    /// Fig. 5 data: per-profile share of the cleaned workload, by dense
+    /// key (the first six slots are the A100-40 distribution).
+    pub fn profile_distribution(&self) -> [f64; NUM_PROFILE_KEYS] {
         let total: usize = self.report.profile_counts.iter().sum();
-        let mut out = [0.0; 6];
+        let mut out = [0.0; NUM_PROFILE_KEYS];
         if total > 0 {
-            for i in 0..6 {
+            for i in 0..NUM_PROFILE_KEYS {
                 out[i] = self.report.profile_counts[i] as f64 / total as f64;
             }
         }
@@ -118,6 +135,7 @@ impl Workload {
 }
 
 fn generate_hosts(config: &TraceConfig, rng: &mut Rng) -> Vec<Host> {
+    let model_weights: Vec<f64> = config.gpu_models.iter().map(|(_, w)| *w).collect();
     (0..config.num_hosts)
         .map(|i| {
             let gpus = rng.weighted_index(&config.host_gpu_weights) + 1;
@@ -126,7 +144,16 @@ fn generate_hosts(config: &TraceConfig, rng: &mut Rng) -> Vec<Host> {
             // matching the paper's focus.
             let cpus = 32 * gpus as u32 + 16;
             let ram = 128 * gpus as u32 + 64;
-            Host::new(i as u32, cpus, ram, gpus)
+            if config.gpu_models.len() == 1 {
+                // Single-model fleets draw nothing extra: the historical
+                // RNG stream (and thus the whole workload) is preserved.
+                Host::with_models(i as u32, cpus, ram, &vec![config.gpu_models[0].0; gpus])
+            } else {
+                let models: Vec<GpuModel> = (0..gpus)
+                    .map(|_| config.gpu_models[rng.weighted_index(&model_weights)].0)
+                    .collect();
+                Host::with_models(i as u32, cpus, ram, &models)
+            }
         })
         .collect()
 }
@@ -248,6 +275,49 @@ mod tests {
         assert!(w.vms.windows(2).all(|p| p[0].arrival <= p[1].arrival));
         assert!(w.vms.iter().all(|v| v.departure > v.arrival));
         assert!(w.vms.iter().all(|v| v.cpus >= 2 && v.ram_gb >= 8));
+    }
+
+    #[test]
+    fn mixed_fleet_generation_is_deterministic_and_segregated() {
+        let config = TraceConfig {
+            gpu_models: vec![
+                (GpuModel::A30, 0.3),
+                (GpuModel::A100_40, 0.4),
+                (GpuModel::H100_80, 0.3),
+            ],
+            ..TraceConfig::small(17)
+        };
+        let a = Workload::generate(config.clone());
+        let b = Workload::generate(config);
+        assert_eq!(a.vms, b.vms);
+        let by_model = a.gpus_by_model();
+        assert!(by_model[GpuModel::A30 as usize] > 0);
+        assert!(by_model[GpuModel::A100_40 as usize] > 0);
+        assert!(by_model[GpuModel::H100_80 as usize] > 0);
+        assert_eq!(by_model[GpuModel::A100_80 as usize], 0);
+        // Every VM's profile belongs to a fleet model.
+        for vm in &a.vms {
+            assert_ne!(vm.profile.model(), GpuModel::A100_80);
+        }
+        // All three models receive requests.
+        let dist = a.profile_distribution();
+        for m in [GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80] {
+            let share: f64 = m.profile_keys().map(|k| dist[k.dense()]).sum();
+            assert!(share > 0.1, "{m} share {share}");
+        }
+    }
+
+    #[test]
+    fn single_model_fleet_unchanged_by_catalog_plumbing() {
+        // The default config must generate the exact same hosts and VM
+        // stream the pre-catalog generator produced: model sampling and
+        // fleet mapping consume no randomness for single-model fleets.
+        let w = Workload::generate(TraceConfig::small(42));
+        assert!(w.hosts.iter().all(|h| h
+            .gpus()
+            .iter()
+            .all(|g| g.model() == GpuModel::A100_40)));
+        assert!(w.vms.iter().all(|v| v.profile.model() == GpuModel::A100_40));
     }
 
     #[test]

@@ -1,7 +1,17 @@
 //! Pod→MIG-profile mapping (Eq. 27–30) and the trace-cleaning pipeline.
+//!
+//! Heterogeneous fleets: [`map_pods_to_profiles_fleet`] additionally
+//! assigns each retained pod a GPU model drawn from the fleet mix, then
+//! maps its normalized requirement onto *that model's* profile ladder
+//! (each model's Eq. 28–29 values are normalized within the model, so
+//! `û ∈ [0, 1]` lands on every ladder). The single-model path — the
+//! historical [`map_pods_to_profiles`] — consumes no randomness and is
+//! byte-identical to the pre-catalog pipeline.
 
 use crate::cluster::vm::{Time, VmSpec};
+use crate::mig::model::{GpuModel, NUM_PROFILE_KEYS};
 use crate::mig::profiles::{Profile, ALL_PROFILES};
+use crate::util::rng::Rng;
 use crate::util::stats::iqr_bounds;
 
 /// A raw pod record before mapping (one row of the cleaned trace).
@@ -28,8 +38,8 @@ impl PodRecord {
     }
 }
 
-/// Eq. 28–29: normalized combined compute×memory value per profile.
-/// `max(U_k)` is 7g.40gb's value, so Û_(7g.40gb) = 1.
+/// Eq. 28–29 on the A100-40: normalized combined compute×memory value
+/// per profile. `max(U_k)` is 7g.40gb's value, so Û_(7g.40gb) = 1.
 pub fn normalized_profile_values() -> [f64; 6] {
     let max = Profile::P7g40gb.combined_value();
     let mut out = [0.0; 6];
@@ -39,20 +49,31 @@ pub fn normalized_profile_values() -> [f64; 6] {
     out
 }
 
-/// Eq. 30: the profile whose normalized value is closest to `u_hat`.
-/// Ties resolve to the smaller profile (first in table order).
-pub fn nearest_profile(u_hat: f64) -> Profile {
-    let values = normalized_profile_values();
-    let mut best = Profile::P1g5gb;
+/// Eq. 28–29 for any model: normalized combined values of its profiles
+/// in per-model index order ([`Profile::combined_value`] is already
+/// normalized within the model, so the heavy profile maps to 1).
+pub fn normalized_values_for(model: GpuModel) -> Vec<f64> {
+    model.profile_keys().map(|k| k.combined_value()).collect()
+}
+
+/// Eq. 30 on `model`: the profile whose normalized value is closest to
+/// `u_hat`. Ties resolve to the smaller profile (first in table order).
+pub fn nearest_profile_for(model: GpuModel, u_hat: f64) -> Profile {
+    let mut best = model.profile(0);
     let mut best_d = f64::INFINITY;
-    for p in ALL_PROFILES {
-        let d = (values[p.index()] - u_hat).abs();
+    for k in model.profile_keys() {
+        let d = (k.combined_value() - u_hat).abs();
         if d < best_d {
             best_d = d;
-            best = p;
+            best = k;
         }
     }
     best
+}
+
+/// Eq. 30 on the A100-40 (the historical mapping).
+pub fn nearest_profile(u_hat: f64) -> Profile {
+    nearest_profile_for(GpuModel::A100_40, u_hat)
 }
 
 /// Outcome of the full §8.1 cleaning pipeline.
@@ -62,15 +83,32 @@ pub struct MappingReport {
     pub outliers_removed: usize,
     /// Pods dropped for requiring more than one full GPU.
     pub multi_gpu_removed: usize,
-    /// Final per-profile counts (Fig. 5's distribution).
-    pub profile_counts: [usize; 6],
+    /// Final per-profile counts by dense [`Profile::dense`] key (the
+    /// first six slots are Fig. 5's A100-40 distribution).
+    pub profile_counts: [usize; NUM_PROFILE_KEYS],
 }
 
-/// Run the paper's pipeline over raw pods: IQR-filter arrivals, drop
-/// pods needing more than one full GPU (<1% in the paper), normalize the
-/// requirement by the post-filter maximum (Eq. 27) and map each pod to the
-/// nearest profile (Eq. 30). Returns VM specs sorted by arrival.
+/// Run the paper's pipeline over raw pods against an A100-40-only fleet:
+/// IQR-filter arrivals, drop pods needing more than one full GPU (<1% in
+/// the paper), normalize the requirement by the post-filter maximum
+/// (Eq. 27) and map each pod to the nearest profile (Eq. 30). Returns VM
+/// specs sorted by arrival.
 pub fn map_pods_to_profiles(pods: &[PodRecord]) -> (Vec<VmSpec>, MappingReport) {
+    // The single-model path never touches the RNG; any seed works.
+    map_pods_to_profiles_fleet(pods, &[(GpuModel::A100_40, 1.0)], &mut Rng::new(0))
+}
+
+/// [`map_pods_to_profiles`] over a heterogeneous fleet mix: each
+/// retained pod is assigned a model drawn from `fleet` (weights need not
+/// sum to 1), then mapped onto that model's ladder. With a single-entry
+/// fleet the RNG is never consumed and the pipeline is byte-identical to
+/// the historical single-model mapping.
+pub fn map_pods_to_profiles_fleet(
+    pods: &[PodRecord],
+    fleet: &[(GpuModel, f64)],
+    rng: &mut Rng,
+) -> (Vec<VmSpec>, MappingReport) {
+    assert!(!fleet.is_empty(), "fleet mix must name at least one model");
     // IQR filter on arrival times (§8.1).
     let arrivals: Vec<f64> = pods.iter().map(|p| p.arrival as f64).collect();
     let (lo, hi) = if arrivals.is_empty() { (0.0, 0.0) } else { iqr_bounds(&arrivals) };
@@ -86,12 +124,15 @@ pub fn map_pods_to_profiles(pods: &[PodRecord]) -> (Vec<VmSpec>, MappingReport) 
     // Eq. 27: normalize by the maximum requirement across retained pods.
     let max_u = single.iter().map(|p| p.total_gpu_requirement()).fold(0.0f64, f64::max);
 
+    let weights: Vec<f64> = fleet.iter().map(|(_, w)| *w).collect();
     let mut vms: Vec<VmSpec> = Vec::with_capacity(single.len());
-    let mut profile_counts = [0usize; 6];
+    let mut profile_counts = [0usize; NUM_PROFILE_KEYS];
     for pod in &single {
         let u_hat = if max_u > 0.0 { pod.total_gpu_requirement() / max_u } else { 0.0 };
-        let profile = nearest_profile(u_hat);
-        profile_counts[profile.index()] += 1;
+        let model =
+            if fleet.len() == 1 { fleet[0].0 } else { fleet[rng.weighted_index(&weights)].0 };
+        let profile = nearest_profile_for(model, u_hat);
+        profile_counts[profile.dense()] += 1;
         vms.push(VmSpec {
             id: 0, // assigned after sorting
             profile,
@@ -131,10 +172,32 @@ mod tests {
     }
 
     #[test]
+    fn per_model_ladders_normalized() {
+        for m in crate::mig::ALL_MODELS {
+            let v = normalized_values_for(m);
+            for w in v.windows(2) {
+                assert!(w[0] < w[1], "{m}");
+            }
+            assert!((v.last().unwrap() - 1.0).abs() < 1e-12, "{m}");
+        }
+        // A30: 1g.6gb = (1/4)(1/4) = 1/16; 2g.12gb = (2/4)(2/4) = 1/4.
+        let a30 = normalized_values_for(GpuModel::A30);
+        assert!((a30[0] - 1.0 / 16.0).abs() < 1e-12);
+        assert!((a30[1] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
     fn nearest_profile_extremes() {
         assert_eq!(nearest_profile(0.0), Profile::P1g5gb);
         assert_eq!(nearest_profile(1.0), Profile::P7g40gb);
         assert_eq!(nearest_profile(0.99), Profile::P7g40gb);
+        // Per-model extremes land on the model's own ladder.
+        assert_eq!(nearest_profile_for(GpuModel::A30, 1.0), GpuModel::A30.profile(2));
+        assert_eq!(nearest_profile_for(GpuModel::A30, 0.0), GpuModel::A30.profile(0));
+        assert_eq!(
+            nearest_profile_for(GpuModel::H100_80, 1.0),
+            GpuModel::H100_80.profile(5)
+        );
     }
 
     #[test]
@@ -195,7 +258,41 @@ mod tests {
         let pods = vec![pod(0, 1.0), pod(1, 1.0 / 56.0)];
         let (vms, report) = map_pods_to_profiles(&pods);
         assert_eq!(vms[1].profile, Profile::P1g5gb);
-        assert_eq!(report.profile_counts[Profile::P7g40gb.index()], 1);
-        assert_eq!(report.profile_counts[Profile::P1g5gb.index()], 1);
+        assert_eq!(report.profile_counts[Profile::P7g40gb.dense()], 1);
+        assert_eq!(report.profile_counts[Profile::P1g5gb.dense()], 1);
+    }
+
+    #[test]
+    fn fleet_mapping_spreads_models_deterministically() {
+        let pods: Vec<PodRecord> = (0..300).map(|i| pod(i * 60, 1.0)).collect();
+        let fleet = [(GpuModel::A30, 0.5), (GpuModel::H100_80, 0.5)];
+        let (vms_a, report_a) = map_pods_to_profiles_fleet(&pods, &fleet, &mut Rng::new(7));
+        let (vms_b, _) = map_pods_to_profiles_fleet(&pods, &fleet, &mut Rng::new(7));
+        assert_eq!(vms_a, vms_b, "fleet mapping must be seed-deterministic");
+        // Both models' heavy profiles appear; counts cover the stream.
+        let a30_heavy = GpuModel::A30.profile(2).dense();
+        let h100_heavy = GpuModel::H100_80.profile(5).dense();
+        assert!(report_a.profile_counts[a30_heavy] > 50);
+        assert!(report_a.profile_counts[h100_heavy] > 50);
+        assert_eq!(
+            report_a.profile_counts.iter().sum::<usize>(),
+            vms_a.len(),
+            "every VM counted once"
+        );
+        // No A100-40 keys in a fleet without A100-40s.
+        assert!(report_a.profile_counts[..6].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn single_model_fleet_matches_historical_path() {
+        let pods: Vec<PodRecord> = (0..50).map(|i| pod(i * 60, 0.1 + (i as f64) * 0.015)).collect();
+        let (vms_old, report_old) = map_pods_to_profiles(&pods);
+        let (vms_new, report_new) = map_pods_to_profiles_fleet(
+            &pods,
+            &[(GpuModel::A100_40, 1.0)],
+            &mut Rng::new(999), // consumed by neither path
+        );
+        assert_eq!(vms_old, vms_new);
+        assert_eq!(report_old.profile_counts, report_new.profile_counts);
     }
 }

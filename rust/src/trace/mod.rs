@@ -19,4 +19,4 @@ pub mod loader;
 pub mod mapping;
 
 pub use generator::{TraceConfig, Workload};
-pub use mapping::{map_pods_to_profiles, PodRecord};
+pub use mapping::{map_pods_to_profiles, map_pods_to_profiles_fleet, PodRecord};

@@ -10,7 +10,11 @@
 //!   cluster index (`PolicyConfig::use_index(true)`, the default) must
 //!   produce the exact `Decision` sequence and `SimResult` of its
 //!   brute-force full-scan variant (the regression lock for the
-//!   `ClusterIndex` maintenance).
+//!   `ClusterIndex` maintenance), on single-model *and* mixed fleets;
+//! * the catalog equivalence — A100-only fleets decide byte-identically
+//!   whether built through the legacy constructors or explicitly through
+//!   the `GpuModel` catalog (the golden lock for the heterogeneous-fleet
+//!   redesign).
 
 use grmu::cluster::vm::HOUR;
 use grmu::cluster::{DataCenter, Host, VmSpec};
@@ -288,6 +292,94 @@ fn indexed_and_scan_policies_decide_identically() {
 #[test]
 fn index_equivalence_survives_consolidation() {
     let workload = Workload::generate(TraceConfig::small(19));
+    let cfg = PolicyConfig::new().heavy_frac(0.2).consolidation_hours(Some(12));
+    assert_equivalent("grmu", &cfg, &workload, 19);
+}
+
+// ---------------------------------------------------- catalog equivalence
+
+/// Golden lock for the GpuModel-catalog redesign: an A100-only fleet
+/// built through the legacy constructors (`Host::new`, implicit A100-40
+/// everywhere) and the same fleet built explicitly through the catalog
+/// (`Host::with_models(&[GpuModel::A100_40; n])`, a single-entry
+/// `gpu_models` trace mix) must produce byte-identical `Decision`
+/// sequences and `SimResult`s for every policy — the catalog is a pure
+/// generalization, not a behavior change.
+#[test]
+fn a100_only_catalog_fleet_is_byte_identical_to_legacy() {
+    use grmu::mig::GpuModel;
+    let legacy = Workload::generate(TraceConfig::small(42));
+    let catalog_cfg = TraceConfig {
+        gpu_models: vec![(GpuModel::A100_40, 1.0)],
+        ..TraceConfig::small(42)
+    };
+    let catalog = Workload::generate(catalog_cfg);
+    // The trace pipeline itself must not shift: same VM stream.
+    assert_eq!(legacy.vms, catalog.vms, "single-model fleets must not consume extra RNG");
+    // Rebuild the catalog fleet explicitly through Host::with_models.
+    let rebuilt: Vec<Host> = legacy
+        .hosts
+        .iter()
+        .map(|h| {
+            Host::with_models(
+                h.id,
+                h.cpus,
+                h.ram_gb,
+                &vec![GpuModel::A100_40; h.gpus().len()],
+            )
+        })
+        .collect();
+    let explicit = Workload { hosts: rebuilt, ..legacy.clone() };
+    let cfg = PolicyConfig::new().heavy_frac(0.25);
+    for name in ["ff", "bf", "mcc", "mecc", "grmu", "grmu-db"] {
+        let a = replay_decisions(name, &cfg, &legacy, 42);
+        let b = replay_decisions(name, &cfg, &explicit, 42);
+        assert_eq!(a.0, b.0, "{name}: decision sequences diverged");
+        assert_eq!(a.1.per_profile, b.1.per_profile, "{name}");
+        assert_eq!(a.1.rejections, b.1.rejections, "{name}");
+        assert_eq!(a.1.samples, b.1.samples, "{name}");
+        assert_eq!(a.1.migration_events, b.1.migration_events, "{name}");
+        // A100-only runs keep the historical per-profile layout: the
+        // first six dense slots carry everything, the tail stays zero.
+        assert!(a.1.per_profile[6..].iter().all(|&(r, _)| r == 0), "{name}");
+        assert_eq!(
+            a.1.per_profile.iter().map(|(r, _)| r).sum::<u64>(),
+            a.1.requested,
+            "{name}"
+        );
+    }
+}
+
+/// The indexed-vs-scan lock on a *heterogeneous* fleet: every policy
+/// must decide byte-identically with and without the cluster index when
+/// A30s, A100-40s and H100-80s share the cluster.
+#[test]
+fn mixed_fleet_indexed_and_scan_policies_decide_identically() {
+    use grmu::mig::GpuModel;
+    let workload = Workload::generate(TraceConfig {
+        gpu_models: vec![
+            (GpuModel::A30, 0.3),
+            (GpuModel::A100_40, 0.4),
+            (GpuModel::H100_80, 0.3),
+        ],
+        ..TraceConfig::small(42)
+    });
+    let cfg = PolicyConfig::new().heavy_frac(0.25);
+    for name in ["ff", "bf", "mcc", "mecc", "grmu", "grmu-db"] {
+        assert_equivalent(name, &cfg, &workload, 42);
+    }
+}
+
+/// Mixed-fleet GRMU with consolidation: inter-GPU moves must respect
+/// model compatibility and keep the index coherent (the periodic
+/// integrity checks inside `replay_decisions` verify both).
+#[test]
+fn mixed_fleet_index_equivalence_survives_consolidation() {
+    use grmu::mig::GpuModel;
+    let workload = Workload::generate(TraceConfig {
+        gpu_models: vec![(GpuModel::A30, 0.5), (GpuModel::A100_40, 0.5)],
+        ..TraceConfig::small(19)
+    });
     let cfg = PolicyConfig::new().heavy_frac(0.2).consolidation_hours(Some(12));
     assert_equivalent("grmu", &cfg, &workload, 19);
 }

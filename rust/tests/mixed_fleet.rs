@@ -1,0 +1,294 @@
+//! Integration tests for heterogeneous (multi-model) fleets: end-to-end
+//! simulation over mixed A30 / A100-40 / H100-80 clusters, model-routing
+//! invariants (a GI only ever lands on a GPU of its own model), per-model
+//! accounting, and a property test of `check_integrity` under random
+//! place/remove/migrate/relocate on mixed clusters.
+
+use grmu::cluster::{DataCenter, GpuRef, Host, VmSpec};
+use grmu::mig::placement::mock_assign;
+use grmu::mig::{GpuModel, Placement};
+use grmu::policies::{PolicyConfig, PolicyCtx, PolicyRegistry};
+use grmu::sim::{Simulation, SimulationOptions};
+use grmu::trace::{TraceConfig, Workload};
+use grmu::util::prop::forall;
+use grmu::util::rng::Rng;
+
+fn mixed_workload(seed: u64) -> Workload {
+    Workload::generate(TraceConfig {
+        gpu_models: vec![
+            (GpuModel::A30, 0.3),
+            (GpuModel::A100_40, 0.4),
+            (GpuModel::H100_80, 0.3),
+        ],
+        ..TraceConfig::small(seed)
+    })
+}
+
+#[test]
+fn all_policies_run_mixed_fleets_end_to_end() {
+    // The acceptance-criterion scenario: a30:0.3,a100-40:0.4,h100-80:0.3
+    // runs through every policy with integrity checks on, and the typed
+    // rejection breakdown stays exact.
+    let workload = mixed_workload(42);
+    for name in PolicyRegistry::standard().names() {
+        let policy = PolicyRegistry::standard()
+            .build(name, &PolicyConfig::new().heavy_frac(0.3).consolidation_hours(Some(24)))
+            .unwrap();
+        let dc = DataCenter::new(workload.hosts.clone());
+        let mut sim = Simulation::new(dc, policy, &workload.vms);
+        sim.ctx = PolicyCtx::new(42);
+        sim.options = SimulationOptions { integrity_every: 13, drain_cap_hours: 10 * 24 };
+        let r = sim.run();
+        assert!(r.requested > 0);
+        assert!(r.accepted > 0, "{name}: accepted nothing on a mixed fleet");
+        assert_eq!(
+            r.rejections.iter().sum::<u64>(),
+            r.requested - r.accepted,
+            "{name}: rejection breakdown mismatch"
+        );
+        // Per-model rollup partitions the totals.
+        let by_model = r.per_model_requests();
+        assert_eq!(by_model.iter().map(|(q, _)| q).sum::<u64>(), r.requested, "{name}");
+        assert_eq!(by_model.iter().map(|(_, a)| a).sum::<u64>(), r.accepted, "{name}");
+        // Every fleet model saw requests; the absent model saw none.
+        assert_eq!(by_model[GpuModel::A100_80 as usize], (0, 0), "{name}");
+        for m in [GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80] {
+            assert!(by_model[m as usize].0 > 0, "{name}: no {m} requests");
+            assert!(r.gpus_by_model[m as usize] > 0, "{name}: no {m} GPUs");
+        }
+    }
+}
+
+#[test]
+fn placements_always_respect_model_compatibility() {
+    let workload = mixed_workload(7);
+    for name in ["ff", "bf", "mcc", "mecc", "grmu"] {
+        let policy = PolicyRegistry::standard()
+            .build(name, &PolicyConfig::new().heavy_frac(0.3))
+            .unwrap();
+        let mut dc = DataCenter::new(workload.hosts.clone());
+        let mut p = policy;
+        let mut ctx = PolicyCtx::default();
+        let decisions = p.place_batch(&mut dc, &workload.vms, &mut ctx);
+        for (vm, d) in workload.vms.iter().zip(&decisions) {
+            if let Some(r) = d.gpu() {
+                assert_eq!(
+                    dc.gpu(r).model(),
+                    vm.profile.model(),
+                    "{name}: VM {} landed cross-model",
+                    vm.id
+                );
+            }
+        }
+        dc.check_integrity().unwrap();
+    }
+}
+
+#[test]
+fn grmu_heavy_basket_serves_every_models_whole_gpu_profile() {
+    // One host per model; whole-GPU requests of each model route through
+    // the heavy basket (is_heavy generalizes beyond 7g.40gb).
+    let hosts = vec![
+        Host::with_models(0, 256, 1024, &[GpuModel::A30, GpuModel::A30]),
+        Host::with_models(1, 256, 1024, &[GpuModel::A100_40, GpuModel::A100_40]),
+        Host::with_models(2, 256, 1024, &[GpuModel::H100_80, GpuModel::H100_80]),
+    ];
+    let mut dc = DataCenter::new(hosts);
+    let mut policy = PolicyRegistry::standard()
+        .build("grmu", &PolicyConfig::new().heavy_frac(0.5))
+        .unwrap();
+    let heavy = |m: GpuModel| m.profile(m.num_profiles() - 1);
+    assert!(heavy(GpuModel::A30).is_heavy());
+    let vms: Vec<VmSpec> = [GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80]
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| VmSpec {
+            id: i as u64 + 1,
+            profile: heavy(m),
+            cpus: 2,
+            ram_gb: 4,
+            arrival: 0,
+            departure: 1_000_000,
+            weight: 1.0,
+        })
+        .collect();
+    let mut ctx = PolicyCtx::default();
+    let out = policy.place_batch(&mut dc, &vms, &mut ctx);
+    // Heavy capacity is 3 of 6 GPUs; each request needs its own model,
+    // and the heavy basket grows from the pool per model as needed.
+    assert!(out.iter().all(|d| d.is_placed()), "heavy per-model requests should all place");
+    for (vm, d) in vms.iter().zip(&out) {
+        let r = d.gpu().unwrap();
+        assert_eq!(dc.gpu(r).model(), vm.profile.model());
+        assert_eq!(dc.gpu(r).free_blocks(), 0, "whole-GPU profile fills the part");
+    }
+    dc.check_integrity().unwrap();
+}
+
+#[test]
+fn mixed_fleet_simulation_is_deterministic() {
+    let workload = mixed_workload(11);
+    let run = || {
+        let policy = PolicyRegistry::standard()
+            .build("grmu", &PolicyConfig::new().heavy_frac(0.2).consolidation_hours(Some(12)))
+            .unwrap();
+        let mut sim =
+            Simulation::new(DataCenter::new(workload.hosts.clone()), policy, &workload.vms);
+        sim.ctx = PolicyCtx::new(11);
+        sim.options.drain_cap_hours = 7 * 24;
+        sim.run()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.accepted, b.accepted);
+    assert_eq!(a.per_profile, b.per_profile);
+    assert_eq!(a.migration_events, b.migration_events);
+    assert_eq!(a.gpu_activity, b.gpu_activity);
+    assert_eq!(a.samples, b.samples);
+}
+
+/// Satellite acceptance: `check_integrity` holds on mixed A30/A100/H100
+/// clusters under random place/remove/migrate/relocate sequences (the
+/// integration-level twin of the `cluster::index` property test, driven
+/// through the public DataCenter API on a larger mixed topology).
+#[test]
+fn prop_mixed_cluster_integrity_under_random_ops() {
+    let models = [GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80, GpuModel::A100_80];
+    forall(
+        "mixed-cluster-integrity",
+        |r: &mut Rng| {
+            // 3-6 hosts, each with 1-3 GPUs of random models.
+            let hosts: Vec<Host> = (0..3 + r.below(4))
+                .map(|i| {
+                    let gpus: Vec<GpuModel> = (0..1 + r.below(3))
+                        .map(|_| models[r.below(models.len() as u64) as usize])
+                        .collect();
+                    Host::with_models(i as u32, 8 + r.below(16) as u32, 32 + r.below(64) as u32, &gpus)
+                })
+                .collect();
+            let mut dc = DataCenter::new(hosts);
+            let refs: Vec<GpuRef> = dc.gpu_refs();
+            let mut next_vm = 1u64;
+            let mut resident: Vec<u64> = Vec::new();
+            for _ in 0..64 {
+                match r.below(4) {
+                    0 | 1 => {
+                        let gr = refs[r.below(refs.len() as u64) as usize];
+                        let model = dc.gpu(gr).model();
+                        let profile =
+                            model.profile(r.below(model.num_profiles() as u64) as usize);
+                        let vm = VmSpec {
+                            id: next_vm,
+                            profile,
+                            cpus: 1 + r.below(3) as u32,
+                            ram_gb: 1 + r.below(4) as u32,
+                            arrival: 0,
+                            departure: 1_000,
+                            weight: 1.0,
+                        };
+                        if dc.host(gr.host).fits_resources(vm.cpus, vm.ram_gb) {
+                            if let Some((pl, _)) = mock_assign(dc.gpu(gr).occupancy(), profile) {
+                                dc.place(&vm, gr, pl);
+                                resident.push(next_vm);
+                                next_vm += 1;
+                            }
+                        }
+                    }
+                    2 => {
+                        if !resident.is_empty() {
+                            let i = r.below(resident.len() as u64) as usize;
+                            dc.remove(resident.swap_remove(i));
+                        }
+                    }
+                    _ => {
+                        if resident.is_empty() {
+                            continue;
+                        }
+                        let vm = resident[r.below(resident.len() as u64) as usize];
+                        let loc = dc.locate(vm).unwrap();
+                        if r.chance(0.5) {
+                            // Relocate within the same GPU.
+                            let occ = dc.gpu(loc.gpu).occupancy() & !loc.placement.mask();
+                            let starts: Vec<u8> = loc
+                                .placement
+                                .profile
+                                .start_blocks()
+                                .iter()
+                                .copied()
+                                .filter(|&s| {
+                                    let m = Placement {
+                                        profile: loc.placement.profile,
+                                        start: s,
+                                    }
+                                    .mask();
+                                    occ & m == 0
+                                })
+                                .collect();
+                            let s = starts[r.below(starts.len() as u64) as usize];
+                            dc.relocate_within_gpu(
+                                vm,
+                                Placement { profile: loc.placement.profile, start: s },
+                            );
+                        } else {
+                            // Migrate to a model-compatible GPU.
+                            let dst = refs[r.below(refs.len() as u64) as usize];
+                            if dst == loc.gpu
+                                || dc.gpu(dst).model() != loc.placement.profile.model()
+                            {
+                                continue;
+                            }
+                            let (cpus, ram) = dc.vm_demands(vm).unwrap();
+                            if dst.host != loc.gpu.host
+                                && !dc.host(dst.host).fits_resources(cpus, ram)
+                            {
+                                continue;
+                            }
+                            if let Some((pl, _)) =
+                                mock_assign(dc.gpu(dst).occupancy(), loc.placement.profile)
+                            {
+                                dc.migrate(vm, dst, pl);
+                            }
+                        }
+                    }
+                }
+            }
+            dc
+        },
+        |dc| dc.check_integrity().map_err(|e| format!("integrity: {e}")),
+    );
+}
+
+#[test]
+fn foreign_profile_requests_reject_not_crash() {
+    // An A100-80 request against a fleet with no A100-80s must reject
+    // cleanly (fragmentation/no-fit taxonomy), never place cross-model.
+    let hosts = vec![Host::with_models(0, 64, 256, &[GpuModel::A100_40, GpuModel::A30])];
+    let workload_vm = VmSpec {
+        id: 1,
+        profile: GpuModel::A100_80.profile(0),
+        cpus: 2,
+        ram_gb: 4,
+        arrival: 0,
+        departure: 100,
+        weight: 1.0,
+    };
+    for name in PolicyRegistry::standard().names() {
+        let mut dc = DataCenter::new(hosts.clone());
+        let mut policy = PolicyRegistry::standard()
+            .build(name, &PolicyConfig::new())
+            .unwrap();
+        let mut ctx = PolicyCtx::default();
+        let out = policy.place_batch(&mut dc, &[workload_vm], &mut ctx);
+        assert!(!out[0].is_placed(), "{name}: placed a foreign-model GI");
+        assert!(out[0].reject_reason().is_some(), "{name}");
+        dc.check_integrity().unwrap();
+    }
+}
+
+#[test]
+fn a100_profile_stream_never_uses_foreign_keys() {
+    // Cross-check with the trace layer: an A100-only workload keeps all
+    // accounting inside the first six dense slots.
+    let w = Workload::generate(TraceConfig::small(5));
+    assert!(w.vms.iter().all(|v| v.profile.model() == GpuModel::A100_40));
+    assert!(w.report.profile_counts[6..].iter().all(|&c| c == 0));
+}

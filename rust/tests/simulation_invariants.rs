@@ -62,7 +62,7 @@ fn identical_request_streams_across_policies() {
         PolicyRegistry::COMPARISON.iter().map(|p| run(p, 7, 0.3, None)).collect();
     for r in &results[1..] {
         assert_eq!(r.requested, results[0].requested);
-        for i in 0..6 {
+        for i in 0..r.per_profile.len() {
             assert_eq!(
                 r.per_profile[i].0, results[0].per_profile[i].0,
                 "policy {} sees a different stream",
@@ -174,11 +174,12 @@ fn no_gpu_ever_oversubscribed() {
             assert!(host.free_ram() <= host.ram_gb);
             for gpu in host.gpus() {
                 assert!(consistent(gpu), "{policy}: inconsistent GPU");
-                // No profile exceeds its Table 1 instance limit.
+                // No profile exceeds its Table 1 instance limit (per the
+                // GPU's own model).
                 let counts = gpu.profile_counts();
-                for (i, &c) in counts.iter().enumerate() {
-                    let max = grmu::mig::Profile::from_index(i).max_instances();
-                    assert!(c <= max, "{policy}: {c} instances of profile {i}");
+                for i in 0..gpu.model().num_profiles() {
+                    let max = gpu.model().profile(i).max_instances();
+                    assert!(counts[i] <= max, "{policy}: {} instances of profile {i}", counts[i]);
                 }
             }
         }
