@@ -1,0 +1,174 @@
+//! End-to-end engine throughput at 10,000 GPUs (EXPERIMENTS.md §Perf
+//! iteration 6).
+//!
+//! Three measurements:
+//!
+//! 1. **Engine requests/sec** — full `EventCore` runs (driven through
+//!    `Simulation`) over a synthetic saturated trace on a 10k-GPU fleet,
+//!    homogeneous (A100-40) and mixed (A30/A100-40/H100-80), for ff /
+//!    mcc / grmu. This is the number that must stay flat as the cluster
+//!    grows: the steady-state loop is allocation-free (decisions in the
+//!    reusable `DecisionBuffer`, pre-sized heap/samples/migration log)
+//!    and scan-free (O(1) activity counters at every interval close).
+//! 2. **Interval-close accounting, before/after** — the per-sample
+//!    aggregate reads (`active_hardware_rate`, `active_gpus_by_model`,
+//!    `resident_count`) as O(1) counter reads vs the pre-iteration-6
+//!    fleet scan (`*_scan`), on a loaded 10k-GPU cluster. The printed
+//!    ratio is the sampling-heavy regime's win: the scan cost every
+//!    interval O(hosts × GPUs); the counters cost a few loads.
+//! 3. **Sweep cells/sec** — the parallel sweep runner's end-to-end cell
+//!    throughput with `Arc`-shared per-seed traces.
+//!
+//! Run: `cargo bench --bench engine` (`BENCH_QUICK=1` shrinks the trace
+//! for a fast pass; the fleet stays at 10k GPUs).
+
+use grmu::mig::GpuModel;
+use grmu::report::experiments::{self, ExperimentConfig};
+use grmu::trace::{TraceConfig, Workload};
+use grmu::util::bench::Bench;
+
+const HOSTS: usize = 1_250; // × 8 GPUs = 10,000
+
+/// A 10k-GPU trace config: 1,250 hosts forced to 8 GPUs each, with the
+/// default long-lived (lognormal) service times so the fleet saturates
+/// early and stays saturated — the regime where per-interval scans and
+/// per-batch allocations used to dominate the ~1 ns table-lookup
+/// decision cost.
+fn config(seed: u64, pods: usize, horizon_hours: u64, mixed: bool) -> TraceConfig {
+    let mut weights = [0.0; 8];
+    weights[7] = 1.0; // every host carries 8 GPUs
+    TraceConfig {
+        seed,
+        num_hosts: HOSTS,
+        num_pods: pods,
+        horizon_hours,
+        host_gpu_weights: weights,
+        gpu_models: if mixed {
+            vec![
+                (GpuModel::A30, 0.3),
+                (GpuModel::A100_40, 0.4),
+                (GpuModel::H100_80, 0.3),
+            ]
+        } else {
+            vec![(GpuModel::A100_40, 1.0)]
+        },
+        ..TraceConfig::default()
+    }
+}
+
+fn engine_runs(quick: bool) {
+    let (pods, horizon) = if quick { (8_000, 24) } else { (60_000, 72) };
+    for (fleet, mixed) in [("homogeneous", false), ("mixed", true)] {
+        let trace = config(42, pods, horizon, mixed);
+        let cfg = ExperimentConfig {
+            trace: trace.clone(),
+            drain_cap_hours: 24,
+            ..ExperimentConfig::default()
+        };
+        let workload = Workload::generate(trace);
+        println!(
+            "engine/{fleet}: {} GPUs, {} requests over {horizon}h",
+            workload.num_gpus(),
+            workload.vms.len()
+        );
+        for policy in ["ff", "mcc", "grmu"] {
+            let result = experiments::run_once(&workload, policy, &cfg, true);
+            let rps = if result.wall_seconds > 0.0 {
+                result.requested as f64 / result.wall_seconds
+            } else {
+                f64::INFINITY
+            };
+            println!(
+                "engine/10k-gpus/{fleet}/{policy:<4} {:>9} req in {:>7.3}s = {:>12.0} req/s  (acceptance {:.1}%, {} samples)",
+                result.requested,
+                result.wall_seconds,
+                rps,
+                100.0 * result.overall_acceptance(),
+                result.samples.len(),
+            );
+        }
+    }
+}
+
+/// Interval-close aggregate reads on a loaded 10k-GPU mixed cluster:
+/// O(1) counters (after) vs the brute-force fleet scan (before). This is
+/// exactly what `EventCore::close_interval` pays once per interval.
+fn interval_close_accounting(b: &mut Bench) {
+    use grmu::cluster::vm::VmSpec;
+    use grmu::cluster::{DataCenter, GpuRef, Host};
+    use grmu::mig::Placement;
+
+    const MODELS: [GpuModel; 3] = [GpuModel::A30, GpuModel::A100_40, GpuModel::H100_80];
+    let hosts: Vec<Host> = (0..HOSTS as u32)
+        .map(|i| {
+            let models = vec![MODELS[i as usize % MODELS.len()]; 8];
+            Host::with_models(i, 512, 2_048, &models)
+        })
+        .collect();
+    let mut dc = DataCenter::new(hosts);
+    // Load every GPU with a whole-part GI: every host active, the
+    // worst case for the scan.
+    let mut id = 1u64;
+    for h in 0..HOSTS as u32 {
+        let model = MODELS[h as usize % MODELS.len()];
+        let heavy = model.profile(model.num_profiles() - 1);
+        for g in 0..8u8 {
+            let vm = VmSpec {
+                id,
+                profile: heavy,
+                cpus: 1,
+                ram_gb: 1,
+                arrival: 0,
+                departure: 1_000_000,
+                weight: 1.0,
+            };
+            dc.place(&vm, GpuRef { host: h, gpu: g }, Placement { profile: heavy, start: 0 });
+            id += 1;
+        }
+    }
+    println!(
+        "loaded cluster: {} GPUs on {} hosts, {} resident VMs",
+        dc.num_gpus(),
+        dc.hosts().len(),
+        dc.resident_count()
+    );
+    b.run("interval-close/10k-gpus/counters(after)", || {
+        (dc.active_hardware_rate(), dc.active_gpus_by_model(), dc.resident_count())
+    });
+    b.run("interval-close/10k-gpus/fleet-scan(before)", || {
+        let (active, total) = dc.active_hardware_scan();
+        let rate = if total == 0 { 0.0 } else { active as f64 / total as f64 };
+        (rate, dc.active_gpus_by_model_scan(), dc.resident_count())
+    });
+    b.compare(
+        "interval-close/10k-gpus/fleet-scan(before)",
+        "interval-close/10k-gpus/counters(after)",
+    );
+}
+
+fn sweep_throughput(quick: bool) {
+    let base = ExperimentConfig::quick(0);
+    let seeds: Vec<u64> = if quick { vec![1, 2] } else { vec![1, 2, 3, 4] };
+    let policies: Vec<String> = if quick {
+        vec!["ff".into(), "grmu".into()]
+    } else {
+        vec!["ff".into(), "mcc".into(), "grmu".into()]
+    };
+    let cells = seeds.len() * policies.len();
+    let t0 = std::time::Instant::now();
+    let runs = experiments::sweep(&base, &seeds, &policies, 0);
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(runs.len(), cells);
+    println!(
+        "sweep/quick-trace: {cells} (seed,policy) cells in {dt:.2}s = {:.2} cells/s (Arc-shared traces)",
+        cells as f64 / dt.max(1e-9),
+    );
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = Bench::new();
+    engine_runs(quick);
+    interval_close_accounting(&mut b);
+    sweep_throughput(quick);
+}

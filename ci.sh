@@ -13,7 +13,10 @@ echo "== cargo build --release"
 cargo build --release
 
 echo "== cargo check --all-targets"
-cargo check --all-targets --quiet   # benches are only compiled here
+cargo check --all-targets --quiet
+
+echo "== cargo bench --no-run"
+cargo bench --no-run --quiet        # benches must keep building end-to-end
 
 echo "== cargo test -q"
 cargo test -q

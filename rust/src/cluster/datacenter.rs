@@ -5,11 +5,21 @@
 //! `repack_gpu`) also maintains the [`ClusterIndex`] incrementally, so
 //! policies query per-profile feasibility buckets and host headroom
 //! instead of scanning the cluster.
+//!
+//! Cluster-wide *activity* aggregates — resident VM count, active hosts,
+//! active GPUs per model — are likewise maintained incrementally (the
+//! [`ActivityCounters`] below), so the per-interval metric sample reads
+//! them in O(1) instead of scanning every host and GPU. The counters are
+//! pure observers: no policy reads them when deciding a placement, which
+//! is what keeps the indexed-vs-scan determinism contract untouched.
+//! `check_integrity` verifies them against a brute-force recount, and the
+//! `_scan` variants of the readers survive as that reference (and as the
+//! "before" side of `benches/engine.rs`).
 
 use super::host::Host;
 use super::index::ClusterIndex;
 use super::vm::{VmId, VmSpec};
-use crate::mig::{GpuState, Instance, Placement};
+use crate::mig::{GpuState, Instance, Placement, NUM_MODELS};
 use std::collections::HashMap;
 
 /// Address of one GPU: `(host index, GPU index within host)`. Ordering is
@@ -28,8 +38,60 @@ pub struct VmLocation {
     pub placement: Placement,
 }
 
-/// The data center: all hosts plus a VM→location index and the
-/// incrementally maintained [`ClusterIndex`].
+/// Incrementally maintained cluster-wide activity aggregates (§Perf
+/// iteration 6): everything [`DataCenter::active_hardware`],
+/// [`DataCenter::active_gpus_by_model`] and [`DataCenter::gpus_by_model`]
+/// report, updated in O(1) whenever a host crosses the active/idle
+/// boundary. The fleet composition (`total_*`, `host_gpus`) is static
+/// after construction — GPUs are never added or removed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+struct ActivityCounters {
+    /// Hosts currently hosting at least one VM (`φ_j` summed).
+    active_hosts: usize,
+    /// Active units under the strict §2 rule: each active host counts
+    /// itself plus *all* its GPUs (Eq. 4's `φ_j + Σ_k γ_jk`).
+    active_units: usize,
+    /// Total units: hosts + GPUs.
+    total_units: usize,
+    /// Active GPUs per catalog model (strict rule), by `GpuModel as usize`.
+    active_gpus_by_model: [usize; NUM_MODELS],
+    /// Fleet composition: GPU count per model.
+    total_gpus_by_model: [usize; NUM_MODELS],
+    /// Per-host GPU composition `(gpu count, per-model counts)`, indexed
+    /// by host id. What makes an activation flip O(1).
+    host_gpus: Vec<(usize, [usize; NUM_MODELS])>,
+}
+
+impl ActivityCounters {
+    /// Brute-force (re)construction — the reference the incremental
+    /// maintenance is verified against by `check_integrity` and the
+    /// counter property tests.
+    fn build(hosts: &[Host]) -> ActivityCounters {
+        let mut a = ActivityCounters::default();
+        for h in hosts {
+            let mut by_model = [0usize; NUM_MODELS];
+            for g in h.gpus() {
+                by_model[g.model() as usize] += 1;
+            }
+            a.total_units += 1 + h.gpus().len();
+            for (t, &n) in a.total_gpus_by_model.iter_mut().zip(&by_model) {
+                *t += n;
+            }
+            if h.is_active() {
+                a.active_hosts += 1;
+                a.active_units += 1 + h.gpus().len();
+                for (t, &n) in a.active_gpus_by_model.iter_mut().zip(&by_model) {
+                    *t += n;
+                }
+            }
+            a.host_gpus.push((h.gpus().len(), by_model));
+        }
+        a
+    }
+}
+
+/// The data center: all hosts plus a VM→location index, the incrementally
+/// maintained [`ClusterIndex`] and the O(1) activity counters.
 #[derive(Debug, Clone, Default)]
 pub struct DataCenter {
     hosts: Vec<Host>,
@@ -38,12 +100,40 @@ pub struct DataCenter {
     demands: HashMap<VmId, (u32, u32)>,
     /// Placement index, kept coherent by every mutation below.
     index: ClusterIndex,
+    /// Activity aggregates, kept coherent by every mutation below.
+    activity: ActivityCounters,
 }
 
 impl DataCenter {
     pub fn new(hosts: Vec<Host>) -> DataCenter {
         let index = ClusterIndex::build(&hosts);
-        DataCenter { hosts, locations: HashMap::new(), demands: HashMap::new(), index }
+        let activity = ActivityCounters::build(&hosts);
+        DataCenter { hosts, locations: HashMap::new(), demands: HashMap::new(), index, activity }
+    }
+
+    /// Apply a host's active↔idle flip to the activity counters. Called
+    /// after every reserve/release with the host's prior state; O(1) via
+    /// the precomputed per-host GPU composition.
+    fn note_host_transition(&mut self, host: u32, was_active: bool) {
+        let is_active = self.hosts[host as usize].is_active();
+        if was_active == is_active {
+            return;
+        }
+        let (gpus, by_model) = self.activity.host_gpus[host as usize];
+        let units = 1 + gpus;
+        if is_active {
+            self.activity.active_hosts += 1;
+            self.activity.active_units += units;
+            for (t, &n) in self.activity.active_gpus_by_model.iter_mut().zip(&by_model) {
+                *t += n;
+            }
+        } else {
+            self.activity.active_hosts -= 1;
+            self.activity.active_units -= units;
+            for (t, &n) in self.activity.active_gpus_by_model.iter_mut().zip(&by_model) {
+                *t -= n;
+            }
+        }
     }
 
     /// The placement index (per-profile feasibility buckets + host
@@ -103,7 +193,9 @@ impl DataCenter {
         self.demands.get(&vm).copied()
     }
 
-    /// Number of resident VMs.
+    /// Number of resident VMs (O(1); `check_integrity` verifies it
+    /// against the instances actually sitting on GPUs).
+    #[inline]
     pub fn resident_count(&self) -> usize {
         self.locations.len()
     }
@@ -114,6 +206,7 @@ impl DataCenter {
     pub fn place(&mut self, vm: &VmSpec, gpu_ref: GpuRef, placement: Placement) {
         debug_assert!(self.locations.get(&vm.id).is_none(), "VM {} already placed", vm.id);
         let host = &mut self.hosts[gpu_ref.host as usize];
+        let was_active = host.is_active();
         let old_free = (host.free_cpus(), host.free_ram());
         host.reserve(vm.cpus, vm.ram_gb);
         let new_free = (host.free_cpus(), host.free_ram());
@@ -124,6 +217,7 @@ impl DataCenter {
         let new_occ = gpu.occupancy();
         self.index.update_host(old_free, new_free);
         self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
+        self.note_host_transition(gpu_ref.host, was_active);
         self.locations.insert(vm.id, VmLocation { gpu: gpu_ref, placement });
         self.demands.insert(vm.id, (vm.cpus, vm.ram_gb));
     }
@@ -134,6 +228,7 @@ impl DataCenter {
         let loc = self.locations.remove(&vm)?;
         let (cpus, ram) = self.demands.remove(&vm).unwrap_or((0, 0));
         let host = &mut self.hosts[loc.gpu.host as usize];
+        let was_active = host.is_active();
         let old_free = (host.free_cpus(), host.free_ram());
         let gpu = host.gpu_mut(loc.gpu.gpu as usize);
         let model = gpu.model();
@@ -144,6 +239,7 @@ impl DataCenter {
         let new_free = (host.free_cpus(), host.free_ram());
         self.index.update_host(old_free, new_free);
         self.index.update_gpu(loc.gpu, model, old_occ, new_occ);
+        self.note_host_transition(loc.gpu.host, was_active);
         Some(loc)
     }
 
@@ -200,13 +296,17 @@ impl DataCenter {
         self.index.update_gpu(src, src_model, src_old_occ, src_new_occ);
         if src.host != dst.host {
             let src_host = &mut self.hosts[src.host as usize];
+            let src_was_active = src_host.is_active();
             let old_free = (src_host.free_cpus(), src_host.free_ram());
             src_host.release(cpus, ram);
             self.index.update_host(old_free, (src_host.free_cpus(), src_host.free_ram()));
+            self.note_host_transition(src.host, src_was_active);
             let dst_host = &mut self.hosts[dst.host as usize];
+            let dst_was_active = dst_host.is_active();
             let old_free = (dst_host.free_cpus(), dst_host.free_ram());
             dst_host.reserve(cpus, ram);
             self.index.update_host(old_free, (dst_host.free_cpus(), dst_host.free_ram()));
+            self.note_host_transition(dst.host, dst_was_active);
         }
         let dst_gpu = self.hosts[dst.host as usize].gpu_mut(dst.gpu as usize);
         let dst_model = dst_gpu.model();
@@ -222,7 +322,25 @@ impl DataCenter {
     /// as active even when idle (idle GPUs count as inactive only when the
     /// whole machine is idle). Returns `(active units, total units)` where
     /// a unit is one PM or one GPU, matching Eq. 4's `φ_j + Σ_k γ_jk`.
+    ///
+    /// An O(1) counter read since §Perf iteration 6; the fleet scan it
+    /// replaced survives as [`DataCenter::active_hardware_scan`].
+    #[inline]
     pub fn active_hardware(&self) -> (usize, usize) {
+        (self.activity.active_units, self.activity.total_units)
+    }
+
+    /// Hosts currently hosting at least one VM (O(1) counter read).
+    #[inline]
+    pub fn active_host_count(&self) -> usize {
+        self.activity.active_hosts
+    }
+
+    /// Brute-force fleet scan behind [`DataCenter::active_hardware`] —
+    /// the pre-iteration-6 per-interval cost, retained as the
+    /// `check_integrity` reference and the "before" side of
+    /// `benches/engine.rs`.
+    pub fn active_hardware_scan(&self) -> (usize, usize) {
         let mut active = 0usize;
         let mut total = 0usize;
         for h in &self.hosts {
@@ -245,17 +363,36 @@ impl DataCenter {
     }
 
     /// GPU count per catalog model, indexed by `GpuModel as usize`
-    /// (the fleet composition).
-    pub fn gpus_by_model(&self) -> [usize; crate::mig::NUM_MODELS] {
-        super::host::gpus_by_model(&self.hosts)
+    /// (the fleet composition; static, O(1) counter read).
+    #[inline]
+    pub fn gpus_by_model(&self) -> [usize; NUM_MODELS] {
+        self.activity.total_gpus_by_model
     }
 
     /// Per-model `(active, total)` GPU counts under the strict §2 rule
     /// (every GPU of an active PM counts as active), indexed by
     /// `GpuModel as usize`. The per-model breakdown of Eq. 4's
     /// `Σ_k γ_jk` term.
-    pub fn active_gpus_by_model(&self) -> [(usize, usize); crate::mig::NUM_MODELS] {
-        let mut out = [(0usize, 0usize); crate::mig::NUM_MODELS];
+    ///
+    /// An O(1) counter read since §Perf iteration 6; the fleet scan it
+    /// replaced survives as [`DataCenter::active_gpus_by_model_scan`].
+    #[inline]
+    pub fn active_gpus_by_model(&self) -> [(usize, usize); NUM_MODELS] {
+        let mut out = [(0usize, 0usize); NUM_MODELS];
+        for ((o, &active), &total) in out
+            .iter_mut()
+            .zip(&self.activity.active_gpus_by_model)
+            .zip(&self.activity.total_gpus_by_model)
+        {
+            *o = (active, total);
+        }
+        out
+    }
+
+    /// Brute-force fleet scan behind [`DataCenter::active_gpus_by_model`]
+    /// (see [`DataCenter::active_hardware_scan`]).
+    pub fn active_gpus_by_model_scan(&self) -> [(usize, usize); NUM_MODELS] {
+        let mut out = [(0usize, 0usize); NUM_MODELS];
         for h in &self.hosts {
             let active = h.is_active();
             for g in h.gpus() {
@@ -322,6 +459,18 @@ impl DataCenter {
         }
         if ClusterIndex::build(&self.hosts) != self.index {
             return Err("cluster index out of sync with GPU/host state".into());
+        }
+        if ActivityCounters::build(&self.hosts) != self.activity {
+            return Err("activity counters out of sync with host state".into());
+        }
+        let resident: usize =
+            self.hosts.iter().flat_map(|h| h.gpus()).map(|g| g.instances().len()).sum();
+        if resident != self.locations.len() {
+            return Err(format!(
+                "resident count {} != {} instances on GPUs",
+                self.locations.len(),
+                resident
+            ));
         }
         Ok(())
     }
@@ -461,6 +610,171 @@ mod tests {
         assert_eq!(by_model[GpuModel::A100_40 as usize], (1, 1));
         assert_eq!(by_model[GpuModel::H100_80 as usize], (0, 1));
         dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn activity_counters_match_scan_readers() {
+        let mut dc = small_dc();
+        assert_eq!(dc.active_hardware(), dc.active_hardware_scan());
+        assert_eq!(dc.active_gpus_by_model(), dc.active_gpus_by_model_scan());
+        assert_eq!(dc.active_host_count(), 0);
+        let vm = spec(1, Profile::P2g10gb);
+        dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P2g10gb, start: 0 });
+        assert_eq!(dc.active_hardware(), dc.active_hardware_scan());
+        assert_eq!(dc.active_gpus_by_model(), dc.active_gpus_by_model_scan());
+        assert_eq!(dc.active_host_count(), 1);
+        // A second VM on the same host crosses no boundary.
+        let vm2 = spec(2, Profile::P2g10gb);
+        dc.place(&vm2, GpuRef { host: 0, gpu: 1 }, Placement { profile: Profile::P2g10gb, start: 0 });
+        assert_eq!(dc.active_host_count(), 1);
+        assert_eq!(dc.active_hardware(), (3, 5));
+        // Cross-host migration flips both hosts.
+        dc.migrate(1, GpuRef { host: 1, gpu: 0 }, Placement { profile: Profile::P2g10gb, start: 0 });
+        assert_eq!(dc.active_host_count(), 2);
+        assert_eq!(dc.active_hardware(), dc.active_hardware_scan());
+        dc.remove(1);
+        dc.remove(2);
+        assert_eq!(dc.active_hardware(), (0, 5));
+        assert_eq!(dc.active_hardware(), dc.active_hardware_scan());
+        dc.check_integrity().unwrap();
+    }
+
+    /// Satellite acceptance: after *every* mutation — place, remove,
+    /// migrate, relocate, repack — on single-model or mixed fleets, the
+    /// incremental activity counters equal a brute-force recount of the
+    /// host/GPU states.
+    #[test]
+    fn prop_activity_counters_match_recount_after_every_mutation() {
+        use crate::mig::gpu::feasible_starts;
+        use crate::mig::placement::mock_assign;
+        use crate::mig::{GpuModel, ALL_MODELS};
+        use crate::policies::grmu::defrag::repack_plan;
+        use crate::util::prop::forall;
+        use crate::util::rng::Rng;
+
+        fn recount_ok(dc: &DataCenter) -> Result<(), String> {
+            if dc.active_hardware() != dc.active_hardware_scan() {
+                return Err(format!(
+                    "active_hardware {:?} != recount {:?}",
+                    dc.active_hardware(),
+                    dc.active_hardware_scan()
+                ));
+            }
+            if dc.active_gpus_by_model() != dc.active_gpus_by_model_scan() {
+                return Err("active_gpus_by_model diverged from recount".into());
+            }
+            let resident: usize =
+                dc.hosts().iter().flat_map(|h| h.gpus()).map(|g| g.instances().len()).sum();
+            if dc.resident_count() != resident {
+                return Err(format!("resident_count {} != {resident}", dc.resident_count()));
+            }
+            Ok(())
+        }
+
+        forall(
+            "activity-counters-vs-recount",
+            |r: &mut Rng| {
+                let hosts: Vec<Host> = (0..2 + r.below(4))
+                    .map(|i| {
+                        let models: Vec<GpuModel> = (0..1 + r.below(3))
+                            .map(|_| ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize])
+                            .collect();
+                        Host::with_models(i as u32, 32, 128, &models)
+                    })
+                    .collect();
+                let mut dc = DataCenter::new(hosts);
+                let refs = dc.gpu_refs();
+                let mut next_vm: u64 = 1;
+                let mut resident: Vec<u64> = Vec::new();
+                let mut trace: Vec<&'static str> = Vec::new();
+                for _ in 0..40 {
+                    match r.below(5) {
+                        0 | 1 => {
+                            let gr = refs[r.below(refs.len() as u64) as usize];
+                            let model = dc.gpu(gr).model();
+                            let profile =
+                                model.profile(r.below(model.num_profiles() as u64) as usize);
+                            let vm = spec(next_vm, profile);
+                            if dc.host(gr.host).fits_resources(vm.cpus, vm.ram_gb) {
+                                if let Some((pl, _)) =
+                                    mock_assign(dc.gpu(gr).occupancy(), profile)
+                                {
+                                    dc.place(&vm, gr, pl);
+                                    resident.push(next_vm);
+                                    next_vm += 1;
+                                    trace.push("place");
+                                }
+                            }
+                        }
+                        2 => {
+                            if let Some(i) =
+                                (!resident.is_empty()).then(|| r.below(resident.len() as u64))
+                            {
+                                dc.remove(resident.swap_remove(i as usize));
+                                trace.push("remove");
+                            }
+                        }
+                        3 => {
+                            if resident.is_empty() {
+                                continue;
+                            }
+                            let vm = resident[r.below(resident.len() as u64) as usize];
+                            let loc = dc.locate(vm).unwrap();
+                            if r.chance(0.5) {
+                                let occ = dc.gpu(loc.gpu).occupancy() & !loc.placement.mask();
+                                let starts: Vec<u8> =
+                                    feasible_starts(loc.placement.profile, occ).collect();
+                                let s = starts[r.below(starts.len() as u64) as usize];
+                                dc.relocate_within_gpu(
+                                    vm,
+                                    Placement { profile: loc.placement.profile, start: s },
+                                );
+                                trace.push("relocate");
+                            } else {
+                                let dst = refs[r.below(refs.len() as u64) as usize];
+                                if dst == loc.gpu
+                                    || dc.gpu(dst).model() != loc.placement.profile.model()
+                                {
+                                    continue;
+                                }
+                                let (cpus, ram) = dc.vm_demands(vm).unwrap();
+                                if dst.host != loc.gpu.host
+                                    && !dc.host(dst.host).fits_resources(cpus, ram)
+                                {
+                                    continue;
+                                }
+                                if let Some((pl, _)) =
+                                    mock_assign(dc.gpu(dst).occupancy(), loc.placement.profile)
+                                {
+                                    dc.migrate(vm, dst, pl);
+                                    trace.push("migrate");
+                                }
+                            }
+                        }
+                        _ => {
+                            // Re-pack a random occupied GPU (the defrag path).
+                            let gr = refs[r.below(refs.len() as u64) as usize];
+                            if let Some(moves) = repack_plan(dc.gpu(gr)) {
+                                if !moves.is_empty() {
+                                    dc.repack_gpu(gr, &moves);
+                                    trace.push("repack");
+                                }
+                            }
+                        }
+                    }
+                    // The satellite's "after every mutation": recount now,
+                    // not just at the end of the walk.
+                    if let Err(e) = recount_ok(&dc) {
+                        panic!("counters diverged after {:?}: {e}", trace);
+                    }
+                }
+                dc
+            },
+            |dc| {
+                recount_ok(dc)?;
+                dc.check_integrity().map_err(|e| format!("integrity: {e}"))
+            },
+        );
     }
 
     #[test]

@@ -97,9 +97,10 @@ impl Host {
 }
 
 /// GPU count per catalog model over a host slice, indexed by
-/// `GpuModel as usize` — the fleet composition. Shared by
-/// [`super::DataCenter::gpus_by_model`] and the trace generator's
-/// workload summary so the two can never diverge.
+/// `GpuModel as usize` — the fleet composition. Used by the trace
+/// generator's workload summary; [`super::DataCenter::gpus_by_model`]
+/// answers from its O(1) activity counters instead, whose coherence
+/// with the host states `check_integrity` verifies by recount.
 pub fn gpus_by_model(hosts: &[Host]) -> [usize; crate::mig::NUM_MODELS] {
     let mut out = [0usize; crate::mig::NUM_MODELS];
     for h in hosts {

@@ -423,6 +423,14 @@ mod tests {
                 if &rebuilt != dc.index() {
                     return Err("incremental index diverged from brute-force rebuild".into());
                 }
+                // The O(1) activity counters must match a brute-force
+                // recount after the same mutation sequence.
+                if dc.active_hardware() != dc.active_hardware_scan() {
+                    return Err("activity counters diverged from fleet recount".into());
+                }
+                if dc.active_gpus_by_model() != dc.active_gpus_by_model_scan() {
+                    return Err("per-model activity diverged from fleet recount".into());
+                }
                 // GPUs only ever sit in buckets of their own model.
                 for key in ProfileKey::all() {
                     for r in dc.index().gpus_fitting(key) {

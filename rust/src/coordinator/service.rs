@@ -119,6 +119,9 @@ pub struct Coordinator {
     batches: u64,
     batch_latencies_us: Vec<f64>,
     decision_seconds: f64,
+    /// Reusable per-batch spec scratch (request → VmSpec staging), so
+    /// the decision hot path allocates nothing per batch.
+    specs: Vec<VmSpec>,
 }
 
 impl Coordinator {
@@ -135,7 +138,14 @@ impl Coordinator {
         ctx: PolicyCtx,
     ) -> Coordinator {
         let core = EventCore::with_interval(dc, policy, ctx, config.interval);
-        Coordinator { core, config, batches: 0, batch_latencies_us: Vec::new(), decision_seconds: 0.0 }
+        Coordinator {
+            core,
+            config,
+            batches: 0,
+            batch_latencies_us: Vec::new(),
+            decision_seconds: 0.0,
+            specs: Vec::new(),
+        }
     }
 
     /// The interval owning an arrival at `t` (see [`EventCore::window_of`]).
@@ -161,17 +171,21 @@ impl Coordinator {
         // would: per-interval departure releases, ticks and samples.
         self.core.run_until(self.core.window_of(t));
         self.core.release_due(self.core.interval_end());
-        let specs: Vec<VmSpec> = batch.iter().map(|r| r.vm).collect();
+        // Stage the specs in the reusable scratch and decide through the
+        // buffered core path: the measured latency covers the placement
+        // decisions only, with no per-batch allocation inside the timer.
+        self.specs.clear();
+        self.specs.extend(batch.iter().map(|r| r.vm));
         let t0 = std::time::Instant::now();
-        let decisions = self.core.place(&specs);
+        self.core.place_buffered(&self.specs);
         let dt = t0.elapsed();
         let us = dt.as_secs_f64() * 1e6;
         self.batches += 1;
         self.batch_latencies_us.push(us);
         self.decision_seconds += dt.as_secs_f64();
-        specs
+        self.specs
             .iter()
-            .zip(&decisions)
+            .zip(self.core.decisions())
             .map(|(vm, d)| Response {
                 vm: vm.id,
                 accepted: d.is_placed(),
@@ -186,7 +200,7 @@ impl Coordinator {
     /// at end of service so the final interval is accounted like the
     /// simulator would.
     pub fn close_interval(&mut self) {
-        self.core.step(&[]);
+        self.core.step_buffered(&[]);
     }
 
     /// Run empty intervals until the cluster drains (or `cap_hours`
@@ -195,7 +209,7 @@ impl Coordinator {
     pub fn drain(&mut self, cap_hours: u64) {
         let mut steps = 0u64;
         while self.core.pending_departures() > 0 {
-            self.core.step(&[]);
+            self.core.step_buffered(&[]);
             steps += 1;
             if cap_hours > 0 && steps >= cap_hours {
                 break;

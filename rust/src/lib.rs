@@ -107,6 +107,38 @@
 //!   accepted list (which includes `grmu-db`).
 //! * `place_batch(dc, vms, now)` → `place_batch(dc, vms, &mut ctx)` with
 //!   the time on `ctx.now`.
+//!
+//! ## Migration note (zero-allocation hot path, §Perf iteration 6)
+//!
+//! The steady-state simulate/coordinate loop is allocation-free and
+//! scan-free. Code written against the earlier surface maps as follows:
+//!
+//! * The required policy entry point is
+//!   [`policies::Policy::place_batch_into`], which writes one `Decision`
+//!   per VM into the [`policies::PolicyCtx`]'s reusable
+//!   [`policies::DecisionBuffer`]; the `Vec`-returning `place_batch`
+//!   survives as a provided compat wrapper (implementors of the old
+//!   signature move their body into `place_batch_into` and push into
+//!   `ctx.decisions`). Likewise
+//!   [`sim::EventCore::step_buffered`]/[`sim::EventCore::place_buffered`]
+//!   are the engine's hot path ([`sim::EventCore::decisions`] reads the
+//!   latest batch) and `step`/`place` stay as `Vec` wrappers.
+//! * [`policies::CcScorer::score_into`] appends scores to a reusable
+//!   buffer; `score` remains for backends without an append path.
+//! * [`policies::Policy::drain_migrations_into`] drains migration events
+//!   while retaining the policy-side buffer's capacity;
+//!   `take_migrations` remains.
+//! * `DataCenter::active_hardware`, `active_gpus_by_model`,
+//!   `gpus_by_model` and `resident_count` are O(1) counter reads
+//!   maintained incrementally by every mutation; the old fleet scans
+//!   survive as `active_hardware_scan`/`active_gpus_by_model_scan`
+//!   (`check_integrity` compares the two). Counters are observers only —
+//!   indexed-vs-scan decision equivalence is untouched.
+//! * [`sim::EventCore::reserve_for_trace`] pre-sizes the departure heap,
+//!   sample vector and migration log from trace metadata; the sweep
+//!   runner shares each seed's generated trace across its cells via
+//!   `Arc<[Host]>`/`Arc<[VmSpec]>`
+//!   ([`report::experiments::run_trace`]).
 
 pub mod cluster;
 pub mod coordinator;

@@ -37,49 +37,45 @@ impl Policy for BestFit {
         "BF"
     }
 
-    fn place_batch(
-        &mut self,
-        dc: &mut DataCenter,
-        vms: &[VmSpec],
-        _ctx: &mut PolicyCtx,
-    ) -> Vec<Decision> {
-        vms.iter()
-            .map(|vm| {
-                if self.use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
-                    return reject_cluster(dc, vm, self.use_index);
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
+        ctx.decisions.begin(vms.len());
+        for vm in vms {
+            if self.use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                ctx.decisions.push(reject_cluster(dc, vm, self.use_index));
+                continue;
+            }
+            let num_blocks = vm.profile.model().num_blocks() as u32;
+            let mut best: Option<(u32, GpuRef, Placement)> = None;
+            let mut skip_host: Option<u32> = None;
+            visit_candidates(dc, vm.profile, self.use_index, |r| {
+                if skip_host == Some(r.host) {
+                    return true;
                 }
-                let num_blocks = vm.profile.model().num_blocks() as u32;
-                let mut best: Option<(u32, GpuRef, Placement)> = None;
-                let mut skip_host: Option<u32> = None;
-                visit_candidates(dc, vm.profile, self.use_index, |r| {
-                    if skip_host == Some(r.host) {
-                        return true;
-                    }
-                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
-                        skip_host = Some(r.host);
-                        return true;
-                    }
-                    if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
-                        let remaining = num_blocks - new_occ.count_ones();
-                        // Strictly-less keeps the first (lowest index) on ties.
-                        if best.map(|(b, _, _)| remaining < b).unwrap_or(true) {
-                            best = Some((remaining, r, pl));
-                            if remaining == 0 {
-                                return false; // perfect fit
-                            }
+                if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+                    skip_host = Some(r.host);
+                    return true;
+                }
+                if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
+                    let remaining = num_blocks - new_occ.count_ones();
+                    // Strictly-less keeps the first (lowest index) on ties.
+                    if best.map(|(b, _, _)| remaining < b).unwrap_or(true) {
+                        best = Some((remaining, r, pl));
+                        if remaining == 0 {
+                            return false; // perfect fit
                         }
                     }
-                    true
-                });
-                match best {
-                    Some((_, r, pl)) => {
-                        dc.place(vm, r, pl);
-                        Decision::Placed { gpu: r, placement: pl }
-                    }
-                    None => reject_cluster(dc, vm, self.use_index),
                 }
-            })
-            .collect()
+                true
+            });
+            let d = match best {
+                Some((_, r, pl)) => {
+                    dc.place(vm, r, pl);
+                    Decision::Placed { gpu: r, placement: pl }
+                }
+                None => reject_cluster(dc, vm, self.use_index),
+            };
+            ctx.decisions.push(d);
+        }
     }
 }
 

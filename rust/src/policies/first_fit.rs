@@ -40,36 +40,32 @@ impl Policy for FirstFit {
         "FF"
     }
 
-    fn place_batch(
-        &mut self,
-        dc: &mut DataCenter,
-        vms: &[VmSpec],
-        _ctx: &mut PolicyCtx,
-    ) -> Vec<Decision> {
-        vms.iter()
-            .map(|vm| {
-                if self.use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
-                    // No host anywhere has the CPU (or the RAM): the scan
-                    // below cannot succeed, skip straight to the reason.
-                    return reject_cluster(dc, vm, self.use_index);
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
+        ctx.decisions.begin(vms.len());
+        for vm in vms {
+            if self.use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                // No host anywhere has the CPU (or the RAM): the scan
+                // below cannot succeed, skip straight to the reason.
+                ctx.decisions.push(reject_cluster(dc, vm, self.use_index));
+                continue;
+            }
+            let mut found: Option<(GpuRef, Placement)> = None;
+            visit_candidates(dc, vm.profile, self.use_index, |r| {
+                if let Some(pl) = probe_gpu(dc, vm, r) {
+                    found = Some((r, pl));
+                    return false;
                 }
-                let mut found: Option<(GpuRef, Placement)> = None;
-                visit_candidates(dc, vm.profile, self.use_index, |r| {
-                    if let Some(pl) = probe_gpu(dc, vm, r) {
-                        found = Some((r, pl));
-                        return false;
-                    }
-                    true
-                });
-                match found {
-                    Some((r, pl)) => {
-                        dc.place(vm, r, pl);
-                        Decision::Placed { gpu: r, placement: pl }
-                    }
-                    None => reject_cluster(dc, vm, self.use_index),
+                true
+            });
+            let d = match found {
+                Some((r, pl)) => {
+                    dc.place(vm, r, pl);
+                    Decision::Placed { gpu: r, placement: pl }
                 }
-            })
-            .collect()
+                None => reject_cluster(dc, vm, self.use_index),
+            };
+            ctx.decisions.push(d);
+        }
     }
 }
 

@@ -185,22 +185,22 @@ impl Policy for Grmu {
         "GRMU"
     }
 
-    fn place_batch(
-        &mut self,
-        dc: &mut DataCenter,
-        vms: &[VmSpec],
-        _ctx: &mut PolicyCtx,
-    ) -> Vec<Decision> {
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
         if !self.initialized {
             self.initialize(dc);
         }
-        let decisions: Vec<Decision> = vms.iter().map(|vm| self.place_one(dc, vm)).collect();
+        ctx.decisions.begin(vms.len());
+        let mut any_rejected = false;
+        for vm in vms {
+            let d = self.place_one(dc, vm);
+            any_rejected |= !d.is_placed();
+            ctx.decisions.push(d);
+        }
         // Any rejection triggers light-basket defragmentation (§7.1).
-        if self.config.defrag_enabled && decisions.iter().any(|d| !d.is_placed()) {
+        if self.config.defrag_enabled && any_rejected {
             let moved = defrag::defragment_light_basket(dc, &self.light);
             self.events.extend(moved);
         }
-        decisions
     }
 
     fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId, _ctx: &mut PolicyCtx) {
@@ -223,6 +223,12 @@ impl Policy for Grmu {
 
     fn take_migrations(&mut self) -> Vec<MigrationEvent> {
         std::mem::take(&mut self.events)
+    }
+
+    fn drain_migrations_into(&mut self, out: &mut Vec<MigrationEvent>) {
+        // `append` (not `take`) keeps the event buffer's capacity across
+        // drains — no per-interval reallocation in steady state.
+        out.append(&mut self.events);
     }
 }
 

@@ -26,6 +26,7 @@ pub struct Mcc {
     /// Scratch buffers reused across decisions (hot-path allocation-free).
     cand_refs: Vec<(GpuRef, crate::mig::Placement)>,
     cand_occs: Vec<u8>,
+    scores: Vec<u32>,
 }
 
 impl Mcc {
@@ -35,7 +36,7 @@ impl Mcc {
 
     /// `use_index = false` restores the brute-force full scan.
     pub fn with_index(use_index: bool) -> Mcc {
-        Mcc { use_index, cand_refs: Vec::new(), cand_occs: Vec::new() }
+        Mcc { use_index, cand_refs: Vec::new(), cand_occs: Vec::new(), scores: Vec::new() }
     }
 }
 
@@ -50,54 +51,52 @@ impl Policy for Mcc {
         "MCC"
     }
 
-    fn place_batch(
-        &mut self,
-        dc: &mut DataCenter,
-        vms: &[VmSpec],
-        ctx: &mut PolicyCtx,
-    ) -> Vec<Decision> {
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
         let use_index = self.use_index;
-        vms.iter()
-            .map(|vm| {
-                if use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
-                    return reject_cluster(dc, vm, use_index);
+        ctx.decisions.begin(vms.len());
+        for vm in vms {
+            if use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                ctx.decisions.push(reject_cluster(dc, vm, use_index));
+                continue;
+            }
+            // Gather candidates: (gpu, default placement, resulting occ).
+            self.cand_refs.clear();
+            self.cand_occs.clear();
+            let mut skip_host: Option<u32> = None;
+            let (cand_refs, cand_occs) = (&mut self.cand_refs, &mut self.cand_occs);
+            visit_candidates(dc, vm.profile, use_index, |r| {
+                if skip_host == Some(r.host) {
+                    return true;
                 }
-                // Gather candidates: (gpu, default placement, resulting occ).
-                self.cand_refs.clear();
-                self.cand_occs.clear();
-                let mut skip_host: Option<u32> = None;
-                let (cand_refs, cand_occs) = (&mut self.cand_refs, &mut self.cand_occs);
-                visit_candidates(dc, vm.profile, use_index, |r| {
-                    if skip_host == Some(r.host) {
-                        return true;
-                    }
-                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
-                        skip_host = Some(r.host);
-                        return true;
-                    }
-                    if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
-                        cand_refs.push((r, pl));
-                        cand_occs.push(new_occ);
-                    }
-                    true
-                });
-                if self.cand_refs.is_empty() {
-                    return reject_cluster(dc, vm, use_index);
+                if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+                    skip_host = Some(r.host);
+                    return true;
                 }
-                // All candidates share the request's model (Eq. 17–18),
-                // so one scorer call covers the batch.
-                let scores = ctx.scorer.score(vm.profile.model(), &self.cand_occs);
-                let mut best = 0usize;
-                for (i, &s) in scores.iter().enumerate() {
-                    if s > scores[best] {
-                        best = i;
-                    }
+                if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
+                    cand_refs.push((r, pl));
+                    cand_occs.push(new_occ);
                 }
-                let (r, pl) = self.cand_refs[best];
-                dc.place(vm, r, pl);
-                Decision::Placed { gpu: r, placement: pl }
-            })
-            .collect()
+                true
+            });
+            if self.cand_refs.is_empty() {
+                ctx.decisions.push(reject_cluster(dc, vm, use_index));
+                continue;
+            }
+            // All candidates share the request's model (Eq. 17–18), so
+            // one scorer call covers the candidate set; the score buffer
+            // is reused across decisions.
+            self.scores.clear();
+            ctx.scorer.score_into(vm.profile.model(), &self.cand_occs, &mut self.scores);
+            let mut best = 0usize;
+            for (i, &s) in self.scores.iter().enumerate() {
+                if s > self.scores[best] {
+                    best = i;
+                }
+            }
+            let (r, pl) = self.cand_refs[best];
+            dc.place(vm, r, pl);
+            ctx.decisions.push(Decision::Placed { gpu: r, placement: pl });
+        }
     }
 }
 

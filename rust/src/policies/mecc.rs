@@ -30,6 +30,9 @@ pub struct Mecc {
     history: VecDeque<(Time, usize)>,
     /// Current per-profile counts within the window, by dense key.
     counts: [u64; NUM_PROFILE_KEYS],
+    /// Per-model ECC tables, recomputed in place at the start of every
+    /// batch (allocated once; §Perf iterations 4 and 6).
+    ecc_tables: Vec<[f64; 256]>,
 }
 
 impl Mecc {
@@ -39,7 +42,13 @@ impl Mecc {
 
     /// `use_index = false` restores the brute-force full scan.
     pub fn with_index(window_hours: u64, use_index: bool) -> Mecc {
-        Mecc { use_index, window_hours, history: VecDeque::new(), counts: [0; NUM_PROFILE_KEYS] }
+        Mecc {
+            use_index,
+            window_hours,
+            history: VecDeque::new(),
+            counts: [0; NUM_PROFILE_KEYS],
+            ecc_tables: vec![[0.0; 256]; NUM_MODELS],
+        }
     }
 
     /// Profile probabilities from the window (by dense key); uniform
@@ -102,60 +111,56 @@ impl Policy for Mecc {
         "MECC"
     }
 
-    fn place_batch(
-        &mut self,
-        dc: &mut DataCenter,
-        vms: &[VmSpec],
-        ctx: &mut PolicyCtx,
-    ) -> Vec<Decision> {
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
         // The window reflects requests seen up to and including this batch.
         self.observe(vms, ctx.now);
         let probs = self.probabilities();
         // The probabilities are fixed for the whole batch, so ECC is a
-        // pure function of the (model, occupancy) pair — precompute every
-        // model's table once per batch (EXPERIMENTS.md §Perf iteration 4;
+        // pure function of the (model, occupancy) pair — recompute every
+        // model's table once per batch, in the tables allocated at
+        // construction (EXPERIMENTS.md §Perf iterations 4 and 6;
         // ≤ 4 × 256 sums, amortized over the whole batch).
-        let mut ecc_tables = vec![[0.0f64; 256]; NUM_MODELS];
         for model in ALL_MODELS {
-            let table = &mut ecc_tables[model as usize];
             for occ in 0..model.num_masks() {
-                table[occ] = self.ecc(model, occ as u8, &probs);
+                let e = self.ecc(model, occ as u8, &probs);
+                self.ecc_tables[model as usize][occ] = e;
             }
         }
         let use_index = self.use_index;
-        vms.iter()
-            .map(|vm| {
-                if use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
-                    return reject_cluster(dc, vm, use_index);
+        ctx.decisions.begin(vms.len());
+        for vm in vms {
+            if use_index && !dc.index().host_may_fit(vm.cpus, vm.ram_gb) {
+                ctx.decisions.push(reject_cluster(dc, vm, use_index));
+                continue;
+            }
+            let ecc_table = &self.ecc_tables[vm.profile.model() as usize];
+            let mut best: Option<(f64, GpuRef, crate::mig::Placement)> = None;
+            let mut skip_host: Option<u32> = None;
+            visit_candidates(dc, vm.profile, use_index, |r| {
+                if skip_host == Some(r.host) {
+                    return true;
                 }
-                let ecc_table = &ecc_tables[vm.profile.model() as usize];
-                let mut best: Option<(f64, GpuRef, crate::mig::Placement)> = None;
-                let mut skip_host: Option<u32> = None;
-                visit_candidates(dc, vm.profile, use_index, |r| {
-                    if skip_host == Some(r.host) {
-                        return true;
-                    }
-                    if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
-                        skip_host = Some(r.host);
-                        return true;
-                    }
-                    if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
-                        let score = ecc_table[new_occ as usize];
-                        if best.map(|(b, _, _)| score > b).unwrap_or(true) {
-                            best = Some((score, r, pl));
-                        }
-                    }
-                    true
-                });
-                match best {
-                    Some((_, r, pl)) => {
-                        dc.place(vm, r, pl);
-                        Decision::Placed { gpu: r, placement: pl }
-                    }
-                    None => reject_cluster(dc, vm, use_index),
+                if !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
+                    skip_host = Some(r.host);
+                    return true;
                 }
-            })
-            .collect()
+                if let Some((pl, new_occ)) = mock_assign(dc.gpu(r).occupancy(), vm.profile) {
+                    let score = ecc_table[new_occ as usize];
+                    if best.map(|(b, _, _)| score > b).unwrap_or(true) {
+                        best = Some((score, r, pl));
+                    }
+                }
+                true
+            });
+            let d = match best {
+                Some((_, r, pl)) => {
+                    dc.place(vm, r, pl);
+                    Decision::Placed { gpu: r, placement: pl }
+                }
+                None => reject_cluster(dc, vm, use_index),
+            };
+            ctx.decisions.push(d);
+        }
     }
 }
 

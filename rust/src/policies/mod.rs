@@ -20,9 +20,12 @@
 //! records instead of opaque booleans and counters.
 //!
 //! Policies receive a [`PolicyCtx`] with the batch: the virtual decision
-//! time, a per-run seeded RNG for randomized policies, and the shared
+//! time, a per-run seeded RNG for randomized policies, the shared
 //! [`CcScorer`] backend (native table lookups or the AOT-compiled XLA
-//! artifact).
+//! artifact), and the reusable [`DecisionBuffer`] that the
+//! allocation-free [`Policy::place_batch_into`] entry point writes into
+//! (the `Vec`-returning [`Policy::place_batch`] is a compat wrapper
+//! around it).
 //!
 //! ## The policies
 //!
@@ -192,6 +195,13 @@ pub trait CcScorer: Send {
     /// (Candidates of one request always share a model: a GI only lands
     /// on GPUs of its own model, Eq. 17–18.)
     fn score(&mut self, model: GpuModel, occs: &[u8]) -> Vec<u32>;
+
+    /// Allocation-free variant: append the scores to a caller-owned
+    /// buffer (the policies' reusable scratch). Backends without a
+    /// native append path fall back to [`CcScorer::score`].
+    fn score_into(&mut self, model: GpuModel, occs: &[u8], out: &mut Vec<u32>) {
+        out.extend(self.score(model, occs));
+    }
 }
 
 /// Native table-lookup scorer (the default).
@@ -200,7 +210,61 @@ pub struct NativeScorer;
 
 impl CcScorer for NativeScorer {
     fn score(&mut self, model: GpuModel, occs: &[u8]) -> Vec<u32> {
-        occs.iter().map(|&o| cc_for(model, o)).collect()
+        let mut out = Vec::with_capacity(occs.len());
+        self.score_into(model, occs, &mut out);
+        out
+    }
+
+    fn score_into(&mut self, model: GpuModel, occs: &[u8], out: &mut Vec<u32>) {
+        out.extend(occs.iter().map(|&o| cc_for(model, o)));
+    }
+}
+
+/// Reusable [`Decision`] output buffer, owned by the [`PolicyCtx`] and
+/// written by [`Policy::place_batch_into`]. One allocation per run
+/// (amortized) instead of one `Vec<Decision>` per batch: the buffer is
+/// cleared at the start of every batch and holds that batch's decisions
+/// — in request order, one per VM — until the next batch. Dereferences
+/// to `[Decision]` for reading.
+#[derive(Debug, Default)]
+pub struct DecisionBuffer {
+    buf: Vec<Decision>,
+}
+
+impl DecisionBuffer {
+    pub fn new() -> DecisionBuffer {
+        DecisionBuffer::default()
+    }
+
+    /// Start a batch of `n` decisions: clear and pre-size.
+    pub fn begin(&mut self, n: usize) {
+        self.buf.clear();
+        self.buf.reserve(n);
+    }
+
+    /// Append the decision for the batch's next VM.
+    #[inline]
+    pub fn push(&mut self, d: Decision) {
+        self.buf.push(d);
+    }
+
+    /// The current batch's decisions, in request order.
+    #[inline]
+    pub fn as_slice(&self) -> &[Decision] {
+        &self.buf
+    }
+
+    /// Copy out as an owned `Vec` (the compat path).
+    pub fn to_vec(&self) -> Vec<Decision> {
+        self.buf.clone()
+    }
+}
+
+impl std::ops::Deref for DecisionBuffer {
+    type Target = [Decision];
+
+    fn deref(&self) -> &[Decision] {
+        &self.buf
     }
 }
 
@@ -215,16 +279,19 @@ pub struct PolicyCtx {
     pub rng: Rng,
     /// CC scoring backend (native table or AOT/XLA artifact).
     pub scorer: Box<dyn CcScorer>,
+    /// Reusable decision output buffer written by
+    /// [`Policy::place_batch_into`]; holds the latest batch's decisions.
+    pub decisions: DecisionBuffer,
 }
 
 impl PolicyCtx {
     pub fn new(seed: u64) -> PolicyCtx {
-        PolicyCtx { now: 0, rng: Rng::new(seed), scorer: Box::new(NativeScorer) }
+        PolicyCtx::with_scorer(seed, Box::new(NativeScorer))
     }
 
     /// Context scoring through a custom backend (e.g. the XLA artifact).
     pub fn with_scorer(seed: u64, scorer: Box<dyn CcScorer>) -> PolicyCtx {
-        PolicyCtx { now: 0, rng: Rng::new(seed), scorer }
+        PolicyCtx { now: 0, rng: Rng::new(seed), scorer, decisions: DecisionBuffer::new() }
     }
 }
 
@@ -237,11 +304,17 @@ impl Default for PolicyCtx {
 /// A VM placement policy driven by the event core. `Send` so the
 /// coordinator can own a policy on its service thread.
 ///
+/// The required entry point is the allocation-free
+/// [`Policy::place_batch_into`], which writes one [`Decision`] per VM
+/// into the [`PolicyCtx`]'s [`DecisionBuffer`]; the `Vec`-returning
+/// [`Policy::place_batch`] is a provided compat wrapper around it.
+///
 /// Migration note: before the decision API, `place_batch` returned
 /// `Vec<bool>` and migrations were exposed as two cumulative counters
 /// (`intra_migrations`/`inter_migrations`). Decisions now carry the
 /// chosen GPU or the [`RejectReason`], and migrations are drained as
-/// [`MigrationEvent`] records via [`Policy::take_migrations`].
+/// [`MigrationEvent`] records via [`Policy::drain_migrations_into`] /
+/// [`Policy::take_migrations`].
 pub trait Policy: Send {
     /// Short name used in reports ("FF", "GRMU", ...).
     fn name(&self) -> &str;
@@ -254,7 +327,19 @@ pub trait Policy: Send {
         dc: &mut DataCenter,
         vms: &[VmSpec],
         ctx: &mut PolicyCtx,
-    ) -> Vec<Decision>;
+    ) -> Vec<Decision> {
+        self.place_batch_into(dc, vms, ctx);
+        ctx.decisions.to_vec()
+    }
+
+    /// Allocation-free [`Policy::place_batch`]: write one [`Decision`]
+    /// per VM, in order, into `ctx.decisions` (calling
+    /// [`DecisionBuffer::begin`] first). The buffer's contents stay
+    /// valid until the next batch. This is the required method —
+    /// keeping it abstract (rather than defaulting it to `place_batch`
+    /// and vice versa) makes "implemented neither" a compile error
+    /// instead of runtime infinite recursion.
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx);
 
     /// Called after a VM departed (its resources are already released).
     fn on_departure(&mut self, _dc: &mut DataCenter, _vm: VmId, _ctx: &mut PolicyCtx) {}
@@ -266,6 +351,14 @@ pub trait Policy: Send {
     /// core collects these after every batch and tick.
     fn take_migrations(&mut self) -> Vec<MigrationEvent> {
         Vec::new()
+    }
+
+    /// Allocation-free [`Policy::take_migrations`]: append the drained
+    /// events to a caller-owned buffer. Policies with an internal event
+    /// `Vec` should override this with `out.append(..)` so their
+    /// buffer's capacity is retained across drains.
+    fn drain_migrations_into(&mut self, out: &mut Vec<MigrationEvent>) {
+        out.extend(self.take_migrations());
     }
 }
 

@@ -1,13 +1,14 @@
 //! Parameterized experiment runners behind the figure harness, plus the
 //! parallel multi-seed × multi-policy [`sweep`] runner.
 
-use crate::cluster::DataCenter;
+use crate::cluster::vm::VmSpec;
+use crate::cluster::{DataCenter, Host};
 use crate::policies::{grmu, PolicyConfig, PolicyCtx, PolicyRegistry};
 use crate::sim::{SimResult, Simulation, SimulationOptions};
 use crate::trace::{TraceConfig, Workload};
 use crate::util::stats::{mean, std_dev};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Shared experiment parameters (CLI-controllable).
 #[derive(Debug, Clone)]
@@ -62,12 +63,26 @@ pub fn run_once(
     cfg: &ExperimentConfig,
     grmu_defrag: bool,
 ) -> SimResult {
+    run_trace(&workload.hosts, &workload.vms, policy, cfg, grmu_defrag)
+}
+
+/// Slice-based core of [`run_once`]: one policy over a trace whose hosts
+/// and VM stream may be shared (e.g. `Arc`-held across [`sweep`] cells).
+/// Only the data center clones the host states — it mutates them; the VM
+/// stream is borrowed for the whole run.
+pub fn run_trace(
+    hosts: &[Host],
+    vms: &[VmSpec],
+    policy: &str,
+    cfg: &ExperimentConfig,
+    grmu_defrag: bool,
+) -> SimResult {
     let name = if policy == "grmu" && !grmu_defrag { "grmu-db" } else { policy };
     let policy_box = PolicyRegistry::standard()
         .build(name, &cfg.policy_config())
         .unwrap_or_else(|e| panic!("{e}"));
-    let dc = DataCenter::new(workload.hosts.clone());
-    let mut sim = Simulation::new(dc, policy_box, &workload.vms);
+    let dc = DataCenter::new(hosts.to_vec());
+    let mut sim = Simulation::new(dc, policy_box, vms);
     sim.ctx = PolicyCtx::new(cfg.trace.seed);
     sim.options = SimulationOptions {
         drain_cap_hours: cfg.drain_cap_hours,
@@ -149,8 +164,12 @@ pub struct SweepRun {
 /// Parallel multi-seed × multi-policy sweep.
 ///
 /// Workloads are generated once per seed (each seed reconfigures
-/// `base.trace`) on the worker pool, then every `(seed, policy)` pair
-/// runs as an independent simulation pulled from a shared work queue by
+/// `base.trace`) on the worker pool and held as `Arc<[Host]>` /
+/// `Arc<[VmSpec]>` — every `(seed, policy)` cell holds a handle to its
+/// seed's trace, so a cell is self-contained and never copies the VM
+/// stream (only the cell's `DataCenter` clones the host *states*, which
+/// it mutates). Cells run
+/// as independent simulations pulled from a shared work queue by
 /// `std::thread::scope` workers — no external dependencies, and the
 /// per-run determinism (seeded trace + seeded `PolicyCtx`) makes the
 /// output independent of thread interleaving. `threads = 0` uses the
@@ -165,6 +184,7 @@ pub fn sweep(
     policies: &[String],
     threads: usize,
 ) -> Vec<SweepRun> {
+    type SharedTrace = (Arc<[Host]>, Arc<[VmSpec]>);
     let threads = if threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -180,7 +200,8 @@ pub fn sweep(
         .collect();
     // Per-seed workload synthesis is the expensive part of startup and
     // every seed is independent — generate on the worker pool too.
-    let generated: Vec<Mutex<Option<Workload>>> = seeds.iter().map(|_| Mutex::new(None)).collect();
+    let generated: Vec<Mutex<Option<SharedTrace>>> =
+        seeds.iter().map(|_| Mutex::new(None)).collect();
     let next_gen = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..threads.min(seed_cfgs.len()).max(1) {
@@ -190,11 +211,12 @@ pub fn sweep(
                     break;
                 }
                 let workload = Workload::generate(seed_cfgs[i].trace.clone());
-                *generated[i].lock().unwrap() = Some(workload);
+                *generated[i].lock().unwrap() =
+                    Some((Arc::from(workload.hosts), Arc::from(workload.vms)));
             });
         }
     });
-    let workloads: Vec<Workload> = generated
+    let workloads: Vec<SharedTrace> = generated
         .into_iter()
         .map(|cell| cell.into_inner().unwrap().expect("workload generated"))
         .collect();
@@ -211,7 +233,10 @@ pub fn sweep(
                     break;
                 }
                 let (wi, policy) = tasks[i];
-                let result = run_once(&workloads[wi], policy, &seed_cfgs[wi], true);
+                // Arc handles: the cell shares its seed's generated
+                // hosts and VM stream without copying either.
+                let (hosts, vms) = (workloads[wi].0.clone(), workloads[wi].1.clone());
+                let result = run_trace(&hosts, &vms, policy, &seed_cfgs[wi], true);
                 *cells[i].lock().unwrap() = Some(result);
             });
         }

@@ -59,6 +59,15 @@ impl<'a> Simulation<'a> {
         let last_arrival = self.vms.last().map(|v| v.arrival).unwrap_or(0);
         let mut core = EventCore::new(self.dc, self.policy, self.ctx);
         core.set_integrity_every(self.options.integrity_every);
+        // Pre-size the core's collections from the trace: the run spans
+        // the arrivals plus either the drain cap or the latest departure.
+        let last_departure = self.vms.iter().map(|v| v.departure).max().unwrap_or(0);
+        let horizon = if self.options.drain_cap_hours > 0 {
+            last_arrival + self.options.drain_cap_hours * HOUR
+        } else {
+            last_departure.max(last_arrival)
+        };
+        core.reserve_for_trace(self.vms.len(), core.window_of(horizon) + 2);
         let mut next_vm = 0usize;
         loop {
             let t_end = core.interval_end();
@@ -66,7 +75,9 @@ impl<'a> Simulation<'a> {
             while next_vm < self.vms.len() && self.vms[next_vm].arrival <= t_end {
                 next_vm += 1;
             }
-            core.step(&self.vms[batch_start..next_vm]);
+            // Buffered step: the simulator aggregates through the core's
+            // accounting, so the per-interval decision Vec is never built.
+            core.step_buffered(&self.vms[batch_start..next_vm]);
 
             let drained = next_vm >= self.vms.len() && core.pending_departures() == 0;
             let capped = self.options.drain_cap_hours > 0

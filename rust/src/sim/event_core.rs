@@ -17,10 +17,21 @@
 //!   hourly metric sample;
 //! * collection of the policy's [`MigrationEvent`] records.
 //!
-//! The simulator calls [`EventCore::step`] for every interval of a trace;
-//! the coordinator calls [`EventCore::run_until`]/[`EventCore::place`] as
-//! requests arrive. Both end in the same [`SimResult`], which is what the
+//! The simulator calls [`EventCore::step_buffered`] for every interval of
+//! a trace; the coordinator calls
+//! [`EventCore::run_until`]/[`EventCore::place_buffered`] as requests
+//! arrive. Both end in the same [`SimResult`], which is what the
 //! simulator-vs-coordinator equivalence test locks down.
+//!
+//! Since §Perf iteration 6 the steady-state loop is allocation-free and
+//! scan-free: decisions land in the [`PolicyCtx`]'s reusable
+//! [`crate::policies::DecisionBuffer`] (the `Vec`-returning
+//! [`EventCore::step`]/[`EventCore::place`] remain as compat wrappers),
+//! migrations drain via [`Policy::drain_migrations_into`] into a
+//! pre-sized log, and the per-interval sample reads the data center's
+//! O(1) activity counters instead of scanning the fleet.
+//! [`EventCore::reserve_for_trace`] pre-sizes the departure heap, sample
+//! vector and migration log from trace metadata.
 
 use super::metrics::{acceptance_rate, Sample, SimResult};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
@@ -90,6 +101,18 @@ impl EventCore {
         self.integrity_every = every;
     }
 
+    /// Pre-size the run's collections from trace metadata so the
+    /// steady-state loop never grows them: `requests` bounds the
+    /// departure heap (every entry is an accepted, still-resident VM) and
+    /// `intervals` bounds the sample vector. The migration log gets a
+    /// small share of `requests` (§8.3.3 measures migrations ≈ 1% of
+    /// accepted VMs); a heavier migration load merely amortizes growth.
+    pub fn reserve_for_trace(&mut self, requests: usize, intervals: u64) {
+        self.departures.reserve(requests);
+        self.samples.reserve(intervals as usize);
+        self.migrations.reserve(requests / 32 + 1);
+    }
+
     pub fn interval(&self) -> Time {
         self.interval
     }
@@ -137,7 +160,7 @@ impl EventCore {
     }
 
     fn absorb_migrations(&mut self) {
-        self.migrations.extend(self.policy.take_migrations());
+        self.policy.drain_migrations_into(&mut self.migrations);
     }
 
     /// Release departures due by `t` (inclusive), oldest first.
@@ -155,15 +178,31 @@ impl EventCore {
     /// Present `batch` to the policy at the end of the open interval and
     /// account the decisions. A VM placed in interval `w` departs no
     /// earlier than the start of interval `w+1`.
+    ///
+    /// Compat wrapper around [`EventCore::place_buffered`]; callers that
+    /// do not need an owned `Vec` should use the buffered variant.
     pub fn place(&mut self, batch: &[VmSpec]) -> Vec<Decision> {
+        self.place_buffered(batch);
+        self.ctx.decisions.to_vec()
+    }
+
+    /// Allocation-free [`EventCore::place`]: the decisions land in the
+    /// context's [`crate::policies::DecisionBuffer`] (read them via
+    /// [`EventCore::decisions`]) and stay valid until the next batch.
+    pub fn place_buffered(&mut self, batch: &[VmSpec]) {
         if batch.is_empty() {
-            return Vec::new();
+            self.ctx.decisions.begin(0);
+            return;
         }
         let t_end = self.interval_end();
         self.ctx.now = t_end;
-        let decisions = self.policy.place_batch(&mut self.dc, batch, &mut self.ctx);
-        debug_assert_eq!(decisions.len(), batch.len());
-        for (vm, d) in batch.iter().zip(&decisions) {
+        // Reset the buffer here too (idempotent with the policies' own
+        // `begin`): a policy that forgets it must not leave the previous
+        // batch's decisions to be zipped against this batch's VMs.
+        self.ctx.decisions.begin(batch.len());
+        self.policy.place_batch_into(&mut self.dc, batch, &mut self.ctx);
+        debug_assert_eq!(self.ctx.decisions.len(), batch.len());
+        for (vm, d) in batch.iter().zip(self.ctx.decisions.as_slice()) {
             self.requested += 1;
             self.per_profile[vm.profile.dense()].0 += 1;
             match d {
@@ -176,11 +215,17 @@ impl EventCore {
             }
         }
         self.absorb_migrations();
-        decisions
+    }
+
+    /// Decisions of the latest batch, in request order (empty before the
+    /// first batch and after an empty one).
+    pub fn decisions(&self) -> &[Decision] {
+        self.ctx.decisions.as_slice()
     }
 
     /// Close the open interval: fire the maintenance tick, take the
-    /// metric sample, advance the clock.
+    /// metric sample, advance the clock. The sample reads the data
+    /// center's O(1) activity counters — no per-interval fleet scan.
     pub fn close_interval(&mut self) {
         let t_end = self.interval_end();
         self.ctx.now = t_end;
@@ -204,12 +249,20 @@ impl EventCore {
         self.hour += 1;
     }
 
-    /// One full interval: departures, arrivals, tick, sample.
+    /// One full interval: departures, arrivals, tick, sample. Compat
+    /// wrapper around [`EventCore::step_buffered`].
     pub fn step(&mut self, batch: &[VmSpec]) -> Vec<Decision> {
+        self.step_buffered(batch);
+        self.ctx.decisions.to_vec()
+    }
+
+    /// Allocation-free [`EventCore::step`]: returns the batch's
+    /// decisions as a slice into the context's decision buffer.
+    pub fn step_buffered(&mut self, batch: &[VmSpec]) -> &[Decision] {
         self.release_due(self.interval_end());
-        let decisions = self.place(batch);
+        self.place_buffered(batch);
         self.close_interval();
-        decisions
+        self.ctx.decisions.as_slice()
     }
 
     /// Run empty intervals until `window` is the open interval. Lets the
@@ -218,7 +271,7 @@ impl EventCore {
     /// every boundary).
     pub fn run_until(&mut self, window: u64) {
         while self.hour < window {
-            self.step(&[]);
+            self.step_buffered(&[]);
         }
     }
 
@@ -290,6 +343,21 @@ mod tests {
         assert_eq!(r.requested, 0);
         // Empty-denominator convention: vacuous acceptance is 1.0.
         assert!((r.samples[0].acceptance_rate - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buffered_and_vec_paths_agree() {
+        let mut c = core(2);
+        c.reserve_for_trace(4, 4);
+        let d = c.step(&[vm(1, Profile::P3g20gb, 10, 100)]);
+        // The compat Vec is a copy of the context's decision buffer.
+        assert_eq!(d.as_slice(), c.decisions());
+        let d2 = c.step_buffered(&[vm(2, Profile::P3g20gb, HOUR + 5, 9 * HOUR)]).to_vec();
+        assert!(d2[0].is_placed());
+        assert_eq!(c.decisions(), d2.as_slice());
+        // An empty batch clears the buffer (no stale decisions).
+        c.step_buffered(&[]);
+        assert!(c.decisions().is_empty());
     }
 
     #[test]

@@ -220,6 +220,82 @@ fn equivalence_holds_across_seeds() {
     }
 }
 
+/// Satellite lock for the O(1) activity counters: the simulator-vs-
+/// coordinator equivalence also holds on a *non-hour* interval clock
+/// (`EventCore::with_interval`), so the counter-backed sampling path is
+/// exercised on a grid the hourly tests never touch. The "simulator"
+/// side drives the shared core directly on a 30-minute grid; the
+/// coordinator batches on the same grid.
+#[test]
+fn non_hour_interval_sim_and_coordinator_agree() {
+    let workload = Workload::generate(TraceConfig::small(23));
+    let interval = HOUR / 2;
+    let vms = &workload.vms;
+    let last_arrival = vms.last().map(|v| v.arrival).unwrap_or(0);
+    for name in ["ff", "grmu"] {
+        let build = || {
+            PolicyRegistry::standard()
+                .build(name, &PolicyConfig::new().heavy_frac(0.25))
+                .unwrap()
+        };
+        let mut core = EventCore::with_interval(
+            DataCenter::new(workload.hosts.clone()),
+            build(),
+            PolicyCtx::new(23),
+            interval,
+        );
+        core.set_integrity_every(16);
+        let mut next = 0usize;
+        loop {
+            let t_end = core.interval_end();
+            let start = next;
+            while next < vms.len() && vms[next].arrival <= t_end {
+                next += 1;
+            }
+            core.step_buffered(&vms[start..next]);
+            let drained = next >= vms.len() && core.pending_departures() == 0;
+            let capped = core.hour() * interval > last_arrival + 5 * 24 * HOUR;
+            if drained || capped {
+                break;
+            }
+        }
+        let sim = core.into_result(0.0);
+
+        let mut coord = Coordinator::with_ctx(
+            DataCenter::new(workload.hosts.clone()),
+            build(),
+            CoordinatorConfig { max_batch: usize::MAX, interval },
+            PolicyCtx::new(23),
+        );
+        let mut i = 0usize;
+        while i < vms.len() {
+            let w = coord.window_of(vms[i].arrival);
+            let mut j = i;
+            while j < vms.len() && coord.window_of(vms[j].arrival) == w {
+                j += 1;
+            }
+            let batch: Vec<Request> = vms[i..j].iter().map(|&vm| Request { vm }).collect();
+            coord.decide_batch(&batch);
+            i = j;
+        }
+        coord.close_interval();
+        let coord = coord.into_result();
+
+        assert_eq!(coord.requested, sim.requested, "{name}: requested diverged");
+        assert_eq!(coord.accepted, sim.accepted, "{name}: accepted diverged");
+        assert_eq!(coord.per_profile, sim.per_profile, "{name}: per-profile diverged");
+        assert_eq!(coord.rejections, sim.rejections, "{name}: rejections diverged");
+        assert_eq!(
+            coord.migration_events, sim.migration_events,
+            "{name}: migration events diverged"
+        );
+        assert!(coord.samples.len() <= sim.samples.len(), "{name}");
+        for (h, (cs, ss)) in coord.samples.iter().zip(&sim.samples).enumerate() {
+            assert_eq!(cs, ss, "{name}: sample {h} diverged on the 30-minute grid");
+        }
+    }
+}
+
 // ------------------------------------------------------ index equivalence
 
 /// Drive one policy over the workload exactly like `Simulation::run`
