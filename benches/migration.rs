@@ -1,0 +1,136 @@
+//! Migration-planner throughput at 10,000 GPUs (EXPERIMENTS.md
+//! §Planner stacks).
+//!
+//! Measurements:
+//!
+//! 1. **Defrag plans/sec** — one `DefragOnReject` planning round over a
+//!    fully fragmented 10k-GPU fleet (every GPU carries a stray 1g
+//!    instance), with the occupancy fast path + fragmentation table
+//!    (`use_index`) vs the full per-GPU recomputation (the brute-force
+//!    reference). `Bench::compare` prints the fast-path ratio.
+//! 2. **Consolidation plans/sec** — one Algorithm 5 greedy-pairing round
+//!    over a fleet of half-full single-profile GPUs (the worst case: the
+//!    whole fleet is a candidate), planned against the `PlanView`
+//!    overlay without touching the cluster.
+//! 3. **FragGradient plans/sec** — one threshold-triggered drain round.
+//! 4. **apply_plan + rollback round-trip** — a two-plan ping-pong of one
+//!    VM between two GPUs (net-zero state change per iteration), i.e.
+//!    the transactional apply's fixed cost per move.
+//!
+//! Planning never mutates the cluster, so iterations are identical.
+//! Run: `cargo bench --bench migration` (`BENCH_QUICK=1` shrinks the
+//! fleet).
+
+use grmu::cluster::{DataCenter, GpuRef, Host, VmSpec};
+use grmu::mig::{Placement, Profile};
+use grmu::migrate::{
+    consolidate, DefragOnReject, FragGradient, MigrationPlan, MigrationPlanner, PlanCtx,
+    PlanScope, PlanTrigger,
+};
+use grmu::util::bench::Bench;
+
+fn place(dc: &mut DataCenter, id: u64, profile: Profile, r: GpuRef, start: u8) {
+    let vm = VmSpec { id, profile, cpus: 1, ram_gb: 1, arrival: 0, departure: 1 << 40, weight: 1.0 };
+    dc.place(&vm, r, Placement { profile, start });
+}
+
+/// `hosts` × 8 A100-40s, every GPU holding one stray 1g.5gb at block 4 —
+/// maximal defrag pressure (every device is fragmented and repackable).
+fn fragmented_fleet(hosts: u32) -> DataCenter {
+    let mut dc = DataCenter::new((0..hosts).map(|i| Host::new(i, 512, 2_048, 8)).collect());
+    let mut id = 1u64;
+    for h in 0..hosts {
+        for g in 0..8u8 {
+            place(&mut dc, id, Profile::P1g5gb, GpuRef { host: h, gpu: g }, 4);
+            id += 1;
+        }
+    }
+    dc
+}
+
+/// `hosts` × 8 A100-40s, every GPU half-full with a single 3g.20gb —
+/// the whole fleet is an Algorithm 5 candidate.
+fn half_full_fleet(hosts: u32) -> DataCenter {
+    let mut dc = DataCenter::new((0..hosts).map(|i| Host::new(i, 512, 2_048, 8)).collect());
+    let mut id = 1u64;
+    for h in 0..hosts {
+        for g in 0..8u8 {
+            place(&mut dc, id, Profile::P3g20gb, GpuRef { host: h, gpu: g }, 0);
+            id += 1;
+        }
+    }
+    dc
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let hosts: u32 = if quick { 250 } else { 1_250 }; // × 8 GPUs
+    let mut b = Bench::new();
+
+    // 1. Defrag planning: fast path vs full recomputation.
+    let dc = fragmented_fleet(hosts);
+    println!("defrag fleet: {} GPUs, all fragmented", dc.num_gpus());
+    let mut plan = MigrationPlan::new();
+    for (label, use_index) in
+        [("migration/defrag-plan/10k-gpus/indexed", true), ("migration/defrag-plan/10k-gpus/scan", false)]
+    {
+        let mut planner = DefragOnReject::new(use_index);
+        b.run(label, || {
+            plan.clear();
+            let ctx =
+                PlanCtx { now: 0, trigger: PlanTrigger::Rejection, scope: PlanScope::Cluster };
+            planner.plan(&dc, &ctx, &mut plan);
+            assert!(!plan.is_empty());
+            plan.num_moves()
+        });
+    }
+    b.compare("migration/defrag-plan/10k-gpus/scan", "migration/defrag-plan/10k-gpus/indexed");
+
+    // 2. Consolidation planning: full-fleet candidate set, overlay-only.
+    let dc = half_full_fleet(hosts);
+    println!("consolidation fleet: {} GPUs, all half-full candidates", dc.num_gpus());
+    b.run("migration/consolidate-plan/10k-gpus", || {
+        plan.clear();
+        let ctx = PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Cluster };
+        consolidate::plan_consolidation(&dc, &ctx, &mut plan);
+        assert!(plan.num_moves() >= dc.num_gpus() / 2 - 1);
+        plan.num_moves()
+    });
+
+    // 3. FragGradient planning (drains the worst GPUs per round). Odd
+    // GPUs stay empty so downhill destinations exist — the gradient rule
+    // refuses equally fragmented targets.
+    let mut dc = DataCenter::new((0..hosts).map(|i| Host::new(i, 512, 2_048, 8)).collect());
+    let mut id = 1u64;
+    for h in 0..hosts {
+        for g in (0..8u8).step_by(2) {
+            place(&mut dc, id, Profile::P1g5gb, GpuRef { host: h, gpu: g }, 4);
+            id += 1;
+        }
+    }
+    println!("frag-gradient fleet: {} GPUs, half fragmented / half empty", dc.num_gpus());
+    let mut planner = FragGradient::new(0.1, true).max_gpus(4);
+    b.run("migration/frag-gradient-plan/10k-gpus", || {
+        plan.clear();
+        let ctx = PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Cluster };
+        planner.plan(&dc, &ctx, &mut plan);
+        assert!(!plan.is_empty());
+        plan.num_moves()
+    });
+
+    // 4. Transactional apply: ping-pong one VM between two GPUs — two
+    // single-move plans per iteration, state restored at the end.
+    let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+    let (g0, g1) = (GpuRef { host: 0, gpu: 0 }, GpuRef { host: 0, gpu: 1 });
+    place(&mut dc, 1, Profile::P3g20gb, g0, 0);
+    let pl = Placement { profile: Profile::P3g20gb, start: 0 };
+    let mut fwd = MigrationPlan::new();
+    fwd.push_migrate(1, g0, g1, pl);
+    let mut back = MigrationPlan::new();
+    back.push_migrate(1, g1, g0, pl);
+    b.run("migration/apply-plan/ping-pong-2-moves", || {
+        dc.apply_plan(&fwd).unwrap();
+        dc.apply_plan(&back).unwrap();
+    });
+    dc.check_integrity().unwrap();
+}

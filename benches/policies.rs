@@ -30,14 +30,14 @@ fn main() {
 
     for name in registry.names() {
         let mut dc = DataCenter::new(workload.hosts.clone());
-        let mut policy = registry.build(name, &cfg).unwrap();
+        let mut policy = registry.build(&name, &cfg).unwrap();
         let mut ctx = PolicyCtx::default();
         policy.place_batch(&mut dc, warmup, &mut ctx);
         // Benchmark: decide the probe batch against a snapshot each time.
         let base = dc.clone();
         b.run(&format!("place-batch-512/{name}"), || {
             let mut dc = base.clone();
-            let mut p = registry.build(name, &cfg).unwrap();
+            let mut p = registry.build(&name, &cfg).unwrap();
             let mut ctx = PolicyCtx::default();
             ctx.now = 3_600;
             // Rebuild policy state quickly from scratch for GRMU et al.:

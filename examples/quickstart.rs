@@ -96,11 +96,13 @@ fn main() {
     // --- §7.1's defragmentation worked example, in isolation ---------
     // Two 1g.5gb instances land on blocks 6 and 4 (Algorithm 1). When
     // the block-6 tenant departs, the survivor is stranded at block 4 —
-    // a suboptimal arrangement. Intra-GPU migration moves it back to 6,
-    // reported as a first-class MigrationEvent.
+    // a suboptimal arrangement. The migration-planner layer plans an
+    // atomic re-pack (applied transactionally via `apply_plan`) that
+    // moves it back to 6, reported as a first-class MigrationEvent with
+    // a block-weighted cost.
     use grmu::cluster::GpuRef;
     use grmu::mig::placement::assign;
-    use grmu::policies::grmu::defrag;
+    use grmu::migrate::{defrag, PlanScope};
     use std::collections::BTreeSet;
 
     println!("\n§7.1 defragmentation example:");
@@ -117,12 +119,13 @@ fn main() {
     dc2.remove(100); // the block-6 tenant departs
     println!("  before: [{}] CC={}", dc2.gpu(r).block_map(), dc2.gpu(r).cc());
     let basket: BTreeSet<GpuRef> = [r].into_iter().collect();
-    let moves = defrag::defragment_light_basket(&mut dc2, &basket);
+    let moves = defrag::defragment(&mut dc2, PlanScope::Set(&basket), true);
     println!(
-        "  after:  [{}] CC={}  ({} intra-GPU migration: {:?})",
+        "  after:  [{}] CC={}  ({} intra-GPU migration, cost {}: {:?})",
         dc2.gpu(r).block_map(),
         dc2.gpu(r).cc(),
         moves.len(),
+        moves.iter().map(|m| m.cost()).sum::<u64>(),
         moves
     );
     assert_eq!(dc2.locate(101).unwrap().placement.start, 6);

@@ -648,7 +648,7 @@ mod tests {
         use crate::mig::gpu::feasible_starts;
         use crate::mig::placement::mock_assign;
         use crate::mig::{GpuModel, ALL_MODELS};
-        use crate::policies::grmu::defrag::repack_plan;
+        use crate::migrate::defrag::repack_plan;
         use crate::util::prop::forall;
         use crate::util::rng::Rng;
 

@@ -24,6 +24,16 @@
 //!   contract — buckets iterate in ascending [`cluster::GpuRef`] order,
 //!   the paper's `globalIndex` — is what makes indexed policy decisions
 //!   byte-identical to full scans.
+//! * [`migrate`] — the policy-agnostic migration-planner layer (the
+//!   paper's third objective as a mechanism): [`migrate::MigrationPlanner`]s
+//!   produce explicit [`migrate::MigrationPlan`]s — Algorithm 4 re-packs
+//!   ([`migrate::DefragOnReject`]), Algorithm 5 pairwise consolidation
+//!   ([`migrate::PairwiseConsolidate`]) and the threshold-triggered
+//!   [`migrate::FragGradient`] drain — applied **transactionally** by
+//!   `DataCenter::apply_plan` (all-or-nothing, index/counter-coherent)
+//!   and composed via [`migrate::PlannerStack`]s with per-interval /
+//!   per-VM [`migrate::MigrationBudget`]s. Performed moves surface as
+//!   [`migrate::MigrationEvent`]s with block-weighted per-kind costs.
 //! * [`policies`] — the typed placement-decision API and the five §8
 //!   policies (First-Fit, Best-Fit, MCC, MECC, GRMU). A policy answers
 //!   each request with a [`policies::Decision`] — `Placed` with the
@@ -33,7 +43,11 @@
 //!   moves as [`policies::MigrationEvent`] records. Policies are built
 //!   through the [`policies::PolicyRegistry`] and run against a
 //!   [`policies::PolicyCtx`] (virtual clock, seeded RNG, pluggable CC
-//!   scorer). Placement candidates come from the cluster index;
+//!   scorer). Registry names compose with planner suffixes
+//!   (`mcc+defrag`, `bf+consolidate`, ...) via [`policies::Planned`],
+//!   so every policy can migrate — GRMU itself is a thin composition of
+//!   its dual baskets and a light-basket-scoped planner stack.
+//!   Placement candidates come from the cluster index;
 //!   `PolicyConfig::use_index(false)` rebuilds the brute-force
 //!   full-scan variants used by the equivalence tests and benches.
 //! * [`sim`] — the shared [`sim::EventCore`] (departure heap, interval
@@ -139,11 +153,46 @@
 //!   runner shares each seed's generated trace across its cells via
 //!   `Arc<[Host]>`/`Arc<[VmSpec]>`
 //!   ([`report::experiments::run_trace`]).
+//!
+//! ## Migration note (migration-planner layer)
+//!
+//! Defragmentation and consolidation used to be private helpers inside
+//! `policies/grmu/{defrag,consolidation}.rs`, mutating the data center
+//! directly. They are now policy-agnostic planners under [`migrate`].
+//! Code written against the old surface maps as follows:
+//!
+//! * `policies::grmu::defrag::{most_fragmented, repack_plan}` →
+//!   [`migrate::defrag`] (same algorithms; `most_fragmented` takes any
+//!   GPU iterator plus a `use_index` flag for the occupancy fast path /
+//!   fragmentation table, with the full recomputation as the
+//!   `use_index(false)` reference).
+//! * `defrag::defragment_light_basket(dc, basket)` →
+//!   [`migrate::defrag::defragment`]`(dc, PlanScope::Set(basket), true)`,
+//!   or compose [`migrate::DefragOnReject`] into a stack.
+//! * `consolidation::consolidate_light_basket(dc, light, events)` →
+//!   [`migrate::PairwiseConsolidate`] (plan) + `DataCenter::apply_plan`;
+//!   GRMU returns emptied sources to its pool by inspecting the applied
+//!   `Inter` events.
+//! * Mutating the cluster from a migration routine → build a
+//!   [`migrate::MigrationPlan`] and call `DataCenter::apply_plan`: steps
+//!   are validated against the live state and an infeasible plan rolls
+//!   back atomically (`check_integrity`-clean either way).
+//! * [`policies::MigrationEvent`]/[`policies::MigrationKind`] moved to
+//!   [`migrate`] (the `policies` re-exports remain) and events gained
+//!   `model` + `blocks` fields: [`migrate::MigrationEvent::cost`] is the
+//!   block-weighted per-kind cost (Table 2) that `SimResult` aggregates.
+//! * `Policy::take_migrations` is now the compat wrapper and the
+//!   buffered [`policies::Policy::drain_migrations_into`] the required
+//!   drain shape (default: allocation-free no-op).
+//! * Registry names compose: `mcc+defrag`, `bf+consolidate`,
+//!   `ff+defrag+frag-gradient`; CLI `--planners`/`--migration-budget`
+//!   on `simulate`/`sweep` reach the same machinery.
 
 pub mod cluster;
 pub mod coordinator;
 pub mod ilp;
 pub mod mig;
+pub mod migrate;
 pub mod policies;
 pub mod report;
 #[cfg(feature = "xla")]

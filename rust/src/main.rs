@@ -19,7 +19,7 @@
 
 use grmu::coordinator;
 use grmu::mig::config_space;
-use grmu::policies::{PolicyConfig, PolicyRegistry};
+use grmu::policies::PolicyRegistry;
 use grmu::report::{experiments, tables};
 use grmu::trace::{loader, TraceConfig, Workload};
 use grmu::util::cli::Args;
@@ -69,12 +69,14 @@ fn print_help() {
          COMMANDS:\n\
            simulate  --policy NAME [--seed N] [--hosts N] [--pods N]\n\
                      [--heavy-frac 0.3] [--consolidation HOURS] [--trace FILE.csv]\n\
-                     [--gpu-models a100-40:0.7,h100-80:0.3] [--quick] [--json FILE]\n\
+                     [--gpu-models a100-40:0.7,h100-80:0.3] [--planners defrag,consolidate]\n\
+                     [--migration-budget N[:per-vm]] [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
-           sweep     [--seeds 1,2,3] [--policies ff,grmu] [--threads N]\n\
+           sweep     [--seeds 1,2,3] [--policies ff,grmu,mcc+defrag] [--threads N]\n\
                      [--mix ..] [--duration-mu F] [--gpu-models a30:0.3,a100-40:0.7]\n\
+                     [--planners ..] [--migration-budget N[:per-vm]]\n\
                      [--quick] [--json FILE]   parallel seeds × policies sweep\n\
            trace     [--seed N] [--out FILE.csv]      dump the synthetic trace\n\
            serve     --policy NAME [--scorer native|xla] [--quick]   online coordinator\n\
@@ -86,6 +88,14 @@ fn print_help() {
     for e in registry.entries() {
         println!("           {:<8} {}", e.name, e.summary);
     }
+    println!(
+        "\n         PLANNERS (compose as base+planner, e.g. mcc+defrag, bf+consolidate,\n\
+         or via --planners; budgeted by --migration-budget):\n\
+           {:<14} Algorithm 4: re-pack the most fragmented GPU on rejection\n\
+           {:<14} Algorithm 5: merge half-full single-profile GPU pairs periodically\n\
+           {:<14} drain the most fragmented GPUs when mean fragmentation crosses a threshold",
+        "defrag", "consolidate", "frag-gradient"
+    );
 }
 
 fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
@@ -123,6 +133,16 @@ fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
             }
         }
     }
+    cfg.planners = args.list_or("planners", &[]);
+    if let Some(b) = args.get("migration-budget") {
+        match grmu::migrate::MigrationBudget::parse(b) {
+            Ok(budget) => cfg.migration_budget = budget,
+            Err(e) => {
+                eprintln!("--migration-budget: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     cfg
 }
 
@@ -150,9 +170,10 @@ fn write_json(args: &Args, json: &Json) {
 fn cmd_simulate(args: &Args) {
     let cfg = experiment_config(args);
     let policy = args.str_or("policy", "grmu");
-    // Validate the name up front so typos fail with the accepted list
-    // before the (expensive) workload generation.
-    if let Err(e) = PolicyRegistry::standard().build(&policy, &PolicyConfig::new()) {
+    // Validate the name (and any --planners suffixes) up front so typos
+    // fail with the accepted list before the (expensive) workload
+    // generation.
+    if let Err(e) = PolicyRegistry::standard().build(&policy, &cfg.policy_config()) {
         eprintln!("{e}");
         std::process::exit(2);
     }
@@ -176,6 +197,16 @@ fn cmd_simulate(args: &Args) {
         result.intra_migrations(),
         result.inter_migrations(),
         result.wall_seconds,
+    );
+    // The paper's §8.3.3 headline: migrated share of accepted VMs, plus
+    // the block-weighted overhead per kind.
+    println!(
+        "  migration overhead: migrated_vms={} ({:.2}% of accepted) cost intra={} inter={} total={}",
+        result.migrated_vms(),
+        100.0 * result.migrated_vm_share(),
+        result.migration_cost(grmu::policies::MigrationKind::Intra),
+        result.migration_cost(grmu::policies::MigrationKind::Inter),
+        result.total_migration_cost(),
     );
     let rates = result.per_profile_acceptance();
     for p in result.reported_profiles() {
@@ -208,6 +239,9 @@ fn cmd_simulate(args: &Args) {
     if result.requested > result.accepted {
         println!("  rejections: {}", grmu::policies::format_reject_counts(&result.rejections));
     }
+    if result.migrations() > 0 {
+        println!("{}", tables::migration_overhead(std::slice::from_ref(&result)));
+    }
     write_json(args, &result.to_json());
 }
 
@@ -216,9 +250,10 @@ fn cmd_sweep(args: &Args) {
     let registry = PolicyRegistry::standard();
     let policies: Vec<String> =
         args.list_or("policies", &PolicyRegistry::COMPARISON.map(|s| s.to_string()));
-    // Fail on typos before any (expensive) workload generation.
+    // Fail on typos (names, suffixes, --planners) before any (expensive)
+    // workload generation.
     for p in &policies {
-        if let Err(e) = registry.build(p, &PolicyConfig::new()) {
+        if let Err(e) = registry.build(p, &cfg.policy_config()) {
             eprintln!("{e}");
             std::process::exit(2);
         }
@@ -234,18 +269,20 @@ fn cmd_sweep(args: &Args) {
     let t0 = std::time::Instant::now();
     let runs = experiments::sweep(&cfg, &seeds, &policies, threads);
     println!(
-        "{:<8} {:<8} {:>12} {:>16} {:>8} {:>8} {:>9}",
-        "seed", "policy", "acceptance", "avg active hw", "intra", "inter", "wall"
+        "{:<8} {:<16} {:>12} {:>16} {:>8} {:>8} {:>9} {:>7} {:>9}",
+        "seed", "policy", "acceptance", "avg active hw", "intra", "inter", "mig cost", "mig%", "wall"
     );
     for run in &runs {
         println!(
-            "{:<8} {:<8} {:>12.4} {:>16.4} {:>8} {:>8} {:>8.2}s",
+            "{:<8} {:<16} {:>12.4} {:>16.4} {:>8} {:>8} {:>9} {:>6.2}% {:>8.2}s",
             run.seed,
             run.policy,
             run.result.overall_acceptance(),
             run.result.average_active_rate(),
             run.result.intra_migrations(),
             run.result.inter_migrations(),
+            run.result.total_migration_cost(),
+            100.0 * run.result.migrated_vm_share(),
             run.result.wall_seconds,
         );
     }
@@ -340,6 +377,7 @@ fn cmd_figures(args: &Args) {
         if all || table == 6 {
             println!("{}", tables::table6(&results));
             println!("{}", tables::migrations_summary(&results));
+            println!("{}", tables::migration_overhead(&results));
             println!("{}", tables::rejections_breakdown(&results));
         }
         exported.push(("policy_comparison", tables::comparison_json(&results)));

@@ -18,8 +18,9 @@
 //! The choice is documented here and exercised by the unit tests.
 
 use super::gpu::BlockMask;
-use super::model::GpuModel;
+use super::model::{GpuModel, ALL_MODELS, NUM_MODELS};
 use super::profiles::Placement;
+use std::sync::OnceLock;
 
 /// Fragmentation value of an occupancy mask of `model` (Algorithm 4,
 /// lines 8–17).
@@ -45,6 +46,26 @@ pub fn fragmentation_value(model: GpuModel, occ: BlockMask) -> f64 {
         frag += remaining as f64 / profile.size() as f64;
     }
     frag
+}
+
+fn frag_tables() -> &'static [Vec<f64>; NUM_MODELS] {
+    static TABLES: OnceLock<[Vec<f64>; NUM_MODELS]> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        ALL_MODELS.map(|model| {
+            (0..model.num_masks()).map(|occ| fragmentation_value(model, occ as u8)).collect()
+        })
+    })
+}
+
+/// Table-backed [`fragmentation_value`]: the metric is a pure function
+/// of the `(model, mask)` pair, so all ≤ 256 values per model are
+/// precomputed at first use (like the CC tables of `mig::gpu`) and a
+/// query is one load. Values are identical to the direct computation by
+/// construction — the defragmentation fast path reads this table, the
+/// direct recomputation survives as its brute-force reference.
+#[inline]
+pub fn fragmentation_cached(model: GpuModel, occ: BlockMask) -> f64 {
+    frag_tables()[model as usize][occ as usize]
 }
 
 /// Convenience: fragmentation of a [`super::gpu::GpuState`].
@@ -152,6 +173,20 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn cached_table_matches_direct_computation_exhaustively() {
+        for model in ALL_MODELS {
+            for occ in 0..model.num_masks() {
+                let occ = occ as u8;
+                assert_eq!(
+                    fragmentation_cached(model, occ),
+                    fragmentation_value(model, occ),
+                    "{model} occ={occ:08b}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Pairwise consolidation via inter-GPU migration (Algorithm 5), as a
+//! policy-agnostic [`MigrationPlanner`].
+//!
+//! Periodically, half-full single-profile GPUs in scope — GPUs holding
+//! exactly one instance that occupies one half of the device (one
+//! 3g.20gb or 4g.20gb on the A100-40) — are merged pairwise: the guest
+//! of the source moves into the free half of the target and the source
+//! empties. Every move is a [`super::MigrationKind::Inter`] event; GRMU
+//! returns emptied sources from its light basket to the pool.
+//!
+//! Placement-rule subtlety the pseudocode glosses over: a 4g.20gb can
+//! only start at block 0, so two 4g.20gb-bearing GPUs can never merge —
+//! the fit check below (via the default placement) rejects such pairs.
+//! Likewise, on a mixed fleet only GPUs of the *same model* pair up
+//! (Eq. 17–18): a half-full A30 can never receive an A100-40 instance.
+//!
+//! This used to live in `policies/grmu/consolidation.rs` and mutated the
+//! data center as it paired. The planner reproduces the exact greedy
+//! pairing — same candidate order (ascending `globalIndex`), same
+//! restart-from-the-top after every merge — against a [`PlanView`]
+//! overlay, so the emitted [`MigrationPlan`] applies through the
+//! transactional `apply_plan` with byte-identical moves (locked in
+//! `rust/tests/decision_api.rs`).
+
+use super::{MigrationPlan, MigrationPlanner, PlanCtx, PlanTrigger, PlanView};
+use crate::cluster::vm::{Time, HOUR};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::placement::mock_assign;
+use crate::mig::Placement;
+
+/// Algorithm 5 as a planner, fired on the maintenance tick every
+/// `period_hours`.
+#[derive(Debug, Clone)]
+pub struct PairwiseConsolidate {
+    period_hours: u64,
+    last: Time,
+}
+
+impl PairwiseConsolidate {
+    /// Consolidate every `hours` simulation hours (Fig. 9's x-axis).
+    pub fn every(hours: u64) -> PairwiseConsolidate {
+        PairwiseConsolidate { period_hours: hours, last: 0 }
+    }
+}
+
+impl MigrationPlanner for PairwiseConsolidate {
+    fn name(&self) -> &'static str {
+        "consolidate"
+    }
+
+    fn plan(&mut self, dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan) {
+        if ctx.trigger != PlanTrigger::Tick {
+            return;
+        }
+        // Same clock as the pre-extraction GRMU: due whenever a full
+        // period elapsed since the last *due* tick, due or not fruitful.
+        if ctx.now.saturating_sub(self.last) < self.period_hours * HOUR {
+            return;
+        }
+        self.last = ctx.now;
+        plan_consolidation(dc, ctx, plan);
+    }
+}
+
+/// One consolidation round (Algorithm 5), appended to `plan`.
+///
+/// Greedy pairing: take each candidate source in ascending `globalIndex`
+/// order, find the first compatible target among the remaining
+/// candidates; on a merge both leave the candidate list and the scan
+/// restarts from the top. Feasibility is checked against the
+/// [`PlanView`] overlay, which tracks the host CPU/RAM that earlier
+/// planned moves already shifted — the same state the sequential
+/// application will walk through.
+pub fn plan_consolidation(dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan) {
+    // Candidates: half-full, single-profile GPUs (Algorithm 5 line 1).
+    let mut candidates: Vec<GpuRef> = ctx
+        .scope
+        .gpus(dc)
+        .filter(|&r| {
+            let g = dc.gpu(r);
+            g.half_full() && g.single_profile()
+        })
+        .collect();
+
+    let mut view = PlanView::new(dc);
+    let mut i = 0;
+    while i < candidates.len() {
+        let source = candidates[i];
+        let Some(inst) = dc.gpu(source).instances().first().copied() else {
+            i += 1;
+            continue;
+        };
+        let (cpus, ram) = dc.vm_demands(inst.vm).unwrap_or((0, 0));
+        // Find a target whose free half accepts the source's profile.
+        // (Feasibility is a single `mock_assign` table lookup per target,
+        // so this path deliberately stays index-free: it behaves the same
+        // under both candidate-iteration modes of the policies.)
+        let mut chosen: Option<(usize, Placement)> = None;
+        for (j, &target) in candidates.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            // Only GPUs of the instance's model can receive it
+            // (Eq. 17–18): a mixed scope pairs per model.
+            if dc.gpu(target).model() != inst.placement.profile.model() {
+                continue;
+            }
+            // CPU/RAM must also follow the VM when hosts differ; the
+            // paper's model migrates the whole VM.
+            if source.host != target.host && !view.host_fits(target.host, cpus, ram) {
+                continue;
+            }
+            if let Some((placement, _)) =
+                mock_assign(view.occupancy(target), inst.placement.profile)
+            {
+                chosen = Some((j, placement));
+                break;
+            }
+        }
+        if let Some((j, placement)) = chosen {
+            let target = candidates[j];
+            view.note_move(source, inst.placement, target, placement, cpus, ram);
+            plan.push_migrate(inst.vm, source, target, placement);
+            // Source leaves the candidate list; target is now full and
+            // leaves as well.
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            candidates.remove(hi);
+            candidates.remove(lo);
+            // Restart scan from the beginning of the shrunk list.
+            i = 0;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Host, VmSpec};
+    use crate::mig::{GpuModel, Profile};
+    use crate::migrate::{MigrationEvent, MigrationKind, PlanScope};
+    use std::collections::BTreeSet;
+
+    fn place(dc: &mut DataCenter, id: u64, profile: Profile, r: GpuRef, start: u8) {
+        let vm = VmSpec {
+            id,
+            profile,
+            cpus: 4,
+            ram_gb: 8,
+            arrival: 0,
+            departure: 10,
+            weight: 1.0,
+        };
+        dc.place(&vm, r, Placement { profile, start });
+    }
+
+    fn refs(n: u8) -> Vec<GpuRef> {
+        (0..n).map(|g| GpuRef { host: 0, gpu: g }).collect()
+    }
+
+    /// Plan + apply one round over the given scope set; returns the
+    /// performed events.
+    fn consolidate(dc: &mut DataCenter, scope: &BTreeSet<GpuRef>) -> Vec<MigrationEvent> {
+        let mut plan = MigrationPlan::new();
+        let ctx = PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Set(scope) };
+        plan_consolidation(dc, &ctx, &mut plan);
+        dc.apply_plan(&plan).expect("planned consolidation must apply");
+        let mut events = Vec::new();
+        plan.push_events_into(&mut events);
+        events
+    }
+
+    #[test]
+    fn merges_two_half_full_3g_gpus() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P3g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
+        let light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let events = consolidate(&mut dc, &light);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, MigrationKind::Inter);
+        assert_ne!(events[0].from, events[0].to);
+        assert_eq!(events[0].blocks, 4);
+        // One GPU holds both instances, the other is empty.
+        assert_eq!(dc.gpu(events[0].to).instances().len(), 2);
+        assert_eq!(dc.gpu(events[0].from).instances().len(), 0);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn two_4g_gpus_cannot_merge() {
+        // Satellite edge case: 4g.20gb must start at block 0 — both GPUs
+        // have block 0 taken, so the pair is never merged.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P4g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P4g20gb, refs(2)[1], 0);
+        let light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let events = consolidate(&mut dc, &light);
+        assert!(events.is_empty());
+        assert_eq!(dc.gpu(refs(2)[0]).instances().len(), 1);
+        assert_eq!(dc.gpu(refs(2)[1]).instances().len(), 1);
+    }
+
+    #[test]
+    fn cross_model_pairs_never_merge() {
+        // Satellite edge case: a half-full A100-40 (3g.20gb) and a
+        // half-full A30 (2g.12gb) are both candidates, but Eq. 17–18
+        // forbids the merge in either direction.
+        let mut dc = DataCenter::new(vec![Host::with_models(
+            0,
+            256,
+            1024,
+            &[GpuModel::A100_40, GpuModel::A30],
+        )]);
+        let (a100, a30) = (GpuRef { host: 0, gpu: 0 }, GpuRef { host: 0, gpu: 1 });
+        place(&mut dc, 1, Profile::P3g20gb, a100, 0);
+        let k2g = GpuModel::A30.profile(1); // 2g.12gb: half of the A30
+        place(&mut dc, 2, k2g, a30, 0);
+        assert!(dc.gpu(a100).half_full() && dc.gpu(a30).half_full());
+        let light: BTreeSet<GpuRef> = [a100, a30].into_iter().collect();
+        let events = consolidate(&mut dc, &light);
+        assert!(events.is_empty(), "cross-model merge planned: {events:?}");
+        assert_eq!(dc.locate(1).unwrap().gpu, a100);
+        assert_eq!(dc.locate(2).unwrap().gpu, a30);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn same_model_pairs_still_merge_on_mixed_fleets() {
+        // Two half-full A30s merge even with a half-full A100 in scope.
+        let mut dc = DataCenter::new(vec![Host::with_models(
+            0,
+            256,
+            1024,
+            &[GpuModel::A100_40, GpuModel::A30, GpuModel::A30],
+        )]);
+        let k2g = GpuModel::A30.profile(1);
+        place(&mut dc, 1, Profile::P3g20gb, GpuRef { host: 0, gpu: 0 }, 0);
+        place(&mut dc, 2, k2g, GpuRef { host: 0, gpu: 1 }, 0);
+        place(&mut dc, 3, k2g, GpuRef { host: 0, gpu: 2 }, 0);
+        let light: BTreeSet<GpuRef> = refs(3).into_iter().collect();
+        let events = consolidate(&mut dc, &light);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].model, GpuModel::A30);
+        // The A100 instance did not move.
+        assert_eq!(dc.locate(1).unwrap().gpu, GpuRef { host: 0, gpu: 0 });
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn mixed_3g_4g_merge_in_the_feasible_direction() {
+        // 4g@0 on GPU 0, 3g@0 on GPU 1: only the 3g can move (to start 4
+        // of GPU 0) — the 4g cannot start at 4.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P4g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
+        let light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let events = consolidate(&mut dc, &light);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].vm, 2);
+        assert_eq!(events[0].from, GpuRef { host: 0, gpu: 1 });
+        let loc = dc.locate(2).unwrap();
+        assert_eq!(loc.gpu, GpuRef { host: 0, gpu: 0 });
+        assert_eq!(loc.placement.start, 4);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn multi_instance_gpus_not_candidates() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        // Half-full but with two instances (2×2g) — not single-profile.
+        place(&mut dc, 1, Profile::P2g10gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P2g10gb, refs(2)[0], 2);
+        place(&mut dc, 3, Profile::P3g20gb, refs(2)[1], 0);
+        let light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        assert!(consolidate(&mut dc, &light).is_empty());
+    }
+
+    #[test]
+    fn cross_host_migration_checks_resources() {
+        // Target host has no CPU headroom → no migration that way.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 1), Host::new(1, 4, 8, 1)]);
+        place(&mut dc, 1, Profile::P3g20gb, GpuRef { host: 0, gpu: 0 }, 0);
+        // Fill host 1's CPU with its own VM.
+        place(&mut dc, 2, Profile::P3g20gb, GpuRef { host: 1, gpu: 0 }, 0);
+        // Migrating VM 1 → host 1 impossible (CPU), VM 2 → host 0 fine.
+        let light: BTreeSet<GpuRef> =
+            [GpuRef { host: 0, gpu: 0 }, GpuRef { host: 1, gpu: 0 }].into_iter().collect();
+        let events = consolidate(&mut dc, &light);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].from, GpuRef { host: 1, gpu: 0 });
+        assert_eq!(dc.locate(2).unwrap().gpu.host, 0);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn four_gpus_pair_into_two_merges() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 4)]);
+        for (i, r) in refs(4).into_iter().enumerate() {
+            place(&mut dc, i as u64 + 1, Profile::P3g20gb, r, 0);
+        }
+        let light: BTreeSet<GpuRef> = refs(4).into_iter().collect();
+        let events = consolidate(&mut dc, &light);
+        assert_eq!(events.len(), 2);
+        // Two GPUs full, two empty.
+        let empty = refs(4).iter().filter(|&&r| dc.gpu(r).is_empty()).count();
+        assert_eq!(empty, 2);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn period_gating_matches_the_grmu_clock() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P3g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
+        let mut planner = PairwiseConsolidate::every(24);
+        let scope: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        let mut plan = MigrationPlan::new();
+        // Hour 1 tick: 1 HOUR < 24 — not due yet.
+        planner.plan(
+            &dc,
+            &PlanCtx { now: HOUR, trigger: PlanTrigger::Tick, scope: PlanScope::Set(&scope) },
+            &mut plan,
+        );
+        assert!(plan.is_empty());
+        // Hour 24 tick: due.
+        planner.plan(
+            &dc,
+            &PlanCtx { now: 24 * HOUR, trigger: PlanTrigger::Tick, scope: PlanScope::Set(&scope) },
+            &mut plan,
+        );
+        assert_eq!(plan.num_moves(), 1);
+        // A Rejection trigger never consolidates.
+        let mut plan = MigrationPlan::new();
+        planner.plan(
+            &dc,
+            &PlanCtx {
+                now: 72 * HOUR,
+                trigger: PlanTrigger::Rejection,
+                scope: PlanScope::Set(&scope),
+            },
+            &mut plan,
+        );
+        assert!(plan.is_empty());
+    }
+}

@@ -1,0 +1,279 @@
+//! `FragGradient` — threshold-triggered fragmentation drain, new in this
+//! layer (not in the source paper).
+//!
+//! The online fragmentation-aware MIG schedulers (Zambianco et al.,
+//! Ting et al.) treat migration as a background mechanism that fires
+//! when *cluster-wide* fragmentation degrades, not only when a request
+//! already bounced. `FragGradient` brings that shape here: whenever the
+//! mean fragmentation of the occupied in-scope GPUs crosses a threshold,
+//! the most fragmented GPUs are drained — each of their instances is
+//! moved (inter-GPU) to the first less-fragmented GPU of the same model
+//! that accepts it under the default placement, descending the
+//! fragmentation gradient. Draining a badly shaped GPU both empties a
+//! device (it can idle or serve a whole-part request) and packs its
+//! fragments into existing holes elsewhere.
+//!
+//! Determinism: scope iteration is ascending `globalIndex`; sources are
+//! ordered by descending fragmentation with `GpuRef` tie-breaks;
+//! instances drain smallest-profile-first (then by start block); and the
+//! destination walk is a plain ascending first-fit. Planned moves are
+//! validated against a [`PlanView`] overlay so the emitted plan applies
+//! cleanly through the transactional `apply_plan`.
+
+use super::{MigrationPlan, MigrationPlanner, PlanCtx, PlanView};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::fragmentation::{fragmentation_cached, fragmentation_value};
+use crate::mig::placement::mock_assign;
+use crate::mig::{BlockMask, GpuModel, Instance};
+
+/// Threshold-triggered fragmentation drain.
+#[derive(Debug, Clone)]
+pub struct FragGradient {
+    /// Mean-fragmentation trigger over the occupied in-scope GPUs.
+    threshold: f64,
+    /// Max source GPUs drained per planning round.
+    max_gpus: usize,
+    /// Read fragmentation from the precomputed per-model table; `false`
+    /// recomputes per query (the brute-force reference — identical
+    /// values, see [`fragmentation_cached`]).
+    use_index: bool,
+}
+
+impl FragGradient {
+    /// Drain when mean fragmentation exceeds `threshold` (the crate
+    /// default used by the registry is 1.0 — roughly "one stranded
+    /// profile-slot per occupied GPU on average").
+    pub fn new(threshold: f64, use_index: bool) -> FragGradient {
+        FragGradient { threshold, max_gpus: 1, use_index }
+    }
+
+    /// Drain up to `n` source GPUs per round (default 1).
+    pub fn max_gpus(mut self, n: usize) -> FragGradient {
+        self.max_gpus = n.max(1);
+        self
+    }
+
+    fn frag(&self, model: GpuModel, occ: BlockMask) -> f64 {
+        if self.use_index {
+            fragmentation_cached(model, occ)
+        } else {
+            fragmentation_value(model, occ)
+        }
+    }
+}
+
+impl MigrationPlanner for FragGradient {
+    fn name(&self) -> &'static str {
+        "frag-gradient"
+    }
+
+    /// Fires on both triggers (rejections and ticks): the threshold gate
+    /// is the throttle, not the trigger kind.
+    fn plan(&mut self, dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan) {
+        // Score the scope: mean fragmentation over occupied GPUs.
+        let mut scored: Vec<(f64, GpuRef)> = Vec::new();
+        let mut total = 0.0;
+        let mut occupied = 0usize;
+        for r in ctx.scope.gpus(dc) {
+            let g = dc.gpu(r);
+            let occ = g.occupancy();
+            if occ == 0 {
+                continue;
+            }
+            let f = self.frag(g.model(), occ);
+            occupied += 1;
+            total += f;
+            if f > 0.0 {
+                scored.push((f, r));
+            }
+        }
+        if occupied == 0 || total / occupied as f64 <= self.threshold {
+            return;
+        }
+        // Most fragmented first; ties ascending globalIndex.
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        scored.truncate(self.max_gpus);
+        let sources = scored;
+
+        let mut view = PlanView::new(dc);
+        for &(src_frag, src) in &sources {
+            // Drain smallest instances first (they fit the most holes),
+            // then by start block for determinism.
+            let mut insts: Vec<Instance> = dc.gpu(src).instances().to_vec();
+            insts.sort_by_key(|i| (i.placement.profile.size(), i.placement.start));
+            for inst in insts {
+                let (cpus, ram) = dc.vm_demands(inst.vm).unwrap_or((0, 0));
+                let mut dest = None;
+                for r in ctx.scope.gpus(dc) {
+                    if r == src || sources.iter().any(|&(_, s)| s == r) {
+                        continue;
+                    }
+                    let g = dc.gpu(r);
+                    if g.model() != inst.placement.profile.model() {
+                        continue;
+                    }
+                    let occ = view.occupancy(r);
+                    // Descend the gradient: only strictly less fragmented
+                    // destinations receive instances, so a round can
+                    // never ping-pong fragments between equally bad GPUs.
+                    if self.frag(g.model(), occ) >= src_frag {
+                        continue;
+                    }
+                    if src.host != r.host && !view.host_fits(r.host, cpus, ram) {
+                        continue;
+                    }
+                    if let Some((pl, _)) = mock_assign(occ, inst.placement.profile) {
+                        dest = Some((r, pl));
+                        break;
+                    }
+                }
+                if let Some((to, pl)) = dest {
+                    view.note_move(src, inst.placement, to, pl, cpus, ram);
+                    plan.push_migrate(inst.vm, src, to, pl);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Host, VmSpec};
+    use crate::mig::{Placement, Profile};
+    use crate::migrate::{MigrationKind, PlanScope, PlanTrigger};
+
+    fn place(dc: &mut DataCenter, id: u64, profile: Profile, r: GpuRef, start: u8) {
+        let vm =
+            VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 10, weight: 1.0 };
+        dc.place(&vm, r, Placement { profile, start });
+    }
+
+    fn ctx(trigger: PlanTrigger) -> PlanCtx<'static> {
+        PlanCtx { now: 0, trigger, scope: PlanScope::Cluster }
+    }
+
+    /// Checkerboard GPU 0 (1g at 1, 3, 5) + nearly free GPU 1: the drain
+    /// moves the fragments off the worst GPU.
+    fn fragmented_pair() -> DataCenter {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        let g0 = GpuRef { host: 0, gpu: 0 };
+        place(&mut dc, 1, Profile::P1g5gb, g0, 1);
+        place(&mut dc, 2, Profile::P1g5gb, g0, 3);
+        place(&mut dc, 3, Profile::P1g5gb, g0, 5);
+        dc
+    }
+
+    #[test]
+    fn drains_the_most_fragmented_gpu_over_threshold() {
+        let mut dc = fragmented_pair();
+        let mut planner = FragGradient::new(0.5, true);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
+        assert!(!plan.is_empty(), "checkerboard must trip a 0.5 threshold");
+        dc.apply_plan(&plan).unwrap();
+        let mut events = Vec::new();
+        plan.push_events_into(&mut events);
+        // Everything moved off GPU 0, inter-kind, onto GPU 1.
+        assert_eq!(events.len(), 3);
+        let g0 = GpuRef { host: 0, gpu: 0 };
+        let g1 = GpuRef { host: 0, gpu: 1 };
+        for ev in &events {
+            assert_eq!(ev.kind, MigrationKind::Inter);
+            assert_eq!(ev.from, g0);
+            assert_eq!(ev.to, g1);
+        }
+        assert!(dc.gpu(g0).is_empty());
+        assert_eq!(dc.gpu(g1).instances().len(), 3);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn below_threshold_is_a_no_op() {
+        let dc = fragmented_pair();
+        let mut planner = FragGradient::new(1e9, true);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn fires_on_both_triggers() {
+        let dc = fragmented_pair();
+        for trigger in [PlanTrigger::Tick, PlanTrigger::Rejection] {
+            let mut planner = FragGradient::new(0.5, true);
+            let mut plan = MigrationPlan::new();
+            planner.plan(&dc, &ctx(trigger), &mut plan);
+            assert!(!plan.is_empty(), "{trigger:?}");
+        }
+    }
+
+    #[test]
+    fn never_moves_onto_an_equally_fragmented_gpu() {
+        // Two identical checkerboards: both are "most fragmented", and the
+        // gradient rule (strictly less fragmented destinations only)
+        // forbids shuffling between them when both are drained.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        for (gpu, base) in [(0u8, 0u64), (1u8, 10u64)] {
+            let r = GpuRef { host: 0, gpu };
+            place(&mut dc, base + 1, Profile::P1g5gb, r, 1);
+            place(&mut dc, base + 2, Profile::P1g5gb, r, 3);
+        }
+        let mut planner = FragGradient::new(0.1, true).max_gpus(2);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
+        assert!(plan.is_empty(), "no downhill destination exists: {plan:?}");
+    }
+
+    #[test]
+    fn respects_model_compatibility_and_host_resources() {
+        use crate::mig::GpuModel;
+        // Fragmented A30 on host 0; the only other A30 sits on a host
+        // with no CPU headroom → nothing can move. The roomy A100 on
+        // host 2 is model-incompatible.
+        let mut dc = DataCenter::new(vec![
+            Host::with_models(0, 256, 1024, &[GpuModel::A30]),
+            Host::with_models(1, 1, 1024, &[GpuModel::A30]),
+            Host::with_models(2, 256, 1024, &[GpuModel::A100_40]),
+        ]);
+        let k1g = GpuModel::A30.profile(0);
+        place(&mut dc, 1, k1g, GpuRef { host: 0, gpu: 0 }, 1);
+        let mut planner = FragGradient::new(0.0, true);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
+        assert!(plan.is_empty(), "{plan:?}");
+        // Give host 1 headroom and the drain goes through.
+        let mut dc2 = DataCenter::new(vec![
+            Host::with_models(0, 256, 1024, &[GpuModel::A30]),
+            Host::with_models(1, 64, 1024, &[GpuModel::A30]),
+        ]);
+        place(&mut dc2, 1, k1g, GpuRef { host: 0, gpu: 0 }, 1);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc2, &ctx(PlanTrigger::Tick), &mut plan);
+        assert_eq!(plan.num_moves(), 1);
+        dc2.apply_plan(&plan).unwrap();
+        assert_eq!(dc2.locate(1).unwrap().gpu.host, 1);
+        dc2.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn planned_drain_applies_cleanly_with_partial_destinations() {
+        // GPU 1 can absorb only one block (7 taken… build: 4g@0 + 2g@4 +
+        // free 6,7 → 1g fits at 6); GPU 2 absorbs the rest.
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 3)]);
+        let g0 = GpuRef { host: 0, gpu: 0 };
+        let g1 = GpuRef { host: 0, gpu: 1 };
+        place(&mut dc, 1, Profile::P1g5gb, g0, 1);
+        place(&mut dc, 2, Profile::P1g5gb, g0, 3);
+        place(&mut dc, 3, Profile::P1g5gb, g0, 5);
+        place(&mut dc, 10, Profile::P4g20gb, g1, 0);
+        place(&mut dc, 11, Profile::P2g10gb, g1, 4);
+        let mut planner = FragGradient::new(0.1, true);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
+        assert_eq!(plan.num_moves(), 3, "{plan:?}");
+        dc.apply_plan(&plan).unwrap();
+        assert!(dc.gpu(g0).is_empty());
+        dc.check_integrity().unwrap();
+    }
+}

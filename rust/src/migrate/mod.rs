@@ -1,0 +1,358 @@
+//! The policy-agnostic migration-planner layer.
+//!
+//! The paper's third objective — minimizing migration overhead (§4,
+//! Table 2's `IntraMigrate`/`InterMigrate` costs, the "~1% of MIG-enabled
+//! VMs migrated" headline of §8.3.3) — used to live as private helpers
+//! inside the GRMU policy, so no other policy could defragment or
+//! consolidate and migration cost was never first-class in results. This
+//! module extracts the mechanism behind a scheduler-independent contract,
+//! the way fragmentation-aware MIG schedulers treat migration as a
+//! mechanism any placement policy can drive:
+//!
+//! * A [`MigrationPlanner`] inspects the cluster (read-only) and produces
+//!   an explicit [`MigrationPlan`]: ordered [`PlanStep`]s — atomic
+//!   intra-GPU re-packs (Algorithm 4) and single inter-GPU moves
+//!   (Algorithm 5) — each carrying the exact destination placements.
+//! * [`DataCenter::apply_plan`](crate::cluster::DataCenter::apply_plan)
+//!   validates and applies a plan **transactionally**: every step is
+//!   checked against the live state and routed through
+//!   `repack_gpu`/`migrate` (so the `ClusterIndex` and activity counters
+//!   stay coherent), and an infeasible mid-plan step rolls the already
+//!   applied prefix back — all-or-nothing, verified by `check_integrity`.
+//! * Applied moves surface as [`MigrationEvent`]s with a block-weighted
+//!   [`MigrationEvent::cost`] (GI size in blocks × the
+//!   [`MigrationKind::weight`] cost ratio of Table 2), so results can
+//!   account migration overhead per kind and per model.
+//! * A [`PlannerStack`] composes planners with per-interval / per-VM
+//!   migration [`MigrationBudget`]s; planners run in stack order and each
+//!   plan is budget-truncated before it is applied.
+//!
+//! The shipped planners:
+//!
+//! * [`defrag::DefragOnReject`] — Algorithm 4: on a rejected batch,
+//!   re-pack the most fragmented in-scope GPU (intra-GPU moves only).
+//! * [`consolidate::PairwiseConsolidate`] — Algorithm 5: periodically
+//!   merge half-full single-profile GPU pairs (inter-GPU moves).
+//! * [`frag_gradient::FragGradient`] — new here: when the mean
+//!   fragmentation of occupied in-scope GPUs crosses a threshold, drain
+//!   the most fragmented GPUs onto less fragmented ones, à la the online
+//!   fragmentation-aware MIG schedulers.
+//!
+//! ## Scope and determinism
+//!
+//! Planners see the cluster through a [`PlanScope`]: either the whole
+//! fleet or an explicit GPU set (GRMU hands its light basket). Every
+//! scope iterates in ascending [`GpuRef`] — the paper's `globalIndex` —
+//! so plans are deterministic and byte-identical across runs; the same
+//! contract that makes indexed policy decisions identical to full scans.
+//! GRMU's default configuration routes through this layer and produces
+//! byte-identical Decision/MigrationEvent sequences to the pre-extraction
+//! inline implementation (locked by `rust/tests/decision_api.rs`).
+
+pub mod consolidate;
+pub mod defrag;
+pub mod frag_gradient;
+pub mod plan;
+pub mod stack;
+
+pub use consolidate::PairwiseConsolidate;
+pub use defrag::DefragOnReject;
+pub use frag_gradient::FragGradient;
+pub use plan::{MigrationPlan, PlanError, PlanStep, PlanView};
+pub use stack::PlannerStack;
+
+use crate::cluster::vm::{Time, VmId};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::GpuModel;
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Migration flavor (Table 2): intra-GPU relocation vs inter-GPU move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MigrationKind {
+    /// Defragmentation relocation within one GPU (Alg. 4, `ω_ijk` only).
+    Intra,
+    /// Move to a different GPU (Alg. 5 consolidation, FragGradient).
+    Inter,
+}
+
+impl MigrationKind {
+    /// Both kinds, in [`MigrationKind::index`] order.
+    pub const ALL: [MigrationKind; 2] = [MigrationKind::Intra, MigrationKind::Inter];
+
+    /// Dense index for per-kind accounting arrays.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            MigrationKind::Intra => 0,
+            MigrationKind::Inter => 1,
+        }
+    }
+
+    /// Stable name used in reports and JSON exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            MigrationKind::Intra => "intra",
+            MigrationKind::Inter => "inter",
+        }
+    }
+
+    /// Relative cost weight per moved block (Table 2): an inter-GPU move
+    /// copies instance state across devices (and possibly hosts), an
+    /// intra-GPU relocation stays on-part — the model charges inter
+    /// migration twice the per-block rate.
+    #[inline]
+    pub fn weight(self) -> u64 {
+        match self {
+            MigrationKind::Intra => 1,
+            MigrationKind::Inter => 2,
+        }
+    }
+}
+
+impl fmt::Display for MigrationKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One applied migration. For [`MigrationKind::Intra`] events
+/// `from == to` (the GI moved between blocks of the same GPU). Carries
+/// the moved GI's model and size so migration overhead can be accounted
+/// per kind and per model without re-resolving the (possibly departed)
+/// VM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MigrationEvent {
+    pub vm: VmId,
+    pub from: GpuRef,
+    pub to: GpuRef,
+    pub kind: MigrationKind,
+    /// Model of the GPU(s) involved (source and destination always
+    /// share it, Eq. 17–18).
+    pub model: GpuModel,
+    /// GI size in memory blocks — the block-weighted cost basis.
+    pub blocks: u8,
+}
+
+impl MigrationEvent {
+    /// Block-weighted migration cost (Eq. 24–25's overhead term):
+    /// blocks moved × the kind's per-block weight.
+    #[inline]
+    pub fn cost(&self) -> u64 {
+        self.blocks as u64 * self.kind.weight()
+    }
+}
+
+/// What fired a planning round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanTrigger {
+    /// The just-decided batch rejected at least one VM (Algorithm 4's
+    /// defragmentation trigger).
+    Rejection,
+    /// The periodic maintenance tick at the end of an interval
+    /// (Algorithm 5's consolidation clock).
+    Tick,
+}
+
+/// The GPUs a planner may touch. Iteration is always ascending
+/// [`GpuRef`] — the `globalIndex` determinism contract.
+#[derive(Clone, Copy)]
+pub enum PlanScope<'a> {
+    /// Every GPU in the cluster.
+    Cluster,
+    /// Only the listed GPUs (e.g. GRMU's light basket).
+    Set(&'a BTreeSet<GpuRef>),
+}
+
+impl<'a> PlanScope<'a> {
+    /// The in-scope GPUs, ascending `globalIndex`.
+    pub fn gpus<'d>(&self, dc: &'d DataCenter) -> ScopeIter<'a, 'd> {
+        match self {
+            PlanScope::Cluster => ScopeIter::Cluster { dc, host: 0, gpu: 0 },
+            PlanScope::Set(set) => ScopeIter::Set(set.iter()),
+        }
+    }
+}
+
+impl fmt::Debug for PlanScope<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanScope::Cluster => f.write_str("Cluster"),
+            PlanScope::Set(s) => write!(f, "Set({} GPUs)", s.len()),
+        }
+    }
+}
+
+/// Iterator behind [`PlanScope::gpus`]. The scope-set borrow (`'s`) and
+/// the data-center borrow (`'d`) are independent, so a long-lived scope
+/// can be walked against a short-lived cluster reference.
+pub enum ScopeIter<'s, 'd> {
+    Cluster { dc: &'d DataCenter, host: usize, gpu: usize },
+    Set(std::collections::btree_set::Iter<'s, GpuRef>),
+}
+
+impl Iterator for ScopeIter<'_, '_> {
+    type Item = GpuRef;
+
+    fn next(&mut self) -> Option<GpuRef> {
+        match self {
+            ScopeIter::Set(it) => it.next().copied(),
+            ScopeIter::Cluster { dc, host, gpu } => {
+                let hosts = dc.hosts();
+                while *host < hosts.len() {
+                    let h = &hosts[*host];
+                    if *gpu < h.gpus().len() {
+                        let r = GpuRef { host: h.id, gpu: *gpu as u8 };
+                        *gpu += 1;
+                        return Some(r);
+                    }
+                    *host += 1;
+                    *gpu = 0;
+                }
+                None
+            }
+        }
+    }
+}
+
+/// Per-round planning context handed to every planner.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanCtx<'a> {
+    /// Virtual time of the round (end of the current interval).
+    pub now: Time,
+    /// What fired the round.
+    pub trigger: PlanTrigger,
+    /// The GPUs the planner may touch.
+    pub scope: PlanScope<'a>,
+}
+
+/// A migration planner: inspects the cluster read-only and appends
+/// [`PlanStep`]s to the round's [`MigrationPlan`]. Planners must only
+/// propose moves that are feasible against the state they were shown
+/// plus their own earlier steps (track virtual state with a
+/// [`PlanView`]); the transactional
+/// [`apply_plan`](crate::cluster::DataCenter::apply_plan) rolls back any
+/// plan that turns out infeasible. `Send` so planner stacks can ride
+/// inside policies on the coordinator's service thread.
+pub trait MigrationPlanner: Send {
+    /// Short name used in registry suffixes and reports ("defrag", ...).
+    fn name(&self) -> &'static str;
+
+    /// Append this round's proposed steps to `plan`. A planner that does
+    /// not respond to `ctx.trigger` (or whose own gating — period,
+    /// threshold — says "not now") appends nothing.
+    fn plan(&mut self, dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan);
+}
+
+/// Migration budgets bounding how much a [`PlannerStack`] may move:
+/// moves per interval (across all planners in the stack) and lifetime
+/// moves per VM. The default is unlimited on both axes — the paper's
+/// GRMU configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationBudget {
+    /// Max moves per interval across the stack (`u32::MAX` = unlimited).
+    pub max_moves_per_interval: u32,
+    /// Max times any one VM may be moved over a run (`u32::MAX` =
+    /// unlimited).
+    pub max_moves_per_vm: u32,
+}
+
+impl Default for MigrationBudget {
+    fn default() -> Self {
+        MigrationBudget::unlimited()
+    }
+}
+
+impl MigrationBudget {
+    /// No limits (the default).
+    pub const fn unlimited() -> MigrationBudget {
+        MigrationBudget { max_moves_per_interval: u32::MAX, max_moves_per_vm: u32::MAX }
+    }
+
+    #[inline]
+    pub fn is_unlimited(&self) -> bool {
+        self.max_moves_per_interval == u32::MAX && self.max_moves_per_vm == u32::MAX
+    }
+
+    pub fn per_interval(mut self, n: u32) -> MigrationBudget {
+        self.max_moves_per_interval = n;
+        self
+    }
+
+    pub fn per_vm(mut self, n: u32) -> MigrationBudget {
+        self.max_moves_per_vm = n;
+        self
+    }
+
+    /// Parse the CLI syntax: `"8"` (moves per interval) or `"8:2"`
+    /// (moves per interval : lifetime moves per VM).
+    pub fn parse(s: &str) -> Result<MigrationBudget, String> {
+        let mut budget = MigrationBudget::unlimited();
+        let mut parts = s.split(':');
+        let interval = parts.next().unwrap_or("");
+        budget.max_moves_per_interval = interval
+            .trim()
+            .parse()
+            .map_err(|e| format!("bad per-interval budget {interval:?}: {e}"))?;
+        if let Some(per_vm) = parts.next() {
+            budget.max_moves_per_vm = per_vm
+                .trim()
+                .parse()
+                .map_err(|e| format!("bad per-VM budget {per_vm:?}: {e}"))?;
+        }
+        if parts.next().is_some() {
+            return Err(format!("budget {s:?} has too many ':' fields (want N or N:M)"));
+        }
+        Ok(budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+
+    #[test]
+    fn kind_indices_and_weights() {
+        for (i, k) in MigrationKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        assert_eq!(MigrationKind::Intra.weight(), 1);
+        assert_eq!(MigrationKind::Inter.weight(), 2);
+        let ev = MigrationEvent {
+            vm: 1,
+            from: GpuRef { host: 0, gpu: 0 },
+            to: GpuRef { host: 0, gpu: 1 },
+            kind: MigrationKind::Inter,
+            model: GpuModel::A100_40,
+            blocks: 4,
+        };
+        assert_eq!(ev.cost(), 8);
+    }
+
+    #[test]
+    fn cluster_scope_iterates_global_index_order() {
+        let dc = DataCenter::new(vec![Host::new(0, 8, 8, 2), Host::new(1, 8, 8, 1)]);
+        let walked: Vec<GpuRef> = PlanScope::Cluster.gpus(&dc).collect();
+        assert_eq!(walked, dc.gpu_refs());
+        let set: BTreeSet<GpuRef> = dc.gpu_refs().into_iter().collect();
+        let from_set: Vec<GpuRef> = PlanScope::Set(&set).gpus(&dc).collect();
+        assert_eq!(from_set, walked);
+    }
+
+    #[test]
+    fn budget_parse_forms() {
+        assert_eq!(
+            MigrationBudget::parse("8").unwrap(),
+            MigrationBudget::unlimited().per_interval(8)
+        );
+        assert_eq!(
+            MigrationBudget::parse("8:2").unwrap(),
+            MigrationBudget::unlimited().per_interval(8).per_vm(2)
+        );
+        assert!(MigrationBudget::parse("x").is_err());
+        assert!(MigrationBudget::parse("1:2:3").is_err());
+        assert!(MigrationBudget::unlimited().is_unlimited());
+        assert!(!MigrationBudget::unlimited().per_vm(1).is_unlimited());
+    }
+}

@@ -1,0 +1,705 @@
+//! Explicit migration plans and their transactional application.
+//!
+//! A [`MigrationPlan`] is an ordered list of [`PlanStep`]s. Two step
+//! shapes cover both of the paper's migration flavors:
+//!
+//! * [`PlanStep::Repack`] — an *atomic* intra-GPU re-pack: every listed
+//!   instance moves to its new placement simultaneously (instances may
+//!   swap blocks, so sequential application could transiently overlap;
+//!   the step routes through
+//!   [`DataCenter::repack_gpu`](crate::cluster::DataCenter::repack_gpu),
+//!   which removes all movers before re-placing them).
+//! * [`PlanStep::Migrate`] — one inter-GPU move, routed through
+//!   [`DataCenter::migrate`](crate::cluster::DataCenter::migrate) so host
+//!   CPU/RAM travel with the VM.
+//!
+//! [`DataCenter::apply_plan`] is the only way a plan touches the
+//! cluster: each step is validated against the live state immediately
+//! before it is applied, and if any step turns out infeasible the
+//! already-applied prefix is rolled back in reverse order — the call is
+//! all-or-nothing. Because both step shapes route through the existing
+//! checked mutators, the `ClusterIndex` and activity counters stay
+//! coherent throughout (including across a rollback), which
+//! `check_integrity` verifies in the property tests below.
+
+use super::{MigrationBudget, MigrationEvent, MigrationKind};
+use crate::cluster::vm::VmId;
+use crate::cluster::{DataCenter, GpuRef};
+use crate::mig::{BlockMask, Instance, Placement};
+use std::collections::HashMap;
+use std::fmt;
+
+/// One step of a [`MigrationPlan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanStep {
+    /// Atomic intra-GPU re-pack (Algorithm 4): every listed instance
+    /// moves from its current placement to the paired new one.
+    Repack { gpu: GpuRef, moves: Vec<(Instance, Placement)> },
+    /// One inter-GPU migration (Algorithm 5 / FragGradient).
+    Migrate { vm: VmId, from: GpuRef, to: GpuRef, placement: Placement },
+}
+
+impl PlanStep {
+    /// Individual VM moves in this step (the budget unit).
+    pub fn num_moves(&self) -> usize {
+        match self {
+            PlanStep::Repack { moves, .. } => moves.len(),
+            PlanStep::Migrate { .. } => 1,
+        }
+    }
+
+    fn for_each_vm(&self, mut f: impl FnMut(VmId)) {
+        match self {
+            PlanStep::Repack { moves, .. } => {
+                for (inst, _) in moves {
+                    f(inst.vm);
+                }
+            }
+            PlanStep::Migrate { vm, .. } => f(*vm),
+        }
+    }
+
+    fn push_events_into(&self, out: &mut Vec<MigrationEvent>) {
+        match self {
+            PlanStep::Repack { gpu, moves } => {
+                for (inst, _) in moves {
+                    out.push(MigrationEvent {
+                        vm: inst.vm,
+                        from: *gpu,
+                        to: *gpu,
+                        kind: MigrationKind::Intra,
+                        model: inst.placement.profile.model(),
+                        blocks: inst.placement.profile.size(),
+                    });
+                }
+            }
+            PlanStep::Migrate { vm, from, to, placement } => out.push(MigrationEvent {
+                vm: *vm,
+                from: *from,
+                to: *to,
+                kind: MigrationKind::Inter,
+                model: placement.profile.model(),
+                blocks: placement.profile.size(),
+            }),
+        }
+    }
+}
+
+/// An ordered, explicit migration plan. Built by
+/// [`MigrationPlanner`](super::MigrationPlanner)s, budget-truncated by
+/// the [`PlannerStack`](super::PlannerStack), applied atomically by
+/// [`DataCenter::apply_plan`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MigrationPlan {
+    steps: Vec<PlanStep>,
+}
+
+impl MigrationPlan {
+    pub fn new() -> MigrationPlan {
+        MigrationPlan::default()
+    }
+
+    /// Drop all steps (the stack reuses one plan across rounds).
+    pub fn clear(&mut self) {
+        self.steps.clear();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+
+    /// Total individual VM moves across all steps (the budget unit).
+    pub fn num_moves(&self) -> usize {
+        self.steps.iter().map(|s| s.num_moves()).sum()
+    }
+
+    /// Block-weighted cost of the whole plan (sum of
+    /// [`MigrationEvent::cost`] over the moves it would perform).
+    pub fn cost(&self) -> u64 {
+        let mut events = Vec::with_capacity(self.num_moves());
+        self.push_events_into(&mut events);
+        events.iter().map(|e| e.cost()).sum()
+    }
+
+    /// Append an atomic re-pack step; empty move lists are dropped.
+    pub fn push_repack(&mut self, gpu: GpuRef, moves: Vec<(Instance, Placement)>) {
+        if !moves.is_empty() {
+            self.steps.push(PlanStep::Repack { gpu, moves });
+        }
+    }
+
+    /// Append one inter-GPU move.
+    pub fn push_migrate(&mut self, vm: VmId, from: GpuRef, to: GpuRef, placement: Placement) {
+        self.steps.push(PlanStep::Migrate { vm, from, to, placement });
+    }
+
+    /// The [`MigrationEvent`]s this plan performs when applied, in order.
+    pub fn push_events_into(&self, out: &mut Vec<MigrationEvent>) {
+        for step in &self.steps {
+            step.push_events_into(out);
+        }
+    }
+
+    /// Keep the longest step prefix that fits both budget axes given
+    /// `interval_moves` already spent this interval and the lifetime
+    /// per-VM move counts in `vm_moves`. Truncation is prefix-only
+    /// (steps stay whole and ordered), so budgeted plans remain
+    /// deterministic.
+    pub(crate) fn truncate_to_budget(
+        &mut self,
+        budget: &MigrationBudget,
+        interval_moves: u32,
+        vm_moves: &HashMap<VmId, u32>,
+    ) {
+        if budget.is_unlimited() {
+            return;
+        }
+        let mut used = interval_moves;
+        let mut local: HashMap<VmId, u32> = HashMap::new();
+        let mut keep = 0usize;
+        for step in &self.steps {
+            let n = step.num_moves() as u32;
+            if used.saturating_add(n) > budget.max_moves_per_interval {
+                break;
+            }
+            let mut over_vm_budget = false;
+            step.for_each_vm(|vm| {
+                let lifetime =
+                    vm_moves.get(&vm).copied().unwrap_or(0) + local.get(&vm).copied().unwrap_or(0);
+                if lifetime + 1 > budget.max_moves_per_vm {
+                    over_vm_budget = true;
+                }
+            });
+            if over_vm_budget {
+                break;
+            }
+            step.for_each_vm(|vm| *local.entry(vm).or_insert(0) += 1);
+            used += n;
+            keep += 1;
+        }
+        self.steps.truncate(keep);
+    }
+}
+
+/// Why [`DataCenter::apply_plan`] refused a plan. The cluster is exactly
+/// as it was before the call (the applied prefix was rolled back).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanError {
+    /// Index of the infeasible step.
+    pub step: usize,
+    /// Human-readable cause.
+    pub reason: String,
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "migration plan step {} infeasible: {}", self.step, self.reason)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Undo record for one applied step (rollback runs these in reverse).
+enum Undo {
+    Repack { gpu: GpuRef, moves: Vec<(Instance, Placement)> },
+    Migrate { vm: VmId, back_to: GpuRef, placement: Placement },
+}
+
+impl DataCenter {
+    /// Validate and apply a [`MigrationPlan`] **atomically**. Steps are
+    /// applied in order through the checked mutators
+    /// ([`DataCenter::repack_gpu`], [`DataCenter::migrate`]), so the
+    /// `ClusterIndex` and activity counters stay coherent. If any step
+    /// is infeasible against the then-current state, every already
+    /// applied step is rolled back in reverse order and the error names
+    /// the offending step — the cluster is left exactly as before the
+    /// call (all-or-nothing).
+    pub fn apply_plan(&mut self, plan: &MigrationPlan) -> Result<(), PlanError> {
+        let mut undo: Vec<Undo> = Vec::with_capacity(plan.steps().len());
+        for (i, step) in plan.steps().iter().enumerate() {
+            let applied = match step {
+                PlanStep::Repack { gpu, moves } => self
+                    .try_repack_step(*gpu, moves)
+                    .map(|inverse| Undo::Repack { gpu: *gpu, moves: inverse }),
+                PlanStep::Migrate { vm, from, to, placement } => self
+                    .try_migrate_step(*vm, *from, *to, *placement)
+                    .map(|(back_to, old)| Undo::Migrate { vm: *vm, back_to, placement: old }),
+            };
+            match applied {
+                Ok(u) => undo.push(u),
+                Err(reason) => {
+                    // Roll back in reverse: each undo returns the cluster
+                    // to the exact pre-step state, so every inverse
+                    // operation is feasible by construction.
+                    for u in undo.into_iter().rev() {
+                        match u {
+                            Undo::Repack { gpu, moves } => self.repack_gpu(gpu, &moves),
+                            Undo::Migrate { vm, back_to, placement } => {
+                                self.migrate(vm, back_to, placement)
+                            }
+                        }
+                    }
+                    return Err(PlanError { step: i, reason });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate + apply one re-pack step; returns the inverse move list.
+    fn try_repack_step(
+        &mut self,
+        gpu_ref: GpuRef,
+        moves: &[(Instance, Placement)],
+    ) -> Result<Vec<(Instance, Placement)>, String> {
+        if gpu_ref.host as usize >= self.hosts().len()
+            || gpu_ref.gpu as usize >= self.host(gpu_ref.host).gpus().len()
+        {
+            return Err(format!("no such GPU {gpu_ref:?}"));
+        }
+        let gpu = self.gpu(gpu_ref);
+        let mut freed: BlockMask = 0;
+        for (k, (inst, new_pl)) in moves.iter().enumerate() {
+            if moves[..k].iter().any(|(other, _)| other.vm == inst.vm) {
+                return Err(format!("VM {} moved twice in one re-pack", inst.vm));
+            }
+            match gpu.find_vm(inst.vm) {
+                Some(live) if live == *inst => {}
+                Some(_) => return Err(format!("VM {} placement stale in plan", inst.vm)),
+                None => return Err(format!("VM {} not on {gpu_ref:?}", inst.vm)),
+            }
+            if new_pl.profile != inst.placement.profile {
+                return Err(format!("VM {} re-pack changes its profile", inst.vm));
+            }
+            if !new_pl.profile.start_blocks().contains(&new_pl.start) {
+                return Err(format!("illegal start block {} for {}", new_pl.start, new_pl.profile));
+            }
+            freed |= inst.placement.mask();
+        }
+        // The movers' old blocks free up simultaneously; the new
+        // placements must tile into the remainder without overlap.
+        let mut occ = gpu.occupancy() & !freed;
+        for (_, new_pl) in moves {
+            if occ & new_pl.mask() != 0 {
+                return Err(format!("re-pack placement {new_pl} overlaps on {gpu_ref:?}"));
+            }
+            occ |= new_pl.mask();
+        }
+        let inverse = moves
+            .iter()
+            .map(|(inst, new_pl)| (Instance { vm: inst.vm, placement: *new_pl }, inst.placement))
+            .collect();
+        self.repack_gpu(gpu_ref, moves);
+        Ok(inverse)
+    }
+
+    /// Validate + apply one inter-GPU move; returns `(source GPU, old
+    /// placement)` for rollback.
+    fn try_migrate_step(
+        &mut self,
+        vm: VmId,
+        from: GpuRef,
+        to: GpuRef,
+        placement: Placement,
+    ) -> Result<(GpuRef, Placement), String> {
+        let loc = self.locate(vm).ok_or_else(|| format!("VM {vm} not resident"))?;
+        if loc.gpu != from {
+            return Err(format!("VM {vm} is on {:?}, not {from:?}", loc.gpu));
+        }
+        if from == to {
+            return Err(format!("VM {vm}: inter-GPU move with identical source/destination"));
+        }
+        if to.host as usize >= self.hosts().len()
+            || to.gpu as usize >= self.host(to.host).gpus().len()
+        {
+            return Err(format!("no such GPU {to:?}"));
+        }
+        if placement.profile != loc.placement.profile {
+            return Err(format!("VM {vm} migration changes its profile"));
+        }
+        let dst = self.gpu(to);
+        if dst.model() != placement.profile.model() {
+            return Err(format!("destination {to:?} is a {} part", dst.model()));
+        }
+        if !placement.profile.start_blocks().contains(&placement.start) {
+            return Err(format!("illegal start block {} for {}", placement.start, placement.profile));
+        }
+        if dst.occupancy() & placement.mask() != 0 {
+            return Err(format!("destination blocks occupied on {to:?}"));
+        }
+        if from.host != to.host {
+            let (cpus, ram) = self.vm_demands(vm).unwrap_or((0, 0));
+            if !self.host(to.host).fits_resources(cpus, ram) {
+                return Err(format!("host {} lacks CPU/RAM for VM {vm}", to.host));
+            }
+        }
+        self.migrate(vm, to, placement);
+        Ok((from, loc.placement))
+    }
+}
+
+/// A planner's virtual view of host headroom and GPU occupancy on top of
+/// an immutable [`DataCenter`]: planners validate multi-move plans
+/// against it without touching the cluster, then record each planned
+/// move so later moves in the same plan see the intermediate state —
+/// exactly the state [`DataCenter::apply_plan`] will walk through.
+///
+/// One VM may be moved at most once per plan (all shipped planners
+/// satisfy this; `apply_plan` re-validates regardless).
+pub struct PlanView<'a> {
+    dc: &'a DataCenter,
+    /// Overridden occupancy of touched GPUs (absolute masks).
+    occ: HashMap<GpuRef, BlockMask>,
+    /// Free CPU/RAM deltas of touched hosts.
+    host_delta: HashMap<u32, (i64, i64)>,
+}
+
+impl<'a> PlanView<'a> {
+    pub fn new(dc: &'a DataCenter) -> PlanView<'a> {
+        PlanView { dc, occ: HashMap::new(), host_delta: HashMap::new() }
+    }
+
+    /// Occupancy of `r` after the moves recorded so far.
+    pub fn occupancy(&self, r: GpuRef) -> BlockMask {
+        self.occ.get(&r).copied().unwrap_or_else(|| self.dc.gpu(r).occupancy())
+    }
+
+    /// Would `host` still fit a `cpus`/`ram_gb` reservation after the
+    /// moves recorded so far?
+    pub fn host_fits(&self, host: u32, cpus: u32, ram_gb: u32) -> bool {
+        let h = self.dc.host(host);
+        let (dc_cpu, dc_ram) = self.host_delta.get(&host).copied().unwrap_or((0, 0));
+        h.free_cpus() as i64 + dc_cpu >= cpus as i64 && h.free_ram() as i64 + dc_ram >= ram_gb as i64
+    }
+
+    /// Record a planned move of a `cpus`/`ram_gb` VM from `(from, old)`
+    /// to `(to, new)`; subsequent queries see the post-move state.
+    pub fn note_move(
+        &mut self,
+        from: GpuRef,
+        old: Placement,
+        to: GpuRef,
+        new: Placement,
+        cpus: u32,
+        ram_gb: u32,
+    ) {
+        let from_occ = self.occupancy(from) & !old.mask();
+        self.occ.insert(from, from_occ);
+        let to_occ = self.occupancy(to) | new.mask();
+        self.occ.insert(to, to_occ);
+        if from.host != to.host {
+            let e = self.host_delta.entry(from.host).or_insert((0, 0));
+            e.0 += cpus as i64;
+            e.1 += ram_gb as i64;
+            let e = self.host_delta.entry(to.host).or_insert((0, 0));
+            e.0 -= cpus as i64;
+            e.1 -= ram_gb as i64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Host, VmSpec};
+    use crate::mig::placement::mock_assign;
+    use crate::mig::{GpuModel, Profile, ALL_MODELS};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn spec(id: VmId, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 4, ram_gb: 8, arrival: 0, departure: 1_000, weight: 1.0 }
+    }
+
+    fn place(dc: &mut DataCenter, id: VmId, profile: Profile, r: GpuRef, start: u8) {
+        dc.place(&spec(id, profile), r, Placement { profile, start });
+    }
+
+    /// Structural fingerprint of the cluster for before/after comparison:
+    /// every GPU's occupancy + sorted instances, every host's free
+    /// CPU/RAM.
+    type HostPrint = (u32, u32, Vec<(BlockMask, Vec<Instance>)>);
+
+    fn fingerprint(dc: &DataCenter) -> Vec<HostPrint> {
+        dc.hosts()
+            .iter()
+            .map(|h| {
+                let gpus = h
+                    .gpus()
+                    .iter()
+                    .map(|g| {
+                        let mut insts = g.instances().to_vec();
+                        insts.sort_by_key(|i| i.vm);
+                        (g.occupancy(), insts)
+                    })
+                    .collect();
+                (h.free_cpus(), h.free_ram(), gpus)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn applies_a_repack_and_a_migrate() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let (g0, g1) = (GpuRef { host: 0, gpu: 0 }, GpuRef { host: 0, gpu: 1 });
+        place(&mut dc, 1, Profile::P1g5gb, g0, 4);
+        place(&mut dc, 2, Profile::P3g20gb, g1, 0);
+        let inst = dc.gpu(g0).find_vm(1).unwrap();
+        let mut plan = MigrationPlan::new();
+        plan.push_repack(g0, vec![(inst, Placement { profile: Profile::P1g5gb, start: 6 })]);
+        plan.push_migrate(2, g1, g0, Placement { profile: Profile::P3g20gb, start: 0 });
+        assert_eq!(plan.num_moves(), 2);
+        // 1 block intra (×1) + 4 blocks inter (×2).
+        assert_eq!(plan.cost(), 1 + 8);
+        dc.apply_plan(&plan).unwrap();
+        assert_eq!(dc.locate(1).unwrap().placement.start, 6);
+        assert_eq!(dc.locate(2).unwrap().gpu, g0);
+        assert!(dc.gpu(g1).is_empty());
+        let mut events = Vec::new();
+        plan.push_events_into(&mut events);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, MigrationKind::Intra);
+        assert_eq!(events[1].kind, MigrationKind::Inter);
+        assert_eq!(events[1].blocks, 4);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn infeasible_mid_plan_step_rolls_back_everything() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let (g0, g1) = (GpuRef { host: 0, gpu: 0 }, GpuRef { host: 0, gpu: 1 });
+        place(&mut dc, 1, Profile::P1g5gb, g0, 4);
+        place(&mut dc, 2, Profile::P3g20gb, g1, 0);
+        let before = fingerprint(&dc);
+        let inst = dc.gpu(g0).find_vm(1).unwrap();
+        let mut plan = MigrationPlan::new();
+        // Step 0 is fine; step 1 targets occupied blocks on g1.
+        plan.push_repack(g0, vec![(inst, Placement { profile: Profile::P1g5gb, start: 6 })]);
+        plan.push_migrate(1, g0, g1, Placement { profile: Profile::P1g5gb, start: 0 });
+        let err = dc.apply_plan(&plan).unwrap_err();
+        assert_eq!(err.step, 1);
+        assert_eq!(fingerprint(&dc), before, "rollback must restore the exact state");
+        dc.check_integrity().unwrap();
+        // The stale-placement path: the repack above was rolled back, so a
+        // plan recorded against the *applied* state is now stale.
+        let stale = Instance { vm: 1, placement: Placement { profile: Profile::P1g5gb, start: 6 } };
+        let mut plan = MigrationPlan::new();
+        plan.push_repack(g0, vec![(stale, Placement { profile: Profile::P1g5gb, start: 5 })]);
+        assert!(dc.apply_plan(&plan).is_err());
+        assert_eq!(fingerprint(&dc), before);
+    }
+
+    #[test]
+    fn cross_host_rollback_restores_resources() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1), Host::new(1, 64, 256, 1)]);
+        let (g0, g1) = (GpuRef { host: 0, gpu: 0 }, GpuRef { host: 1, gpu: 0 });
+        place(&mut dc, 1, Profile::P3g20gb, g0, 0);
+        let before = fingerprint(&dc);
+        let mut plan = MigrationPlan::new();
+        plan.push_migrate(1, g0, g1, Placement { profile: Profile::P3g20gb, start: 0 });
+        // Second step is nonsense: VM 99 does not exist.
+        plan.push_migrate(99, g0, g1, Placement { profile: Profile::P3g20gb, start: 4 });
+        let err = dc.apply_plan(&plan).unwrap_err();
+        assert_eq!(err.step, 1);
+        assert_eq!(fingerprint(&dc), before);
+        assert_eq!(dc.host(0).free_cpus(), 60);
+        assert_eq!(dc.host(1).free_cpus(), 64);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn rejects_model_and_profile_changes() {
+        let mut dc = DataCenter::new(vec![Host::with_models(
+            0,
+            64,
+            256,
+            &[GpuModel::A100_40, GpuModel::A30],
+        )]);
+        let (g0, g1) = (GpuRef { host: 0, gpu: 0 }, GpuRef { host: 0, gpu: 1 });
+        place(&mut dc, 1, Profile::P1g5gb, g0, 6);
+        // Cross-model migration is never legal (Eq. 17–18).
+        let mut plan = MigrationPlan::new();
+        plan.push_migrate(1, g0, g1, Placement { profile: Profile::P1g5gb, start: 0 });
+        assert!(dc.apply_plan(&plan).is_err());
+        // Profile swaps are not migrations.
+        let inst = dc.gpu(g0).find_vm(1).unwrap();
+        let mut plan = MigrationPlan::new();
+        plan.push_repack(g0, vec![(inst, Placement { profile: Profile::P2g10gb, start: 0 })]);
+        assert!(dc.apply_plan(&plan).is_err());
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn budget_truncation_keeps_step_prefix() {
+        let g0 = GpuRef { host: 0, gpu: 0 };
+        let g1 = GpuRef { host: 0, gpu: 1 };
+        let pl = |start| Placement { profile: Profile::P1g5gb, start };
+        let mut plan = MigrationPlan::new();
+        plan.push_migrate(1, g0, g1, pl(0));
+        plan.push_migrate(2, g0, g1, pl(1));
+        plan.push_migrate(1, g1, g0, pl(4));
+        // Interval budget of 2 keeps the first two steps.
+        let mut p = plan.clone();
+        p.truncate_to_budget(&MigrationBudget::unlimited().per_interval(2), 0, &HashMap::new());
+        assert_eq!(p.num_moves(), 2);
+        // ... minus what the interval already spent.
+        let mut p = plan.clone();
+        p.truncate_to_budget(&MigrationBudget::unlimited().per_interval(2), 1, &HashMap::new());
+        assert_eq!(p.num_moves(), 1);
+        // Per-VM budget of 1: the third step moves VM 1 again — dropped.
+        let mut p = plan.clone();
+        p.truncate_to_budget(&MigrationBudget::unlimited().per_vm(1), 0, &HashMap::new());
+        assert_eq!(p.num_moves(), 2);
+        // Lifetime counts from earlier intervals count too.
+        let mut moved = HashMap::new();
+        moved.insert(1u64, 1u32);
+        let mut p = plan.clone();
+        p.truncate_to_budget(&MigrationBudget::unlimited().per_vm(1), 0, &moved);
+        assert_eq!(p.num_moves(), 0);
+        // Unlimited is a no-op.
+        let mut p = plan.clone();
+        p.truncate_to_budget(&MigrationBudget::unlimited(), 1_000, &moved);
+        assert_eq!(p.num_moves(), 3);
+    }
+
+    /// Acceptance criterion: `apply_plan` is atomic — a plan with an
+    /// infeasible step (at a random position, after a random feasible
+    /// prefix, on random single- or mixed-model clusters) leaves the
+    /// cluster, `ClusterIndex` and activity counters exactly unchanged
+    /// per `check_integrity` and a full structural fingerprint.
+    #[test]
+    fn prop_infeasible_plans_leave_cluster_unchanged() {
+        forall(
+            "apply-plan-rollback",
+            |r: &mut Rng| {
+                let hosts: Vec<Host> = (0..2 + r.below(3))
+                    .map(|i| {
+                        let models: Vec<GpuModel> = (0..1 + r.below(3))
+                            .map(|_| ALL_MODELS[r.below(ALL_MODELS.len() as u64) as usize])
+                            .collect();
+                        Host::with_models(i as u32, 24, 96, &models)
+                    })
+                    .collect();
+                let mut dc = DataCenter::new(hosts);
+                let refs = dc.gpu_refs();
+                let mut next_vm: u64 = 1;
+                for _ in 0..24 {
+                    let gr = refs[r.below(refs.len() as u64) as usize];
+                    let model = dc.gpu(gr).model();
+                    let profile = model.profile(r.below(model.num_profiles() as u64) as usize);
+                    let vm = spec(next_vm, profile);
+                    if dc.host(gr.host).fits_resources(vm.cpus, vm.ram_gb) {
+                        if let Some((pl, _)) = mock_assign(dc.gpu(gr).occupancy(), profile) {
+                            dc.place(&vm, gr, pl);
+                            next_vm += 1;
+                        }
+                    }
+                }
+                // A feasible prefix: up to two real inter-GPU moves,
+                // planned against a PlanView overlay.
+                let mut plan = MigrationPlan::new();
+                let mut view = PlanView::new(&dc);
+                let mut moved: Vec<u64> = Vec::new();
+                for _ in 0..r.below(3) {
+                    let candidates: Vec<(u64, GpuRef, Placement)> = dc
+                        .hosts()
+                        .iter()
+                        .flat_map(|h| h.gpus().iter().enumerate().map(move |(g, gpu)| {
+                            (GpuRef { host: h.id, gpu: g as u8 }, gpu)
+                        }))
+                        .flat_map(|(gr, gpu)| {
+                            gpu.instances().iter().map(move |i| (i.vm, gr, i.placement))
+                        })
+                        .filter(|(vm, _, _)| !moved.contains(vm))
+                        .collect();
+                    if candidates.is_empty() {
+                        break;
+                    }
+                    let (vm, from, old) =
+                        candidates[r.below(candidates.len() as u64) as usize];
+                    let (cpus, ram) = dc.vm_demands(vm).unwrap();
+                    let dest = refs.iter().copied().find(|&to| {
+                        to != from
+                            && dc.gpu(to).model() == old.profile.model()
+                            && (to.host == from.host || view.host_fits(to.host, cpus, ram))
+                            && mock_assign(view.occupancy(to), old.profile).is_some()
+                    });
+                    if let Some(to) = dest {
+                        let (pl, _) = mock_assign(view.occupancy(to), old.profile).unwrap();
+                        view.note_move(from, old, to, pl, cpus, ram);
+                        plan.push_migrate(vm, from, to, pl);
+                        moved.push(vm);
+                    }
+                }
+                // Poison the tail with one of several infeasible shapes.
+                let poison = r.below(3);
+                (dc, plan, poison)
+            },
+            |(dc, plan, poison)| {
+                let mut dc = dc.clone();
+                let mut plan = plan.clone();
+                let g0 = dc.gpu_refs()[0];
+                match *poison {
+                    // A VM that does not exist.
+                    0 => plan.push_migrate(9_999, g0, g0, Placement {
+                        profile: dc.gpu(g0).model().profile(0),
+                        start: dc.gpu(g0).model().profile(0).start_blocks()[0],
+                    }),
+                    // A stale repack (instance not on the GPU).
+                    1 => {
+                        let k = dc.gpu(g0).model().profile(0);
+                        let fake = Instance {
+                            vm: 9_999,
+                            placement: Placement { profile: k, start: k.start_blocks()[0] },
+                        };
+                        plan.push_repack(g0, vec![(
+                            fake,
+                            Placement { profile: k, start: k.start_blocks()[0] },
+                        )]);
+                    }
+                    // An out-of-range destination GPU.
+                    _ => {
+                        let resident: Option<(u64, GpuRef)> = dc
+                            .hosts()
+                            .iter()
+                            .flat_map(|h| {
+                                h.gpus().iter().enumerate().flat_map(move |(g, gpu)| {
+                                    gpu.instances()
+                                        .iter()
+                                        .map(move |i| (i.vm, GpuRef { host: h.id, gpu: g as u8 }))
+                                })
+                            })
+                            .next();
+                        match resident {
+                            Some((vm, from)) => {
+                                let k = dc.locate(vm).unwrap().placement.profile;
+                                plan.push_migrate(vm, from, GpuRef { host: 999, gpu: 0 }, Placement {
+                                    profile: k,
+                                    start: k.start_blocks()[0],
+                                });
+                            }
+                            // Empty cluster case: poison with a ghost VM.
+                            None => plan.push_migrate(9_999, g0, GpuRef { host: 999, gpu: 0 },
+                                Placement {
+                                    profile: dc.gpu(g0).model().profile(0),
+                                    start: dc.gpu(g0).model().profile(0).start_blocks()[0],
+                                }),
+                        }
+                    }
+                }
+                let before = fingerprint(&dc);
+                if dc.apply_plan(&plan).is_ok() {
+                    return Err("poisoned plan applied".into());
+                }
+                if fingerprint(&dc) != before {
+                    return Err("rollback did not restore the cluster".into());
+                }
+                dc.check_integrity().map_err(|e| format!("integrity after rollback: {e}"))
+            },
+        );
+    }
+}

@@ -1,0 +1,273 @@
+//! Composable planner stacks with migration budgets.
+//!
+//! A [`PlannerStack`] owns an ordered list of
+//! [`MigrationPlanner`](super::MigrationPlanner)s and drives one
+//! plan→budget→apply round per trigger: each planner (in stack order)
+//! builds its [`MigrationPlan`] against the then-current cluster state,
+//! the plan is truncated to the remaining [`MigrationBudget`] (whole
+//! steps, prefix-only — deterministic), applied transactionally via
+//! [`DataCenter::apply_plan`](crate::cluster::DataCenter::apply_plan),
+//! and the performed moves are appended to the caller's event log.
+//!
+//! GRMU runs a stack over its light basket; the `Planned` wrapper
+//! (`policies::planned`) runs one over the whole cluster for any base
+//! policy (`mcc+defrag`, `ff+consolidate`, ...). With the default
+//! unlimited budget the stack adds no behavior of its own — default
+//! GRMU is byte-identical to the pre-extraction inline implementation.
+
+use super::{
+    MigrationBudget, MigrationEvent, MigrationPlan, MigrationPlanner, PlanCtx, PlanScope,
+    PlanTrigger,
+};
+use crate::cluster::vm::{Time, VmId};
+use crate::cluster::DataCenter;
+use std::collections::HashMap;
+
+/// An ordered, budgeted composition of migration planners.
+pub struct PlannerStack {
+    planners: Vec<Box<dyn MigrationPlanner>>,
+    budget: MigrationBudget,
+    /// Lifetime move counts per VM (the per-VM budget axis). Only
+    /// maintained when the budget is finite.
+    vm_moves: HashMap<VmId, u32>,
+    /// `now` of the last round, for per-interval budget resets.
+    interval: Time,
+    interval_moves: u32,
+    /// Reusable plan scratch (cleared per planner per round).
+    plan: MigrationPlan,
+}
+
+impl PlannerStack {
+    pub fn new(budget: MigrationBudget) -> PlannerStack {
+        PlannerStack {
+            planners: Vec::new(),
+            budget,
+            vm_moves: HashMap::new(),
+            interval: 0,
+            interval_moves: 0,
+            plan: MigrationPlan::new(),
+        }
+    }
+
+    /// Append a planner (runs after the ones already in the stack).
+    pub fn push(&mut self, planner: Box<dyn MigrationPlanner>) {
+        self.planners.push(planner);
+    }
+
+    /// Builder-style [`PlannerStack::push`].
+    pub fn with(mut self, planner: Box<dyn MigrationPlanner>) -> PlannerStack {
+        self.push(planner);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.planners.is_empty()
+    }
+
+    pub fn budget(&self) -> MigrationBudget {
+        self.budget
+    }
+
+    /// Planner names in stack order (for composed policy names).
+    pub fn names(&self) -> Vec<&'static str> {
+        self.planners.iter().map(|p| p.name()).collect()
+    }
+
+    /// One planning round: let every planner plan against the current
+    /// state, truncate to the remaining budget, apply atomically, append
+    /// the performed [`MigrationEvent`]s to `events`. Returns the number
+    /// of moves applied.
+    ///
+    /// A plan the transactional apply refuses is dropped whole (the
+    /// rollback already restored the cluster) — planners validating
+    /// against a `PlanView` never hit this path; the `debug_assert`
+    /// flags one that does.
+    pub fn run(
+        &mut self,
+        dc: &mut DataCenter,
+        now: Time,
+        trigger: PlanTrigger,
+        scope: PlanScope,
+        events: &mut Vec<MigrationEvent>,
+    ) -> u32 {
+        if self.planners.is_empty() {
+            return 0;
+        }
+        if now != self.interval {
+            self.interval = now;
+            self.interval_moves = 0;
+        }
+        let limited = !self.budget.is_unlimited();
+        let mut applied = 0u32;
+        for planner in &mut self.planners {
+            if limited && self.interval_moves >= self.budget.max_moves_per_interval {
+                // The interval budget is spent: no plan could keep any
+                // step, so skip the (possibly O(cluster)) planning work.
+                break;
+            }
+            self.plan.clear();
+            let ctx = PlanCtx { now, trigger, scope };
+            planner.plan(dc, &ctx, &mut self.plan);
+            if limited {
+                self.plan.truncate_to_budget(&self.budget, self.interval_moves, &self.vm_moves);
+            }
+            if self.plan.is_empty() {
+                continue;
+            }
+            match dc.apply_plan(&self.plan) {
+                Ok(()) => {
+                    let start = events.len();
+                    self.plan.push_events_into(events);
+                    for ev in &events[start..] {
+                        if limited {
+                            *self.vm_moves.entry(ev.vm).or_insert(0) += 1;
+                        }
+                        self.interval_moves += 1;
+                        applied += 1;
+                    }
+                }
+                Err(e) => {
+                    debug_assert!(false, "{} planned an infeasible plan: {e}", planner.name());
+                }
+            }
+        }
+        applied
+    }
+}
+
+impl std::fmt::Debug for PlannerStack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlannerStack")
+            .field("planners", &self.names())
+            .field("budget", &self.budget)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::vm::HOUR;
+    use crate::cluster::{GpuRef, Host, VmSpec};
+    use crate::mig::{Placement, Profile};
+    use crate::migrate::MigrationKind;
+
+    /// Test stub: plans one inter-GPU move per listed (vm, from, to)
+    /// tuple, reading the live placement for validity.
+    struct MoveAll;
+
+    impl MigrationPlanner for MoveAll {
+        fn name(&self) -> &'static str {
+            "move-all"
+        }
+
+        fn plan(&mut self, dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan) {
+            use crate::mig::placement::mock_assign;
+            let mut view = crate::migrate::PlanView::new(dc);
+            // Move every resident VM one GPU to the right, when it fits.
+            let refs: Vec<GpuRef> = ctx.scope.gpus(dc).collect();
+            for (i, &r) in refs.iter().enumerate() {
+                let Some(&next) = refs.get(i + 1) else { break };
+                for inst in dc.gpu(r).instances() {
+                    if dc.gpu(next).model() != inst.placement.profile.model() {
+                        continue;
+                    }
+                    let (cpus, ram) = dc.vm_demands(inst.vm).unwrap_or((0, 0));
+                    if r.host != next.host && !view.host_fits(next.host, cpus, ram) {
+                        continue;
+                    }
+                    if let Some((pl, _)) =
+                        mock_assign(view.occupancy(next), inst.placement.profile)
+                    {
+                        view.note_move(r, inst.placement, next, pl, cpus, ram);
+                        plan.push_migrate(inst.vm, r, next, pl);
+                    }
+                }
+            }
+        }
+    }
+
+    fn dc_with_vms(n: u64) -> DataCenter {
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 4)]);
+        for id in 1..=n {
+            let vm = VmSpec {
+                id,
+                profile: Profile::P1g5gb,
+                cpus: 1,
+                ram_gb: 1,
+                arrival: 0,
+                departure: 100,
+                weight: 1.0,
+            };
+            dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement {
+                profile: Profile::P1g5gb,
+                start: (id - 1) as u8,
+            });
+        }
+        dc
+    }
+
+    #[test]
+    fn unlimited_stack_applies_everything() {
+        let mut dc = dc_with_vms(3);
+        let mut stack = PlannerStack::new(MigrationBudget::unlimited()).with(Box::new(MoveAll));
+        let mut events = Vec::new();
+        let n = stack.run(&mut dc, HOUR, PlanTrigger::Tick, PlanScope::Cluster, &mut events);
+        assert_eq!(n, 3);
+        assert_eq!(events.len(), 3);
+        assert!(events.iter().all(|e| e.kind == MigrationKind::Inter));
+        assert!(dc.gpu(GpuRef { host: 0, gpu: 0 }).is_empty());
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn interval_budget_caps_moves_and_resets_next_interval() {
+        let mut dc = dc_with_vms(3);
+        let budget = MigrationBudget::unlimited().per_interval(2);
+        let mut stack = PlannerStack::new(budget).with(Box::new(MoveAll));
+        let mut events = Vec::new();
+        let n = stack.run(&mut dc, HOUR, PlanTrigger::Tick, PlanScope::Cluster, &mut events);
+        assert_eq!(n, 2, "third move exceeds the interval budget");
+        // Same interval, second trigger: budget already spent.
+        let n = stack.run(&mut dc, HOUR, PlanTrigger::Tick, PlanScope::Cluster, &mut events);
+        assert_eq!(n, 0);
+        // Next interval: the counter resets.
+        let n = stack.run(&mut dc, 2 * HOUR, PlanTrigger::Tick, PlanScope::Cluster, &mut events);
+        assert!(n > 0);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn per_vm_budget_is_lifetime() {
+        let mut dc = dc_with_vms(1);
+        let budget = MigrationBudget::unlimited().per_vm(1);
+        let mut stack = PlannerStack::new(budget).with(Box::new(MoveAll));
+        let mut events = Vec::new();
+        assert_eq!(stack.run(&mut dc, HOUR, PlanTrigger::Tick, PlanScope::Cluster, &mut events), 1);
+        // VM 1 has spent its lifetime budget — later intervals move nothing.
+        assert_eq!(
+            stack.run(&mut dc, 2 * HOUR, PlanTrigger::Tick, PlanScope::Cluster, &mut events),
+            0
+        );
+        assert_eq!(events.len(), 1);
+    }
+
+    #[test]
+    fn empty_stack_is_free() {
+        let mut dc = dc_with_vms(1);
+        let mut stack = PlannerStack::new(MigrationBudget::unlimited());
+        assert!(stack.is_empty());
+        let mut events = Vec::new();
+        assert_eq!(stack.run(&mut dc, HOUR, PlanTrigger::Tick, PlanScope::Cluster, &mut events), 0);
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn stack_names_in_order() {
+        let stack = PlannerStack::new(MigrationBudget::unlimited())
+            .with(Box::new(crate::migrate::DefragOnReject::new(true)))
+            .with(Box::new(crate::migrate::PairwiseConsolidate::every(24)));
+        assert_eq!(stack.names(), vec!["defrag", "consolidate"]);
+        assert!(format!("{stack:?}").contains("defrag"));
+    }
+}

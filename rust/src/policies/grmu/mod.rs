@@ -12,29 +12,31 @@
 //!   first-fit within a basket promotes consolidation. A request the
 //!   quota locks out of an otherwise-serviceable pool is rejected with
 //!   [`RejectReason::QuotaDenied`].
-//! * **Defragmentation / intra-GPU migration** (Algorithm 4,
-//!   [`defrag`]): when a batch sees any rejection, the most fragmented
-//!   light-basket GPU is re-packed by replaying its instances onto a mock
-//!   GPU with the default placement policy and relocating the ones that
-//!   land elsewhere. Each relocation is recorded as an
-//!   [`MigrationEvent`] of kind [`MigrationKind::Intra`].
-//! * **Consolidation / inter-GPU migration** (Algorithm 5,
-//!   [`consolidation`]): periodically, half-full single-profile GPUs
-//!   (one 3g.20gb or 4g.20gb) are merged pairwise; emptied GPUs return to
-//!   the pool. Each move is an [`MigrationKind::Inter`] event.
+//! * **Migration**, delegated to the policy-agnostic planner layer
+//!   ([`crate::migrate`]): GRMU is now a thin composition of the baskets
+//!   above and a [`PlannerStack`] scoped to the light basket —
+//!   [`crate::migrate::DefragOnReject`] (Algorithm 4, fired when a batch
+//!   sees any rejection) and [`crate::migrate::PairwiseConsolidate`]
+//!   (Algorithm 5, fired on the periodic tick). Plans apply through the
+//!   transactional `DataCenter::apply_plan`; performed moves surface as
+//!   [`MigrationEvent`]s, and consolidation sources that emptied return
+//!   from the light basket to the pool. Default-config decisions and
+//!   events are byte-identical to the pre-extraction inline
+//!   implementation (locked in `rust/tests/decision_api.rs`).
 //!
 //! Implementation note on Algorithm 3 line 13: the pseudocode's
 //! `|basket| ≤ basketCapacity` would let a basket reach capacity+1; we
 //! use strict `<` so the heavy basket never exceeds its quota.
 
-pub mod consolidation;
-pub mod defrag;
-
 use super::{
-    classify_rejection, probe_gpu, Decision, MigrationEvent, Policy, PolicyCtx, RejectReason,
+    classify_rejection, probe_gpu, Decision, MigrationEvent, MigrationKind, Policy, PolicyCtx,
+    RejectReason,
 };
-use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
+use crate::cluster::vm::{VmId, VmSpec};
 use crate::cluster::{DataCenter, GpuRef};
+use crate::migrate::{
+    DefragOnReject, MigrationBudget, PairwiseConsolidate, PlanScope, PlanTrigger, PlannerStack,
+};
 use std::collections::BTreeSet;
 
 /// GRMU tuning knobs (§8.2's sweep parameters).
@@ -51,6 +53,9 @@ pub struct GrmuConfig {
     /// cluster-index intersection; decision-identical to the plain
     /// basket walk, which `false` restores as the brute-force reference).
     pub use_index: bool,
+    /// Budget for the internal planner stack. Unlimited by default — the
+    /// paper's configuration, and what the byte-identity lock assumes.
+    pub migration_budget: MigrationBudget,
 }
 
 impl Default for GrmuConfig {
@@ -60,6 +65,7 @@ impl Default for GrmuConfig {
             consolidation_interval_hours: None,
             defrag_enabled: true,
             use_index: true,
+            migration_budget: MigrationBudget::unlimited(),
         }
     }
 }
@@ -75,14 +81,39 @@ pub struct Grmu {
     light: BTreeSet<GpuRef>,
     heavy_capacity: usize,
     light_capacity: usize,
+    /// Migration planners (defrag/consolidation), scoped to the light
+    /// basket at every run.
+    stack: PlannerStack,
     /// Migrations performed and not yet drained by the event core.
     events: Vec<MigrationEvent>,
-    last_consolidation: Time,
     initialized: bool,
 }
 
 impl Grmu {
     pub fn new(config: GrmuConfig) -> Grmu {
+        let stack = Grmu::default_stack(&config);
+        Grmu::with_stack(config, stack)
+    }
+
+    /// The planner stack [`Grmu::new`] composes from a config: defrag on
+    /// rejection (Algorithm 4) when enabled, then periodic pairwise
+    /// consolidation (Algorithm 5) when an interval is set.
+    pub fn default_stack(config: &GrmuConfig) -> PlannerStack {
+        let mut stack = PlannerStack::new(config.migration_budget);
+        if config.defrag_enabled {
+            stack.push(Box::new(DefragOnReject::new(config.use_index)));
+        }
+        if let Some(hours) = config.consolidation_interval_hours {
+            stack.push(Box::new(PairwiseConsolidate::every(hours)));
+        }
+        stack
+    }
+
+    /// GRMU over an explicit planner stack (the thin-composition seam:
+    /// `Grmu::new(cfg)` ≡ `Grmu::with_stack(cfg, Grmu::default_stack(&cfg))`,
+    /// locked in `rust/tests/decision_api.rs`). The stack always runs
+    /// scoped to the light basket.
+    pub fn with_stack(config: GrmuConfig, stack: PlannerStack) -> Grmu {
         Grmu {
             config,
             pool: BTreeSet::new(),
@@ -90,8 +121,8 @@ impl Grmu {
             light: BTreeSet::new(),
             heavy_capacity: 0,
             light_capacity: 0,
+            stack,
             events: Vec::new(),
-            last_consolidation: 0,
             initialized: false,
         }
     }
@@ -118,6 +149,26 @@ impl Grmu {
         let first = *self.pool.iter().next()?;
         self.pool.remove(&first);
         Some(first)
+    }
+
+    /// Algorithm 5's pool return, applied after every stack run: an
+    /// inter-GPU move (from `self.events[start..]`) that emptied its
+    /// source GPU drains that GPU from the light basket back into the
+    /// pool (by `globalIndex` order, so it is the first to be reused).
+    /// Checked after rejection rounds too, not just ticks — a custom
+    /// stack ([`Grmu::with_stack`]) may run inter-capable planners (e.g.
+    /// `FragGradient`) on rejections; the default defrag-only rejection
+    /// round emits only intra moves and is untouched.
+    fn return_emptied_sources(&mut self, dc: &DataCenter, start: usize) {
+        for i in start..self.events.len() {
+            let ev = self.events[i];
+            if ev.kind == MigrationKind::Inter
+                && dc.gpu(ev.from).is_empty()
+                && self.light.remove(&ev.from)
+            {
+                self.pool.insert(ev.from);
+            }
+        }
     }
 
     /// Algorithm 3 for one VM: scan the basket first-fit, then grow it
@@ -196,10 +247,18 @@ impl Policy for Grmu {
             any_rejected |= !d.is_placed();
             ctx.decisions.push(d);
         }
-        // Any rejection triggers light-basket defragmentation (§7.1).
-        if self.config.defrag_enabled && any_rejected {
-            let moved = defrag::defragment_light_basket(dc, &self.light);
-            self.events.extend(moved);
+        // Any rejection triggers light-basket defragmentation (§7.1) via
+        // the rejection-triggered planners of the stack.
+        if any_rejected {
+            let start = self.events.len();
+            self.stack.run(
+                dc,
+                ctx.now,
+                PlanTrigger::Rejection,
+                PlanScope::Set(&self.light),
+                &mut self.events,
+            );
+            self.return_emptied_sources(dc, start);
         }
     }
 
@@ -209,25 +268,20 @@ impl Policy for Grmu {
     }
 
     fn on_tick(&mut self, dc: &mut DataCenter, ctx: &mut PolicyCtx) {
-        if let Some(hours) = self.config.consolidation_interval_hours {
-            if ctx.now.saturating_sub(self.last_consolidation) >= hours * HOUR {
-                self.last_consolidation = ctx.now;
-                let freed =
-                    consolidation::consolidate_light_basket(dc, &mut self.light, &mut self.events);
-                for g in freed {
-                    self.pool.insert(g);
-                }
-            }
-        }
-    }
-
-    fn take_migrations(&mut self) -> Vec<MigrationEvent> {
-        std::mem::take(&mut self.events)
+        let start = self.events.len();
+        self.stack.run(
+            dc,
+            ctx.now,
+            PlanTrigger::Tick,
+            PlanScope::Set(&self.light),
+            &mut self.events,
+        );
+        self.return_emptied_sources(dc, start);
     }
 
     fn drain_migrations_into(&mut self, out: &mut Vec<MigrationEvent>) {
-        // `append` (not `take`) keeps the event buffer's capacity across
-        // drains — no per-interval reallocation in steady state.
+        // `append` keeps the event buffer's capacity across drains — no
+        // per-interval reallocation in steady state.
         out.append(&mut self.events);
     }
 }
@@ -255,6 +309,7 @@ impl Grmu {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::vm::HOUR;
     use crate::cluster::Host;
     use crate::mig::Profile;
     use crate::policies::MigrationKind;
@@ -417,5 +472,27 @@ mod tests {
         ctx.now = 100 * HOUR;
         g.on_tick(&mut dcx, &mut ctx);
         assert!(g.pending_migrations().is_empty());
+    }
+
+    #[test]
+    fn budgeted_grmu_suppresses_defrag() {
+        // Same scenario as defrag_triggered_on_rejection, but a zero
+        // interval budget starves the stack: no migration happens and the
+        // stray instance stays put.
+        let mut dcx = dc(1, 2);
+        let mut g = Grmu::new(GrmuConfig {
+            heavy_capacity_frac: 0.5,
+            migration_budget: MigrationBudget::unlimited().per_interval(0),
+            ..Default::default()
+        });
+        let b: Vec<VmSpec> = (1..=3).map(|i| vm(i, Profile::P1g5gb)).collect();
+        batch(&mut g, &mut dcx, &b);
+        dcx.remove(1);
+        dcx.remove(3);
+        batch(&mut g, &mut dcx, &[vm(10, Profile::P4g20gb)]);
+        let out = batch(&mut g, &mut dcx, &[vm(11, Profile::P2g10gb)]);
+        assert_eq!(accepted(&out), 0);
+        assert!(g.pending_migrations().is_empty());
+        assert_eq!(dcx.locate(2).unwrap().placement.start, 4);
     }
 }

@@ -1,0 +1,202 @@
+//! [`Planned`] — any placement policy composed with a migration
+//! [`PlannerStack`].
+//!
+//! The bridge between the policy layer and the policy-agnostic
+//! [`crate::migrate`] mechanism: the wrapped policy decides placements
+//! untouched, and the stack runs over the **whole cluster** after every
+//! batch that saw a rejection ([`PlanTrigger::Rejection`]) and on every
+//! maintenance tick ([`PlanTrigger::Tick`]). This is what the registry
+//! builds for the `base+planner` composed names (`mcc+defrag`,
+//! `bf+consolidate`, `ff+defrag+frag-gradient`, ...) and the CLI's
+//! `--planners` flag — every §8.3 policy can now defragment and
+//! consolidate, not just GRMU. (GRMU itself keeps its own internal
+//! stack, scoped to the light basket, per Algorithms 4–5.)
+
+use super::{Policy, PolicyConfig, PolicyCtx};
+use crate::cluster::vm::{VmId, VmSpec};
+use crate::cluster::DataCenter;
+use crate::migrate::{
+    DefragOnReject, FragGradient, MigrationEvent, MigrationPlanner, PairwiseConsolidate,
+    PlanScope, PlanTrigger, PlannerStack,
+};
+
+/// Planner names accepted as `+` suffixes on registry policy names and
+/// in `--planners` lists, in documentation order.
+pub const PLANNER_NAMES: [&str; 3] = ["defrag", "consolidate", "frag-gradient"];
+
+/// Build a planner by [`PLANNER_NAMES`] name from the shared policy
+/// configuration. `None` for unknown names.
+///
+/// A standalone `consolidate` planner (outside GRMU) defaults to the
+/// paper's 24 h period when `cfg.consolidation_hours` is unset — a
+/// composed `bf+consolidate` that never fired would be pointless.
+pub(crate) fn planner_from_name(
+    name: &str,
+    cfg: &PolicyConfig,
+) -> Option<Box<dyn MigrationPlanner>> {
+    match name {
+        "defrag" => Some(Box::new(DefragOnReject::new(cfg.use_index))),
+        "consolidate" => {
+            Some(Box::new(PairwiseConsolidate::every(cfg.consolidation_hours.unwrap_or(24))))
+        }
+        "frag-gradient" => Some(Box::new(FragGradient::new(cfg.frag_threshold, cfg.use_index))),
+        _ => None,
+    }
+}
+
+/// A base policy + a cluster-scoped planner stack.
+pub struct Planned {
+    inner: Box<dyn Policy>,
+    stack: PlannerStack,
+    /// `"<BASE>+<planner>+..."`, e.g. `"MCC+defrag"`.
+    name: String,
+    /// Migrations performed by the stack, pending drain.
+    events: Vec<MigrationEvent>,
+}
+
+impl Planned {
+    pub fn new(inner: Box<dyn Policy>, stack: PlannerStack) -> Planned {
+        let mut name = inner.name().to_string();
+        for planner in stack.names() {
+            name.push('+');
+            name.push_str(planner);
+        }
+        Planned { inner, stack, name, events: Vec::new() }
+    }
+
+    /// The wrapped base policy.
+    pub fn inner(&self) -> &dyn Policy {
+        self.inner.as_ref()
+    }
+}
+
+impl Policy for Planned {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
+        self.inner.place_batch_into(dc, vms, ctx);
+        // Any rejection in the batch fires the rejection-triggered
+        // planners (Algorithm 4's defragmentation condition), over the
+        // whole cluster — composed policies have no baskets.
+        if ctx.decisions.iter().any(|d| !d.is_placed()) {
+            self.stack.run(dc, ctx.now, PlanTrigger::Rejection, PlanScope::Cluster, &mut self.events);
+        }
+    }
+
+    fn on_departure(&mut self, dc: &mut DataCenter, vm: VmId, ctx: &mut PolicyCtx) {
+        self.inner.on_departure(dc, vm, ctx);
+    }
+
+    fn on_tick(&mut self, dc: &mut DataCenter, ctx: &mut PolicyCtx) {
+        self.inner.on_tick(dc, ctx);
+        self.stack.run(dc, ctx.now, PlanTrigger::Tick, PlanScope::Cluster, &mut self.events);
+    }
+
+    fn drain_migrations_into(&mut self, out: &mut Vec<MigrationEvent>) {
+        self.inner.drain_migrations_into(out);
+        out.append(&mut self.events);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+    use crate::mig::Profile;
+    use crate::migrate::{MigrationBudget, MigrationKind};
+    use crate::policies::{Decision, PolicyRegistry};
+
+    fn vm(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 100_000, weight: 1.0 }
+    }
+
+    /// Rebuild GRMU's §7.1 defragmentation scenario with a *composed*
+    /// policy: ff+defrag must relocate the stray 1g.5gb exactly like
+    /// GRMU's internal defragmentation does.
+    #[test]
+    fn ff_plus_defrag_defragments_on_rejection() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let mut p = PolicyRegistry::standard()
+            .build("ff+defrag", &PolicyConfig::new())
+            .unwrap();
+        let mut ctx = PolicyCtx::default();
+        let b: Vec<VmSpec> = (1..=3).map(|i| vm(i, Profile::P1g5gb)).collect();
+        p.place_batch(&mut dc, &b, &mut ctx);
+        dc.remove(1);
+        dc.remove(3);
+        // Stray 1g at block 4. The 4g.20gb fits at 0–3; the 2g.10gb then
+        // has no legal start → rejection → defrag moves the stray to 6.
+        let out = p.place_batch(&mut dc, &[vm(10, Profile::P4g20gb)], &mut ctx);
+        assert!(out[0].is_placed());
+        let out = p.place_batch(&mut dc, &[vm(11, Profile::P2g10gb)], &mut ctx);
+        assert!(out[0].reject_reason().is_some());
+        let events = p.take_migrations();
+        assert!(
+            events.iter().any(|e| e.kind == MigrationKind::Intra),
+            "composed defrag should have relocated the stray instance: {events:?}"
+        );
+        assert_eq!(dc.locate(2).unwrap().placement.start, 6);
+        // After defrag the 2g.10gb fits.
+        let out = p.place_batch(&mut dc, &[vm(12, Profile::P2g10gb)], &mut ctx);
+        assert!(out[0].is_placed());
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn bf_plus_consolidate_merges_on_tick() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 4)]);
+        let cfg = PolicyConfig::new().consolidation_hours(Some(1));
+        let mut p = PolicyRegistry::standard().build("bf+consolidate", &cfg).unwrap();
+        let mut ctx = PolicyCtx::default();
+        // BF packs 3g pairs tightly; force two half-full GPUs by placing
+        // four and removing the second of each pair.
+        let b: Vec<VmSpec> = (1..=4).map(|i| vm(i, Profile::P3g20gb)).collect();
+        let out = p.place_batch(&mut dc, &b, &mut ctx);
+        assert!(out.iter().all(Decision::is_placed));
+        dc.remove(2);
+        dc.remove(4);
+        ctx.now = 2 * crate::cluster::vm::HOUR;
+        p.on_tick(&mut dc, &mut ctx);
+        let events = p.take_migrations();
+        assert_eq!(events.len(), 1, "{events:?}");
+        assert_eq!(events[0].kind, MigrationKind::Inter);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn zero_budget_suppresses_all_migrations() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let cfg = PolicyConfig::new()
+            .migration_budget(MigrationBudget::unlimited().per_interval(0));
+        let mut p = PolicyRegistry::standard().build("ff+defrag", &cfg).unwrap();
+        let mut ctx = PolicyCtx::default();
+        let b: Vec<VmSpec> = (1..=3).map(|i| vm(i, Profile::P1g5gb)).collect();
+        p.place_batch(&mut dc, &b, &mut ctx);
+        dc.remove(1);
+        dc.remove(3);
+        p.place_batch(&mut dc, &[vm(10, Profile::P4g20gb)], &mut ctx);
+        p.place_batch(&mut dc, &[vm(11, Profile::P2g10gb)], &mut ctx);
+        assert!(p.take_migrations().is_empty(), "budget 0 must suppress defrag");
+        // The stray stayed where it was.
+        assert_eq!(dc.locate(2).unwrap().placement.start, 4);
+    }
+
+    #[test]
+    fn base_policy_decisions_untouched_by_wrapper() {
+        // The wrapper may migrate *after* the batch, but decisions come
+        // verbatim from the base policy.
+        let mut dc1 = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let mut dc2 = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let registry = PolicyRegistry::standard();
+        let mut plain = registry.build("mcc", &PolicyConfig::new()).unwrap();
+        let mut composed = registry.build("mcc+defrag", &PolicyConfig::new()).unwrap();
+        let batch: Vec<VmSpec> = (1..=3).map(|i| vm(i, Profile::P3g20gb)).collect();
+        let mut ctx1 = PolicyCtx::default();
+        let mut ctx2 = PolicyCtx::default();
+        let a = plain.place_batch(&mut dc1, &batch, &mut ctx1);
+        let b = composed.place_batch(&mut dc2, &batch, &mut ctx2);
+        assert_eq!(a, b);
+    }
+}

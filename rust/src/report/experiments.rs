@@ -3,6 +3,7 @@
 
 use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, Host};
+use crate::migrate::MigrationBudget;
 use crate::policies::{grmu, PolicyConfig, PolicyCtx, PolicyRegistry};
 use crate::sim::{SimResult, Simulation, SimulationOptions};
 use crate::trace::{TraceConfig, Workload};
@@ -23,6 +24,11 @@ pub struct ExperimentConfig {
     pub consolidation_hours: Option<u64>,
     /// Cap simulated drain after the last arrival (hours, 0 = none).
     pub drain_cap_hours: u64,
+    /// Extra migration planners appended to every built policy
+    /// (CLI `--planners defrag,consolidate,frag-gradient`).
+    pub planners: Vec<String>,
+    /// Planner-stack migration budget (CLI `--migration-budget N[:M]`).
+    pub migration_budget: MigrationBudget,
 }
 
 impl Default for ExperimentConfig {
@@ -32,6 +38,8 @@ impl Default for ExperimentConfig {
             heavy_frac: 0.15,
             consolidation_hours: None,
             drain_cap_hours: 21 * 24,
+            planners: Vec::new(),
+            migration_budget: MigrationBudget::unlimited(),
         }
     }
 }
@@ -51,6 +59,8 @@ impl ExperimentConfig {
         PolicyConfig::new()
             .heavy_frac(self.heavy_frac)
             .consolidation_hours(self.consolidation_hours)
+            .planners(self.planners.iter().cloned())
+            .migration_budget(self.migration_budget)
     }
 }
 
@@ -151,6 +161,21 @@ pub fn grmu_ablation(workload: &Workload, cfg: &ExperimentConfig) -> Vec<(String
     let full = ExperimentConfig { consolidation_hours: Some(24), ..cfg.clone() };
     out.push(("DB + defrag + consolidation(24h)".to_string(), run_once(workload, "grmu", &full, true)));
     out
+}
+
+/// Planner-stack ablation (EXPERIMENTS.md §Planner stacks): GRMU's
+/// built-in migration machinery vs the same planners composed onto the
+/// commercial baselines through the registry's `+` variants. Answers
+/// "how much of GRMU's edge is the baskets vs the migrations" — the
+/// question the extraction of `crate::migrate` makes askable.
+pub fn planner_stack_ablation(
+    workload: &Workload,
+    cfg: &ExperimentConfig,
+) -> Vec<(String, SimResult)> {
+    ["grmu", "ff", "ff+defrag", "ff+consolidate", "mcc+defrag", "bf+consolidate"]
+        .iter()
+        .map(|name| (name.to_string(), run_once(workload, name, cfg, true)))
+        .collect()
 }
 
 /// One `(seed, policy)` cell of a [`sweep`].
@@ -304,7 +329,28 @@ pub fn fleet_json(cfg: &ExperimentConfig) -> crate::util::json::Json {
                     .collect(),
             ),
         ),
+        (
+            "planners",
+            Json::arr(cfg.planners.iter().map(|p| p.as_str().into()).collect()),
+        ),
+        (
+            "migration_budget",
+            Json::obj(vec![
+                ("per_interval", budget_axis(cfg.migration_budget.max_moves_per_interval)),
+                ("per_vm", budget_axis(cfg.migration_budget.max_moves_per_vm)),
+            ]),
+        ),
     ])
+}
+
+/// One [`MigrationBudget`] axis as JSON: the `u32::MAX` sentinel renders
+/// as `"unlimited"` so exported configs stay human-readable.
+fn budget_axis(n: u32) -> crate::util::json::Json {
+    if n == u32::MAX {
+        "unlimited".into()
+    } else {
+        (n as u64).into()
+    }
 }
 
 /// GRMU config helper mirroring [`grmu::GrmuConfig`] from experiment
@@ -315,6 +361,7 @@ pub fn grmu_config(cfg: &ExperimentConfig, defrag: bool) -> grmu::GrmuConfig {
         consolidation_interval_hours: cfg.consolidation_hours,
         defrag_enabled: defrag,
         use_index: true,
+        migration_budget: cfg.migration_budget,
     }
 }
 
@@ -408,6 +455,43 @@ mod tests {
         for (_, r) in &rows[1..] {
             assert_eq!(r.requested, rows[0].1.requested);
         }
+    }
+
+    #[test]
+    fn planner_ablation_rows_complete() {
+        let (w, cfg) = quick_workload();
+        let rows = planner_stack_ablation(&w, &cfg);
+        assert_eq!(rows.len(), 6);
+        // Plain FF never migrates; every row's breakdown must sum.
+        let ff = rows.iter().find(|(l, _)| l == "ff").unwrap();
+        assert_eq!(ff.1.migrations(), 0);
+        for (label, r) in &rows {
+            assert_eq!(r.requested, rows[0].1.requested, "{label}");
+            assert_eq!(
+                r.rejections.iter().sum::<u64>(),
+                r.requested - r.accepted,
+                "{label}: breakdown does not sum"
+            );
+            // Cost is consistent with the event log by construction.
+            assert_eq!(
+                r.total_migration_cost(),
+                r.migration_events.iter().map(|e| e.cost()).sum::<u64>(),
+                "{label}"
+            );
+        }
+        // The composed names flow into the result's policy label.
+        assert!(rows.iter().any(|(_, r)| r.policy == "FF+defrag"));
+    }
+
+    #[test]
+    fn sweep_accepts_composed_policy_names() {
+        let base = ExperimentConfig::quick(0);
+        let seeds = [5u64];
+        let policies: Vec<String> = vec!["ff".into(), "mcc+defrag".into()];
+        let runs = sweep(&base, &seeds, &policies, 2);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[1].policy, "mcc+defrag");
+        assert_eq!(runs[1].result.policy, "MCC+defrag");
     }
 
     #[test]

@@ -243,21 +243,81 @@ pub fn table6(results: &[SimResult]) -> String {
     out
 }
 
-/// §8.3.3: migration summary (counts derived from the event log).
+/// §8.3.3: migration summary (counts derived from the event log), with
+/// the block-weighted overhead column of the third objective.
 pub fn migrations_summary(results: &[SimResult]) -> String {
     let mut out = String::from("§8.3.3 — Migrations\n");
     out.push_str(&format!(
-        "{:>6} {:>8} {:>8} {:>10} {:>18}\n",
-        "policy", "intra", "inter", "total", "share of accepted"
+        "{:>12} {:>8} {:>8} {:>10} {:>10} {:>18}\n",
+        "policy", "intra", "inter", "total", "cost", "share of accepted"
     ));
     for r in results {
         out.push_str(&format!(
-            "{:>6} {:>8} {:>8} {:>10} {:>17.2}%\n",
+            "{:>12} {:>8} {:>8} {:>10} {:>10} {:>17.2}%\n",
             r.policy,
             r.intra_migrations(),
             r.inter_migrations(),
             r.migrations(),
+            r.total_migration_cost(),
             100.0 * r.migration_share()
+        ));
+    }
+    out
+}
+
+/// Migration overhead per [`crate::policies::MigrationKind`] and GPU
+/// model: moves, blocks moved and block-weighted cost, plus the paper's
+/// §8.3.3 headline — the migrated share of accepted VMs (each VM counted
+/// once) — per policy. Policies without migrations render a single
+/// zero-overhead row, so the table always answers "who migrated".
+pub fn migration_overhead(results: &[SimResult]) -> String {
+    use crate::policies::MigrationKind;
+    let mut out = String::from("Migration overhead — block-weighted cost per kind and model\n");
+    out.push_str(&format!(
+        "{:>12} {:>9} {:>6} {:>8} {:>8} {:>8}\n",
+        "policy", "model", "kind", "moves", "blocks", "cost"
+    ));
+    for r in results {
+        let mut any = false;
+        for m in r.fleet_models() {
+            for kind in MigrationKind::ALL {
+                let events = r
+                    .migration_events
+                    .iter()
+                    .filter(|e| e.model == m && e.kind == kind);
+                let (mut moves, mut blocks, mut cost) = (0u64, 0u64, 0u64);
+                for e in events {
+                    moves += 1;
+                    blocks += e.blocks as u64;
+                    cost += e.cost();
+                }
+                if moves == 0 {
+                    continue;
+                }
+                any = true;
+                out.push_str(&format!(
+                    "{:>12} {:>9} {:>6} {:>8} {:>8} {:>8}\n",
+                    r.policy,
+                    m.name(),
+                    kind.name(),
+                    moves,
+                    blocks,
+                    cost
+                ));
+            }
+        }
+        if !any {
+            out.push_str(&format!(
+                "{:>12} {:>9} {:>6} {:>8} {:>8} {:>8}\n",
+                r.policy, "-", "-", 0, 0, 0
+            ));
+        }
+        out.push_str(&format!(
+            "{:>12} migrated VMs: {} ({:.2}% of accepted; events {:.2}%)\n",
+            r.policy,
+            r.migrated_vms(),
+            100.0 * r.migrated_vm_share(),
+            100.0 * r.migration_share(),
         ));
     }
     out
@@ -319,6 +379,8 @@ mod tests {
                 from: g,
                 to: g,
                 kind: MigrationKind::Intra,
+                model: GpuModel::A100_40,
+                blocks: 1,
             }],
             gpus_by_model,
             gpu_activity,
@@ -337,11 +399,41 @@ mod tests {
             migrations_summary(&results),
             rejections_breakdown(&results),
             fleet_breakdown(&results),
+            migration_overhead(&results),
         ] {
             assert!(text.contains("FF"));
             assert!(text.contains("GRMU"));
             assert!(text.lines().count() >= 3);
         }
+    }
+
+    #[test]
+    fn migration_overhead_breaks_down_kind_and_model() {
+        use crate::cluster::GpuRef;
+        use crate::policies::{MigrationEvent, MigrationKind};
+        let mut r = fake("GRMU", 8);
+        // Add an inter-GPU A30 move next to the intra A100 one.
+        r.gpus_by_model[GpuModel::A30 as usize] = 1;
+        r.gpu_activity[GpuModel::A30 as usize] = (1, 2);
+        r.migration_events.push(MigrationEvent {
+            vm: 2,
+            from: GpuRef { host: 0, gpu: 0 },
+            to: GpuRef { host: 0, gpu: 1 },
+            kind: MigrationKind::Inter,
+            model: GpuModel::A30,
+            blocks: 2,
+        });
+        let text = migration_overhead(&[r]);
+        assert!(text.contains("a100-40"), "{text}");
+        assert!(text.contains("a30"), "{text}");
+        assert!(text.contains("intra"), "{text}");
+        assert!(text.contains("inter"), "{text}");
+        assert!(text.contains("migrated VMs: 2"), "{text}");
+        // A migration-free policy still renders a zero row + headline.
+        let mut quiet = fake("FF", 5);
+        quiet.migration_events.clear();
+        let text = migration_overhead(&[quiet]);
+        assert!(text.contains("migrated VMs: 0"), "{text}");
     }
 
     #[test]

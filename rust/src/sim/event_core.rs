@@ -61,6 +61,11 @@ pub struct EventCore {
     per_profile: [(u64, u64); NUM_PROFILE_KEYS],
     rejections: RejectCounts,
     migrations: Vec<MigrationEvent>,
+    /// Cumulative block-weighted migration cost per
+    /// [`crate::policies::MigrationKind`] (by `MigrationKind::index`),
+    /// accumulated as events are absorbed so online readers (the
+    /// coordinator's stats endpoint) get it in O(1).
+    migration_cost: [u64; 2],
     /// Cumulative per-model `(active, total)` GPU-interval counts,
     /// accumulated at every sample (the per-model active-hardware
     /// breakdown of heterogeneous fleets).
@@ -93,6 +98,7 @@ impl EventCore {
             per_profile: [(0, 0); NUM_PROFILE_KEYS],
             rejections: [0; 4],
             migrations: Vec::new(),
+            migration_cost: [0; 2],
             gpu_activity: [(0, 0); NUM_MODELS],
         }
     }
@@ -159,8 +165,18 @@ impl EventCore {
         &self.migrations
     }
 
+    /// Cumulative block-weighted migration cost so far, indexed by
+    /// [`crate::policies::MigrationKind::index`] (`[intra, inter]`).
+    pub fn migration_cost(&self) -> [u64; 2] {
+        self.migration_cost
+    }
+
     fn absorb_migrations(&mut self) {
+        let start = self.migrations.len();
         self.policy.drain_migrations_into(&mut self.migrations);
+        for ev in &self.migrations[start..] {
+            self.migration_cost[ev.kind.index()] += ev.cost();
+        }
     }
 
     /// Release departures due by `t` (inclusive), oldest first.

@@ -172,6 +172,47 @@ impl SimResult {
         }
     }
 
+    /// Distinct VMs that migrated at least once.
+    pub fn migrated_vms(&self) -> u64 {
+        let mut seen: Vec<_> = self.migration_events.iter().map(|e| e.vm).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len() as u64
+    }
+
+    /// Share of accepted VMs that migrated at least once — the paper's
+    /// §8.3.3 headline ("about 1% of MIG-enabled VMs were migrated"),
+    /// counting each VM once however often it moved.
+    pub fn migrated_vm_share(&self) -> f64 {
+        if self.accepted == 0 {
+            0.0
+        } else {
+            self.migrated_vms() as f64 / self.accepted as f64
+        }
+    }
+
+    /// Memory blocks moved by migrations of one kind.
+    pub fn migration_blocks(&self, kind: MigrationKind) -> u64 {
+        self.migration_events
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.blocks as u64)
+            .sum()
+    }
+
+    /// Cumulative block-weighted migration cost of one kind (Table 2's
+    /// `IntraMigrate`/`InterMigrate` overheads: blocks moved × the
+    /// kind's per-block weight).
+    pub fn migration_cost(&self, kind: MigrationKind) -> u64 {
+        self.migration_events.iter().filter(|e| e.kind == kind).map(|e| e.cost()).sum()
+    }
+
+    /// Total block-weighted migration cost across both kinds (the third
+    /// objective's overhead term).
+    pub fn total_migration_cost(&self) -> u64 {
+        self.migration_events.iter().map(|e| e.cost()).sum()
+    }
+
     /// The profile keys a report should show for this result: the six
     /// A100-40 profiles (the paper's fixed column set) plus any other
     /// catalog key that saw requests, in dense order.
@@ -194,6 +235,16 @@ impl SimResult {
             ("active_auc", self.active_auc().into()),
             ("intra_migrations", self.intra_migrations().into()),
             ("inter_migrations", self.inter_migrations().into()),
+            ("migrated_vms", self.migrated_vms().into()),
+            ("migrated_vm_share", self.migrated_vm_share().into()),
+            (
+                "migration_cost",
+                Json::obj(vec![
+                    ("intra", self.migration_cost(MigrationKind::Intra).into()),
+                    ("inter", self.migration_cost(MigrationKind::Inter).into()),
+                    ("total", self.total_migration_cost().into()),
+                ]),
+            ),
             (
                 "rejections",
                 Json::Obj(
@@ -292,9 +343,30 @@ mod tests {
             per_profile,
             rejections: [1, 0, 2, 1],
             migration_events: vec![
-                MigrationEvent { vm: 1, from: g0, to: g0, kind: MigrationKind::Intra },
-                MigrationEvent { vm: 2, from: g0, to: g0, kind: MigrationKind::Intra },
-                MigrationEvent { vm: 3, from: g0, to: g1, kind: MigrationKind::Inter },
+                MigrationEvent {
+                    vm: 1,
+                    from: g0,
+                    to: g0,
+                    kind: MigrationKind::Intra,
+                    model: GpuModel::A100_40,
+                    blocks: 1,
+                },
+                MigrationEvent {
+                    vm: 2,
+                    from: g0,
+                    to: g0,
+                    kind: MigrationKind::Intra,
+                    model: GpuModel::A100_40,
+                    blocks: 2,
+                },
+                MigrationEvent {
+                    vm: 3,
+                    from: g0,
+                    to: g1,
+                    kind: MigrationKind::Inter,
+                    model: GpuModel::A100_40,
+                    blocks: 4,
+                },
             ],
             gpus_by_model,
             gpu_activity,
@@ -311,6 +383,26 @@ mod tests {
         assert_eq!(r.inter_migrations(), 1);
         assert_eq!(r.migrations(), 3);
         assert!((r.migration_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migration_cost_accounting() {
+        let mut r = result();
+        // Intra: 1 + 2 blocks × weight 1; inter: 4 blocks × weight 2.
+        assert_eq!(r.migration_blocks(MigrationKind::Intra), 3);
+        assert_eq!(r.migration_blocks(MigrationKind::Inter), 4);
+        assert_eq!(r.migration_cost(MigrationKind::Intra), 3);
+        assert_eq!(r.migration_cost(MigrationKind::Inter), 8);
+        assert_eq!(r.total_migration_cost(), 11);
+        // Three distinct VMs migrated of 6 accepted.
+        assert_eq!(r.migrated_vms(), 3);
+        assert!((r.migrated_vm_share() - 0.5).abs() < 1e-12);
+        // A repeat move of VM 1 raises events/cost but not distinct VMs.
+        let again = MigrationEvent { vm: 1, ..r.migration_events[0] };
+        r.migration_events.push(again);
+        assert_eq!(r.migrations(), 4);
+        assert_eq!(r.migrated_vms(), 3);
+        assert!(r.migration_share() > r.migrated_vm_share());
     }
 
     #[test]
@@ -381,6 +473,11 @@ mod tests {
         let rej = parsed.get("rejections").unwrap();
         assert_eq!(rej.get("no_gpu_fit").unwrap().as_f64(), Some(2.0));
         assert_eq!(rej.get("quota_denied").unwrap().as_f64(), Some(1.0));
+        let cost = parsed.get("migration_cost").unwrap();
+        assert_eq!(cost.get("intra").unwrap().as_f64(), Some(3.0));
+        assert_eq!(cost.get("inter").unwrap().as_f64(), Some(8.0));
+        assert_eq!(cost.get("total").unwrap().as_f64(), Some(11.0));
+        assert_eq!(parsed.get("migrated_vms").unwrap().as_f64(), Some(3.0));
         // Historical bare profile keys survive for the A100-40.
         let pp = parsed.get("per_profile").unwrap();
         assert_eq!(pp.get("2g.10gb").unwrap().get("accepted").unwrap().as_f64(), Some(3.0));

@@ -20,7 +20,7 @@ use grmu::cluster::vm::HOUR;
 use grmu::cluster::{DataCenter, Host, VmSpec};
 use grmu::coordinator::{Coordinator, CoordinatorConfig, Request};
 use grmu::mig::Profile;
-use grmu::policies::{Decision, PolicyConfig, PolicyCtx, PolicyRegistry, RejectReason};
+use grmu::policies::{Decision, Policy, PolicyConfig, PolicyCtx, PolicyRegistry, RejectReason};
 use grmu::sim::{EventCore, SimResult, Simulation, SimulationOptions};
 use grmu::trace::{TraceConfig, Workload};
 
@@ -309,6 +309,16 @@ fn replay_decisions(
     seed: u64,
 ) -> (Vec<Decision>, SimResult) {
     let policy = PolicyRegistry::standard().build(name, cfg).unwrap();
+    replay_policy(policy, workload, seed)
+}
+
+/// [`replay_decisions`] over an explicitly constructed policy (used by
+/// the thin-composition lock below).
+fn replay_policy(
+    policy: Box<dyn grmu::policies::Policy>,
+    workload: &Workload,
+    seed: u64,
+) -> (Vec<Decision>, SimResult) {
     let mut core = EventCore::new(
         DataCenter::new(workload.hosts.clone()),
         policy,
@@ -458,4 +468,164 @@ fn mixed_fleet_index_equivalence_survives_consolidation() {
     });
     let cfg = PolicyConfig::new().heavy_frac(0.2).consolidation_hours(Some(12));
     assert_equivalent("grmu", &cfg, &workload, 19);
+}
+
+// ------------------------------------------------ migration-planner layer
+
+/// GRMU's dual baskets composed with the *extracted* defrag planner
+/// through the public `migrate` API — the reference reconstruction of
+/// the pre-extraction inline flow (grmu-db placement + defragment on
+/// rejection over the light basket).
+struct BasketsPlusPlanners {
+    inner: grmu::policies::grmu::Grmu,
+    stack: grmu::migrate::PlannerStack,
+    events: Vec<grmu::policies::MigrationEvent>,
+}
+
+impl grmu::policies::Policy for BasketsPlusPlanners {
+    fn name(&self) -> &str {
+        "GRMU"
+    }
+
+    fn place_batch_into(
+        &mut self,
+        dc: &mut DataCenter,
+        vms: &[VmSpec],
+        ctx: &mut PolicyCtx,
+    ) {
+        use grmu::migrate::{PlanScope, PlanTrigger};
+        self.inner.place_batch_into(dc, vms, ctx);
+        if ctx.decisions.iter().any(|d| !d.is_placed()) {
+            self.stack.run(
+                dc,
+                ctx.now,
+                PlanTrigger::Rejection,
+                PlanScope::Set(self.inner.light_basket()),
+                &mut self.events,
+            );
+        }
+    }
+
+    fn drain_migrations_into(&mut self, out: &mut Vec<grmu::policies::MigrationEvent>) {
+        self.inner.drain_migrations_into(out);
+        out.append(&mut self.events);
+    }
+}
+
+/// Acceptance criterion (tentpole determinism contract): default-config
+/// GRMU — whose migration machinery now routes through
+/// `MigrationPlan`/`apply_plan`/`PlannerStack` — produces **byte-identical**
+/// Decision and MigrationEvent sequences to the reference reconstruction
+/// of the pre-refactor inline flow above. Together with the unchanged
+/// pre-refactor unit expectations (exact relocation targets, pool
+/// returns) and the sim-vs-coordinator / indexed-vs-scan locks, this
+/// pins the extraction as a pure refactor.
+#[test]
+fn grmu_is_a_thin_composition_of_extracted_planners() {
+    use grmu::migrate::{DefragOnReject, MigrationBudget, PlannerStack};
+    use grmu::policies::grmu::{Grmu, GrmuConfig};
+    let mut migrated_somewhere = false;
+    for seed in [42u64, 19, 7] {
+        let workload = Workload::generate(TraceConfig::small(seed));
+        let cfg = PolicyConfig::new().heavy_frac(0.25);
+        let (dec_a, res_a) = replay_decisions("grmu", &cfg, &workload, seed);
+        let composed = BasketsPlusPlanners {
+            inner: Grmu::new(GrmuConfig {
+                heavy_capacity_frac: 0.25,
+                consolidation_interval_hours: None,
+                defrag_enabled: false,
+                ..GrmuConfig::default()
+            }),
+            stack: PlannerStack::new(MigrationBudget::unlimited())
+                .with(Box::new(DefragOnReject::new(true))),
+            events: Vec::new(),
+        };
+        let (dec_b, res_b) = replay_policy(Box::new(composed), &workload, seed);
+        assert_eq!(dec_a, dec_b, "seed {seed}: decision sequences diverged");
+        assert_eq!(
+            res_a.migration_events, res_b.migration_events,
+            "seed {seed}: migration events diverged"
+        );
+        assert_eq!(res_a.per_profile, res_b.per_profile, "seed {seed}");
+        assert_eq!(res_a.rejections, res_b.rejections, "seed {seed}");
+        assert_eq!(res_a.samples, res_b.samples, "seed {seed}");
+        migrated_somewhere |= res_a.migrations() > 0;
+    }
+    assert!(migrated_somewhere, "the lock is vacuous if no seed migrates");
+}
+
+/// Acceptance criterion: composed `base+planner` registry variants
+/// decide byte-identically with and without the cluster index — the
+/// same determinism contract every base policy honors extends through
+/// the planner layer (defrag's fragmentation fast path, consolidation,
+/// the frag-gradient drain).
+#[test]
+fn composed_policies_decide_identically_indexed_vs_scan() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    let cfg = PolicyConfig::new()
+        .heavy_frac(0.25)
+        .consolidation_hours(Some(12))
+        .frag_threshold(0.5);
+    for name in ["ff+defrag", "mcc+defrag", "bf+consolidate", "ff+frag-gradient"] {
+        assert_equivalent(name, &cfg, &workload, 42);
+    }
+}
+
+/// A zero migration budget starves every planner, so budgeted GRMU
+/// decides exactly like the dual-basket-only ablation — and a budgeted
+/// composed policy exactly like its plain base.
+#[test]
+fn zero_migration_budget_reduces_to_the_migration_free_variant() {
+    use grmu::migrate::MigrationBudget;
+    let workload = Workload::generate(TraceConfig::small(42));
+    let base = PolicyConfig::new().heavy_frac(0.25);
+    let starved = base.clone().migration_budget(MigrationBudget::unlimited().per_interval(0));
+    let (dec_a, res_a) = replay_decisions("grmu", &starved, &workload, 42);
+    let (dec_b, res_b) = replay_decisions("grmu-db", &base, &workload, 42);
+    assert_eq!(dec_a, dec_b, "budget-0 grmu must decide like grmu-db");
+    assert_eq!(res_a.migrations(), 0);
+    assert_eq!(res_b.migrations(), 0);
+    let (dec_c, res_c) = replay_decisions("mcc+defrag", &starved, &workload, 42);
+    let (dec_d, _) = replay_decisions("mcc", &base, &workload, 42);
+    assert_eq!(dec_c, dec_d, "budget-0 mcc+defrag must decide like mcc");
+    assert_eq!(res_c.migrations(), 0);
+}
+
+/// Migration-cost accounting is consistent across layers: the
+/// `SimResult` aggregates equal a straight fold over the event log, the
+/// migrated-VM share is bounded by the event share, and every event
+/// carries the block size of its profile.
+#[test]
+fn migration_cost_accounting_is_consistent() {
+    use grmu::policies::MigrationKind;
+    // Find a seed that actually migrates (defrag fires on rejections, so
+    // in practice the first one does; the loop keeps the test robust).
+    let mut picked = None;
+    for seed in [42u64, 19, 7, 23] {
+        let workload = Workload::generate(TraceConfig::small(seed));
+        let cfg = PolicyConfig::new().heavy_frac(0.2).consolidation_hours(Some(12));
+        let (_, res) = replay_decisions("grmu", &cfg, &workload, seed);
+        if res.migrations() > 0 {
+            picked = Some(res);
+            break;
+        }
+    }
+    let res = picked.expect("no seed produced migrations to check accounting on");
+    let intra: u64 = res
+        .migration_events
+        .iter()
+        .filter(|e| e.kind == MigrationKind::Intra)
+        .map(|e| e.blocks as u64)
+        .sum();
+    assert_eq!(res.migration_cost(MigrationKind::Intra), intra * MigrationKind::Intra.weight());
+    assert_eq!(
+        res.total_migration_cost(),
+        res.migration_cost(MigrationKind::Intra) + res.migration_cost(MigrationKind::Inter)
+    );
+    assert!(res.migrated_vm_share() <= res.migration_share());
+    assert!(res.migrated_vms() <= res.migrations());
+    for e in &res.migration_events {
+        assert!(e.blocks > 0 && e.cost() >= e.blocks as u64);
+        assert_eq!(e.kind == MigrationKind::Intra, e.from == e.to);
+    }
 }

@@ -226,7 +226,7 @@ fn heuristics_never_beat_the_ilp_bound() {
         let sol = IlpSolver::new(inst).solve().unwrap();
         for policy in registry.names() {
             let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
-            let mut p = registry.build(policy, &cfg).unwrap();
+            let mut p = registry.build(&policy, &cfg).unwrap();
             let mut ctx = PolicyCtx::default();
             let accepted = p
                 .place_batch(&mut dc, &vms, &mut ctx)

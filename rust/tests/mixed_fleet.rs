@@ -30,9 +30,11 @@ fn all_policies_run_mixed_fleets_end_to_end() {
     // runs through every policy with integrity checks on, and the typed
     // rejection breakdown stays exact.
     let workload = mixed_workload(42);
+    // names() includes the composed base+planner migration variants, so
+    // this also drives the planner layer end-to-end on a mixed fleet.
     for name in PolicyRegistry::standard().names() {
         let policy = PolicyRegistry::standard()
-            .build(name, &PolicyConfig::new().heavy_frac(0.3).consolidation_hours(Some(24)))
+            .build(&name, &PolicyConfig::new().heavy_frac(0.3).consolidation_hours(Some(24)))
             .unwrap();
         let dc = DataCenter::new(workload.hosts.clone());
         let mut sim = Simulation::new(dc, policy, &workload.vms);
@@ -123,6 +125,45 @@ fn grmu_heavy_basket_serves_every_models_whole_gpu_profile() {
         assert_eq!(dc.gpu(r).free_blocks(), 0, "whole-GPU profile fills the part");
     }
     dc.check_integrity().unwrap();
+}
+
+#[test]
+fn migration_events_stay_model_coherent_on_mixed_fleets() {
+    // Every migration a policy performs on a mixed fleet — GRMU's
+    // basket-scoped planners and the cluster-scoped composed stacks
+    // alike — records source and destination GPUs of the event's own
+    // model, and intra events never change GPUs.
+    use grmu::policies::MigrationKind;
+    let workload = mixed_workload(42);
+    for name in ["grmu", "mcc+defrag", "ff+consolidate", "ff+defrag+frag-gradient"] {
+        let policy = PolicyRegistry::standard()
+            .build(
+                name,
+                &PolicyConfig::new()
+                    .heavy_frac(0.2)
+                    .consolidation_hours(Some(12))
+                    .frag_threshold(0.5),
+            )
+            .unwrap();
+        let dc = DataCenter::new(workload.hosts.clone());
+        let mut sim = Simulation::new(dc, policy, &workload.vms);
+        sim.ctx = PolicyCtx::new(42);
+        sim.options = SimulationOptions { integrity_every: 17, drain_cap_hours: 10 * 24 };
+        let r = sim.run();
+        // Rebuild a fleet map to resolve each event's GPUs.
+        let fleet = DataCenter::new(workload.hosts.clone());
+        for ev in &r.migration_events {
+            assert_eq!(fleet.gpu(ev.from).model(), ev.model, "{name}: {ev:?}");
+            assert_eq!(fleet.gpu(ev.to).model(), ev.model, "{name}: {ev:?}");
+            assert_eq!(ev.kind == MigrationKind::Intra, ev.from == ev.to, "{name}: {ev:?}");
+            assert!(ev.blocks > 0, "{name}: {ev:?}");
+        }
+        assert_eq!(
+            r.total_migration_cost(),
+            r.migration_events.iter().map(|e| e.cost()).sum::<u64>(),
+            "{name}"
+        );
+    }
 }
 
 #[test]
@@ -274,7 +315,7 @@ fn foreign_profile_requests_reject_not_crash() {
     for name in PolicyRegistry::standard().names() {
         let mut dc = DataCenter::new(hosts.clone());
         let mut policy = PolicyRegistry::standard()
-            .build(name, &PolicyConfig::new())
+            .build(&name, &PolicyConfig::new())
             .unwrap();
         let mut ctx = PolicyCtx::default();
         let out = policy.place_batch(&mut dc, &[workload_vm], &mut ctx);

@@ -35,7 +35,9 @@ fn run(policy: &str, seed: u64, heavy: f64, consolidation: Option<u64>) -> grmu:
     sim.run()
 }
 
-fn all_names() -> Vec<&'static str> {
+fn all_names() -> Vec<String> {
+    // Includes the composed base+planner migration variants, so every
+    // invariant below also covers the planner layer end-to-end.
     PolicyRegistry::standard().names()
 }
 
@@ -43,7 +45,7 @@ fn all_names() -> Vec<&'static str> {
 fn all_policies_complete_with_integrity_checks_on() {
     for policy in all_names() {
         for seed in [1u64, 2, 3] {
-            let r = run(policy, seed, 0.3, Some(24));
+            let r = run(&policy, seed, 0.3, Some(24));
             assert!(r.requested > 0);
             assert!(r.accepted <= r.requested, "{policy} seed {seed}");
             // The typed breakdown accounts for every refusal.
@@ -75,8 +77,8 @@ fn identical_request_streams_across_policies() {
 #[test]
 fn determinism_same_seed_same_result() {
     for policy in all_names() {
-        let a = run(policy, 11, 0.3, Some(12));
-        let b = run(policy, 11, 0.3, Some(12));
+        let a = run(&policy, 11, 0.3, Some(12));
+        let b = run(&policy, 11, 0.3, Some(12));
         assert_eq!(a.accepted, b.accepted, "{policy}");
         assert_eq!(a.rejections, b.rejections, "{policy}");
         assert_eq!(a.migration_events, b.migration_events, "{policy}");
@@ -109,7 +111,7 @@ fn cluster_fully_drains_after_last_departure() {
             ..TraceConfig::default()
         });
         let dc = DataCenter::new(workload.hosts.clone());
-        let p = build(policy, 0.3, Some(6));
+        let p = build(&policy, 0.3, Some(6));
         let mut sim = Simulation::new(dc, p, &workload.vms);
         sim.options.integrity_every = 1;
         let r = sim.run();
@@ -132,7 +134,7 @@ fn acceptance_rate_monotone_niceness_of_capacity() {
         .collect();
     let big_dc = DataCenter::new(big_hosts);
     for policy in ["ff", "bf", "grmu"] {
-        let mut p1 = build(policy, 0.3, None);
+        let mut p1 = build(&policy, 0.3, None);
         let mut small = small_dc.clone();
         let mut ctx1 = PolicyCtx::default();
         let acc_small: usize = p1
@@ -140,7 +142,7 @@ fn acceptance_rate_monotone_niceness_of_capacity() {
             .iter()
             .filter(|d| d.is_placed())
             .count();
-        let mut p2 = build(policy, 0.3, None);
+        let mut p2 = build(&policy, 0.3, None);
         let mut big = big_dc.clone();
         let mut ctx2 = PolicyCtx::default();
         let acc_big: usize = p2
@@ -161,7 +163,7 @@ fn no_gpu_ever_oversubscribed() {
     let workload = Workload::generate(TraceConfig::small(21));
     for policy in all_names() {
         let mut dc = DataCenter::new(workload.hosts.clone());
-        let mut p = build(policy, 0.3, None);
+        let mut p = build(&policy, 0.3, None);
         let mut ctx = PolicyCtx::default();
         let decisions = p.place_batch(&mut dc, &workload.vms, &mut ctx);
         dc.check_integrity().unwrap();
