@@ -21,6 +21,19 @@ cargo bench --no-run --quiet        # benches must keep building end-to-end
 echo "== cargo test -q"
 cargo test -q
 
+echo "== fault-scenario smoke run"
+# One end-to-end pass of the ops subsystem: faults, drains, the
+# admission queue and preemption on the quick workload, plus the
+# availability sweep axes. Catches CLI/reporting regressions the unit
+# tests can't see.
+cargo run --release --quiet -- simulate --quick --policy grmu \
+    --mtbf 400 --drain-rate 1 --queue-cap 16 --queue-ttl 12 \
+    --preempt --priority-frac 0.1 --arrival-process bursty >/dev/null
+cargo run --release --quiet -- sweep --quick --mtbf-axis 0,400 --drain-axis 0,2 >/dev/null
+
+echo "== cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 if [ "${SKIP_FMT:-0}" != "1" ]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check"

@@ -16,6 +16,7 @@
 //! `_scan` variants of the readers survive as that reference (and as the
 //! "before" side of `benches/engine.rs`).
 
+use super::health::HealthState;
 use super::host::Host;
 use super::index::ClusterIndex;
 use super::vm::{VmId, VmSpec};
@@ -102,13 +103,24 @@ pub struct DataCenter {
     index: ClusterIndex,
     /// Activity aggregates, kept coherent by every mutation below.
     activity: ActivityCounters,
+    /// GPUs currently unschedulable (own health or their host's), kept
+    /// coherent by the health mutators; read per interval for the
+    /// availability metric.
+    offline_gpus: usize,
 }
 
 impl DataCenter {
     pub fn new(hosts: Vec<Host>) -> DataCenter {
         let index = ClusterIndex::build(&hosts);
         let activity = ActivityCounters::build(&hosts);
-        DataCenter { hosts, locations: HashMap::new(), demands: HashMap::new(), index, activity }
+        DataCenter {
+            hosts,
+            locations: HashMap::new(),
+            demands: HashMap::new(),
+            index,
+            activity,
+            offline_gpus: 0,
+        }
     }
 
     /// Apply a host's active↔idle flip to the activity counters. Called
@@ -200,6 +212,113 @@ impl DataCenter {
         self.locations.len()
     }
 
+    /// Operational health of one GPU (the device's own state; its host
+    /// may be unhealthy independently).
+    #[inline]
+    pub fn gpu_health(&self, r: GpuRef) -> HealthState {
+        self.hosts[r.host as usize].gpu_health(r.gpu as usize)
+    }
+
+    /// Operational health of one host.
+    #[inline]
+    pub fn host_health(&self, id: u32) -> HealthState {
+        self.hosts[id as usize].health()
+    }
+
+    /// Is the GPU schedulable (device *and* host healthy)?
+    #[inline]
+    pub fn gpu_available(&self, r: GpuRef) -> bool {
+        self.hosts[r.host as usize].gpu_available(r.gpu as usize)
+    }
+
+    /// Is the host schedulable?
+    #[inline]
+    pub fn host_available(&self, id: u32) -> bool {
+        self.hosts[id as usize].health().allows_placement()
+    }
+
+    /// GPUs currently unschedulable (own health or their host's) — the
+    /// numerator of the per-interval availability metric. O(1).
+    #[inline]
+    pub fn offline_gpus(&self) -> usize {
+        self.offline_gpus
+    }
+
+    /// VMs resident on one GPU, in ascending id order (the deterministic
+    /// eviction order on a device failure).
+    pub fn vms_on_gpu(&self, r: GpuRef) -> Vec<VmId> {
+        let mut vms: Vec<VmId> = self.gpu(r).instances().iter().map(|i| i.vm).collect();
+        vms.sort_unstable();
+        vms
+    }
+
+    /// VMs resident on one host, GPU-major then ascending id (the
+    /// deterministic eviction/evacuation order on a host event).
+    pub fn vms_on_host(&self, id: u32) -> Vec<VmId> {
+        let mut out = Vec::new();
+        for g in 0..self.hosts[id as usize].gpus().len() {
+            out.extend(self.vms_on_gpu(GpuRef { host: id, gpu: g as u8 }));
+        }
+        out
+    }
+
+    /// Unschedulable-GPU count of one host under a hypothetical host
+    /// health (used by the health mutators to keep `offline_gpus` O(#GPUs
+    /// of the touched host)).
+    fn host_offline_gpus(&self, id: u32, health: HealthState) -> usize {
+        let h = &self.hosts[id as usize];
+        if !health.allows_placement() {
+            return h.gpus().len();
+        }
+        (0..h.gpus().len()).filter(|&g| !h.gpu_health(g).allows_placement()).count()
+    }
+
+    /// Set the health of one GPU, keeping the [`ClusterIndex`] contract:
+    /// the device's bucket entries are detached when it stops being
+    /// schedulable and re-attached when it recovers. The caller must
+    /// have evicted resident VMs *before* marking a device failed/banned
+    /// (while the index still covers it); `check_integrity` enforces the
+    /// resulting emptiness.
+    pub fn set_gpu_health(&mut self, r: GpuRef, health: HealthState) {
+        let host = &self.hosts[r.host as usize];
+        let was = host.gpu_available(r.gpu as usize);
+        let host_ok = host.health().allows_placement();
+        let now = host_ok && health.allows_placement();
+        self.hosts[r.host as usize].gpu_health[r.gpu as usize] = health;
+        if was == now {
+            return; // host down, or no schedulability flip: index untouched
+        }
+        let gpu = self.gpu(r);
+        let (model, occ) = (gpu.model(), gpu.occupancy());
+        if now {
+            self.index.attach_gpu(r, model, occ);
+            self.offline_gpus -= 1;
+        } else {
+            self.index.detach_gpu(r, model, occ);
+            self.offline_gpus += 1;
+        }
+    }
+
+    /// Set the health of one host, attaching/detaching its headroom
+    /// classes, model counts and every schedulable GPU of the machine on
+    /// availability transitions. As with [`DataCenter::set_gpu_health`],
+    /// evictions must happen before the transition to failed/banned.
+    pub fn set_host_health(&mut self, id: u32, health: HealthState) {
+        let old = self.hosts[id as usize].health();
+        if old == health {
+            return;
+        }
+        let offline_before = self.host_offline_gpus(id, old);
+        let offline_after = self.host_offline_gpus(id, health);
+        self.hosts[id as usize].health = health;
+        self.offline_gpus = self.offline_gpus + offline_after - offline_before;
+        match (old.allows_placement(), health.allows_placement()) {
+            (true, false) => self.index.detach_host(&self.hosts[id as usize]),
+            (false, true) => self.index.attach_host(&self.hosts[id as usize]),
+            _ => {} // still attached or still detached
+        }
+    }
+
     /// Place `vm` on the given GPU at the given placement, reserving host
     /// CPU/RAM. Caller must have validated feasibility (CPU/RAM and block
     /// availability); debug builds assert it.
@@ -207,6 +326,8 @@ impl DataCenter {
         debug_assert!(self.locations.get(&vm.id).is_none(), "VM {} already placed", vm.id);
         let host = &mut self.hosts[gpu_ref.host as usize];
         let was_active = host.is_active();
+        let host_avail = host.health.allows_placement();
+        let gpu_avail = host.gpu_available(gpu_ref.gpu as usize);
         let old_free = (host.free_cpus(), host.free_ram());
         host.reserve(vm.cpus, vm.ram_gb);
         let new_free = (host.free_cpus(), host.free_ram());
@@ -215,8 +336,14 @@ impl DataCenter {
         let old_occ = gpu.occupancy();
         gpu.place(vm.id, placement);
         let new_occ = gpu.occupancy();
-        self.index.update_host(old_free, new_free);
-        self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
+        // Unavailable capacity has no index entries to maintain (the
+        // health contract); same gate in every mutator below.
+        if host_avail {
+            self.index.update_host(old_free, new_free);
+        }
+        if gpu_avail {
+            self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
+        }
         self.note_host_transition(gpu_ref.host, was_active);
         self.locations.insert(vm.id, VmLocation { gpu: gpu_ref, placement });
         self.demands.insert(vm.id, (vm.cpus, vm.ram_gb));
@@ -229,6 +356,8 @@ impl DataCenter {
         let (cpus, ram) = self.demands.remove(&vm).unwrap_or((0, 0));
         let host = &mut self.hosts[loc.gpu.host as usize];
         let was_active = host.is_active();
+        let host_avail = host.health.allows_placement();
+        let gpu_avail = host.gpu_available(loc.gpu.gpu as usize);
         let old_free = (host.free_cpus(), host.free_ram());
         let gpu = host.gpu_mut(loc.gpu.gpu as usize);
         let model = gpu.model();
@@ -237,8 +366,12 @@ impl DataCenter {
         let new_occ = gpu.occupancy();
         host.release(cpus, ram);
         let new_free = (host.free_cpus(), host.free_ram());
-        self.index.update_host(old_free, new_free);
-        self.index.update_gpu(loc.gpu, model, old_occ, new_occ);
+        if host_avail {
+            self.index.update_host(old_free, new_free);
+        }
+        if gpu_avail {
+            self.index.update_gpu(loc.gpu, model, old_occ, new_occ);
+        }
         self.note_host_transition(loc.gpu.host, was_active);
         Some(loc)
     }
@@ -255,7 +388,9 @@ impl DataCenter {
         gpu.remove_vm(vm).expect("instance present");
         gpu.place(vm, new_placement);
         let new_occ = gpu.occupancy();
-        self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
+        if self.gpu_available(gpu_ref) {
+            self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
+        }
     }
 
     /// Apply an intra-GPU re-pack plan (the defragmentation path): all
@@ -278,7 +413,9 @@ impl DataCenter {
             self.locations
                 .insert(inst.vm, VmLocation { gpu: gpu_ref, placement: *new_placement });
         }
-        self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
+        if self.gpu_available(gpu_ref) {
+            self.index.update_gpu(gpu_ref, model, old_occ, new_occ);
+        }
     }
 
     /// Move a VM's GI to a different GPU (inter-GPU migration). Host
@@ -288,32 +425,44 @@ impl DataCenter {
         let loc = *self.locations.get(&vm).expect("VM resident");
         let (cpus, ram) = *self.demands.get(&vm).expect("VM demands known");
         let src = loc.gpu;
+        let src_avail = self.gpu_available(src);
         let src_gpu = self.hosts[src.host as usize].gpu_mut(src.gpu as usize);
         let src_model = src_gpu.model();
         let src_old_occ = src_gpu.occupancy();
         src_gpu.remove_vm(vm);
         let src_new_occ = src_gpu.occupancy();
-        self.index.update_gpu(src, src_model, src_old_occ, src_new_occ);
+        if src_avail {
+            self.index.update_gpu(src, src_model, src_old_occ, src_new_occ);
+        }
         if src.host != dst.host {
             let src_host = &mut self.hosts[src.host as usize];
             let src_was_active = src_host.is_active();
+            let src_host_avail = src_host.health.allows_placement();
             let old_free = (src_host.free_cpus(), src_host.free_ram());
             src_host.release(cpus, ram);
-            self.index.update_host(old_free, (src_host.free_cpus(), src_host.free_ram()));
+            if src_host_avail {
+                self.index.update_host(old_free, (src_host.free_cpus(), src_host.free_ram()));
+            }
             self.note_host_transition(src.host, src_was_active);
             let dst_host = &mut self.hosts[dst.host as usize];
             let dst_was_active = dst_host.is_active();
+            let dst_host_avail = dst_host.health.allows_placement();
             let old_free = (dst_host.free_cpus(), dst_host.free_ram());
             dst_host.reserve(cpus, ram);
-            self.index.update_host(old_free, (dst_host.free_cpus(), dst_host.free_ram()));
+            if dst_host_avail {
+                self.index.update_host(old_free, (dst_host.free_cpus(), dst_host.free_ram()));
+            }
             self.note_host_transition(dst.host, dst_was_active);
         }
+        let dst_avail = self.gpu_available(dst);
         let dst_gpu = self.hosts[dst.host as usize].gpu_mut(dst.gpu as usize);
         let dst_model = dst_gpu.model();
         let dst_old_occ = dst_gpu.occupancy();
         dst_gpu.place(vm, placement);
         let dst_new_occ = dst_gpu.occupancy();
-        self.index.update_gpu(dst, dst_model, dst_old_occ, dst_new_occ);
+        if dst_avail {
+            self.index.update_gpu(dst, dst_model, dst_old_occ, dst_new_occ);
+        }
         self.locations.insert(vm, VmLocation { gpu: dst, placement });
     }
 
@@ -456,6 +605,37 @@ impl DataCenter {
                     }
                 }
             }
+        }
+        // Health contract: failed/banned capacity holds no VMs (draining
+        // may — evacuation is best-effort), the index covers schedulable
+        // capacity only (the rebuild below skips unhealthy capacity, so
+        // the equality comparison verifies it), and the offline-GPU
+        // counter matches a fleet recount.
+        let mut offline = 0usize;
+        for h in &self.hosts {
+            let host_resident_ok = h.health().allows_residency();
+            for (g_idx, g) in h.gpus().iter().enumerate() {
+                if !h.gpu_available(g_idx) {
+                    offline += 1;
+                }
+                if !(host_resident_ok && h.gpu_health(g_idx).allows_residency())
+                    && !g.instances().is_empty()
+                {
+                    return Err(format!(
+                        "host {} GPU {g_idx} is {}/{} but holds {} VMs",
+                        h.id,
+                        h.health(),
+                        h.gpu_health(g_idx),
+                        g.instances().len()
+                    ));
+                }
+            }
+        }
+        if offline != self.offline_gpus {
+            return Err(format!(
+                "offline-GPU counter {} != {offline} per recount",
+                self.offline_gpus
+            ));
         }
         if ClusterIndex::build(&self.hosts) != self.index {
             return Err("cluster index out of sync with GPU/host state".into());
@@ -785,5 +965,81 @@ mod tests {
         // Corrupt: remove from GPU behind the index's back.
         dc.host_mut(0).gpu_mut(0).remove_vm(1);
         assert!(dc.check_integrity().is_err());
+    }
+
+    #[test]
+    fn gpu_failure_leaves_and_reenters_the_index() {
+        use crate::cluster::HealthState;
+        let mut dc = small_dc();
+        let r = GpuRef { host: 0, gpu: 0 };
+        dc.set_gpu_health(r, HealthState::Failed { until: 100 });
+        assert!(!dc.gpu_available(r));
+        assert_eq!(dc.offline_gpus(), 1);
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        dc.check_integrity().unwrap();
+        // Occupancy changes while offline leave the index untouched; the
+        // re-attach picks up the live occupancy.
+        let vm = spec(1, Profile::P7g40gb);
+        dc.place(&vm, r, Placement { profile: Profile::P7g40gb, start: 0 });
+        dc.check_integrity().unwrap();
+        dc.remove(1);
+        dc.set_gpu_health(r, HealthState::Healthy);
+        assert_eq!(dc.offline_gpus(), 0);
+        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn draining_host_keeps_residents_but_leaves_the_index() {
+        use crate::cluster::HealthState;
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P2g10gb);
+        let r = GpuRef { host: 0, gpu: 0 };
+        dc.place(&vm, r, Placement { profile: Profile::P2g10gb, start: 0 });
+        dc.set_host_health(0, HealthState::Draining);
+        assert!(!dc.host_available(0));
+        assert_eq!(dc.offline_gpus(), 2); // both GPUs of host 0
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        assert_eq!(dc.index().num_hosts(), 1);
+        assert_eq!(dc.vms_on_host(0), vec![1]);
+        dc.check_integrity().unwrap();
+        // Departures on a drained host keep every structure coherent.
+        dc.remove(1);
+        dc.check_integrity().unwrap();
+        dc.set_host_health(0, HealthState::Healthy);
+        assert_eq!(dc.offline_gpus(), 0);
+        assert_eq!(dc.index().num_hosts(), 2);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn failed_gpu_holding_a_vm_fails_integrity() {
+        use crate::cluster::HealthState;
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P1g5gb);
+        let r = GpuRef { host: 0, gpu: 0 };
+        dc.place(&vm, r, Placement { profile: Profile::P1g5gb, start: 6 });
+        dc.set_gpu_health(r, HealthState::Banned);
+        assert!(dc.check_integrity().is_err(), "banned GPU still holds a VM");
+        dc.remove(1);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn migrate_off_a_draining_host_restores_health_when_done() {
+        use crate::cluster::HealthState;
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P3g20gb);
+        let src = GpuRef { host: 0, gpu: 0 };
+        let dst = GpuRef { host: 1, gpu: 0 };
+        dc.place(&vm, src, Placement { profile: Profile::P3g20gb, start: 0 });
+        dc.set_host_health(0, HealthState::Draining);
+        dc.check_integrity().unwrap();
+        dc.migrate(1, dst, Placement { profile: Profile::P3g20gb, start: 0 });
+        assert_eq!(dc.locate(1).unwrap().gpu, dst);
+        assert!(dc.vms_on_host(0).is_empty());
+        dc.check_integrity().unwrap();
+        dc.set_host_health(0, HealthState::Healthy);
+        dc.check_integrity().unwrap();
     }
 }

@@ -1,0 +1,116 @@
+//! Health state for GPUs and hosts — the operational-reality layer.
+//!
+//! Production MIG fleets never run on uniformly healthy hardware:
+//! devices fail and come back (MTBF/MTTR), hosts get drained for
+//! maintenance, and repeatedly flapping parts are taken out of rotation
+//! (LumosCore tracks exactly this as `banned_gpu_status`). The
+//! [`HealthState`] here is that scheduler input, attached to every GPU
+//! and host of a [`super::DataCenter`].
+//!
+//! The contract with the [`super::ClusterIndex`] is strict: a GPU is
+//! *schedulable* iff the GPU **and** its host both
+//! [`allow placement`](HealthState::allows_placement), and the index
+//! holds entries for schedulable capacity only. `DataCenter` enforces
+//! the contract in its health mutators (`set_gpu_health` /
+//! `set_host_health` attach/detach index entries on availability
+//! transitions) and `check_integrity` re-verifies it on every call —
+//! the existing "rebuild equals incremental" comparison is the anchor,
+//! because [`super::ClusterIndex::build`] itself skips unhealthy
+//! capacity.
+
+use crate::cluster::vm::Time;
+use std::fmt;
+
+/// Operational health of one GPU or one host.
+///
+/// The default is [`HealthState::Healthy`]; a fleet that never sees a
+/// fault event stays in the default state everywhere, and every health
+/// check collapses to a branch that is always true — which is what
+/// keeps the ops layer strictly additive (zero-fault runs are
+/// byte-identical to the pre-ops decision stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthState {
+    /// In service; capacity is schedulable.
+    #[default]
+    Healthy,
+    /// Hard failure; resident VMs were evicted. `until` is the repair
+    /// completion time (MTTR draw) recorded for reporting — the actual
+    /// repair is a separate event, so the state machine stays
+    /// event-driven.
+    Failed {
+        /// Expected repair time (informational; the repair event is
+        /// authoritative).
+        until: Time,
+    },
+    /// Maintenance drain in progress: existing VMs may stay resident
+    /// (until evacuation moves them), but no new placements land here.
+    Draining,
+    /// Permanently out of rotation after repeated failures.
+    Banned,
+}
+
+impl HealthState {
+    /// May new VMs be placed on capacity in this state?
+    ///
+    /// Only [`HealthState::Healthy`] capacity is schedulable; a
+    /// draining host keeps its residents but accepts nothing new.
+    #[inline]
+    pub fn allows_placement(&self) -> bool {
+        matches!(self, HealthState::Healthy)
+    }
+
+    /// May VMs *remain* resident in this state? Draining capacity keeps
+    /// its VMs until the evacuation plan moves them; failed or banned
+    /// capacity must be empty (the failure evicted everything).
+    #[inline]
+    pub fn allows_residency(&self) -> bool {
+        matches!(self, HealthState::Healthy | HealthState::Draining)
+    }
+
+    /// Short lowercase label for tables and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Failed { .. } => "failed",
+            HealthState::Draining => "draining",
+            HealthState::Banned => "banned",
+        }
+    }
+}
+
+impl fmt::Display for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_healthy() {
+        assert_eq!(HealthState::default(), HealthState::Healthy);
+        assert!(HealthState::default().allows_placement());
+        assert!(HealthState::default().allows_residency());
+    }
+
+    #[test]
+    fn placement_and_residency_matrix() {
+        let failed = HealthState::Failed { until: 100 };
+        assert!(!failed.allows_placement());
+        assert!(!failed.allows_residency());
+        assert!(!HealthState::Draining.allows_placement());
+        assert!(HealthState::Draining.allows_residency());
+        assert!(!HealthState::Banned.allows_placement());
+        assert!(!HealthState::Banned.allows_residency());
+    }
+
+    #[test]
+    fn names_render() {
+        assert_eq!(HealthState::Healthy.to_string(), "healthy");
+        assert_eq!(HealthState::Failed { until: 5 }.to_string(), "failed");
+        assert_eq!(HealthState::Draining.to_string(), "draining");
+        assert_eq!(HealthState::Banned.to_string(), "banned");
+    }
+}

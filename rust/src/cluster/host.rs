@@ -1,5 +1,6 @@
 //! Physical machines (`PM_j` of §6) with CPU/RAM capacities and GPUs.
 
+use crate::cluster::health::HealthState;
 use crate::mig::{GpuModel, GpuState};
 
 /// A physical machine: CPU/RAM capacities (`C_j`, `R_j` of Eq. 6–7) and a
@@ -20,6 +21,10 @@ pub struct Host {
     pub(crate) gpus: Vec<GpuState>,
     /// Number of VMs currently resident (for active-hardware accounting).
     pub(crate) resident_vms: u32,
+    /// Operational health of the whole machine.
+    pub(crate) health: HealthState,
+    /// Operational health per GPU, parallel to `gpus`.
+    pub(crate) gpu_health: Vec<HealthState>,
 }
 
 impl Host {
@@ -40,6 +45,8 @@ impl Host {
             used_ram: 0,
             gpus: models.iter().map(|&m| GpuState::with_model(m)).collect(),
             resident_vms: 0,
+            health: HealthState::Healthy,
+            gpu_health: vec![HealthState::Healthy; models.len()],
         }
     }
 
@@ -71,6 +78,23 @@ impl Host {
     /// Active = hosts at least one VM (`φ_j` of Eq. 19).
     pub fn is_active(&self) -> bool {
         self.resident_vms > 0
+    }
+
+    /// Operational health of the machine.
+    pub fn health(&self) -> HealthState {
+        self.health
+    }
+
+    /// Operational health of one GPU.
+    pub fn gpu_health(&self, idx: usize) -> HealthState {
+        self.gpu_health[idx]
+    }
+
+    /// Is the GPU at `idx` schedulable — both the device and the
+    /// machine must [`allow placement`](HealthState::allows_placement)?
+    #[inline]
+    pub fn gpu_available(&self, idx: usize) -> bool {
+        self.health.allows_placement() && self.gpu_health[idx].allows_placement()
     }
 
     /// Number of resident VMs.

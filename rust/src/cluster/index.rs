@@ -29,6 +29,19 @@
 //! and best-scoring selections over bucket candidates byte-identical to
 //! the pre-index full scans (locked by the indexed-vs-scan equivalence
 //! tests in `rust/tests/decision_api.rs`).
+//!
+//! ## Health contract
+//!
+//! The index covers **schedulable** capacity only: a GPU appears in
+//! buckets iff it and its host are
+//! [`Healthy`](crate::cluster::HealthState); an unavailable host also
+//! leaves the headroom multisets and the per-model host counts.
+//! [`ClusterIndex::build`] skips unhealthy capacity, and
+//! [`super::DataCenter`]'s health mutators attach/detach entries on
+//! availability transitions, so the "rebuild equals incremental"
+//! comparison in `check_integrity` verifies the contract for free. On
+//! an all-healthy fleet every skip condition is vacuous and the index
+//! is bit-for-bit the pre-health one.
 
 use super::datacenter::GpuRef;
 use super::host::Host;
@@ -75,32 +88,83 @@ impl ClusterIndex {
     pub fn build(hosts: &[Host]) -> ClusterIndex {
         let mut idx = ClusterIndex::default();
         for h in hosts {
-            if h.gpus().is_empty() {
+            if h.gpus().is_empty() || !h.health().allows_placement() {
                 continue;
             }
-            idx.host_count += 1;
-            *idx.free_cpus.entry(h.free_cpus()).or_insert(0) += 1;
-            *idx.free_ram.entry(h.free_ram()).or_insert(0) += 1;
-            let mut present = [false; NUM_MODELS];
-            for gpu in h.gpus() {
-                present[gpu.model() as usize] = true;
-            }
-            for (m, here) in present.into_iter().enumerate() {
-                if here {
-                    idx.hosts_with_model[m] += 1;
-                }
-            }
-            for (g, gpu) in h.gpus().iter().enumerate() {
-                let r = GpuRef { host: h.id, gpu: g as u8 };
-                let cap = profile_capacity_for(gpu.model(), gpu.occupancy());
-                for key in gpu.model().profile_keys() {
-                    if cap[key.index()] > 0 {
-                        idx.buckets[key.dense()].insert(r);
-                    }
-                }
-            }
+            idx.attach_host(h);
         }
         idx
+    }
+
+    /// Insert an available host: headroom classes, per-model counts and
+    /// the buckets of its schedulable GPUs. Called by `build` and by
+    /// [`super::DataCenter`] when a host transitions back to healthy.
+    pub(crate) fn attach_host(&mut self, h: &Host) {
+        self.host_count += 1;
+        *self.free_cpus.entry(h.free_cpus()).or_insert(0) += 1;
+        *self.free_ram.entry(h.free_ram()).or_insert(0) += 1;
+        let mut present = [false; NUM_MODELS];
+        for gpu in h.gpus() {
+            present[gpu.model() as usize] = true;
+        }
+        for (m, here) in present.into_iter().enumerate() {
+            if here {
+                self.hosts_with_model[m] += 1;
+            }
+        }
+        for (g, gpu) in h.gpus().iter().enumerate() {
+            if !h.gpu_health(g).allows_placement() {
+                continue;
+            }
+            let r = GpuRef { host: h.id, gpu: g as u8 };
+            self.attach_gpu(r, gpu.model(), gpu.occupancy());
+        }
+    }
+
+    /// Remove a host that became unavailable: the exact inverse of
+    /// [`ClusterIndex::attach_host`] against the same host state.
+    pub(crate) fn detach_host(&mut self, h: &Host) {
+        debug_assert!(self.host_count > 0);
+        self.host_count -= 1;
+        Self::multiset_remove(&mut self.free_cpus, h.free_cpus());
+        Self::multiset_remove(&mut self.free_ram, h.free_ram());
+        let mut present = [false; NUM_MODELS];
+        for gpu in h.gpus() {
+            present[gpu.model() as usize] = true;
+        }
+        for (m, here) in present.into_iter().enumerate() {
+            if here {
+                debug_assert!(self.hosts_with_model[m] > 0);
+                self.hosts_with_model[m] -= 1;
+            }
+        }
+        for (g, gpu) in h.gpus().iter().enumerate() {
+            if !h.gpu_health(g).allows_placement() {
+                continue; // was never in the buckets
+            }
+            let r = GpuRef { host: h.id, gpu: g as u8 };
+            self.detach_gpu(r, gpu.model(), gpu.occupancy());
+        }
+    }
+
+    /// Insert one schedulable GPU into the buckets its occupancy allows.
+    pub(crate) fn attach_gpu(&mut self, r: GpuRef, model: GpuModel, occ: BlockMask) {
+        let cap = profile_capacity_for(model, occ);
+        for key in model.profile_keys() {
+            if cap[key.index()] > 0 {
+                self.buckets[key.dense()].insert(r);
+            }
+        }
+    }
+
+    /// Remove one GPU from every bucket its occupancy had it in.
+    pub(crate) fn detach_gpu(&mut self, r: GpuRef, model: GpuModel, occ: BlockMask) {
+        let cap = profile_capacity_for(model, occ);
+        for key in model.profile_keys() {
+            if cap[key.index()] > 0 {
+                self.buckets[key.dense()].remove(&r);
+            }
+        }
     }
 
     /// GPUs where `profile` currently fits (all of the profile's model),
@@ -199,14 +263,18 @@ impl ClusterIndex {
         if old == new {
             return;
         }
-        match set.get_mut(&old) {
+        Self::multiset_remove(set, old);
+        *set.entry(new).or_insert(0) += 1;
+    }
+
+    fn multiset_remove(set: &mut BTreeMap<u32, u32>, class: u32) {
+        match set.get_mut(&class) {
             Some(n) if *n > 1 => *n -= 1,
             Some(_) => {
-                set.remove(&old);
+                set.remove(&class);
             }
-            None => debug_assert!(false, "headroom multiset missing class {old}"),
+            None => debug_assert!(false, "headroom multiset missing class {class}"),
         }
-        *set.entry(new).or_insert(0) += 1;
     }
 }
 

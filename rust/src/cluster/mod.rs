@@ -12,13 +12,18 @@
 //!   buckets and host headroom multisets, maintained incrementally by
 //!   every `DataCenter` mutation so policies answer placement queries
 //!   without scanning the cluster.
+//! * [`health`] — operational [`health::HealthState`] of GPUs and hosts
+//!   (failed / draining / banned); the index covers schedulable
+//!   capacity only, a contract `check_integrity` verifies.
 
 pub mod datacenter;
+pub mod health;
 pub mod host;
 pub mod index;
 pub mod vm;
 
 pub use datacenter::{DataCenter, GpuRef, VmLocation};
+pub use health::HealthState;
 pub use host::Host;
 pub use index::ClusterIndex;
 pub use vm::{Time, VmId, VmSpec, HOUR};

@@ -22,6 +22,7 @@
 
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::{DataCenter, GpuRef};
+use crate::ops::{FaultInjector, QueueConfig};
 use crate::policies::{Policy, PolicyCtx, RejectCounts, RejectReason};
 use crate::sim::metrics::acceptance_rate;
 use crate::sim::{EventCore, SimResult};
@@ -151,6 +152,19 @@ impl Coordinator {
     /// The interval owning an arrival at `t` (see [`EventCore::window_of`]).
     pub fn window_of(&self, t: Time) -> u64 {
         self.core.window_of(t)
+    }
+
+    /// Install a fault/maintenance schedule on the underlying event core
+    /// (see [`crate::ops`]). Call before serving; the coordinator then
+    /// replays the same schedule at the same interval points the
+    /// simulator would, preserving run equivalence.
+    pub fn set_fault_schedule(&mut self, injector: FaultInjector) {
+        self.core.set_fault_schedule(injector);
+    }
+
+    /// Configure admission queueing on the underlying event core.
+    pub fn set_admission_queue(&mut self, cfg: QueueConfig) {
+        self.core.set_admission_queue(cfg);
     }
 
     /// Decide one batch synchronously. Requests must be time-ordered;

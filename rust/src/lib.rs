@@ -50,10 +50,21 @@
 //!   Placement candidates come from the cluster index;
 //!   `PolicyConfig::use_index(false)` rebuilds the brute-force
 //!   full-scan variants used by the equivalence tests and benches.
+//! * [`ops`] — the deterministic operational model: GPU/host
+//!   [`cluster::HealthState`] transitions (fail / repair / drain / ban)
+//!   drawn by a seeded [`ops::FaultInjector`] with per-model MTBF/MTTR,
+//!   all-or-nothing drain evacuation through the planner layer
+//!   ([`ops::plan_evacuation`]), and a bounded FIFO
+//!   [`ops::AdmissionQueue`] with TTLs and priority-tier preemption.
+//!   The `ClusterIndex` covers schedulable capacity only;
+//!   `check_integrity` verifies the health/index contract. With every
+//!   rate at zero (the default) the whole layer is byte-invisible.
 //! * [`sim`] — the shared [`sim::EventCore`] (departure heap, interval
-//!   batching, maintenance ticks, metric sampling) plus the offline
-//!   trace-replay [`sim::Simulation`] built on it. Results carry
-//!   per-reason rejection breakdowns and full migration-event logs.
+//!   batching, maintenance ticks, fault replay, admission-queue
+//!   processing, metric sampling) plus the offline trace-replay
+//!   [`sim::Simulation`] built on it. Results carry per-reason
+//!   rejection breakdowns, full migration-event logs, interruption /
+//!   preemption counts, queue-delay samples and fleet availability.
 //! * [`ilp`] — the paper's multi-objective ILP (Eq. 3–26) plus an exact
 //!   in-house MILP solver (dense simplex + branch & bound) used to
 //!   validate the heuristics on small instances.
@@ -154,6 +165,35 @@
 //!   `Arc<[Host]>`/`Arc<[VmSpec]>`
 //!   ([`report::experiments::run_trace`]).
 //!
+//! ## Migration note (ops: health, faults, admission queue)
+//!
+//! The cluster used to be implicitly always-healthy. Capacity now
+//! carries an operational [`cluster::HealthState`]; code written
+//! against the pristine-fleet surface maps as follows:
+//!
+//! * `ClusterIndex::build(&hosts)` (and every incremental update) skips
+//!   capacity whose health forbids placement — buckets, headroom
+//!   multisets and `hosts_with_model` describe *schedulable* capacity.
+//!   The scan-mode reference paths (`visit_candidates`,
+//!   `classify_rejection*`, the planners' candidate walks) gained
+//!   matching `gpu_available`/`host_available` checks, so
+//!   indexed-vs-scan byte-identity is preserved; on an all-healthy
+//!   fleet every check is vacuous and decision streams are unchanged.
+//! * [`policies::RejectReason`] grew `Queued` and `Expired`;
+//!   `RejectCounts` is `[u64; 6]`. `sum(rejections) == requested -
+//!   accepted` still holds at every instant — a queued request counts
+//!   under `Queued` until it is placed (moving to `accepted`) or
+//!   expires (moving to `Expired`).
+//! * Evictions from failures surface as `SimResult::interrupted`,
+//!   queue preemptions as `SimResult::preempted`; neither is a
+//!   rejection. `SimResult::availability` is the mean per-interval
+//!   fraction of schedulable GPUs.
+//! * Mutating health directly on a `Host` is not possible; go through
+//!   `DataCenter::set_gpu_health` / `set_host_health`, which keep the
+//!   index and the offline-GPU counter coherent (residents must be
+//!   evicted *before* a transition to failed/banned —
+//!   `check_integrity` enforces the resulting emptiness).
+//!
 //! ## Migration note (migration-planner layer)
 //!
 //! Defragmentation and consolidation used to be private helpers inside
@@ -193,6 +233,7 @@ pub mod coordinator;
 pub mod ilp;
 pub mod mig;
 pub mod migrate;
+pub mod ops;
 pub mod policies;
 pub mod report;
 #[cfg(feature = "xla")]

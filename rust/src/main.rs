@@ -70,7 +70,7 @@ fn print_help() {
            simulate  --policy NAME [--seed N] [--hosts N] [--pods N]\n\
                      [--heavy-frac 0.3] [--consolidation HOURS] [--trace FILE.csv]\n\
                      [--gpu-models a100-40:0.7,h100-80:0.3] [--planners defrag,consolidate]\n\
-                     [--migration-budget N[:per-vm]] [--quick] [--json FILE]\n\
+                     [--migration-budget N[:per-vm]] [ops flags] [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
@@ -78,8 +78,22 @@ fn print_help() {
                      [--mix ..] [--duration-mu F] [--gpu-models a30:0.3,a100-40:0.7]\n\
                      [--planners ..] [--migration-budget N[:per-vm]]\n\
                      [--quick] [--json FILE]   parallel seeds × policies sweep\n\
+                     --mtbf-axis 0,500,250 [--drain-axis 0,2]   availability sweep instead\n\
            trace     [--seed N] [--out FILE.csv]      dump the synthetic trace\n\
            serve     --policy NAME [--scorer native|xla] [--quick]   online coordinator\n\
+         \n\
+         OPS FLAGS (fault/maintenance model + admission queue; off by default):\n\
+           --mtbf HOURS|model:h,..   per-GPU mean time between failures\n\
+           --mttr HOURS              GPU repair time (default 4)\n\
+           --host-mtbf HOURS / --host-mttr HOURS   whole-host failures\n\
+           --drain-rate R            maintenance drains per host per 1000 h\n\
+           --drain-hours H           drain duration (default 2)\n\
+           --ban-after N             blocklist a GPU after N failures\n\
+           --queue-cap N             admission retry queue capacity\n\
+           --queue-ttl HOURS         queued-request time-to-live (default 24)\n\
+           --preempt                 high-tier arrivals may preempt low-tier VMs\n\
+           --arrival-process P       diurnal | bursty | flash-crowd\n\
+           --priority-frac F         share of VMs promoted to the high tier\n\
          \n\
          GPU MODELS: a100-40 (default) | a30 | a100-80 | h100-80\n\
          \n\
@@ -142,6 +156,46 @@ fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
                 std::process::exit(2);
             }
         }
+    }
+    if let Some(p) = args.get("arrival-process") {
+        match grmu::trace::ArrivalProcess::parse(p) {
+            Some(ap) => cfg.trace.arrival_process = ap,
+            None => {
+                eprintln!("--arrival-process: unknown shape '{p}' (diurnal | bursty | flash-crowd)");
+                std::process::exit(2);
+            }
+        }
+    }
+    cfg.trace.priority_frac = args.num_or("priority-frac", cfg.trace.priority_frac);
+    // --mtbf takes a fleet-wide scalar (hours) or per-model pairs in the
+    // --gpu-models syntax: `--mtbf a100-40:500,h100-80:900`.
+    if let Some(m) = args.get("mtbf") {
+        if let Ok(hours) = m.parse::<f64>() {
+            cfg.ops = cfg.ops.clone().with_gpu_mtbf(hours);
+        } else {
+            match grmu::mig::parse_fleet_mix(m) {
+                Ok(pairs) => {
+                    for (model, hours) in pairs {
+                        cfg.ops.gpu_mtbf_hours[model as usize] = hours;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("--mtbf: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    cfg.ops.gpu_mttr_hours = args.num_or("mttr", cfg.ops.gpu_mttr_hours);
+    cfg.ops.host_mtbf_hours = args.num_or("host-mtbf", cfg.ops.host_mtbf_hours);
+    cfg.ops.host_mttr_hours = args.num_or("host-mttr", cfg.ops.host_mttr_hours);
+    cfg.ops.drain_rate = args.num_or("drain-rate", cfg.ops.drain_rate);
+    cfg.ops.drain_hours = args.num_or("drain-hours", cfg.ops.drain_hours);
+    cfg.ops.ban_after_failures = args.num_or("ban-after", cfg.ops.ban_after_failures);
+    cfg.queue.capacity = args.num_or("queue-cap", cfg.queue.capacity);
+    cfg.queue.ttl_hours = args.num_or("queue-ttl", cfg.queue.ttl_hours);
+    if args.flag("preempt") {
+        cfg.queue.preemption = true;
     }
     cfg
 }
@@ -242,11 +296,22 @@ fn cmd_simulate(args: &Args) {
     if result.migrations() > 0 {
         println!("{}", tables::migration_overhead(std::slice::from_ref(&result)));
     }
+    // The ops table only appears when the fault/queue model is on; the
+    // JSON export always carries the ops block.
+    if cfg.ops.enabled() || cfg.queue.enabled() {
+        println!("{}", tables::ops_summary(std::slice::from_ref(&result)));
+    }
     write_json(args, &result.to_json());
 }
 
 fn cmd_sweep(args: &Args) {
     let cfg = experiment_config(args);
+    // Fault axes turn the command into the availability sweep: one GRMU
+    // run per (MTBF, drain-rate) cell on the configured seed.
+    if args.get("mtbf-axis").is_some() || args.get("drain-axis").is_some() {
+        cmd_availability_sweep(args, &cfg);
+        return;
+    }
     let registry = PolicyRegistry::standard();
     let policies: Vec<String> =
         args.list_or("policies", &PolicyRegistry::COMPARISON.map(|s| s.to_string()));
@@ -305,6 +370,43 @@ fn cmd_sweep(args: &Args) {
                     ("fleet", experiments::fleet_json(&cfg)),
                     ("result", run.result.to_json()),
                 ])
+            })
+            .collect(),
+    );
+    write_json(args, &json);
+}
+
+fn cmd_availability_sweep(args: &Args, cfg: &experiments::ExperimentConfig) {
+    use grmu::policies::RejectReason;
+    let mtbfs: Vec<f64> = args.list_or("mtbf-axis", &[0.0]);
+    let drains: Vec<f64> = args.list_or("drain-axis", &[0.0]);
+    let workload = load_workload(args, cfg);
+    eprintln!(
+        "availability sweep: {} MTBF × {} drain cells on seed {}",
+        mtbfs.len(),
+        drains.len(),
+        cfg.trace.seed
+    );
+    let rows = experiments::availability_sweep(&workload, &mtbfs, &drains, cfg);
+    println!(
+        "{:<28} {:>12} {:>12} {:>11} {:>9} {:>10} {:>8}",
+        "cell", "acceptance", "availability", "interrupted", "preempted", "from queue", "expired"
+    );
+    for (label, r) in &rows {
+        println!(
+            "{label:<28} {:>12.4} {:>12.4} {:>11} {:>9} {:>10} {:>8}",
+            r.overall_acceptance(),
+            r.availability,
+            r.interrupted,
+            r.preempted,
+            r.served_from_queue(),
+            r.rejected(RejectReason::Expired),
+        );
+    }
+    let json = Json::arr(
+        rows.iter()
+            .map(|(label, r)| {
+                Json::obj(vec![("label", label.as_str().into()), ("result", r.to_json())])
             })
             .collect(),
     );

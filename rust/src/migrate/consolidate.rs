@@ -72,13 +72,17 @@ impl MigrationPlanner for PairwiseConsolidate {
 /// planned moves already shifted — the same state the sequential
 /// application will walk through.
 pub fn plan_consolidation(dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan) {
-    // Candidates: half-full, single-profile GPUs (Algorithm 5 line 1).
+    // Candidates: available, half-full, single-profile GPUs (Algorithm 5
+    // line 1). Unavailable capacity (failed/draining — see
+    // [`crate::ops`]) is excluded in both roles: a draining host must
+    // not *receive* guests, and its evacuation is the drain planner's
+    // job, not consolidation's.
     let mut candidates: Vec<GpuRef> = ctx
         .scope
         .gpus(dc)
         .filter(|&r| {
             let g = dc.gpu(r);
-            g.half_full() && g.single_profile()
+            dc.gpu_available(r) && g.half_full() && g.single_profile()
         })
         .collect();
 
@@ -264,6 +268,21 @@ mod tests {
         assert_eq!(loc.gpu, GpuRef { host: 0, gpu: 0 });
         assert_eq!(loc.placement.start, 4);
         dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn unavailable_gpus_are_not_candidates() {
+        use crate::cluster::HealthState;
+        // Two mergeable half-full GPUs on a draining host: consolidation
+        // must leave them alone (the drain evacuation owns that host).
+        let mut dc = DataCenter::new(vec![Host::new(0, 256, 1024, 2)]);
+        place(&mut dc, 1, Profile::P3g20gb, refs(2)[0], 0);
+        place(&mut dc, 2, Profile::P3g20gb, refs(2)[1], 0);
+        dc.set_host_health(0, HealthState::Draining);
+        let light: BTreeSet<GpuRef> = refs(2).into_iter().collect();
+        assert!(consolidate(&mut dc, &light).is_empty());
+        dc.set_host_health(0, HealthState::Healthy);
+        assert_eq!(consolidate(&mut dc, &light).len(), 1);
     }
 
     #[test]

@@ -50,6 +50,12 @@ pub fn most_fragmented(
 ) -> Option<GpuRef> {
     let mut best: Option<(f64, GpuRef)> = None;
     for r in gpus {
+        // Unavailable (failed/draining) capacity is never re-packed:
+        // failed devices are empty anyway, and a draining GPU's
+        // residents belong to the drain evacuation, not to defrag.
+        if !dc.gpu_available(r) {
+            continue;
+        }
         let gpu = dc.gpu(r);
         let frag = if use_index {
             let occ = gpu.occupancy();
@@ -304,6 +310,21 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn unavailable_gpus_never_selected() {
+        use crate::cluster::HealthState;
+        let mut dc = dc_one_gpu();
+        place(&mut dc, 1, Profile::P1g5gb, 4); // fragmented layout
+        dc.set_host_health(0, HealthState::Draining);
+        let r = GpuRef { host: 0, gpu: 0 };
+        let b = basket(&[r]);
+        for use_index in [true, false] {
+            assert!(most_fragmented(&dc, PlanScope::Set(&b).gpus(&dc), use_index).is_none());
+        }
+        dc.set_host_health(0, HealthState::Healthy);
+        assert_eq!(most_fragmented(&dc, PlanScope::Set(&b).gpus(&dc), true), Some(r));
     }
 
     #[test]

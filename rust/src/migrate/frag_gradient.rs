@@ -75,6 +75,13 @@ impl MigrationPlanner for FragGradient {
         let mut total = 0.0;
         let mut occupied = 0usize;
         for r in ctx.scope.gpus(dc) {
+            // Unavailable capacity (failed/draining) neither counts
+            // toward the trigger nor drains here: the ops layer owns its
+            // evacuation, and planning against it would be rejected by
+            // `apply_plan` anyway.
+            if !dc.gpu_available(r) {
+                continue;
+            }
             let g = dc.gpu(r);
             let occ = g.occupancy();
             if occ == 0 {
@@ -107,6 +114,9 @@ impl MigrationPlanner for FragGradient {
                 for r in ctx.scope.gpus(dc) {
                     if r == src || sources.iter().any(|&(_, s)| s == r) {
                         continue;
+                    }
+                    if !dc.gpu_available(r) {
+                        continue; // never migrate onto unavailable capacity
                     }
                     let g = dc.gpu(r);
                     if g.model() != inst.placement.profile.model() {
@@ -223,6 +233,24 @@ mod tests {
         let mut plan = MigrationPlan::new();
         planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
         assert!(plan.is_empty(), "no downhill destination exists: {plan:?}");
+    }
+
+    #[test]
+    fn unavailable_destinations_are_never_chosen() {
+        use crate::cluster::HealthState;
+        // The only viable destination GPU is failed: the drain stalls.
+        let mut dc = fragmented_pair();
+        let g1 = GpuRef { host: 0, gpu: 1 };
+        dc.set_gpu_health(g1, HealthState::Failed { until: 99 });
+        let mut planner = FragGradient::new(0.5, true);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
+        assert!(plan.is_empty(), "{plan:?}");
+        // Repaired, the same round drains the checkerboard.
+        dc.set_gpu_health(g1, HealthState::Healthy);
+        let mut plan = MigrationPlan::new();
+        planner.plan(&dc, &ctx(PlanTrigger::Tick), &mut plan);
+        assert_eq!(plan.num_moves(), 3);
     }
 
     #[test]

@@ -318,6 +318,9 @@ impl DataCenter {
         {
             return Err(format!("no such GPU {to:?}"));
         }
+        if !self.gpu_available(to) {
+            return Err(format!("destination {to:?} is unavailable (failed/draining)"));
+        }
         if placement.profile != loc.placement.profile {
             return Err(format!("VM {vm} migration changes its profile"));
         }
@@ -531,6 +534,23 @@ mod tests {
         plan.push_repack(g0, vec![(inst, Placement { profile: Profile::P2g10gb, start: 0 })]);
         assert!(dc.apply_plan(&plan).is_err());
         dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn rejects_unavailable_destinations() {
+        use crate::cluster::HealthState;
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let (g0, g1) = (GpuRef { host: 0, gpu: 0 }, GpuRef { host: 0, gpu: 1 });
+        place(&mut dc, 1, Profile::P1g5gb, g0, 4);
+        dc.set_gpu_health(g1, HealthState::Failed { until: 50 });
+        let mut plan = MigrationPlan::new();
+        plan.push_migrate(1, g0, g1, Placement { profile: Profile::P1g5gb, start: 0 });
+        assert!(dc.apply_plan(&plan).is_err());
+        dc.check_integrity().unwrap();
+        // Repair the device and the same plan applies.
+        dc.set_gpu_health(g1, HealthState::Healthy);
+        dc.apply_plan(&plan).unwrap();
+        assert_eq!(dc.locate(1).unwrap().gpu, g1);
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! All-or-nothing host evacuation planning for maintenance drains.
+//!
+//! A drain must either move *every* resident off the host or leave the
+//! host untouched — a half-evacuated machine helps no one (the
+//! maintenance still cannot start) and costs real migrations. The
+//! planner therefore builds the whole relocation as one
+//! [`MigrationPlan`] over a [`PlanView`] overlay and returns `None` the
+//! moment any resident has no feasible destination; nothing has touched
+//! the live cluster at that point. The transactional
+//! `DataCenter::apply_plan` then lands the plan atomically (with
+//! rollback on a racing change), exactly like every other planner.
+
+use crate::cluster::{DataCenter, GpuRef};
+use crate::migrate::{MigrationPlan, PlanView};
+use crate::mig::mock_assign;
+
+/// Plan the evacuation of every VM resident on `host`, first-fit over
+/// ascending [`GpuRef`] destinations (the `globalIndex` order shared
+/// with the placement policies — deterministic and
+/// occupancy-overlay-aware). Returns `None` if any resident cannot be
+/// re-homed, or an empty plan if the host holds no VMs.
+pub fn plan_evacuation(dc: &DataCenter, host: u32) -> Option<MigrationPlan> {
+    let mut plan = MigrationPlan::new();
+    let mut view = PlanView::new(dc);
+    for vm in dc.vms_on_host(host) {
+        let loc = dc.location(vm)?;
+        let (cpus, ram_gb) = dc.vm_demands(vm)?;
+        let profile = loc.placement.profile;
+        let mut placed = false;
+        'dest: for h in dc.hosts() {
+            if h.id == host {
+                continue;
+            }
+            for (g, gpu) in h.gpus().iter().enumerate() {
+                if gpu.model() != profile.model() || !h.gpu_available(g) {
+                    continue;
+                }
+                let r = GpuRef { host: h.id, gpu: g as u8 };
+                if !view.host_fits(h.id, cpus, ram_gb) {
+                    break; // CPU/RAM is host-level; no GPU here can take it
+                }
+                if let Some((placement, _)) = mock_assign(view.occupancy(r), profile) {
+                    view.note_move(loc.gpu, loc.placement, r, placement, cpus, ram_gb);
+                    plan.push_migrate(vm, loc.gpu, r, placement);
+                    placed = true;
+                    break 'dest;
+                }
+            }
+        }
+        if !placed {
+            return None; // all-or-nothing: one stranded VM voids the drain
+        }
+    }
+    Some(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DataCenter, Host, HealthState, VmSpec};
+    use crate::mig::{Placement, Profile};
+
+    fn spec(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 4, ram_gb: 8, arrival: 0, departure: 1_000, weight: 1.0 }
+    }
+
+    fn fleet() -> DataCenter {
+        DataCenter::new(vec![Host::new(0, 64, 256, 2), Host::new(1, 64, 256, 2)])
+    }
+
+    #[test]
+    fn empty_host_evacuates_trivially() {
+        let dc = fleet();
+        let plan = plan_evacuation(&dc, 0).unwrap();
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn residents_move_to_ascending_destinations() {
+        let mut dc = fleet();
+        let r0 = GpuRef { host: 0, gpu: 0 };
+        dc.place(&spec(1, Profile::P2g10gb), r0, Placement { profile: Profile::P2g10gb, start: 0 });
+        dc.place(&spec(2, Profile::P1g5gb), r0, Placement { profile: Profile::P1g5gb, start: 2 });
+        let plan = plan_evacuation(&dc, 0).unwrap();
+        assert_eq!(plan.num_moves(), 2);
+        let mut dc2 = dc.clone();
+        dc2.apply_plan(&plan).unwrap();
+        assert!(dc2.vms_on_host(0).is_empty());
+        assert_eq!(dc2.vms_on_host(1).len(), 2);
+        dc2.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn unavailable_destinations_are_skipped_and_may_void_the_drain() {
+        let mut dc = fleet();
+        let r0 = GpuRef { host: 0, gpu: 0 };
+        dc.place(&spec(1, Profile::P7g40gb), r0, Placement { profile: Profile::P7g40gb, start: 0 });
+        // Knock out both GPUs of the only other host: nothing can take
+        // the 7g resident, so the drain must be refused outright.
+        dc.set_gpu_health(GpuRef { host: 1, gpu: 0 }, HealthState::Failed { until: 99 });
+        dc.set_gpu_health(GpuRef { host: 1, gpu: 1 }, HealthState::Banned);
+        assert!(plan_evacuation(&dc, 0).is_none());
+        // Repair one and the plan lands there.
+        dc.set_gpu_health(GpuRef { host: 1, gpu: 0 }, HealthState::Healthy);
+        let plan = plan_evacuation(&dc, 0).unwrap();
+        assert_eq!(plan.num_moves(), 1);
+    }
+
+    #[test]
+    fn overlay_prevents_double_booking_one_destination() {
+        // Two 7g residents, one healthy destination host with two GPUs:
+        // the overlay must send them to *different* GPUs.
+        let mut dc = fleet();
+        dc.place(
+            &spec(1, Profile::P7g40gb),
+            GpuRef { host: 0, gpu: 0 },
+            Placement { profile: Profile::P7g40gb, start: 0 },
+        );
+        dc.place(
+            &spec(2, Profile::P7g40gb),
+            GpuRef { host: 0, gpu: 1 },
+            Placement { profile: Profile::P7g40gb, start: 0 },
+        );
+        let plan = plan_evacuation(&dc, 0).unwrap();
+        assert_eq!(plan.num_moves(), 2);
+        let mut dc2 = dc.clone();
+        dc2.apply_plan(&plan).unwrap();
+        assert!(dc2.vms_on_host(0).is_empty());
+        dc2.check_integrity().unwrap();
+    }
+}

@@ -1,0 +1,353 @@
+//! Seeded fault/maintenance schedule generation (the `FaultInjector`).
+//!
+//! Failures are drawn up front, not online: the injector walks the
+//! fleet in ascending host/GPU order, draws each device's alternating
+//! exponential fail→repair renewal process from a dedicated PCG stream,
+//! and emits one flat schedule sorted by time. The event core replays
+//! the schedule at deterministic points of the interval loop, so runs
+//! are byte-reproducible across thread counts and across machines —
+//! and a configuration with every rate at zero draws *nothing*, leaving
+//! the decision stream byte-identical to a fault-free build.
+
+use crate::cluster::vm::{Time, HOUR};
+use crate::cluster::{GpuRef, Host};
+use crate::mig::NUM_MODELS;
+use crate::util::rng::Rng;
+
+/// Operational-model configuration: MTBF/MTTR per GPU model, host
+/// fail/repair rates, and the maintenance-drain process. All rates
+/// default to zero (disabled); hours are wall-clock simulation hours.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpsConfig {
+    /// Mean time between failures per GPU model, hours; `0.0` disables
+    /// failures for that model.
+    pub gpu_mtbf_hours: [f64; NUM_MODELS],
+    /// Mean time to repair a failed GPU, hours.
+    pub gpu_mttr_hours: f64,
+    /// Mean time between whole-host failures, hours; `0.0` disables.
+    pub host_mtbf_hours: f64,
+    /// Mean time to repair a failed host, hours.
+    pub host_mttr_hours: f64,
+    /// Maintenance drains per host per 1 000 hours; `0.0` disables.
+    pub drain_rate: f64,
+    /// Fixed drain duration, hours.
+    pub drain_hours: f64,
+    /// Ban a GPU (permanently offline) after this many failures;
+    /// `0` never bans. Mirrors production schedulers that blocklist
+    /// repeat-offender devices instead of endlessly recycling them.
+    pub ban_after_failures: u32,
+    /// Schedule horizon in hours (events beyond it are not drawn).
+    pub horizon_hours: u64,
+    /// Seed of the injector's own RNG stream (independent of the
+    /// policy RNG — see the module docs' determinism note).
+    pub seed: u64,
+}
+
+impl Default for OpsConfig {
+    fn default() -> Self {
+        OpsConfig {
+            gpu_mtbf_hours: [0.0; NUM_MODELS],
+            gpu_mttr_hours: 4.0,
+            host_mtbf_hours: 0.0,
+            host_mttr_hours: 8.0,
+            drain_rate: 0.0,
+            drain_hours: 2.0,
+            ban_after_failures: 0,
+            horizon_hours: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl OpsConfig {
+    /// Uniform GPU MTBF across every model.
+    pub fn with_gpu_mtbf(mut self, hours: f64) -> OpsConfig {
+        self.gpu_mtbf_hours = [hours; NUM_MODELS];
+        self
+    }
+
+    /// Does any process have a non-zero rate?
+    pub fn enabled(&self) -> bool {
+        self.gpu_mtbf_hours.iter().any(|&m| m > 0.0)
+            || self.host_mtbf_hours > 0.0
+            || self.drain_rate > 0.0
+    }
+}
+
+/// One operational event, applied by the event core at its timestamp.
+/// Fail events carry their repair time (`until`) so state queries can
+/// answer "down until when" without scanning the rest of the schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpsEvent {
+    /// A GPU goes down; residents are evicted (interrupted).
+    GpuFail { gpu: GpuRef, until: Time },
+    /// A failed GPU comes back (or is banned, if it has failed
+    /// [`OpsConfig::ban_after_failures`] times).
+    GpuRepair { gpu: GpuRef },
+    /// A whole host goes down; all residents are evicted.
+    HostFail { host: u32, until: Time },
+    /// A failed host comes back.
+    HostRepair { host: u32 },
+    /// Maintenance drain begins: the host stops accepting placements
+    /// and its residents are evacuated (all-or-nothing) if the rest of
+    /// the fleet can hold them.
+    DrainStart { host: u32, until: Time },
+    /// Maintenance drain ends; the host is schedulable again.
+    DrainDone { host: u32 },
+}
+
+/// Draw the full fault/maintenance schedule for `hosts` under `cfg`,
+/// sorted ascending by time (ties keep generation order: hosts before
+/// their GPUs, ascending ids — the sort is stable). Returns an empty
+/// schedule when nothing is [`enabled`](OpsConfig::enabled).
+pub fn generate_schedule(cfg: &OpsConfig, hosts: &[Host]) -> Vec<(Time, OpsEvent)> {
+    if !cfg.enabled() || cfg.horizon_hours == 0 {
+        return Vec::new();
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0x6f70_735f_6772_6d75); // "ops_grmu"
+    let horizon = cfg.horizon_hours * HOUR;
+    let mut out: Vec<(Time, OpsEvent)> = Vec::new();
+
+    for h in hosts {
+        // Host fail/repair renewal process.
+        if cfg.host_mtbf_hours > 0.0 {
+            renewal(&mut rng, cfg.host_mtbf_hours, cfg.host_mttr_hours, horizon, |t, until| {
+                out.push((t, OpsEvent::HostFail { host: h.id, until }));
+                if until < horizon {
+                    out.push((until, OpsEvent::HostRepair { host: h.id }));
+                }
+            });
+        }
+        // Maintenance drains: exponential inter-drain gaps, fixed length.
+        if cfg.drain_rate > 0.0 {
+            let mean_gap_hours = 1_000.0 / cfg.drain_rate;
+            renewal_fixed(&mut rng, mean_gap_hours, cfg.drain_hours, horizon, |t, until| {
+                out.push((t, OpsEvent::DrainStart { host: h.id, until }));
+                if until < horizon {
+                    out.push((until, OpsEvent::DrainDone { host: h.id }));
+                }
+            });
+        }
+        // Per-GPU fail/repair renewal processes.
+        for (g, gpu) in h.gpus().iter().enumerate() {
+            let mtbf = cfg.gpu_mtbf_hours[gpu.model() as usize];
+            if mtbf <= 0.0 {
+                continue;
+            }
+            let r = GpuRef { host: h.id, gpu: g as u8 };
+            renewal(&mut rng, mtbf, cfg.gpu_mttr_hours, horizon, |t, until| {
+                out.push((t, OpsEvent::GpuFail { gpu: r, until }));
+                if until < horizon {
+                    out.push((until, OpsEvent::GpuRepair { gpu: r }));
+                }
+            });
+        }
+    }
+    // Stable by-time sort: same-resource events were pushed in time
+    // order, so their relative order (fail before its repair) survives.
+    out.sort_by_key(|&(t, _)| t);
+    out
+}
+
+/// Alternating exponential up/down renewal process over `[0, horizon)`.
+/// Repair draws are floored at one second so a fail and its repair never
+/// collapse onto the same timestamp.
+fn renewal(
+    rng: &mut Rng,
+    up_mean_hours: f64,
+    down_mean_hours: f64,
+    horizon: Time,
+    mut emit: impl FnMut(Time, Time),
+) {
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exponential(1.0 / (up_mean_hours * HOUR as f64));
+        let fail = t as Time;
+        if fail >= horizon {
+            return;
+        }
+        let down = rng.exponential(1.0 / (down_mean_hours.max(1e-9) * HOUR as f64)).max(1.0);
+        let repair = fail + down as Time + 1;
+        emit(fail, repair);
+        t = repair as f64;
+    }
+}
+
+/// Renewal process with exponential gaps and a fixed down-time (drains).
+fn renewal_fixed(
+    rng: &mut Rng,
+    gap_mean_hours: f64,
+    down_hours: f64,
+    horizon: Time,
+    mut emit: impl FnMut(Time, Time),
+) {
+    let down = ((down_hours * HOUR as f64) as Time).max(1);
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exponential(1.0 / (gap_mean_hours * HOUR as f64));
+        let start = t as Time;
+        if start >= horizon {
+            return;
+        }
+        emit(start, start + down);
+        t = (start + down) as f64;
+    }
+}
+
+/// The configured injector: owns the schedule and a replay cursor. The
+/// event core pulls due events each interval via
+/// [`FaultInjector::pop_due`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultInjector {
+    schedule: Vec<(Time, OpsEvent)>,
+    cursor: usize,
+    /// Per-GPU failure tally for the ban policy, keyed by (host, gpu).
+    failures: std::collections::HashMap<(u32, u8), u32>,
+    ban_after: u32,
+}
+
+impl FaultInjector {
+    /// Injector over a pre-generated schedule.
+    pub fn new(schedule: Vec<(Time, OpsEvent)>, ban_after_failures: u32) -> FaultInjector {
+        debug_assert!(schedule.windows(2).all(|w| w[0].0 <= w[1].0), "schedule sorted");
+        FaultInjector {
+            schedule,
+            cursor: 0,
+            failures: std::collections::HashMap::new(),
+            ban_after: ban_after_failures,
+        }
+    }
+
+    /// Generate and wrap the schedule for `hosts` under `cfg`.
+    pub fn from_config(cfg: &OpsConfig, hosts: &[Host]) -> FaultInjector {
+        FaultInjector::new(generate_schedule(cfg, hosts), cfg.ban_after_failures)
+    }
+
+    /// Any events left to replay?
+    pub fn is_exhausted(&self) -> bool {
+        self.cursor >= self.schedule.len()
+    }
+
+    /// Total scheduled events (for reporting).
+    pub fn len(&self) -> usize {
+        self.schedule.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schedule.is_empty()
+    }
+
+    /// Next event with timestamp ≤ `now`, advancing the cursor.
+    pub fn pop_due(&mut self, now: Time) -> Option<(Time, OpsEvent)> {
+        let &(t, ev) = self.schedule.get(self.cursor)?;
+        if t > now {
+            return None;
+        }
+        self.cursor += 1;
+        Some((t, ev))
+    }
+
+    /// Record one failure of `gpu`; returns `true` if the device has
+    /// now failed often enough to be banned instead of repaired.
+    pub fn record_failure(&mut self, gpu: GpuRef) -> bool {
+        let n = self.failures.entry((gpu.host, gpu.gpu)).or_insert(0);
+        *n += 1;
+        self.ban_after > 0 && *n >= self.ban_after
+    }
+
+    /// Has `gpu` accumulated enough recorded failures to be banned?
+    pub fn is_banned(&self, gpu: GpuRef) -> bool {
+        self.ban_after > 0
+            && self
+                .failures
+                .get(&(gpu.host, gpu.gpu))
+                .map_or(false, |&n| n >= self.ban_after)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Host;
+
+    fn fleet() -> Vec<Host> {
+        (0..4).map(|i| Host::new(i, 64, 256, 2)).collect()
+    }
+
+    #[test]
+    fn disabled_config_draws_nothing() {
+        let cfg = OpsConfig { horizon_hours: 100, ..OpsConfig::default() };
+        assert!(!cfg.enabled());
+        assert!(generate_schedule(&cfg, &fleet()).is_empty());
+    }
+
+    #[test]
+    fn schedule_is_sorted_and_reproducible() {
+        let cfg = OpsConfig {
+            host_mtbf_hours: 50.0,
+            drain_rate: 5.0,
+            horizon_hours: 500,
+            seed: 7,
+            ..OpsConfig::default()
+        }
+        .with_gpu_mtbf(80.0);
+        let a = generate_schedule(&cfg, &fleet());
+        let b = generate_schedule(&cfg, &fleet());
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0));
+        // Every fail's `until` strictly exceeds its timestamp.
+        for &(t, ev) in &a {
+            match ev {
+                OpsEvent::GpuFail { until, .. }
+                | OpsEvent::HostFail { until, .. }
+                | OpsEvent::DrainStart { until, .. } => assert!(until > t),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn repairs_follow_their_failures() {
+        let cfg = OpsConfig {
+            gpu_mttr_hours: 2.0,
+            horizon_hours: 2_000,
+            seed: 11,
+            ..OpsConfig::default()
+        }
+        .with_gpu_mtbf(100.0);
+        let sched = generate_schedule(&cfg, &fleet());
+        let mut down: std::collections::HashSet<(u32, u8)> = Default::default();
+        for &(_, ev) in &sched {
+            match ev {
+                OpsEvent::GpuFail { gpu, .. } => {
+                    assert!(down.insert((gpu.host, gpu.gpu)), "double fail while down");
+                }
+                OpsEvent::GpuRepair { gpu } => {
+                    assert!(down.remove(&(gpu.host, gpu.gpu)), "repair without fail");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn injector_cursor_and_ban_tally() {
+        let sched = vec![
+            (10, OpsEvent::GpuFail { gpu: GpuRef { host: 0, gpu: 0 }, until: 20 }),
+            (20, OpsEvent::GpuRepair { gpu: GpuRef { host: 0, gpu: 0 } }),
+        ];
+        let mut inj = FaultInjector::new(sched, 2);
+        assert!(inj.pop_due(5).is_none());
+        assert!(matches!(inj.pop_due(15), Some((10, OpsEvent::GpuFail { .. }))));
+        assert!(inj.pop_due(15).is_none());
+        assert!(matches!(inj.pop_due(30), Some((20, OpsEvent::GpuRepair { .. }))));
+        assert!(inj.is_exhausted());
+        let r = GpuRef { host: 0, gpu: 0 };
+        assert!(!inj.record_failure(r));
+        assert!(!inj.is_banned(r));
+        assert!(inj.record_failure(r)); // second strike → ban
+        assert!(inj.is_banned(r));
+        assert!(!inj.is_banned(GpuRef { host: 1, gpu: 0 }));
+    }
+}

@@ -1,0 +1,41 @@
+//! Operational events: faults, repairs, drains and admission control.
+//!
+//! Real fleets lose capacity — GPUs fail (ECC storms, fallen-off-the-bus
+//! XIDs), whole machines reboot, and operators drain hosts for kernel
+//! or driver maintenance. This module models those events
+//! deterministically so placement policies can be compared under
+//! degraded capacity, not just pristine fleets:
+//!
+//! * [`fault`] — the [`FaultInjector`]'s schedule generator: seeded
+//!   exponential fail/repair processes per GPU model and per host, plus
+//!   periodic maintenance drains, emitted as a sorted, byte-reproducible
+//!   [`OpsEvent`] schedule the event core replays.
+//! * [`queue`] — bounded FIFO [`AdmissionQueue`] with per-request TTLs
+//!   and two priority [`Tier`]s: rejected-but-retryable requests park
+//!   here and re-try as capacity frees; high-tier arrivals may preempt
+//!   low-tier residents back into the queue.
+//! * [`evacuate`] — all-or-nothing host evacuation planning for drains,
+//!   expressed as a [`crate::migrate::MigrationPlan`] through the
+//!   transactional planner layer.
+//!
+//! Health bookkeeping itself lives on the cluster layer
+//! ([`crate::cluster::HealthState`], re-exported here): the
+//! `ClusterIndex` covers schedulable capacity only, and
+//! `check_integrity` verifies the contract. The split keeps this module
+//! free of index internals — it only speaks `set_gpu_health` /
+//! `set_host_health` and the planner API.
+//!
+//! Determinism: the injector draws from its own PCG stream (seeded from
+//! the experiment seed), never from the policy context's RNG, so a
+//! zero-fault configuration is byte-identical to a build without this
+//! module at all — the `ops_invariants` integration tests lock both
+//! properties.
+
+pub mod evacuate;
+pub mod fault;
+pub mod queue;
+
+pub use crate::cluster::HealthState;
+pub use evacuate::plan_evacuation;
+pub use fault::{generate_schedule, FaultInjector, OpsConfig, OpsEvent};
+pub use queue::{tier_of, AdmissionQueue, QueueConfig, QueuedRequest, Tier};

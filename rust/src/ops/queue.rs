@@ -1,0 +1,231 @@
+//! Bounded FIFO admission queue with per-request TTLs and priority
+//! tiers.
+//!
+//! A retryable rejection (CPU/RAM/fragmentation — see
+//! [`RejectReason::retryable`](crate::policies::RejectReason::retryable))
+//! parks the request here instead of dropping it; the event core
+//! re-offers queued requests to the policy once per interval before the
+//! fresh batch, in FIFO order. A request that out-waits its TTL expires
+//! ([`crate::policies::RejectReason::Expired`]). With preemption
+//! enabled, a high-[`Tier`] arrival that cannot be placed may evict
+//! low-tier residents back into the queue to make room.
+//!
+//! Invariants (checked by [`AdmissionQueue::verify`], exercised by the
+//! ops property tests): entries are FIFO by enqueue time, deadlines are
+//! non-decreasing front-to-back (uniform TTL), and occupancy never
+//! exceeds the configured capacity.
+
+use crate::cluster::vm::{Time, VmSpec, HOUR};
+use std::collections::VecDeque;
+
+/// Admission-control configuration. `capacity == 0` disables the queue
+/// entirely (the default): every rejection stays terminal and the
+/// decision stream is byte-identical to the pre-queue behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueConfig {
+    /// Maximum queued requests; `0` disables admission queueing.
+    pub capacity: usize,
+    /// Time-to-live of a queued request, hours.
+    pub ttl_hours: u64,
+    /// May high-tier arrivals preempt low-tier residents?
+    pub preemption: bool,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig { capacity: 0, ttl_hours: 24, preemption: false }
+    }
+}
+
+impl QueueConfig {
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// TTL in seconds.
+    pub fn ttl(&self) -> Time {
+        self.ttl_hours * HOUR
+    }
+}
+
+/// Priority tier of a request, derived from the paper's acceptance
+/// weight `a_i` (Eq. 3): provider-defined high-priority VMs carry
+/// weight ≥ 2.0. No new `VmSpec` field — traces without weights keep
+/// every VM low-tier and preemption never triggers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Low,
+    High,
+}
+
+/// Tier of a VM spec (see [`Tier`]).
+pub fn tier_of(spec: &VmSpec) -> Tier {
+    if spec.weight >= 2.0 {
+        Tier::High
+    } else {
+        Tier::Low
+    }
+}
+
+/// One parked request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedRequest {
+    pub spec: VmSpec,
+    /// When the request entered the queue (for delay accounting).
+    pub enqueued: Time,
+    /// Expiry time: `enqueued + ttl`.
+    pub deadline: Time,
+}
+
+/// The bounded FIFO queue. Pure container — retry/expiry *accounting*
+/// (rejection counters, delay samples) lives in the event core, which
+/// is the only writer.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionQueue {
+    cfg: QueueConfig,
+    q: VecDeque<QueuedRequest>,
+}
+
+impl AdmissionQueue {
+    pub fn new(cfg: QueueConfig) -> AdmissionQueue {
+        AdmissionQueue { cfg, q: VecDeque::new() }
+    }
+
+    pub fn config(&self) -> &QueueConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Park a request at `now`. Returns `false` (and drops nothing) if
+    /// the queue is disabled or full — the caller keeps the rejection
+    /// terminal in that case.
+    pub fn try_enqueue(&mut self, spec: VmSpec, now: Time) -> bool {
+        if self.q.len() >= self.cfg.capacity {
+            return false;
+        }
+        self.q.push_back(QueuedRequest { spec, enqueued: now, deadline: now + self.cfg.ttl() });
+        true
+    }
+
+    /// Pop every entry whose deadline has passed at `now`. Uniform TTLs
+    /// make deadlines monotone front-to-back, so expired entries are
+    /// exactly a prefix.
+    pub fn pop_expired(&mut self, now: Time, mut on_expire: impl FnMut(QueuedRequest)) {
+        while let Some(front) = self.q.front() {
+            if front.deadline > now {
+                return;
+            }
+            on_expire(self.q.pop_front().unwrap());
+        }
+    }
+
+    /// Drain the whole queue front-to-back into `out` (FIFO retry pass;
+    /// the caller re-enqueues what still does not fit via
+    /// [`AdmissionQueue::restore`]).
+    pub fn drain_into(&mut self, out: &mut Vec<QueuedRequest>) {
+        out.extend(self.q.drain(..));
+    }
+
+    /// Put back a not-yet-placeable entry, preserving FIFO order
+    /// (called in drain order after [`AdmissionQueue::drain_into`]).
+    pub fn restore(&mut self, req: QueuedRequest) {
+        self.q.push_back(req);
+    }
+
+    /// Structural invariants: bounded occupancy, monotone deadlines and
+    /// enqueue times. Used by `check_integrity`-style test assertions.
+    pub fn verify(&self) -> Result<(), String> {
+        if self.q.len() > self.cfg.capacity {
+            return Err(format!("queue holds {} > capacity {}", self.q.len(), self.cfg.capacity));
+        }
+        for w in self.q.iter().zip(self.q.iter().skip(1)) {
+            if w.0.deadline > w.1.deadline || w.0.enqueued > w.1.enqueued {
+                return Err("queue deadlines/enqueue times not monotone".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Iterate parked requests front-to-back (read-only).
+    pub fn iter(&self) -> impl Iterator<Item = &QueuedRequest> {
+        self.q.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::Profile;
+
+    fn spec(id: u64, weight: f64) -> VmSpec {
+        VmSpec {
+            id,
+            profile: Profile::P1g5gb,
+            cpus: 2,
+            ram_gb: 4,
+            arrival: 0,
+            departure: 10 * HOUR,
+            weight,
+        }
+    }
+
+    #[test]
+    fn bounded_fifo_with_ttl_prefix_expiry() {
+        let cfg = QueueConfig { capacity: 2, ttl_hours: 1, preemption: false };
+        let mut q = AdmissionQueue::new(cfg);
+        assert!(q.try_enqueue(spec(1, 1.0), 0));
+        assert!(q.try_enqueue(spec(2, 1.0), 100));
+        assert!(!q.try_enqueue(spec(3, 1.0), 200), "capacity bound");
+        q.verify().unwrap();
+        let mut expired = Vec::new();
+        q.pop_expired(HOUR, |r| expired.push(r.spec.id));
+        assert_eq!(expired, vec![1]); // only the t=0 entry is past its TTL
+        assert_eq!(q.len(), 1);
+        q.verify().unwrap();
+    }
+
+    #[test]
+    fn drain_restore_preserves_order() {
+        let cfg = QueueConfig { capacity: 8, ttl_hours: 24, preemption: false };
+        let mut q = AdmissionQueue::new(cfg);
+        for id in 1..=4 {
+            assert!(q.try_enqueue(spec(id, 1.0), id));
+        }
+        let mut scratch = Vec::new();
+        q.drain_into(&mut scratch);
+        assert!(q.is_empty());
+        for r in scratch {
+            if r.spec.id % 2 == 0 {
+                q.restore(r);
+            }
+        }
+        let ids: Vec<u64> = q.iter().map(|r| r.spec.id).collect();
+        assert_eq!(ids, vec![2, 4]);
+        q.verify().unwrap();
+    }
+
+    #[test]
+    fn tiers_derive_from_weight() {
+        assert_eq!(tier_of(&spec(1, 1.0)), Tier::Low);
+        assert_eq!(tier_of(&spec(2, 2.0)), Tier::High);
+        assert!(Tier::High > Tier::Low);
+    }
+
+    #[test]
+    fn disabled_queue_rejects_enqueues() {
+        let mut q = AdmissionQueue::new(QueueConfig::default());
+        assert!(!q.enabled());
+        assert!(!q.try_enqueue(spec(1, 1.0), 0));
+    }
+}

@@ -213,7 +213,8 @@ impl Grmu {
                 return Decision::Placed { gpu: r, placement };
             }
         } else if self.pool.iter().any(|&r| {
-            dc.gpu(r).model() == vm.profile.model()
+            dc.gpu_available(r)
+                && dc.gpu(r).model() == vm.profile.model()
                 && dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb)
         }) {
             // A pool GPU of the request's model (empty, so any of its GIs
@@ -472,6 +473,27 @@ mod tests {
         ctx.now = 100 * HOUR;
         g.on_tick(&mut dcx, &mut ctx);
         assert!(g.pending_migrations().is_empty());
+    }
+
+    #[test]
+    fn failed_capacity_is_skipped_in_baskets_and_pool() {
+        use crate::cluster::HealthState;
+        let mut dcx = dc(1, 2); // 2 GPUs: 1 heavy + 1 light, pool empty
+        let mut g = Grmu::new(GrmuConfig { heavy_capacity_frac: 0.5, ..Default::default() });
+        batch(&mut g, &mut dcx, &[vm(1, Profile::P1g5gb)]);
+        let light_gpu = *g.light_basket().iter().next().unwrap();
+        dcx.remove(1);
+        dcx.set_gpu_health(light_gpu, HealthState::Failed { until: 99 });
+        // The light basket's only GPU is down: the request must bounce
+        // rather than land on failed capacity.
+        let out = batch(&mut g, &mut dcx, &[vm(2, Profile::P1g5gb)]);
+        assert_eq!(accepted(&out), 0);
+        assert_eq!(out[0].reject_reason(), Some(RejectReason::NoGpuFit));
+        // Repair restores service.
+        dcx.set_gpu_health(light_gpu, HealthState::Healthy);
+        let out = batch(&mut g, &mut dcx, &[vm(3, Profile::P1g5gb)]);
+        assert_eq!(accepted(&out), 1);
+        dcx.check_integrity().unwrap();
     }
 
     #[test]

@@ -93,15 +93,25 @@ pub enum RejectReason {
     /// GRMU only: the responsible basket is at its quota and may not
     /// grow, although the pool could otherwise serve the request.
     QuotaDenied,
+    /// Not placeable right now; parked in the bounded admission retry
+    /// queue ([`crate::ops::AdmissionQueue`]). A queued request that
+    /// later lands flips this count back into an acceptance; one whose
+    /// TTL lapses becomes [`RejectReason::Expired`].
+    Queued,
+    /// Spent its retry-queue TTL without ever fitting — the terminal
+    /// fate of a queued request.
+    Expired,
 }
 
 impl RejectReason {
     /// All reasons, in [`RejectReason::index`] order.
-    pub const ALL: [RejectReason; 4] = [
+    pub const ALL: [RejectReason; 6] = [
         RejectReason::CpuExhausted,
         RejectReason::RamExhausted,
         RejectReason::NoGpuFit,
         RejectReason::QuotaDenied,
+        RejectReason::Queued,
+        RejectReason::Expired,
     ];
 
     /// Dense index for per-reason accounting arrays.
@@ -111,6 +121,8 @@ impl RejectReason {
             RejectReason::RamExhausted => 1,
             RejectReason::NoGpuFit => 2,
             RejectReason::QuotaDenied => 3,
+            RejectReason::Queued => 4,
+            RejectReason::Expired => 5,
         }
     }
 
@@ -121,7 +133,20 @@ impl RejectReason {
             RejectReason::RamExhausted => "ram_exhausted",
             RejectReason::NoGpuFit => "no_gpu_fit",
             RejectReason::QuotaDenied => "quota_denied",
+            RejectReason::Queued => "queued",
+            RejectReason::Expired => "expired",
         }
+    }
+
+    /// Would the admission queue retry this rejection? Resource and
+    /// fragmentation shortages are transient (departures free capacity);
+    /// a basket-quota denial is a policy decision the queue must not
+    /// overturn, and the queue's own outcomes never re-enter it.
+    pub fn retryable(self) -> bool {
+        matches!(
+            self,
+            RejectReason::CpuExhausted | RejectReason::RamExhausted | RejectReason::NoGpuFit
+        )
     }
 }
 
@@ -132,7 +157,7 @@ impl fmt::Display for RejectReason {
 }
 
 /// Per-reason rejection counters, indexed by [`RejectReason::index`].
-pub type RejectCounts = [u64; 4];
+pub type RejectCounts = [u64; 6];
 
 /// Compact `name=count` summary of the non-zero rejection counters
 /// (shared by the `simulate` and `serve` CLI outputs). Empty string
@@ -249,6 +274,16 @@ impl DecisionBuffer {
     /// Copy out as an owned `Vec` (the compat path).
     pub fn to_vec(&self) -> Vec<Decision> {
         self.buf.clone()
+    }
+
+    /// Rewrite the decision at `i` in the current batch. Used by the
+    /// admission queue: a retryable rejection is parked and its buffered
+    /// decision overwritten with [`Decision::Rejected`]
+    /// ([`RejectReason::Queued`]) so the stream the caller sees matches
+    /// the accounting.
+    #[inline]
+    pub fn replace(&mut self, i: usize, d: Decision) {
+        self.buf[i] = d;
     }
 }
 
@@ -396,7 +431,7 @@ pub fn visit_candidates(
         let model = profile.model();
         for h in dc.hosts() {
             for (g, gpu) in h.gpus().iter().enumerate() {
-                if gpu.model() != model {
+                if gpu.model() != model || !h.gpu_available(g) {
                     continue;
                 }
                 if !visit(GpuRef { host: h.id, gpu: g as u8 }) {
@@ -413,6 +448,9 @@ pub fn visit_candidates(
 /// non-committing core of [`try_place_on_gpu`], shared by the first-fit
 /// scan paths (FF and GRMU's basket/pool walks).
 pub fn probe_gpu(dc: &DataCenter, vm: &VmSpec, r: GpuRef) -> Option<Placement> {
+    if !dc.gpu_available(r) {
+        return None;
+    }
     let gpu = dc.gpu(r);
     if gpu.model() != vm.profile.model() || !dc.host(r.host).fits_resources(vm.cpus, vm.ram_gb) {
         return None;
@@ -447,7 +485,7 @@ where
     let mut ram_short = false;
     let mut resource_fit = false;
     for &r in refs {
-        if dc.gpu(r).model() != model {
+        if dc.gpu(r).model() != model || !dc.gpu_available(r) {
             continue;
         }
         let host = dc.host(r.host);
@@ -487,34 +525,48 @@ where
 pub fn classify_rejection_cluster(dc: &DataCenter, vm: &VmSpec) -> RejectReason {
     let idx = dc.index();
     let model = vm.profile.model();
-    let compat_hosts = idx.hosts_with_model(model);
-    if compat_hosts == 0 {
-        // Empty cluster, or a fleet without the request's model — same
-        // no-compatible-GPU convention as an empty candidate set.
-        return RejectReason::NoGpuFit;
-    }
-    if idx.max_free_cpus() < vm.cpus {
-        // Every host (compatible ones included) is CPU-short, so nothing
-        // can have joint headroom.
-        return RejectReason::CpuExhausted;
-    }
-    if compat_hosts == idx.num_hosts() && idx.max_free_ram() < vm.ram_gb {
-        // Homogeneous-for-this-model fleet and no host has the RAM; a
-        // CPU shortage anywhere still takes precedence (Eq. 6 before
-        // Eq. 7). (On a mixed fleet the cluster-wide minima may belong
-        // to foreign-model hosts, so fall through to the host scan.)
-        return if idx.min_free_cpus() < vm.cpus {
-            RejectReason::CpuExhausted
-        } else {
-            RejectReason::RamExhausted
-        };
+    // The index-answered fast paths hold only on a fully healthy fleet:
+    // with capacity offline, `hosts_with_model` counts hosts whose last
+    // model-compatible GPU may be down (the count tracks host
+    // availability only), so the reference walk over schedulable GPUs
+    // could see an empty candidate set where the maxima-based shortcuts
+    // still claim a resource verdict. Degraded fleets take the (already
+    // rare, rejection-only) host scan directly.
+    if dc.offline_gpus() == 0 {
+        let compat_hosts = idx.hosts_with_model(model);
+        if compat_hosts == 0 {
+            // Empty cluster, or a fleet without the request's model — same
+            // no-compatible-GPU convention as an empty candidate set.
+            return RejectReason::NoGpuFit;
+        }
+        if idx.max_free_cpus() < vm.cpus {
+            // Every host (compatible ones included) is CPU-short, so nothing
+            // can have joint headroom.
+            return RejectReason::CpuExhausted;
+        }
+        if compat_hosts == idx.num_hosts() && idx.max_free_ram() < vm.ram_gb {
+            // Homogeneous-for-this-model fleet and no host has the RAM; a
+            // CPU shortage anywhere still takes precedence (Eq. 6 before
+            // Eq. 7). (On a mixed fleet the cluster-wide minima may belong
+            // to foreign-model hosts, so fall through to the host scan.)
+            return if idx.min_free_cpus() < vm.cpus {
+                RejectReason::CpuExhausted
+            } else {
+                RejectReason::RamExhausted
+            };
+        }
     }
     // Some host has the CPU and some host has the RAM — whether one
-    // *compatible* host has both takes a scan (hosts, not GPUs).
+    // *compatible* host has both takes a scan (hosts, not GPUs). Only
+    // schedulable GPUs make a host compatible; on an all-healthy fleet
+    // the availability checks are vacuous, keeping this byte-identical
+    // to the pre-health scan.
     let mut cpu_short = false;
     let mut ram_short = false;
     for host in dc.hosts() {
-        if !host.gpus().iter().any(|g| g.model() == model) {
+        if !host.gpus().iter().enumerate().any(|(g, gpu)| {
+            gpu.model() == model && host.gpu_available(g)
+        }) {
             continue;
         }
         let cpu_ok = host.free_cpus() >= vm.cpus;
@@ -1022,8 +1074,31 @@ mod tests {
 
     #[test]
     fn reject_counts_format_skips_zeroes() {
-        let counts: RejectCounts = [0, 2, 1, 0];
-        assert_eq!(format_reject_counts(&counts), "ram_exhausted=2 no_gpu_fit=1");
-        assert_eq!(format_reject_counts(&[0; 4]), "");
+        let counts: RejectCounts = [0, 2, 1, 0, 3, 0];
+        assert_eq!(format_reject_counts(&counts), "ram_exhausted=2 no_gpu_fit=1 queued=3");
+        assert_eq!(format_reject_counts(&[0; 6]), "");
+    }
+
+    #[test]
+    fn scan_paths_skip_unhealthy_capacity() {
+        use crate::cluster::HealthState;
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1), Host::new(1, 64, 256, 1)]);
+        let down = GpuRef { host: 0, gpu: 0 };
+        dc.set_gpu_health(down, HealthState::Failed { until: 10 });
+        // The brute-force walk must agree with the health-aware bucket.
+        let mut seen = Vec::new();
+        visit_candidates(&dc, Profile::P1g5gb, false, |r| {
+            seen.push(r);
+            true
+        });
+        assert_eq!(seen, vec![GpuRef { host: 1, gpu: 0 }]);
+        assert_eq!(seen.as_slice(), dc.index().gpus_fitting(Profile::P1g5gb));
+        assert!(probe_gpu(&dc, &vm(1, Profile::P1g5gb), down).is_none());
+        // With every compatible GPU down, both classifiers report
+        // no-compatible-GPU even though the hosts keep CPU/RAM headroom.
+        dc.set_gpu_health(GpuRef { host: 1, gpu: 0 }, HealthState::Banned);
+        let v = vm(2, Profile::P1g5gb);
+        assert_eq!(classify_rejection_cluster(&dc, &v), RejectReason::NoGpuFit);
+        assert_eq!(classify_rejection(&dc, &v, &dc.gpu_refs()), RejectReason::NoGpuFit);
     }
 }

@@ -4,6 +4,7 @@
 use crate::cluster::vm::VmSpec;
 use crate::cluster::{DataCenter, Host};
 use crate::migrate::MigrationBudget;
+use crate::ops::{OpsConfig, QueueConfig};
 use crate::policies::{grmu, PolicyConfig, PolicyCtx, PolicyRegistry};
 use crate::sim::{SimResult, Simulation, SimulationOptions};
 use crate::trace::{TraceConfig, Workload};
@@ -29,6 +30,13 @@ pub struct ExperimentConfig {
     pub planners: Vec<String>,
     /// Planner-stack migration budget (CLI `--migration-budget N[:M]`).
     pub migration_budget: MigrationBudget,
+    /// Fault/maintenance model (CLI `--mtbf`, `--drain-rate`, …).
+    /// Disabled by default; a zero `seed` inherits the trace seed so
+    /// sweep cells stay deterministic per seed.
+    pub ops: OpsConfig,
+    /// Admission retry queue (CLI `--queue-cap`, `--queue-ttl`,
+    /// `--preempt`). Disabled by default.
+    pub queue: QueueConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -40,6 +48,8 @@ impl Default for ExperimentConfig {
             drain_cap_hours: 21 * 24,
             planners: Vec::new(),
             migration_budget: MigrationBudget::unlimited(),
+            ops: OpsConfig::default(),
+            queue: QueueConfig::default(),
         }
     }
 }
@@ -94,8 +104,17 @@ pub fn run_trace(
     let dc = DataCenter::new(hosts.to_vec());
     let mut sim = Simulation::new(dc, policy_box, vms);
     sim.ctx = PolicyCtx::new(cfg.trace.seed);
+    let mut ops = cfg.ops.clone();
+    if ops.seed == 0 {
+        // The injector stream is already decorrelated from the policy
+        // RNG by its xor constant; inheriting the trace seed keeps
+        // sweep cells deterministic per seed without extra plumbing.
+        ops.seed = cfg.trace.seed;
+    }
     sim.options = SimulationOptions {
         drain_cap_hours: cfg.drain_cap_hours,
+        ops,
+        queue: cfg.queue,
         ..SimulationOptions::default()
     };
     sim.run()
@@ -176,6 +195,37 @@ pub fn planner_stack_ablation(
         .iter()
         .map(|name| (name.to_string(), run_once(workload, name, cfg, true)))
         .collect()
+}
+
+/// EXPERIMENTS.md §Availability: GRMU under an escalating fault model.
+/// One labeled run per `(MTBF, drain rate)` cell, plus a fault-free
+/// baseline row, so the acceptance/availability trade-off reads straight
+/// off the output. `mtbf_hours` entries of `0.0` disable failures for
+/// that cell (useful for a drain-only axis).
+pub fn availability_sweep(
+    workload: &Workload,
+    mtbf_hours: &[f64],
+    drain_rates: &[f64],
+    cfg: &ExperimentConfig,
+) -> Vec<(String, SimResult)> {
+    let mut out = Vec::new();
+    let base = ExperimentConfig { ops: OpsConfig::default(), ..cfg.clone() };
+    out.push(("no faults".to_string(), run_once(workload, "grmu", &base, true)));
+    for &mtbf in mtbf_hours {
+        for &drain in drain_rates {
+            let ops = OpsConfig {
+                drain_rate: drain,
+                ..cfg.ops.clone().with_gpu_mtbf(mtbf)
+            };
+            if !ops.enabled() {
+                continue; // the (0, 0) cell duplicates the baseline
+            }
+            let cell = ExperimentConfig { ops, ..cfg.clone() };
+            let label = format!("mtbf={mtbf}h drain={drain}/kh");
+            out.push((label, run_once(workload, "grmu", &cell, true)));
+        }
+    }
+    out
 }
 
 /// One `(seed, policy)` cell of a [`sweep`].
@@ -524,6 +574,52 @@ mod tests {
         assert_eq!(summary.len(), 2);
         assert_eq!(summary[0].0, "ff");
         assert_eq!(summary[1].0, "grmu");
+    }
+
+    #[test]
+    fn ops_config_flows_into_runs() {
+        let (w, cfg) = quick_workload();
+        let faulty = ExperimentConfig {
+            ops: OpsConfig { drain_rate: 1.0, ..OpsConfig::default().with_gpu_mtbf(300.0) },
+            queue: QueueConfig { capacity: 16, ..QueueConfig::default() },
+            ..cfg.clone()
+        };
+        let a = run_once(&w, "grmu", &faulty, true);
+        let b = run_once(&w, "grmu", &faulty, true);
+        assert_eq!(a.samples, b.samples, "faulty runs are deterministic");
+        assert_eq!(a.interrupted, b.interrupted);
+        assert!(a.availability < 1.0, "300 h MTBF must cost some GPU-hours");
+        assert!(a.availability > 0.5);
+        // The clean config still reports perfect availability.
+        let clean = run_once(&w, "grmu", &cfg, true);
+        assert_eq!(clean.availability, 1.0);
+        assert_eq!(clean.interrupted, 0);
+    }
+
+    #[test]
+    fn availability_sweep_rows() {
+        let (w, cfg) = quick_workload();
+        let rows = availability_sweep(&w, &[0.0, 400.0], &[0.0, 2.0], &cfg);
+        let labels: Vec<&str> = rows.iter().map(|(l, _)| l.as_str()).collect();
+        // (0, 0) is skipped as a duplicate of the baseline.
+        assert_eq!(
+            labels,
+            vec![
+                "no faults",
+                "mtbf=0h drain=2/kh",
+                "mtbf=400h drain=0/kh",
+                "mtbf=400h drain=2/kh"
+            ]
+        );
+        assert_eq!(rows[0].1.availability, 1.0);
+        for (label, r) in &rows[1..] {
+            assert!(r.availability <= 1.0, "{label}");
+            assert_eq!(
+                r.rejections.iter().sum::<u64>(),
+                r.requested - r.accepted,
+                "{label}: breakdown does not sum under faults"
+            );
+        }
     }
 
     #[test]

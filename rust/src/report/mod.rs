@@ -11,6 +11,7 @@ pub mod experiments;
 pub mod tables;
 
 pub use experiments::{
-    consolidation_sweep, grmu_ablation, heavy_capacity_sweep, planner_stack_ablation,
-    policy_comparison, run_once, run_trace, sweep, sweep_summary, ExperimentConfig, SweepRun,
+    availability_sweep, consolidation_sweep, grmu_ablation, heavy_capacity_sweep,
+    planner_stack_ablation, policy_comparison, run_once, run_trace, sweep, sweep_summary,
+    ExperimentConfig, SweepRun,
 };

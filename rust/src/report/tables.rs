@@ -343,6 +343,34 @@ pub fn rejections_breakdown(results: &[SimResult]) -> String {
     out
 }
 
+/// Ops summary — the fault/queue outcomes of a run: hardware
+/// interruptions, preemptions, requests served from the retry queue with
+/// their delay percentiles, TTL expiries, and fleet availability
+/// (GPU-intervals up / GPU-intervals total). All zeros / 1.0 on a
+/// fault-free run with the queue disabled.
+pub fn ops_summary(results: &[SimResult]) -> String {
+    use crate::policies::RejectReason;
+    let mut out = String::from("Ops summary — faults, admission queue and availability\n");
+    out.push_str(&format!(
+        "{:>6} {:>11} {:>10} {:>12} {:>10} {:>10} {:>8} {:>12}\n",
+        "policy", "interrupted", "preempted", "from queue", "delay p50", "delay p99", "expired", "availability"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:>6} {:>11} {:>10} {:>12} {:>9}s {:>9}s {:>8} {:>12.4}\n",
+            r.policy,
+            r.interrupted,
+            r.preempted,
+            r.served_from_queue(),
+            r.queue_delay_p50(),
+            r.queue_delay_p99(),
+            r.rejected(RejectReason::Expired),
+            r.availability
+        ));
+    }
+    out
+}
+
 /// JSON export of a policy-comparison run (used by `--json`).
 pub fn comparison_json(results: &[SimResult]) -> Json {
     Json::arr(results.iter().map(|r| r.to_json()).collect())
@@ -373,7 +401,7 @@ mod tests {
             requested: 10,
             accepted: acc,
             per_profile,
-            rejections: [0, 0, 10 - acc, 0],
+            rejections: [0, 0, 10 - acc, 0, 0, 0],
             migration_events: vec![MigrationEvent {
                 vm: 1,
                 from: g,
@@ -384,6 +412,10 @@ mod tests {
             }],
             gpus_by_model,
             gpu_activity,
+            interrupted: 0,
+            preempted: 0,
+            queue_delays: Vec::new(),
+            availability: 1.0,
             wall_seconds: 0.0,
         }
     }
@@ -400,6 +432,7 @@ mod tests {
             rejections_breakdown(&results),
             fleet_breakdown(&results),
             migration_overhead(&results),
+            ops_summary(&results),
         ] {
             assert!(text.contains("FF"));
             assert!(text.contains("GRMU"));

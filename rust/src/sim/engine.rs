@@ -12,6 +12,7 @@ use super::event_core::EventCore;
 use super::metrics::SimResult;
 use crate::cluster::vm::{VmSpec, HOUR};
 use crate::cluster::DataCenter;
+use crate::ops::{FaultInjector, OpsConfig, QueueConfig};
 use crate::policies::{Policy, PolicyCtx};
 
 /// Engine knobs.
@@ -23,11 +24,24 @@ pub struct SimulationOptions {
     /// Stop this many hours after the last arrival even if VMs remain
     /// (0 = run to last departure).
     pub drain_cap_hours: u64,
+    /// Fault/maintenance model; all rates zero by default (the injector
+    /// draws nothing, so the run is byte-identical to a pre-ops build).
+    /// When the horizon is left at zero a schedule is drawn over the
+    /// trace's own span.
+    pub ops: OpsConfig,
+    /// Admission retry queue; capacity zero by default (disabled —
+    /// rejections stay terminal exactly as before).
+    pub queue: QueueConfig,
 }
 
 impl Default for SimulationOptions {
     fn default() -> Self {
-        SimulationOptions { integrity_every: 0, drain_cap_hours: 0 }
+        SimulationOptions {
+            integrity_every: 0,
+            drain_cap_hours: 0,
+            ops: OpsConfig::default(),
+            queue: QueueConfig::default(),
+        }
     }
 }
 
@@ -68,6 +82,16 @@ impl<'a> Simulation<'a> {
             last_departure.max(last_arrival)
         };
         core.reserve_for_trace(self.vms.len(), core.window_of(horizon) + 2);
+        if self.options.ops.enabled() {
+            let mut ops = self.options.ops.clone();
+            if ops.horizon_hours == 0 {
+                ops.horizon_hours = core.window_of(horizon) + 2;
+            }
+            core.set_fault_schedule(FaultInjector::from_config(&ops, core.dc.hosts()));
+        }
+        if self.options.queue.enabled() {
+            core.set_admission_queue(self.options.queue);
+        }
         let mut next_vm = 0usize;
         loop {
             let t_end = core.interval_end();
@@ -191,6 +215,40 @@ mod tests {
         sim.options.drain_cap_hours = 5;
         let res = sim.run();
         assert!(res.samples.len() < 20);
+    }
+
+    #[test]
+    fn ops_options_wire_into_the_run() {
+        use crate::ops::{OpsConfig, QueueConfig};
+        // Aggressive MTBF on a single GPU: the run must complete, keep
+        // the accounting invariant, and stay fully deterministic.
+        let vms: Vec<VmSpec> = (0..20).map(|i| vm(i + 1, Profile::P1g5gb, i / 2, 3)).collect();
+        let run = || {
+            let mut sim = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms);
+            sim.options.integrity_every = 1;
+            sim.options.ops = OpsConfig { seed: 3, ..Default::default() }.with_gpu_mtbf(5.0);
+            sim.options.queue = QueueConfig { capacity: 8, ttl_hours: 4, preemption: false };
+            sim.run()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.rejections, b.rejections);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.interrupted, b.interrupted);
+        assert!(a.availability <= 1.0);
+        assert_eq!(a.rejections.iter().sum::<u64>(), a.requested - a.accepted);
+    }
+
+    #[test]
+    fn disabled_ops_options_change_nothing() {
+        let vms = vec![vm(1, Profile::P3g20gb, 0, 5), vm(2, Profile::P3g20gb, 1, 5)];
+        let baseline = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms).run();
+        let mut sim = Simulation::new(one_gpu_dc(), Box::new(FirstFit::new()), &vms);
+        sim.options.ops = crate::ops::OpsConfig::default(); // all rates zero
+        sim.options.queue = crate::ops::QueueConfig::default(); // capacity zero
+        let r = sim.run();
+        assert_eq!(baseline.samples, r.samples);
+        assert_eq!(baseline.rejections, r.rejections);
+        assert_eq!(r.availability, 1.0);
     }
 
     #[test]

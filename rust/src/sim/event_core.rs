@@ -15,7 +15,15 @@
 //!   [`Decision`]s, with per-[`crate::policies::RejectReason`] accounting;
 //! * the per-interval maintenance tick (GRMU's consolidation clock) and
 //!   hourly metric sample;
-//! * collection of the policy's [`MigrationEvent`] records.
+//! * collection of the policy's [`MigrationEvent`] records;
+//! * replay of the [`crate::ops`] fault/repair/drain schedule (at the
+//!   end of every `release_due`, after the interval's departures) with
+//!   eviction, all-or-nothing drain evacuation and availability
+//!   accounting;
+//! * the admission queue's once-per-interval expiry + FIFO retry pass
+//!   (before the interval's fresh batch) and, under preemption,
+//!   high-tier displacement of low-tier residents. Disabled ops leave
+//!   every decision stream byte-identical to the pre-ops core.
 //!
 //! The simulator calls [`EventCore::step_buffered`] for every interval of
 //! a trace; the coordinator calls
@@ -35,11 +43,15 @@
 
 use super::metrics::{acceptance_rate, Sample, SimResult};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
-use crate::cluster::DataCenter;
-use crate::mig::{NUM_MODELS, NUM_PROFILE_KEYS};
-use crate::policies::{Decision, MigrationEvent, Policy, PolicyCtx, RejectCounts};
+use crate::cluster::{DataCenter, GpuRef, HealthState};
+use crate::mig::{mock_assign, Instance, NUM_MODELS, NUM_PROFILE_KEYS};
+use crate::ops::{
+    plan_evacuation, tier_of, AdmissionQueue, FaultInjector, OpsEvent, QueueConfig, QueuedRequest,
+    Tier,
+};
+use crate::policies::{Decision, MigrationEvent, Policy, PolicyCtx, RejectCounts, RejectReason};
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 /// The unified departure-heap / batch / tick / sample loop.
 pub struct EventCore {
@@ -70,6 +82,32 @@ pub struct EventCore {
     /// accumulated at every sample (the per-model active-hardware
     /// breakdown of heterogeneous fleets).
     gpu_activity: [(u64, u64); NUM_MODELS],
+    /// Scheduled operational events (faults/repairs/drains), replayed at
+    /// the end of every [`EventCore::release_due`]. Empty by default.
+    injector: FaultInjector,
+    /// Bounded retry queue for retryable rejections; disabled by default.
+    queue: AdmissionQueue,
+    /// Interval already queue-processed (guards the coordinator's
+    /// several `place_buffered` calls per window — the simulator
+    /// processes each interval exactly once).
+    queue_done_hour: u64,
+    /// Reusable FIFO retry-pass buffer.
+    retry_scratch: Vec<QueuedRequest>,
+    /// Stale departure-heap entries per VM: evictions/preemptions leave
+    /// their heap entry behind; `release_due` skips that many pops.
+    revoked: HashMap<VmId, u32>,
+    /// Specs of resident VMs — maintained only under preemption, which
+    /// must know victims' tiers and re-enqueue their full spec.
+    resident_specs: HashMap<VmId, VmSpec>,
+    /// VMs evicted by hardware failures (terminal; not a rejection).
+    interrupted: u64,
+    /// VMs preempted back into the queue by high-tier arrivals.
+    preempted: u64,
+    /// Queueing delay (seconds) of each request served from the queue.
+    queue_delays: Vec<u64>,
+    /// GPU-interval availability accumulator: (schedulable, total).
+    gpu_intervals_available: u64,
+    gpu_intervals_total: u64,
 }
 
 impl EventCore {
@@ -96,11 +134,37 @@ impl EventCore {
             requested: 0,
             accepted: 0,
             per_profile: [(0, 0); NUM_PROFILE_KEYS],
-            rejections: [0; 4],
+            rejections: [0; 6],
             migrations: Vec::new(),
             migration_cost: [0; 2],
             gpu_activity: [(0, 0); NUM_MODELS],
+            injector: FaultInjector::default(),
+            queue: AdmissionQueue::default(),
+            queue_done_hour: u64::MAX,
+            retry_scratch: Vec::new(),
+            revoked: HashMap::new(),
+            resident_specs: HashMap::new(),
+            interrupted: 0,
+            preempted: 0,
+            queue_delays: Vec::new(),
+            gpu_intervals_available: 0,
+            gpu_intervals_total: 0,
         }
+    }
+
+    /// Install a fault/maintenance schedule (see [`crate::ops::fault`]).
+    /// Call before the run starts; the default injector is empty and the
+    /// replay is a no-op.
+    pub fn set_fault_schedule(&mut self, injector: FaultInjector) {
+        self.injector = injector;
+    }
+
+    /// Configure admission queueing (see [`crate::ops::queue`]). Call
+    /// before the run starts; the default (`capacity == 0`) keeps every
+    /// rejection terminal and the decision stream byte-identical to the
+    /// pre-queue behaviour.
+    pub fn set_admission_queue(&mut self, cfg: QueueConfig) {
+        self.queue = AdmissionQueue::new(cfg);
     }
 
     pub fn set_integrity_every(&mut self, every: u64) {
@@ -179,15 +243,108 @@ impl EventCore {
         }
     }
 
-    /// Release departures due by `t` (inclusive), oldest first.
+    /// Release departures due by `t` (inclusive), oldest first, then
+    /// apply the operational events due by `t` (departures first:
+    /// capacity freed during the interval is not pointlessly evicted).
     pub fn release_due(&mut self, t: Time) {
         while let Some(&Reverse((due, vm))) = self.departures.peek() {
             if due > t {
                 break;
             }
             self.departures.pop();
+            if !self.revoked.is_empty() {
+                // An evicted/preempted VM left this entry behind — skip
+                // it (a re-placed VM pushed a fresh entry of its own).
+                if let Some(n) = self.revoked.get_mut(&vm) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.revoked.remove(&vm);
+                    }
+                    continue;
+                }
+            }
             self.dc.remove(vm);
             self.policy.on_departure(&mut self.dc, vm, &mut self.ctx);
+            if !self.resident_specs.is_empty() {
+                self.resident_specs.remove(&vm);
+            }
+        }
+        self.apply_ops(t);
+    }
+
+    /// Replay scheduled fault/repair/drain events with timestamps ≤ `t`.
+    fn apply_ops(&mut self, t: Time) {
+        while let Some((_, ev)) = self.injector.pop_due(t) {
+            match ev {
+                OpsEvent::GpuFail { gpu, until } => {
+                    // Evict residents while the index still covers the
+                    // device, then take it offline.
+                    for vm in self.dc.vms_on_gpu(gpu) {
+                        self.evict(vm);
+                    }
+                    self.dc.set_gpu_health(gpu, HealthState::Failed { until });
+                    let _ = self.injector.record_failure(gpu);
+                }
+                OpsEvent::GpuRepair { gpu } => {
+                    let restored = if self.injector.is_banned(gpu) {
+                        HealthState::Banned // repeat offender: blocklisted
+                    } else {
+                        HealthState::Healthy
+                    };
+                    self.dc.set_gpu_health(gpu, restored);
+                }
+                OpsEvent::HostFail { host, until } => {
+                    for vm in self.dc.vms_on_host(host) {
+                        self.evict(vm);
+                    }
+                    self.dc.set_host_health(host, HealthState::Failed { until });
+                }
+                OpsEvent::HostRepair { host } => {
+                    // A drain that began before the failure stays void.
+                    if matches!(self.dc.host_health(host), HealthState::Failed { .. }) {
+                        self.dc.set_host_health(host, HealthState::Healthy);
+                    }
+                }
+                OpsEvent::DrainStart { host, .. } => {
+                    // Only a healthy host can enter maintenance.
+                    if self.dc.host_health(host) != HealthState::Healthy {
+                        continue;
+                    }
+                    self.dc.set_host_health(host, HealthState::Draining);
+                    // Best-effort, all-or-nothing evacuation through the
+                    // transactional planner layer; a refused plan leaves
+                    // residents in place (they keep running — draining
+                    // allows residency, just no new placements).
+                    if let Some(plan) = plan_evacuation(&self.dc, host) {
+                        if !plan.is_empty() && self.dc.apply_plan(&plan).is_ok() {
+                            let start = self.migrations.len();
+                            plan.push_events_into(&mut self.migrations);
+                            for ev in &self.migrations[start..] {
+                                self.migration_cost[ev.kind.index()] += ev.cost();
+                            }
+                        }
+                    }
+                }
+                OpsEvent::DrainDone { host } => {
+                    // A failure during the drain wins; only a still-
+                    // draining host returns to service.
+                    if self.dc.host_health(host) == HealthState::Draining {
+                        self.dc.set_host_health(host, HealthState::Healthy);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evict one VM for a hardware failure: terminal (no re-queue), the
+    /// VM counts as interrupted and its departure-heap entry is revoked.
+    fn evict(&mut self, vm: VmId) {
+        self.dc.remove(vm);
+        self.policy.on_departure(&mut self.dc, vm, &mut self.ctx);
+        *self.revoked.entry(vm).or_insert(0) += 1;
+        self.interrupted += 1;
+        if !self.resident_specs.is_empty() {
+            self.resident_specs.remove(&vm);
         }
     }
 
@@ -205,7 +362,13 @@ impl EventCore {
     /// Allocation-free [`EventCore::place`]: the decisions land in the
     /// context's [`crate::policies::DecisionBuffer`] (read them via
     /// [`EventCore::decisions`]) and stay valid until the next batch.
+    ///
+    /// With admission queueing enabled, parked requests are re-offered
+    /// (FIFO, once per interval, before the fresh batch — expiries
+    /// first) and this batch's retryable rejections are parked in turn,
+    /// their decisions rewritten to [`RejectReason::Queued`].
     pub fn place_buffered(&mut self, batch: &[VmSpec]) {
+        self.process_queue();
         if batch.is_empty() {
             self.ctx.decisions.begin(0);
             return;
@@ -218,19 +381,196 @@ impl EventCore {
         self.ctx.decisions.begin(batch.len());
         self.policy.place_batch_into(&mut self.dc, batch, &mut self.ctx);
         debug_assert_eq!(self.ctx.decisions.len(), batch.len());
-        for (vm, d) in batch.iter().zip(self.ctx.decisions.as_slice()) {
-            self.requested += 1;
-            self.per_profile[vm.profile.dense()].0 += 1;
-            match d {
-                Decision::Placed { .. } => {
-                    self.accepted += 1;
-                    self.per_profile[vm.profile.dense()].1 += 1;
-                    self.departures.push(Reverse((vm.departure.max(t_end + 1), vm.id)));
+        if self.queue.enabled() {
+            self.account_batch_with_queue(batch, t_end);
+        } else {
+            for (vm, d) in batch.iter().zip(self.ctx.decisions.as_slice()) {
+                self.requested += 1;
+                self.per_profile[vm.profile.dense()].0 += 1;
+                match d {
+                    Decision::Placed { .. } => {
+                        self.accepted += 1;
+                        self.per_profile[vm.profile.dense()].1 += 1;
+                        self.departures.push(Reverse((vm.departure.max(t_end + 1), vm.id)));
+                    }
+                    Decision::Rejected(reason) => self.rejections[reason.index()] += 1,
                 }
-                Decision::Rejected(reason) => self.rejections[reason.index()] += 1,
             }
         }
         self.absorb_migrations();
+    }
+
+    /// Account one accepted VM (shared by the batch, retry and
+    /// preemption paths). Keeps `sum(rejections) == requested -
+    /// accepted` callers' responsibility.
+    fn accept(&mut self, vm: &VmSpec, t_end: Time) {
+        self.accepted += 1;
+        self.per_profile[vm.profile.dense()].1 += 1;
+        self.departures.push(Reverse((vm.departure.max(t_end + 1), vm.id)));
+        if self.queue.config().preemption {
+            self.resident_specs.insert(vm.id, *vm);
+        }
+    }
+
+    /// The queue-aware batch accounting pass: retryable rejections are
+    /// parked (decision rewritten to `Queued`); with preemption on,
+    /// high-tier rejections first try to displace low-tier residents.
+    fn account_batch_with_queue(&mut self, batch: &[VmSpec], t_end: Time) {
+        let mut ds = self.ctx.decisions.to_vec();
+        for (i, vm) in batch.iter().enumerate() {
+            self.requested += 1;
+            self.per_profile[vm.profile.dense()].0 += 1;
+            match ds[i] {
+                Decision::Placed { .. } => self.accept(vm, t_end),
+                Decision::Rejected(reason) => {
+                    let mut d = Decision::Rejected(reason);
+                    if reason.retryable() {
+                        if self.queue.config().preemption && tier_of(vm) == Tier::High {
+                            if let Some(placed) = self.try_preempt(vm, t_end) {
+                                d = placed;
+                            }
+                        }
+                        if !d.is_placed() && self.queue.try_enqueue(*vm, t_end) {
+                            d = Decision::Rejected(RejectReason::Queued);
+                        }
+                    }
+                    if let Decision::Rejected(r) = d {
+                        self.rejections[r.index()] += 1;
+                    }
+                    ds[i] = d;
+                }
+            }
+        }
+        // The preemption re-offers clobbered the decision buffer —
+        // restore the batch's (rewritten) decisions for the caller.
+        self.ctx.decisions.begin(ds.len());
+        for d in ds {
+            self.ctx.decisions.push(d);
+        }
+    }
+
+    /// Once-per-interval queue pass: expire overdue requests, then
+    /// re-offer the remainder to the policy in FIFO order. Runs before
+    /// the interval's fresh batch (queued requests are older).
+    fn process_queue(&mut self) {
+        if !self.queue.enabled() || self.queue_done_hour == self.hour {
+            return;
+        }
+        self.queue_done_hour = self.hour;
+        let t_end = self.interval_end();
+        let rejections = &mut self.rejections;
+        self.queue.pop_expired(t_end, |_| {
+            rejections[RejectReason::Queued.index()] -= 1;
+            rejections[RejectReason::Expired.index()] += 1;
+        });
+        if self.queue.is_empty() {
+            return;
+        }
+        let mut scratch = std::mem::take(&mut self.retry_scratch);
+        self.queue.drain_into(&mut scratch);
+        for req in scratch.drain(..) {
+            self.ctx.now = t_end;
+            self.policy.place_batch_into(&mut self.dc, std::slice::from_ref(&req.spec), &mut self.ctx);
+            debug_assert_eq!(self.ctx.decisions.len(), 1);
+            let d = self.ctx.decisions.as_slice()[0];
+            match d {
+                Decision::Placed { .. } => {
+                    // `requested` was counted at arrival; the park flips
+                    // back into an acceptance.
+                    self.rejections[RejectReason::Queued.index()] -= 1;
+                    self.queue_delays.push(t_end.saturating_sub(req.enqueued));
+                    self.accept(&req.spec, t_end);
+                }
+                Decision::Rejected(_) => self.queue.restore(req),
+            }
+        }
+        self.retry_scratch = scratch;
+        self.absorb_migrations();
+    }
+
+    /// Try to place a rejected high-tier request by preempting low-tier
+    /// residents: first ascending model-compatible GPU where evicting
+    /// low-tier VMs (ascending id) yields a block/CPU/RAM fit. Victims
+    /// are re-enqueued with fresh TTLs; the request is then re-offered
+    /// to the policy. Returns the placed decision, or `None` (victims,
+    /// if any were taken, stay queued — they retry next interval).
+    fn try_preempt(&mut self, vm: &VmSpec, t_end: Time) -> Option<Decision> {
+        let model = vm.profile.model();
+        let mut chosen: Option<Vec<VmId>> = None;
+        'scan: for h in self.dc.hosts() {
+            for (g, gpu) in h.gpus().iter().enumerate() {
+                if gpu.model() != model || !h.gpu_available(g) {
+                    continue;
+                }
+                let mut occ = gpu.occupancy();
+                let mut cpus = h.free_cpus();
+                let mut ram = h.free_ram();
+                let mut victims: Vec<VmId> = Vec::new();
+                let mut insts: Vec<Instance> = gpu.instances().to_vec();
+                insts.sort_by_key(|i| i.vm);
+                let mut candidates = insts.iter();
+                loop {
+                    if cpus >= vm.cpus && ram >= vm.ram_gb && mock_assign(occ, vm.profile).is_some()
+                    {
+                        if victims.is_empty() {
+                            // Fits without evictions: the policy rejected
+                            // for its own reasons — nothing to preempt.
+                            break;
+                        }
+                        chosen = Some(victims);
+                        break 'scan;
+                    }
+                    let Some(inst) = candidates.next() else { break };
+                    let low_tier = self
+                        .resident_specs
+                        .get(&inst.vm)
+                        .map(|s| tier_of(s) == Tier::Low)
+                        .unwrap_or(false);
+                    if !low_tier {
+                        continue;
+                    }
+                    victims.push(inst.vm);
+                    occ &= !inst.placement.mask();
+                    let (c, r) = self.dc.vm_demands(inst.vm).unwrap_or((0, 0));
+                    cpus += c;
+                    ram += r;
+                }
+            }
+        }
+        for victim in chosen? {
+            self.preempt(victim, t_end);
+        }
+        self.ctx.now = t_end;
+        self.policy.place_batch_into(&mut self.dc, std::slice::from_ref(vm), &mut self.ctx);
+        debug_assert_eq!(self.ctx.decisions.len(), 1);
+        let d = self.ctx.decisions.as_slice()[0];
+        match d {
+            Decision::Placed { .. } => {
+                self.accept(vm, t_end);
+                Some(d)
+            }
+            Decision::Rejected(_) => None,
+        }
+    }
+
+    /// Displace one low-tier resident back into the queue: its
+    /// acceptance is unwound into a `Queued` rejection (fresh TTL) and
+    /// its departure-heap entry revoked. A full queue makes the
+    /// displacement terminal (`Expired`) — either way `sum(rejections)
+    /// == requested - accepted` is preserved.
+    fn preempt(&mut self, vm: VmId, t_end: Time) {
+        let spec = self.resident_specs.remove(&vm).expect("preemption tracks resident specs");
+        self.dc.remove(vm);
+        self.policy.on_departure(&mut self.dc, vm, &mut self.ctx);
+        *self.revoked.entry(vm).or_insert(0) += 1;
+        self.accepted -= 1;
+        self.per_profile[spec.profile.dense()].1 -= 1;
+        self.preempted += 1;
+        if self.queue.try_enqueue(spec, t_end) {
+            self.rejections[RejectReason::Queued.index()] += 1;
+        } else {
+            self.rejections[RejectReason::Expired.index()] += 1;
+        }
     }
 
     /// Decisions of the latest batch, in request order (empty before the
@@ -253,6 +593,10 @@ impl EventCore {
             acc.0 += active as u64;
             acc.1 += total as u64;
         }
+        // O(1) counter reads, keeping the interval loop scan-free.
+        let fleet: usize = self.dc.gpus_by_model().iter().sum();
+        self.gpu_intervals_total += fleet as u64;
+        self.gpu_intervals_available += (fleet - self.dc.offline_gpus()) as u64;
         self.samples.push(Sample {
             hour: self.hour,
             active_rate: self.dc.active_hardware_rate(),
@@ -291,8 +635,42 @@ impl EventCore {
         }
     }
 
-    /// Finish: package everything into the shared result type.
-    pub fn into_result(self, wall_seconds: f64) -> SimResult {
+    /// VMs evicted by hardware failures so far.
+    pub fn interrupted(&self) -> u64 {
+        self.interrupted
+    }
+
+    /// VMs preempted back into the queue so far.
+    pub fn preempted(&self) -> u64 {
+        self.preempted
+    }
+
+    /// Currently parked requests.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Read access to the admission queue (invariant checks in tests).
+    pub fn admission_queue(&self) -> &AdmissionQueue {
+        &self.queue
+    }
+
+    /// Finish: package everything into the shared result type. Requests
+    /// still parked in the queue never served — they flush to
+    /// [`RejectReason::Expired`], keeping `sum(rejections) == requested
+    /// - accepted` in the result.
+    pub fn into_result(mut self, wall_seconds: f64) -> SimResult {
+        let mut leftovers = Vec::new();
+        self.queue.drain_into(&mut leftovers);
+        for _ in &leftovers {
+            self.rejections[RejectReason::Queued.index()] -= 1;
+            self.rejections[RejectReason::Expired.index()] += 1;
+        }
+        let availability = if self.gpu_intervals_total == 0 {
+            1.0
+        } else {
+            self.gpu_intervals_available as f64 / self.gpu_intervals_total as f64
+        };
         SimResult {
             policy: self.policy.name().to_string(),
             samples: self.samples,
@@ -303,6 +681,10 @@ impl EventCore {
             migration_events: self.migrations,
             gpus_by_model: self.dc.gpus_by_model(),
             gpu_activity: self.gpu_activity,
+            interrupted: self.interrupted,
+            preempted: self.preempted,
+            queue_delays: self.queue_delays,
+            availability,
             wall_seconds,
         }
     }
@@ -383,5 +765,103 @@ mod tests {
         let rej = c.rejections();
         assert_eq!(rej[RejectReason::NoGpuFit.index()], 1);
         assert_eq!(rej.iter().sum::<u64>(), 1);
+    }
+
+    fn wvm(id: VmId, profile: Profile, arrival: Time, departure: Time, weight: f64) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival, departure, weight }
+    }
+
+    #[test]
+    fn gpu_failure_interrupts_blocks_and_repairs() {
+        let mut c = core(1);
+        c.set_integrity_every(1);
+        let r = crate::cluster::GpuRef { host: 0, gpu: 0 };
+        c.set_fault_schedule(FaultInjector::new(
+            vec![
+                (HOUR + 10, OpsEvent::GpuFail { gpu: r, until: 3 * HOUR + 10 }),
+                (3 * HOUR + 10, OpsEvent::GpuRepair { gpu: r }),
+            ],
+            0,
+        ));
+        // Hour 0: placed on the (healthy) GPU.
+        let d = c.step(&[vm(1, Profile::P7g40gb, 10, 100 * HOUR)]);
+        assert!(d[0].is_placed());
+        // Hour 1: the failure applies before the batch — the resident is
+        // interrupted and the arrival finds no schedulable GPU.
+        let d = c.step(&[vm(2, Profile::P7g40gb, HOUR + 20, 100 * HOUR)]);
+        assert_eq!(c.interrupted(), 1);
+        assert_eq!(c.dc.resident_count(), 0);
+        assert_eq!(d[0], Decision::Rejected(RejectReason::NoGpuFit));
+        c.step(&[]); // hour 2: still down
+        // Hour 3: repaired before the batch — placements resume.
+        let d = c.step(&[vm(3, Profile::P7g40gb, 3 * HOUR + 20, 100 * HOUR)]);
+        assert!(d[0].is_placed());
+        // Interruption is not a rejection: the invariant stays exact.
+        assert_eq!(c.rejections().iter().sum::<u64>(), c.requested() - c.accepted());
+        let r = c.into_result(0.0);
+        assert_eq!(r.interrupted, 1);
+        // Availability: 4 sampled intervals, GPU offline in two of them.
+        assert!((r.availability - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queued_request_is_served_when_capacity_frees() {
+        let mut c = core(1);
+        c.set_admission_queue(QueueConfig { capacity: 4, ttl_hours: 10, preemption: false });
+        let d = c.step(&[
+            vm(1, Profile::P7g40gb, 10, HOUR + 5),
+            vm(2, Profile::P7g40gb, 20, 100 * HOUR),
+        ]);
+        assert!(d[0].is_placed());
+        assert_eq!(d[1], Decision::Rejected(RejectReason::Queued));
+        assert_eq!(c.queue_len(), 1);
+        c.admission_queue().verify().unwrap();
+        // Hour 1: VM 1 departs, the queued request retries and lands.
+        c.step(&[]);
+        assert_eq!(c.queue_len(), 0);
+        assert_eq!(c.accepted(), 2);
+        assert_eq!(c.rejections().iter().sum::<u64>(), 0);
+        let r = c.into_result(0.0);
+        assert_eq!(r.queue_delays, vec![HOUR]);
+    }
+
+    #[test]
+    fn queued_request_expires_after_ttl() {
+        let mut c = core(1);
+        c.set_admission_queue(QueueConfig { capacity: 4, ttl_hours: 2, preemption: false });
+        c.step(&[
+            vm(1, Profile::P7g40gb, 10, 100 * HOUR), // occupies forever
+            vm(2, Profile::P7g40gb, 20, 100 * HOUR), // parks
+        ]);
+        c.step(&[]); // hour 1: retry fails, still parked
+        assert_eq!(c.queue_len(), 1);
+        c.step(&[]); // hour 2: TTL (2 h from t=1 h) lapses
+        assert_eq!(c.queue_len(), 0);
+        let r = c.into_result(0.0);
+        assert_eq!(r.rejections[RejectReason::Expired.index()], 1);
+        assert_eq!(r.rejections[RejectReason::Queued.index()], 0);
+        assert_eq!(r.rejections.iter().sum::<u64>(), r.requested - r.accepted);
+    }
+
+    #[test]
+    fn high_tier_arrival_preempts_low_tier_resident() {
+        let mut c = core(1);
+        c.set_admission_queue(QueueConfig { capacity: 4, ttl_hours: 10, preemption: true });
+        let d = c.step(&[
+            wvm(1, Profile::P7g40gb, 10, 100 * HOUR, 1.0),
+            wvm(2, Profile::P7g40gb, 20, 100 * HOUR, 2.5),
+        ]);
+        assert!(d[0].is_placed());
+        assert!(d[1].is_placed(), "high tier displaces the low-tier resident");
+        assert_eq!(c.preempted(), 1);
+        assert_eq!(c.accepted(), 1); // VM 1's acceptance was unwound
+        assert_eq!(c.queue_len(), 1); // ...back into the queue
+        assert_eq!(c.rejections()[RejectReason::Queued.index()], 1);
+        assert_eq!(c.rejections().iter().sum::<u64>(), c.requested() - c.accepted());
+        c.dc.check_integrity().unwrap();
+        let r = c.into_result(0.0);
+        assert_eq!(r.preempted, 1);
+        // The still-parked victim flushes to Expired in the result.
+        assert_eq!(r.rejections[RejectReason::Expired.index()], 1);
     }
 }

@@ -57,6 +57,18 @@ pub struct SimResult {
     /// Cumulative per-model `(active, total)` GPU-interval counts across
     /// all samples — the per-model active-hardware breakdown.
     pub gpu_activity: [(u64, u64); NUM_MODELS],
+    /// VMs evicted by hardware failures (terminal; not rejections and
+    /// not subtracted from `accepted`).
+    pub interrupted: u64,
+    /// VMs preempted back into the admission queue by high-tier
+    /// arrivals (their acceptance was unwound into a `Queued` count).
+    pub preempted: u64,
+    /// Queueing delay (seconds) of every request served from the
+    /// admission queue, in service order.
+    pub queue_delays: Vec<u64>,
+    /// Mean per-interval fraction of schedulable GPUs (1.0 on a
+    /// fault-free run or with zero sampled intervals).
+    pub availability: f64,
     /// Wall-time of the run (for perf reporting), seconds.
     pub wall_seconds: f64,
 }
@@ -213,6 +225,41 @@ impl SimResult {
         self.migration_events.iter().map(|e| e.cost()).sum()
     }
 
+    /// Requests served from the admission queue.
+    pub fn served_from_queue(&self) -> u64 {
+        self.queue_delays.len() as u64
+    }
+
+    /// Queue-delay percentile in seconds (nearest-rank over the sorted
+    /// samples); 0 when nothing was served from the queue.
+    pub fn queue_delay_percentile(&self, p: f64) -> u64 {
+        if self.queue_delays.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.queue_delays.clone();
+        sorted.sort_unstable();
+        let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
+    /// Median queue delay, seconds.
+    pub fn queue_delay_p50(&self) -> u64 {
+        self.queue_delay_percentile(50.0)
+    }
+
+    /// Tail queue delay, seconds.
+    pub fn queue_delay_p99(&self) -> u64 {
+        self.queue_delay_percentile(99.0)
+    }
+
+    /// Mean queue delay, seconds (0.0 with an unused queue).
+    pub fn queue_delay_mean(&self) -> f64 {
+        if self.queue_delays.is_empty() {
+            return 0.0;
+        }
+        self.queue_delays.iter().sum::<u64>() as f64 / self.queue_delays.len() as f64
+    }
+
     /// The profile keys a report should show for this result: the six
     /// A100-40 profiles (the paper's fixed column set) plus any other
     /// catalog key that saw requests, in dense order.
@@ -253,6 +300,18 @@ impl SimResult {
                         .map(|r| (r.name().to_string(), self.rejected(*r).into()))
                         .collect(),
                 ),
+            ),
+            (
+                "ops",
+                Json::obj(vec![
+                    ("interrupted", self.interrupted.into()),
+                    ("preempted", self.preempted.into()),
+                    ("served_from_queue", self.served_from_queue().into()),
+                    ("queue_delay_p50", self.queue_delay_p50().into()),
+                    ("queue_delay_p99", self.queue_delay_p99().into()),
+                    ("queue_delay_mean", self.queue_delay_mean().into()),
+                    ("availability", self.availability.into()),
+                ]),
             ),
             (
                 "per_profile",
@@ -341,7 +400,7 @@ mod tests {
             requested: 10,
             accepted: 6,
             per_profile,
-            rejections: [1, 0, 2, 1],
+            rejections: [1, 0, 2, 1, 0, 0],
             migration_events: vec![
                 MigrationEvent {
                     vm: 1,
@@ -370,6 +429,10 @@ mod tests {
             ],
             gpus_by_model,
             gpu_activity,
+            interrupted: 0,
+            preempted: 0,
+            queue_delays: Vec::new(),
+            availability: 1.0,
             wall_seconds: 0.1,
         }
     }
@@ -465,6 +528,18 @@ mod tests {
     }
 
     #[test]
+    fn queue_delay_percentiles() {
+        let mut r = result();
+        assert_eq!(r.queue_delay_p50(), 0);
+        assert_eq!(r.queue_delay_mean(), 0.0);
+        r.queue_delays = vec![400, 100, 200, 300];
+        assert_eq!(r.served_from_queue(), 4);
+        assert_eq!(r.queue_delay_p50(), 200);
+        assert_eq!(r.queue_delay_p99(), 400);
+        assert!((r.queue_delay_mean() - 250.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn json_roundtrips() {
         let j = result().to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
@@ -485,5 +560,10 @@ mod tests {
         let models = parsed.get("models").unwrap();
         assert_eq!(models.get("a100-40").unwrap().get("gpus").unwrap().as_f64(), Some(2.0));
         assert!(models.get("a30").is_none());
+        let ops = parsed.get("ops").unwrap();
+        assert_eq!(ops.get("availability").unwrap().as_f64(), Some(1.0));
+        assert_eq!(ops.get("interrupted").unwrap().as_f64(), Some(0.0));
+        assert_eq!(rej.get("queued").unwrap().as_f64(), Some(0.0));
+        assert_eq!(rej.get("expired").unwrap().as_f64(), Some(0.0));
     }
 }

@@ -23,7 +23,70 @@ use super::mapping::{
 use crate::cluster::host::Host;
 use crate::cluster::vm::{Time, VmSpec, HOUR};
 use crate::mig::{GpuModel, NUM_PROFILE_KEYS};
+use crate::ops::{generate_schedule, OpsConfig, OpsEvent};
 use crate::util::rng::Rng;
+
+/// Shape of the arrival process. All three share the same
+/// rejection-sampling loop (identical RNG draws per iteration — two
+/// `f64`s); only the deterministic intensity function of the candidate
+/// time differs, so [`ArrivalProcess::Diurnal`] reproduces the
+/// historical stream byte-for-byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArrivalProcess {
+    /// Sinusoidal day/night cycle (the historical default).
+    #[default]
+    Diurnal,
+    /// Short high-intensity bursts every 8 hours over a low baseline.
+    Bursty,
+    /// A single flash crowd in the middle decile of the horizon.
+    FlashCrowd,
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI name (`diurnal` | `bursty` | `flash-crowd`).
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        match s {
+            "diurnal" => Some(ArrivalProcess::Diurnal),
+            "bursty" => Some(ArrivalProcess::Bursty),
+            "flash-crowd" | "flash" => Some(ArrivalProcess::FlashCrowd),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Diurnal => "diurnal",
+            ArrivalProcess::Bursty => "bursty",
+            ArrivalProcess::FlashCrowd => "flash-crowd",
+        }
+    }
+
+    /// Acceptance probability of a candidate arrival at `t` (in `(0, 1]`
+    /// everywhere, so the rejection loop always terminates).
+    fn intensity(&self, t: Time, horizon_secs: Time) -> f64 {
+        match self {
+            ArrivalProcess::Diurnal => {
+                let hour_of_day = (t / HOUR) % 24;
+                0.75 + 0.25 * (2.0 * std::f64::consts::PI * hour_of_day as f64 / 24.0).sin()
+            }
+            ArrivalProcess::Bursty => {
+                if (t / HOUR) % 8 < 2 {
+                    1.0
+                } else {
+                    0.25
+                }
+            }
+            ArrivalProcess::FlashCrowd => {
+                let frac = t as f64 / horizon_secs.max(1) as f64;
+                if (0.45..0.55).contains(&frac) {
+                    1.0
+                } else {
+                    0.3
+                }
+            }
+        }
+    }
+}
 
 /// Configuration of the synthetic trace.
 #[derive(Debug, Clone)]
@@ -53,6 +116,14 @@ pub struct TraceConfig {
     /// A100-40-only) consumes no randomness, keeping the historical
     /// byte-identical streams.
     pub gpu_models: Vec<(GpuModel, f64)>,
+    /// Shape of the arrival intensity. [`ArrivalProcess::Diurnal`] (the
+    /// default) reproduces the historical stream exactly.
+    pub arrival_process: ArrivalProcess,
+    /// Fraction of VMs promoted to the high-priority tier (weight 2.0,
+    /// eligible to preempt under `--preempt`). The promotion pass draws
+    /// from its own RNG stream and is skipped entirely at 0.0, so
+    /// default configs stay byte-identical.
+    pub priority_frac: f64,
 }
 
 impl Default for TraceConfig {
@@ -73,6 +144,8 @@ impl Default for TraceConfig {
             // that produces the paper's ~30-40% acceptance rates.
             host_gpu_weights: [0.90, 0.07, 0.01, 0.01, 0.005, 0.002, 0.002, 0.001],
             gpu_models: vec![(GpuModel::A100_40, 1.0)],
+            arrival_process: ArrivalProcess::Diurnal,
+            priority_frac: 0.0,
         }
     }
 }
@@ -105,9 +178,30 @@ impl Workload {
         let mut rng = Rng::new(config.seed);
         let hosts = generate_hosts(&config, &mut rng.split());
         let pods = generate_pods(&config, &mut rng.split());
-        let (vms, report) =
+        let (mut vms, report) =
             map_pods_to_profiles_fleet(&pods, &config.gpu_models, &mut rng.split());
+        if config.priority_frac > 0.0 {
+            // Gated split: zero-frac configs draw nothing and keep the
+            // historical byte-identical streams.
+            let mut prng = rng.split();
+            for vm in &mut vms {
+                if prng.chance(config.priority_frac) {
+                    vm.weight = 2.0;
+                }
+            }
+        }
         Workload { hosts, vms, report, config }
+    }
+
+    /// A fault/drain schedule for this workload's fleet. When the ops
+    /// config leaves `horizon_hours` at 0 it inherits the trace horizon
+    /// (plus slack so repairs land inside the run).
+    pub fn fault_schedule(&self, ops: &OpsConfig) -> Vec<(Time, OpsEvent)> {
+        let mut ops = ops.clone();
+        if ops.horizon_hours == 0 {
+            ops.horizon_hours = self.config.horizon_hours + 24;
+        }
+        generate_schedule(&ops, &self.hosts)
     }
 
     /// Total GPUs across hosts.
@@ -163,16 +257,16 @@ fn generate_pods(config: &TraceConfig, rng: &mut Rng) -> Vec<PodRecord> {
     let horizon_secs = config.horizon_hours * HOUR;
     let mut pods = Vec::with_capacity(config.num_pods);
     for _ in 0..config.num_pods {
-        // Arrival: diurnal intensity — rejection-sample the hour of day.
+        // Arrival: rejection-sample against the configured intensity
+        // curve. Each iteration draws exactly two f64s regardless of the
+        // process, so Diurnal reproduces the historical stream.
         let arrival = if rng.chance(config.outlier_frac) {
             // Outlier: far beyond the horizon (trace artifact).
             horizon_secs + rng.range_inclusive(100, 1_000) * HOUR
         } else {
             loop {
                 let t = (rng.f64() * horizon_secs as f64) as Time;
-                let hour_of_day = (t / HOUR) % 24;
-                let intensity =
-                    0.75 + 0.25 * (2.0 * std::f64::consts::PI * hour_of_day as f64 / 24.0).sin();
+                let intensity = config.arrival_process.intensity(t, horizon_secs);
                 if rng.f64() < intensity {
                     break t;
                 }
@@ -318,6 +412,81 @@ mod tests {
             .iter()
             .all(|g| g.model() == GpuModel::A100_40)));
         assert!(w.vms.iter().all(|v| v.profile.model() == GpuModel::A100_40));
+    }
+
+    #[test]
+    fn arrival_process_parse_round_trips() {
+        for p in [ArrivalProcess::Diurnal, ArrivalProcess::Bursty, ArrivalProcess::FlashCrowd] {
+            assert_eq!(ArrivalProcess::parse(p.name()), Some(p));
+        }
+        assert_eq!(ArrivalProcess::parse("flash"), Some(ArrivalProcess::FlashCrowd));
+        assert_eq!(ArrivalProcess::parse("poisson"), None);
+    }
+
+    #[test]
+    fn alternate_arrival_processes_are_deterministic_and_distinct() {
+        let bursty = TraceConfig {
+            arrival_process: ArrivalProcess::Bursty,
+            ..TraceConfig::small(7)
+        };
+        let flash = TraceConfig {
+            arrival_process: ArrivalProcess::FlashCrowd,
+            ..TraceConfig::small(7)
+        };
+        let b1 = Workload::generate(bursty.clone());
+        let b2 = Workload::generate(bursty);
+        assert_eq!(b1.vms, b2.vms);
+        let f = Workload::generate(flash);
+        let d = Workload::generate(TraceConfig::small(7));
+        assert_ne!(b1.vms, d.vms);
+        assert_ne!(f.vms, d.vms);
+
+        // The flash crowd concentrates arrivals in the middle decile far
+        // beyond its 10% share of the horizon.
+        let horizon = f.config.horizon_hours * HOUR;
+        let in_window = f
+            .vms
+            .iter()
+            .filter(|v| {
+                let frac = v.arrival as f64 / horizon as f64;
+                (0.45..0.55).contains(&frac)
+            })
+            .count();
+        assert!(
+            in_window as f64 > 0.15 * f.vms.len() as f64,
+            "flash window holds {in_window}/{}",
+            f.vms.len()
+        );
+    }
+
+    #[test]
+    fn priority_frac_promotes_without_disturbing_the_stream() {
+        let base = Workload::generate(TraceConfig::small(11));
+        assert!(base.vms.iter().all(|v| v.weight == 1.0));
+
+        let pri =
+            Workload::generate(TraceConfig { priority_frac: 0.3, ..TraceConfig::small(11) });
+        let high = pri.vms.iter().filter(|v| v.weight == 2.0).count();
+        assert!(high > 0 && high < pri.vms.len(), "promoted {high}/{}", pri.vms.len());
+        // The promotion pass only touches weights: every other field of
+        // the VM stream is byte-identical to the zero-frac run.
+        assert_eq!(base.vms.len(), pri.vms.len());
+        for (a, b) in base.vms.iter().zip(&pri.vms) {
+            assert_eq!((a.arrival, a.departure, a.profile, a.cpus, a.ram_gb),
+                       (b.arrival, b.departure, b.profile, b.cpus, b.ram_gb));
+        }
+    }
+
+    #[test]
+    fn fault_schedule_inherits_the_trace_horizon() {
+        let w = Workload::generate(TraceConfig::small(13));
+        let ops = OpsConfig { drain_rate: 0.02, ..OpsConfig::default().with_gpu_mtbf(500.0) };
+        let a = w.fault_schedule(&ops);
+        let b = w.fault_schedule(&ops);
+        assert_eq!(a, b, "schedule is deterministic");
+        assert!(!a.is_empty(), "a 500 h MTBF over a week-long trace must fire");
+        let bound = (w.config.horizon_hours + 24) * HOUR;
+        assert!(a.iter().all(|(t, _)| *t <= bound));
     }
 
     #[test]

@@ -18,5 +18,5 @@ pub mod generator;
 pub mod loader;
 pub mod mapping;
 
-pub use generator::{TraceConfig, Workload};
+pub use generator::{ArrivalProcess, TraceConfig, Workload};
 pub use mapping::{map_pods_to_profiles, map_pods_to_profiles_fleet, PodRecord};

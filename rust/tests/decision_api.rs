@@ -176,7 +176,8 @@ fn simulator_replay(name: &str, heavy: f64, workload: &Workload, seed: u64) -> S
     let dc = DataCenter::new(workload.hosts.clone());
     let mut sim = Simulation::new(dc, policy, &workload.vms);
     sim.ctx = PolicyCtx::new(seed);
-    sim.options = SimulationOptions { integrity_every: 0, drain_cap_hours: 5 * 24 };
+    sim.options =
+        SimulationOptions { integrity_every: 0, drain_cap_hours: 5 * 24, ..Default::default() };
     sim.run()
 }
 
@@ -589,6 +590,156 @@ fn zero_migration_budget_reduces_to_the_migration_free_variant() {
     let (dec_d, _) = replay_decisions("mcc", &base, &workload, 42);
     assert_eq!(dec_c, dec_d, "budget-0 mcc+defrag must decide like mcc");
     assert_eq!(res_c.migrations(), 0);
+}
+
+// --------------------------------------------------------- ops equivalence
+
+/// Tentpole lock: the simulator-vs-coordinator equivalence extends to
+/// runs with GPU/host faults, maintenance drains and an admission
+/// queue. Both sides install the same deterministic schedule and are
+/// driven to the same interval count, so every metric — including the
+/// new ops counters — must match exactly.
+#[test]
+fn ops_runs_agree_between_simulator_and_coordinator() {
+    use grmu::ops::{FaultInjector, OpsConfig, QueueConfig};
+    let workload = Workload::generate(TraceConfig::small(42));
+    let vms = &workload.vms;
+    let last_arrival = vms.last().unwrap().arrival;
+    let ops = OpsConfig {
+        drain_rate: 1.0,
+        host_mtbf_hours: 2_000.0,
+        horizon_hours: workload.config.horizon_hours + 48,
+        ..OpsConfig::default().with_gpu_mtbf(400.0)
+    };
+    let qcfg = QueueConfig { capacity: 16, ttl_hours: 12, preemption: false };
+    for name in ["ff", "grmu"] {
+        let build = || {
+            PolicyRegistry::standard()
+                .build(name, &PolicyConfig::new().heavy_frac(0.25))
+                .unwrap()
+        };
+        // Simulator side: the shared core on the hourly grid.
+        let mut core = EventCore::new(
+            DataCenter::new(workload.hosts.clone()),
+            build(),
+            PolicyCtx::new(42),
+        );
+        core.set_fault_schedule(FaultInjector::from_config(&ops, &workload.hosts));
+        core.set_admission_queue(qcfg);
+        core.set_integrity_every(16);
+        let mut next = 0usize;
+        loop {
+            let t_end = core.interval_end();
+            let start = next;
+            while next < vms.len() && vms[next].arrival <= t_end {
+                next += 1;
+            }
+            core.step(&vms[start..next]);
+            let drained = next >= vms.len() && core.pending_departures() == 0;
+            let capped = core.hour() * HOUR > last_arrival + 3 * 24 * HOUR;
+            if drained || capped {
+                break;
+            }
+        }
+        let sim = core.into_result(0.0);
+        // The fault model must actually have fired, or the lock is vacuous.
+        assert!(sim.interrupted > 0, "{name}: no failure landed on a resident VM");
+        assert!(sim.availability < 1.0, "{name}: faults cost no GPU-hours?");
+        assert!(
+            sim.served_from_queue() + sim.rejected(RejectReason::Expired) > 0,
+            "{name}: the queue never engaged"
+        );
+
+        // Coordinator side: same schedule and queue, batched per window,
+        // then stepped to the simulator's exact interval count.
+        let mut coord = Coordinator::with_ctx(
+            DataCenter::new(workload.hosts.clone()),
+            build(),
+            CoordinatorConfig { max_batch: usize::MAX, interval: HOUR },
+            PolicyCtx::new(42),
+        );
+        coord.set_fault_schedule(FaultInjector::from_config(&ops, &workload.hosts));
+        coord.set_admission_queue(qcfg);
+        let mut i = 0usize;
+        while i < vms.len() {
+            let w = coord.window_of(vms[i].arrival);
+            let mut j = i;
+            while j < vms.len() && coord.window_of(vms[j].arrival) == w {
+                j += 1;
+            }
+            let batch: Vec<Request> = vms[i..j].iter().map(|&vm| Request { vm }).collect();
+            coord.decide_batch(&batch);
+            i = j;
+        }
+        let closed = coord.window_of(last_arrival) as usize;
+        for _ in closed..sim.samples.len() {
+            coord.close_interval();
+        }
+        let coord = coord.into_result();
+
+        assert_eq!(coord.requested, sim.requested, "{name}: requested diverged");
+        assert_eq!(coord.accepted, sim.accepted, "{name}: accepted diverged");
+        assert_eq!(coord.per_profile, sim.per_profile, "{name}: per-profile diverged");
+        assert_eq!(coord.rejections, sim.rejections, "{name}: rejections diverged");
+        assert_eq!(
+            coord.migration_events, sim.migration_events,
+            "{name}: migration events diverged"
+        );
+        assert_eq!(coord.samples, sim.samples, "{name}: samples diverged");
+        assert_eq!(coord.interrupted, sim.interrupted, "{name}: interrupted diverged");
+        assert_eq!(coord.preempted, sim.preempted, "{name}: preempted diverged");
+        assert_eq!(coord.queue_delays, sim.queue_delays, "{name}: queue delays diverged");
+        assert_eq!(coord.availability, sim.availability, "{name}: availability diverged");
+    }
+}
+
+/// Strictly-additive lock: installing a zero-rate fault schedule and a
+/// zero-capacity queue must not perturb a single decision, sample or
+/// rejection — the ops hooks are inert until configured.
+#[test]
+fn disabled_ops_hooks_do_not_perturb_decisions() {
+    use grmu::ops::{FaultInjector, OpsConfig, QueueConfig};
+    let workload = Workload::generate(TraceConfig::small(42));
+    let cfg = PolicyConfig::new().heavy_frac(0.25);
+    let (dec_plain, res_plain) = replay_decisions("grmu", &cfg, &workload, 42);
+
+    let policy = PolicyRegistry::standard().build("grmu", &cfg).unwrap();
+    let mut core = EventCore::new(
+        DataCenter::new(workload.hosts.clone()),
+        policy,
+        PolicyCtx::new(42),
+    );
+    core.set_fault_schedule(FaultInjector::from_config(
+        &OpsConfig { horizon_hours: 300, ..OpsConfig::default() },
+        &workload.hosts,
+    ));
+    core.set_admission_queue(QueueConfig { capacity: 0, ..QueueConfig::default() });
+    core.set_integrity_every(8);
+    let vms = &workload.vms;
+    let last_arrival = vms.last().map(|v| v.arrival).unwrap_or(0);
+    let mut decisions = Vec::new();
+    let mut next = 0usize;
+    loop {
+        let t_end = core.interval_end();
+        let start = next;
+        while next < vms.len() && vms[next].arrival <= t_end {
+            next += 1;
+        }
+        decisions.extend(core.step(&vms[start..next]));
+        let drained = next >= vms.len() && core.pending_departures() == 0;
+        let capped = core.hour() * HOUR > last_arrival + 5 * 24 * HOUR;
+        if drained || capped {
+            break;
+        }
+    }
+    let res = core.into_result(0.0);
+    assert_eq!(decisions, dec_plain, "inert ops hooks changed a decision");
+    assert_eq!(res.samples, res_plain.samples);
+    assert_eq!(res.rejections, res_plain.rejections);
+    assert_eq!(res.per_profile, res_plain.per_profile);
+    assert_eq!(res.migration_events, res_plain.migration_events);
+    assert_eq!(res.interrupted, 0);
+    assert_eq!(res.availability, 1.0);
 }
 
 /// Migration-cost accounting is consistent across layers: the

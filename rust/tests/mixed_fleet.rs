@@ -39,7 +39,8 @@ fn all_policies_run_mixed_fleets_end_to_end() {
         let dc = DataCenter::new(workload.hosts.clone());
         let mut sim = Simulation::new(dc, policy, &workload.vms);
         sim.ctx = PolicyCtx::new(42);
-        sim.options = SimulationOptions { integrity_every: 13, drain_cap_hours: 10 * 24 };
+        sim.options =
+            SimulationOptions { integrity_every: 13, drain_cap_hours: 10 * 24, ..Default::default() };
         let r = sim.run();
         assert!(r.requested > 0);
         assert!(r.accepted > 0, "{name}: accepted nothing on a mixed fleet");
@@ -148,7 +149,8 @@ fn migration_events_stay_model_coherent_on_mixed_fleets() {
         let dc = DataCenter::new(workload.hosts.clone());
         let mut sim = Simulation::new(dc, policy, &workload.vms);
         sim.ctx = PolicyCtx::new(42);
-        sim.options = SimulationOptions { integrity_every: 17, drain_cap_hours: 10 * 24 };
+        sim.options =
+            SimulationOptions { integrity_every: 17, drain_cap_hours: 10 * 24, ..Default::default() };
         let r = sim.run();
         // Rebuild a fleet map to resolve each event's GPUs.
         let fleet = DataCenter::new(workload.hosts.clone());

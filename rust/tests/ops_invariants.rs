@@ -1,0 +1,153 @@
+//! Property-style integration tests for the ops subsystem: random
+//! fault/repair/drain sequences — including conflicting and redundant
+//! ones (repairs without failures, double drains, events on already-down
+//! hosts) — interleaved with placements, queueing and preemption must
+//! keep the cluster, the index and the accounting coherent at every
+//! interval. The per-interval `check_integrity` inside the event core is
+//! the oracle; these tests only have to survive it.
+
+use grmu::cluster::vm::{Time, HOUR};
+use grmu::cluster::{DataCenter, GpuRef, Host};
+use grmu::ops::{FaultInjector, OpsEvent, QueueConfig};
+use grmu::policies::{PolicyConfig, PolicyCtx, PolicyRegistry};
+use grmu::sim::EventCore;
+use grmu::trace::{TraceConfig, Workload};
+use grmu::util::rng::Rng;
+
+/// An adversarial schedule: uniformly random events over random targets,
+/// with no care for pairing fails with repairs or drains with ends.
+fn random_schedule(rng: &mut Rng, hosts: &[Host], horizon: Time) -> Vec<(Time, OpsEvent)> {
+    let mut out = Vec::new();
+    let n = 60 + (rng.f64() * 80.0) as usize;
+    for _ in 0..n {
+        let t = (rng.f64() * horizon as f64) as Time;
+        let hi = ((rng.f64() * hosts.len() as f64) as usize).min(hosts.len() - 1);
+        let h = hosts[hi].id;
+        let gpus = hosts[hi].gpus().len();
+        let g = ((rng.f64() * gpus as f64) as usize).min(gpus - 1) as u8;
+        let gpu = GpuRef { host: h, gpu: g };
+        let until = t + HOUR + (rng.f64() * 12.0 * HOUR as f64) as Time;
+        let ev = match ((rng.f64() * 6.0) as u32).min(5) {
+            0 => OpsEvent::GpuFail { gpu, until },
+            1 => OpsEvent::GpuRepair { gpu },
+            2 => OpsEvent::HostFail { host: h, until },
+            3 => OpsEvent::HostRepair { host: h },
+            4 => OpsEvent::DrainStart { host: h, until },
+            _ => OpsEvent::DrainDone { host: h },
+        };
+        out.push((t, ev));
+    }
+    out.sort_by_key(|&(t, _)| t);
+    out
+}
+
+#[test]
+fn random_ops_sequences_keep_integrity_green() {
+    let mut any_interrupted = false;
+    for seed in [1u64, 2, 3, 4, 5] {
+        // priority_frac > 0 gives the preemption path real High-tier
+        // arrivals to act on.
+        let workload =
+            Workload::generate(TraceConfig { priority_frac: 0.25, ..TraceConfig::small(seed) });
+        let vms = &workload.vms;
+        let horizon = (workload.config.horizon_hours + 24) * HOUR;
+        let mut rng = Rng::new(seed ^ 0xB0B);
+        let schedule = random_schedule(&mut rng, &workload.hosts, horizon);
+        assert!(!schedule.is_empty());
+        for name in ["ff", "grmu"] {
+            let policy = PolicyRegistry::standard()
+                .build(name, &PolicyConfig::new().heavy_frac(0.25))
+                .unwrap();
+            let mut core = EventCore::new(
+                DataCenter::new(workload.hosts.clone()),
+                policy,
+                PolicyCtx::new(seed),
+            );
+            // ban_after 2: repeated random failures on the same GPU
+            // exercise the blocklist transition too.
+            core.set_fault_schedule(FaultInjector::new(schedule.clone(), 2));
+            core.set_admission_queue(QueueConfig {
+                capacity: 8,
+                ttl_hours: 6,
+                preemption: true,
+            });
+            core.set_integrity_every(1);
+            let last_arrival = vms.last().map(|v| v.arrival).unwrap_or(0);
+            let mut next = 0usize;
+            loop {
+                let t_end = core.interval_end();
+                let start = next;
+                while next < vms.len() && vms[next].arrival <= t_end {
+                    next += 1;
+                }
+                core.step(&vms[start..next]);
+                let drained = next >= vms.len() && core.pending_departures() == 0;
+                let capped = core.hour() * HOUR > last_arrival + 3 * 24 * HOUR;
+                if drained || capped {
+                    break;
+                }
+            }
+            let res = core.into_result(0.0);
+            assert_eq!(
+                res.rejections.iter().sum::<u64>(),
+                res.requested - res.accepted,
+                "seed {seed} {name}: queue/preemption accounting leaked"
+            );
+            assert!((0.0..=1.0).contains(&res.availability), "seed {seed} {name}");
+            assert!(res.queue_delay_p99() >= res.queue_delay_p50(), "seed {seed} {name}");
+            any_interrupted |= res.interrupted > 0;
+        }
+    }
+    assert!(any_interrupted, "no random schedule ever hit a resident — vacuous run");
+}
+
+/// The injector itself is order-safe under replay: popping the same
+/// schedule through cores with different interval grids applies every
+/// event exactly once and ends in a coherent state (integrity checked
+/// each interval on both grids).
+#[test]
+fn schedules_replay_coherently_on_any_interval_grid() {
+    let workload = Workload::generate(TraceConfig::small(8));
+    let vms = &workload.vms;
+    let horizon = (workload.config.horizon_hours + 24) * HOUR;
+    let mut rng = Rng::new(0xD1CE);
+    let schedule = random_schedule(&mut rng, &workload.hosts, horizon);
+    let last_arrival = vms.last().map(|v| v.arrival).unwrap_or(0);
+    let mut totals = Vec::new();
+    for interval in [HOUR, HOUR / 2, 3 * HOUR] {
+        let policy = PolicyRegistry::standard()
+            .build("ff", &PolicyConfig::new())
+            .unwrap();
+        let mut core = EventCore::with_interval(
+            DataCenter::new(workload.hosts.clone()),
+            policy,
+            PolicyCtx::new(8),
+            interval,
+        );
+        core.set_fault_schedule(FaultInjector::new(schedule.clone(), 0));
+        core.set_integrity_every(1);
+        let mut next = 0usize;
+        loop {
+            let t_end = core.interval_end();
+            let start = next;
+            while next < vms.len() && vms[next].arrival <= t_end {
+                next += 1;
+            }
+            core.step(&vms[start..next]);
+            let drained = next >= vms.len() && core.pending_departures() == 0;
+            let capped = core.hour() * interval > last_arrival + 3 * 24 * HOUR;
+            if drained || capped {
+                break;
+            }
+        }
+        let res = core.into_result(0.0);
+        assert_eq!(
+            res.rejections.iter().sum::<u64>(),
+            res.requested - res.accepted,
+            "interval {interval}"
+        );
+        totals.push((res.requested, res.accepted + res.interrupted));
+    }
+    // Same request stream on every grid.
+    assert!(totals.windows(2).all(|w| w[0].0 == w[1].0));
+}

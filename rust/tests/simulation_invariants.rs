@@ -31,6 +31,7 @@ fn run(policy: &str, seed: u64, heavy: f64, consolidation: Option<u64>) -> grmu:
     sim.options = SimulationOptions {
         integrity_every: 13,
         drain_cap_hours: 10 * 24,
+        ..Default::default()
     };
     sim.run()
 }

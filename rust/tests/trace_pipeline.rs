@@ -1,10 +1,12 @@
 //! Integration tests: the §8.1 workload pipeline end to end — synthesis
 //! → CSV export → loader → mapping — and its statistical properties.
 
-use grmu::trace::loader::parse_pods_csv;
+use grmu::trace::loader::{load_trace, parse_pods_csv};
 use grmu::trace::mapping::{map_pods_to_profiles, nearest_profile, normalized_profile_values};
 use grmu::trace::{TraceConfig, Workload};
 use grmu::util::stats::{iqr_filter, mean};
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/alibaba_mini.csv");
 
 #[test]
 fn csv_roundtrip_preserves_vm_stream() {
@@ -31,6 +33,58 @@ fn csv_roundtrip_preserves_vm_stream() {
         assert_eq!(a.profile, b.profile);
         assert_eq!(a.arrival, b.arrival);
     }
+}
+
+/// Satellite lock: a committed miniature Alibaba-format trace flows
+/// through loader → cleaning → mapping → event core end to end. The
+/// fixture plants one multi-GPU pod and one extreme arrival so both
+/// cleaning stages visibly fire on file-loaded (not synthesized) data.
+#[test]
+fn committed_fixture_runs_end_to_end() {
+    use grmu::cluster::{DataCenter, Host};
+    use grmu::ops::{OpsConfig, QueueConfig};
+    use grmu::policies::{PolicyConfig, PolicyRegistry};
+    use grmu::sim::{Simulation, SimulationOptions};
+
+    let (vms, report) = load_trace(std::path::Path::new(FIXTURE)).unwrap();
+    assert_eq!(report.multi_gpu_removed, 1, "the 2-GPU pod must be dropped");
+    assert!(report.outliers_removed >= 1, "the planted arrival outlier must go");
+    assert_eq!(vms.len(), 30);
+    assert!(vms.windows(2).all(|p| p[0].arrival <= p[1].arrival));
+
+    let hosts: Vec<Host> = (0..3).map(|i| Host::new(i, 64, 256, 2)).collect();
+    let run = |ops: OpsConfig, queue: QueueConfig| {
+        let policy = PolicyRegistry::standard()
+            .build("grmu", &PolicyConfig::new().heavy_frac(0.3))
+            .unwrap();
+        let mut sim = Simulation::new(DataCenter::new(hosts.clone()), policy, &vms);
+        sim.options =
+            SimulationOptions { integrity_every: 1, drain_cap_hours: 0, ops, queue };
+        sim.run()
+    };
+    let clean = run(OpsConfig::default(), QueueConfig::default());
+    assert_eq!(clean.requested, 30);
+    assert!(clean.accepted > 0);
+    assert_eq!(clean.rejections.iter().sum::<u64>(), clean.requested - clean.accepted);
+    assert_eq!(clean.availability, 1.0);
+    // Deterministic replay: the file path is as reproducible as synthesis.
+    let again = run(OpsConfig::default(), QueueConfig::default());
+    assert_eq!(clean.samples, again.samples);
+    assert_eq!(clean.rejections, again.rejections);
+
+    // The same fixture under the fault/queue model keeps the books.
+    let ops = OpsConfig {
+        drain_rate: 2.0,
+        seed: 9,
+        ..OpsConfig::default().with_gpu_mtbf(150.0)
+    };
+    let faulty = run(ops.clone(), QueueConfig { capacity: 8, ..QueueConfig::default() });
+    assert_eq!(faulty.requested, 30);
+    assert_eq!(faulty.rejections.iter().sum::<u64>(), faulty.requested - faulty.accepted);
+    assert!(faulty.availability <= 1.0);
+    let faulty_again = run(ops, QueueConfig { capacity: 8, ..QueueConfig::default() });
+    assert_eq!(faulty.samples, faulty_again.samples);
+    assert_eq!(faulty.interrupted, faulty_again.interrupted);
 }
 
 #[test]
