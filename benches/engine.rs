@@ -90,6 +90,67 @@ fn engine_runs(quick: bool) {
     }
 }
 
+/// Sharded-engine scaling at 10k GPUs (EXPERIMENTS.md §Sharding
+/// scaling): the same saturated homogeneous trace through the sharded
+/// router at 1/2/4/8 shards, plus the router's own overhead — the
+/// `shards=1` row runs the identical placement sequence as the classic
+/// engine (byte-identical results, locked by tests), so the rows
+/// (`run_once` vs router-at-1-shard) isolate the fan-out/merge cost.
+fn sharded_runs(quick: bool) {
+    let (pods, horizon) = if quick { (8_000, 24) } else { (60_000, 72) };
+    let trace = config(42, pods, horizon, false);
+    let workload = Workload::generate(trace.clone());
+    println!(
+        "sharded/10k-gpus: {} GPUs, {} requests over {horizon}h",
+        workload.num_gpus(),
+        workload.vms.len()
+    );
+    let unsharded = {
+        let cfg = ExperimentConfig {
+            trace: trace.clone(),
+            drain_cap_hours: 24,
+            ..ExperimentConfig::default()
+        };
+        experiments::run_once(&workload, "grmu", &cfg, true)
+    };
+    println!(
+        "sharded/10k-gpus/grmu/unsharded  {:>9} req in {:>7.3}s = {:>12.0} req/s  (classic engine)",
+        unsharded.requested,
+        unsharded.wall_seconds,
+        unsharded.requested as f64 / unsharded.wall_seconds.max(1e-9),
+    );
+    let mut base_rps = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = ExperimentConfig {
+            trace: trace.clone(),
+            drain_cap_hours: 24,
+            shards,
+            shard_threads: 0, // auto
+            ..ExperimentConfig::default()
+        };
+        let result = experiments::run_sharded(&workload, "grmu", &cfg, true);
+        let rps = result.requested as f64 / result.wall_seconds.max(1e-9);
+        if shards == 1 {
+            base_rps = rps;
+            let overhead =
+                100.0 * (result.wall_seconds / unsharded.wall_seconds.max(1e-9) - 1.0);
+            println!(
+                "sharded/10k-gpus/grmu/shards=1   {:>9} req in {:>7.3}s = {:>12.0} req/s  (router overhead {overhead:+.1}% vs classic)",
+                result.requested, result.wall_seconds, rps,
+            );
+        } else {
+            println!(
+                "sharded/10k-gpus/grmu/shards={shards}   {:>9} req in {:>7.3}s = {:>12.0} req/s  (speedup {:.2}x vs 1 shard, acceptance {:.1}%)",
+                result.requested,
+                result.wall_seconds,
+                rps,
+                rps / base_rps.max(1e-9),
+                100.0 * result.overall_acceptance(),
+            );
+        }
+    }
+}
+
 /// Interval-close aggregate reads on a loaded 10k-GPU mixed cluster:
 /// O(1) counters (after) vs the brute-force fleet scan (before). This is
 /// exactly what `EventCore::close_interval` pays once per interval.
@@ -169,6 +230,7 @@ fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let mut b = Bench::new();
     engine_runs(quick);
+    sharded_runs(quick);
     interval_close_accounting(&mut b);
     sweep_throughput(quick);
 }

@@ -31,6 +31,14 @@ cargo run --release --quiet -- simulate --quick --policy grmu \
     --preempt --priority-frac 0.1 --arrival-process bursty >/dev/null
 cargo run --release --quiet -- sweep --quick --mtbf-axis 0,400 --drain-axis 0,2 >/dev/null
 
+echo "== sharded-engine smoke run"
+# The sharded router end-to-end: 4 shards with auto worker threads,
+# cross-shard rebalance, and a correlated-failure (blast radius) pass.
+cargo run --release --quiet -- simulate --quick --policy grmu \
+    --shards 4 --shard-rebalance 12 >/dev/null
+cargo run --release --quiet -- simulate --quick --policy grmu \
+    --shards 2 --host-mtbf 500 --blast-radius 0.5 >/dev/null
+
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

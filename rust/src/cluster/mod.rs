@@ -15,15 +15,21 @@
 //! * [`health`] — operational [`health::HealthState`] of GPUs and hosts
 //!   (failed / draining / banned); the index covers schedulable
 //!   capacity only, a contract `check_integrity` verifies.
+//! * [`shard`] — contiguous fleet partitions ([`shard::ShardMap`]) for
+//!   the sharded engine ([`crate::sim::ShardedCore`]): per-shard
+//!   `DataCenter`s over renumbered host clones, with local↔global
+//!   reference translation and VM-id-pure request routing.
 
 pub mod datacenter;
 pub mod health;
 pub mod host;
 pub mod index;
+pub mod shard;
 pub mod vm;
 
 pub use datacenter::{DataCenter, GpuRef, VmLocation};
 pub use health::HealthState;
 pub use host::Host;
 pub use index::ClusterIndex;
+pub use shard::ShardMap;
 pub use vm::{Time, VmId, VmSpec, HOUR};

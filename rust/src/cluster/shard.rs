@@ -1,0 +1,184 @@
+//! Fleet sharding: contiguous host partitions (pods/zones) with
+//! local↔global reference translation.
+//!
+//! A [`ShardMap`] splits a host list into `S` contiguous, near-equal
+//! ranges. Each shard owns an independent [`super::DataCenter`] — its own
+//! [`super::ClusterIndex`], activity counters and health state — built
+//! over *renumbered* clones of its hosts (local ids `0..len`, preserving
+//! the `host.id == position` integrity invariant). The map translates
+//! [`GpuRef`]s and host ids between the global namespace the router and
+//! reports speak and each shard's local namespace.
+//!
+//! Request routing is by VM id (`vm.id % S`), independent of fleet size
+//! and shard boundaries, so a request's *home* shard — and therefore the
+//! merged decision stream — is a pure function of the trace and the
+//! shard count, never of worker threads or timing.
+
+use crate::cluster::{GpuRef, Host, VmId};
+
+/// Contiguous host partition of a fleet into `S` shards. The first
+/// `num_hosts % S` shards are one host larger, so sizes differ by at
+/// most one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    /// Global host-id boundaries: shard `s` owns hosts
+    /// `bounds[s]..bounds[s + 1]`. Length `shards + 1`.
+    bounds: Vec<u32>,
+}
+
+impl ShardMap {
+    /// Partition `num_hosts` hosts into `shards` contiguous ranges.
+    /// The shard count is clamped to `[1, num_hosts]` (an empty fleet
+    /// keeps one empty shard), so every shard is non-empty.
+    pub fn new(num_hosts: usize, shards: usize) -> ShardMap {
+        let s = shards.clamp(1, num_hosts.max(1));
+        let base = num_hosts / s;
+        let extra = num_hosts % s;
+        let mut bounds = Vec::with_capacity(s + 1);
+        let mut at = 0usize;
+        bounds.push(0);
+        for i in 0..s {
+            at += base + usize::from(i < extra);
+            bounds.push(at as u32);
+        }
+        ShardMap { bounds }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total hosts across all shards.
+    pub fn num_hosts(&self) -> usize {
+        *self.bounds.last().unwrap() as usize
+    }
+
+    /// First global host id of shard `s`.
+    pub fn base(&self, s: usize) -> u32 {
+        self.bounds[s]
+    }
+
+    /// Hosts owned by shard `s`.
+    pub fn shard_len(&self, s: usize) -> usize {
+        (self.bounds[s + 1] - self.bounds[s]) as usize
+    }
+
+    /// The shard owning global host id `host`.
+    pub fn shard_of_host(&self, host: u32) -> usize {
+        debug_assert!((host as usize) < self.num_hosts());
+        self.bounds.partition_point(|&b| b <= host) - 1
+    }
+
+    /// The *home* shard of a request: `vm % S`. Pure in the VM id, so
+    /// routing is reproducible across runs and thread counts.
+    pub fn home_shard(&self, vm: VmId) -> usize {
+        (vm % self.shards() as u64) as usize
+    }
+
+    /// Translate a global GPU reference into shard `s`'s namespace.
+    pub fn to_local(&self, s: usize, r: GpuRef) -> GpuRef {
+        debug_assert_eq!(self.shard_of_host(r.host), s);
+        GpuRef { host: r.host - self.bounds[s], gpu: r.gpu }
+    }
+
+    /// Translate shard `s`'s local GPU reference back to the global
+    /// namespace.
+    pub fn to_global(&self, s: usize, r: GpuRef) -> GpuRef {
+        debug_assert!((r.host as usize) < self.shard_len(s));
+        GpuRef { host: r.host + self.bounds[s], gpu: r.gpu }
+    }
+
+    /// Clone and renumber the fleet into per-shard host lists: shard
+    /// `s`'s hosts get local ids `0..shard_len(s)` so each shard's
+    /// `DataCenter` keeps the `host.id == position` invariant. With one
+    /// shard this is an identity copy.
+    pub fn split_hosts(&self, hosts: &[Host]) -> Vec<Vec<Host>> {
+        assert_eq!(hosts.len(), self.num_hosts(), "fleet size matches the map");
+        (0..self.shards())
+            .map(|s| {
+                hosts[self.bounds[s] as usize..self.bounds[s + 1] as usize]
+                    .iter()
+                    .enumerate()
+                    .map(|(local, h)| {
+                        let mut h = h.clone();
+                        h.id = local as u32;
+                        h
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_are_contiguous_and_near_equal() {
+        let map = ShardMap::new(10, 4);
+        assert_eq!(map.shards(), 4);
+        assert_eq!(map.num_hosts(), 10);
+        let sizes: Vec<usize> = (0..4).map(|s| map.shard_len(s)).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        // Every host belongs to exactly the shard whose range holds it.
+        for h in 0..10u32 {
+            let s = map.shard_of_host(h);
+            assert!(map.base(s) <= h && h < map.base(s) + map.shard_len(s) as u32);
+        }
+    }
+
+    #[test]
+    fn shard_count_is_clamped() {
+        assert_eq!(ShardMap::new(3, 8).shards(), 3);
+        assert_eq!(ShardMap::new(3, 0).shards(), 1);
+        assert_eq!(ShardMap::new(0, 4).shards(), 1);
+        assert_eq!(ShardMap::new(0, 4).num_hosts(), 0);
+    }
+
+    #[test]
+    fn ref_translation_round_trips() {
+        let map = ShardMap::new(7, 3);
+        for host in 0..7u32 {
+            for gpu in 0..4u8 {
+                let g = GpuRef { host, gpu };
+                let s = map.shard_of_host(host);
+                let l = map.to_local(s, g);
+                assert!((l.host as usize) < map.shard_len(s));
+                assert_eq!(map.to_global(s, l), g);
+            }
+        }
+    }
+
+    #[test]
+    fn home_shard_depends_only_on_vm_id() {
+        let map = ShardMap::new(100, 4);
+        for vm in 0..32u64 {
+            assert_eq!(map.home_shard(vm), (vm % 4) as usize);
+            assert_eq!(map.home_shard(vm), ShardMap::new(8, 4).home_shard(vm));
+        }
+    }
+
+    #[test]
+    fn split_hosts_renumbers_locally() {
+        let hosts: Vec<Host> = (0..5).map(|i| Host::new(i, 64, 256, 2)).collect();
+        let map = ShardMap::new(5, 2);
+        let split = map.split_hosts(&hosts);
+        assert_eq!(split.len(), 2);
+        assert_eq!(split[0].len(), 3);
+        assert_eq!(split[1].len(), 2);
+        for part in &split {
+            for (i, h) in part.iter().enumerate() {
+                assert_eq!(h.id as usize, i, "local ids match positions");
+            }
+        }
+        // Single shard: identity copy (same ids, same order).
+        let one = ShardMap::new(5, 1).split_hosts(&hosts);
+        assert_eq!(one.len(), 1);
+        for (a, b) in one[0].iter().zip(&hosts) {
+            assert_eq!(a.id, b.id);
+        }
+    }
+}

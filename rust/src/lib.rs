@@ -65,6 +65,13 @@
 //!   [`sim::Simulation`] built on it. Results carry per-reason
 //!   rejection breakdowns, full migration-event logs, interruption /
 //!   preemption counts, queue-delay samples and fleet availability.
+//!   For fleets past the single-core ceiling, [`sim::ShardedCore`] /
+//!   [`sim::ShardedSimulation`] partition the hosts into shards (each
+//!   its own `EventCore`) behind a deterministic router: per-interval
+//!   batches fan out to scoped worker threads, rejected requests retry
+//!   on sibling shards in fixed order, and merged results are
+//!   byte-identical at `--shards 1` and independent of the worker
+//!   thread count at any shard count.
 //! * [`ilp`] — the paper's multi-objective ILP (Eq. 3–26) plus an exact
 //!   in-house MILP solver (dense simplex + branch & bound) used to
 //!   validate the heuristics on small instances.
@@ -227,6 +234,39 @@
 //! * Registry names compose: `mcc+defrag`, `bf+consolidate`,
 //!   `ff+defrag+frag-gradient`; CLI `--planners`/`--migration-budget`
 //!   on `simulate`/`sweep` reach the same machinery.
+//!
+//! ## Migration note (sharded fleet)
+//!
+//! The engine used to be one `EventCore` owning the whole fleet. Very
+//! large fleets now run through the sharding layer; code written
+//! against the single-core surface maps as follows:
+//!
+//! * One global `DataCenter`/`ClusterIndex` → a [`cluster::ShardMap`]
+//!   partitioning hosts into contiguous shards, each shard a full
+//!   `EventCore` (own index, activity counters, health state, policy
+//!   instance seeded per shard). `ShardMap::to_local`/`to_global`
+//!   translate [`cluster::GpuRef`]s; requests route to
+//!   `home_shard(vm.id)`.
+//! * `Simulation` → [`sim::ShardedSimulation`] with
+//!   [`sim::ShardOptions`] (`shards`, `threads`, `rebalance_every`,
+//!   budget); CLI `simulate --shards N [--shard-threads N]
+//!   [--shard-rebalance HOURS]`. `--shards 1` is byte-identical to the
+//!   classic engine; results at any shard count are independent of the
+//!   worker thread count (workers only run pre-routed per-shard
+//!   batches; all merging, retries and rebalance run serially on the
+//!   router thread). Both locks live in `rust/tests/decision_api.rs`.
+//! * A request rejected for a retryable reason by its home shard
+//!   retries on sibling shards in fixed order before becoming a
+//!   cluster-level rejection; the router uncounts duplicate bookkeeping
+//!   so `sum(rejections) == requested - accepted` holds cluster-wide.
+//! * Fault schedules are drawn over the *unsplit* fleet and then split
+//!   per owning shard, so the operational timeline is identical at
+//!   every shard count; `--blast-radius p` escalates host failures to
+//!   correlated domain outages (default domain = one shard).
+//! * Cross-shard consolidation is the opt-in router-level rebalance
+//!   pass (sole-tenant GIs onto sibling shards' non-empty GPUs under
+//!   the [`migrate::MigrationBudget`]), surfacing as ordinary `Inter`
+//!   [`migrate::MigrationEvent`]s.
 
 pub mod cluster;
 pub mod coordinator;

@@ -70,7 +70,8 @@ fn print_help() {
            simulate  --policy NAME [--seed N] [--hosts N] [--pods N]\n\
                      [--heavy-frac 0.3] [--consolidation HOURS] [--trace FILE.csv]\n\
                      [--gpu-models a100-40:0.7,h100-80:0.3] [--planners defrag,consolidate]\n\
-                     [--migration-budget N[:per-vm]] [ops flags] [--quick] [--json FILE]\n\
+                     [--migration-budget N[:per-vm]] [--shards N] [--shard-threads N]\n\
+                     [--shard-rebalance HOURS] [ops flags] [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
@@ -89,6 +90,8 @@ fn print_help() {
            --drain-rate R            maintenance drains per host per 1000 h\n\
            --drain-hours H           drain duration (default 2)\n\
            --ban-after N             blocklist a GPU after N failures\n\
+           --blast-radius P          probability a host failure co-fails its domain\n\
+           --blast-hosts N           hosts per blast domain (default: shard size)\n\
            --queue-cap N             admission retry queue capacity\n\
            --queue-ttl HOURS         queued-request time-to-live (default 24)\n\
            --preempt                 high-tier arrivals may preempt low-tier VMs\n\
@@ -197,6 +200,12 @@ fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
     if args.flag("preempt") {
         cfg.queue.preemption = true;
     }
+    cfg.shards = args.num_or("shards", cfg.shards);
+    cfg.shard_threads = args.num_or("shard-threads", cfg.shard_threads);
+    cfg.shard_rebalance_hours =
+        args.num_or("shard-rebalance", cfg.shard_rebalance_hours);
+    cfg.ops.blast_radius = args.num_or("blast-radius", cfg.ops.blast_radius);
+    cfg.ops.blast_hosts = args.num_or("blast-hosts", cfg.ops.blast_hosts);
     cfg
 }
 
@@ -239,6 +248,12 @@ fn cmd_simulate(args: &Args) {
         workload.vms.len(),
         cfg.trace.seed
     );
+    if cfg.shards > 1 {
+        eprintln!(
+            "sharded engine: {} shards, {} worker threads (0 = auto)",
+            cfg.shards, cfg.shard_threads
+        );
+    }
     let result = experiments::run_once(&workload, &policy, &cfg, true);
     println!(
         "policy={} acceptance={:.4} accepted={}/{} avg_active={:.4} auc={:.1} intra={} inter={} wall={:.2}s",

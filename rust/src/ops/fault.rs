@@ -36,6 +36,16 @@ pub struct OpsConfig {
     /// `0` never bans. Mirrors production schedulers that blocklist
     /// repeat-offender devices instead of endlessly recycling them.
     pub ban_after_failures: u32,
+    /// Correlated-failure escalation probability: each host failure
+    /// takes its whole failure domain (rack/pod) down with it with this
+    /// probability. `0.0` (the default) draws nothing and leaves the
+    /// schedule byte-identical to the uncorrelated model.
+    pub blast_radius: f64,
+    /// Failure-domain size in hosts (consecutive ids share a domain:
+    /// `host / blast_hosts`). Values below 2 leave escalation inert —
+    /// a one-host domain has nothing else to take down. The sharded
+    /// runner defaults this to the shard size when unset.
+    pub blast_hosts: u32,
     /// Schedule horizon in hours (events beyond it are not drawn).
     pub horizon_hours: u64,
     /// Seed of the injector's own RNG stream (independent of the
@@ -53,6 +63,8 @@ impl Default for OpsConfig {
             drain_rate: 0.0,
             drain_hours: 2.0,
             ban_after_failures: 0,
+            blast_radius: 0.0,
+            blast_hosts: 0,
             horizon_hours: 0,
             seed: 0,
         }
@@ -143,8 +155,45 @@ pub fn generate_schedule(cfg: &OpsConfig, hosts: &[Host]) -> Vec<(Time, OpsEvent
             });
         }
     }
+    // Correlated-failure escalation (blast radius): a host failure may
+    // take its whole failure domain down with it. Drawn in a *second*
+    // pass over the primary host failures (generation order, i.e.
+    // ascending host id then time) from a dedicated RNG stream, so a
+    // zero rate changes no draw of the renewal streams above and the
+    // schedule stays byte-identical. Escalated failures do not escalate
+    // further, and co-failed hosts reuse the primary's outage window —
+    // the whole rack loses power together and comes back together.
+    if cfg.blast_radius > 0.0 && cfg.blast_hosts >= 2 {
+        let mut blast_rng = Rng::new(cfg.seed ^ 0x626c_6173_745f_6772); // "blast_gr"
+        let primaries: Vec<(Time, u32, Time)> = out
+            .iter()
+            .filter_map(|&(t, ev)| match ev {
+                OpsEvent::HostFail { host, until } => Some((t, host, until)),
+                _ => None,
+            })
+            .collect();
+        let host_ids: Vec<u32> = hosts.iter().map(|h| h.id).collect();
+        for (t, host, until) in primaries {
+            if blast_rng.f64() >= cfg.blast_radius {
+                continue;
+            }
+            let domain = host / cfg.blast_hosts;
+            for &other in &host_ids {
+                if other == host || other / cfg.blast_hosts != domain {
+                    continue;
+                }
+                out.push((t, OpsEvent::HostFail { host: other, until }));
+                if until < horizon {
+                    out.push((until, OpsEvent::HostRepair { host: other }));
+                }
+            }
+        }
+    }
     // Stable by-time sort: same-resource events were pushed in time
     // order, so their relative order (fail before its repair) survives.
+    // Blast co-failures land *after* any primary event sharing their
+    // timestamp — the event core's health guards make overlapping
+    // fail/repair windows commute.
     out.sort_by_key(|&(t, _)| t);
     out
 }
@@ -221,6 +270,15 @@ impl FaultInjector {
     /// Generate and wrap the schedule for `hosts` under `cfg`.
     pub fn from_config(cfg: &OpsConfig, hosts: &[Host]) -> FaultInjector {
         FaultInjector::new(generate_schedule(cfg, hosts), cfg.ban_after_failures)
+    }
+
+    /// Decompose into `(schedule, ban_after_failures)`. The sharded
+    /// runner generates one *global* schedule (so faults are identical
+    /// at every shard count), then splits it per owning shard and
+    /// re-wraps each part. Must be called before replay starts.
+    pub fn into_parts(self) -> (Vec<(Time, OpsEvent)>, u32) {
+        debug_assert_eq!(self.cursor, 0, "split before replay");
+        (self.schedule, self.ban_after)
     }
 
     /// Any events left to replay?
@@ -329,6 +387,76 @@ mod tests {
                 _ => {}
             }
         }
+    }
+
+    #[test]
+    fn zero_blast_radius_is_byte_identical() {
+        let base = OpsConfig {
+            host_mtbf_hours: 50.0,
+            drain_rate: 5.0,
+            horizon_hours: 500,
+            seed: 7,
+            ..OpsConfig::default()
+        }
+        .with_gpu_mtbf(80.0);
+        let with_field = OpsConfig { blast_radius: 0.0, blast_hosts: 2, ..base.clone() };
+        assert_eq!(generate_schedule(&base, &fleet()), generate_schedule(&with_field, &fleet()));
+        // An escalation probability without a multi-host domain is inert
+        // too: there is nothing else in the domain to take down.
+        let no_domain = OpsConfig { blast_radius: 0.5, blast_hosts: 1, ..base.clone() };
+        assert_eq!(generate_schedule(&base, &fleet()), generate_schedule(&no_domain, &fleet()));
+    }
+
+    #[test]
+    fn blast_escalation_cofails_the_domain() {
+        let cfg = OpsConfig {
+            host_mtbf_hours: 200.0,
+            horizon_hours: 2_000,
+            seed: 13,
+            blast_radius: 1.0, // every host failure escalates
+            blast_hosts: 2,    // domains: {0,1}, {2,3}
+            ..OpsConfig::default()
+        };
+        let sched = generate_schedule(&cfg, &fleet());
+        assert_eq!(sched, generate_schedule(&cfg, &fleet()), "deterministic");
+        assert!(sched.windows(2).all(|w| w[0].0 <= w[1].0), "sorted");
+        // Every primary failure has a same-timestamp co-failure of its
+        // domain partner with the same outage window.
+        let fails: Vec<(Time, u32, Time)> = sched
+            .iter()
+            .filter_map(|&(t, ev)| match ev {
+                OpsEvent::HostFail { host, until } => Some((t, host, until)),
+                _ => None,
+            })
+            .collect();
+        assert!(!fails.is_empty());
+        for &(t, host, until) in &fails {
+            let partner = host ^ 1; // the other host of a 2-wide domain
+            assert!(
+                fails.iter().any(|&(t2, h2, u2)| t2 == t && h2 == partner && u2 == until),
+                "host {host} failing at {t} must co-fail {partner}"
+            );
+        }
+        // With p = 1 every failure is mirrored: the count doubles
+        // exactly relative to the uncorrelated schedule.
+        let solo = OpsConfig { blast_radius: 0.0, ..cfg.clone() };
+        let solo_fails = generate_schedule(&solo, &fleet())
+            .iter()
+            .filter(|(_, ev)| matches!(ev, OpsEvent::HostFail { .. }))
+            .count();
+        assert_eq!(fails.len(), 2 * solo_fails);
+    }
+
+    #[test]
+    fn injector_into_parts_round_trips() {
+        let sched = vec![
+            (10, OpsEvent::HostFail { host: 1, until: 20 }),
+            (20, OpsEvent::HostRepair { host: 1 }),
+        ];
+        let inj = FaultInjector::new(sched.clone(), 3);
+        let (parts, ban) = inj.into_parts();
+        assert_eq!(parts, sched);
+        assert_eq!(ban, 3);
     }
 
     #[test]

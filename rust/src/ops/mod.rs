@@ -9,7 +9,14 @@
 //! * [`fault`] — the [`FaultInjector`]'s schedule generator: seeded
 //!   exponential fail/repair processes per GPU model and per host, plus
 //!   periodic maintenance drains, emitted as a sorted, byte-reproducible
-//!   [`OpsEvent`] schedule the event core replays.
+//!   [`OpsEvent`] schedule the event core replays. Host failures can
+//!   escalate to *correlated* domain outages (`OpsConfig::blast_radius`
+//!   / `blast_hosts`, CLI `--blast-radius`) — a second seeded pass
+//!   co-fails the rest of a failed host's power/network domain, which
+//!   defaults to one shard of the sharded engine. Under sharding the
+//!   schedule is drawn over the unsplit fleet and then split per owning
+//!   shard ([`FaultInjector::into_parts`]), so the operational timeline
+//!   is identical at every shard count.
 //! * [`queue`] — bounded FIFO [`AdmissionQueue`] with per-request TTLs
 //!   and two priority [`Tier`]s: rejected-but-retryable requests park
 //!   here and re-try as capacity frees; high-tier arrivals may preempt

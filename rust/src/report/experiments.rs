@@ -6,7 +6,7 @@ use crate::cluster::{DataCenter, Host};
 use crate::migrate::MigrationBudget;
 use crate::ops::{OpsConfig, QueueConfig};
 use crate::policies::{grmu, PolicyConfig, PolicyCtx, PolicyRegistry};
-use crate::sim::{SimResult, Simulation, SimulationOptions};
+use crate::sim::{ShardedSimulation, SimResult, Simulation, SimulationOptions};
 use crate::trace::{TraceConfig, Workload};
 use crate::util::stats::{mean, std_dev};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -37,6 +37,17 @@ pub struct ExperimentConfig {
     /// Admission retry queue (CLI `--queue-cap`, `--queue-ttl`,
     /// `--preempt`). Disabled by default.
     pub queue: QueueConfig,
+    /// Fleet shards (CLI `--shards`). `1` runs the classic single-core
+    /// engine; `> 1` routes through the sharded engine, which places
+    /// each interval's batch in parallel across per-shard cores.
+    pub shards: usize,
+    /// Worker threads for the sharded fan-out (CLI `--shard-threads`,
+    /// `0` = available parallelism). Wall-clock only — results are
+    /// independent of this by construction.
+    pub shard_threads: usize,
+    /// Cross-shard consolidation period in hours (CLI
+    /// `--shard-rebalance`, `0` = off). Runs under `migration_budget`.
+    pub shard_rebalance_hours: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -50,6 +61,9 @@ impl Default for ExperimentConfig {
             migration_budget: MigrationBudget::unlimited(),
             ops: OpsConfig::default(),
             queue: QueueConfig::default(),
+            shards: 1,
+            shard_threads: 0,
+            shard_rebalance_hours: 0,
         }
     }
 }
@@ -97,6 +111,9 @@ pub fn run_trace(
     cfg: &ExperimentConfig,
     grmu_defrag: bool,
 ) -> SimResult {
+    if cfg.shards > 1 {
+        return run_sharded_trace(hosts, vms, policy, cfg, grmu_defrag);
+    }
     let name = if policy == "grmu" && !grmu_defrag { "grmu-db" } else { policy };
     let policy_box = PolicyRegistry::standard()
         .build(name, &cfg.policy_config())
@@ -104,20 +121,76 @@ pub fn run_trace(
     let dc = DataCenter::new(hosts.to_vec());
     let mut sim = Simulation::new(dc, policy_box, vms);
     sim.ctx = PolicyCtx::new(cfg.trace.seed);
-    let mut ops = cfg.ops.clone();
-    if ops.seed == 0 {
-        // The injector stream is already decorrelated from the policy
-        // RNG by its xor constant; inheriting the trace seed keeps
-        // sweep cells deterministic per seed without extra plumbing.
-        ops.seed = cfg.trace.seed;
-    }
     sim.options = SimulationOptions {
         drain_cap_hours: cfg.drain_cap_hours,
-        ops,
+        ops: resolved_ops(cfg, hosts.len()),
         queue: cfg.queue,
         ..SimulationOptions::default()
     };
     sim.run()
+}
+
+/// The effective fault model for a run: a zero ops seed inherits the
+/// trace seed (the injector stream is already decorrelated from the
+/// policy RNG by its xor constant, so sweep cells stay deterministic per
+/// seed without extra plumbing), and an unset blast domain defaults to
+/// the shard size — a pod/rack-sized failure domain on the sharded
+/// engine, the whole fleet when unsharded.
+fn resolved_ops(cfg: &ExperimentConfig, num_hosts: usize) -> OpsConfig {
+    let mut ops = cfg.ops.clone();
+    if ops.seed == 0 {
+        ops.seed = cfg.trace.seed;
+    }
+    if ops.blast_radius > 0.0 && ops.blast_hosts == 0 {
+        let shards = cfg.shards.clamp(1, num_hosts.max(1));
+        ops.blast_hosts = num_hosts.div_ceil(shards).max(1) as u32;
+    }
+    ops
+}
+
+/// Sharded counterpart of [`run_trace`]: always routes through the
+/// [`ShardedSimulation`] router (even at `shards == 1`, which the
+/// determinism tests exploit to lock router overhead at byte-identity
+/// with the classic engine). One identically configured policy instance
+/// is built per shard.
+pub fn run_sharded_trace(
+    hosts: &[Host],
+    vms: &[VmSpec],
+    policy: &str,
+    cfg: &ExperimentConfig,
+    grmu_defrag: bool,
+) -> SimResult {
+    let name = if policy == "grmu" && !grmu_defrag { "grmu-db" } else { policy };
+    let shards = cfg.shards.clamp(1, hosts.len().max(1));
+    let registry = PolicyRegistry::standard();
+    let policies = (0..shards)
+        .map(|_| {
+            registry.build(name, &cfg.policy_config()).unwrap_or_else(|e| panic!("{e}"))
+        })
+        .collect();
+    let mut sim = ShardedSimulation::new(hosts, policies, vms);
+    sim.options = SimulationOptions {
+        drain_cap_hours: cfg.drain_cap_hours,
+        ops: resolved_ops(cfg, hosts.len()),
+        queue: cfg.queue,
+        ..SimulationOptions::default()
+    };
+    sim.shard_options.shards = shards;
+    sim.shard_options.threads = cfg.shard_threads;
+    sim.shard_options.seed = cfg.trace.seed;
+    sim.shard_options.rebalance_every = cfg.shard_rebalance_hours;
+    sim.shard_options.budget = cfg.migration_budget;
+    sim.run()
+}
+
+/// [`run_once`] through the sharded router regardless of `cfg.shards`.
+pub fn run_sharded(
+    workload: &Workload,
+    policy: &str,
+    cfg: &ExperimentConfig,
+    grmu_defrag: bool,
+) -> SimResult {
+    run_sharded_trace(&workload.hosts, &workload.vms, policy, cfg, grmu_defrag)
 }
 
 /// Figs. 6–8: sweep the heavy-basket capacity with defragmentation and
@@ -369,6 +442,7 @@ pub fn fleet_json(cfg: &ExperimentConfig) -> crate::util::json::Json {
         ("duration_mu", t.duration_mu.into()),
         ("duration_sigma", t.duration_sigma.into()),
         ("heavy_frac", cfg.heavy_frac.into()),
+        ("shards", (cfg.shards as u64).into()),
         ("profile_mix", Json::arr(t.profile_mix.iter().map(|&m| m.into()).collect())),
         (
             "gpu_models",
@@ -574,6 +648,53 @@ mod tests {
         assert_eq!(summary.len(), 2);
         assert_eq!(summary[0].0, "ff");
         assert_eq!(summary[1].0, "grmu");
+    }
+
+    #[test]
+    fn sharded_run_matches_unsharded_at_one_shard() {
+        let (w, cfg) = quick_workload();
+        let a = run_once(&w, "grmu", &cfg, true);
+        let b = run_sharded(&w, "grmu", &cfg, true); // cfg.shards == 1
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.requested, b.requested);
+        assert_eq!(a.accepted, b.accepted);
+        assert_eq!(a.rejections, b.rejections);
+        assert_eq!(a.per_profile, b.per_profile);
+        assert_eq!(a.migration_events, b.migration_events);
+    }
+
+    #[test]
+    fn sharded_run_keeps_accounting_invariant() {
+        let (w, cfg) = quick_workload();
+        let cfg = ExperimentConfig { shards: 4, shard_threads: 2, ..cfg };
+        let r = run_once(&w, "grmu", &cfg, true); // dispatches to the router
+        assert_eq!(r.requested, w.vms.len() as u64);
+        assert!(r.accepted > 0);
+        assert_eq!(r.rejections.iter().sum::<u64>(), r.requested - r.accepted);
+        let (req, acc) = r
+            .per_profile
+            .iter()
+            .fold((0u64, 0u64), |(a, b), (x, y)| (a + x, b + y));
+        assert_eq!(req, r.requested);
+        assert_eq!(acc, r.accepted);
+    }
+
+    #[test]
+    fn blast_radius_defaults_to_shard_sized_domains() {
+        let cfg = ExperimentConfig {
+            shards: 4,
+            ops: OpsConfig { blast_radius: 0.5, ..OpsConfig::default() },
+            ..ExperimentConfig::quick(3)
+        };
+        let ops = resolved_ops(&cfg, 100);
+        assert_eq!(ops.blast_hosts, 25);
+        assert_eq!(ops.seed, 3, "zero ops seed inherits the trace seed");
+        // Explicit domains pass through untouched.
+        let cfg2 = ExperimentConfig {
+            ops: OpsConfig { blast_radius: 0.5, blast_hosts: 8, ..OpsConfig::default() },
+            ..cfg
+        };
+        assert_eq!(resolved_ops(&cfg2, 100).blast_hosts, 8);
     }
 
     #[test]

@@ -44,7 +44,7 @@
 use super::metrics::{acceptance_rate, Sample, SimResult};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::{DataCenter, GpuRef, HealthState};
-use crate::mig::{mock_assign, Instance, NUM_MODELS, NUM_PROFILE_KEYS};
+use crate::mig::{mock_assign, Instance, Placement, NUM_MODELS, NUM_PROFILE_KEYS};
 use crate::ops::{
     plan_evacuation, tier_of, AdmissionQueue, FaultInjector, OpsEvent, QueueConfig, QueuedRequest,
     Tier,
@@ -274,7 +274,7 @@ impl EventCore {
 
     /// Replay scheduled fault/repair/drain events with timestamps ≤ `t`.
     fn apply_ops(&mut self, t: Time) {
-        while let Some((_, ev)) = self.injector.pop_due(t) {
+        while let Some((due, ev)) = self.injector.pop_due(t) {
             match ev {
                 OpsEvent::GpuFail { gpu, until } => {
                     // Evict residents while the index still covers the
@@ -297,12 +297,24 @@ impl EventCore {
                     for vm in self.dc.vms_on_host(host) {
                         self.evict(vm);
                     }
+                    // Correlated (blast-radius) failures can overlap: a
+                    // second hit while already down extends the outage,
+                    // never shortens it.
+                    let until = match self.dc.host_health(host) {
+                        HealthState::Failed { until: prev } => prev.max(until),
+                        _ => until,
+                    };
                     self.dc.set_host_health(host, HealthState::Failed { until });
                 }
                 OpsEvent::HostRepair { host } => {
-                    // A drain that began before the failure stays void.
-                    if matches!(self.dc.host_health(host), HealthState::Failed { .. }) {
-                        self.dc.set_host_health(host, HealthState::Healthy);
+                    // A drain that began before the failure stays void;
+                    // a repair belonging to a shorter, overlapped outage
+                    // must not resurrect a host another failure still
+                    // holds down (`until` past this repair's timestamp).
+                    if let HealthState::Failed { until } = self.dc.host_health(host) {
+                        if until <= due {
+                            self.dc.set_host_health(host, HealthState::Healthy);
+                        }
                     }
                 }
                 OpsEvent::DrainStart { host, .. } => {
@@ -653,6 +665,41 @@ impl EventCore {
     /// Read access to the admission queue (invariant checks in tests).
     pub fn admission_queue(&self) -> &AdmissionQueue {
         &self.queue
+    }
+
+    /// GPU-interval availability accumulators `(schedulable, total)`.
+    /// The sharded runner sums these across shards before consuming the
+    /// cores, so the merged availability uses one global denominator.
+    pub fn availability_counters(&self) -> (u64, u64) {
+        (self.gpu_intervals_available, self.gpu_intervals_total)
+    }
+
+    /// Hand a resident VM over to another core (the sharded runner's
+    /// cross-shard consolidation): release it here — revoking its
+    /// departure-heap entry — and return its former location. Unlike a
+    /// departure or eviction, the VM keeps running elsewhere, so
+    /// `accepted` stays counted here and the move is *not* an
+    /// interruption. Returns `None` if the VM is not resident.
+    pub fn transfer_out(&mut self, vm: VmId) -> Option<crate::cluster::VmLocation> {
+        let loc = self.dc.remove(vm)?;
+        self.policy.on_departure(&mut self.dc, vm, &mut self.ctx);
+        *self.revoked.entry(vm).or_insert(0) += 1;
+        if !self.resident_specs.is_empty() {
+            self.resident_specs.remove(&vm);
+        }
+        Some(loc)
+    }
+
+    /// Adopt a VM transferred from another core: place it on the given
+    /// GPU (the caller validated feasibility via `probe_gpu`) and track
+    /// its departure locally from now on. The acceptance stays counted
+    /// on the core that admitted the VM.
+    pub fn adopt(&mut self, spec: &VmSpec, gpu: GpuRef, placement: Placement) {
+        self.dc.place(spec, gpu, placement);
+        self.departures.push(Reverse((spec.departure.max(self.interval_end() + 1), spec.id)));
+        if self.queue.config().preemption {
+            self.resident_specs.insert(spec.id, *spec);
+        }
     }
 
     /// Finish: package everything into the shared result type. Requests

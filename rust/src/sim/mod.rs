@@ -12,11 +12,17 @@
 //! every figure of §8: acceptance rates (overall, hourly, per profile,
 //! and per [`crate::policies::RejectReason`]), the strict active-hardware
 //! rate, migration events and Table 6's area under the curve.
+//! [`sharded`] scales the same interval loop to very large fleets: a
+//! deterministic router fans each interval out to per-shard cores placed
+//! in parallel, with `--shards 1` byte-identical to the single-core
+//! engine and results independent of the worker-thread count.
 
 pub mod engine;
 pub mod event_core;
 pub mod metrics;
+pub mod sharded;
 
 pub use engine::{Simulation, SimulationOptions};
 pub use event_core::EventCore;
 pub use metrics::{acceptance_rate, Sample, SimResult};
+pub use sharded::{ShardOptions, ShardedCore, ShardedSimulation};

@@ -21,7 +21,9 @@ use grmu::cluster::{DataCenter, Host, VmSpec};
 use grmu::coordinator::{Coordinator, CoordinatorConfig, Request};
 use grmu::mig::Profile;
 use grmu::policies::{Decision, Policy, PolicyConfig, PolicyCtx, PolicyRegistry, RejectReason};
-use grmu::sim::{EventCore, SimResult, Simulation, SimulationOptions};
+use grmu::sim::{
+    EventCore, ShardedCore, ShardedSimulation, SimResult, Simulation, SimulationOptions,
+};
 use grmu::trace::{TraceConfig, Workload};
 
 fn vm(id: u64, profile: Profile, cpus: u32, ram_gb: u32, arrival_h: u64, dur_h: u64) -> VmSpec {
@@ -740,6 +742,223 @@ fn disabled_ops_hooks_do_not_perturb_decisions() {
     assert_eq!(res.migration_events, res_plain.migration_events);
     assert_eq!(res.interrupted, 0);
     assert_eq!(res.availability, 1.0);
+}
+
+// ------------------------------------------------------ sharded engine
+
+/// One identically configured policy instance per shard, the way the
+/// experiment layer builds them.
+fn shard_policies(name: &str, heavy: f64, n: usize) -> Vec<Box<dyn Policy>> {
+    (0..n)
+        .map(|_| {
+            PolicyRegistry::standard()
+                .build(name, &PolicyConfig::new().heavy_frac(heavy))
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Tentpole lock #1: `--shards 1` is **byte-identical** to the unsharded
+/// engine — every field of the result, plain and with the full ops
+/// stack (faults + drains + admission queue) enabled. The router at one
+/// shard must be a pure pass-through.
+#[test]
+fn one_shard_router_is_byte_identical_to_the_engine() {
+    use grmu::ops::{OpsConfig, QueueConfig};
+    let workload = Workload::generate(TraceConfig::small(42));
+    let ops = OpsConfig {
+        drain_rate: 1.0,
+        host_mtbf_hours: 2_000.0,
+        horizon_hours: workload.config.horizon_hours + 48,
+        ..OpsConfig::default().with_gpu_mtbf(400.0)
+    };
+    let qcfg = QueueConfig { capacity: 16, ttl_hours: 12, preemption: false };
+    for (label, with_ops) in [("plain", false), ("ops+queue", true)] {
+        let mut sim = Simulation::new(
+            DataCenter::new(workload.hosts.clone()),
+            PolicyRegistry::standard()
+                .build("grmu", &PolicyConfig::new().heavy_frac(0.25))
+                .unwrap(),
+            &workload.vms,
+        );
+        sim.ctx = PolicyCtx::new(42);
+        sim.options =
+            SimulationOptions { integrity_every: 8, drain_cap_hours: 5 * 24, ..Default::default() };
+        if with_ops {
+            sim.options.ops = ops.clone();
+            sim.options.queue = qcfg;
+        }
+        let a = sim.run();
+
+        let mut sharded =
+            ShardedSimulation::new(&workload.hosts, shard_policies("grmu", 0.25, 1), &workload.vms);
+        sharded.options =
+            SimulationOptions { integrity_every: 8, drain_cap_hours: 5 * 24, ..Default::default() };
+        if with_ops {
+            sharded.options.ops = ops.clone();
+            sharded.options.queue = qcfg;
+        }
+        sharded.shard_options.seed = 42;
+        sharded.shard_options.threads = 8; // thread count must be irrelevant
+        let b = sharded.run();
+
+        assert_eq!(a.policy, b.policy, "{label}");
+        assert_eq!(a.samples, b.samples, "{label}: samples diverged");
+        assert_eq!(a.requested, b.requested, "{label}");
+        assert_eq!(a.accepted, b.accepted, "{label}");
+        assert_eq!(a.per_profile, b.per_profile, "{label}");
+        assert_eq!(a.rejections, b.rejections, "{label}");
+        assert_eq!(a.migration_events, b.migration_events, "{label}");
+        assert_eq!(a.gpus_by_model, b.gpus_by_model, "{label}");
+        assert_eq!(a.gpu_activity, b.gpu_activity, "{label}");
+        assert_eq!(a.interrupted, b.interrupted, "{label}");
+        assert_eq!(a.preempted, b.preempted, "{label}");
+        assert_eq!(a.queue_delays, b.queue_delays, "{label}");
+        assert_eq!(a.availability, b.availability, "{label}: availability diverged");
+        assert!(a.accepted > 0, "{label}: vacuous run");
+        if with_ops {
+            assert!(a.interrupted > 0, "{label}: the fault model never fired (vacuous lock)");
+        }
+    }
+}
+
+/// Tentpole lock #2: at `shards > 1` the result is a pure function of
+/// the trace and the shard count — the fan-out worker count must not
+/// change a single byte, with the full ops stack enabled.
+#[test]
+fn sharded_results_are_thread_count_independent() {
+    use grmu::ops::{OpsConfig, QueueConfig};
+    let workload = Workload::generate(TraceConfig::small(7));
+    let ops = OpsConfig {
+        drain_rate: 1.0,
+        host_mtbf_hours: 2_000.0,
+        horizon_hours: workload.config.horizon_hours + 48,
+        ..OpsConfig::default().with_gpu_mtbf(400.0)
+    };
+    let qcfg = QueueConfig { capacity: 16, ttl_hours: 12, preemption: false };
+    let run = |threads: usize| {
+        let mut sim =
+            ShardedSimulation::new(&workload.hosts, shard_policies("grmu", 0.25, 4), &workload.vms);
+        sim.options = SimulationOptions {
+            integrity_every: 8,
+            drain_cap_hours: 5 * 24,
+            ops: ops.clone(),
+            queue: qcfg,
+            ..Default::default()
+        };
+        sim.shard_options.shards = 4;
+        sim.shard_options.threads = threads;
+        sim.shard_options.seed = 7;
+        sim.run()
+    };
+    let base = run(1);
+    assert!(base.accepted > 0);
+    assert_eq!(base.rejections.iter().sum::<u64>(), base.requested - base.accepted);
+    for threads in [2usize, 8] {
+        let r = run(threads);
+        assert_eq!(base.samples, r.samples, "threads={threads}: samples diverged");
+        assert_eq!(base.requested, r.requested, "threads={threads}");
+        assert_eq!(base.accepted, r.accepted, "threads={threads}");
+        assert_eq!(base.per_profile, r.per_profile, "threads={threads}");
+        assert_eq!(base.rejections, r.rejections, "threads={threads}");
+        assert_eq!(base.migration_events, r.migration_events, "threads={threads}");
+        assert_eq!(base.interrupted, r.interrupted, "threads={threads}");
+        assert_eq!(base.preempted, r.preempted, "threads={threads}");
+        assert_eq!(base.queue_delays, r.queue_delays, "threads={threads}");
+        assert_eq!(base.availability, r.availability, "threads={threads}");
+    }
+}
+
+/// The sim-vs-coordinator equivalence, sharded: driving the
+/// [`ShardedCore`] window by window (`run_until` + `step_buffered`, the
+/// coordinator-style surface) produces the same result as
+/// [`ShardedSimulation::run`]'s trace loop.
+#[test]
+fn sharded_sim_and_window_driven_core_agree() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    let vms = &workload.vms;
+    let last_arrival = vms.last().unwrap().arrival;
+
+    let mut sim = ShardedSimulation::new(&workload.hosts, shard_policies("grmu", 0.25, 3), vms);
+    sim.options =
+        SimulationOptions { integrity_every: 8, drain_cap_hours: 5 * 24, ..Default::default() };
+    sim.shard_options.shards = 3;
+    sim.shard_options.threads = 2;
+    sim.shard_options.seed = 42;
+    let a = sim.run();
+
+    let mut core = ShardedCore::new(&workload.hosts, shard_policies("grmu", 0.25, 3), 42, 3, 2);
+    core.set_integrity_every(8);
+    let mut i = 0usize;
+    while i < vms.len() {
+        let w = core.window_of(vms[i].arrival);
+        let mut j = i;
+        while j < vms.len() && core.window_of(vms[j].arrival) == w {
+            j += 1;
+        }
+        core.run_until(w);
+        core.step_buffered(&vms[i..j]);
+        i = j;
+    }
+    // Drain with the engine's exact stop conditions.
+    while core.pending_departures() > 0 && core.hour() * HOUR <= last_arrival + 5 * 24 * HOUR {
+        core.step_buffered(&[]);
+    }
+    let b = core.into_result(0.0);
+
+    assert_eq!(a.requested, b.requested, "requested diverged");
+    assert_eq!(a.accepted, b.accepted, "accepted diverged");
+    assert_eq!(a.per_profile, b.per_profile, "per-profile diverged");
+    assert_eq!(a.rejections, b.rejections, "rejections diverged");
+    assert_eq!(a.migration_events, b.migration_events, "migration events diverged");
+    assert_eq!(a.samples, b.samples, "samples diverged");
+    assert_eq!(a.availability, b.availability);
+}
+
+/// Satellite lock: correlated-failure escalation. A zero blast radius
+/// leaves the schedule byte-identical; `p = 1` escalates every host
+/// failure across its domain; and a sharded run under blast faults is
+/// deterministic with a consistent rejection breakdown.
+#[test]
+fn blast_radius_amplifies_the_fault_schedule_deterministically() {
+    use grmu::ops::{FaultInjector, OpsConfig, OpsEvent};
+    let workload = Workload::generate(TraceConfig::small(11));
+    let base_ops = OpsConfig {
+        host_mtbf_hours: 200.0,
+        horizon_hours: workload.config.horizon_hours + 48,
+        seed: 11,
+        ..OpsConfig::default()
+    };
+    let host_fails = |ops: &OpsConfig| {
+        let (schedule, _) = FaultInjector::from_config(ops, &workload.hosts).into_parts();
+        schedule.iter().filter(|(_, e)| matches!(e, OpsEvent::HostFail { .. })).count()
+    };
+    let base = host_fails(&base_ops);
+    assert!(base > 0, "200 h host MTBF must draw failures over the horizon");
+    let zero = OpsConfig { blast_radius: 0.0, blast_hosts: 4, ..base_ops.clone() };
+    assert_eq!(host_fails(&zero), base, "zero blast radius must not change the schedule");
+    let full = OpsConfig { blast_radius: 1.0, blast_hosts: 4, ..base_ops.clone() };
+    assert!(host_fails(&full) > base, "p=1 blast must escalate failures across domains");
+
+    let run = || {
+        let mut sim =
+            ShardedSimulation::new(&workload.hosts, shard_policies("ff", 0.25, 2), &workload.vms);
+        sim.options = SimulationOptions {
+            integrity_every: 4,
+            drain_cap_hours: 3 * 24,
+            ops: full.clone(),
+            ..Default::default()
+        };
+        sim.shard_options.shards = 2;
+        sim.shard_options.seed = 11;
+        sim.run()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.samples, b.samples, "blast runs must be deterministic");
+    assert_eq!(a.interrupted, b.interrupted);
+    assert_eq!(a.rejections, b.rejections);
+    assert_eq!(a.rejections.iter().sum::<u64>(), a.requested - a.accepted);
+    assert!(a.availability < 1.0, "domain-wide outages must cost GPU-hours");
 }
 
 /// Migration-cost accounting is consistent across layers: the

@@ -1,0 +1,198 @@
+//! Property tests for the sharded fleet engine: whatever the shard
+//! count, worker count, fault schedule, admission queue or cross-shard
+//! rebalance period, the union of the per-shard data centers must be a
+//! *valid partition* of one coherent global cluster.
+//!
+//! For a grid of configurations this drives a [`ShardedCore`] over a
+//! generated workload with per-interval integrity checks, then — before
+//! collecting the result — verifies:
+//!
+//! 1. every shard's `DataCenter::check_integrity` holds (index, counter
+//!    and health coherence inside each shard);
+//! 2. a brute-force **global rebuild** — replaying every resident
+//!    instance of every shard into one fresh `DataCenter` over the
+//!    original (un-renumbered) fleet via the `ShardMap` translation —
+//!    also passes `check_integrity`, i.e. no two shards claim the same
+//!    VM or GPU and every local reference maps back into its owner's
+//!    global range;
+//! 3. the merged counters (`resident`, `active_hardware`,
+//!    `gpus_by_model`) equal the rebuilt cluster's — the sharded sums
+//!    are exactly the global quantities, not approximations;
+//! 4. the router's merged accounting stays consistent:
+//!    `sum(rejections) == requested − accepted`, cluster-level.
+
+use grmu::cluster::vm::{VmId, VmSpec, HOUR};
+use grmu::cluster::{DataCenter, GpuRef};
+use grmu::migrate::MigrationBudget;
+use grmu::ops::{FaultInjector, OpsConfig, QueueConfig};
+use grmu::policies::{Policy, PolicyConfig, PolicyRegistry};
+use grmu::sim::ShardedCore;
+use grmu::trace::{TraceConfig, Workload};
+use std::collections::HashMap;
+
+fn policies(name: &str, n: usize) -> Vec<Box<dyn Policy>> {
+    (0..n)
+        .map(|_| {
+            PolicyRegistry::standard()
+                .build(name, &PolicyConfig::new().heavy_frac(0.25))
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Rebuild one global `DataCenter` from the per-shard residents and
+/// check it is coherent; compare its aggregates to the shard sums.
+fn verify_partition(core: &ShardedCore, specs: &HashMap<VmId, VmSpec>, label: &str) {
+    let map = core.map();
+    // (1) Each shard is internally coherent.
+    for (s, shard) in core.shards().iter().enumerate() {
+        shard
+            .dc
+            .check_integrity()
+            .unwrap_or_else(|e| panic!("{label}: shard {s} integrity: {e}"));
+    }
+    // (2) The union re-places cleanly into a fresh global cluster. The
+    // rebuilt fleet comes from the shard dcs themselves (translated
+    // back), so a shard mutating a host it does not own would surface
+    // as a duplicate VM, an out-of-range reference or a capacity
+    // violation here.
+    let mut hosts = Vec::with_capacity(map.num_hosts());
+    for (s, shard) in core.shards().iter().enumerate() {
+        for h in shard.dc.hosts() {
+            let global_id = map.to_global(s, GpuRef { host: h.id, gpu: 0 }).host;
+            // Pristine copy: residents are replayed through `place` below.
+            hosts.push(grmu::cluster::Host::with_models(
+                global_id,
+                h.cpus,
+                h.ram_gb,
+                &h.gpus().iter().map(|g| g.model()).collect::<Vec<_>>(),
+            ));
+        }
+    }
+    hosts.sort_by_key(|h| h.id);
+    let mut rebuilt = DataCenter::new(hosts);
+    let mut resident_sum = 0usize;
+    for (s, shard) in core.shards().iter().enumerate() {
+        resident_sum += shard.dc.resident_count();
+        for h in shard.dc.hosts() {
+            for (g, gpu) in h.gpus().iter().enumerate() {
+                for inst in gpu.instances() {
+                    let global = map.to_global(s, GpuRef { host: h.id, gpu: g as u8 });
+                    let spec = specs
+                        .get(&inst.vm)
+                        .unwrap_or_else(|| panic!("{label}: unknown resident vm {}", inst.vm));
+                    assert!(
+                        rebuilt.vm_demands(inst.vm).is_none(),
+                        "{label}: vm {} resident on two shards",
+                        inst.vm
+                    );
+                    rebuilt.place(spec, global, inst.placement);
+                }
+            }
+        }
+    }
+    rebuilt
+        .check_integrity()
+        .unwrap_or_else(|e| panic!("{label}: rebuilt global integrity: {e}"));
+    // (3) Shard sums are the global aggregates.
+    assert_eq!(rebuilt.resident_count(), resident_sum, "{label}: resident count");
+    let (mut active, mut total) = (0usize, 0usize);
+    let mut by_model = [0usize; grmu::mig::NUM_MODELS];
+    for shard in core.shards() {
+        let (a, t) = shard.dc.active_hardware();
+        active += a;
+        total += t;
+        for (acc, x) in by_model.iter_mut().zip(shard.dc.gpus_by_model()) {
+            *acc += x;
+        }
+    }
+    assert_eq!(rebuilt.active_hardware(), (active, total), "{label}: active hardware");
+    assert_eq!(rebuilt.gpus_by_model(), by_model, "{label}: fleet composition");
+    // (4) Router accounting: one entry per request, cluster-level.
+    assert_eq!(
+        core.rejections().iter().sum::<u64>(),
+        core.requested() - core.accepted(),
+        "{label}: merged rejections must sum to refusals"
+    );
+}
+
+/// Drive the core through the engine's trace loop, verifying the
+/// partition at a mid-run point and again after the drain.
+fn drive_and_verify(seed: u64, shards: usize, threads: usize, ops: bool, queue: bool, rebalance: bool) {
+    let label = format!(
+        "seed={seed} shards={shards} threads={threads} ops={ops} queue={queue} rebalance={rebalance}"
+    );
+    let workload = Workload::generate(TraceConfig::small(seed));
+    let vms = &workload.vms;
+    let specs: HashMap<VmId, VmSpec> = vms.iter().map(|v| (v.id, *v)).collect();
+    let last_arrival = vms.last().unwrap().arrival;
+
+    let mut core = ShardedCore::new(&workload.hosts, policies("grmu", shards), seed, shards, threads);
+    core.set_integrity_every(1);
+    if ops {
+        let cfg = OpsConfig {
+            drain_rate: 1.0,
+            host_mtbf_hours: 2_000.0,
+            blast_radius: 0.5,
+            blast_hosts: 4,
+            horizon_hours: workload.config.horizon_hours + 48,
+            seed,
+            ..OpsConfig::default().with_gpu_mtbf(500.0)
+        };
+        core.set_fault_schedule(FaultInjector::from_config(&cfg, &workload.hosts));
+    }
+    if queue {
+        core.set_admission_queue(QueueConfig { capacity: 16, ttl_hours: 8, preemption: false });
+    }
+    if rebalance {
+        core.set_rebalance(6, MigrationBudget { max_moves_per_interval: 4, max_moves_per_vm: 2 });
+    }
+    let mut next = 0usize;
+    let mut checked_midrun = false;
+    loop {
+        let t_end = core.interval_end();
+        let start = next;
+        while next < vms.len() && vms[next].arrival <= t_end {
+            next += 1;
+        }
+        core.step_buffered(&vms[start..next]);
+        if !checked_midrun && next >= vms.len() / 2 {
+            // Once mid-trace: the partition must hold while loaded, not
+            // just after the drain.
+            verify_partition(&core, &specs, &format!("{label} (mid-run)"));
+            checked_midrun = true;
+        }
+        let drained = next >= vms.len() && core.pending_departures() == 0;
+        let capped = core.hour() * HOUR > last_arrival + 3 * 24 * HOUR;
+        if drained || capped {
+            break;
+        }
+    }
+    verify_partition(&core, &specs, &format!("{label} (final)"));
+    let result = core.into_result(0.0);
+    assert_eq!(
+        result.rejections.iter().sum::<u64>(),
+        result.requested - result.accepted,
+        "{label}: result breakdown must sum after the queue flush"
+    );
+    assert!(result.accepted > 0, "{label}: vacuous run");
+}
+
+#[test]
+fn partition_holds_without_ops() {
+    drive_and_verify(42, 1, 1, false, false, false);
+    drive_and_verify(42, 3, 2, false, false, false);
+    drive_and_verify(19, 4, 8, false, false, false);
+}
+
+#[test]
+fn partition_holds_under_faults_and_queueing() {
+    drive_and_verify(42, 4, 2, true, true, false);
+    drive_and_verify(7, 2, 4, true, false, false);
+}
+
+#[test]
+fn partition_holds_under_cross_shard_rebalance() {
+    drive_and_verify(42, 3, 2, false, false, true);
+    drive_and_verify(19, 4, 4, true, true, true);
+}
