@@ -1,0 +1,92 @@
+//! Rolling-horizon ILP repair throughput at 10,000 GPUs
+//! (EXPERIMENTS.md §Optimality gap).
+//!
+//! Measurements:
+//!
+//! 1. **Extraction rounds/sec** — ranking the full fleet by
+//!    fragmentation and carving the bounded [`PlacementInstance`]
+//!    (window + pending rejects), without solving. This is the part of
+//!    every online round that scales with fleet size.
+//! 2. **Plan rounds/sec vs window size** — one full `RollingIlp`
+//!    rejection round (extract → node-budgeted branch-and-bound →
+//!    translate) for windows of 4, 8 and 16 GPUs. The solve cost scales
+//!    with the window, not the fleet, so this pins the knob's price.
+//!
+//! Planning never mutates the cluster, so iterations are identical.
+//! Run: `cargo bench --bench ilp_online` (`BENCH_QUICK=1` shrinks the
+//! fleet).
+
+use grmu::cluster::{DataCenter, GpuRef, Host, VmSpec};
+use grmu::ilp::online::{build_instance, fragmented_window, MAX_INSTANCE_VMS, REPAIR_WEIGHT};
+use grmu::ilp::RollingIlp;
+use grmu::mig::{GpuModel, Placement, Profile};
+use grmu::migrate::{MigrationPlan, MigrationPlanner, PlanCtx, PlanScope, PlanTrigger};
+use grmu::util::bench::Bench;
+
+fn place(dc: &mut DataCenter, id: u64, profile: Profile, r: GpuRef, start: u8) {
+    let vm =
+        VmSpec { id, profile, cpus: 1, ram_gb: 1, arrival: 0, departure: 1 << 40, weight: 1.0 };
+    dc.place(&vm, r, Placement { profile, start });
+}
+
+/// `hosts` × 8 A100-40s, every GPU holding one stray 1g.5gb at block 2 —
+/// every device is fragmented, and every stray blocks a 4g.20gb (sole
+/// legal start 0), so rejection rounds always find repair work.
+fn fragmented_fleet(hosts: u32) -> DataCenter {
+    let mut dc = DataCenter::new((0..hosts).map(|i| Host::new(i, 512, 2_048, 8)).collect());
+    let mut id = 1u64;
+    for h in 0..hosts {
+        for g in 0..8u8 {
+            place(&mut dc, id, Profile::P1g5gb, GpuRef { host: h, gpu: g }, 2);
+            id += 1;
+        }
+    }
+    dc
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let hosts: u32 = if quick { 250 } else { 1_250 }; // × 8 GPUs
+    let dc = fragmented_fleet(hosts);
+    println!("fleet: {} GPUs, all fragmented (stray 1g in the 4g's blocks)", dc.num_gpus());
+    // The rejection burst the planner lays the window out for.
+    let pending: Vec<VmSpec> = (0..4)
+        .map(|i| VmSpec {
+            id: 1_000_000 + i,
+            profile: Profile::P4g20gb,
+            cpus: 2,
+            ram_gb: 8,
+            arrival: 0,
+            departure: 1 << 40,
+            weight: 1.0,
+        })
+        .collect();
+    let mut b = Bench::new();
+
+    // 1. Extraction only: the fleet-size-dependent part of a round.
+    b.run("ilp-online/extract/10k-gpus/window-8", || {
+        let w = fragmented_window(&dc, PlanScope::Cluster, GpuModel::A100_40, 8);
+        let ex = build_instance(&dc, &w, &pending, MAX_INSTANCE_VMS, &|_| REPAIR_WEIGHT);
+        assert!(!ex.inst.vms.is_empty());
+        ex.inst.vms.len()
+    });
+
+    // 2. Full rejection rounds: extract + bounded solve + translate.
+    let mut plan = MigrationPlan::new();
+    for window in [4usize, 8, 16] {
+        let mut planner = RollingIlp::new(window, 20_000, 24);
+        let label = format!("ilp-online/plan/10k-gpus/window-{window}");
+        b.run(&label, || {
+            plan.clear();
+            let ctx = PlanCtx {
+                now: 0,
+                trigger: PlanTrigger::Rejection,
+                scope: PlanScope::Cluster,
+                pending: &pending,
+            };
+            planner.plan(&dc, &ctx, &mut plan);
+            assert!(!plan.is_empty(), "the strays must be planned out of the 4g's blocks");
+            plan.num_moves()
+        });
+    }
+}

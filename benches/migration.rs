@@ -77,8 +77,12 @@ fn main() {
         let mut planner = DefragOnReject::new(use_index);
         b.run(label, || {
             plan.clear();
-            let ctx =
-                PlanCtx { now: 0, trigger: PlanTrigger::Rejection, scope: PlanScope::Cluster };
+            let ctx = PlanCtx {
+                now: 0,
+                trigger: PlanTrigger::Rejection,
+                scope: PlanScope::Cluster,
+                pending: &[],
+            };
             planner.plan(&dc, &ctx, &mut plan);
             assert!(!plan.is_empty());
             plan.num_moves()
@@ -91,7 +95,8 @@ fn main() {
     println!("consolidation fleet: {} GPUs, all half-full candidates", dc.num_gpus());
     b.run("migration/consolidate-plan/10k-gpus", || {
         plan.clear();
-        let ctx = PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Cluster };
+        let ctx =
+            PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Cluster, pending: &[] };
         consolidate::plan_consolidation(&dc, &ctx, &mut plan);
         assert!(plan.num_moves() >= dc.num_gpus() / 2 - 1);
         plan.num_moves()
@@ -112,7 +117,8 @@ fn main() {
     let mut planner = FragGradient::new(0.1, true).max_gpus(4);
     b.run("migration/frag-gradient-plan/10k-gpus", || {
         plan.clear();
-        let ctx = PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Cluster };
+        let ctx =
+            PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Cluster, pending: &[] };
         planner.plan(&dc, &ctx, &mut plan);
         assert!(!plan.is_empty());
         plan.num_moves()

@@ -39,6 +39,14 @@ cargo run --release --quiet -- simulate --quick --policy grmu \
 cargo run --release --quiet -- simulate --quick --policy grmu \
     --shards 2 --host-mtbf 500 --blast-radius 0.5 >/dev/null
 
+echo "== ILP repair + optimality-gap smoke run"
+# The rolling ILP repair planner composed through the registry, and the
+# gap reporter's sweep column end-to-end.
+cargo run --release --quiet -- simulate --quick --policy mcc+ilp-repair \
+    --ilp-window 8 --ilp-nodes 5000 --ilp-period 12 >/dev/null
+cargo run --release --quiet -- sweep --quick --gap-every 48 \
+    | grep -q "Optimality gap" || { echo "sweep produced no gap samples"; exit 1; }
+
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -4,6 +4,20 @@
 //! fractional integer variable; variable bounds expressed as extra rows
 //! appended to the relaxation. Exact for the small instances used to
 //! validate the placement heuristics.
+//!
+//! # Determinism contract
+//!
+//! The search is a pure function of the `Milp` description and the node
+//! limit: the DFS order, the relaxation pivots and the branching choice
+//! involve no randomness, no wall clock and no thread scheduling, so
+//! repeated `solve(limit)` calls — including truncated ones that return
+//! the incumbent at the cap — are byte-identical. Branching ties break
+//! toward the **lowest variable index**: the selection key is
+//! `(priority class, -fractionality)` compared strictly, so a later
+//! variable only wins with a strictly better key. Callers that build
+//! MILPs from cluster state (the online ILP planner) therefore get
+//! reproducible plans as long as they order variables deterministically
+//! (ascending `GpuRef` / dense `ProfileKey` — see `ilp::online`).
 
 use super::lp::{LinearProgram, LpOutcome};
 
@@ -121,7 +135,10 @@ impl Milp {
                 }
             }
             // Find the most fractional integer variable in the lowest
-            // (most important) fractional priority class.
+            // (most important) fractional priority class. Strict `<` on
+            // the (class, -fractionality) key means exact ties keep the
+            // earlier candidate — the lowest-index tie-break the
+            // determinism contract above promises.
             let mut branch: Option<(usize, f64)> = None;
             let mut best: Option<(u8, f64)> = None; // (class, -fractionality)
             for (v, &is_int) in self.integer.iter().enumerate() {
@@ -298,5 +315,31 @@ mod tests {
         }
         // Tiny limit may or may not find the optimum but must terminate.
         let _ = m.solve(1);
+    }
+
+    /// Determinism contract: truncated searches are byte-reproducible —
+    /// the same MILP under the same node cap yields the same incumbent,
+    /// values and node count on every call, even on a symmetric instance
+    /// where many variables tie on fractionality (lowest index wins).
+    #[test]
+    fn truncated_searches_are_byte_reproducible() {
+        // Perfectly symmetric knapsack: every variable is interchangeable,
+        // so any tie-break instability would surface as incumbent drift.
+        let mut m = Milp::new(6, vec![10.0; 6], true);
+        m.constrain((0..6).map(|v| (v, 3.0)).collect(), Cmp::Le, 10.0);
+        for v in 0..6 {
+            m.set_binary(v);
+        }
+        m.integral_objective = true;
+        for limit in [1usize, 3, 10, 0] {
+            let a = m.solve(limit);
+            let b = m.solve(limit);
+            let c = m.solve(limit);
+            assert_eq!(a, b, "limit {limit}: solve is not reproducible");
+            assert_eq!(b, c, "limit {limit}: solve is not reproducible");
+        }
+        // The untruncated optimum packs three items.
+        let s = m.solve(0).unwrap();
+        assert!((s.objective - 30.0).abs() < 1e-6, "{s:?}");
     }
 }

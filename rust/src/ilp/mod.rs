@@ -8,12 +8,16 @@
 //! and [`model`] builds Eq. 3–26 exactly and solves the three objectives
 //! *lexicographically* (acceptance ≻ active hardware ≻ migrations) on
 //! small instances. `examples/ilp_validation.rs` and the integration
-//! tests use it as ground truth for the heuristics.
+//! tests use it as ground truth for the heuristics. [`online`] takes the
+//! solver live: a rolling-horizon repair planner over bounded windows of
+//! the running cluster, plus per-policy optimality-gap metering.
 
 pub mod bb;
 pub mod lp;
 pub mod model;
+pub mod online;
 
 pub use bb::{Cmp, Milp, MilpSolution};
 pub use lp::{LinearProgram, LpOutcome};
 pub use model::{IlpSolver, PlacementInstance, PlacementSolution};
+pub use online::{GapMeter, RollingIlp};

@@ -107,7 +107,24 @@ impl VarMap {
         let mig0 = gamma0 + total;
         let omega0 = mig0 + n * m;
         let num_vars = omega0 + n * total;
-        VarMap { n, m, gpus, gpu_offsets, total_gpus: total, x0, y0, z0, beta0, alpha0, phi0, gamma0, mig0, omega0, num_vars, pairs }
+        VarMap {
+            n,
+            m,
+            gpus,
+            gpu_offsets,
+            total_gpus: total,
+            x0,
+            y0,
+            z0,
+            beta0,
+            alpha0,
+            phi0,
+            gamma0,
+            mig0,
+            omega0,
+            num_vars,
+            pairs,
+        }
     }
     fn g(&self, j: usize, k: usize) -> usize {
         self.gpu_offsets[j] + k
@@ -431,8 +448,22 @@ impl IlpSolver {
         c
     }
 
-    /// Solve the three objectives lexicographically.
+    /// Solve the three objectives lexicographically, exactly (no node
+    /// cap). Equivalent to [`IlpSolver::solve_limited`]`(0)`.
     pub fn solve(&self) -> Option<PlacementSolution> {
+        self.solve_limited(0)
+    }
+
+    /// Solve the three objectives lexicographically under a
+    /// branch-and-bound node budget per stage (`0` = unlimited, the
+    /// exact solve). A truncated stage returns its incumbent — still a
+    /// *feasible* solution, just not a proven optimum — and the later
+    /// stages freeze against that incumbent, so the result is always a
+    /// valid (possibly suboptimal) placement. Returns `None` only when a
+    /// stage finds no incumbent inside the budget. Deterministic: same
+    /// instance + same budget → byte-identical solution (the `bb`
+    /// module's determinism contract).
+    pub fn solve_limited(&self, node_limit: usize) -> Option<PlacementSolution> {
         let vars = VarMap::new(&self.inst);
         let mut milp = self.build_base(&vars);
         let mut nodes = 0usize;
@@ -446,7 +477,7 @@ impl IlpSolver {
         milp.objective = c1.clone();
         milp.integral_objective = integral(&c1);
         milp.maximize = true;
-        let s1 = milp.solve(0)?;
+        let s1 = milp.solve(node_limit)?;
         nodes += s1.nodes;
         let acceptance = s1.objective;
         let row: Vec<(usize, f64)> =
@@ -458,7 +489,7 @@ impl IlpSolver {
         milp.objective = c2.clone();
         milp.integral_objective = integral(&c2);
         milp.maximize = false;
-        let s2 = milp.solve(0)?;
+        let s2 = milp.solve(node_limit)?;
         nodes += s2.nodes;
         let active = s2.objective;
         let row: Vec<(usize, f64)> =
@@ -475,7 +506,7 @@ impl IlpSolver {
             // No resident VMs: stage 2's solution is final.
             s2.clone()
         } else {
-            let s = milp.solve(0)?;
+            let s = milp.solve(node_limit)?;
             nodes += s.nodes;
             s
         };
@@ -494,7 +525,13 @@ impl IlpSolver {
                 }
             }
         }
-        Some(PlacementSolution { assignment, acceptance, active_hardware: active, migrations, nodes })
+        Some(PlacementSolution {
+            assignment,
+            acceptance,
+            active_hardware: active,
+            migrations,
+            nodes,
+        })
     }
 }
 

@@ -1,0 +1,293 @@
+//! Bounded [`PlacementInstance`] extraction from the live cluster.
+//!
+//! The full-fleet ILP is intractable (§7); the online planner therefore
+//! carves a *bounded* instance out of the cluster: the most fragmented
+//! `K` schedulable GPUs of one model (plus the interval's pending
+//! rejects of that model) become a [`PlacementInstance`] the
+//! branch-and-bound can solve under a node budget.
+//!
+//! ## Determinism contract
+//!
+//! Instance extraction is a pure function of the cluster state:
+//!
+//! * The window ranks GPUs by fragmentation *descending* with ties
+//!   resolved to the lowest [`GpuRef`] (ascending `globalIndex` — the
+//!   scope order — preserved by a stable sort).
+//! * Hosts and GPUs enter the instance in ascending `GpuRef` order, so
+//!   the solver's dense variable indices — and with them the
+//!   branch-and-bound's lowest-index tie-breaks — are reproducible.
+//! * Resident VMs enter in (GPU, on-device instance) order; pending
+//!   VMs after them, in batch order.
+//!
+//! Together with the `ilp::bb` determinism contract this makes every
+//! online solve byte-reproducible and thread-count independent.
+//!
+//! ## Health contract
+//!
+//! Only schedulable GPUs ([`DataCenter::gpu_available`]: device *and*
+//! host `Healthy`) enter the window. `Draining` capacity allows
+//! residency but not placement, so a draining GPU's residents belong to
+//! the drain evacuation — never to an ILP repair plan — and failed or
+//! banned capacity is invisible here entirely. `rust/tests/
+//! ops_invariants.rs` asserts this.
+
+use crate::cluster::vm::{VmId, VmSpec};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::ilp::model::{IlpHost, PlacementInstance, PriorPlacement};
+use crate::mig::fragmentation::fragmentation_value;
+use crate::mig::GpuModel;
+use crate::migrate::PlanScope;
+use std::collections::HashMap;
+
+/// Hard cap on VMs per extracted instance. The solver's variable count
+/// grows as `n · (hosts + 3·GPUs)`; 24 VMs over an 8-GPU window stays
+/// well inside what the node-budgeted branch-and-bound turns into a
+/// useful incumbent.
+pub const MAX_INSTANCE_VMS: usize = 24;
+
+/// Prior-VM weight used by *repair* extraction: so much heavier than
+/// any real request weight that stage 1 (acceptance) never trades a
+/// resident away for pending demand — repair plans relocate, they never
+/// evict.
+pub const REPAIR_WEIGHT: f64 = 1e6;
+
+/// Map from an instance's dense (host, gpu) indices back to the live
+/// cluster's [`GpuRef`]s.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceMap {
+    /// `gpus[j][k]` = the `GpuRef` behind instance host `j`, GPU `k`.
+    pub gpus: Vec<Vec<GpuRef>>,
+}
+
+impl InstanceMap {
+    /// The live GPU behind instance coordinates `(j, k)`.
+    #[inline]
+    pub fn gpu(&self, j: usize, k: usize) -> GpuRef {
+        self.gpus[j][k]
+    }
+}
+
+/// A bounded instance plus the bookkeeping needed to act on its
+/// solution.
+#[derive(Debug, Clone, Default)]
+pub struct ExtractedInstance {
+    pub inst: PlacementInstance,
+    pub map: InstanceMap,
+    /// Ids of the pending specs that made it into the instance (the
+    /// VM cap may have truncated the tail).
+    pub included_pending: Vec<VmId>,
+}
+
+/// The `k` most fragmented schedulable GPUs of `model` within `scope`,
+/// in the deterministic ranking order (fragmentation descending, ties
+/// to the lowest `GpuRef`). Unschedulable capacity — failed, banned or
+/// draining devices, or any GPU on a non-`Healthy` host — never enters
+/// the window.
+pub fn fragmented_window(
+    dc: &DataCenter,
+    scope: PlanScope,
+    model: GpuModel,
+    k: usize,
+) -> Vec<GpuRef> {
+    let mut scored: Vec<(f64, GpuRef)> = Vec::new();
+    for r in scope.gpus(dc) {
+        if !dc.gpu_available(r) {
+            continue;
+        }
+        let gpu = dc.gpu(r);
+        if gpu.model() != model {
+            continue;
+        }
+        scored.push((fragmentation_value(model, gpu.occupancy()), r));
+    }
+    // Stable sort: equal fragmentation keeps the ascending-GpuRef scope
+    // order, so ties resolve to the lowest globalIndex.
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    scored.truncate(k);
+    scored.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Build a [`PlacementInstance`] from a ranked window (the output of
+/// [`fragmented_window`]) plus pending rejects. All window GPUs must
+/// share one model; pending specs of other models are skipped.
+///
+/// `weight_of` supplies the acceptance weight of each *resident* VM
+/// (repair extraction passes a constant [`REPAIR_WEIGHT`]; the gap
+/// estimator passes the true weights it tracked). Pending specs keep
+/// their own weights.
+///
+/// The `max_vms` cap is enforced by first truncating pending (tail
+/// first) and then, if the residents alone still exceed it, dropping
+/// the least fragmented window GPUs (the tail of the ranking).
+pub fn build_instance(
+    dc: &DataCenter,
+    window: &[GpuRef],
+    pending: &[VmSpec],
+    max_vms: usize,
+    weight_of: &dyn Fn(VmId) -> f64,
+) -> ExtractedInstance {
+    // Shrink the ranked window until its residents fit the VM cap.
+    let mut ranked: Vec<GpuRef> = window.to_vec();
+    loop {
+        let residents: usize = ranked.iter().map(|&r| dc.gpu(r).instances().len()).sum();
+        if residents <= max_vms || ranked.len() <= 1 {
+            break;
+        }
+        ranked.pop();
+    }
+    // Dense indices follow ascending GpuRef (the determinism contract).
+    ranked.sort();
+    ranked.dedup();
+
+    let mut host_ids: Vec<u32> = ranked.iter().map(|r| r.host).collect();
+    host_ids.dedup();
+    let map = InstanceMap {
+        gpus: host_ids
+            .iter()
+            .map(|&h| ranked.iter().filter(|r| r.host == h).copied().collect())
+            .collect(),
+    };
+
+    let mut vms: Vec<VmSpec> = Vec::new();
+    let mut prior: HashMap<VmId, PriorPlacement> = HashMap::new();
+    // Per-host CPU/RAM the instance VMs currently hold (handed back to
+    // the ILP's capacity: residents are re-placeable, so their
+    // reservations count as capacity, not as consumption).
+    let mut held: Vec<(u64, u64)> = vec![(0, 0); host_ids.len()];
+    for (j, host_gpus) in map.gpus.iter().enumerate() {
+        for (k, &r) in host_gpus.iter().enumerate() {
+            for inst in dc.gpu(r).instances() {
+                let (cpus, ram_gb) = dc.vm_demands(inst.vm).unwrap_or((0, 0));
+                vms.push(VmSpec {
+                    id: inst.vm,
+                    profile: inst.placement.profile,
+                    cpus,
+                    ram_gb,
+                    arrival: 0,
+                    departure: 0,
+                    weight: weight_of(inst.vm),
+                });
+                prior.insert(
+                    inst.vm,
+                    PriorPlacement { host: j, gpu: k, delta: inst.placement.profile.size() as f64 },
+                );
+                held[j].0 += cpus as u64;
+                held[j].1 += ram_gb as u64;
+            }
+        }
+    }
+
+    let model = ranked.first().map(|&r| dc.gpu(r).model());
+    let mut included_pending = Vec::new();
+    for p in pending {
+        if vms.len() >= max_vms {
+            break;
+        }
+        if Some(p.profile.model()) != model {
+            continue;
+        }
+        included_pending.push(p.id);
+        vms.push(*p);
+    }
+
+    let hosts: Vec<IlpHost> = host_ids
+        .iter()
+        .enumerate()
+        .map(|(j, &h)| {
+            let host = dc.host(h);
+            IlpHost {
+                cpus: host.free_cpus().saturating_add(held[j].0.min(u32::MAX as u64) as u32),
+                ram_gb: host.free_ram().saturating_add(held[j].1.min(u32::MAX as u64) as u32),
+                num_gpus: map.gpus[j].len(),
+                weight: 1.0,
+            }
+        })
+        .collect();
+
+    ExtractedInstance { inst: PlacementInstance { hosts, vms, prior }, map, included_pending }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{HealthState, Host};
+    use crate::mig::{Placement, Profile};
+
+    fn place(dc: &mut DataCenter, id: u64, profile: Profile, r: GpuRef, start: u8) {
+        let vm =
+            VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 10, weight: 1.0 };
+        dc.place(&vm, r, Placement { profile, start });
+    }
+
+    fn pend(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 10, weight: 1.0 }
+    }
+
+    #[test]
+    fn window_ranks_by_fragmentation_then_index() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 3)]);
+        // GPU 1: stray 1g at block 4 (fragmented); GPUs 0 and 2 empty.
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 1 }, 4);
+        let w = fragmented_window(&dc, PlanScope::Cluster, crate::mig::GpuModel::A100_40, 2);
+        assert_eq!(w[0], GpuRef { host: 0, gpu: 1 }, "fragmented GPU ranks first");
+        assert_eq!(w[1], GpuRef { host: 0, gpu: 0 }, "ties fall back to lowest index");
+    }
+
+    #[test]
+    fn window_skips_unavailable_capacity() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2), Host::new(1, 64, 256, 1)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 4);
+        place(&mut dc, 2, Profile::P1g5gb, GpuRef { host: 0, gpu: 1 }, 4);
+        place(&mut dc, 3, Profile::P1g5gb, GpuRef { host: 1, gpu: 0 }, 4);
+        dc.set_gpu_health(GpuRef { host: 0, gpu: 0 }, HealthState::Draining);
+        dc.set_host_health(1, HealthState::Draining);
+        let w = fragmented_window(&dc, PlanScope::Cluster, crate::mig::GpuModel::A100_40, 8);
+        assert_eq!(w, vec![GpuRef { host: 0, gpu: 1 }], "draining GPU/host must be skipped");
+    }
+
+    #[test]
+    fn instance_carries_priors_and_capacity() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 4);
+        let w = fragmented_window(&dc, PlanScope::Cluster, crate::mig::GpuModel::A100_40, 2);
+        let ex = build_instance(&dc, &w, &[pend(10, Profile::P2g10gb)], MAX_INSTANCE_VMS, &|_| {
+            REPAIR_WEIGHT
+        });
+        assert_eq!(ex.inst.hosts.len(), 1);
+        assert_eq!(ex.inst.hosts[0].num_gpus, 2);
+        // Host capacity hands the resident's reservation back: 62 free
+        // + 2 held.
+        assert_eq!(ex.inst.hosts[0].cpus, 64);
+        assert_eq!(ex.inst.vms.len(), 2);
+        assert_eq!(ex.inst.vms[0].id, 1);
+        assert!((ex.inst.vms[0].weight - REPAIR_WEIGHT).abs() < 1e-9);
+        assert_eq!(ex.inst.prior.len(), 1);
+        assert_eq!(ex.included_pending, vec![10]);
+        // Local coordinates round-trip through the map.
+        let p = ex.inst.prior[&1];
+        assert_eq!(ex.map.gpu(p.host, p.gpu), GpuRef { host: 0, gpu: 0 });
+    }
+
+    #[test]
+    fn vm_cap_truncates_pending_first() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 4);
+        let w = fragmented_window(&dc, PlanScope::Cluster, crate::mig::GpuModel::A100_40, 1);
+        let pending: Vec<VmSpec> = (10..20).map(|i| pend(i, Profile::P1g5gb)).collect();
+        let ex = build_instance(&dc, &w, &pending, 3, &|_| REPAIR_WEIGHT);
+        assert_eq!(ex.inst.vms.len(), 3, "1 resident + 2 pending under the cap");
+        assert_eq!(ex.included_pending, vec![10, 11]);
+        assert_eq!(ex.inst.prior.len(), 1, "residents survive the cap");
+    }
+
+    #[test]
+    fn foreign_model_pending_is_skipped() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 4);
+        let w = fragmented_window(&dc, PlanScope::Cluster, crate::mig::GpuModel::A100_40, 1);
+        let a30 = crate::mig::GpuModel::A30.profile(0);
+        let ex = build_instance(&dc, &w, &[pend(10, a30)], MAX_INSTANCE_VMS, &|_| 1.0);
+        assert!(ex.included_pending.is_empty());
+        assert_eq!(ex.inst.vms.len(), 1);
+    }
+}

@@ -1,0 +1,274 @@
+//! Online optimality-gap metering.
+//!
+//! [`GapMeter`] wraps any [`Policy`] and, on a configurable cadence,
+//! cross-checks the wrapped policy's admission decisions against the
+//! bounded exact solver: before handing a due batch to the inner
+//! policy, it extracts the same kind of instance [`RollingIlp`] repairs
+//! — the most fragmented `window` GPUs per model plus the batch's
+//! requests — but with *true* request weights, solves it under the node
+//! budget, and compares the ILP's weighted acceptance against what the
+//! policy actually achieved on the same VMs. The relative shortfall is
+//! recorded as one `gap%` sample, drained by the engine through
+//! [`Policy::drain_gap_samples_into`] into `SimResult::gap_samples` and
+//! surfaced in `repro sweep` / `tables::optimality_gap`.
+//!
+//! ## What the number means
+//!
+//! The ILP bound is computed over the *extracted window*, not the whole
+//! cluster: residents outside the window and placements the policy
+//! makes outside it are invisible to the bound. Within the window the
+//! bound is exact (the lexicographic optimum under the node budget, and
+//! the budget only ever *lowers* the bound, never inflates it), so the
+//! sample is a sound per-window gap; because the policy may serve a
+//! request from outside the window, an apparent negative gap is clamped
+//! to zero. Only when `window` covers the entire fleet of a model is
+//! the sample a true cluster-wide optimality gap — the configuration
+//! the `ilp_cross_validation` tests run.
+//!
+//! [`RollingIlp`]: super::RollingIlp
+
+use super::extract::{build_instance, fragmented_window};
+use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
+use crate::cluster::DataCenter;
+use crate::ilp::IlpSolver;
+use crate::mig::GpuModel;
+use crate::migrate::{MigrationEvent, PlanScope};
+use crate::policies::{Policy, PolicyCtx};
+use std::collections::{HashMap, HashSet};
+
+/// Policy wrapper sampling the optimality gap on a cadence. See the
+/// module docs for the bound's semantics.
+pub struct GapMeter {
+    inner: Box<dyn Policy>,
+    /// Sampling cadence in hours (> 0; a zero-cadence meter is never
+    /// built — the registry skips the wrapper).
+    every: u64,
+    /// Extraction window: most-fragmented GPUs per model.
+    window: usize,
+    /// Branch-and-bound node budget per solver stage.
+    node_limit: usize,
+    /// Next batch at or after this time is sampled. Starts at 0 so the
+    /// first batch of a run is always a sample.
+    next_due: Time,
+    /// True weights of resident VMs (the cluster stores demands, not
+    /// weights). Populated from placed decisions, pruned on departure;
+    /// VMs placed before this wrapper saw them default to 1.0.
+    weights: HashMap<VmId, f64>,
+    samples: Vec<f64>,
+}
+
+/// One batch's ILP-side aggregate, accumulated over the per-model
+/// instances.
+struct Bound {
+    /// Sum of ILP weighted acceptances over the sampled instances.
+    ilp: f64,
+    /// Weight of the window *residents* in those instances — the part
+    /// of the achievable value the policy already holds.
+    resident: f64,
+    /// Batch VMs that made it into some instance; only their outcomes
+    /// count against the bound.
+    covered: HashSet<VmId>,
+}
+
+impl GapMeter {
+    pub fn new(inner: Box<dyn Policy>, every: u64, window: usize, node_limit: usize) -> GapMeter {
+        GapMeter {
+            inner,
+            every,
+            window,
+            node_limit,
+            next_due: 0,
+            weights: HashMap::new(),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Solve the bounded per-model instances for `vms` against the
+    /// *pre-batch* cluster. `None` when nothing was sampleable (no
+    /// model landed in an instance) or a solver stage found no
+    /// incumbent under the budget — either way, no sample this round.
+    fn bound_for_batch(&self, dc: &DataCenter, vms: &[VmSpec]) -> Option<Bound> {
+        let mut models: Vec<GpuModel> = vms.iter().map(|v| v.profile.model()).collect();
+        models.sort();
+        models.dedup();
+        let mut bound = Bound { ilp: 0.0, resident: 0.0, covered: HashSet::new() };
+        let mut sampled_any = false;
+        for model in models {
+            let window = fragmented_window(dc, PlanScope::Cluster, model, self.window);
+            if window.is_empty() {
+                continue;
+            }
+            let pending: Vec<VmSpec> =
+                vms.iter().filter(|v| v.profile.model() == model).copied().collect();
+            let weights = &self.weights;
+            let ex = build_instance(dc, &window, &pending, super::extract::MAX_INSTANCE_VMS, &|id| {
+                weights.get(&id).copied().unwrap_or(1.0)
+            });
+            if ex.included_pending.is_empty() {
+                // The VM cap ate the whole batch share: no admission
+                // question is being asked of the ILP for this model.
+                continue;
+            }
+            let sol = IlpSolver::new(ex.inst.clone()).solve_limited(self.node_limit)?;
+            bound.ilp += sol.acceptance;
+            for vm in &ex.inst.vms {
+                if ex.inst.prior.contains_key(&vm.id) {
+                    bound.resident += vm.weight;
+                }
+            }
+            bound.covered.extend(ex.included_pending.iter().copied());
+            sampled_any = true;
+        }
+        sampled_any.then_some(bound)
+    }
+}
+
+impl Policy for GapMeter {
+    fn name(&self) -> &str {
+        // Transparent: reports and sweep rows keep the wrapped name.
+        self.inner.name()
+    }
+
+    fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
+        let bound = if self.every > 0 && ctx.now >= self.next_due && !vms.is_empty() {
+            // Advance the clock even when the bound comes back empty —
+            // a failed sample must not make every later batch retry.
+            self.next_due = ctx.now + self.every * HOUR;
+            self.bound_for_batch(dc, vms)
+        } else {
+            None
+        };
+        self.inner.place_batch_into(dc, vms, ctx);
+        let mut achieved = 0.0;
+        for (vm, d) in vms.iter().zip(ctx.decisions.iter()) {
+            if d.is_placed() {
+                self.weights.insert(vm.id, vm.weight);
+                if bound.as_ref().is_some_and(|b| b.covered.contains(&vm.id)) {
+                    achieved += vm.weight;
+                }
+            }
+        }
+        if let Some(b) = bound {
+            if b.ilp > 1e-9 {
+                let gap = (b.ilp - (b.resident + achieved)) / b.ilp * 100.0;
+                // The policy may serve covered VMs from *outside* the
+                // window; that shows up as beating the window-local
+                // bound. Clamp — the bound is only sound within it.
+                self.samples.push(gap.max(0.0));
+            }
+        }
+    }
+
+    fn on_departure(&mut self, dc: &mut DataCenter, vm: VmId, ctx: &mut PolicyCtx) {
+        self.weights.remove(&vm);
+        self.inner.on_departure(dc, vm, ctx);
+    }
+
+    fn on_tick(&mut self, dc: &mut DataCenter, ctx: &mut PolicyCtx) {
+        self.inner.on_tick(dc, ctx);
+    }
+
+    fn drain_migrations_into(&mut self, out: &mut Vec<MigrationEvent>) {
+        self.inner.drain_migrations_into(out);
+    }
+
+    fn drain_gap_samples_into(&mut self, out: &mut Vec<f64>) {
+        out.append(&mut self.samples);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GpuRef, Host};
+    use crate::mig::{Placement, Profile};
+    use crate::policies::{PolicyConfig, PolicyRegistry};
+
+    fn vm(id: VmId, profile: Profile, weight: f64) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 1000, weight }
+    }
+
+    fn meter(window: usize) -> GapMeter {
+        let inner = PolicyRegistry::standard().build("ff", &PolicyConfig::new()).unwrap();
+        GapMeter::new(inner, 24, window, 100_000)
+    }
+
+    #[test]
+    fn optimal_policy_on_empty_cluster_has_zero_gap() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let mut meter = meter(8);
+        let mut ctx = PolicyCtx::new(7);
+        let batch = [vm(1, Profile::P1g5gb, 1.0), vm(2, Profile::P2g10gb, 2.0)];
+        meter.place_batch_into(&mut dc, &batch, &mut ctx);
+        assert!(ctx.decisions.iter().all(|d| d.is_placed()));
+        let mut samples = Vec::new();
+        meter.drain_gap_samples_into(&mut samples);
+        assert_eq!(samples, vec![0.0], "everything placed => no gap");
+        // Drain is destructive.
+        let mut again = Vec::new();
+        meter.drain_gap_samples_into(&mut again);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn cadence_skips_batches_inside_the_period() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let mut meter = meter(8);
+        let mut ctx = PolicyCtx::new(7);
+        ctx.now = 0;
+        meter.place_batch_into(&mut dc, &[vm(1, Profile::P1g5gb, 1.0)], &mut ctx);
+        ctx.now = HOUR; // inside the 24 h period
+        meter.place_batch_into(&mut dc, &[vm(2, Profile::P1g5gb, 1.0)], &mut ctx);
+        ctx.now = 25 * HOUR; // due again
+        meter.place_batch_into(&mut dc, &[vm(3, Profile::P1g5gb, 1.0)], &mut ctx);
+        let mut samples = Vec::new();
+        meter.drain_gap_samples_into(&mut samples);
+        assert_eq!(samples.len(), 2, "hour-1 batch must not be sampled: {samples:?}");
+    }
+
+    /// A stray 1g at block 2 makes the 4g.20gb (sole legal start 0)
+    /// unplaceable for the policy, but the ILP (which may move
+    /// residents) accepts it — a real gap.
+    #[test]
+    fn fragmentation_shortfall_is_measured() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let stray = vm(1, Profile::P1g5gb, 1.0);
+        dc.place(&stray, GpuRef { host: 0, gpu: 0 }, Placement {
+            profile: Profile::P1g5gb,
+            start: 2,
+        });
+        let mut meter = meter(8);
+        meter.weights.insert(1, 1.0);
+        let mut ctx = PolicyCtx::new(7);
+        let batch = [vm(2, Profile::P4g20gb, 3.0)];
+        meter.place_batch_into(&mut dc, &batch, &mut ctx);
+        assert!(!ctx.decisions[0].is_placed(), "FF cannot place the 4g past the stray");
+        let mut samples = Vec::new();
+        meter.drain_gap_samples_into(&mut samples);
+        assert_eq!(samples.len(), 1);
+        // ILP bound: stray (1.0) + 4g (3.0) = 4.0; achieved: 1.0.
+        assert!((samples[0] - 75.0).abs() < 1e-6, "gap was {}", samples[0]);
+    }
+
+    #[test]
+    fn registry_wraps_when_gap_check_enabled() {
+        let registry = PolicyRegistry::standard();
+        let cfg = PolicyConfig::new().gap_check_hours(24);
+        let mut p = registry.build("mcc+ilp-repair", &cfg).unwrap();
+        assert_eq!(p.name(), "MCC+ilp-repair", "the meter must not rename the policy");
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let mut ctx = PolicyCtx::new(7);
+        p.place_batch_into(&mut dc, &[vm(1, Profile::P1g5gb, 1.0)], &mut ctx);
+        let mut samples = Vec::new();
+        p.drain_gap_samples_into(&mut samples);
+        assert_eq!(samples.len(), 1, "wrapped policy must sample through the trait");
+        // Without the knob the policy is not wrapped: no samples.
+        let mut bare = registry.build("mcc", &PolicyConfig::new()).unwrap();
+        let mut dc2 = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let mut ctx2 = PolicyCtx::new(7);
+        bare.place_batch_into(&mut dc2, &[vm(1, Profile::P1g5gb, 1.0)], &mut ctx2);
+        let mut none = Vec::new();
+        bare.drain_gap_samples_into(&mut none);
+        assert!(none.is_empty());
+    }
+}

@@ -1,0 +1,555 @@
+//! Rolling-horizon ILP repair: the paper's Eq. 3–26 formulation, solved
+//! *online* over bounded windows of the live cluster.
+//!
+//! §7 shows the full-fleet ILP is intractable, and the offline
+//! [`IlpSolver`] is only used as ground truth on synthetic shapes. This
+//! module closes the loop the way IBM's MIG workload-placement study
+//! does with bounded exact repair: on a configurable cadence (and on
+//! rejection bursts), [`RollingIlp`] extracts the most fragmented `K`
+//! GPUs per model — plus the interval's pending rejects — as a
+//! [`PlacementInstance`] ([`extract`]), solves it lexicographically
+//! (acceptance ≻ active hardware ≻ migration cost) under a
+//! deterministic branch-and-bound node budget
+//! ([`IlpSolver::solve_limited`]), and translates the solution into a
+//! transactional [`MigrationPlan`] applied through
+//! [`DataCenter::apply_plan`](crate::cluster::DataCenter::apply_plan).
+//!
+//! The planner registers as `"ilp-repair"` in
+//! `policies::planned::planner_from_name`, so any base policy composes
+//! through the registry: `mcc+ilp-repair`, `ff+ilp-repair`, ...
+//!
+//! [`GapMeter`] (in [`gap`]) reuses the same extraction with *true*
+//! request weights to report a per-policy optimality gap: how much
+//! weighted acceptance the policy left on the table versus the bounded
+//! ILP bound, sampled on a cadence and surfaced as `gap%` in
+//! `SimResult` / `repro sweep` / `tables::optimality_gap`.
+//!
+//! ## Determinism
+//!
+//! The whole pipeline is a pure function of cluster state and
+//! configuration: extraction orders hosts/GPUs/VMs by ascending
+//! [`GpuRef`] (see [`extract`]'s contract), the branch-and-bound is
+//! deterministic under its node limit (see `ilp::bb`), and translation
+//! walks destinations in ascending `GpuRef`. The budget is a *node*
+//! budget only — a wall-clock deadline would make plans depend on
+//! machine load and break byte-reproducibility, so there isn't one.
+//!
+//! ## What a repair plan can and cannot do
+//!
+//! A [`MigrationPlan`] moves *resident* VMs; pending rejects cannot be
+//! placed by a plan. Rejects instead enter the ILP as demand
+//! ([`PlanCtx::pending`]): the solver lays the window out so that the
+//! rejected profiles *would* fit, and the plan realizes that layout —
+//! freeing contiguous space the admission queue's retries or future
+//! arrivals of the same shape can use. Prior VMs carry
+//! [`extract::REPAIR_WEIGHT`], so repair never trades a resident away
+//! for pending demand (plans relocate, they never evict).
+
+pub mod extract;
+pub mod gap;
+
+pub use extract::{
+    build_instance, fragmented_window, ExtractedInstance, InstanceMap, MAX_INSTANCE_VMS,
+    REPAIR_WEIGHT,
+};
+pub use gap::GapMeter;
+
+use crate::cluster::vm::{Time, VmId, HOUR};
+use crate::cluster::{DataCenter, GpuRef};
+use crate::ilp::model::{PlacementInstance, PlacementSolution};
+use crate::ilp::IlpSolver;
+use crate::mig::fragmentation::fragmentation_value;
+use crate::mig::{BlockMask, GpuModel, Instance, Placement};
+use crate::migrate::{MigrationPlan, MigrationPlanner, PlanCtx, PlanTrigger, PlanView};
+use std::collections::BTreeMap;
+
+/// The rolling-horizon ILP repair planner. See the module docs.
+#[derive(Debug, Clone)]
+pub struct RollingIlp {
+    /// GPUs per model in the extraction window. `0` disables the
+    /// planner entirely.
+    window: usize,
+    /// Branch-and-bound node budget per solver stage. `0` disables the
+    /// planner entirely (note the divergence from [`crate::ilp::Milp`],
+    /// where 0 means *unlimited* — an online planner must never run
+    /// unbounded, so the zero is claimed for "off" and guarded before
+    /// the solver is ever called).
+    node_limit: usize,
+    /// Tick cadence in hours (rejection bursts plan regardless).
+    period_hours: u64,
+    /// `now` of the last tick-triggered round.
+    last_tick_run: Option<Time>,
+}
+
+impl RollingIlp {
+    pub fn new(window: usize, node_limit: usize, period_hours: u64) -> RollingIlp {
+        RollingIlp { window, node_limit, period_hours, last_tick_run: None }
+    }
+}
+
+impl MigrationPlanner for RollingIlp {
+    fn name(&self) -> &'static str {
+        "ilp-repair"
+    }
+
+    fn plan(&mut self, dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan) {
+        if self.window == 0 || self.node_limit == 0 {
+            // Disabled: byte-identical to the planner-free variant
+            // (locked in rust/tests/decision_api.rs).
+            return;
+        }
+        match ctx.trigger {
+            // A rejection burst plans immediately — but only when the
+            // caller actually handed the rejects over; a bare rejection
+            // signal carries no demand to lay out.
+            PlanTrigger::Rejection => {
+                if ctx.pending.is_empty() {
+                    return;
+                }
+            }
+            PlanTrigger::Tick => {
+                let period = self.period_hours.saturating_mul(HOUR);
+                if let Some(last) = self.last_tick_run {
+                    if ctx.now < last.saturating_add(period) {
+                        return;
+                    }
+                }
+                self.last_tick_run = Some(ctx.now);
+            }
+        }
+        // One bounded instance per model (the ILP host row carries no
+        // model, so instances are single-model by construction), in
+        // catalog order.
+        let mut models: Vec<GpuModel> = Vec::new();
+        for r in ctx.scope.gpus(dc) {
+            if !dc.gpu_available(r) {
+                continue;
+            }
+            let m = dc.gpu(r).model();
+            if !models.contains(&m) {
+                models.push(m);
+            }
+        }
+        models.sort();
+        for model in models {
+            let window = fragmented_window(dc, ctx.scope, model, self.window);
+            if window.is_empty() {
+                continue;
+            }
+            let pending: Vec<_> =
+                ctx.pending.iter().filter(|v| v.profile.model() == model).copied().collect();
+            let fragmented = window
+                .iter()
+                .any(|&r| fragmentation_value(model, dc.gpu(r).occupancy()) > 0.0);
+            if pending.is_empty() && !fragmented {
+                // Nothing to repair and no demand to lay out for.
+                continue;
+            }
+            let ex = build_instance(dc, &window, &pending, MAX_INSTANCE_VMS, &|_| REPAIR_WEIGHT);
+            if ex.inst.vms.is_empty() {
+                continue;
+            }
+            let solver = IlpSolver::new(ex.inst.clone());
+            let Some(sol) = solver.solve_limited(self.node_limit) else {
+                continue;
+            };
+            translate_into_plan(dc, &ex.inst, &ex.map, &sol, plan);
+        }
+    }
+}
+
+/// One destination GPU's share of an ILP solution.
+#[derive(Default)]
+struct DestGroup {
+    /// Residents of this GPU assigned to stay on it, with their ILP
+    /// placements. Unassigned residents (possible only under truncated
+    /// budgets) appear with their *current* placement and taint the
+    /// group.
+    stay: Vec<(Instance, Placement)>,
+    /// `(vm, from, old placement, new placement)` of VMs moving in.
+    incoming: Vec<(VmId, GpuRef, Placement, Placement)>,
+    /// Union of the blocks the ILP assigned to *pending* VMs on this
+    /// GPU. A plan cannot place them, but the layout it realizes must
+    /// keep these blocks free — that reservation is the entire point of
+    /// a demand-driven repair.
+    pending_mask: BlockMask,
+    /// Some resident had no ILP assignment: the ILP's layout for this
+    /// GPU is incomplete, so the repack fallback is off the table.
+    tainted: bool,
+}
+
+/// Translate an ILP solution over an extracted instance into plan
+/// steps, validated against a [`PlanView`] overlay so the transactional
+/// apply never rolls back.
+///
+/// Per destination GPU the cheap layout is preferred: keep stayers at
+/// their current blocks (same-GPU start changes carry no cost in the
+/// model — [`crate::ilp::model::PriorPlacement`] has no start) and only
+/// move the incoming VMs. When the incoming placements collide with a
+/// stayer's current blocks, the GPU falls back to the ILP's full layout
+/// — one atomic `Repack` of the stayers plus the incoming `Migrate`s.
+/// Steps are then emitted in deterministic greedy rounds over the
+/// `PlanView` (repacks by ascending GPU, then migrates), so chains
+/// ("A's blocks free once B leaves") resolve and genuine cycles are
+/// dropped rather than planned infeasibly.
+pub(crate) fn translate_into_plan(
+    dc: &DataCenter,
+    inst: &PlacementInstance,
+    map: &InstanceMap,
+    sol: &PlacementSolution,
+    plan: &mut MigrationPlan,
+) {
+    let mut groups: BTreeMap<GpuRef, DestGroup> = BTreeMap::new();
+    for vm in &inst.vms {
+        if !inst.prior.contains_key(&vm.id) {
+            // Pending demand: not movable, but its assigned blocks are
+            // reserved in the layout the plan realizes.
+            if let Some(&(j, k, start)) = sol.assignment.get(&vm.id) {
+                let mask = Placement { profile: vm.profile, start }.mask();
+                groups.entry(map.gpu(j, k)).or_default().pending_mask |= mask;
+            }
+            continue;
+        }
+        let Some(loc) = dc.locate(vm.id) else { continue };
+        match sol.assignment.get(&vm.id) {
+            Some(&(j, k, start)) => {
+                let dest = map.gpu(j, k);
+                let new = Placement { profile: vm.profile, start };
+                if dest == loc.gpu {
+                    let live = Instance { vm: vm.id, placement: loc.placement };
+                    groups.entry(dest).or_default().stay.push((live, new));
+                } else {
+                    groups.entry(dest).or_default().incoming.push((
+                        vm.id,
+                        loc.gpu,
+                        loc.placement,
+                        new,
+                    ));
+                }
+            }
+            None => {
+                // Only a truncated solve drops a REPAIR_WEIGHT prior;
+                // leave the VM where it is and taint its GPU.
+                let live = Instance { vm: vm.id, placement: loc.placement };
+                let g = groups.entry(loc.gpu).or_default();
+                g.stay.push((live, loc.placement));
+                g.tainted = true;
+            }
+        }
+    }
+
+    enum Step {
+        Repack { gpu: GpuRef, moves: Vec<(Instance, Placement)> },
+        Migrate {
+            vm: VmId,
+            from: GpuRef,
+            old: Placement,
+            to: GpuRef,
+            new: Placement,
+            cpus: u32,
+            ram_gb: u32,
+        },
+    }
+
+    let mut repacks: Vec<Step> = Vec::new();
+    let mut migrates: Vec<Step> = Vec::new();
+    for (&dest, group) in &groups {
+        if group.incoming.is_empty() && group.stay.iter().all(|(i, n)| i.placement == *n) {
+            // Nothing moves here. Pending reservations need no action
+            // either: the ILP placed them against these same stay
+            // positions, so the blocks are already free.
+            continue;
+        }
+        let stay_cur: BlockMask = group.stay.iter().fold(0, |m, (i, _)| m | i.placement.mask());
+        let moving_out: BlockMask = dc
+            .gpu(dest)
+            .instances()
+            .iter()
+            .filter(|i| inst.prior.contains_key(&i.vm))
+            .filter(|i| !group.stay.iter().any(|(s, _)| s.vm == i.vm))
+            .fold(0, |m, i| m | i.placement.mask());
+        // Blocks held by VMs outside the instance (none on a window
+        // GPU, but translation must not assume that).
+        let extraneous = dc.gpu(dest).occupancy() & !stay_cur & !moving_out;
+
+        // Layout A: stayers keep their current blocks; only incoming
+        // VMs move. Feasible when the pending reservations and the
+        // incoming ILP placements avoid the stayers' *current* blocks
+        // (and each other, and any non-instance resident).
+        let mut occ_a = stay_cur | extraneous;
+        let layout_a_ok = occ_a & group.pending_mask == 0 && {
+            occ_a |= group.pending_mask;
+            group.incoming.iter().all(|(_, _, _, new)| {
+                if occ_a & new.mask() != 0 {
+                    return false;
+                }
+                occ_a |= new.mask();
+                true
+            })
+        };
+        if layout_a_ok {
+            for &(vm, from, old, new) in &group.incoming {
+                let (cpus, ram_gb) = dc.vm_demands(vm).unwrap_or((0, 0));
+                migrates.push(Step::Migrate { vm, from, old, to: dest, new, cpus, ram_gb });
+            }
+            continue;
+        }
+        // Layout B: adopt the ILP's layout wholesale — repack the
+        // stayers, then the incoming placements fit by the solver's
+        // non-overlap constraints. Requires a complete layout (not
+        // tainted) and no extraneous residents in the way.
+        if group.tainted || extraneous & group.pending_mask != 0 {
+            continue;
+        }
+        let mut occ_b = extraneous | group.pending_mask;
+        let layout_b_ok = group
+            .stay
+            .iter()
+            .map(|(_, new)| new)
+            .chain(group.incoming.iter().map(|(_, _, _, new)| new))
+            .all(|new| {
+                if occ_b & new.mask() != 0 {
+                    return false;
+                }
+                occ_b |= new.mask();
+                true
+            });
+        if !layout_b_ok {
+            continue;
+        }
+        let moves: Vec<(Instance, Placement)> = group
+            .stay
+            .iter()
+            .filter(|(i, n)| i.placement != *n)
+            .cloned()
+            .collect();
+        if !moves.is_empty() {
+            repacks.push(Step::Repack { gpu: dest, moves });
+        }
+        for &(vm, from, old, new) in &group.incoming {
+            let (cpus, ram_gb) = dc.vm_demands(vm).unwrap_or((0, 0));
+            migrates.push(Step::Migrate { vm, from, old, to: dest, new, cpus, ram_gb });
+        }
+    }
+
+    // Greedy feasibility rounds over a PlanView: emit every step that
+    // validates against the virtual state, repeat until a full pass
+    // adds nothing (chains resolve across rounds; cycles are dropped).
+    let mut steps = repacks;
+    steps.append(&mut migrates);
+    let mut emitted = vec![false; steps.len()];
+    let mut view = PlanView::new(dc);
+    loop {
+        let mut progressed = false;
+        for i in 0..steps.len() {
+            if emitted[i] {
+                continue;
+            }
+            let feasible = match &steps[i] {
+                Step::Repack { gpu, moves } => {
+                    let freed: BlockMask =
+                        moves.iter().fold(0, |m, (inst, _)| m | inst.placement.mask());
+                    let mut occ = view.occupancy(*gpu) & !freed;
+                    moves.iter().all(|(_, new)| {
+                        if occ & new.mask() != 0 {
+                            return false;
+                        }
+                        occ |= new.mask();
+                        true
+                    })
+                }
+                Step::Migrate { from, to, new, cpus, ram_gb, .. } => {
+                    view.occupancy(*to) & new.mask() == 0
+                        && (from.host == to.host || view.host_fits(to.host, *cpus, *ram_gb))
+                }
+            };
+            if !feasible {
+                continue;
+            }
+            match &steps[i] {
+                Step::Repack { gpu, moves } => {
+                    for (inst, new) in moves {
+                        view.note_move(*gpu, inst.placement, *gpu, *new, 0, 0);
+                    }
+                    plan.push_repack(*gpu, moves.clone());
+                }
+                Step::Migrate { vm, from, old, to, new, cpus, ram_gb } => {
+                    view.note_move(*from, *old, *to, *new, *cpus, *ram_gb);
+                    plan.push_migrate(*vm, *from, *to, *new);
+                }
+            }
+            emitted[i] = true;
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::vm::VmSpec;
+    use crate::cluster::Host;
+    use crate::mig::Profile;
+    use crate::migrate::{MigrationBudget, PlanScope, PlannerStack};
+
+    fn place(dc: &mut DataCenter, id: u64, profile: Profile, r: GpuRef, start: u8) {
+        let vm =
+            VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 10, weight: 1.0 };
+        dc.place(&vm, r, Placement { profile, start });
+    }
+
+    fn pend(id: u64, profile: Profile) -> VmSpec {
+        VmSpec { id, profile, cpus: 2, ram_gb: 4, arrival: 0, departure: 10, weight: 1.0 }
+    }
+
+    /// The §7.1 shape: a stray 1g inside blocks 0–3 blocks the 4g.20gb
+    /// (whose only legal start is 0); the ILP repair relocates the
+    /// stray into the upper half so the pending 4g's layout exists.
+    #[test]
+    fn repairs_the_stray_instance_for_pending_demand() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        let g = GpuRef { host: 0, gpu: 0 };
+        place(&mut dc, 1, Profile::P1g5gb, g, 2);
+        let mut planner = RollingIlp::new(8, 50_000, 24);
+        let mut plan = MigrationPlan::new();
+        let pending = [pend(10, Profile::P4g20gb)];
+        let ctx = PlanCtx {
+            now: 0,
+            trigger: PlanTrigger::Rejection,
+            scope: PlanScope::Cluster,
+            pending: &pending,
+        };
+        planner.plan(&dc, &ctx, &mut plan);
+        assert!(!plan.is_empty(), "repair must relocate the stray 1g");
+        dc.apply_plan(&plan).unwrap();
+        dc.check_integrity().unwrap();
+        // The 4g.20gb now fits: blocks 0..4 are contiguous and free.
+        assert_eq!(dc.gpu(g).occupancy() & 0b0000_1111, 0, "{:08b}", dc.gpu(g).occupancy());
+    }
+
+    #[test]
+    fn zero_window_or_zero_nodes_is_a_no_op() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 1)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 2);
+        let pending = [pend(10, Profile::P4g20gb)];
+        for (w, n) in [(0usize, 50_000usize), (8, 0), (0, 0)] {
+            let mut planner = RollingIlp::new(w, n, 24);
+            let mut plan = MigrationPlan::new();
+            let ctx = PlanCtx {
+                now: 0,
+                trigger: PlanTrigger::Rejection,
+                scope: PlanScope::Cluster,
+                pending: &pending,
+            };
+            planner.plan(&dc, &ctx, &mut plan);
+            assert!(plan.is_empty(), "window={w} nodes={n} must disable the planner");
+        }
+    }
+
+    #[test]
+    fn tick_cadence_gates_periodic_runs() {
+        // Two half-used GPUs: the tick-driven round consolidates onto
+        // one (the active-hardware objective), the cadence silences the
+        // next 24 h even as the cluster re-fragments.
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let g0 = GpuRef { host: 0, gpu: 0 };
+        let g1 = GpuRef { host: 0, gpu: 1 };
+        place(&mut dc, 1, Profile::P1g5gb, g0, 0);
+        place(&mut dc, 2, Profile::P1g5gb, g1, 0);
+        let mut planner = RollingIlp::new(8, 50_000, 24);
+        let tick = |planner: &mut RollingIlp, dc: &DataCenter, now: Time| {
+            let mut plan = MigrationPlan::new();
+            let ctx = PlanCtx {
+                now,
+                trigger: PlanTrigger::Tick,
+                scope: PlanScope::Cluster,
+                pending: &[],
+            };
+            planner.plan(dc, &ctx, &mut plan);
+            plan
+        };
+        // Hour 1: first tick runs and consolidates onto one GPU.
+        let p1 = tick(&mut planner, &dc, HOUR);
+        assert!(!p1.is_empty(), "first tick should consolidate the two strays");
+        dc.apply_plan(&p1).unwrap();
+        let emptied = if dc.gpu(g0).is_empty() { g0 } else { g1 };
+        assert!(dc.gpu(emptied).is_empty(), "one GPU should have been vacated");
+        // Hour 2: inside the 24 h period — silent even when the fleet
+        // fragments again.
+        place(&mut dc, 3, Profile::P1g5gb, emptied, 0);
+        assert!(tick(&mut planner, &dc, 2 * HOUR).is_empty(), "period not yet elapsed");
+        // Hour 25: due again.
+        assert!(!tick(&mut planner, &dc, 25 * HOUR).is_empty());
+    }
+
+    #[test]
+    fn planner_runs_are_deterministic() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 4);
+        place(&mut dc, 2, Profile::P2g10gb, GpuRef { host: 0, gpu: 1 }, 2);
+        place(&mut dc, 3, Profile::P1g5gb, GpuRef { host: 0, gpu: 1 }, 6);
+        let pending = [pend(10, Profile::P4g20gb), pend(11, Profile::P2g10gb)];
+        let run = || {
+            let mut planner = RollingIlp::new(8, 5_000, 24);
+            let mut plan = MigrationPlan::new();
+            let ctx = PlanCtx {
+                now: 0,
+                trigger: PlanTrigger::Rejection,
+                scope: PlanScope::Cluster,
+                pending: &pending,
+            };
+            planner.plan(&dc, &ctx, &mut plan);
+            plan
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same state + same budget must plan byte-identically");
+    }
+
+    /// The plan a `RollingIlp` round produces must apply without the
+    /// stack's rollback path ever firing — the PlanView greedy rounds
+    /// are exactly the validation `apply_plan` re-runs.
+    #[test]
+    fn stack_applies_ilp_plans_transactionally() {
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 4);
+        place(&mut dc, 2, Profile::P1g5gb, GpuRef { host: 0, gpu: 1 }, 2);
+        let mut stack = PlannerStack::new(MigrationBudget::unlimited())
+            .with(Box::new(RollingIlp::new(8, 50_000, 24)));
+        let mut events = Vec::new();
+        let pending = [pend(10, Profile::P4g20gb)];
+        let n = stack.run_with_pending(
+            &mut dc,
+            HOUR,
+            PlanTrigger::Rejection,
+            PlanScope::Cluster,
+            &pending,
+            &mut events,
+        );
+        assert_eq!(n as usize, events.len());
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn planner_ignores_unavailable_gpus() {
+        use crate::cluster::HealthState;
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        place(&mut dc, 1, Profile::P1g5gb, GpuRef { host: 0, gpu: 0 }, 4);
+        dc.set_gpu_health(GpuRef { host: 0, gpu: 0 }, HealthState::Draining);
+        dc.set_gpu_health(GpuRef { host: 0, gpu: 1 }, HealthState::Failed { until: 100 });
+        let mut planner = RollingIlp::new(8, 50_000, 24);
+        let mut plan = MigrationPlan::new();
+        let pending = [pend(10, Profile::P4g20gb)];
+        let ctx = PlanCtx {
+            now: 0,
+            trigger: PlanTrigger::Rejection,
+            scope: PlanScope::Cluster,
+            pending: &pending,
+        };
+        planner.plan(&dc, &ctx, &mut plan);
+        assert!(plan.is_empty(), "no schedulable GPU may be planned against");
+    }
+}

@@ -74,7 +74,15 @@
 //!   thread count at any shard count.
 //! * [`ilp`] — the paper's multi-objective ILP (Eq. 3–26) plus an exact
 //!   in-house MILP solver (dense simplex + branch & bound) used to
-//!   validate the heuristics on small instances.
+//!   validate the heuristics on small instances. [`ilp::online`] takes
+//!   the formalism online: [`ilp::RollingIlp`] is a `MigrationPlanner`
+//!   that on a cadence (and on rejection bursts) extracts the most
+//!   fragmented K GPUs per model plus the interval's pending rejects as
+//!   a bounded instance, solves it under a deterministic
+//!   branch-and-bound node budget, and emits a transactional repair
+//!   plan (registry name `ilp-repair`, so `mcc+ilp-repair` composes);
+//!   [`ilp::GapMeter`] reuses the extraction to report each policy's
+//!   optimality gap against the bounded ILP bound.
 //! * [`runtime`] *(feature `xla`)* — the PJRT/XLA runtime that loads the
 //!   AOT-compiled batched configuration scorer
 //!   (`artifacts/cc_scorer.hlo.txt`) behind the [`policies::CcScorer`]
@@ -234,6 +242,32 @@
 //! * Registry names compose: `mcc+defrag`, `bf+consolidate`,
 //!   `ff+defrag+frag-gradient`; CLI `--planners`/`--migration-budget`
 //!   on `simulate`/`sweep` reach the same machinery.
+//!
+//! ## Migration note (online ILP repair + optimality gap)
+//!
+//! The ILP layer used to be offline-only (small-shape validation).
+//! Code written against that surface maps as follows:
+//!
+//! * `IlpSolver::solve()` remains the unlimited offline reference;
+//!   `IlpSolver::solve_limited(n)` is the node-budgeted online entry
+//!   point. **Zero divergence warning:** `Milp::solve(0)` means
+//!   *unlimited*, while a zero `--ilp-nodes`/`--ilp-window` disables
+//!   [`ilp::RollingIlp`] entirely (an online planner must never run
+//!   unbounded); the planner guards the zero before the solver sees it.
+//! * The planner registry gained `ilp-repair`
+//!   (`policies::planned::planner_from_name`); CLI knobs `--ilp-window
+//!   K --ilp-nodes N --ilp-period HOURS` ride on
+//!   [`policies::PolicyConfig`] / `report::experiments::ExperimentConfig`.
+//!   The sharded router's rebalance pass can swap its sole-tenant scan
+//!   for any registry planner via `--shard-rebalance-planner NAME`
+//!   (`sim::ShardedCore::set_rebalance_planner`).
+//! * `--gap-every HOURS` wraps every policy in an [`ilp::GapMeter`]:
+//!   pre-batch bounded ILP bound vs achieved weighted acceptance,
+//!   surfaced as `SimResult::gap_samples` / `gap_mean()` / `gap_max()`,
+//!   the `gap%` column of `repro sweep`, and
+//!   `report::tables::optimality_gap`. With the meter off (default) and
+//!   the planner disabled, streams are byte-identical to the
+//!   pre-online-ILP crate (locked in `rust/tests/decision_api.rs`).
 //!
 //! ## Migration note (sharded fleet)
 //!

@@ -71,13 +71,15 @@ fn print_help() {
                      [--heavy-frac 0.3] [--consolidation HOURS] [--trace FILE.csv]\n\
                      [--gpu-models a100-40:0.7,h100-80:0.3] [--planners defrag,consolidate]\n\
                      [--migration-budget N[:per-vm]] [--shards N] [--shard-threads N]\n\
-                     [--shard-rebalance HOURS] [ops flags] [--quick] [--json FILE]\n\
+                     [--shard-rebalance HOURS] [--shard-rebalance-planner NAME]\n\
+                     [--ilp-window K] [--ilp-nodes N] [--ilp-period HOURS]\n\
+                     [--gap-every HOURS] [ops flags] [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
            sweep     [--seeds 1,2,3] [--policies ff,grmu,mcc+defrag] [--threads N]\n\
                      [--mix ..] [--duration-mu F] [--gpu-models a30:0.3,a100-40:0.7]\n\
-                     [--planners ..] [--migration-budget N[:per-vm]]\n\
+                     [--planners ..] [--migration-budget N[:per-vm]] [--gap-every HOURS]\n\
                      [--quick] [--json FILE]   parallel seeds × policies sweep\n\
                      --mtbf-axis 0,500,250 [--drain-axis 0,2]   availability sweep instead\n\
            trace     [--seed N] [--out FILE.csv]      dump the synthetic trace\n\
@@ -110,8 +112,10 @@ fn print_help() {
          or via --planners; budgeted by --migration-budget):\n\
            {:<14} Algorithm 4: re-pack the most fragmented GPU on rejection\n\
            {:<14} Algorithm 5: merge half-full single-profile GPU pairs periodically\n\
-           {:<14} drain the most fragmented GPUs when mean fragmentation crosses a threshold",
-        "defrag", "consolidate", "frag-gradient"
+           {:<14} drain the most fragmented GPUs when mean fragmentation crosses a threshold\n\
+           {:<14} bounded exact repair of the most fragmented window per model\n\
+           {:<14} (--ilp-window/--ilp-nodes/--ilp-period; 0 nodes or window = off)",
+        "defrag", "consolidate", "frag-gradient", "ilp-repair", ""
     );
 }
 
@@ -204,6 +208,20 @@ fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
     cfg.shard_threads = args.num_or("shard-threads", cfg.shard_threads);
     cfg.shard_rebalance_hours =
         args.num_or("shard-rebalance", cfg.shard_rebalance_hours);
+    cfg.ilp_window = args.num_or("ilp-window", cfg.ilp_window);
+    cfg.ilp_nodes = args.num_or("ilp-nodes", cfg.ilp_nodes);
+    cfg.ilp_period_hours = args.num_or("ilp-period", cfg.ilp_period_hours);
+    cfg.gap_check_hours = args.num_or("gap-every", cfg.gap_check_hours);
+    if let Some(p) = args.get("shard-rebalance-planner") {
+        // Validate through the registry: exactly the names accepted as
+        // `+` suffixes are accepted here.
+        if let Err(e) = PolicyRegistry::standard().build(&format!("ff+{p}"), &cfg.policy_config())
+        {
+            eprintln!("--shard-rebalance-planner: {e}");
+            std::process::exit(2);
+        }
+        cfg.shard_rebalance_planner = Some(p.to_string());
+    }
     cfg.ops.blast_radius = args.num_or("blast-radius", cfg.ops.blast_radius);
     cfg.ops.blast_hosts = args.num_or("blast-hosts", cfg.ops.blast_hosts);
     cfg
@@ -316,6 +334,9 @@ fn cmd_simulate(args: &Args) {
     if cfg.ops.enabled() || cfg.queue.enabled() {
         println!("{}", tables::ops_summary(std::slice::from_ref(&result)));
     }
+    if !result.gap_samples.is_empty() {
+        println!("{}", tables::optimality_gap(std::slice::from_ref(&result)));
+    }
     write_json(args, &result.to_json());
 }
 
@@ -349,12 +370,18 @@ fn cmd_sweep(args: &Args) {
     let t0 = std::time::Instant::now();
     let runs = experiments::sweep(&cfg, &seeds, &policies, threads);
     println!(
-        "{:<8} {:<16} {:>12} {:>16} {:>8} {:>8} {:>9} {:>7} {:>9}",
-        "seed", "policy", "acceptance", "avg active hw", "intra", "inter", "mig cost", "mig%", "wall"
+        "{:<8} {:<16} {:>12} {:>16} {:>8} {:>8} {:>9} {:>7} {:>7} {:>9}",
+        "seed", "policy", "acceptance", "avg active hw", "intra", "inter", "mig cost", "mig%",
+        "gap%", "wall"
     );
     for run in &runs {
+        // `-` when the run carried no gap meter (--gap-every 0).
+        let gap = match run.result.gap_mean() {
+            Some(g) => format!("{g:.2}"),
+            None => "-".to_string(),
+        };
         println!(
-            "{:<8} {:<16} {:>12.4} {:>16.4} {:>8} {:>8} {:>9} {:>6.2}% {:>8.2}s",
+            "{:<8} {:<16} {:>12.4} {:>16.4} {:>8} {:>8} {:>9} {:>6.2}% {:>7} {:>8.2}s",
             run.seed,
             run.policy,
             run.result.overall_acceptance(),
@@ -363,6 +390,7 @@ fn cmd_sweep(args: &Args) {
             run.result.inter_migrations(),
             run.result.total_migration_cost(),
             100.0 * run.result.migrated_vm_share(),
+            gap,
             run.result.wall_seconds,
         );
     }
@@ -372,6 +400,11 @@ fn cmd_sweep(args: &Args) {
             "{policy:<8} acceptance {acc_mean:.4} ± {acc_std:.4}   \
              avg active hw {act_mean:.4} ± {act_std:.4}"
         );
+    }
+    if runs.iter().any(|r| !r.result.gap_samples.is_empty()) {
+        let results: Vec<grmu::sim::SimResult> =
+            runs.iter().map(|r| r.result.clone()).collect();
+        println!("\n{}", tables::optimality_gap(&results));
     }
     eprintln!("sweep wall time: {:.2}s", t0.elapsed().as_secs_f64());
     let json = Json::arr(

@@ -167,7 +167,12 @@ mod tests {
     /// performed events.
     fn consolidate(dc: &mut DataCenter, scope: &BTreeSet<GpuRef>) -> Vec<MigrationEvent> {
         let mut plan = MigrationPlan::new();
-        let ctx = PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Set(scope) };
+        let ctx = PlanCtx {
+            now: 0,
+            trigger: PlanTrigger::Tick,
+            scope: PlanScope::Set(scope),
+            pending: &[],
+        };
         plan_consolidation(dc, &ctx, &mut plan);
         dc.apply_plan(&plan).expect("planned consolidation must apply");
         let mut events = Vec::new();
@@ -339,14 +344,24 @@ mod tests {
         // Hour 1 tick: 1 HOUR < 24 — not due yet.
         planner.plan(
             &dc,
-            &PlanCtx { now: HOUR, trigger: PlanTrigger::Tick, scope: PlanScope::Set(&scope) },
+            &PlanCtx {
+                now: HOUR,
+                trigger: PlanTrigger::Tick,
+                scope: PlanScope::Set(&scope),
+                pending: &[],
+            },
             &mut plan,
         );
         assert!(plan.is_empty());
         // Hour 24 tick: due.
         planner.plan(
             &dc,
-            &PlanCtx { now: 24 * HOUR, trigger: PlanTrigger::Tick, scope: PlanScope::Set(&scope) },
+            &PlanCtx {
+                now: 24 * HOUR,
+                trigger: PlanTrigger::Tick,
+                scope: PlanScope::Set(&scope),
+                pending: &[],
+            },
             &mut plan,
         );
         assert_eq!(plan.num_moves(), 1);
@@ -358,6 +373,7 @@ mod tests {
                 now: 72 * HOUR,
                 trigger: PlanTrigger::Rejection,
                 scope: PlanScope::Set(&scope),
+                pending: &[],
             },
             &mut plan,
         );

@@ -145,7 +145,8 @@ impl MigrationPlanner for DefragOnReject {
 pub fn defragment(dc: &mut DataCenter, scope: PlanScope, use_index: bool) -> Vec<MigrationEvent> {
     let mut planner = DefragOnReject::new(use_index);
     let mut plan = MigrationPlan::new();
-    planner.plan(dc, &PlanCtx { now: 0, trigger: PlanTrigger::Rejection, scope }, &mut plan);
+    let ctx = PlanCtx { now: 0, trigger: PlanTrigger::Rejection, scope, pending: &[] };
+    planner.plan(dc, &ctx, &mut plan);
     let mut events = Vec::new();
     if dc.apply_plan(&plan).is_ok() {
         plan.push_events_into(&mut events);
@@ -347,13 +348,23 @@ mod tests {
         let mut plan = MigrationPlan::new();
         planner.plan(
             &dc,
-            &PlanCtx { now: 0, trigger: PlanTrigger::Tick, scope: PlanScope::Cluster },
+            &PlanCtx {
+                now: 0,
+                trigger: PlanTrigger::Tick,
+                scope: PlanScope::Cluster,
+                pending: &[],
+            },
             &mut plan,
         );
         assert!(plan.is_empty());
         planner.plan(
             &dc,
-            &PlanCtx { now: 0, trigger: PlanTrigger::Rejection, scope: PlanScope::Cluster },
+            &PlanCtx {
+                now: 0,
+                trigger: PlanTrigger::Rejection,
+                scope: PlanScope::Cluster,
+                pending: &[],
+            },
             &mut plan,
         );
         assert_eq!(plan.num_moves(), 1);

@@ -160,7 +160,7 @@ mod tests {
     }
 
     fn ctx(trigger: PlanTrigger) -> PlanCtx<'static> {
-        PlanCtx { now: 0, trigger, scope: PlanScope::Cluster }
+        PlanCtx { now: 0, trigger, scope: PlanScope::Cluster, pending: &[] }
     }
 
     /// Checkerboard GPU 0 (1g at 1, 3, 5) + nearly free GPU 1: the drain

@@ -62,7 +62,7 @@ pub use plan::{MigrationPlan, PlanError, PlanStep, PlanView};
 pub use stack::PlannerStack;
 
 use crate::cluster::vm::{Time, VmId};
-use crate::cluster::{DataCenter, GpuRef};
+use crate::cluster::{DataCenter, GpuRef, VmSpec};
 use crate::mig::GpuModel;
 use std::collections::BTreeSet;
 use std::fmt;
@@ -224,6 +224,13 @@ pub struct PlanCtx<'a> {
     pub trigger: PlanTrigger,
     /// The GPUs the planner may touch.
     pub scope: PlanScope<'a>,
+    /// VMs the triggering batch failed to place (empty on
+    /// [`PlanTrigger::Tick`] rounds and for callers that don't track
+    /// rejects). Plans can only move *resident* VMs — pending specs are
+    /// demand hints: a repair planner (`ilp::online::RollingIlp`) folds
+    /// them into its objective so the repair frees contiguous space the
+    /// rejects (or future arrivals like them) can use.
+    pub pending: &'a [VmSpec],
 }
 
 /// A migration planner: inspects the cluster read-only and appends

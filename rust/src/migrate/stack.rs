@@ -90,6 +90,21 @@ impl PlannerStack {
         scope: PlanScope,
         events: &mut Vec<MigrationEvent>,
     ) -> u32 {
+        self.run_with_pending(dc, now, trigger, scope, &[], events)
+    }
+
+    /// [`PlannerStack::run`] with the triggering batch's unplaced VMs
+    /// threaded through as [`PlanCtx::pending`] demand hints. `run` is
+    /// this with an empty slice.
+    pub fn run_with_pending(
+        &mut self,
+        dc: &mut DataCenter,
+        now: Time,
+        trigger: PlanTrigger,
+        scope: PlanScope,
+        pending: &[crate::cluster::VmSpec],
+        events: &mut Vec<MigrationEvent>,
+    ) -> u32 {
         if self.planners.is_empty() {
             return 0;
         }
@@ -106,7 +121,7 @@ impl PlannerStack {
                 break;
             }
             self.plan.clear();
-            let ctx = PlanCtx { now, trigger, scope };
+            let ctx = PlanCtx { now, trigger, scope, pending };
             planner.plan(dc, &ctx, &mut self.plan);
             if limited {
                 self.plan.truncate_to_budget(&self.budget, self.interval_moves, &self.vm_moves);

@@ -399,6 +399,14 @@ pub trait Policy: Send {
         self.drain_migrations_into(&mut out);
         out
     }
+
+    /// Drain the optimality-gap samples (percent, one per sampled
+    /// interval) recorded since the last call. Only the
+    /// [`crate::ilp::online::GapMeter`] wrapper produces any; the
+    /// default no-op serves everyone else. Wrappers ([`Planned`])
+    /// forward so the meter is reachable wherever it sits in the
+    /// composition.
+    fn drain_gap_samples_into(&mut self, _out: &mut Vec<f64>) {}
 }
 
 /// Visit placement candidates for `profile` in `globalIndex` order,
@@ -624,6 +632,20 @@ pub struct PolicyConfig {
     pub migration_budget: MigrationBudget,
     /// Mean-fragmentation trigger for the `frag-gradient` planner.
     pub frag_threshold: f64,
+    /// `ilp-repair` planner: most-fragmented GPUs per model in the
+    /// extraction window ([`crate::ilp::online::RollingIlp`]). `0`
+    /// disables the planner (byte-identical to not composing it).
+    pub ilp_window: usize,
+    /// `ilp-repair` planner: branch-and-bound node budget per solver
+    /// stage. `0` disables the planner.
+    pub ilp_nodes: usize,
+    /// `ilp-repair` planner: tick cadence in hours (rejection bursts
+    /// plan regardless of the cadence).
+    pub ilp_period_hours: u64,
+    /// Optimality-gap sampling cadence in hours
+    /// ([`crate::ilp::online::GapMeter`]); `0` (the default) disables
+    /// gap metering entirely — the built policy is the unwrapped one.
+    pub gap_check_hours: u64,
 }
 
 impl Default for PolicyConfig {
@@ -636,6 +658,10 @@ impl Default for PolicyConfig {
             planners: Vec::new(),
             migration_budget: MigrationBudget::unlimited(),
             frag_threshold: 1.0,
+            ilp_window: 8,
+            ilp_nodes: 20_000,
+            ilp_period_hours: 24,
+            gap_check_hours: 0,
         }
     }
 }
@@ -683,6 +709,26 @@ impl PolicyConfig {
 
     pub fn frag_threshold(mut self, threshold: f64) -> PolicyConfig {
         self.frag_threshold = threshold;
+        self
+    }
+
+    pub fn ilp_window(mut self, window: usize) -> PolicyConfig {
+        self.ilp_window = window;
+        self
+    }
+
+    pub fn ilp_nodes(mut self, nodes: usize) -> PolicyConfig {
+        self.ilp_nodes = nodes;
+        self
+    }
+
+    pub fn ilp_period_hours(mut self, hours: u64) -> PolicyConfig {
+        self.ilp_period_hours = hours;
+        self
+    }
+
+    pub fn gap_check_hours(mut self, hours: u64) -> PolicyConfig {
+        self.gap_check_hours = hours;
         self
     }
 }
@@ -858,22 +904,30 @@ impl PolicyRegistry {
                 known: self.names(),
                 planner: None,
             })?;
-        let policy = (entry.build)(cfg);
+        let mut policy = (entry.build)(cfg);
         let mut planner_names: Vec<String> = parts.map(str::to_string).collect();
         planner_names.extend(cfg.planners.iter().map(|p| p.trim().to_ascii_lowercase()));
-        if planner_names.is_empty() {
-            return Ok(policy);
+        if !planner_names.is_empty() {
+            let mut stack = crate::migrate::PlannerStack::new(cfg.migration_budget);
+            for pn in &planner_names {
+                let planner = planned::planner_from_name(pn, cfg).ok_or_else(|| UnknownPolicy {
+                    requested: name.to_string(),
+                    known: self.names(),
+                    planner: Some(pn.clone()),
+                })?;
+                stack.push(planner);
+            }
+            policy = Box::new(Planned::new(policy, stack));
         }
-        let mut stack = crate::migrate::PlannerStack::new(cfg.migration_budget);
-        for pn in &planner_names {
-            let planner = planned::planner_from_name(pn, cfg).ok_or_else(|| UnknownPolicy {
-                requested: name.to_string(),
-                known: self.names(),
-                planner: Some(pn.clone()),
-            })?;
-            stack.push(planner);
+        if cfg.gap_check_hours > 0 {
+            policy = Box::new(crate::ilp::online::GapMeter::new(
+                policy,
+                cfg.gap_check_hours,
+                cfg.ilp_window,
+                cfg.ilp_nodes,
+            ));
         }
-        Ok(Box::new(Planned::new(policy, stack)))
+        Ok(policy)
     }
 }
 

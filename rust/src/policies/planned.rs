@@ -22,7 +22,7 @@ use crate::migrate::{
 
 /// Planner names accepted as `+` suffixes on registry policy names and
 /// in `--planners` lists, in documentation order.
-pub const PLANNER_NAMES: [&str; 3] = ["defrag", "consolidate", "frag-gradient"];
+pub const PLANNER_NAMES: [&str; 4] = ["defrag", "consolidate", "frag-gradient", "ilp-repair"];
 
 /// Build a planner by [`PLANNER_NAMES`] name from the shared policy
 /// configuration. `None` for unknown names.
@@ -40,6 +40,11 @@ pub(crate) fn planner_from_name(
             Some(Box::new(PairwiseConsolidate::every(cfg.consolidation_hours.unwrap_or(24))))
         }
         "frag-gradient" => Some(Box::new(FragGradient::new(cfg.frag_threshold, cfg.use_index))),
+        "ilp-repair" => Some(Box::new(crate::ilp::online::RollingIlp::new(
+            cfg.ilp_window,
+            cfg.ilp_nodes,
+            cfg.ilp_period_hours,
+        ))),
         _ => None,
     }
 }
@@ -79,9 +84,25 @@ impl Policy for Planned {
         self.inner.place_batch_into(dc, vms, ctx);
         // Any rejection in the batch fires the rejection-triggered
         // planners (Algorithm 4's defragmentation condition), over the
-        // whole cluster — composed policies have no baskets.
-        if ctx.decisions.iter().any(|d| !d.is_placed()) {
-            self.stack.run(dc, ctx.now, PlanTrigger::Rejection, PlanScope::Cluster, &mut self.events);
+        // whole cluster — composed policies have no baskets. The
+        // rejected specs ride along as demand hints so planners that
+        // understand them (`ilp-repair`) can lay the cluster out for
+        // exactly the shapes that just bounced.
+        let rejected: Vec<VmSpec> = vms
+            .iter()
+            .zip(ctx.decisions.iter())
+            .filter(|(_, d)| !d.is_placed())
+            .map(|(v, _)| *v)
+            .collect();
+        if !rejected.is_empty() {
+            self.stack.run_with_pending(
+                dc,
+                ctx.now,
+                PlanTrigger::Rejection,
+                PlanScope::Cluster,
+                &rejected,
+                &mut self.events,
+            );
         }
     }
 
@@ -97,6 +118,10 @@ impl Policy for Planned {
     fn drain_migrations_into(&mut self, out: &mut Vec<MigrationEvent>) {
         self.inner.drain_migrations_into(out);
         out.append(&mut self.events);
+    }
+
+    fn drain_gap_samples_into(&mut self, out: &mut Vec<f64>) {
+        self.inner.drain_gap_samples_into(out);
     }
 }
 

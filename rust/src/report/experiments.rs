@@ -48,6 +48,23 @@ pub struct ExperimentConfig {
     /// Cross-shard consolidation period in hours (CLI
     /// `--shard-rebalance`, `0` = off). Runs under `migration_budget`.
     pub shard_rebalance_hours: u64,
+    /// Registry planner driving the cross-shard rebalancer's evacuation
+    /// nominations (CLI `--shard-rebalance-planner`, `None` = the
+    /// built-in sole-tenant scan). Only consulted when
+    /// `shard_rebalance_hours > 0`.
+    pub shard_rebalance_planner: Option<String>,
+    /// `ilp-repair` extraction window: most-fragmented GPUs per model
+    /// (CLI `--ilp-window`, `0` disables the planner).
+    pub ilp_window: usize,
+    /// Branch-and-bound node budget per ILP solver stage (CLI
+    /// `--ilp-nodes`, `0` disables the planner).
+    pub ilp_nodes: usize,
+    /// `ilp-repair` periodic-run cadence in hours (CLI `--ilp-period`).
+    pub ilp_period_hours: u64,
+    /// Optimality-gap sampling cadence in hours (CLI `--gap-every`,
+    /// `0` = off). Wraps every built policy in a
+    /// [`crate::ilp::online::GapMeter`].
+    pub gap_check_hours: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -64,6 +81,11 @@ impl Default for ExperimentConfig {
             shards: 1,
             shard_threads: 0,
             shard_rebalance_hours: 0,
+            shard_rebalance_planner: None,
+            ilp_window: 8,
+            ilp_nodes: 20_000,
+            ilp_period_hours: 24,
+            gap_check_hours: 0,
         }
     }
 }
@@ -85,6 +107,10 @@ impl ExperimentConfig {
             .consolidation_hours(self.consolidation_hours)
             .planners(self.planners.iter().cloned())
             .migration_budget(self.migration_budget)
+            .ilp_window(self.ilp_window)
+            .ilp_nodes(self.ilp_nodes)
+            .ilp_period_hours(self.ilp_period_hours)
+            .gap_check_hours(self.gap_check_hours)
     }
 }
 
@@ -180,6 +206,8 @@ pub fn run_sharded_trace(
     sim.shard_options.seed = cfg.trace.seed;
     sim.shard_options.rebalance_every = cfg.shard_rebalance_hours;
     sim.shard_options.budget = cfg.migration_budget;
+    sim.shard_options.rebalance_planner = cfg.shard_rebalance_planner.clone();
+    sim.planner_config = cfg.policy_config();
     sim.run()
 }
 
@@ -741,6 +769,23 @@ mod tests {
                 "{label}: breakdown does not sum under faults"
             );
         }
+    }
+
+    #[test]
+    fn gap_reporting_flows_through_runs() {
+        let (w, cfg) = quick_workload();
+        let cfg = ExperimentConfig { gap_check_hours: 48, ilp_nodes: 2_000, ..cfg };
+        let r = run_once(&w, "ff", &cfg, true);
+        assert!(!r.gap_samples.is_empty(), "the meter must sample on its cadence");
+        assert!(r.gap_samples.iter().all(|g| (0.0..=100.0).contains(g)), "{:?}", r.gap_samples);
+        assert!(r.gap_mean().is_some());
+        // The wrapper is transparent to everything but the samples.
+        let off = ExperimentConfig { gap_check_hours: 0, ..cfg.clone() };
+        let plain = run_once(&w, "ff", &off, true);
+        assert_eq!(plain.policy, r.policy);
+        assert_eq!(plain.accepted, r.accepted);
+        assert_eq!(plain.samples, r.samples);
+        assert!(plain.gap_samples.is_empty());
     }
 
     #[test]

@@ -371,6 +371,32 @@ pub fn ops_summary(results: &[SimResult]) -> String {
     out
 }
 
+/// Optimality gap — per-policy summary of the online ILP cross-check
+/// ([`crate::ilp::online::GapMeter`], `--gap-every`): how many windows
+/// were sampled and how far the policy fell short of the bounded exact
+/// optimum on them, in percent of the ILP's weighted acceptance.
+/// Policies run without the meter render a `-` row.
+pub fn optimality_gap(results: &[SimResult]) -> String {
+    let mut out = String::from("Optimality gap — policy vs bounded ILP on sampled windows\n");
+    out.push_str(&format!(
+        "{:>12} {:>8} {:>10} {:>10}\n",
+        "policy", "samples", "mean gap", "max gap"
+    ));
+    for r in results {
+        match (r.gap_mean(), r.gap_max()) {
+            (Some(mean), Some(max)) => out.push_str(&format!(
+                "{:>12} {:>8} {:>9.2}% {:>9.2}%\n",
+                r.policy,
+                r.gap_samples.len(),
+                mean,
+                max
+            )),
+            _ => out.push_str(&format!("{:>12} {:>8} {:>10} {:>10}\n", r.policy, 0, "-", "-")),
+        }
+    }
+    out
+}
+
 /// JSON export of a policy-comparison run (used by `--json`).
 pub fn comparison_json(results: &[SimResult]) -> Json {
     Json::arr(results.iter().map(|r| r.to_json()).collect())
@@ -416,6 +442,7 @@ mod tests {
             preempted: 0,
             queue_delays: Vec::new(),
             availability: 1.0,
+            gap_samples: Vec::new(),
             wall_seconds: 0.0,
         }
     }
@@ -433,11 +460,25 @@ mod tests {
             fleet_breakdown(&results),
             migration_overhead(&results),
             ops_summary(&results),
+            optimality_gap(&results),
         ] {
             assert!(text.contains("FF"));
             assert!(text.contains("GRMU"));
             assert!(text.lines().count() >= 3);
         }
+    }
+
+    #[test]
+    fn optimality_gap_rows_summarize_samples() {
+        let mut metered = fake("FF", 5);
+        metered.gap_samples = vec![0.0, 3.0, 1.5];
+        let unmetered = fake("GRMU", 8);
+        let text = optimality_gap(&[metered, unmetered]);
+        assert!(text.contains("1.50%"), "{text}");
+        assert!(text.contains("3.00%"), "{text}");
+        // A run without the meter renders a dash row, not zeros.
+        let dash = text.lines().find(|l| l.contains("GRMU")).unwrap();
+        assert!(dash.contains('-'), "{text}");
     }
 
     #[test]

@@ -105,6 +105,9 @@ pub struct EventCore {
     preempted: u64,
     /// Queueing delay (seconds) of each request served from the queue.
     queue_delays: Vec<u64>,
+    /// Optimality-gap samples drained from the policy (only a
+    /// gap-metered policy produces any).
+    gap_samples: Vec<f64>,
     /// GPU-interval availability accumulator: (schedulable, total).
     gpu_intervals_available: u64,
     gpu_intervals_total: u64,
@@ -147,6 +150,7 @@ impl EventCore {
             interrupted: 0,
             preempted: 0,
             queue_delays: Vec::new(),
+            gap_samples: Vec::new(),
             gpu_intervals_available: 0,
             gpu_intervals_total: 0,
         }
@@ -241,6 +245,9 @@ impl EventCore {
         for ev in &self.migrations[start..] {
             self.migration_cost[ev.kind.index()] += ev.cost();
         }
+        // Piggy-back the gap drain on the same cadence: a no-op for
+        // every policy except a gap-metered wrapper.
+        self.policy.drain_gap_samples_into(&mut self.gap_samples);
     }
 
     /// Release departures due by `t` (inclusive), oldest first, then
@@ -732,6 +739,7 @@ impl EventCore {
             preempted: self.preempted,
             queue_delays: self.queue_delays,
             availability,
+            gap_samples: self.gap_samples,
             wall_seconds,
         }
     }

@@ -69,6 +69,10 @@ pub struct SimResult {
     /// Mean per-interval fraction of schedulable GPUs (1.0 on a
     /// fault-free run or with zero sampled intervals).
     pub availability: f64,
+    /// Optimality-gap samples (percent), one per metered interval —
+    /// produced only when the run enables gap checking
+    /// ([`crate::ilp::online::GapMeter`]); empty otherwise.
+    pub gap_samples: Vec<f64>,
     /// Wall-time of the run (for perf reporting), seconds.
     pub wall_seconds: f64,
 }
@@ -260,6 +264,20 @@ impl SimResult {
         self.queue_delays.iter().sum::<u64>() as f64 / self.queue_delays.len() as f64
     }
 
+    /// Mean optimality gap (percent) across the run's samples; `None`
+    /// when the run collected none (gap metering disabled).
+    pub fn gap_mean(&self) -> Option<f64> {
+        if self.gap_samples.is_empty() {
+            return None;
+        }
+        Some(self.gap_samples.iter().sum::<f64>() / self.gap_samples.len() as f64)
+    }
+
+    /// Worst sampled optimality gap (percent); `None` without samples.
+    pub fn gap_max(&self) -> Option<f64> {
+        self.gap_samples.iter().copied().fold(None, |acc, g| Some(acc.map_or(g, |a: f64| a.max(g))))
+    }
+
     /// The profile keys a report should show for this result: the six
     /// A100-40 profiles (the paper's fixed column set) plus any other
     /// catalog key that saw requests, in dense order.
@@ -311,6 +329,14 @@ impl SimResult {
                     ("queue_delay_p99", self.queue_delay_p99().into()),
                     ("queue_delay_mean", self.queue_delay_mean().into()),
                     ("availability", self.availability.into()),
+                ]),
+            ),
+            (
+                "optimality_gap",
+                Json::obj(vec![
+                    ("samples", self.gap_samples.len().into()),
+                    ("mean_pct", self.gap_mean().unwrap_or(0.0).into()),
+                    ("max_pct", self.gap_max().unwrap_or(0.0).into()),
                 ]),
             ),
             (
@@ -433,6 +459,7 @@ mod tests {
             preempted: 0,
             queue_delays: Vec::new(),
             availability: 1.0,
+            gap_samples: Vec::new(),
             wall_seconds: 0.1,
         }
     }
@@ -537,6 +564,21 @@ mod tests {
         assert_eq!(r.queue_delay_p50(), 200);
         assert_eq!(r.queue_delay_p99(), 400);
         assert!((r.queue_delay_mean() - 250.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_sample_rollups() {
+        let mut r = result();
+        assert_eq!(r.gap_mean(), None, "no samples without gap metering");
+        assert_eq!(r.gap_max(), None);
+        r.gap_samples = vec![0.0, 3.0, 1.5];
+        assert!((r.gap_mean().unwrap() - 1.5).abs() < 1e-12);
+        assert!((r.gap_max().unwrap() - 3.0).abs() < 1e-12);
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
+        let gap = parsed.get("optimality_gap").unwrap();
+        assert_eq!(gap.get("samples").unwrap().as_f64(), Some(3.0));
+        assert_eq!(gap.get("max_pct").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

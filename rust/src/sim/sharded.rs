@@ -42,17 +42,26 @@
 //! ([`ShardedCore::set_rebalance`]) walking shard pairs in fixed order
 //! under the existing [`MigrationBudget`], moving sole-tenant GIs onto
 //! already-active GPUs of the receiving shard via
-//! [`EventCore::transfer_out`]/[`EventCore::adopt`].
+//! [`EventCore::transfer_out`]/[`EventCore::adopt`]. The donor-side
+//! candidate heuristic is pluggable: [`ShardedCore::set_rebalance_planner`]
+//! swaps the sole-tenant scan for any registry migration planner
+//! (`defrag`, `consolidate`, `ilp-repair`, ...) consulted per shard
+//! over a [`crate::migrate::PlanScope::Set`] of the donor's GPUs.
 
 use super::event_core::EventCore;
 use super::metrics::{acceptance_rate, Sample, SimResult};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::{DataCenter, GpuRef, Host, ShardMap};
 use crate::mig::{NUM_MODELS, NUM_PROFILE_KEYS};
-use crate::migrate::{MigrationBudget, MigrationEvent, MigrationKind};
+use crate::migrate::{
+    MigrationBudget, MigrationEvent, MigrationKind, MigrationPlan, MigrationPlanner, PlanCtx,
+    PlanScope, PlanStep, PlanTrigger,
+};
 use crate::ops::{FaultInjector, OpsEvent, QueueConfig};
-use crate::policies::{probe_gpu, Decision, Policy, PolicyCtx, RejectCounts, RejectReason};
-use std::collections::HashMap;
+use crate::policies::{
+    probe_gpu, Decision, Policy, PolicyConfig, PolicyCtx, RejectCounts, RejectReason,
+};
+use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -97,6 +106,10 @@ pub struct ShardedCore {
     /// Cross-shard rebalance period in intervals (`None` = off).
     rebalance_every: Option<u64>,
     budget: MigrationBudget,
+    /// Per-shard planner instances consulted by the rebalance pass
+    /// (`None` = the built-in sole-tenant scan). One instance per shard
+    /// so each consult is a pure function of that shard's state.
+    rebalance_planners: Option<Vec<Box<dyn MigrationPlanner>>>,
     /// Per-VM move tally for `budget.max_moves_per_vm`.
     moves_per_vm: HashMap<VmId, u32>,
     /// Specs of VMs placed through the router — the rebalancer must
@@ -152,6 +165,7 @@ impl ShardedCore {
             mig_cursor: vec![0; n],
             rebalance_every: None,
             budget: MigrationBudget::unlimited(),
+            rebalance_planners: None,
             moves_per_vm: HashMap::new(),
             specs: HashMap::new(),
             route_scratch: (0..n).map(|_| Vec::new()).collect(),
@@ -236,6 +250,23 @@ impl ShardedCore {
     pub fn set_rebalance(&mut self, every: u64, budget: MigrationBudget) {
         self.rebalance_every = if every == 0 { None } else { Some(every) };
         self.budget = budget;
+    }
+
+    /// Swap the rebalancer's donor-selection heuristic for a registry
+    /// migration planner (see [`crate::policies::PLANNER_NAMES`]); its
+    /// `Migrate` steps become the evacuation nominations the router
+    /// tries against the other shards. Builds one planner instance per
+    /// shard from `cfg`. Returns `false` (and changes nothing) for an
+    /// unknown name.
+    pub fn set_rebalance_planner(&mut self, name: &str, cfg: &PolicyConfig) -> bool {
+        let planners: Option<Vec<Box<dyn MigrationPlanner>>> = (0..self.cores.len())
+            .map(|_| crate::policies::planned::planner_from_name(name, cfg))
+            .collect();
+        let known = planners.is_some();
+        if known {
+            self.rebalance_planners = planners;
+        }
+        known
     }
 
     /// Pre-size per-shard collections from trace metadata (requests are
@@ -521,6 +552,10 @@ impl ShardedCore {
         if n < 2 || self.budget.max_moves_per_interval == 0 {
             return;
         }
+        if self.rebalance_planners.is_some() {
+            self.rebalance_planned();
+            return;
+        }
         let mut moved = 0u32;
         'pairs: for donor in 0..n {
             for receiver in 0..n {
@@ -581,6 +616,81 @@ impl ShardedCore {
                         blocks: spec.profile.size(),
                     });
                 }
+            }
+        }
+    }
+
+    /// Planner-driven rebalance: each donor shard's registry planner is
+    /// consulted over the donor's full GPU set (`PlanScope::Set` — the
+    /// per-shard analogue of a tick round), and every `Migrate` step it
+    /// proposes is reinterpreted as an *evacuation nomination*: the
+    /// named VM is offered to the other shards' already-active GPUs in
+    /// fixed order (`donor+1, donor+2, …` mod `S`) instead of moving
+    /// inside the donor. `Repack` steps are intra-shard concerns the
+    /// cross-shard pass skips; a nomination nothing can host simply
+    /// stays put. Runs serially on the router thread, so the pass is a
+    /// pure function of the shard states and the consult order.
+    fn rebalance_planned(&mut self) {
+        let n = self.cores.len();
+        let now = (self.hour + 1) * self.interval();
+        let mut moved = 0u32;
+        let mut plan = MigrationPlan::new();
+        'donors: for donor in 0..n {
+            let scope: BTreeSet<GpuRef> = self.cores[donor].dc.gpu_refs().into_iter().collect();
+            plan.clear();
+            let ctx = PlanCtx {
+                now,
+                trigger: PlanTrigger::Tick,
+                scope: PlanScope::Set(&scope),
+                pending: &[],
+            };
+            let planners = self.rebalance_planners.as_mut().expect("checked by rebalance");
+            planners[donor].plan(&self.cores[donor].dc, &ctx, &mut plan);
+            for step in plan.steps() {
+                let PlanStep::Migrate { vm, from, .. } = step else { continue };
+                let (vm_id, from_local) = (*vm, *from);
+                if moved >= self.budget.max_moves_per_interval {
+                    break 'donors;
+                }
+                // Queue-served VMs were never routed through the
+                // router's spec log — skip them (best effort).
+                let Some(spec) = self.specs.get(&vm_id).copied() else { continue };
+                if self.moves_per_vm.get(&vm_id).copied().unwrap_or(0)
+                    >= self.budget.max_moves_per_vm
+                {
+                    continue;
+                }
+                let mut target = None;
+                'recv: for hop in 1..n {
+                    let receiver = (donor + hop) % n;
+                    for h in self.cores[receiver].dc.hosts() {
+                        for (g, gpu) in h.gpus().iter().enumerate() {
+                            if gpu.is_empty() {
+                                continue; // only consolidate onto active GPUs
+                            }
+                            let to = GpuRef { host: h.id, gpu: g as u8 };
+                            if let Some(p) = probe_gpu(&self.cores[receiver].dc, &spec, to) {
+                                target = Some((receiver, to, p));
+                                break 'recv;
+                            }
+                        }
+                    }
+                }
+                let Some((receiver, to_local, placement)) = target else { continue };
+                if self.cores[donor].transfer_out(vm_id).is_none() {
+                    continue; // the nominated VM already departed
+                }
+                self.cores[receiver].adopt(&spec, to_local, placement);
+                *self.moves_per_vm.entry(vm_id).or_insert(0) += 1;
+                moved += 1;
+                self.migrations.push(MigrationEvent {
+                    vm: vm_id,
+                    from: self.map.to_global(donor, from_local),
+                    to: self.map.to_global(receiver, to_local),
+                    kind: MigrationKind::Inter,
+                    model: spec.profile.model(),
+                    blocks: spec.profile.size(),
+                });
             }
         }
     }
@@ -661,6 +771,7 @@ impl ShardedCore {
         let mut interrupted = 0u64;
         let mut preempted = 0u64;
         let mut queue_delays = Vec::new();
+        let mut gap_samples = Vec::new();
         for (s, core) in cores.into_iter().enumerate() {
             let r = core.into_result(0.0);
             if s == 0 {
@@ -685,6 +796,9 @@ impl ShardedCore {
             interrupted += r.interrupted;
             preempted += r.preempted;
             queue_delays.extend(r.queue_delays);
+            // Ascending shard order keeps the merged sample stream
+            // deterministic (samples carry no timestamps of their own).
+            gap_samples.extend(r.gap_samples);
         }
         requested -= extra_requested;
         for (acc, e) in per_profile.iter_mut().zip(extra_per_profile) {
@@ -707,6 +821,7 @@ impl ShardedCore {
             preempted,
             queue_delays,
             availability,
+            gap_samples,
             wall_seconds,
         }
     }
@@ -728,6 +843,10 @@ pub struct ShardOptions {
     pub rebalance_every: u64,
     /// Budget for the cross-shard rebalancer.
     pub budget: MigrationBudget,
+    /// Registry planner name driving the rebalancer's evacuation
+    /// nominations (`None` = the built-in sole-tenant scan). See
+    /// [`ShardedCore::set_rebalance_planner`].
+    pub rebalance_planner: Option<String>,
 }
 
 impl Default for ShardOptions {
@@ -738,6 +857,7 @@ impl Default for ShardOptions {
             seed: 0,
             rebalance_every: 0,
             budget: MigrationBudget::unlimited(),
+            rebalance_planner: None,
         }
     }
 }
@@ -751,6 +871,9 @@ pub struct ShardedSimulation<'a> {
     pub vms: &'a [VmSpec],
     pub options: super::SimulationOptions,
     pub shard_options: ShardOptions,
+    /// Configuration used to resolve `shard_options.rebalance_planner`
+    /// through the planner registry (the ILP knobs ride here).
+    pub planner_config: PolicyConfig,
 }
 
 impl<'a> ShardedSimulation<'a> {
@@ -765,6 +888,7 @@ impl<'a> ShardedSimulation<'a> {
             vms,
             options: super::SimulationOptions::default(),
             shard_options: ShardOptions::default(),
+            planner_config: PolicyConfig::new(),
         }
     }
 
@@ -800,6 +924,10 @@ impl<'a> ShardedSimulation<'a> {
         }
         if so.rebalance_every > 0 {
             core.set_rebalance(so.rebalance_every, so.budget);
+            if let Some(name) = &so.rebalance_planner {
+                let known = core.set_rebalance_planner(name, &self.planner_config);
+                assert!(known, "unknown rebalance planner '{name}'");
+            }
         }
         let mut next_vm = 0usize;
         loop {
@@ -958,5 +1086,65 @@ mod tests {
         // interval via integrity_every=1) and both VMs stay resident
         // until departure.
         assert_eq!(r.interrupted, 0);
+    }
+
+    /// The rebalancer consults a registry planner when one is named:
+    /// ilp-repair's `Migrate` nomination (the cheapest consolidation of
+    /// the donor shard) is evacuated onto the other shard's active GPU,
+    /// and the whole pass is deterministic across runs.
+    #[test]
+    fn planner_rebalance_evacuates_nominated_vms() {
+        use crate::mig::Profile;
+        use crate::policies::PolicyConfig;
+        // Hosts 0–1 form shard 0, hosts 2–3 shard 1 (one GPU each).
+        // Seven 1g GIs fill host 0's GPU so the eighth (vm 16) lands on
+        // host 1; five early departures then leave host 0 holding two
+        // GIs and host 1 a sole tenant. The donor-side ILP nominates
+        // the single-move consolidation — vm 16 — and the router
+        // evacuates it onto shard 1's already-active GPU instead.
+        let hosts: Vec<Host> = (0..4).map(|i| Host::new(i, 64, 256, 1)).collect();
+        let mut vms: Vec<VmSpec> = (1..=8u64)
+            .map(|i| VmSpec {
+                id: 2 * i, // even → homed on shard 0
+                profile: Profile::P1g5gb,
+                cpus: 2,
+                ram_gb: 8,
+                arrival: 60,
+                departure: if (2..=6).contains(&i) { 2 * HOUR + 60 } else { 40 * HOUR },
+                weight: 1.0,
+            })
+            .collect();
+        // One odd-id resident keeps shard 1's first GPU active.
+        vms.push(VmSpec {
+            id: 3,
+            profile: Profile::P1g5gb,
+            cpus: 2,
+            ram_gb: 8,
+            arrival: 60,
+            departure: 40 * HOUR,
+            weight: 1.0,
+        });
+        let run = || {
+            let mut sim = ShardedSimulation::new(&hosts, policies(2), &vms);
+            sim.options.integrity_every = 1;
+            sim.options.drain_cap_hours = 4;
+            sim.shard_options.shards = 2;
+            sim.shard_options.rebalance_every = 1;
+            sim.shard_options.rebalance_planner = Some("ilp-repair".to_string());
+            sim.planner_config = PolicyConfig::new().ilp_period_hours(1);
+            sim.run()
+        };
+        let r = run();
+        assert_eq!(r.accepted, 9);
+        let inter: Vec<_> =
+            r.migration_events.iter().filter(|e| e.kind == MigrationKind::Inter).collect();
+        assert_eq!(inter.len(), 1, "{:?}", r.migration_events);
+        assert_eq!(inter[0].vm, 16, "the planner's nomination is the VM that moves");
+        assert_eq!(inter[0].from.host, 1);
+        assert_eq!(inter[0].to.host, 2, "evacuated onto shard 1's active GPU");
+        assert_eq!(r.interrupted, 0);
+        let again = run();
+        assert_eq!(r.migration_events, again.migration_events);
+        assert_eq!(r.samples, again.samples);
     }
 }

@@ -574,6 +574,19 @@ fn composed_policies_decide_identically_indexed_vs_scan() {
     }
 }
 
+/// The index-vs-scan contract extends through the rolling ILP repair
+/// planner: `mcc+ilp-repair` — whose rejection bursts trigger bounded
+/// exact solves and transactional plan applies — decides byte-identically
+/// with and without the cluster index. (The node budget is tightened so
+/// the test stays quick; determinism is per-budget, so both sides see
+/// the same truncation.)
+#[test]
+fn ilp_repair_composition_decides_identically_indexed_vs_scan() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    let cfg = PolicyConfig::new().heavy_frac(0.25).ilp_nodes(2_000).ilp_period_hours(24);
+    assert_equivalent("mcc+ilp-repair", &cfg, &workload, 42);
+}
+
 /// A zero migration budget starves every planner, so budgeted GRMU
 /// decides exactly like the dual-basket-only ablation — and a budgeted
 /// composed policy exactly like its plain base.
@@ -592,6 +605,31 @@ fn zero_migration_budget_reduces_to_the_migration_free_variant() {
     let (dec_d, _) = replay_decisions("mcc", &base, &workload, 42);
     assert_eq!(dec_c, dec_d, "budget-0 mcc+defrag must decide like mcc");
     assert_eq!(res_c.migrations(), 0);
+}
+
+/// Satellite lock for the rolling ILP repair planner: a zero extraction
+/// window — and, separately, a zero branch-and-bound node budget —
+/// disables the planner entirely, so `mcc+ilp-repair` is byte-identical
+/// to bare `mcc` (decisions, samples, rejections, events). The composed
+/// variant must be inert until *both* knobs are positive.
+#[test]
+fn disabled_ilp_planner_reduces_to_the_planner_free_variant() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    let base = PolicyConfig::new().heavy_frac(0.25);
+    let (dec_plain, res_plain) = replay_decisions("mcc", &base, &workload, 42);
+    for (label, cfg) in
+        [("window 0", base.clone().ilp_window(0)), ("nodes 0", base.clone().ilp_nodes(0))]
+    {
+        let (dec, res) = replay_decisions("mcc+ilp-repair", &cfg, &workload, 42);
+        assert_eq!(dec, dec_plain, "{label}: mcc+ilp-repair must decide like mcc");
+        assert_eq!(res.migrations(), 0, "{label}: a disabled planner must never move a VM");
+        assert_eq!(res.samples, res_plain.samples, "{label}: samples diverged");
+        assert_eq!(res.rejections, res_plain.rejections, "{label}: rejections diverged");
+        assert_eq!(
+            res.migration_events, res_plain.migration_events,
+            "{label}: migration events diverged"
+        );
+    }
 }
 
 // --------------------------------------------------------- ops equivalence

@@ -242,6 +242,156 @@ fn heuristics_never_beat_the_ilp_bound() {
     }
 }
 
+// ------------------------------------------------- online ILP repair
+
+/// Online extraction cross-validates against the enumerator: a bounded
+/// instance carved out of a *live* cluster (residents as priors, pending
+/// rejects as demand) must reach the same acceptance weight and active
+/// hardware under the unlimited offline solve, under the node-limited
+/// online solve, and under brute force. Small clusters leave the node
+/// budget no room to truncate, so all three must agree exactly.
+#[test]
+fn online_extraction_matches_the_offline_optimum_on_small_clusters() {
+    use grmu::cluster::{DataCenter, GpuRef, Host};
+    use grmu::ilp::online::{build_instance, fragmented_window, MAX_INSTANCE_VMS};
+    use grmu::mig::GpuModel;
+    use grmu::migrate::PlanScope;
+    let mut rng = Rng::new(4242);
+    let one_g_starts = [0u8, 1, 2, 3, 4, 5, 6];
+    let two_g_starts = [0u8, 2, 4];
+    for case in 0..6 {
+        // One host, two GPUs; one resident per GPU at a random legal
+        // start, plus one or two pending rejects.
+        let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+        let s0 = *rng.pick(&one_g_starts);
+        let s1 = *rng.pick(&two_g_starts);
+        dc.place(
+            &vm(1, Profile::P1g5gb, 1.0),
+            GpuRef { host: 0, gpu: 0 },
+            Placement { profile: Profile::P1g5gb, start: s0 },
+        );
+        dc.place(
+            &vm(2, Profile::P2g10gb, 1.0),
+            GpuRef { host: 0, gpu: 1 },
+            Placement { profile: Profile::P2g10gb, start: s1 },
+        );
+        let pending: Vec<VmSpec> = (0..rng.range_inclusive(1, 2))
+            .map(|i| vm(10 + i, *rng.pick(&ALL_PROFILES), rng.range_inclusive(1, 3) as f64))
+            .collect();
+        let window = fragmented_window(&dc, PlanScope::Cluster, GpuModel::A100_40, 8);
+        assert_eq!(window.len(), 2, "case {case}: both healthy GPUs must enter the window");
+        let ex = build_instance(&dc, &window, &pending, MAX_INSTANCE_VMS, &|_| 1.0);
+        let (bf_weight, bf_hw) = brute_force(&ex.inst);
+        let offline = IlpSolver::new(ex.inst.clone()).solve().expect("feasible");
+        let online = IlpSolver::new(ex.inst.clone()).solve_limited(200_000).expect("feasible");
+        for (label, sol) in [("offline", &offline), ("online", &online)] {
+            assert!(
+                (sol.acceptance - bf_weight).abs() < 1e-6,
+                "case {case} {label}: acceptance {} vs brute force {bf_weight}",
+                sol.acceptance
+            );
+            assert!(
+                (sol.active_hardware - bf_hw).abs() < 1e-6,
+                "case {case} {label}: hardware {} vs brute force {bf_hw}",
+                sol.active_hardware
+            );
+        }
+    }
+}
+
+/// Per-GPU state summary for the rollback assertions below: occupancy
+/// masks plus the sorted resident set, per host.
+fn fingerprint(dc: &grmu::cluster::DataCenter) -> Vec<Vec<(u8, Vec<u64>)>> {
+    dc.hosts()
+        .iter()
+        .map(|h| {
+            h.gpus()
+                .iter()
+                .map(|g| {
+                    let mut vms: Vec<u64> = g.instances().iter().map(|i| i.vm).collect();
+                    vms.sort_unstable();
+                    (g.occupancy(), vms)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Transactionality under adversarial staleness: a plan the rolling ILP
+/// produced against a snapshot is applied *after* the cluster mutated
+/// under it (interlopers now occupy every block the repack could
+/// target). `apply_plan` must refuse the stale plan wholesale — no
+/// half-applied state, fingerprint unchanged, integrity green — while
+/// the identical plan still applies cleanly to the un-mutated snapshot.
+#[test]
+fn stale_ilp_plans_roll_back_without_corrupting_the_cluster() {
+    use grmu::cluster::{DataCenter, GpuRef, Host};
+    use grmu::ilp::RollingIlp;
+    use grmu::migrate::{MigrationPlan, MigrationPlanner, PlanCtx, PlanScope, PlanTrigger};
+    let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+    let g0 = GpuRef { host: 0, gpu: 0 };
+    // Strays at blocks 2 and 4: the stray at 2 blocks a pending
+    // 4g.20gb (sole legal start 0), so the repair must relocate it
+    // into the upper half (block 5 or 6 — 4 is taken).
+    let place = |dc: &mut DataCenter, id: u64, start: u8| {
+        dc.place(
+            &vm(id, Profile::P1g5gb, 1.0),
+            g0,
+            Placement { profile: Profile::P1g5gb, start },
+        );
+    };
+    place(&mut dc, 1, 2);
+    place(&mut dc, 2, 4);
+    let pending = [vm(10, Profile::P4g20gb, 1.0)];
+    let mut planner = RollingIlp::new(8, 50_000, 24);
+    let mut plan = MigrationPlan::new();
+    let ctx = PlanCtx {
+        now: 0,
+        trigger: PlanTrigger::Rejection,
+        scope: PlanScope::Cluster,
+        pending: &pending,
+    };
+    planner.plan(&dc, &ctx, &mut plan);
+    assert!(!plan.is_empty(), "the stray 1g must be planned out of blocks 0..4");
+
+    // The plan applies cleanly to the state it was planned against.
+    let mut fresh = dc.clone();
+    fresh.apply_plan(&plan).expect("plan must fit its own snapshot");
+    fresh.check_integrity().unwrap();
+    assert_eq!(fresh.gpu(g0).occupancy() & 0b0000_1111, 0, "blocks 0..4 must be vacated");
+
+    // Adversary: fill both remaining upper-half starts before applying.
+    place(&mut dc, 8, 5);
+    place(&mut dc, 9, 6);
+    let before = fingerprint(&dc);
+    let err = dc.apply_plan(&plan);
+    assert!(err.is_err(), "every relocation target is occupied — the plan must be refused");
+    assert_eq!(fingerprint(&dc), before, "a refused plan must leave no trace");
+    dc.check_integrity().unwrap();
+}
+
+/// Multi-step rollback: a hand-built plan whose *second* step collides
+/// (both migrations target the same destination blocks) must undo the
+/// first step too — apply is all-or-nothing, never a prefix.
+#[test]
+fn partially_feasible_plans_roll_back_the_applied_prefix() {
+    use grmu::cluster::{DataCenter, GpuRef, Host};
+    use grmu::migrate::MigrationPlan;
+    let mut dc = DataCenter::new(vec![Host::new(0, 64, 256, 2)]);
+    let g0 = GpuRef { host: 0, gpu: 0 };
+    let g1 = GpuRef { host: 0, gpu: 1 };
+    let p = |start: u8| Placement { profile: Profile::P1g5gb, start };
+    dc.place(&vm(1, Profile::P1g5gb, 1.0), g0, p(0));
+    dc.place(&vm(2, Profile::P1g5gb, 1.0), g0, p(1));
+    let mut plan = MigrationPlan::new();
+    plan.push_migrate(1, g0, g1, p(0));
+    plan.push_migrate(2, g0, g1, p(0)); // collides with step 1's landing
+    let before = fingerprint(&dc);
+    assert!(dc.apply_plan(&plan).is_err(), "the second landing is occupied by the first");
+    assert_eq!(fingerprint(&dc), before, "step 1 must have been rolled back");
+    dc.check_integrity().unwrap();
+}
+
 #[test]
 fn ilp_start_blocks_always_legal() {
     let mut rng = Rng::new(99);

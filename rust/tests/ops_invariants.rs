@@ -101,6 +101,71 @@ fn random_ops_sequences_keep_integrity_green() {
     assert!(any_interrupted, "no random schedule ever hit a resident — vacuous run");
 }
 
+/// Health contract of the online ILP's instance extraction: whatever
+/// adversarial fault/repair/drain sequence is in flight, the
+/// fragmented-window ranking surfaces *exactly* the schedulable GPUs
+/// (device and host `Healthy`) — never failed, banned or draining
+/// capacity — and no resident of an unschedulable device ever enters an
+/// extracted instance as a prior. Checked at every interval of a live
+/// run, against `gpu_available` as the oracle.
+#[test]
+fn ilp_extraction_never_sees_unschedulable_capacity() {
+    use grmu::ilp::online::{build_instance, fragmented_window, MAX_INSTANCE_VMS, REPAIR_WEIGHT};
+    use grmu::mig::GpuModel;
+    use grmu::migrate::PlanScope;
+    use std::collections::BTreeSet;
+    let workload = Workload::generate(TraceConfig::small(6));
+    let vms = &workload.vms;
+    let horizon = (workload.config.horizon_hours + 24) * HOUR;
+    let mut rng = Rng::new(0xFACE);
+    let schedule = random_schedule(&mut rng, &workload.hosts, horizon);
+    let policy = PolicyRegistry::standard().build("ff", &PolicyConfig::new()).unwrap();
+    let mut core =
+        EventCore::new(DataCenter::new(workload.hosts.clone()), policy, PolicyCtx::new(6));
+    core.set_fault_schedule(FaultInjector::new(schedule, 1));
+    core.set_integrity_every(4);
+    let last_arrival = vms.last().map(|v| v.arrival).unwrap_or(0);
+    let mut saw_unavailable = false;
+    let mut next = 0usize;
+    loop {
+        let t_end = core.interval_end();
+        let start = next;
+        while next < vms.len() && vms[next].arrival <= t_end {
+            next += 1;
+        }
+        core.step(&vms[start..next]);
+        let dc = &core.dc;
+        let all = dc.gpu_refs();
+        let schedulable: BTreeSet<GpuRef> =
+            all.iter().copied().filter(|&r| dc.gpu_available(r)).collect();
+        saw_unavailable |= schedulable.len() < all.len();
+        let window = fragmented_window(dc, PlanScope::Cluster, GpuModel::A100_40, all.len());
+        let in_window: BTreeSet<GpuRef> = window.iter().copied().collect();
+        assert_eq!(in_window.len(), window.len(), "the window must not repeat a GPU");
+        assert_eq!(
+            in_window, schedulable,
+            "hour {}: window != schedulable capacity",
+            core.hour()
+        );
+        let ex = build_instance(dc, &window, &[], MAX_INSTANCE_VMS, &|_| REPAIR_WEIGHT);
+        for &vm in ex.inst.prior.keys() {
+            let loc = dc.locate(vm).expect("instance priors are resident");
+            assert!(
+                dc.gpu_available(loc.gpu),
+                "hour {}: resident of unschedulable {:?} leaked into the instance",
+                core.hour(),
+                loc.gpu
+            );
+        }
+        let drained = next >= vms.len() && core.pending_departures() == 0;
+        let capped = core.hour() * HOUR > last_arrival + 3 * 24 * HOUR;
+        if drained || capped {
+            break;
+        }
+    }
+    assert!(saw_unavailable, "no fault ever removed capacity — the health lock is vacuous");
+}
+
 /// The injector itself is order-safe under replay: popping the same
 /// schedule through cores with different interval grids applies every
 /// event exactly once and ends in a coherent state (integrity checked
