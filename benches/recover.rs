@@ -1,0 +1,137 @@
+//! Checkpoint/recovery cost at 10,000 GPUs (EXPERIMENTS.md §Recovery
+//! overhead).
+//!
+//! Four measurements on a saturated 10k-GPU `EventCore`:
+//!
+//! 1. **Snapshot encode** — `EventCore::snapshot_bytes` on the live
+//!    engine (the pause a checkpointed run takes at each cadence
+//!    boundary, before any I/O).
+//! 2. **Frame + checksum** — `encode_frame`/`decode_frame` over the
+//!    image (the FNV-1a pass dominates).
+//! 3. **Durable write** — `SnapshotStore::write` end to end: temp file,
+//!    fsync, rename, directory fsync.
+//! 4. **Restore** — `EventCore::restore_bytes` from the image back to a
+//!    runnable engine (the recovery-path latency floor).
+//!
+//! Plus the end-to-end overhead: the same trace run with checkpointing
+//! off vs a 24-hour cadence, as a wall-clock ratio.
+//!
+//! Run: `cargo bench --bench recover` (`BENCH_QUICK=1` shrinks the
+//! trace; the fleet stays at 10k GPUs).
+
+use grmu::cluster::DataCenter;
+use grmu::policies::{PolicyConfig, PolicyCtx, PolicyRegistry};
+use grmu::recover::{decode_frame, encode_frame, SnapshotKind, SnapshotStore};
+use grmu::report::experiments::{self, ExperimentConfig};
+use grmu::sim::EventCore;
+use grmu::trace::{TraceConfig, Workload};
+use grmu::util::bench::Bench;
+
+const HOSTS: usize = 1_250; // × 8 GPUs = 10,000
+
+fn config(seed: u64, pods: usize, horizon_hours: u64) -> TraceConfig {
+    let mut weights = [0.0; 8];
+    weights[7] = 1.0; // every host carries 8 GPUs
+    TraceConfig {
+        seed,
+        num_hosts: HOSTS,
+        num_pods: pods,
+        horizon_hours,
+        host_gpu_weights: weights,
+        ..TraceConfig::default()
+    }
+}
+
+/// Drive a fresh core over the trace prefix so the snapshot captures a
+/// loaded fleet (resident VMs, samples, RNG cursors, policy state), not
+/// an empty one.
+fn loaded_core(workload: &Workload, intervals: u64) -> EventCore {
+    let policy = PolicyRegistry::standard()
+        .build("grmu", &PolicyConfig::new().heavy_frac(0.3))
+        .unwrap();
+    let mut core =
+        EventCore::new(DataCenter::new(workload.hosts.clone()), policy, PolicyCtx::new(7));
+    let mut next = 0usize;
+    for _ in 0..intervals {
+        let t_end = (core.hour() + 1) * core.interval();
+        let start = next;
+        while next < workload.vms.len() && workload.vms[next].arrival <= t_end {
+            next += 1;
+        }
+        core.step_buffered(&workload.vms[start..next]);
+    }
+    core
+}
+
+fn snapshot_costs(b: &mut Bench, quick: bool) {
+    let (pods, horizon) = if quick { (8_000, 24) } else { (40_000, 72) };
+    let workload = Workload::generate(config(42, pods, horizon));
+    let warm = if quick { 12 } else { 48 };
+    let core = loaded_core(&workload, warm);
+    let image = core.snapshot_bytes();
+    println!(
+        "recover/10k-gpus: {} GPUs, {} resident VMs after {warm} intervals, image {:.2} MiB",
+        core.dc.num_gpus(),
+        core.dc.resident_count(),
+        image.len() as f64 / (1024.0 * 1024.0)
+    );
+
+    b.run("recover/10k-gpus/snapshot-encode", || core.snapshot_bytes());
+    let frame = encode_frame(SnapshotKind::Core, &image);
+    b.run("recover/10k-gpus/frame+fnv1a", || encode_frame(SnapshotKind::Core, &image));
+    b.run("recover/10k-gpus/frame-verify", || decode_frame(&frame).unwrap().1.len());
+
+    let dir = std::env::temp_dir().join(format!("grmu-bench-recover-{}", std::process::id()));
+    let store = SnapshotStore::open(&dir).unwrap();
+    b.run("recover/10k-gpus/durable-write(fsync)", || {
+        store.write(24, SnapshotKind::Core, &image).unwrap()
+    });
+    b.run("recover/10k-gpus/restore", || {
+        let policy = PolicyRegistry::standard()
+            .build("grmu", &PolicyConfig::new().heavy_frac(0.3))
+            .unwrap();
+        EventCore::restore_bytes(&image, policy).unwrap().hour()
+    });
+    b.compare("recover/10k-gpus/durable-write(fsync)", "recover/10k-gpus/snapshot-encode");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end checkpointing overhead: the identical 10k-GPU run with
+/// checkpointing off vs a 24-hour cadence (journal every interval, full
+/// image every 24). Both runs must produce the same outcome — the
+/// overhead is pure persistence cost.
+fn end_to_end_overhead(quick: bool) {
+    let (pods, horizon) = if quick { (8_000, 24) } else { (40_000, 72) };
+    let trace = config(42, pods, horizon);
+    let workload = Workload::generate(trace.clone());
+    let base_cfg =
+        ExperimentConfig { trace: trace.clone(), drain_cap_hours: 24, ..ExperimentConfig::default() };
+    let off = experiments::run_once(&workload, "grmu", &base_cfg, true);
+
+    let dir = std::env::temp_dir().join(format!("grmu-bench-recover-e2e-{}", std::process::id()));
+    let cp_cfg = ExperimentConfig {
+        trace,
+        drain_cap_hours: 24,
+        checkpoint_every_hours: 24,
+        checkpoint_dir: Some(dir.clone()),
+        ..ExperimentConfig::default()
+    };
+    let on = experiments::run_once(&workload, "grmu", &cp_cfg, true);
+    assert!(on.same_outcome(&off), "checkpointing changed the outcome");
+    let images = SnapshotStore::open(&dir).unwrap().hours().len();
+    println!(
+        "recover/10k-gpus/end-to-end: off {:.3}s, checkpointed {:.3}s ({} images + journal) = {:+.1}% overhead",
+        off.wall_seconds,
+        on.wall_seconds,
+        images,
+        100.0 * (on.wall_seconds / off.wall_seconds.max(1e-9) - 1.0),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = Bench::new();
+    snapshot_costs(&mut b, quick);
+    end_to_end_overhead(quick);
+}

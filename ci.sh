@@ -47,6 +47,33 @@ cargo run --release --quiet -- simulate --quick --policy mcc+ilp-repair \
 cargo run --release --quiet -- sweep --quick --gap-every 48 \
     | grep -q "Optimality gap" || { echo "sweep produced no gap samples"; exit 1; }
 
+echo "== crash-recovery smoke run"
+# Checkpoint a quick run, kill it on disk (drop the newest snapshot and
+# tear the next one), resume, and require the resumed run to print the
+# same headline metrics. Exercises the snapshot store, journal
+# cross-check and torn-write fallback through the real CLI.
+CKPT_DIR="$(mktemp -d)"
+trap 'rm -rf "$CKPT_DIR"' EXIT
+cargo run --release --quiet -- simulate --quick --policy grmu \
+    --checkpoint-every 24 --checkpoint-dir "$CKPT_DIR" \
+    | grep '^policy=' > "$CKPT_DIR/full.out"
+SNAPS=("$CKPT_DIR"/snap-*.grmu)
+[ "${#SNAPS[@]}" -ge 2 ] || { echo "expected >=2 snapshots, got ${#SNAPS[@]}"; exit 1; }
+# Kill: the newest image vanishes, the next-newest is torn mid-write.
+rm "${SNAPS[-1]}"
+truncate -s 100 "${SNAPS[-2]}"
+cargo run --release --quiet -- simulate --quick --policy grmu \
+    --resume "$CKPT_DIR" \
+    | grep '^policy=' > "$CKPT_DIR/resumed.out"
+# wall= differs by definition; everything else must match exactly.
+sed 's/ wall=.*//' "$CKPT_DIR/full.out" > "$CKPT_DIR/full.cmp"
+sed 's/ wall=.*//' "$CKPT_DIR/resumed.out" > "$CKPT_DIR/resumed.cmp"
+diff "$CKPT_DIR/full.cmp" "$CKPT_DIR/resumed.cmp" \
+    || { echo "resumed run diverged from the checkpointed run"; exit 1; }
+# Graceful-degradation flag parses and runs end to end.
+cargo run --release --quiet -- simulate --quick --policy grmu \
+    --on-corruption rebuild >/dev/null
+
 echo "== cargo doc --no-deps (warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

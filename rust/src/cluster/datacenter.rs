@@ -19,9 +19,41 @@
 use super::health::HealthState;
 use super::host::Host;
 use super::index::ClusterIndex;
-use super::vm::{VmId, VmSpec};
-use crate::mig::{GpuState, Instance, Placement, NUM_MODELS};
+use super::vm::{Time, VmId, VmSpec};
+use crate::mig::{GpuState, Instance, Placement, ProfileKey, ALL_MODELS, NUM_MODELS, NUM_PROFILE_KEYS};
+use crate::util::codec::{Dec, Enc};
 use std::collections::HashMap;
+
+/// One integrity violation, attributed to a host when the failing check
+/// is host-local (`None` for cluster-wide index/counter divergence).
+/// Returned by [`DataCenter::try_check_integrity`] so the engine can
+/// quarantine or rebuild instead of panicking.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntegrityReport {
+    /// The offending host, when one is identifiable.
+    pub host: Option<u32>,
+    /// Human-readable description of the violation.
+    pub detail: String,
+}
+
+impl std::fmt::Display for IntegrityReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.host {
+            Some(h) => write!(f, "host {h}: {}", self.detail),
+            None => write!(f, "{}", self.detail),
+        }
+    }
+}
+
+impl IntegrityReport {
+    fn cluster(detail: impl Into<String>) -> IntegrityReport {
+        IntegrityReport { host: None, detail: detail.into() }
+    }
+
+    fn on_host(host: u32, detail: impl Into<String>) -> IntegrityReport {
+        IntegrityReport { host: Some(host), detail: detail.into() }
+    }
+}
 
 /// Address of one GPU: `(host index, GPU index within host)`. Ordering is
 /// the paper's `globalIndex` (Algorithm 2) — lexicographic, so first-fit
@@ -574,18 +606,38 @@ impl DataCenter {
     /// host ids equal their positions (the `globalIndex` addressing
     /// invariant the [`ClusterIndex`] ordering relies on), and the
     /// incrementally maintained index equals a brute-force rebuild.
+    ///
+    /// Compat wrapper over [`DataCenter::try_check_integrity`] — same
+    /// checks, stringly-typed error.
     pub fn check_integrity(&self) -> Result<(), String> {
+        self.try_check_integrity().map_err(|r| r.to_string())
+    }
+
+    /// Non-panicking integrity check returning a structured
+    /// [`IntegrityReport`] that attributes host-local violations, so
+    /// the engine's `--on-corruption quarantine` mode knows *what* to
+    /// quarantine. The historical behaviour (callers `.expect(..)` on
+    /// [`DataCenter::check_integrity`]) is untouched.
+    pub fn try_check_integrity(&self) -> Result<(), IntegrityReport> {
         for (i, h) in self.hosts.iter().enumerate() {
             if h.id as usize != i {
-                return Err(format!("host id {} at position {i}", h.id));
+                return Err(IntegrityReport::cluster(format!("host id {} at position {i}", h.id)));
             }
         }
         for (vm, loc) in &self.locations {
             let gpu = self.gpu(loc.gpu);
             match gpu.find_vm(*vm) {
-                None => return Err(format!("VM {vm} indexed but absent from {:?}", loc.gpu)),
+                None => {
+                    return Err(IntegrityReport::on_host(
+                        loc.gpu.host,
+                        format!("VM {vm} indexed but absent from {:?}", loc.gpu),
+                    ))
+                }
                 Some(inst) if inst.placement != loc.placement => {
-                    return Err(format!("VM {vm} placement mismatch"))
+                    return Err(IntegrityReport::on_host(
+                        loc.gpu.host,
+                        format!("VM {vm} placement mismatch"),
+                    ))
                 }
                 _ => {}
             }
@@ -593,15 +645,23 @@ impl DataCenter {
         for h in &self.hosts {
             for (g_idx, g) in h.gpus().iter().enumerate() {
                 if !crate::mig::gpu::consistent(g) {
-                    return Err(format!("host {} GPU {g_idx} inconsistent", h.id));
+                    return Err(IntegrityReport::on_host(
+                        h.id,
+                        format!("host {} GPU {g_idx} inconsistent", h.id),
+                    ));
                 }
                 for inst in g.instances() {
-                    let loc = self
-                        .locations
-                        .get(&inst.vm)
-                        .ok_or_else(|| format!("VM {} on GPU but not indexed", inst.vm))?;
+                    let loc = self.locations.get(&inst.vm).ok_or_else(|| {
+                        IntegrityReport::on_host(
+                            h.id,
+                            format!("VM {} on GPU but not indexed", inst.vm),
+                        )
+                    })?;
                     if loc.gpu != (GpuRef { host: h.id, gpu: g_idx as u8 }) {
-                        return Err(format!("VM {} location index stale", inst.vm));
+                        return Err(IntegrityReport::on_host(
+                            h.id,
+                            format!("VM {} location index stale", inst.vm),
+                        ));
                     }
                 }
             }
@@ -621,38 +681,223 @@ impl DataCenter {
                 if !(host_resident_ok && h.gpu_health(g_idx).allows_residency())
                     && !g.instances().is_empty()
                 {
-                    return Err(format!(
-                        "host {} GPU {g_idx} is {}/{} but holds {} VMs",
+                    return Err(IntegrityReport::on_host(
                         h.id,
-                        h.health(),
-                        h.gpu_health(g_idx),
-                        g.instances().len()
+                        format!(
+                            "host {} GPU {g_idx} is {}/{} but holds {} VMs",
+                            h.id,
+                            h.health(),
+                            h.gpu_health(g_idx),
+                            g.instances().len()
+                        ),
                     ));
                 }
             }
         }
         if offline != self.offline_gpus {
-            return Err(format!(
+            return Err(IntegrityReport::cluster(format!(
                 "offline-GPU counter {} != {offline} per recount",
                 self.offline_gpus
-            ));
+            )));
         }
         if ClusterIndex::build(&self.hosts) != self.index {
-            return Err("cluster index out of sync with GPU/host state".into());
+            return Err(IntegrityReport::cluster("cluster index out of sync with GPU/host state"));
         }
         if ActivityCounters::build(&self.hosts) != self.activity {
-            return Err("activity counters out of sync with host state".into());
+            return Err(IntegrityReport::cluster("activity counters out of sync with host state"));
         }
         let resident: usize =
             self.hosts.iter().flat_map(|h| h.gpus()).map(|g| g.instances().len()).sum();
         if resident != self.locations.len() {
-            return Err(format!(
+            return Err(IntegrityReport::cluster(format!(
                 "resident count {} != {} instances on GPUs",
                 self.locations.len(),
                 resident
-            ));
+            )));
         }
         Ok(())
+    }
+
+    /// Rebuild every piece of *derived* state — VM locations, the
+    /// [`ClusterIndex`], activity counters and the offline-GPU counter —
+    /// from the ground truth sitting on the hosts' GPUs. The
+    /// `--on-corruption quarantine|rebuild` repair path.
+    ///
+    /// Limits: per-VM CPU/RAM `demands` are not fully recoverable (hosts
+    /// store only aggregate reservations), so existing entries are kept
+    /// for VMs still resident and entries of departed VMs are dropped; a
+    /// VM whose demand entry was lost releases `(0, 0)` on departure.
+    pub fn rebuild_derived(&mut self) {
+        let mut locations = HashMap::with_capacity(self.locations.len());
+        for h in &self.hosts {
+            for (g_idx, g) in h.gpus().iter().enumerate() {
+                for inst in g.instances() {
+                    locations.insert(
+                        inst.vm,
+                        VmLocation {
+                            gpu: GpuRef { host: h.id, gpu: g_idx as u8 },
+                            placement: inst.placement,
+                        },
+                    );
+                }
+            }
+        }
+        self.demands.retain(|vm, _| locations.contains_key(vm));
+        self.locations = locations;
+        self.index = ClusterIndex::build(&self.hosts);
+        self.activity = ActivityCounters::build(&self.hosts);
+        self.offline_gpus = self
+            .hosts
+            .iter()
+            .map(|h| (0..h.gpus().len()).filter(|&g| !h.gpu_available(g)).count())
+            .sum();
+    }
+
+    fn encode_health(e: &mut Enc, h: HealthState) {
+        match h {
+            HealthState::Healthy => e.u8(0),
+            HealthState::Failed { until } => {
+                e.u8(1);
+                e.u64(until);
+            }
+            HealthState::Draining => e.u8(2),
+            HealthState::Banned => e.u8(3),
+        }
+    }
+
+    fn decode_health(d: &mut Dec) -> Result<HealthState, String> {
+        Ok(match d.u8()? {
+            0 => HealthState::Healthy,
+            1 => HealthState::Failed { until: d.u64()? as Time },
+            2 => HealthState::Draining,
+            3 => HealthState::Banned,
+            t => return Err(format!("unknown health tag {t}")),
+        })
+    }
+
+    /// Serialize the ground truth for the crash-safe snapshot layer:
+    /// per host — id, CPU/RAM capacity, weight, health, per-GPU model +
+    /// health + resident instances (with each VM's CPU/RAM demand
+    /// inline). Derived state (index, activity counters, locations,
+    /// offline-GPU counter) is deliberately **not** written — the
+    /// restore path re-derives it by replaying placements and then
+    /// cross-checks with [`DataCenter::try_check_integrity`], so a
+    /// snapshot can never resurrect stale derived state.
+    pub fn snapshot_into(&self, e: &mut Enc) {
+        e.usize(self.hosts.len());
+        for h in &self.hosts {
+            e.u32(h.id);
+            e.u32(h.cpus);
+            e.u32(h.ram_gb);
+            e.f64(h.weight);
+            Self::encode_health(e, h.health());
+            e.usize(h.gpus().len());
+            for (g_idx, g) in h.gpus().iter().enumerate() {
+                e.u8(g.model() as u8);
+                Self::encode_health(e, h.gpu_health(g_idx));
+                // Ascending start order: a deterministic replay order
+                // that is also a valid placement order (no overlaps).
+                let mut insts: Vec<Instance> = g.instances().to_vec();
+                insts.sort_by_key(|i| i.placement.start);
+                e.usize(insts.len());
+                for inst in &insts {
+                    e.u64(inst.vm);
+                    e.u8(inst.placement.profile.dense() as u8);
+                    e.u8(inst.placement.start);
+                    let (cpus, ram) = self.demands.get(&inst.vm).copied().unwrap_or((0, 0));
+                    e.u32(cpus);
+                    e.u32(ram);
+                }
+            }
+        }
+    }
+
+    /// Rebuild a data center from a [`DataCenter::snapshot_into`]
+    /// stream: construct pristine hosts, replay every resident instance
+    /// through [`DataCenter::place`] (host/GPU/start ascending, the
+    /// writer's order), then apply GPU and host health exactly as the
+    /// live run did (device transitions before host transitions), and
+    /// finally verify the result with the integrity checker. Failed or
+    /// banned capacity holds no VMs per the health contract, so the
+    /// place-before-health order is always feasible.
+    pub fn restore_from(d: &mut Dec) -> Result<DataCenter, String> {
+        struct PendingInst {
+            gpu: GpuRef,
+            vm: VmId,
+            profile: ProfileKey,
+            start: u8,
+            cpus: u32,
+            ram: u32,
+        }
+        let num_hosts = d.count(14)?;
+        let mut hosts = Vec::with_capacity(num_hosts);
+        let mut pending: Vec<PendingInst> = Vec::new();
+        let mut host_health: Vec<(u32, HealthState)> = Vec::new();
+        let mut gpu_health: Vec<(GpuRef, HealthState)> = Vec::new();
+        for _ in 0..num_hosts {
+            let id = d.u32()?;
+            let cpus = d.u32()?;
+            let ram_gb = d.u32()?;
+            let weight = d.f64()?;
+            let health = Self::decode_health(d)?;
+            if health != HealthState::Healthy {
+                host_health.push((id, health));
+            }
+            let num_gpus = d.count(2)?;
+            let mut models = Vec::with_capacity(num_gpus);
+            for g_idx in 0..num_gpus {
+                let model_tag = d.u8()? as usize;
+                if model_tag >= NUM_MODELS {
+                    return Err(format!("unknown GPU model tag {model_tag}"));
+                }
+                models.push(ALL_MODELS[model_tag]);
+                let gh = Self::decode_health(d)?;
+                let r = GpuRef { host: id, gpu: g_idx as u8 };
+                if gh != HealthState::Healthy {
+                    gpu_health.push((r, gh));
+                }
+                let num_insts = d.count(22)?;
+                for _ in 0..num_insts {
+                    let vm = d.u64()?;
+                    let dense = d.u8()? as usize;
+                    if dense >= NUM_PROFILE_KEYS {
+                        return Err(format!("profile dense index {dense} out of range"));
+                    }
+                    let profile = ProfileKey::from_dense(dense);
+                    let start = d.u8()?;
+                    let cpus = d.u32()?;
+                    let ram = d.u32()?;
+                    pending.push(PendingInst { gpu: r, vm, profile, start, cpus, ram });
+                }
+            }
+            let mut h = Host::with_models(id, cpus, ram_gb, &models);
+            h.weight = weight;
+            hosts.push(h);
+        }
+        let mut dc = DataCenter::new(hosts);
+        for p in &pending {
+            if p.gpu.host as usize >= dc.hosts.len() {
+                return Err(format!("instance on unknown host {}", p.gpu.host));
+            }
+            let spec = VmSpec {
+                id: p.vm,
+                profile: p.profile,
+                cpus: p.cpus,
+                ram_gb: p.ram,
+                arrival: 0,
+                departure: 0,
+                weight: 1.0,
+            };
+            dc.place(&spec, p.gpu, Placement { profile: p.profile, start: p.start });
+        }
+        for (r, h) in gpu_health {
+            dc.set_gpu_health(r, h);
+        }
+        for (id, h) in host_health {
+            dc.set_host_health(id, h);
+        }
+        dc.check_integrity().map_err(|e| format!("restored state fails integrity: {e}"))?;
+        Ok(dc)
     }
 }
 
@@ -1022,6 +1267,85 @@ mod tests {
         dc.set_gpu_health(r, HealthState::Banned);
         assert!(dc.check_integrity().is_err(), "banned GPU still holds a VM");
         dc.remove(1);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_mixed_fleet_with_health() {
+        use crate::cluster::HealthState;
+        use crate::mig::GpuModel;
+        use crate::util::codec::{Dec, Enc};
+        let mut dc = DataCenter::new(vec![
+            Host::with_models(0, 64, 256, &[GpuModel::A100_40, GpuModel::A30]),
+            Host::with_models(1, 32, 128, &[GpuModel::H100_80]),
+            Host::with_models(2, 64, 256, &[GpuModel::A100_40]),
+        ]);
+        dc.host_mut(2).weight = 2.5;
+        let vm1 = spec(1, Profile::P2g10gb);
+        dc.place(&vm1, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P2g10gb, start: 0 });
+        let k = GpuModel::A30.profile(0);
+        let vm2 = VmSpec { id: 2, profile: k, cpus: 2, ram_gb: 8, arrival: 0, departure: 50, weight: 1.0 };
+        dc.place(&vm2, GpuRef { host: 0, gpu: 1 }, Placement { profile: k, start: 0 });
+        // Degrade some capacity: a failed empty GPU and a draining host
+        // that keeps its resident.
+        dc.set_gpu_health(GpuRef { host: 2, gpu: 0 }, HealthState::Failed { until: 999 });
+        dc.set_host_health(0, HealthState::Draining);
+        dc.check_integrity().unwrap();
+
+        let mut e = Enc::new();
+        dc.snapshot_into(&mut e);
+        let bytes = e.into_bytes();
+        let got = DataCenter::restore_from(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(got.hosts().len(), 3);
+        assert_eq!(got.host(2).weight, 2.5);
+        assert_eq!(got.locate(1), dc.locate(1));
+        assert_eq!(got.locate(2), dc.locate(2));
+        assert_eq!(got.vm_demands(1), Some((4, 16)));
+        assert_eq!(got.vm_demands(2), Some((2, 8)));
+        assert_eq!(got.host_health(0), HealthState::Draining);
+        assert_eq!(got.gpu_health(GpuRef { host: 2, gpu: 0 }), HealthState::Failed { until: 999 });
+        assert_eq!(got.offline_gpus(), dc.offline_gpus());
+        assert_eq!(got.active_hardware(), dc.active_hardware());
+        assert_eq!(got.gpus_by_model(), dc.gpus_by_model());
+        assert_eq!(got.host(0).free_cpus(), dc.host(0).free_cpus());
+        assert_eq!(got.host(0).free_ram(), dc.host(0).free_ram());
+        got.check_integrity().unwrap();
+        // A truncated snapshot is an error, not a panic.
+        assert!(DataCenter::restore_from(&mut Dec::new(&bytes[..bytes.len() / 2])).is_err());
+    }
+
+    #[test]
+    fn try_check_integrity_attributes_the_offending_host() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P1g5gb);
+        dc.place(&vm, GpuRef { host: 1, gpu: 0 }, Placement { profile: Profile::P1g5gb, start: 6 });
+        // Corrupt host 1's GPU behind the index's back.
+        dc.host_mut(1).gpu_mut(0).remove_vm(1);
+        let report = dc.try_check_integrity().unwrap_err();
+        assert_eq!(report.host, Some(1));
+        assert!(!report.detail.is_empty());
+    }
+
+    #[test]
+    fn rebuild_derived_repairs_corrupted_indices() {
+        let mut dc = small_dc();
+        let vm = spec(1, Profile::P1g5gb);
+        let vm2 = spec(2, Profile::P2g10gb);
+        dc.place(&vm, GpuRef { host: 0, gpu: 0 }, Placement { profile: Profile::P1g5gb, start: 6 });
+        dc.place(&vm2, GpuRef { host: 1, gpu: 0 }, Placement { profile: Profile::P2g10gb, start: 0 });
+        // Corrupt: drop VM 1 from its GPU behind the index's back — the
+        // location map, cluster index and activity counters all go stale.
+        dc.host_mut(0).gpu_mut(0).remove_vm(1);
+        assert!(dc.try_check_integrity().is_err());
+        dc.rebuild_derived();
+        // Ground truth wins: VM 1 is gone, VM 2 intact, indices rebuilt.
+        // (Host 0's CPU/RAM reservation leak is ground-truth state, not
+        // derived — rebuild does not unreserve it, matching the
+        // documented limits.)
+        assert!(dc.locate(1).is_none());
+        assert!(dc.vm_demands(1).is_none());
+        assert_eq!(dc.locate(2).unwrap().gpu, GpuRef { host: 1, gpu: 0 });
+        assert_eq!(dc.resident_count(), 1);
         dc.check_integrity().unwrap();
     }
 

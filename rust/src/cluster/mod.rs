@@ -27,7 +27,7 @@ pub mod index;
 pub mod shard;
 pub mod vm;
 
-pub use datacenter::{DataCenter, GpuRef, VmLocation};
+pub use datacenter::{DataCenter, GpuRef, IntegrityReport, VmLocation};
 pub use health::HealthState;
 pub use host::Host;
 pub use index::ClusterIndex;

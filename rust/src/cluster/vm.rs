@@ -32,6 +32,33 @@ impl VmSpec {
     pub fn duration(&self) -> Time {
         self.departure.saturating_sub(self.arrival)
     }
+
+    /// Serialize for crash-safe snapshots ([`crate::recover`]).
+    pub(crate) fn encode(&self, e: &mut crate::util::codec::Enc) {
+        e.u64(self.id);
+        e.u8(self.profile.dense() as u8);
+        e.u32(self.cpus);
+        e.u32(self.ram_gb);
+        e.u64(self.arrival);
+        e.u64(self.departure);
+        e.f64(self.weight);
+    }
+
+    /// Inverse of [`VmSpec::encode`].
+    pub(crate) fn decode(d: &mut crate::util::codec::Dec) -> Result<VmSpec, String> {
+        let id = d.u64()?;
+        let dense = d.u8()? as usize;
+        if dense >= crate::mig::NUM_PROFILE_KEYS {
+            return Err(format!("VM spec has out-of-range profile key {dense}"));
+        }
+        let profile = crate::mig::ProfileKey::from_dense(dense);
+        let cpus = d.u32()?;
+        let ram_gb = d.u32()?;
+        let arrival = d.u64()?;
+        let departure = d.u64()?;
+        let weight = d.f64()?;
+        Ok(VmSpec { id, profile, cpus, ram_gb, arrival, departure, weight })
+    }
 }
 
 /// Seconds per simulated hour (metric sampling granularity).

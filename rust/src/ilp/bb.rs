@@ -7,11 +7,12 @@
 //!
 //! # Determinism contract
 //!
-//! The search is a pure function of the `Milp` description and the node
-//! limit: the DFS order, the relaxation pivots and the branching choice
-//! involve no randomness, no wall clock and no thread scheduling, so
-//! repeated `solve(limit)` calls — including truncated ones that return
-//! the incumbent at the cap — are byte-identical. Branching ties break
+//! The search is a pure function of the `Milp` description and the
+//! [`NodeBudget`]: the DFS order, the relaxation pivots and the
+//! branching choice involve no randomness, no wall clock and no thread
+//! scheduling, so repeated `solve_with(budget)` calls — including
+//! truncated ones that return the incumbent at the cap — are
+//! byte-identical. Branching ties break
 //! toward the **lowest variable index**: the selection key is
 //! `(priority class, -fractionality)` compared strictly, so a later
 //! variable only wins with a strictly better key. Callers that build
@@ -63,6 +64,41 @@ pub struct MilpSolution {
     pub nodes: usize,
 }
 
+/// Branch-and-bound search budget.
+///
+/// Replaces the legacy `solve(0)` sentinel, where a literal `0` meant
+/// "no cap" rather than "no nodes" — an ambiguity that read exactly
+/// backwards at call sites. [`Milp::solve_with`] takes this enum;
+/// the sentinel signature survives as a deprecated shim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeBudget {
+    /// Search to proven optimality.
+    #[default]
+    Unlimited,
+    /// Explore at most this many nodes; hitting the cap returns the
+    /// incumbent found so far, if any.
+    Nodes(u64),
+}
+
+impl NodeBudget {
+    /// Budget from the legacy sentinel encoding (`0` = unlimited).
+    pub fn from_limit(limit: usize) -> NodeBudget {
+        if limit == 0 {
+            NodeBudget::Unlimited
+        } else {
+            NodeBudget::Nodes(limit as u64)
+        }
+    }
+
+    /// True once `nodes` explored nodes exceed the budget.
+    pub fn exhausted(self, nodes: usize) -> bool {
+        match self {
+            NodeBudget::Unlimited => false,
+            NodeBudget::Nodes(cap) => nodes as u64 > cap,
+        }
+    }
+}
+
 const INT_TOL: f64 = 1e-6;
 
 impl Milp {
@@ -96,10 +132,20 @@ impl Milp {
         self.bounds[var] = (lo, hi);
     }
 
-    /// Solve exactly. Returns `None` when infeasible. `node_limit` caps
-    /// the search (0 = unlimited); hitting the cap returns the incumbent
-    /// if any.
+    /// Solve under the legacy sentinel encoding (`0` = unlimited).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use solve_with(NodeBudget) — the `0 = unlimited` sentinel is ambiguous"
+    )]
     pub fn solve(&self, node_limit: usize) -> Option<MilpSolution> {
+        self.solve_with(NodeBudget::from_limit(node_limit))
+    }
+
+    /// Solve to proven optimality, or up to the node budget. Returns
+    /// `None` when infeasible (or when the budget ran out before any
+    /// incumbent); a truncated search returns the incumbent found so
+    /// far.
+    pub fn solve_with(&self, budget: NodeBudget) -> Option<MilpSolution> {
         // Internal form: maximize. For minimization negate the objective.
         let sign = if self.maximize { 1.0 } else { -1.0 };
         let base_obj: Vec<f64> = self.objective.iter().map(|c| c * sign).collect();
@@ -112,7 +158,7 @@ impl Milp {
         let debug = std::env::var("GRMU_ILP_DEBUG").is_ok();
         while let Some(extra) = stack.pop() {
             nodes += 1;
-            if node_limit > 0 && nodes > node_limit {
+            if budget.exhausted(nodes) {
                 break;
             }
             if debug && nodes % 200 == 0 {
@@ -228,7 +274,7 @@ mod tests {
         for v in 0..3 {
             m.set_binary(v);
         }
-        let s = m.solve(0).unwrap();
+        let s = m.solve_with(NodeBudget::Unlimited).unwrap();
         assert!((s.objective - 220.0).abs() < 1e-6);
         assert_eq!(s.values.iter().map(|&v| v.round() as i32).collect::<Vec<_>>(), vec![0, 1, 1]);
     }
@@ -240,7 +286,7 @@ mod tests {
         m.constrain(vec![(0, 2.0), (1, 2.0)], Cmp::Le, 5.0);
         m.set_integer(0, 0.0, 10.0);
         m.set_integer(1, 0.0, 10.0);
-        let s = m.solve(0).unwrap();
+        let s = m.solve_with(NodeBudget::Unlimited).unwrap();
         assert!((s.objective - 2.0).abs() < 1e-6);
     }
 
@@ -252,7 +298,7 @@ mod tests {
         m.constrain(vec![(0, 1.0), (1, 2.0)], Cmp::Ge, 3.0);
         m.set_integer(0, 0.0, 2.0);
         m.set_integer(1, 0.0, 2.0);
-        let s = m.solve(0).unwrap();
+        let s = m.solve_with(NodeBudget::Unlimited).unwrap();
         assert!((s.objective - 7.0).abs() < 1e-6);
     }
 
@@ -262,7 +308,7 @@ mod tests {
         m.constrain(vec![(0, 1.0)], Cmp::Ge, 2.0);
         m.constrain(vec![(0, 1.0)], Cmp::Le, 1.0);
         m.set_binary(0);
-        assert!(m.solve(0).is_none());
+        assert!(m.solve_with(NodeBudget::Unlimited).is_none());
     }
 
     #[test]
@@ -273,7 +319,7 @@ mod tests {
         m.constrain(vec![(0, 1.0), (1, 1.0)], Cmp::Eq, 3.0);
         m.set_integer(0, 0.0, 5.0);
         m.bounds[1] = (0.0, 1.5);
-        let s = m.solve(0).unwrap();
+        let s = m.solve_with(NodeBudget::Unlimited).unwrap();
         assert!((s.objective - 6.0).abs() < 1e-6, "{s:?}");
     }
 
@@ -301,7 +347,7 @@ mod tests {
         m2.constrain(vec![(1, 1.0), (4, -4.0)], Cmp::Eq, 0.0); // z2 = 4 b2
         m2.constrain(vec![(0, 1.0), (1, -1.0), (2, -8.0)], Cmp::Le, -4.0); // z1+4 ≤ z2+8a
         m2.constrain(vec![(1, 1.0), (0, -1.0), (2, 8.0)], Cmp::Le, 4.0); // z2+4 ≤ z1+8(1-a)
-        let s = m2.solve(0).unwrap();
+        let s = m2.solve_with(NodeBudget::Unlimited).unwrap();
         assert!((s.objective - 4.0).abs() < 1e-6, "{s:?}");
         let _ = m;
     }
@@ -313,8 +359,24 @@ mod tests {
         for v in 0..3 {
             m.set_binary(v);
         }
-        // Tiny limit may or may not find the optimum but must terminate.
-        let _ = m.solve(1);
+        // Tiny budget may or may not find the optimum but must terminate.
+        let _ = m.solve_with(NodeBudget::Nodes(1));
+    }
+
+    /// The deprecated sentinel shim maps `0` to unlimited and positive
+    /// limits to node caps — legacy callers keep their exact behavior.
+    #[test]
+    #[allow(deprecated)]
+    fn sentinel_shim_matches_solve_with() {
+        let mut m = Milp::new(3, vec![60.0, 100.0, 120.0], true);
+        m.constrain(vec![(0, 10.0), (1, 20.0), (2, 30.0)], Cmp::Le, 50.0);
+        for v in 0..3 {
+            m.set_binary(v);
+        }
+        assert_eq!(NodeBudget::from_limit(0), NodeBudget::Unlimited);
+        assert_eq!(NodeBudget::from_limit(7), NodeBudget::Nodes(7));
+        assert_eq!(m.solve(0), m.solve_with(NodeBudget::Unlimited));
+        assert_eq!(m.solve(2), m.solve_with(NodeBudget::Nodes(2)));
     }
 
     /// Determinism contract: truncated searches are byte-reproducible —
@@ -331,15 +393,17 @@ mod tests {
             m.set_binary(v);
         }
         m.integral_objective = true;
-        for limit in [1usize, 3, 10, 0] {
-            let a = m.solve(limit);
-            let b = m.solve(limit);
-            let c = m.solve(limit);
-            assert_eq!(a, b, "limit {limit}: solve is not reproducible");
-            assert_eq!(b, c, "limit {limit}: solve is not reproducible");
+        let budgets =
+            [NodeBudget::Nodes(1), NodeBudget::Nodes(3), NodeBudget::Nodes(10), NodeBudget::Unlimited];
+        for budget in budgets {
+            let a = m.solve_with(budget);
+            let b = m.solve_with(budget);
+            let c = m.solve_with(budget);
+            assert_eq!(a, b, "{budget:?}: solve is not reproducible");
+            assert_eq!(b, c, "{budget:?}: solve is not reproducible");
         }
         // The untruncated optimum packs three items.
-        let s = m.solve(0).unwrap();
+        let s = m.solve_with(NodeBudget::Unlimited).unwrap();
         assert!((s.objective - 30.0).abs() < 1e-6, "{s:?}");
     }
 }

@@ -17,7 +17,7 @@ pub mod lp;
 pub mod model;
 pub mod online;
 
-pub use bb::{Cmp, Milp, MilpSolution};
+pub use bb::{Cmp, Milp, MilpSolution, NodeBudget};
 pub use lp::{LinearProgram, LpOutcome};
 pub use model::{IlpSolver, PlacementInstance, PlacementSolution};
 pub use online::{GapMeter, RollingIlp};

@@ -16,7 +16,7 @@
 //! fixed policy (§5.1). Heuristic acceptance can therefore never exceed
 //! the ILP's.
 
-use super::bb::{Cmp, Milp};
+use super::bb::{Cmp, Milp, NodeBudget};
 use crate::cluster::vm::{VmId, VmSpec};
 use crate::mig::profiles::NUM_BLOCKS;
 use std::collections::HashMap;
@@ -464,6 +464,7 @@ impl IlpSolver {
     /// instance + same budget → byte-identical solution (the `bb`
     /// module's determinism contract).
     pub fn solve_limited(&self, node_limit: usize) -> Option<PlacementSolution> {
+        let budget = NodeBudget::from_limit(node_limit);
         let vars = VarMap::new(&self.inst);
         let mut milp = self.build_base(&vars);
         let mut nodes = 0usize;
@@ -477,7 +478,7 @@ impl IlpSolver {
         milp.objective = c1.clone();
         milp.integral_objective = integral(&c1);
         milp.maximize = true;
-        let s1 = milp.solve(node_limit)?;
+        let s1 = milp.solve_with(budget)?;
         nodes += s1.nodes;
         let acceptance = s1.objective;
         let row: Vec<(usize, f64)> =
@@ -489,7 +490,7 @@ impl IlpSolver {
         milp.objective = c2.clone();
         milp.integral_objective = integral(&c2);
         milp.maximize = false;
-        let s2 = milp.solve(node_limit)?;
+        let s2 = milp.solve_with(budget)?;
         nodes += s2.nodes;
         let active = s2.objective;
         let row: Vec<(usize, f64)> =
@@ -506,7 +507,7 @@ impl IlpSolver {
             // No resident VMs: stage 2's solution is final.
             s2.clone()
         } else {
-            let s = milp.solve(node_limit)?;
+            let s = milp.solve_with(budget)?;
             nodes += s.nodes;
             s
         };

@@ -175,6 +175,49 @@ impl Policy for GapMeter {
     fn drain_gap_samples_into(&mut self, out: &mut Vec<f64>) {
         out.append(&mut self.samples);
     }
+
+    fn snapshot_state(&self, out: &mut Vec<u8>) {
+        let mut e = crate::util::codec::Enc::new();
+        let mut inner = Vec::new();
+        self.inner.snapshot_state(&mut inner);
+        e.blob(&inner);
+        e.u64(self.next_due);
+        let mut weights: Vec<(VmId, f64)> = self.weights.iter().map(|(&k, &v)| (k, v)).collect();
+        weights.sort_by_key(|&(k, _)| k);
+        e.usize(weights.len());
+        for (vm, w) in weights {
+            e.u64(vm);
+            e.f64(w);
+        }
+        e.usize(self.samples.len());
+        for &s in &self.samples {
+            e.f64(s);
+        }
+        out.extend_from_slice(e.bytes());
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = crate::util::codec::Dec::new(bytes);
+        let inner = d.blob()?.to_vec();
+        self.inner.restore_state(&inner)?;
+        self.next_due = d.u64()?;
+        let n = d.count(16)?;
+        self.weights = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let vm = d.u64()?;
+            let w = d.f64()?;
+            self.weights.insert(vm, w);
+        }
+        let n = d.count(8)?;
+        self.samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            self.samples.push(d.f64()?);
+        }
+        if !d.is_empty() {
+            return Err("trailing bytes in gap-meter state".into());
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -156,6 +156,21 @@ impl MigrationPlanner for RollingIlp {
             translate_into_plan(dc, &ex.inst, &ex.map, &sol, plan);
         }
     }
+
+    fn snapshot_state(&self, out: &mut Vec<u8>) {
+        let mut e = crate::util::codec::Enc::new();
+        e.opt_u64(self.last_tick_run);
+        out.extend_from_slice(e.bytes());
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = crate::util::codec::Dec::new(bytes);
+        self.last_tick_run = d.opt_u64()?;
+        if !d.is_empty() {
+            return Err("trailing bytes in ilp-repair state".into());
+        }
+        Ok(())
+    }
 }
 
 /// One destination GPU's share of an ILP solution.

@@ -91,6 +91,14 @@
 //!   [`sim::EventCore`] driven by a request channel, with serving
 //!   metrics (latency percentiles, throughput) on top. Coordinator runs
 //!   report the simulator's [`sim::SimResult`].
+//! * [`recover`] — crash-consistent persistence: versioned, checksummed
+//!   engine snapshots written atomically (temp file + fsync + rename),
+//!   an append-only interval journal for cross-checking resumed runs,
+//!   and the [`recover::OnCorruption`] graceful-degradation policy for
+//!   integrity violations (abort / quarantine / rebuild). CLI
+//!   `simulate --checkpoint-every H --checkpoint-dir D` checkpoints a
+//!   run; `--resume D` restores the newest valid snapshot and continues
+//!   byte-identically to an uninterrupted run.
 //! * [`report`] — renderers that regenerate every table and figure of the
 //!   paper's evaluation section, plus the parallel multi-seed ×
 //!   multi-policy sweep runner behind the `sweep` CLI subcommand
@@ -250,10 +258,14 @@
 //!
 //! * `IlpSolver::solve()` remains the unlimited offline reference;
 //!   `IlpSolver::solve_limited(n)` is the node-budgeted online entry
-//!   point. **Zero divergence warning:** `Milp::solve(0)` means
-//!   *unlimited*, while a zero `--ilp-nodes`/`--ilp-window` disables
+//!   point. The historical **zero divergence** — `Milp::solve(0)` meant
+//!   *unlimited* while a zero `--ilp-nodes`/`--ilp-window` disables
 //!   [`ilp::RollingIlp`] entirely (an online planner must never run
-//!   unbounded); the planner guards the zero before the solver sees it.
+//!   unbounded) — is now resolved at the type level: the solver's
+//!   canonical entry point is `Milp::solve_with(`[`ilp::NodeBudget`]`)`
+//!   (`Unlimited` / `Nodes(n)`), `Milp::solve(usize)` survives only as
+//!   a deprecated shim mapping `0 → Unlimited`, and the planner layer
+//!   still guards its own zero (= off) before constructing a budget.
 //! * The planner registry gained `ilp-repair`
 //!   (`policies::planned::planner_from_name`); CLI knobs `--ilp-window
 //!   K --ilp-nodes N --ilp-period HOURS` ride on
@@ -301,6 +313,44 @@
 //!   pass (sole-tenant GIs onto sibling shards' non-empty GPUs under
 //!   the [`migrate::MigrationBudget`]), surfacing as ordinary `Inter`
 //!   [`migrate::MigrationEvent`]s.
+//!
+//! ## Migration note (crash-safe persistence)
+//!
+//! The engine used to be run-to-completion and in-memory only; an
+//! integrity violation panicked the process. Runs can now checkpoint,
+//! resume and degrade gracefully. Code written against the old surface
+//! maps as follows:
+//!
+//! * Snapshot format: one frame per checkpoint (`GRMU` magic,
+//!   `recover::SNAPSHOT_VERSION`, kind tag, length, payload, FNV-1a
+//!   checksum). The version is bumped on **any** payload field-sequence
+//!   change and readers refuse unknown versions — there is no in-place
+//!   format migration; an old snapshot simply cannot seed a new build,
+//!   and recovery falls back to re-running the trace.
+//! * What is serialized: ground truth and run state only — hosts with
+//!   per-GPU models, health and resident instances, per-VM demand
+//!   entries, the departure heap, admission-queue contents, RNG
+//!   cursors (`util::rng::Rng::state_parts`), the fault-schedule
+//!   cursor, cumulative counters, samples/migration logs and per-policy
+//!   opaque state via [`policies::Policy::snapshot_state`] /
+//!   `restore_state` (planners mirror this via
+//!   [`migrate::MigrationPlanner::snapshot_state`]). What is *rebuilt*:
+//!   `ClusterIndex`, activity counters, VM locations and the offline-GPU
+//!   counter are re-derived on load by replaying placements onto fresh
+//!   hosts, then cross-checked with `check_integrity` — derived state
+//!   can therefore never be restored stale.
+//! * `DataCenter::check_integrity` (panic on violation via the caller's
+//!   `expect`) gained a non-panicking sibling
+//!   `try_check_integrity() -> Result<(), IntegrityReport>`; the engine
+//!   dispatches on [`recover::OnCorruption`] (`abort` keeps the
+//!   historical panic; `quarantine` bans the offending host after a
+//!   derived-state rebuild; `rebuild` just rebuilds). Repairs are
+//!   logged as [`ops::OpsEvent::StateRepair`] entries
+//!   (`sim::EventCore::state_repairs`) — never part of generated fault
+//!   schedules.
+//! * With checkpointing off (the default: `checkpoint_every_hours: 0`,
+//!   no `--checkpoint-dir`) the engine takes the exact pre-persistence
+//!   code path: no files, no extra state, byte-identical streams.
 
 pub mod cluster;
 pub mod coordinator;
@@ -309,6 +359,7 @@ pub mod mig;
 pub mod migrate;
 pub mod ops;
 pub mod policies;
+pub mod recover;
 pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -73,7 +73,8 @@ fn print_help() {
                      [--migration-budget N[:per-vm]] [--shards N] [--shard-threads N]\n\
                      [--shard-rebalance HOURS] [--shard-rebalance-planner NAME]\n\
                      [--ilp-window K] [--ilp-nodes N] [--ilp-period HOURS]\n\
-                     [--gap-every HOURS] [ops flags] [--quick] [--json FILE]\n\
+                     [--gap-every HOURS] [--checkpoint-every H --checkpoint-dir DIR]\n\
+                     [--resume DIR] [--on-corruption MODE] [ops flags] [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
@@ -99,6 +100,12 @@ fn print_help() {
            --preempt                 high-tier arrivals may preempt low-tier VMs\n\
            --arrival-process P       diurnal | bursty | flash-crowd\n\
            --priority-frac F         share of VMs promoted to the high tier\n\
+         \n\
+         RECOVERY FLAGS (crash-safe checkpoint/journal; off by default):\n\
+           --checkpoint-every H      snapshot the engine state every H simulated hours\n\
+           --checkpoint-dir DIR      where snapshots + interval journal are written\n\
+           --resume DIR              resume from the latest valid snapshot in DIR\n\
+           --on-corruption M         abort | quarantine | rebuild on integrity failure\n\
          \n\
          GPU MODELS: a100-40 (default) | a30 | a100-80 | h100-80\n\
          \n\
@@ -224,6 +231,18 @@ fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
     }
     cfg.ops.blast_radius = args.num_or("blast-radius", cfg.ops.blast_radius);
     cfg.ops.blast_hosts = args.num_or("blast-hosts", cfg.ops.blast_hosts);
+    cfg.checkpoint_every_hours = args.num_or("checkpoint-every", cfg.checkpoint_every_hours);
+    cfg.checkpoint_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+    cfg.resume_from = args.get("resume").map(std::path::PathBuf::from);
+    if let Some(mode) = args.get("on-corruption") {
+        match grmu::recover::OnCorruption::parse(mode) {
+            Ok(action) => cfg.on_corruption = action,
+            Err(e) => {
+                eprintln!("--on-corruption: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     cfg
 }
 

@@ -60,6 +60,21 @@ impl MigrationPlanner for PairwiseConsolidate {
         self.last = ctx.now;
         plan_consolidation(dc, ctx, plan);
     }
+
+    fn snapshot_state(&self, out: &mut Vec<u8>) {
+        let mut e = crate::util::codec::Enc::new();
+        e.u64(self.last);
+        out.extend_from_slice(e.bytes());
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = crate::util::codec::Dec::new(bytes);
+        self.last = d.u64()?;
+        if !d.is_empty() {
+            return Err("trailing bytes in consolidate state".into());
+        }
+        Ok(())
+    }
 }
 
 /// One consolidation round (Algorithm 5), appended to `plan`.

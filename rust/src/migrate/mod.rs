@@ -141,6 +141,36 @@ impl MigrationEvent {
     pub fn cost(&self) -> u64 {
         self.blocks as u64 * self.kind.weight()
     }
+
+    /// Serialize for crash-safe snapshots ([`crate::recover`]).
+    pub(crate) fn encode(&self, e: &mut crate::util::codec::Enc) {
+        e.u64(self.vm);
+        e.u32(self.from.host);
+        e.u8(self.from.gpu);
+        e.u32(self.to.host);
+        e.u8(self.to.gpu);
+        e.u8(self.kind.index() as u8);
+        e.u8(self.model as u8);
+        e.u8(self.blocks);
+    }
+
+    /// Inverse of [`MigrationEvent::encode`].
+    pub(crate) fn decode(d: &mut crate::util::codec::Dec) -> Result<MigrationEvent, String> {
+        let vm = d.u64()?;
+        let from = GpuRef { host: d.u32()?, gpu: d.u8()? };
+        let to = GpuRef { host: d.u32()?, gpu: d.u8()? };
+        let kind = match d.u8()? {
+            0 => MigrationKind::Intra,
+            1 => MigrationKind::Inter,
+            k => return Err(format!("malformed migration kind {k}")),
+        };
+        let model_idx = d.u8()? as usize;
+        let model = *crate::mig::ALL_MODELS
+            .get(model_idx)
+            .ok_or_else(|| format!("malformed GPU model index {model_idx}"))?;
+        let blocks = d.u8()?;
+        Ok(MigrationEvent { vm, from, to, kind, model, blocks })
+    }
 }
 
 /// What fired a planning round.
@@ -249,6 +279,24 @@ pub trait MigrationPlanner: Send {
     /// not respond to `ctx.trigger` (or whose own gating — period,
     /// threshold — says "not now") appends nothing.
     fn plan(&mut self, dc: &DataCenter, ctx: &PlanCtx, plan: &mut MigrationPlan);
+
+    /// Serialize decision-relevant planner state for the crash-safe
+    /// snapshot layer (see `crate::policies::Policy::snapshot_state` —
+    /// same contract). Stateless planners keep the default no-op;
+    /// cadence-gated planners must at least persist their "last ran"
+    /// clock so a resumed run keeps the cadence phase.
+    fn snapshot_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore state captured by [`MigrationPlanner::snapshot_state`]
+    /// into a freshly built planner of the same name and configuration.
+    /// The default accepts only an empty state.
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("planner {} carries no restorable state", self.name()))
+        }
+    }
 }
 
 /// Migration budgets bounding how much a [`PlannerStack`] may move:

@@ -148,6 +148,61 @@ impl PlannerStack {
         }
         applied
     }
+
+    /// Serialize the stack's mutable state (budget counters plus each
+    /// planner's own state, in stack order) for crash-safe snapshots.
+    /// The planner list and budget themselves are configuration: the
+    /// restoring side rebuilds an identically-shaped stack first and
+    /// then calls [`PlannerStack::restore_state`].
+    pub fn snapshot_state(&self, out: &mut Vec<u8>) {
+        let mut e = crate::util::codec::Enc::new();
+        let mut vm_moves: Vec<(VmId, u32)> = self.vm_moves.iter().map(|(&k, &v)| (k, v)).collect();
+        vm_moves.sort_by_key(|&(k, _)| k);
+        e.usize(vm_moves.len());
+        for (vm, n) in vm_moves {
+            e.u64(vm);
+            e.u32(n);
+        }
+        e.u64(self.interval);
+        e.u32(self.interval_moves);
+        e.usize(self.planners.len());
+        for planner in &self.planners {
+            let mut state = Vec::new();
+            planner.snapshot_state(&mut state);
+            e.blob(&state);
+        }
+        out.extend_from_slice(e.bytes());
+    }
+
+    /// Inverse of [`PlannerStack::snapshot_state`]. Fails when the
+    /// snapshot's planner count disagrees with this stack's shape.
+    pub fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = crate::util::codec::Dec::new(bytes);
+        let n = d.count(12)?;
+        self.vm_moves = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let vm = d.u64()?;
+            let moves = d.u32()?;
+            self.vm_moves.insert(vm, moves);
+        }
+        self.interval = d.u64()?;
+        self.interval_moves = d.u32()?;
+        let n = d.count(8)?;
+        if n != self.planners.len() {
+            return Err(format!(
+                "snapshot has {n} planner states but the stack holds {}",
+                self.planners.len()
+            ));
+        }
+        for planner in &mut self.planners {
+            let state = d.blob()?.to_vec();
+            planner.restore_state(&state)?;
+        }
+        if !d.is_empty() {
+            return Err("trailing bytes in planner-stack state".into());
+        }
+        Ok(())
+    }
 }
 
 impl std::fmt::Debug for PlannerStack {

@@ -106,6 +106,74 @@ pub enum OpsEvent {
     DrainStart { host: u32, until: Time },
     /// Maintenance drain ends; the host is schedulable again.
     DrainDone { host: u32 },
+    /// The engine repaired corrupted derived state at a maintenance
+    /// tick (see `recover::OnCorruption`): `host` is the quarantined
+    /// host, or [`STATE_REPAIR_NO_HOST`] when the rebuild was
+    /// cluster-wide. Never part of a generated schedule — it is logged
+    /// by the event core, not replayed by it.
+    StateRepair { host: u32 },
+}
+
+/// Sentinel host id of an [`OpsEvent::StateRepair`] that was not
+/// attributable to a single host.
+pub const STATE_REPAIR_NO_HOST: u32 = u32::MAX;
+
+impl OpsEvent {
+    /// Serialize for crash-safe snapshots ([`crate::recover`]).
+    pub(crate) fn encode(&self, e: &mut crate::util::codec::Enc) {
+        match *self {
+            OpsEvent::GpuFail { gpu, until } => {
+                e.u8(0);
+                e.u32(gpu.host);
+                e.u8(gpu.gpu);
+                e.u64(until);
+            }
+            OpsEvent::GpuRepair { gpu } => {
+                e.u8(1);
+                e.u32(gpu.host);
+                e.u8(gpu.gpu);
+            }
+            OpsEvent::HostFail { host, until } => {
+                e.u8(2);
+                e.u32(host);
+                e.u64(until);
+            }
+            OpsEvent::HostRepair { host } => {
+                e.u8(3);
+                e.u32(host);
+            }
+            OpsEvent::DrainStart { host, until } => {
+                e.u8(4);
+                e.u32(host);
+                e.u64(until);
+            }
+            OpsEvent::DrainDone { host } => {
+                e.u8(5);
+                e.u32(host);
+            }
+            OpsEvent::StateRepair { host } => {
+                e.u8(6);
+                e.u32(host);
+            }
+        }
+    }
+
+    /// Inverse of [`OpsEvent::encode`].
+    pub(crate) fn decode(d: &mut crate::util::codec::Dec) -> Result<OpsEvent, String> {
+        Ok(match d.u8()? {
+            0 => OpsEvent::GpuFail {
+                gpu: GpuRef { host: d.u32()?, gpu: d.u8()? },
+                until: d.u64()?,
+            },
+            1 => OpsEvent::GpuRepair { gpu: GpuRef { host: d.u32()?, gpu: d.u8()? } },
+            2 => OpsEvent::HostFail { host: d.u32()?, until: d.u64()? },
+            3 => OpsEvent::HostRepair { host: d.u32()? },
+            4 => OpsEvent::DrainStart { host: d.u32()?, until: d.u64()? },
+            5 => OpsEvent::DrainDone { host: d.u32()? },
+            6 => OpsEvent::StateRepair { host: d.u32()? },
+            t => return Err(format!("malformed ops-event tag {t}")),
+        })
+    }
 }
 
 /// Draw the full fault/maintenance schedule for `hosts` under `cfg`,
@@ -279,6 +347,33 @@ impl FaultInjector {
     pub fn into_parts(self) -> (Vec<(Time, OpsEvent)>, u32) {
         debug_assert_eq!(self.cursor, 0, "split before replay");
         (self.schedule, self.ban_after)
+    }
+
+    /// Mid-run snapshot of the replay state for the crash-safe
+    /// persistence layer: `(schedule, cursor, failure tally, ban
+    /// threshold)`. Unlike [`FaultInjector::into_parts`] this is legal
+    /// at any point of the replay — the cursor and the per-GPU failure
+    /// tally are exactly what a resumed run must not lose.
+    pub fn snapshot_parts(&self) -> (&[(Time, OpsEvent)], usize, Vec<((u32, u8), u32)>, u32) {
+        let mut failures: Vec<((u32, u8), u32)> = self.failures.iter().map(|(&k, &v)| (k, v)).collect();
+        failures.sort_unstable();
+        (&self.schedule, self.cursor, failures, self.ban_after)
+    }
+
+    /// Rebuild an injector at an exact replay position captured by
+    /// [`FaultInjector::snapshot_parts`].
+    pub fn from_snapshot(
+        schedule: Vec<(Time, OpsEvent)>,
+        cursor: usize,
+        failures: Vec<((u32, u8), u32)>,
+        ban_after: u32,
+    ) -> FaultInjector {
+        FaultInjector {
+            schedule,
+            cursor,
+            failures: failures.into_iter().collect(),
+            ban_after,
+        }
     }
 
     /// Any events left to replay?
@@ -457,6 +552,25 @@ mod tests {
         let (parts, ban) = inj.into_parts();
         assert_eq!(parts, sched);
         assert_eq!(ban, 3);
+    }
+
+    #[test]
+    fn injector_snapshot_parts_round_trips_mid_replay() {
+        let r = GpuRef { host: 0, gpu: 1 };
+        let sched = vec![
+            (10, OpsEvent::GpuFail { gpu: r, until: 20 }),
+            (20, OpsEvent::GpuRepair { gpu: r }),
+            (40, OpsEvent::HostFail { host: 2, until: 50 }),
+        ];
+        let mut inj = FaultInjector::new(sched, 2);
+        let _ = inj.pop_due(15);
+        inj.record_failure(r);
+        let (schedule, cursor, failures, ban) = inj.snapshot_parts();
+        let mut twin = FaultInjector::from_snapshot(schedule.to_vec(), cursor, failures, ban);
+        assert_eq!(twin.pop_due(25), inj.pop_due(25));
+        assert_eq!(twin.pop_due(60), inj.pop_due(60));
+        assert!(twin.record_failure(r), "restored tally keeps the first strike");
+        assert_eq!(twin.is_exhausted(), inj.is_exhausted());
     }
 
     #[test]

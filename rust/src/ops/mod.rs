@@ -44,5 +44,5 @@ pub mod queue;
 
 pub use crate::cluster::HealthState;
 pub use evacuate::plan_evacuation;
-pub use fault::{generate_schedule, FaultInjector, OpsConfig, OpsEvent};
+pub use fault::{generate_schedule, FaultInjector, OpsConfig, OpsEvent, STATE_REPAIR_NO_HOST};
 pub use queue::{tier_of, AdmissionQueue, QueueConfig, QueuedRequest, Tier};

@@ -121,6 +121,14 @@ impl AdmissionQueue {
     /// Pop every entry whose deadline has passed at `now`. Uniform TTLs
     /// make deadlines monotone front-to-back, so expired entries are
     /// exactly a prefix.
+    ///
+    /// Boundary contract: the deadline is **inclusive** — an entry with
+    /// `deadline == now` is expired, not retried. The event core calls
+    /// this with the closing interval's end time *before* its FIFO
+    /// retry pass, so a VM queued at interval `t` whose TTL lapses
+    /// exactly at a later retry interval's boundary counts `Expired`
+    /// there; it never gets a free extra retry from the tie
+    /// (`ttl_boundary` regression tests here and in `sim::event_core`).
     pub fn pop_expired(&mut self, now: Time, mut on_expire: impl FnMut(QueuedRequest)) {
         while let Some(front) = self.q.front() {
             if front.deadline > now {
@@ -213,6 +221,22 @@ mod tests {
         let ids: Vec<u64> = q.iter().map(|r| r.spec.id).collect();
         assert_eq!(ids, vec![2, 4]);
         q.verify().unwrap();
+    }
+
+    #[test]
+    fn ttl_boundary_deadline_equal_to_now_expires() {
+        // The inclusive-deadline edge: a TTL lapsing *exactly* at the
+        // retry boundary must expire, not slip through for another
+        // retry round.
+        let cfg = QueueConfig { capacity: 4, ttl_hours: 2, preemption: false };
+        let mut q = AdmissionQueue::new(cfg);
+        assert!(q.try_enqueue(spec(1, 1.0), HOUR)); // deadline = 3·HOUR
+        let mut expired = Vec::new();
+        q.pop_expired(3 * HOUR - 1, |r| expired.push(r.spec.id));
+        assert!(expired.is_empty(), "one second early keeps it parked");
+        q.pop_expired(3 * HOUR, |r| expired.push(r.spec.id));
+        assert_eq!(expired, vec![1], "deadline == now is expired");
+        assert!(q.is_empty());
     }
 
     #[test]

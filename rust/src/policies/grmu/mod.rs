@@ -285,6 +285,62 @@ impl Policy for Grmu {
         // per-interval reallocation in steady state.
         out.append(&mut self.events);
     }
+
+    fn snapshot_state(&self, out: &mut Vec<u8>) {
+        let mut e = crate::util::codec::Enc::new();
+        e.bool(self.initialized);
+        e.usize(self.heavy_capacity);
+        e.usize(self.light_capacity);
+        let basket = |e: &mut crate::util::codec::Enc, set: &BTreeSet<GpuRef>| {
+            e.usize(set.len());
+            for r in set {
+                e.u32(r.host);
+                e.u8(r.gpu);
+            }
+        };
+        basket(&mut e, &self.pool);
+        basket(&mut e, &self.heavy);
+        basket(&mut e, &self.light);
+        let mut stack = Vec::new();
+        self.stack.snapshot_state(&mut stack);
+        e.blob(&stack);
+        e.usize(self.events.len());
+        for ev in &self.events {
+            ev.encode(&mut e);
+        }
+        out.extend_from_slice(e.bytes());
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = crate::util::codec::Dec::new(bytes);
+        self.initialized = d.bool()?;
+        self.heavy_capacity = d.usize()?;
+        self.light_capacity = d.usize()?;
+        let mut basket = |d: &mut crate::util::codec::Dec| -> Result<BTreeSet<GpuRef>, String> {
+            let n = d.count(5)?;
+            let mut set = BTreeSet::new();
+            for _ in 0..n {
+                let host = d.u32()?;
+                let gpu = d.u8()?;
+                set.insert(GpuRef { host, gpu });
+            }
+            Ok(set)
+        };
+        self.pool = basket(&mut d)?;
+        self.heavy = basket(&mut d)?;
+        self.light = basket(&mut d)?;
+        let stack = d.blob()?.to_vec();
+        self.stack.restore_state(&stack)?;
+        let n = d.count(21)?;
+        self.events = Vec::with_capacity(n);
+        for _ in 0..n {
+            self.events.push(MigrationEvent::decode(&mut d)?);
+        }
+        if !d.is_empty() {
+            return Err("trailing bytes in GRMU state".into());
+        }
+        Ok(())
+    }
 }
 
 /// Test-support accessors (used by integration tests and examples).

@@ -162,6 +162,38 @@ impl Policy for Mecc {
             ctx.decisions.push(d);
         }
     }
+
+    fn snapshot_state(&self, out: &mut Vec<u8>) {
+        // `counts` is a pure function of `history`, and the ECC tables
+        // are recomputed per batch — the window is the whole state.
+        let mut e = crate::util::codec::Enc::new();
+        e.usize(self.history.len());
+        for &(t, idx) in &self.history {
+            e.u64(t);
+            e.usize(idx);
+        }
+        out.extend_from_slice(e.bytes());
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = crate::util::codec::Dec::new(bytes);
+        let n = d.count(16)?;
+        self.history = VecDeque::with_capacity(n);
+        self.counts = [0; NUM_PROFILE_KEYS];
+        for _ in 0..n {
+            let t = d.u64()?;
+            let idx = d.usize()?;
+            if idx >= NUM_PROFILE_KEYS {
+                return Err(format!("MECC history has out-of-range profile key {idx}"));
+            }
+            self.history.push_back((t, idx));
+            self.counts[idx] += 1;
+        }
+        if !d.is_empty() {
+            return Err("trailing bytes in MECC state".into());
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -407,6 +407,29 @@ pub trait Policy: Send {
     /// forward so the meter is reachable wherever it sits in the
     /// composition.
     fn drain_gap_samples_into(&mut self, _out: &mut Vec<f64>) {}
+
+    /// Serialize this policy's internal decision-relevant state for the
+    /// crash-safe snapshot layer (`crate::recover`), appending
+    /// [`crate::util::codec`]-encoded bytes to `out`. Stateless
+    /// policies (FF/BF/MCC) keep the default no-op — an empty state.
+    /// Stateful policies (MECC windows, GRMU baskets, planner wrappers)
+    /// must write everything that influences future decisions;
+    /// recomputable caches are elided and rebuilt on the next batch.
+    fn snapshot_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore state captured by [`Policy::snapshot_state`] into a
+    /// freshly built policy of the same registry name and
+    /// configuration. The default accepts only an empty state (what the
+    /// default `snapshot_state` produces) — a non-empty payload landing
+    /// on a stateless policy means a name/config mismatch and is an
+    /// error, never a silent drop.
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("policy {} carries no restorable state", self.name()))
+        }
+    }
 }
 
 /// Visit placement candidates for `profile` in `globalIndex` order,

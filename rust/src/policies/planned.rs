@@ -123,6 +123,38 @@ impl Policy for Planned {
     fn drain_gap_samples_into(&mut self, out: &mut Vec<f64>) {
         self.inner.drain_gap_samples_into(out);
     }
+
+    fn snapshot_state(&self, out: &mut Vec<u8>) {
+        let mut e = crate::util::codec::Enc::new();
+        let mut inner = Vec::new();
+        self.inner.snapshot_state(&mut inner);
+        e.blob(&inner);
+        let mut stack = Vec::new();
+        self.stack.snapshot_state(&mut stack);
+        e.blob(&stack);
+        e.usize(self.events.len());
+        for ev in &self.events {
+            ev.encode(&mut e);
+        }
+        out.extend_from_slice(e.bytes());
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = crate::util::codec::Dec::new(bytes);
+        let inner = d.blob()?.to_vec();
+        self.inner.restore_state(&inner)?;
+        let stack = d.blob()?.to_vec();
+        self.stack.restore_state(&stack)?;
+        let n = d.count(21)?;
+        self.events = Vec::with_capacity(n);
+        for _ in 0..n {
+            self.events.push(MigrationEvent::decode(&mut d)?);
+        }
+        if !d.is_empty() {
+            return Err("trailing bytes in composed-policy state".into());
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

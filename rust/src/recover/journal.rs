@@ -1,0 +1,220 @@
+//! Append-only interval journal (write-ahead log).
+//!
+//! One [`IntervalRecord`] is appended per closed interval with the
+//! run's *cumulative* counters. Each record is individually framed as
+//! `len(u32) ++ payload ++ fnv1a(payload)(u64)`, so a crash mid-append
+//! tears at most the final record: sequential reads stop at the first
+//! record that fails its length or checksum.
+//!
+//! The journal is not replayed to mutate state — snapshots carry the
+//! full engine image, and the trace re-drive is deterministic. Its job
+//! is *cross-checking*: a resumed run re-closes intervals the crashed
+//! run already journaled and verifies it reproduces the exact same
+//! counters, turning a trace/config mismatch into a loud error instead
+//! of a silently divergent "recovery".
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::policies::RejectCounts;
+use crate::util::codec::{fnv1a, Dec, Enc};
+
+/// Cumulative run counters at one closed interval boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntervalRecord {
+    /// The interval index that just closed.
+    pub hour: u64,
+    /// Cumulative requests offered so far.
+    pub requested: u64,
+    /// Cumulative acceptances so far.
+    pub accepted: u64,
+    /// Cumulative per-reason rejection counts.
+    pub rejections: RejectCounts,
+    /// Cumulative migration events performed.
+    pub migrations: u64,
+    /// Cumulative VM interruptions from faults.
+    pub interrupted: u64,
+    /// Admission-queue length at the boundary.
+    pub queue_len: u64,
+}
+
+impl IntervalRecord {
+    fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(96);
+        e.u64(self.hour);
+        e.u64(self.requested);
+        e.u64(self.accepted);
+        for &r in &self.rejections {
+            e.u64(r);
+        }
+        e.u64(self.migrations);
+        e.u64(self.interrupted);
+        e.u64(self.queue_len);
+        e.into_bytes()
+    }
+
+    fn decode(bytes: &[u8]) -> Result<IntervalRecord, String> {
+        let mut d = Dec::new(bytes);
+        let hour = d.u64()?;
+        let requested = d.u64()?;
+        let accepted = d.u64()?;
+        let mut rejections = RejectCounts::default();
+        for r in rejections.iter_mut() {
+            *r = d.u64()?;
+        }
+        let rec = IntervalRecord {
+            hour,
+            requested,
+            accepted,
+            rejections,
+            migrations: d.u64()?,
+            interrupted: d.u64()?,
+            queue_len: d.u64()?,
+        };
+        if !d.is_empty() {
+            return Err("journal record has trailing bytes".into());
+        }
+        Ok(rec)
+    }
+}
+
+/// Append-only journal file (`journal.grmuj` inside the checkpoint
+/// directory).
+#[derive(Debug, Clone)]
+pub struct Journal {
+    path: PathBuf,
+}
+
+impl Journal {
+    /// Conventional journal path inside a checkpoint directory.
+    pub fn in_dir(dir: &Path) -> Journal {
+        Journal { path: dir.join("journal.grmuj") }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record and fsync. The record is framed individually,
+    /// so a crash during the append tears only this record.
+    pub fn append(&self, rec: &IntervalRecord) -> std::io::Result<()> {
+        let payload = rec.encode();
+        let mut framed = Vec::with_capacity(payload.len() + 12);
+        framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&payload);
+        framed.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        let mut f = fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        f.write_all(&framed)?;
+        f.sync_all()
+    }
+
+    /// Read every intact record in order, stopping at the first torn or
+    /// corrupt one (the crash frontier). A missing file is an empty
+    /// journal.
+    pub fn read_all(&self) -> Vec<IntervalRecord> {
+        let Ok(bytes) = fs::read(&self.path) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        let mut at = 0usize;
+        while bytes.len() - at >= 4 {
+            let len = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+            let Some(end) = at.checked_add(4 + len + 8) else { break };
+            if end > bytes.len() {
+                break;
+            }
+            let payload = &bytes[at + 4..at + 4 + len];
+            let sum = u64::from_le_bytes(bytes[at + 4 + len..end].try_into().unwrap());
+            if fnv1a(payload) != sum {
+                break;
+            }
+            match IntervalRecord::decode(payload) {
+                Ok(rec) => out.push(rec),
+                Err(_) => break,
+            }
+            at = end;
+        }
+        out
+    }
+
+    /// Hour of the last intact record, if any.
+    pub fn last_hour(&self) -> Option<u64> {
+        self.read_all().last().map(|r| r.hour)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "grmu-journal-test-{}-{tag}-{n}",
+            std::process::id()
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn record(hour: u64) -> IntervalRecord {
+        IntervalRecord {
+            hour,
+            requested: hour * 10,
+            accepted: hour * 9,
+            rejections: [hour, 0, 1, 0, 2, 0],
+            migrations: hour / 2,
+            interrupted: 0,
+            queue_len: 3,
+        }
+    }
+
+    #[test]
+    fn appends_and_reads_back_in_order() {
+        let dir = scratch_dir("rw");
+        let j = Journal::in_dir(&dir);
+        for h in 1..=5 {
+            j.append(&record(h)).unwrap();
+        }
+        let got = j.read_all();
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0], record(1));
+        assert_eq!(got[4], record(5));
+        assert_eq!(j.last_hour(), Some(5));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_record_is_dropped() {
+        let dir = scratch_dir("torn");
+        let j = Journal::in_dir(&dir);
+        for h in 1..=3 {
+            j.append(&record(h)).unwrap();
+        }
+        // Tear the last record: drop the final 5 bytes of the file.
+        let bytes = fs::read(j.path()).unwrap();
+        fs::write(j.path(), &bytes[..bytes.len() - 5]).unwrap();
+        let got = j.read_all();
+        assert_eq!(got.len(), 2);
+        assert_eq!(j.last_hour(), Some(2));
+        // A corrupt middle record hides everything after it.
+        let mut bytes = fs::read(j.path()).unwrap();
+        bytes[6] ^= 0x01;
+        fs::write(j.path(), &bytes).unwrap();
+        assert!(j.read_all().is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_journal_is_empty() {
+        let dir = scratch_dir("missing");
+        let j = Journal::in_dir(&dir);
+        assert!(j.read_all().is_empty());
+        assert_eq!(j.last_hour(), None);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

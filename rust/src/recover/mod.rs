@@ -1,0 +1,369 @@
+//! Crash-consistent persistence for the simulation engine.
+//!
+//! A long online run must survive a controller crash without losing the
+//! placement state it has accumulated. This module provides the three
+//! pieces the engine needs:
+//!
+//! * **Framed snapshots** ([`encode_frame`]/[`decode_frame`] +
+//!   [`SnapshotStore`]) — a full engine image (`DataCenter` +
+//!   `EventCore` run state, or every shard of a `ShardedCore`) encoded
+//!   with the [`crate::util::codec`] byte codec, wrapped in a versioned
+//!   frame with an FNV-1a checksum, and written **atomically**: the
+//!   payload goes to a temp file, is fsynced, and is renamed into place
+//!   (then the directory is fsynced), so a crash mid-write leaves either
+//!   the old snapshot set or the old set plus one new complete file —
+//!   never a half-written "latest".
+//! * **Interval journal** ([`Journal`] + [`IntervalRecord`]) — a tiny
+//!   write-ahead record appended at every interval boundary with the
+//!   run's cumulative counters. On recovery the engine loads the newest
+//!   *valid* snapshot (torn files are skipped by checksum), re-drives
+//!   the deterministic trace from the snapshot clock, and cross-checks
+//!   each re-closed interval against the journal suffix — a mismatch
+//!   means the trace or configuration differs from the crashed run and
+//!   recovery aborts loudly instead of silently diverging.
+//! * **Graceful degradation** ([`OnCorruption`]) — what the engine does
+//!   when `DataCenter::try_check_integrity` reports a violation at a
+//!   maintenance tick: abort (the historical panic), quarantine the
+//!   offending host (rebuild derived state, evict its residents, ban
+//!   it), or rebuild derived state in place. Repairs surface as
+//!   `OpsEvent::StateRepair` entries in the engine's repair log.
+//!
+//! Determinism is what makes recovery *byte-identical* rather than
+//! merely plausible: the snapshot captures every bit of engine state
+//! that influences future decisions (RNG cursors, policy state, queue
+//! contents, fault-schedule cursor), and the determinism contracts from
+//! the cluster/sim layers guarantee the resumed run replays the exact
+//! decision stream of an uninterrupted twin. `rust/tests/crash_recovery.rs`
+//! locks this across policies × shard counts × ops schedules × kill
+//! points.
+
+mod journal;
+mod snapshot;
+
+pub use journal::{IntervalRecord, Journal};
+pub use snapshot::SnapshotStore;
+
+use crate::util::codec::fnv1a;
+use std::collections::VecDeque;
+use std::path::Path;
+
+/// Magic prefix of every snapshot frame.
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"GRMU";
+
+/// Snapshot format version. Bump on any change to the payload field
+/// sequence; readers refuse versions they do not know (recovery then
+/// falls back to an older snapshot or a fresh run — never a guess).
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// What kind of engine image a snapshot frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotKind {
+    /// A single `EventCore` (classic engine).
+    Core,
+    /// A `ShardedCore` (router state + one core image per shard).
+    Sharded,
+}
+
+impl SnapshotKind {
+    fn tag(self) -> u8 {
+        match self {
+            SnapshotKind::Core => 1,
+            SnapshotKind::Sharded => 2,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<SnapshotKind, String> {
+        match tag {
+            1 => Ok(SnapshotKind::Core),
+            2 => Ok(SnapshotKind::Sharded),
+            t => Err(format!("unknown snapshot kind tag {t}")),
+        }
+    }
+}
+
+/// Policy for integrity violations detected at a maintenance tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OnCorruption {
+    /// Panic, as the engine always has (default).
+    #[default]
+    Abort,
+    /// Rebuild derived state from ground truth, then evict and ban the
+    /// offending host (when one is identifiable) and keep serving.
+    Quarantine,
+    /// Rebuild derived state (index, activity counters, locations) from
+    /// ground truth in place and keep serving.
+    Rebuild,
+}
+
+impl OnCorruption {
+    /// Parse a CLI value. Accepts `abort`, `quarantine`, `rebuild`.
+    pub fn parse(s: &str) -> Result<OnCorruption, String> {
+        match s {
+            "abort" => Ok(OnCorruption::Abort),
+            "quarantine" => Ok(OnCorruption::Quarantine),
+            "rebuild" => Ok(OnCorruption::Rebuild),
+            other => Err(format!(
+                "unknown --on-corruption mode '{other}' (expected abort|quarantine|rebuild)"
+            )),
+        }
+    }
+}
+
+/// Wrap an encoded payload in the versioned, checksummed snapshot frame:
+/// `magic ++ version(u16) ++ kind(u8) ++ len(u64) ++ payload ++ fnv1a(payload)`.
+pub fn encode_frame(kind: SnapshotKind, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 23);
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    out.push(kind.tag());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    out
+}
+
+/// Validate a snapshot frame and return its kind and payload slice.
+/// Any damage — wrong magic, unknown version, truncation, checksum
+/// mismatch, trailing garbage — is an `Err`, so callers can treat a torn
+/// file as "not a snapshot" and fall back.
+pub fn decode_frame(bytes: &[u8]) -> Result<(SnapshotKind, &[u8]), String> {
+    if bytes.len() < 23 {
+        return Err(format!("frame too short ({} bytes)", bytes.len()));
+    }
+    if bytes[..4] != SNAPSHOT_MAGIC {
+        return Err("bad snapshot magic".into());
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    if version != SNAPSHOT_VERSION {
+        return Err(format!(
+            "unsupported snapshot version {version} (this build reads {SNAPSHOT_VERSION})"
+        ));
+    }
+    let kind = SnapshotKind::from_tag(bytes[6])?;
+    let len = u64::from_le_bytes(bytes[7..15].try_into().unwrap());
+    let len = usize::try_from(len).map_err(|_| "payload length overflows".to_string())?;
+    let expected_total = 15usize
+        .checked_add(len)
+        .and_then(|n| n.checked_add(8))
+        .ok_or_else(|| "payload length overflows".to_string())?;
+    if bytes.len() != expected_total {
+        return Err(format!(
+            "frame length mismatch: header says {expected_total} bytes, file has {}",
+            bytes.len()
+        ));
+    }
+    let payload = &bytes[15..15 + len];
+    let sum = u64::from_le_bytes(bytes[15 + len..].try_into().unwrap());
+    if fnv1a(payload) != sum {
+        return Err("snapshot checksum mismatch (torn or corrupt write)".into());
+    }
+    Ok((kind, payload))
+}
+
+/// Engine-side checkpoint driver: owns one checkpoint directory's
+/// [`SnapshotStore`] and [`Journal`] and implements the per-interval
+/// protocol shared by the single-core and sharded engines:
+///
+/// * On a **fresh** run, stale `snap-*.grmu` files and the journal from
+///   any earlier run in the same directory are removed first — leftover
+///   state drawn from a different trace would poison a later resume.
+/// * On a **resume**, the journal suffix from the crashed run (records
+///   at or past the snapshot hour) is held for cross-checking: each
+///   re-closed interval must reproduce the crashed run's cumulative
+///   counters exactly, or recovery aborts loudly instead of silently
+///   diverging. Intervals past the crash frontier append fresh records.
+/// * Full engine images are written on the `every`-interval cadence
+///   (0 = journal only).
+pub struct Checkpointer {
+    store: SnapshotStore,
+    journal: Journal,
+    every: u64,
+    kind: SnapshotKind,
+    /// Crashed-run journal records still awaiting cross-check,
+    /// ascending by hour; drained front-to-back as intervals re-close.
+    pending_check: VecDeque<IntervalRecord>,
+}
+
+impl Checkpointer {
+    /// Open `dir` for checkpointing. `resume_hour` is the hour of the
+    /// snapshot the run was restored from (`None` = fresh run).
+    pub fn new(
+        dir: &Path,
+        every: u64,
+        kind: SnapshotKind,
+        resume_hour: Option<u64>,
+    ) -> std::io::Result<Checkpointer> {
+        let store = SnapshotStore::open(dir)?;
+        let journal = Journal::in_dir(dir);
+        let pending_check = match resume_hour {
+            Some(h) => journal.read_all().into_iter().filter(|r| r.hour >= h).collect(),
+            None => {
+                for hour in store.hours() {
+                    let _ = std::fs::remove_file(store.path_for(hour));
+                }
+                let _ = std::fs::remove_file(journal.path());
+                VecDeque::new()
+            }
+        };
+        Ok(Checkpointer { store, journal, every, kind, pending_check })
+    }
+
+    /// Journal records from the crashed run not yet cross-checked.
+    pub fn pending_checks(&self) -> usize {
+        self.pending_check.len()
+    }
+
+    /// Record one closed interval: cross-check it against the crashed
+    /// run's journal if it falls inside the re-drive window, append it
+    /// otherwise, and write a full snapshot on the cadence (`snapshot`
+    /// is only invoked when an image is actually due).
+    ///
+    /// Panics on a cross-check mismatch: the resumed run is not
+    /// reproducing the crashed run, which means the trace or the
+    /// configuration differs — continuing would be silent divergence.
+    pub fn interval_closed(&mut self, rec: &IntervalRecord, snapshot: impl FnOnce() -> Vec<u8>) {
+        match self.pending_check.front() {
+            Some(prior) if prior.hour <= rec.hour => {
+                assert_eq!(
+                    prior, rec,
+                    "journal cross-check failed at interval {}: the resumed run diverged \
+                     from the crashed run (trace or configuration mismatch)",
+                    rec.hour
+                );
+                self.pending_check.pop_front();
+            }
+            _ => {
+                self.journal.append(rec).expect("journal append failed");
+            }
+        }
+        if self.every > 0 && (rec.hour + 1) % self.every == 0 {
+            self.store
+                .write(rec.hour + 1, self.kind, &snapshot())
+                .expect("snapshot write failed");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trip() {
+        let payload = b"engine state bytes".to_vec();
+        let frame = encode_frame(SnapshotKind::Sharded, &payload);
+        let (kind, got) = decode_frame(&frame).unwrap();
+        assert_eq!(kind, SnapshotKind::Sharded);
+        assert_eq!(got, &payload[..]);
+    }
+
+    #[test]
+    fn torn_and_tampered_frames_are_rejected() {
+        let frame = encode_frame(SnapshotKind::Core, b"payload");
+        // Truncation at every prefix length fails cleanly.
+        for cut in 0..frame.len() {
+            assert!(decode_frame(&frame[..cut]).is_err(), "cut={cut}");
+        }
+        // A single flipped payload bit fails the checksum.
+        let mut bad = frame.clone();
+        bad[16] ^= 0x40;
+        assert!(decode_frame(&bad).is_err());
+        // Trailing garbage is not ignored.
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(decode_frame(&long).is_err());
+        // A future version is refused rather than misread.
+        let mut vers = frame;
+        vers[4] = 0xFF;
+        assert!(decode_frame(&vers).is_err());
+    }
+
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("grmu-cp-test-{}-{tag}-{n}", std::process::id()))
+    }
+
+    fn rec(hour: u64) -> IntervalRecord {
+        IntervalRecord {
+            hour,
+            requested: 2 * hour + 3,
+            accepted: 2 * hour,
+            rejections: [3, 0, 0, 0, 0, 0],
+            migrations: hour / 2,
+            interrupted: 0,
+            queue_len: 1,
+        }
+    }
+
+    #[test]
+    fn checkpointer_cross_checks_then_rolls_forward() {
+        let dir = scratch_dir("protocol");
+        let mut cp = Checkpointer::new(&dir, 2, SnapshotKind::Core, None).unwrap();
+        for h in 0..=2 {
+            cp.interval_closed(&rec(h), || b"image".to_vec());
+        }
+        // Cadence 2 → snapshots named for hours 2 (after closing 1).
+        let store = SnapshotStore::open(&dir).unwrap();
+        assert_eq!(store.hours(), vec![2]);
+        // "Crash", then resume from the hour-2 snapshot: the journaled
+        // interval 2 is re-driven and cross-checked, not re-appended.
+        let mut cp = Checkpointer::new(&dir, 2, SnapshotKind::Core, Some(2)).unwrap();
+        assert_eq!(cp.pending_checks(), 1);
+        cp.interval_closed(&rec(2), || b"image".to_vec());
+        assert_eq!(cp.pending_checks(), 0);
+        cp.interval_closed(&rec(3), || b"image".to_vec());
+        let journaled: Vec<u64> =
+            Journal::in_dir(&dir).read_all().iter().map(|r| r.hour).collect();
+        assert_eq!(journaled, vec![0, 1, 2, 3], "no duplicate record for hour 2");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "journal cross-check failed")]
+    fn checkpointer_panics_on_divergent_redrive() {
+        let dir = scratch_dir("diverge");
+        let mut cp = Checkpointer::new(&dir, 0, SnapshotKind::Core, None).unwrap();
+        cp.interval_closed(&rec(0), Vec::new);
+        let mut cp = Checkpointer::new(&dir, 0, SnapshotKind::Core, Some(0)).unwrap();
+        let mut wrong = rec(0);
+        wrong.accepted += 1;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cp.interval_closed(&wrong, Vec::new);
+        }));
+        std::fs::remove_dir_all(&dir).unwrap();
+        match result {
+            Ok(()) => panic!("divergent re-drive was accepted"),
+            // Re-raise with the original payload after cleanup so the
+            // `should_panic(expected)` filter still sees the message.
+            Err(e) => std::panic::resume_unwind(e),
+        }
+    }
+
+    #[test]
+    fn checkpointer_fresh_run_clears_stale_state() {
+        let dir = scratch_dir("stale");
+        let mut cp = Checkpointer::new(&dir, 1, SnapshotKind::Core, None).unwrap();
+        cp.interval_closed(&rec(0), || b"old".to_vec());
+        let _ = Checkpointer::new(&dir, 1, SnapshotKind::Core, None).unwrap();
+        assert!(SnapshotStore::open(&dir).unwrap().hours().is_empty());
+        assert!(Journal::in_dir(&dir).read_all().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn on_corruption_parses() {
+        assert_eq!(OnCorruption::parse("abort").unwrap(), OnCorruption::Abort);
+        assert_eq!(
+            OnCorruption::parse("quarantine").unwrap(),
+            OnCorruption::Quarantine
+        );
+        assert_eq!(OnCorruption::parse("rebuild").unwrap(), OnCorruption::Rebuild);
+        assert!(OnCorruption::parse("retry").is_err());
+        assert_eq!(OnCorruption::default(), OnCorruption::Abort);
+    }
+}

@@ -1,0 +1,159 @@
+//! Atomic on-disk snapshot store.
+//!
+//! One file per checkpointed interval boundary, named
+//! `snap-{hour:010}.grmu`, each a complete framed engine image (see
+//! [`super::encode_frame`]). Writes are crash-atomic: payload → temp
+//! file in the same directory → fsync → rename over the final name →
+//! fsync the directory. Readers scan newest-first and skip any file the
+//! frame codec rejects, so a torn write degrades recovery to the
+//! previous valid snapshot instead of corrupt state.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use super::{decode_frame, encode_frame, SnapshotKind};
+
+/// Directory of framed engine snapshots, newest wins.
+#[derive(Debug, Clone)]
+pub struct SnapshotStore {
+    dir: PathBuf,
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) a snapshot directory.
+    pub fn open(dir: &Path) -> std::io::Result<SnapshotStore> {
+        fs::create_dir_all(dir)?;
+        Ok(SnapshotStore { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the snapshot for a given closed-interval hour.
+    pub fn path_for(&self, hour: u64) -> PathBuf {
+        self.dir.join(format!("snap-{hour:010}.grmu"))
+    }
+
+    /// Atomically persist a snapshot of `kind` taken at interval
+    /// boundary `hour`. On return the file is durable: a crash at any
+    /// point leaves either no `snap-{hour}` file or a complete one.
+    pub fn write(&self, hour: u64, kind: SnapshotKind, payload: &[u8]) -> std::io::Result<PathBuf> {
+        let frame = encode_frame(kind, payload);
+        let final_path = self.path_for(hour);
+        let tmp_path = self.dir.join(format!(".snap-{hour:010}.grmu.tmp"));
+        {
+            let mut f = fs::File::create(&tmp_path)?;
+            f.write_all(&frame)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp_path, &final_path)?;
+        // Durability of the rename itself requires fsyncing the
+        // directory; best-effort on filesystems that refuse it.
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(final_path)
+    }
+
+    /// Hours that have a snapshot file present (valid or not),
+    /// ascending.
+    pub fn hours(&self) -> Vec<u64> {
+        let mut hours = Vec::new();
+        let Ok(entries) = fs::read_dir(&self.dir) else {
+            return hours;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(h) = name
+                .strip_prefix("snap-")
+                .and_then(|rest| rest.strip_suffix(".grmu"))
+                .and_then(|digits| digits.parse::<u64>().ok())
+            {
+                hours.push(h);
+            }
+        }
+        hours.sort_unstable();
+        hours
+    }
+
+    /// Load the newest snapshot that passes frame validation, returning
+    /// its hour, kind and decoded payload. Torn or corrupt files are
+    /// skipped (that is the crash-recovery contract); `None` means no
+    /// valid snapshot exists at all.
+    pub fn latest_valid(&self) -> Option<(u64, SnapshotKind, Vec<u8>)> {
+        for &hour in self.hours().iter().rev() {
+            let Ok(bytes) = fs::read(self.path_for(hour)) else {
+                continue;
+            };
+            if let Ok((kind, payload)) = decode_frame(&bytes) {
+                return Some((hour, kind, payload.to_vec()));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "grmu-snap-test-{}-{tag}-{n}",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn newest_valid_snapshot_wins() {
+        let dir = scratch_dir("latest");
+        let store = SnapshotStore::open(&dir).unwrap();
+        store.write(8, SnapshotKind::Core, b"at-8").unwrap();
+        store.write(16, SnapshotKind::Core, b"at-16").unwrap();
+        let (hour, kind, payload) = store.latest_valid().unwrap();
+        assert_eq!((hour, kind), (16, SnapshotKind::Core));
+        assert_eq!(payload, b"at-16");
+        assert_eq!(store.hours(), vec![8, 16]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_snapshot_falls_back_to_previous() {
+        let dir = scratch_dir("torn");
+        let store = SnapshotStore::open(&dir).unwrap();
+        store.write(8, SnapshotKind::Core, b"good").unwrap();
+        store.write(16, SnapshotKind::Core, b"newer").unwrap();
+        // Tear the newer file in half, as a crash mid-write would
+        // without the atomic rename.
+        let newest = store.path_for(16);
+        let bytes = fs::read(&newest).unwrap();
+        fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let (hour, _, payload) = store.latest_valid().unwrap();
+        assert_eq!(hour, 8);
+        assert_eq!(payload, b"good");
+        // Corrupt the survivor too: now nothing is loadable.
+        let older = store.path_for(8);
+        let mut bytes = fs::read(&older).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&older, &bytes).unwrap();
+        assert!(store.latest_valid().is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_or_missing_dir_is_no_snapshot() {
+        let dir = scratch_dir("empty");
+        let store = SnapshotStore::open(&dir).unwrap();
+        assert!(store.latest_valid().is_none());
+        assert!(store.hours().is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

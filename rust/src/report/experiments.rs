@@ -65,6 +65,20 @@ pub struct ExperimentConfig {
     /// `0` = off). Wraps every built policy in a
     /// [`crate::ilp::online::GapMeter`].
     pub gap_check_hours: u64,
+    /// Snapshot cadence in hours for crash-safe checkpointing (CLI
+    /// `--checkpoint-every`, `0` = snapshots off; the interval journal
+    /// is still written whenever a checkpoint directory is set).
+    pub checkpoint_every_hours: u64,
+    /// Directory for snapshots + interval journal (CLI
+    /// `--checkpoint-dir`, `None` = persistence off).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Resume from the newest valid snapshot in this directory (CLI
+    /// `--resume`); the trace and configuration must match the crashed
+    /// run.
+    pub resume_from: Option<std::path::PathBuf>,
+    /// Reaction to a failed integrity check (CLI `--on-corruption
+    /// abort|quarantine|rebuild`).
+    pub on_corruption: crate::recover::OnCorruption,
 }
 
 impl Default for ExperimentConfig {
@@ -86,6 +100,10 @@ impl Default for ExperimentConfig {
             ilp_nodes: 20_000,
             ilp_period_hours: 24,
             gap_check_hours: 0,
+            checkpoint_every_hours: 0,
+            checkpoint_dir: None,
+            resume_from: None,
+            on_corruption: crate::recover::OnCorruption::default(),
         }
     }
 }
@@ -151,6 +169,10 @@ pub fn run_trace(
         drain_cap_hours: cfg.drain_cap_hours,
         ops: resolved_ops(cfg, hosts.len()),
         queue: cfg.queue,
+        checkpoint_every_hours: cfg.checkpoint_every_hours,
+        checkpoint_dir: cfg.checkpoint_dir.clone(),
+        resume_from: cfg.resume_from.clone(),
+        on_corruption: cfg.on_corruption,
         ..SimulationOptions::default()
     };
     sim.run()
@@ -199,6 +221,10 @@ pub fn run_sharded_trace(
         drain_cap_hours: cfg.drain_cap_hours,
         ops: resolved_ops(cfg, hosts.len()),
         queue: cfg.queue,
+        checkpoint_every_hours: cfg.checkpoint_every_hours,
+        checkpoint_dir: cfg.checkpoint_dir.clone(),
+        resume_from: cfg.resume_from.clone(),
+        on_corruption: cfg.on_corruption,
         ..SimulationOptions::default()
     };
     sim.shard_options.shards = shards;

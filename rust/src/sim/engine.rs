@@ -14,6 +14,8 @@ use crate::cluster::vm::{VmSpec, HOUR};
 use crate::cluster::DataCenter;
 use crate::ops::{FaultInjector, OpsConfig, QueueConfig};
 use crate::policies::{Policy, PolicyCtx};
+use crate::recover::{Checkpointer, IntervalRecord, OnCorruption, SnapshotKind, SnapshotStore};
+use std::path::PathBuf;
 
 /// Engine knobs.
 #[derive(Debug, Clone)]
@@ -32,6 +34,25 @@ pub struct SimulationOptions {
     /// Admission retry queue; capacity zero by default (disabled —
     /// rejections stay terminal exactly as before).
     pub queue: QueueConfig,
+    /// Persist a full engine snapshot every N closed intervals into
+    /// `checkpoint_dir` (0 = snapshots off; the interval journal is
+    /// still written whenever a checkpoint directory is set).
+    pub checkpoint_every_hours: u64,
+    /// Directory for crash-safe state: atomic `snap-*.grmu` images plus
+    /// the per-interval journal (see [`crate::recover`]). `None`
+    /// disables persistence entirely — the default run is byte-identical
+    /// to a build without the recovery layer.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from the newest *valid* snapshot in this directory instead
+    /// of starting fresh (torn snapshots fall back to the previous one).
+    /// The trace and configuration must match the crashed run; every
+    /// journaled interval the resumed run re-closes is cross-checked
+    /// against the journal and a mismatch aborts loudly.
+    pub resume_from: Option<PathBuf>,
+    /// Reaction to a failed maintenance-tick integrity check
+    /// (`--on-corruption`): abort (default, the historical panic),
+    /// quarantine the offending host, or rebuild derived state in place.
+    pub on_corruption: OnCorruption,
 }
 
 impl Default for SimulationOptions {
@@ -41,6 +62,60 @@ impl Default for SimulationOptions {
             drain_cap_hours: 0,
             ops: OpsConfig::default(),
             queue: QueueConfig::default(),
+            checkpoint_every_hours: 0,
+            checkpoint_dir: None,
+            resume_from: None,
+            on_corruption: OnCorruption::default(),
+        }
+    }
+}
+
+impl SimulationOptions {
+    /// The checkpoint directory in effect: an explicit `checkpoint_dir`,
+    /// or — when only `--resume` was given — the resume directory, so a
+    /// resumed run keeps journaling and snapshotting where the crashed
+    /// run left off.
+    pub(crate) fn effective_checkpoint_dir(&self) -> Option<&PathBuf> {
+        self.checkpoint_dir.as_ref().or(self.resume_from.as_ref())
+    }
+
+    /// Load the newest valid snapshot for a resume, verifying the image
+    /// kind. `None` when `resume_from` is unset; panics (loudly, this is
+    /// an operator error) when the directory holds no valid snapshot or
+    /// one of the wrong engine shape.
+    pub(crate) fn load_resume_image(&self, want: SnapshotKind) -> Option<(u64, Vec<u8>)> {
+        let dir = self.resume_from.as_ref()?;
+        let store = SnapshotStore::open(dir)
+            .unwrap_or_else(|e| panic!("cannot open resume directory {}: {e}", dir.display()));
+        let Some((hour, kind, payload)) = store.latest_valid() else {
+            panic!("no valid snapshot to resume from in {}", dir.display());
+        };
+        assert!(
+            kind == want,
+            "snapshot in {} is a {kind:?} image but this run needs {want:?} \
+             (shard configuration differs from the crashed run?)",
+            dir.display()
+        );
+        Some((hour, payload))
+    }
+}
+
+/// Cumulative counters of a run at one closed interval boundary — the
+/// journal record shared by both engines.
+pub(crate) trait IntervalCounters {
+    fn interval_record(&self, closed_hour: u64) -> IntervalRecord;
+}
+
+impl IntervalCounters for EventCore {
+    fn interval_record(&self, closed_hour: u64) -> IntervalRecord {
+        IntervalRecord {
+            hour: closed_hour,
+            requested: self.requested(),
+            accepted: self.accepted(),
+            rejections: self.rejections(),
+            migrations: self.migration_events().len() as u64,
+            interrupted: self.interrupted(),
+            queue_len: self.queue_len() as u64,
         }
     }
 }
@@ -71,8 +146,19 @@ impl<'a> Simulation<'a> {
     pub fn run(self) -> SimResult {
         let t_start = std::time::Instant::now();
         let last_arrival = self.vms.last().map(|v| v.arrival).unwrap_or(0);
-        let mut core = EventCore::new(self.dc, self.policy, self.ctx);
+        // Resume path: the snapshot replaces the fresh data center,
+        // context and run state wholesale; knobs that are configuration
+        // rather than state (integrity cadence, corruption action) are
+        // reapplied from this run's options below.
+        let resume = self.options.load_resume_image(SnapshotKind::Core);
+        let resume_hour = resume.as_ref().map(|(h, _)| *h);
+        let mut core = match resume {
+            Some((_, payload)) => EventCore::restore_bytes(&payload, self.policy)
+                .unwrap_or_else(|e| panic!("resume failed: {e}")),
+            None => EventCore::new(self.dc, self.policy, self.ctx),
+        };
         core.set_integrity_every(self.options.integrity_every);
+        core.set_on_corruption(self.options.on_corruption);
         // Pre-size the core's collections from the trace: the run spans
         // the arrivals plus either the drain cap or the latest departure.
         let last_departure = self.vms.iter().map(|v| v.departure).max().unwrap_or(0);
@@ -82,17 +168,39 @@ impl<'a> Simulation<'a> {
             last_departure.max(last_arrival)
         };
         core.reserve_for_trace(self.vms.len(), core.window_of(horizon) + 2);
-        if self.options.ops.enabled() {
-            let mut ops = self.options.ops.clone();
-            if ops.horizon_hours == 0 {
-                ops.horizon_hours = core.window_of(horizon) + 2;
+        // Ops and queue state travel inside the snapshot (schedule
+        // cursor, parked requests); re-wiring them on a resume would
+        // reset the restored state.
+        if resume_hour.is_none() {
+            if self.options.ops.enabled() {
+                let mut ops = self.options.ops.clone();
+                if ops.horizon_hours == 0 {
+                    ops.horizon_hours = core.window_of(horizon) + 2;
+                }
+                core.set_fault_schedule(FaultInjector::from_config(&ops, core.dc.hosts()));
             }
-            core.set_fault_schedule(FaultInjector::from_config(&ops, core.dc.hosts()));
+            if self.options.queue.enabled() {
+                core.set_admission_queue(self.options.queue);
+            }
         }
-        if self.options.queue.enabled() {
-            core.set_admission_queue(self.options.queue);
-        }
-        let mut next_vm = 0usize;
+        let mut checkpoint = self.options.effective_checkpoint_dir().map(|dir| {
+            Checkpointer::new(
+                dir,
+                self.options.checkpoint_every_hours,
+                SnapshotKind::Core,
+                resume_hour,
+            )
+            .unwrap_or_else(|e| panic!("cannot open checkpoint directory {}: {e}", dir.display()))
+        });
+        // Fast-forward the trace cursor past everything the restored
+        // clock already consumed: interval `h` takes arrivals up to and
+        // including `(h+1)·interval`, so after `hour()` closed intervals
+        // the frontier is `hour()·interval`. (A fresh run starts at 0 —
+        // arrivals at t = 0 belong to interval 0, not to the frontier.)
+        let mut next_vm = match resume_hour {
+            Some(_) => self.vms.partition_point(|v| v.arrival <= core.hour() * core.interval()),
+            None => 0,
+        };
         loop {
             let t_end = core.interval_end();
             let batch_start = next_vm;
@@ -102,6 +210,10 @@ impl<'a> Simulation<'a> {
             // Buffered step: the simulator aggregates through the core's
             // accounting, so the per-interval decision Vec is never built.
             core.step_buffered(&self.vms[batch_start..next_vm]);
+            if let Some(cp) = checkpoint.as_mut() {
+                let rec = core.interval_record(core.hour() - 1);
+                cp.interval_closed(&rec, || core.snapshot_bytes());
+            }
 
             let drained = next_vm >= self.vms.len() && core.pending_departures() == 0;
             let capped = self.options.drain_cap_hours > 0

@@ -85,6 +85,29 @@ impl SimResult {
         acceptance_rate(self.accepted, self.requested)
     }
 
+    /// Field-by-field equality of every *simulation outcome* — all
+    /// fields except `wall_seconds`, which measures the host machine,
+    /// not the simulated system. This is the crash-recovery determinism
+    /// lock: a run resumed from a snapshot must `same_outcome` the
+    /// uninterrupted run bit-for-bit (`f64`s compare exactly — both
+    /// runs execute the identical operation sequence).
+    pub fn same_outcome(&self, other: &SimResult) -> bool {
+        self.policy == other.policy
+            && self.samples == other.samples
+            && self.requested == other.requested
+            && self.accepted == other.accepted
+            && self.per_profile == other.per_profile
+            && self.rejections == other.rejections
+            && self.migration_events == other.migration_events
+            && self.gpus_by_model == other.gpus_by_model
+            && self.gpu_activity == other.gpu_activity
+            && self.interrupted == other.interrupted
+            && self.preempted == other.preempted
+            && self.queue_delays == other.queue_delays
+            && self.availability == other.availability
+            && self.gap_samples == other.gap_samples
+    }
+
     /// Rejections attributed to one reason.
     pub fn rejected(&self, reason: RejectReason) -> u64 {
         self.rejections[reason.index()]
@@ -473,6 +496,26 @@ mod tests {
         assert_eq!(r.inter_migrations(), 1);
         assert_eq!(r.migrations(), 3);
         assert!((r.migration_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_outcome_ignores_wall_clock_only() {
+        let a = result();
+        let mut b = result();
+        b.wall_seconds = 99.0;
+        assert!(a.same_outcome(&b), "wall_seconds must not affect outcome equality");
+
+        let mut c = result();
+        c.accepted += 1;
+        assert!(!a.same_outcome(&c));
+
+        let mut d = result();
+        d.samples[1].active_rate += 1e-9;
+        assert!(!a.same_outcome(&d));
+
+        let mut e = result();
+        e.migration_events.pop();
+        assert!(!a.same_outcome(&e));
     }
 
     #[test]

@@ -61,6 +61,8 @@ use crate::ops::{FaultInjector, OpsEvent, QueueConfig};
 use crate::policies::{
     probe_gpu, Decision, Policy, PolicyConfig, PolicyCtx, RejectCounts, RejectReason,
 };
+use crate::recover::OnCorruption;
+use crate::util::codec::{Dec, Enc};
 use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -194,6 +196,14 @@ impl ShardedCore {
         }
     }
 
+    /// Propagate the `--on-corruption` action to every shard (see
+    /// [`EventCore::set_on_corruption`]).
+    pub fn set_on_corruption(&mut self, action: OnCorruption) {
+        for c in &mut self.cores {
+            c.set_on_corruption(action);
+        }
+    }
+
     /// Configure admission queueing on every shard. Each shard parks
     /// and retries its own home requests; capacities are per shard.
     pub fn set_admission_queue(&mut self, cfg: QueueConfig) {
@@ -235,6 +245,9 @@ impl ShardedCore {
                     let s = self.map.shard_of_host(host);
                     (s, OpsEvent::DrainDone { host: host - self.map.base(s) })
                 }
+                // Log-only event emitted by the on-corruption repair
+                // path — never part of a generated schedule.
+                OpsEvent::StateRepair { .. } => continue,
             };
             per[s].push((t, local));
         }
@@ -740,6 +753,200 @@ impl ShardedCore {
         }
     }
 
+    /// Serialize the whole sharded engine — router accounting plus one
+    /// [`EventCore::snapshot_bytes`] image per shard — with the same
+    /// determinism contract: encoding a state and encoding the state
+    /// restored from it yield identical bytes. Taken at an interval
+    /// boundary (after [`ShardedCore::close_interval`]); the transient
+    /// per-batch buffers (`merged`, routing scratch) are intentionally
+    /// not part of the image.
+    pub fn snapshot_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::with_capacity(1024 * self.cores.len());
+        e.usize(self.map.num_hosts());
+        e.usize(self.cores.len());
+        for c in &self.cores {
+            e.blob(&c.snapshot_bytes());
+        }
+        e.u64(self.hour);
+        e.u64(self.extra_requested);
+        for x in self.extra_per_profile {
+            e.u64(x);
+        }
+        for x in self.extra_rejections {
+            e.u64(x);
+        }
+        e.usize(self.samples.len());
+        for s in &self.samples {
+            e.u64(s.hour);
+            e.f64(s.active_rate);
+            e.f64(s.acceptance_rate);
+            e.usize(s.resident);
+        }
+        e.usize(self.migrations.len());
+        for ev in &self.migrations {
+            ev.encode(&mut e);
+        }
+        for &c in &self.mig_cursor {
+            e.usize(c);
+        }
+        e.opt_u64(self.rebalance_every);
+        e.u32(self.budget.max_moves_per_interval);
+        e.u32(self.budget.max_moves_per_vm);
+        let mut moves: Vec<(VmId, u32)> =
+            self.moves_per_vm.iter().map(|(vm, n)| (*vm, *n)).collect();
+        moves.sort_unstable();
+        e.usize(moves.len());
+        for (vm, n) in moves {
+            e.u64(vm);
+            e.u32(n);
+        }
+        let mut specs: Vec<&VmSpec> = self.specs.values().collect();
+        specs.sort_unstable_by_key(|s| s.id);
+        e.usize(specs.len());
+        for s in specs {
+            s.encode(&mut e);
+        }
+        match &self.rebalance_planners {
+            None => e.bool(false),
+            Some(ps) => {
+                e.bool(true);
+                e.usize(ps.len());
+                for p in ps {
+                    let mut state = Vec::new();
+                    p.snapshot_state(&mut state);
+                    e.blob(&state);
+                }
+            }
+        }
+        e.into_bytes()
+    }
+
+    /// Rebuild a [`ShardedCore`] from [`ShardedCore::snapshot_bytes`].
+    /// The caller supplies what is configuration, not state: one policy
+    /// instance per shard (same registry build as the original run —
+    /// each shard's image verifies the policy name), the worker-thread
+    /// cap (wall-clock only) and, when the run used a planner-driven
+    /// rebalancer, fresh per-shard planner instances whose mutable state
+    /// the snapshot then restores. Supplying planners for a snapshot
+    /// that carries no planner state keeps them fresh (a config change
+    /// on resume); the reverse is an error.
+    pub fn restore_bytes(
+        bytes: &[u8],
+        policies: Vec<Box<dyn Policy>>,
+        threads: usize,
+        rebalance_planners: Option<Vec<Box<dyn MigrationPlanner>>>,
+    ) -> Result<ShardedCore, String> {
+        let mut d = Dec::new(bytes);
+        let num_hosts = d.usize()?;
+        let shards = d.count(9)?;
+        if policies.len() != shards {
+            return Err(format!(
+                "snapshot holds {shards} shards but {} policies were supplied",
+                policies.len()
+            ));
+        }
+        let mut cores = Vec::with_capacity(shards);
+        for policy in policies {
+            cores.push(EventCore::restore_bytes(d.blob()?, policy)?);
+        }
+        let hour = d.u64()?;
+        let extra_requested = d.u64()?;
+        let mut extra_per_profile = [0u64; NUM_PROFILE_KEYS];
+        for x in &mut extra_per_profile {
+            *x = d.u64()?;
+        }
+        let mut extra_rejections = [0u64; 6];
+        for x in &mut extra_rejections {
+            *x = d.u64()?;
+        }
+        let n = d.count(32)?;
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            samples.push(Sample {
+                hour: d.u64()?,
+                active_rate: d.f64()?,
+                acceptance_rate: d.f64()?,
+                resident: d.usize()?,
+            });
+        }
+        let n = d.count(21)?;
+        let mut migrations = Vec::with_capacity(n);
+        for _ in 0..n {
+            migrations.push(MigrationEvent::decode(&mut d)?);
+        }
+        let mut mig_cursor = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            mig_cursor.push(d.usize()?);
+        }
+        let rebalance_every = d.opt_u64()?;
+        let budget = MigrationBudget {
+            max_moves_per_interval: d.u32()?,
+            max_moves_per_vm: d.u32()?,
+        };
+        let n = d.count(12)?;
+        let mut moves_per_vm = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let vm = d.u64()?;
+            moves_per_vm.insert(vm, d.u32()?);
+        }
+        let n = d.count(41)?;
+        let mut specs = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let spec = VmSpec::decode(&mut d)?;
+            specs.insert(spec.id, spec);
+        }
+        let rebalance_planners = if d.bool()? {
+            let n = d.count(8)?;
+            let Some(mut planners) = rebalance_planners else {
+                return Err(
+                    "snapshot carries rebalance-planner state but no planners were supplied"
+                        .into(),
+                );
+            };
+            if planners.len() != n {
+                return Err(format!(
+                    "snapshot holds {n} planner states but {} planners were supplied",
+                    planners.len()
+                ));
+            }
+            for p in planners.iter_mut() {
+                p.restore_state(d.blob()?)?;
+            }
+            Some(planners)
+        } else {
+            rebalance_planners
+        };
+        if !d.is_empty() {
+            return Err("trailing bytes in sharded-core snapshot".into());
+        }
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let n = cores.len();
+        Ok(ShardedCore {
+            map: ShardMap::new(num_hosts, shards),
+            cores,
+            threads,
+            hour,
+            extra_requested,
+            extra_per_profile,
+            extra_rejections,
+            merged: Vec::new(),
+            samples,
+            migrations,
+            mig_cursor,
+            rebalance_every,
+            budget,
+            rebalance_planners,
+            moves_per_vm,
+            specs,
+            route_scratch: (0..n).map(|_| Vec::new()).collect(),
+            slot_scratch: (0..n).map(|_| Vec::new()).collect(),
+        })
+    }
+
     /// Finish: merge every shard's result into one cluster-level
     /// [`SimResult`] (offer corrections applied, queue leftovers
     /// flushed per shard, one global availability denominator).
@@ -827,6 +1034,20 @@ impl ShardedCore {
     }
 }
 
+impl super::engine::IntervalCounters for ShardedCore {
+    fn interval_record(&self, closed_hour: u64) -> crate::recover::IntervalRecord {
+        crate::recover::IntervalRecord {
+            hour: closed_hour,
+            requested: self.requested(),
+            accepted: self.accepted(),
+            rejections: self.rejections(),
+            migrations: self.migrations.len() as u64,
+            interrupted: self.interrupted(),
+            queue_len: self.queue_len() as u64,
+        }
+    }
+}
+
 /// Engine knobs specific to the sharded run, on top of the single-shard
 /// [`super::SimulationOptions`].
 #[derive(Debug, Clone)]
@@ -897,12 +1118,38 @@ impl<'a> ShardedSimulation<'a> {
     /// slicing, the same stop conditions, the same ops wiring (with the
     /// fault schedule drawn over the *global* fleet before splitting).
     pub fn run(self) -> SimResult {
+        use crate::recover::{Checkpointer, SnapshotKind};
+        use crate::sim::engine::IntervalCounters as _;
+
         let t_start = std::time::Instant::now();
         let so = self.shard_options;
         let last_arrival = self.vms.last().map(|v| v.arrival).unwrap_or(0);
-        let mut core =
-            ShardedCore::new(self.hosts, self.policies, so.seed, so.shards, so.threads);
+        let resume = self.options.load_resume_image(SnapshotKind::Sharded);
+        let resume_hour = resume.as_ref().map(|(h, _)| *h);
+        let mut core = match resume {
+            Some((_, payload)) => {
+                // Planner instances are configuration (rebuilt from the
+                // registry); their mutable state is restored from the
+                // image inside `restore_bytes`.
+                let planners: Option<Vec<Box<dyn MigrationPlanner>>> =
+                    so.rebalance_planner.as_ref().map(|name| {
+                        (0..self.policies.len())
+                            .map(|_| {
+                                crate::policies::planned::planner_from_name(
+                                    name,
+                                    &self.planner_config,
+                                )
+                                .unwrap_or_else(|| panic!("unknown rebalance planner '{name}'"))
+                            })
+                            .collect()
+                    });
+                ShardedCore::restore_bytes(&payload, self.policies, so.threads, planners)
+                    .unwrap_or_else(|e| panic!("resume failed: {e}"))
+            }
+            None => ShardedCore::new(self.hosts, self.policies, so.seed, so.shards, so.threads),
+        };
         core.set_integrity_every(self.options.integrity_every);
+        core.set_on_corruption(self.options.on_corruption);
         let last_departure = self.vms.iter().map(|v| v.departure).max().unwrap_or(0);
         let horizon = if self.options.drain_cap_hours > 0 {
             last_arrival + self.options.drain_cap_hours * HOUR
@@ -910,26 +1157,43 @@ impl<'a> ShardedSimulation<'a> {
             last_departure.max(last_arrival)
         };
         core.reserve_for_trace(self.vms.len(), core.window_of(horizon) + 2);
-        if self.options.ops.enabled() {
-            let mut ops = self.options.ops.clone();
-            if ops.horizon_hours == 0 {
-                ops.horizon_hours = core.window_of(horizon) + 2;
+        // Ops, queue and rebalance state all travel inside the snapshot
+        // (per-shard schedule cursors, parked requests, move tallies);
+        // re-wiring them on a resume would reset the restored state.
+        if resume_hour.is_none() {
+            if self.options.ops.enabled() {
+                let mut ops = self.options.ops.clone();
+                if ops.horizon_hours == 0 {
+                    ops.horizon_hours = core.window_of(horizon) + 2;
+                }
+                // Global schedule over the *unsplit* fleet: identical
+                // faults at every shard count.
+                core.set_fault_schedule(FaultInjector::from_config(&ops, self.hosts));
             }
-            // Global schedule over the *unsplit* fleet: identical
-            // faults at every shard count.
-            core.set_fault_schedule(FaultInjector::from_config(&ops, self.hosts));
-        }
-        if self.options.queue.enabled() {
-            core.set_admission_queue(self.options.queue);
-        }
-        if so.rebalance_every > 0 {
-            core.set_rebalance(so.rebalance_every, so.budget);
-            if let Some(name) = &so.rebalance_planner {
-                let known = core.set_rebalance_planner(name, &self.planner_config);
-                assert!(known, "unknown rebalance planner '{name}'");
+            if self.options.queue.enabled() {
+                core.set_admission_queue(self.options.queue);
+            }
+            if so.rebalance_every > 0 {
+                core.set_rebalance(so.rebalance_every, so.budget);
+                if let Some(name) = &so.rebalance_planner {
+                    let known = core.set_rebalance_planner(name, &self.planner_config);
+                    assert!(known, "unknown rebalance planner '{name}'");
+                }
             }
         }
-        let mut next_vm = 0usize;
+        let mut checkpoint = self.options.effective_checkpoint_dir().map(|dir| {
+            Checkpointer::new(
+                dir,
+                self.options.checkpoint_every_hours,
+                SnapshotKind::Sharded,
+                resume_hour,
+            )
+            .unwrap_or_else(|e| panic!("cannot open checkpoint directory {}: {e}", dir.display()))
+        });
+        let mut next_vm = match resume_hour {
+            Some(_) => self.vms.partition_point(|v| v.arrival <= core.hour() * core.interval()),
+            None => 0,
+        };
         loop {
             let t_end = core.interval_end();
             let batch_start = next_vm;
@@ -937,6 +1201,10 @@ impl<'a> ShardedSimulation<'a> {
                 next_vm += 1;
             }
             core.step_buffered(&self.vms[batch_start..next_vm]);
+            if let Some(cp) = checkpoint.as_mut() {
+                let rec = core.interval_record(core.hour() - 1);
+                cp.interval_closed(&rec, || core.snapshot_bytes());
+            }
 
             let drained = next_vm >= self.vms.len() && core.pending_departures() == 0;
             let capped = self.options.drain_cap_hours > 0
@@ -1146,5 +1414,50 @@ mod tests {
         let again = run();
         assert_eq!(r.migration_events, again.migration_events);
         assert_eq!(r.samples, again.samples);
+    }
+
+    /// The sharded engine honours the same two recovery locks as the
+    /// single-shard core: restore → re-snapshot is byte-identical, and
+    /// a resumed run replays to the same merged result as the
+    /// uninterrupted one — with queueing and cross-shard rebalancing on.
+    #[test]
+    fn sharded_snapshot_restore_round_trip() {
+        let hosts = fleet(4);
+        let vms = trace(24);
+        let mut core = ShardedCore::new(&hosts, policies(2), 11, 2, 2);
+        core.set_integrity_every(2);
+        core.set_admission_queue(QueueConfig { capacity: 8, ttl_hours: 4, preemption: false });
+        core.set_rebalance(1, MigrationBudget::unlimited());
+        let mut next = 0usize;
+        for _ in 0..3 {
+            let t_end = core.interval_end();
+            let start = next;
+            while next < vms.len() && vms[next].arrival <= t_end {
+                next += 1;
+            }
+            core.step_buffered(&vms[start..next]);
+        }
+        let snap = core.snapshot_bytes();
+        let mut twin = ShardedCore::restore_bytes(&snap, policies(2), 2, None).unwrap();
+        assert_eq!(twin.snapshot_bytes(), snap, "restore must be byte-exact");
+        assert_eq!(twin.hour(), core.hour());
+        // Rebalance period, budget and integrity cadence all travel in
+        // the image — the twin needs no reconfiguration.
+        loop {
+            let t_end = core.interval_end();
+            let start = next;
+            while next < vms.len() && vms[next].arrival <= t_end {
+                next += 1;
+            }
+            core.step_buffered(&vms[start..next]);
+            twin.step_buffered(&vms[start..next]);
+            assert_eq!(core.decisions(), twin.decisions(), "post-restore decisions diverged");
+            if next >= vms.len() && core.pending_departures() == 0 {
+                break;
+            }
+        }
+        let ra = core.into_result(0.0);
+        let rb = twin.into_result(5.0);
+        assert!(ra.same_outcome(&rb), "resumed sharded run must match uninterrupted run");
     }
 }

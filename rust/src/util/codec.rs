@@ -1,0 +1,305 @@
+//! Hand-rolled little-endian binary codec for the crash-safe
+//! persistence layer ([`crate::recover`]).
+//!
+//! No external serialization crates: every snapshot payload is a flat
+//! little-endian byte stream written by [`Enc`] and read back by
+//! [`Dec`]. The writer is infallible (it grows a `Vec<u8>`); the reader
+//! returns `Err(String)` on any truncation or malformed field so a torn
+//! or corrupt snapshot degrades into a recoverable error instead of a
+//! panic — the store falls back to the previous valid snapshot.
+//!
+//! The codec deliberately carries **no type tags**: reader and writer
+//! must agree on the field sequence, and the snapshot frame's version
+//! number ([`crate::recover::SNAPSHOT_VERSION`]) is what guards that
+//! agreement across releases. Checksumming ([`fnv1a`]) lives at the
+//! frame layer, over the whole encoded payload.
+
+/// Little-endian byte-stream writer.
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Enc {
+        Enc { buf: Vec::with_capacity(cap) }
+    }
+
+    /// The encoded bytes so far.
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as `u64` so snapshots are portable across word
+    /// sizes.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// `f64` as its IEEE-754 bit pattern — byte-exact round trips, no
+    /// formatting loss.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn blob(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.blob(v.as_bytes());
+    }
+
+    /// `Option<u64>` as a presence byte + value.
+    pub fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.u64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+}
+
+/// Little-endian byte-stream reader over a borrowed buffer. Every
+/// accessor returns `Err` on truncation instead of panicking.
+#[derive(Debug)]
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, at: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated stream: wanted {n} bytes at offset {}, have {}",
+                self.at,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("length {v} exceeds the address space"))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(format!("malformed bool byte {b:#04x}")),
+        }
+    }
+
+    /// Length-prefixed raw bytes (see [`Enc::blob`]).
+    pub fn blob(&mut self) -> Result<&'a [u8], String> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    /// Length-prefixed UTF-8 string (see [`Enc::str`]).
+    pub fn str(&mut self) -> Result<String, String> {
+        let bytes = self.blob()?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("malformed utf-8 string: {e}"))
+    }
+
+    pub fn opt_u64(&mut self) -> Result<Option<u64>, String> {
+        if self.bool()? {
+            Ok(Some(self.u64()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// A bounded element count for a collection about to be decoded:
+    /// rejects counts that could not possibly fit in the remaining
+    /// bytes (each element needs at least `min_elem_bytes`), so a
+    /// corrupt length cannot trigger a huge allocation.
+    pub fn count(&mut self, min_elem_bytes: usize) -> Result<usize, String> {
+        let n = self.usize()?;
+        let need = n.saturating_mul(min_elem_bytes.max(1));
+        if need > self.remaining() {
+            return Err(format!(
+                "malformed collection length {n}: needs ≥ {need} bytes, {} remain",
+                self.remaining()
+            ));
+        }
+        Ok(n)
+    }
+}
+
+/// FNV-1a 64-bit hash — the snapshot/journal integrity checksum. Not
+/// cryptographic; it detects torn writes and bit rot, which is the
+/// failure model of a crash mid-`write`.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_scalar() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u16(0xBEEF);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX - 3);
+        e.usize(42);
+        e.f64(-0.125);
+        e.bool(true);
+        e.bool(false);
+        e.str("grmu");
+        e.blob(&[1, 2, 3]);
+        e.opt_u64(Some(9));
+        e.opt_u64(None);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 0xBEEF);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.usize().unwrap(), 42);
+        assert_eq!(d.f64().unwrap(), -0.125);
+        assert!(d.bool().unwrap());
+        assert!(!d.bool().unwrap());
+        assert_eq!(d.str().unwrap(), "grmu");
+        assert_eq!(d.blob().unwrap(), &[1, 2, 3]);
+        assert_eq!(d.opt_u64().unwrap(), Some(9));
+        assert_eq!(d.opt_u64().unwrap(), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn f64_bit_patterns_survive() {
+        for v in [0.0, -0.0, f64::INFINITY, f64::MIN_POSITIVE, 1.0 / 3.0] {
+            let mut e = Enc::new();
+            e.f64(v);
+            let bytes = e.into_bytes();
+            let got = Dec::new(&bytes).f64().unwrap();
+            assert_eq!(v.to_bits(), got.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Enc::new();
+        e.u64(1234);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..5]);
+        assert!(d.u64().is_err());
+        // A truncated length prefix fails the same way.
+        let mut e = Enc::new();
+        e.str("hello world");
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..bytes.len() - 4]);
+        assert!(d.str().is_err());
+    }
+
+    #[test]
+    fn malformed_bool_and_huge_count_rejected() {
+        let mut d = Dec::new(&[2]);
+        assert!(d.bool().is_err());
+        // A length prefix far beyond the buffer must not allocate.
+        let mut e = Enc::new();
+        e.u64(u64::MAX / 2);
+        let bytes = e.into_bytes();
+        assert!(Dec::new(&bytes).count(8).is_err());
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Reference values of the 64-bit FNV-1a test suite.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+        // Single-bit damage changes the sum.
+        assert_ne!(fnv1a(b"snapshot"), fnv1a(b"snapshos"));
+    }
+}

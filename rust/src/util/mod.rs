@@ -17,9 +17,13 @@
 //!   failing-seed reporting.
 //! * [`stats`] — descriptive statistics and the IQR outlier rule used by
 //!   the trace pipeline (§8.1).
+//! * [`codec`] — the little-endian binary writer/reader and FNV-1a
+//!   checksum underpinning the crash-safe snapshot layer
+//!   (`crate::recover`).
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,297 @@
+//! Crash-injection harness for the checkpoint/journal subsystem.
+//!
+//! The contract under test: a run that is killed at an interval boundary
+//! and resumed from its checkpoint directory produces **exactly** the
+//! outcome of an uninterrupted twin — same acceptance counters, same
+//! per-interval samples, same migration log, same queue and availability
+//! books — across policies × shard counts × ops schedules × kill points.
+//!
+//! A "kill" is simulated by cloning a completed run's checkpoint
+//! directory and deleting every snapshot newer than the kill point: the
+//! on-disk state is then precisely what a crash at that boundary leaves
+//! behind (an older full image plus journal records running past it).
+//! Torn writes are simulated by truncating or corrupting snapshot files
+//! in place; recovery must fall back to the previous valid image and
+//! still converge.
+
+use grmu::cluster::DataCenter;
+use grmu::ops::{OpsConfig, QueueConfig};
+use grmu::policies::{Policy, PolicyConfig, PolicyRegistry};
+use grmu::recover::SnapshotStore;
+use grmu::sim::{
+    ShardOptions, ShardedSimulation, SimResult, Simulation, SimulationOptions,
+};
+use grmu::trace::{TraceConfig, Workload};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn scratch(tag: &str) -> PathBuf {
+    let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("grmu-crash-{}-{tag}-{n}", std::process::id()))
+}
+
+/// Clone a checkpoint directory file-for-file.
+fn clone_dir(src: &Path, tag: &str) -> PathBuf {
+    let dst = scratch(tag);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+    dst
+}
+
+/// Simulate a crash at interval boundary `kill_hour`: clone the
+/// completed run's checkpoint directory and delete every snapshot past
+/// the kill point. The journal keeps running past it, as it would after
+/// a real crash (records are appended every interval, images only on
+/// the cadence).
+fn killed_at(full: &Path, kill_hour: u64, tag: &str) -> PathBuf {
+    let dir = clone_dir(full, tag);
+    let store = SnapshotStore::open(&dir).unwrap();
+    for hour in store.hours() {
+        if hour > kill_hour {
+            std::fs::remove_file(store.path_for(hour)).unwrap();
+        }
+    }
+    assert_eq!(store.hours().last(), Some(&kill_hour), "kill point must survive");
+    dir
+}
+
+fn small_workload(seed: u64) -> Workload {
+    Workload::generate(TraceConfig {
+        num_hosts: 16,
+        num_pods: 200,
+        horizon_hours: 48,
+        ..TraceConfig::small(seed)
+    })
+}
+
+fn build_policy(name: &str) -> Box<dyn Policy> {
+    PolicyRegistry::standard()
+        .build(name, &PolicyConfig::new().heavy_frac(0.25))
+        .unwrap()
+}
+
+fn cell_options(ops_on: bool) -> SimulationOptions {
+    let (ops, queue) = if ops_on {
+        (
+            OpsConfig { drain_rate: 1.0, seed: 9, ..OpsConfig::default().with_gpu_mtbf(300.0) },
+            QueueConfig { capacity: 8, ..QueueConfig::default() },
+        )
+    } else {
+        (OpsConfig::default(), QueueConfig::default())
+    };
+    SimulationOptions {
+        integrity_every: 4,
+        drain_cap_hours: 24,
+        ops,
+        queue,
+        checkpoint_every_hours: 8,
+        ..SimulationOptions::default()
+    }
+}
+
+/// Run one grid cell: `shards == 1` drives the classic single-core
+/// engine (`SnapshotKind::Core` images), anything larger the sharded
+/// engine (`SnapshotKind::Sharded`).
+fn run_cell(
+    workload: &Workload,
+    policy: &str,
+    shards: usize,
+    options: SimulationOptions,
+) -> SimResult {
+    if shards == 1 {
+        let mut sim = Simulation::new(
+            DataCenter::new(workload.hosts.clone()),
+            build_policy(policy),
+            &workload.vms,
+        );
+        sim.options = options;
+        sim.run()
+    } else {
+        let policies: Vec<Box<dyn Policy>> = (0..shards).map(|_| build_policy(policy)).collect();
+        let mut sim = ShardedSimulation::new(&workload.hosts, policies, &workload.vms);
+        sim.options = options;
+        sim.shard_options = ShardOptions { shards, threads: 2, ..ShardOptions::default() };
+        sim.run()
+    }
+}
+
+/// The tentpole lock: every (policy × shard count × ops × kill point)
+/// cell resumes to the exact outcome of its uninterrupted twin.
+#[test]
+fn resume_is_exact_across_policies_shards_ops_and_kill_points() {
+    let workload = small_workload(5);
+    for policy in ["ff", "mcc", "grmu"] {
+        for shards in [1usize, 4] {
+            for ops_on in [false, true] {
+                let label = format!("{policy}-s{shards}-ops{}", u8::from(ops_on));
+                let dir_full = scratch(&label);
+                let mut options = cell_options(ops_on);
+                options.checkpoint_dir = Some(dir_full.clone());
+                let reference = run_cell(&workload, policy, shards, options);
+
+                let hours = SnapshotStore::open(&dir_full).unwrap().hours();
+                assert!(hours.len() >= 3, "{label}: too few snapshots: {hours:?}");
+                // Early and mid-run kill points exercise both a long and
+                // a short re-drive window.
+                for kill in [hours[0], hours[hours.len() / 2]] {
+                    let crashed = killed_at(&dir_full, kill, &format!("{label}-k{kill}"));
+                    let mut options = cell_options(ops_on);
+                    options.resume_from = Some(crashed.clone());
+                    let resumed = run_cell(&workload, policy, shards, options);
+                    assert!(
+                        resumed.same_outcome(&reference),
+                        "{label}: resume from hour {kill} diverged from the \
+                         uninterrupted run"
+                    );
+                    std::fs::remove_dir_all(&crashed).unwrap();
+                }
+                std::fs::remove_dir_all(&dir_full).unwrap();
+            }
+        }
+    }
+}
+
+/// A torn newest snapshot (truncated mid-write, as a crash without the
+/// atomic rename would leave it) is skipped by checksum: recovery falls
+/// back to the previous valid image and still converges exactly.
+#[test]
+fn torn_newest_snapshot_falls_back_to_previous_and_converges() {
+    let workload = small_workload(7);
+    let dir_full = scratch("torn-full");
+    let mut options = cell_options(true);
+    options.checkpoint_dir = Some(dir_full.clone());
+    let reference = run_cell(&workload, "grmu", 1, options);
+
+    let hours = SnapshotStore::open(&dir_full).unwrap().hours();
+    assert!(hours.len() >= 2, "need a fallback image: {hours:?}");
+    let crashed = clone_dir(&dir_full, "torn-crashed");
+    let store = SnapshotStore::open(&crashed).unwrap();
+    let newest = *hours.last().unwrap();
+    let bytes = std::fs::read(store.path_for(newest)).unwrap();
+    std::fs::write(store.path_for(newest), &bytes[..bytes.len() / 2]).unwrap();
+
+    // The torn file is present but unreadable; the previous image wins.
+    let (fallback_hour, _, _) = store.latest_valid().unwrap();
+    assert_eq!(fallback_hour, hours[hours.len() - 2], "torn newest must be skipped");
+
+    let mut options = cell_options(true);
+    options.resume_from = Some(crashed.clone());
+    let resumed = run_cell(&workload, "grmu", 1, options);
+    assert!(
+        resumed.same_outcome(&reference),
+        "resume from the fallback snapshot diverged"
+    );
+    std::fs::remove_dir_all(&dir_full).unwrap();
+    std::fs::remove_dir_all(&crashed).unwrap();
+}
+
+/// Bit-flip corruption (not just truncation) in the newest image is
+/// also caught by the checksum and recovery degrades one image back.
+#[test]
+fn corrupt_newest_snapshot_is_skipped_by_checksum() {
+    let workload = small_workload(11);
+    let dir_full = scratch("flip-full");
+    let mut options = cell_options(false);
+    options.checkpoint_dir = Some(dir_full.clone());
+    let reference = run_cell(&workload, "bf", 1, options);
+
+    let hours = SnapshotStore::open(&dir_full).unwrap().hours();
+    assert!(hours.len() >= 2, "need a fallback image: {hours:?}");
+    let crashed = clone_dir(&dir_full, "flip-crashed");
+    let store = SnapshotStore::open(&crashed).unwrap();
+    let newest = *hours.last().unwrap();
+    let path = store.path_for(newest);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    assert_eq!(store.latest_valid().unwrap().0, hours[hours.len() - 2]);
+
+    let mut options = cell_options(false);
+    options.resume_from = Some(crashed.clone());
+    let resumed = run_cell(&workload, "bf", 1, options);
+    assert!(resumed.same_outcome(&reference), "checksum fallback diverged");
+    std::fs::remove_dir_all(&dir_full).unwrap();
+    std::fs::remove_dir_all(&crashed).unwrap();
+}
+
+/// With every image torn there is nothing to resume from; the engine
+/// refuses loudly instead of silently starting a fresh run that would
+/// double-count the trace.
+#[test]
+#[should_panic(expected = "no valid snapshot")]
+fn resume_with_no_valid_snapshot_aborts() {
+    let workload = small_workload(13);
+    let dir = scratch("allgone");
+    let mut options = cell_options(false);
+    options.checkpoint_dir = Some(dir.clone());
+    run_cell(&workload, "ff", 1, options);
+    let store = SnapshotStore::open(&dir).unwrap();
+    for hour in store.hours() {
+        let path = store.path_for(hour);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..4]).unwrap();
+    }
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut options = cell_options(false);
+        options.resume_from = Some(dir.clone());
+        run_cell(&workload, "ff", 1, options)
+    }));
+    std::fs::remove_dir_all(&dir).unwrap();
+    match result {
+        Ok(_) => panic!("resume from all-torn directory was accepted"),
+        // Re-raise the original payload after cleanup so the
+        // `should_panic(expected)` filter still sees the message.
+        Err(e) => std::panic::resume_unwind(e),
+    }
+}
+
+/// Resuming under a different policy than the crashed run is a
+/// configuration error, not a silent divergence: the image carries the
+/// policy name and restore refuses a mismatch.
+#[test]
+#[should_panic(expected = "resume failed")]
+fn resume_with_wrong_policy_aborts() {
+    let workload = small_workload(17);
+    let dir = scratch("wrongpolicy");
+    let mut options = cell_options(false);
+    options.checkpoint_dir = Some(dir.clone());
+    run_cell(&workload, "ff", 1, options);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut options = cell_options(false);
+        options.resume_from = Some(dir.clone());
+        run_cell(&workload, "mcc", 1, options)
+    }));
+    std::fs::remove_dir_all(&dir).unwrap();
+    match result {
+        Ok(_) => panic!("policy mismatch was accepted"),
+        Err(e) => std::panic::resume_unwind(e),
+    }
+}
+
+/// A single-core image cannot seed a sharded run (and vice versa): the
+/// frame's kind tag is checked before any payload decoding.
+#[test]
+#[should_panic(expected = "but this run needs")]
+fn resume_rejects_engine_kind_mismatch() {
+    let workload = small_workload(19);
+    let dir = scratch("kind");
+    let mut options = cell_options(false);
+    options.checkpoint_dir = Some(dir.clone());
+    run_cell(&workload, "ff", 1, options);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut options = cell_options(false);
+        options.resume_from = Some(dir.clone());
+        run_cell(&workload, "ff", 4, options)
+    }));
+    std::fs::remove_dir_all(&dir).unwrap();
+    match result {
+        Ok(_) => panic!("kind mismatch was accepted"),
+        Err(e) => std::panic::resume_unwind(e),
+    }
+}

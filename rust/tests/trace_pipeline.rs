@@ -6,7 +6,8 @@ use grmu::trace::mapping::{map_pods_to_profiles, nearest_profile, normalized_pro
 use grmu::trace::{TraceConfig, Workload};
 use grmu::util::stats::{iqr_filter, mean};
 
-const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/alibaba_mini.csv");
+const FIXTURE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/fixtures/alibaba_mini.csv");
 
 #[test]
 fn csv_roundtrip_preserves_vm_stream() {
@@ -58,8 +59,13 @@ fn committed_fixture_runs_end_to_end() {
             .build("grmu", &PolicyConfig::new().heavy_frac(0.3))
             .unwrap();
         let mut sim = Simulation::new(DataCenter::new(hosts.clone()), policy, &vms);
-        sim.options =
-            SimulationOptions { integrity_every: 1, drain_cap_hours: 0, ops, queue };
+        sim.options = SimulationOptions {
+            integrity_every: 1,
+            drain_cap_hours: 0,
+            ops,
+            queue,
+            ..SimulationOptions::default()
+        };
         sim.run()
     };
     let clean = run(OpsConfig::default(), QueueConfig::default());
@@ -85,6 +91,87 @@ fn committed_fixture_runs_end_to_end() {
     let faulty_again = run(ops, QueueConfig { capacity: 8, ..QueueConfig::default() });
     assert_eq!(faulty.samples, faulty_again.samples);
     assert_eq!(faulty.interrupted, faulty_again.interrupted);
+}
+
+/// Satellite lock: a checkpointed run over the committed fixture can be
+/// killed mid-trace and resumed to the exact outcome of an uninterrupted
+/// run — and the re-driven tail reproduces the crashed run's snapshot
+/// files byte for byte.
+#[test]
+fn checkpointed_fixture_resumes_byte_identical() {
+    use grmu::cluster::{DataCenter, Host};
+    use grmu::policies::{PolicyConfig, PolicyRegistry};
+    use grmu::recover::SnapshotStore;
+    use grmu::sim::{Simulation, SimulationOptions};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+    let scratch = |tag: &str| {
+        let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("grmu-trace-cp-{}-{tag}-{n}", std::process::id()))
+    };
+
+    let (vms, _) = load_trace(std::path::Path::new(FIXTURE)).unwrap();
+    let hosts: Vec<Host> = (0..3).map(|i| Host::new(i, 64, 256, 2)).collect();
+    let run = |options: SimulationOptions| {
+        let policy = PolicyRegistry::standard()
+            .build("grmu", &PolicyConfig::new().heavy_frac(0.3))
+            .unwrap();
+        let mut sim = Simulation::new(DataCenter::new(hosts.clone()), policy, &vms);
+        sim.options = options;
+        sim.run()
+    };
+
+    // Baseline: the same run with checkpointing off.
+    let baseline = run(SimulationOptions { integrity_every: 1, ..SimulationOptions::default() });
+
+    // Checkpointed run: a full snapshot every 24 simulated hours.
+    let dir_full = scratch("full");
+    let checkpointed = run(SimulationOptions {
+        integrity_every: 1,
+        checkpoint_every_hours: 24,
+        checkpoint_dir: Some(dir_full.clone()),
+        ..SimulationOptions::default()
+    });
+    assert!(
+        checkpointed.same_outcome(&baseline),
+        "checkpointing must not change any observable outcome"
+    );
+
+    // Simulate a kill: clone the checkpoint directory, then delete the
+    // newest snapshot so the resume starts from an earlier interval and
+    // has to re-drive the tail (cross-checking the journal suffix).
+    let hours = SnapshotStore::open(&dir_full).unwrap().hours();
+    assert!(hours.len() >= 2, "fixture run produced only {hours:?}");
+    let newest = *hours.last().unwrap();
+    let dir_crash = scratch("crashed");
+    std::fs::create_dir_all(&dir_crash).unwrap();
+    for entry in std::fs::read_dir(&dir_full).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dir_crash.join(entry.file_name())).unwrap();
+    }
+    let crash_store = SnapshotStore::open(&dir_crash).unwrap();
+    std::fs::remove_file(crash_store.path_for(newest)).unwrap();
+
+    let resumed = run(SimulationOptions {
+        integrity_every: 1,
+        checkpoint_every_hours: 24,
+        resume_from: Some(dir_crash.clone()),
+        ..SimulationOptions::default()
+    });
+    assert!(
+        resumed.same_outcome(&baseline),
+        "resumed run must reproduce the uninterrupted run exactly"
+    );
+
+    // The re-driven tail rewrote the deleted snapshot byte for byte.
+    let full_store = SnapshotStore::open(&dir_full).unwrap();
+    let original = std::fs::read(full_store.path_for(newest)).unwrap();
+    let recovered = std::fs::read(crash_store.path_for(newest)).unwrap();
+    assert_eq!(original, recovered, "snapshot at hour {newest} must be byte-identical");
+
+    std::fs::remove_dir_all(&dir_full).unwrap();
+    std::fs::remove_dir_all(&dir_crash).unwrap();
 }
 
 #[test]
