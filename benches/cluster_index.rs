@@ -1,21 +1,28 @@
 //! Large-cluster placement benchmarks: the `ClusterIndex` hot path vs
 //! the brute-force full scan at 10,000 GPUs (EXPERIMENTS.md §Perf
-//! iteration 5).
+//! iterations 5 and 7).
 //!
 //! The cluster is loaded so that only a small tail of GPUs can host
 //! anything — the regime where a per-request O(cluster) scan hurts and
 //! the per-profile feasibility buckets pay off. Placements made during a
 //! timed batch are removed again inside the iteration, so every
 //! iteration sees the same cluster state and the measured cost is the
-//! decision path itself (plus the symmetric O(log n) index updates both
-//! variants pay).
+//! decision path itself (plus the symmetric O(1)/O(log n) index updates
+//! both variants pay).
+//!
+//! The `iter-bucket` rows isolate the index v2 iteration primitives
+//! themselves: walking one profile's candidate set through the
+//! hierarchical bitset [`grmu::cluster::GpuSetView`], and the same walk
+//! word-ANDed against an external [`grmu::cluster::GpuBits`] mask (the
+//! shape of GRMU's basket∩bucket intersection). The `grmu` cells then
+//! measure that intersection inside the full placement path.
 //!
 //! Run: `cargo bench --bench cluster_index` (BENCH_QUICK=1 for a fast
 //! pass). The acceptance bar for the index refactor is a ≥ 5× speedup
 //! per placed batch for the scanning policies at this scale.
 
 use grmu::cluster::vm::VmSpec;
-use grmu::cluster::{DataCenter, GpuRef, Host};
+use grmu::cluster::{DataCenter, GpuBits, GpuRef, Host};
 use grmu::mig::{GpuModel, Placement, Profile};
 use grmu::policies::{Policy, PolicyConfig, PolicyCtx, PolicyRegistry};
 use grmu::util::bench::Bench;
@@ -178,4 +185,54 @@ fn main() {
             &format!("place-batch-64/10k-gpus-mixed/{name}/indexed"),
         );
     }
+
+    // Index v2 iteration primitives over a *dense* bucket: an empty
+    // fleet leaves all 10k GPUs in the 1g.5gb bucket, so these rows
+    // price one candidate step of the hierarchical bitset view — and of
+    // the word-AND variant over an every-other-GPU mask (GRMU's
+    // basket ∩ bucket shape) — with no placement work attached.
+    let dc = DataCenter::new(
+        (0..HOSTS).map(|i| Host::new(i, 512, 2_048, GPUS_PER_HOST)).collect(),
+    );
+    println!(
+        "empty cluster: {} GPUs all in the 1g.5gb bucket",
+        dc.index().fitting_count(Profile::P1g5gb)
+    );
+    b.run("iter-bucket/10k-gpus/view", || {
+        dc.index().gpus_fitting(Profile::P1g5gb).iter().map(|r| r.host as u64).sum::<u64>()
+    });
+    let mut mask = GpuBits::for_index(dc.index());
+    for (i, r) in dc.index().gpus_fitting(Profile::P1g5gb).iter().enumerate() {
+        if i % 2 == 0 {
+            mask.insert(dc.index(), r);
+        }
+    }
+    b.run("iter-bucket/10k-gpus/view-and-mask", || {
+        dc.index()
+            .gpus_fitting(Profile::P1g5gb)
+            .and_iter(&mask)
+            .map(|r| r.host as u64)
+            .sum::<u64>()
+    });
+
+    // GRMU end to end in the scarcity regime: the indexed path resolves
+    // basket ∩ bucket as a word-wise AND over the bitsets; the scan
+    // path probes every basket member against the cluster.
+    let mut dc = loaded_cluster();
+    let probe = probe_batch();
+    for (mode, use_index) in [("indexed", true), ("scan", false)] {
+        let cfg = PolicyConfig::new().use_index(use_index);
+        let mut policy = registry.build("grmu", &cfg).unwrap();
+        let mut ctx = PolicyCtx::default();
+        b.run(&format!("place-batch-64/10k-gpus/grmu/{mode}"), || {
+            let decisions = policy.place_batch(&mut dc, &probe, &mut ctx);
+            for (vm, d) in probe.iter().zip(&decisions) {
+                if d.is_placed() {
+                    dc.remove(vm.id);
+                }
+            }
+            decisions.len()
+        });
+    }
+    b.compare("place-batch-64/10k-gpus/grmu/scan", "place-batch-64/10k-gpus/grmu/indexed");
 }

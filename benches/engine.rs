@@ -10,6 +10,10 @@
 //!    grows: the steady-state loop is allocation-free (decisions in the
 //!    reusable `DecisionBuffer`, pre-sized heap/samples/migration log)
 //!    and scan-free (O(1) activity counters at every interval close).
+//!    Each fleet also runs with `use_index: false` — the brute-force
+//!    full-scan oracle — so the printed req/s pairs are the end-to-end
+//!    before/after of the index v2 hot path (EXPERIMENTS.md §Perf
+//!    iteration 7).
 //! 2. **Interval-close accounting, before/after** — the per-sample
 //!    aggregate reads (`active_hardware_rate`, `active_gpus_by_model`,
 //!    `resident_count`) as O(1) counter reads vs the pre-iteration-6
@@ -85,6 +89,20 @@ fn engine_runs(quick: bool) {
                 rps,
                 100.0 * result.overall_acceptance(),
                 result.samples.len(),
+            );
+        }
+        // Index v2 end to end: the same run through the brute-force
+        // scan paths (`--use-index false`). The req/s ratio is the
+        // whole-engine win of the hierarchical bitset index — smaller
+        // than the per-batch microbench ratio because departures,
+        // interval close and trace generation are index-independent.
+        for policy in ["ff", "mcc", "grmu"] {
+            let scan_cfg = ExperimentConfig { use_index: false, ..cfg.clone() };
+            let result = experiments::run_once(&workload, policy, &scan_cfg, true);
+            let rps = result.requested as f64 / result.wall_seconds.max(1e-9);
+            println!(
+                "engine/10k-gpus/{fleet}/{policy:<4} {:>9} req in {:>7.3}s = {:>12.0} req/s  (no index: full-scan oracle)",
+                result.requested, result.wall_seconds, rps,
             );
         }
     }

@@ -47,6 +47,22 @@ cargo run --release --quiet -- simulate --quick --policy mcc+ilp-repair \
 cargo run --release --quiet -- sweep --quick --gap-every 48 \
     | grep -q "Optimality gap" || { echo "sweep produced no gap samples"; exit 1; }
 
+echo "== cluster-index-v2 smoke run"
+# The hierarchical bitset index vs its brute-force scan oracle through
+# the real CLI: a small mixed-model sweep must report byte-identical
+# rows (modulo the wall-clock column) across --use-index modes.
+IDX_A="$(mktemp)"; IDX_B="$(mktemp)"
+cargo run --release --quiet -- sweep --quick --seeds 42 --policies ff,grmu \
+    --gpu-models a30:0.5,a100-40:0.5 --use-index true \
+    | awk '{$NF=""; print}' > "$IDX_A"
+cargo run --release --quiet -- sweep --quick --seeds 42 --policies ff,grmu \
+    --gpu-models a30:0.5,a100-40:0.5 --use-index false \
+    | awk '{$NF=""; print}' > "$IDX_B"
+grep -q "acceptance" "$IDX_A" || { echo "index smoke produced no sweep table"; exit 1; }
+diff "$IDX_A" "$IDX_B" \
+    || { echo "indexed and scan sweeps diverged"; exit 1; }
+rm -f "$IDX_A" "$IDX_B"
+
 echo "== crash-recovery smoke run"
 # Checkpoint a quick run, kill it on disk (drop the newest snapshot and
 # tear the next one), resume, and require the resumed run to print the

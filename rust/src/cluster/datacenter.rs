@@ -703,6 +703,9 @@ impl DataCenter {
         if ClusterIndex::build(&self.hosts) != self.index {
             return Err(IntegrityReport::cluster("cluster index out of sync with GPU/host state"));
         }
+        if let Err(e) = self.index.check_invariants() {
+            return Err(IntegrityReport::cluster(format!("cluster index invariant broken: {e}")));
+        }
         if ActivityCounters::build(&self.hosts) != self.activity {
             return Err(IntegrityReport::cluster("activity counters out of sync with host state"));
         }
@@ -988,15 +991,15 @@ mod tests {
         let vm = spec(1, Profile::P7g40gb);
         let r = GpuRef { host: 0, gpu: 0 };
         dc.place(&vm, r, Placement { profile: Profile::P7g40gb, start: 0 });
-        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(r));
         dc.check_integrity().unwrap();
         let dst = GpuRef { host: 1, gpu: 0 };
         dc.migrate(1, dst, Placement { profile: Profile::P7g40gb, start: 0 });
-        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
-        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&dst));
+        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(r));
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(dst));
         dc.check_integrity().unwrap();
         dc.remove(1);
-        assert!(dc.index().gpus_fitting(Profile::P7g40gb).contains(&dst));
+        assert!(dc.index().gpus_fitting(Profile::P7g40gb).contains(dst));
         dc.check_integrity().unwrap();
     }
 
@@ -1220,7 +1223,7 @@ mod tests {
         dc.set_gpu_health(r, HealthState::Failed { until: 100 });
         assert!(!dc.gpu_available(r));
         assert_eq!(dc.offline_gpus(), 1);
-        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(r));
         dc.check_integrity().unwrap();
         // Occupancy changes while offline leave the index untouched; the
         // re-attach picks up the live occupancy.
@@ -1230,7 +1233,7 @@ mod tests {
         dc.remove(1);
         dc.set_gpu_health(r, HealthState::Healthy);
         assert_eq!(dc.offline_gpus(), 0);
-        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(r));
         dc.check_integrity().unwrap();
     }
 
@@ -1244,7 +1247,7 @@ mod tests {
         dc.set_host_health(0, HealthState::Draining);
         assert!(!dc.host_available(0));
         assert_eq!(dc.offline_gpus(), 2); // both GPUs of host 0
-        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        assert!(!dc.index().gpus_fitting(Profile::P1g5gb).contains(r));
         assert_eq!(dc.index().num_hosts(), 1);
         assert_eq!(dc.vms_on_host(0), vec![1]);
         dc.check_integrity().unwrap();

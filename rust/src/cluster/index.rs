@@ -13,33 +13,70 @@
 //!   of its own model's profiles, which is what confines every policy
 //!   scan to model-compatible candidates. A state change moves a GPU in
 //!   or out of a bucket only when that profile's feasible-start count
-//!   crosses zero, so an update is a handful of table lookups plus
-//!   O(log #GPUs) set operations.
-//! * **Host headroom multisets** of free CPU / free RAM over
+//!   crosses zero, so an update is a handful of table lookups plus O(1)
+//!   bit operations.
+//! * **Per-model schedulable sets** ([`ClusterIndex::schedulable`]):
+//!   every healthy GPU of a model on a healthy host, independent of
+//!   occupancy. These back whole-fleet walks that previously scanned
+//!   `hosts()` — the ILP window extraction and the sharded router's
+//!   rebalance receiver probe.
+//! * **Host headroom histograms** of free CPU / free RAM over
 //!   GPU-equipped hosts, answering "could any host take this VM?" and
-//!   the CPU-vs-RAM rejection classification from the maxima/minima in
-//!   O(log #hosts).
+//!   the CPU-vs-RAM rejection classification from cached maxima/minima
+//!   in O(1).
+//!
+//! ## Index v2 layout (PR 10)
+//!
+//! The buckets were `BTreeSet<GpuRef>` through PR 9; at fleet scale the
+//! innermost placement loop was dominated by B-tree pointer chasing.
+//! They are now a **two-level hierarchical bitset** per profile key:
+//!
+//! * A static [`SlotMap`] numbers every GPU of the fleet (healthy or
+//!   not) with a dense *slot* in ascending `GpuRef` order. The map is
+//!   derived purely from fleet topology (host ids and GPU counts never
+//!   change after construction), so it is identical across health
+//!   transitions and across `build` vs incremental maintenance.
+//! * Each bucket is a leaf `Vec<u64>` (bit per slot) plus a summary
+//!   layer (bit per nonzero leaf word). Set/clear is O(1);
+//!   find-first/next-set is one or two `trailing_zeros` per step; a
+//!   word of 64 candidates occupies 8 contiguous bytes instead of 64
+//!   B-tree entries.
+//!
+//! Consumers read buckets through the [`GpuSetView`] facade
+//! (`iter`/`contains`/`len` in `GpuRef` terms), and set algebra against
+//! an external GPU set — GRMU's basket ∩ bucket intersection — is a
+//! word-wise AND via [`GpuBits`] + [`GpuSetView::and_iter`].
+//!
+//! The headroom multisets were `BTreeMap<u32, u32>`; free-CPU/free-RAM
+//! classes are small integers, so they are now flat histograms
+//! ([`Hist`]) with cached max/min. Increments update the cache
+//! directly; removing the last host of an extreme class rescans — a
+//! bounded walk over the (tiny) class range, amortized O(1).
 //!
 //! ## Determinism contract
 //!
 //! Buckets iterate in ascending [`GpuRef`] order — the paper's
-//! `globalIndex` (Algorithm 2). A bucket is therefore exactly the
-//! feasible *subsequence* of a full `globalIndex` scan (foreign-model
-//! GPUs are infeasible by definition), which is what makes first-fit
-//! and best-scoring selections over bucket candidates byte-identical to
-//! the pre-index full scans (locked by the indexed-vs-scan equivalence
-//! tests in `rust/tests/decision_api.rs`).
+//! `globalIndex` (Algorithm 2). With the bitset layout this holds *by
+//! construction*: slots ascend with `GpuRef`, and `trailing_zeros`
+//! iteration visits slots in ascending order. A bucket is therefore
+//! exactly the feasible *subsequence* of a full `globalIndex` scan
+//! (foreign-model GPUs are infeasible by definition), which is what
+//! makes first-fit and best-scoring selections over bucket candidates
+//! byte-identical to the pre-index full scans (locked by the
+//! indexed-vs-scan equivalence tests in `rust/tests/decision_api.rs`).
 //!
 //! ## Health contract
 //!
 //! The index covers **schedulable** capacity only: a GPU appears in
-//! buckets iff it and its host are
-//! [`Healthy`](crate::cluster::HealthState); an unavailable host also
-//! leaves the headroom multisets and the per-model host counts.
-//! [`ClusterIndex::build`] skips unhealthy capacity, and
-//! [`super::DataCenter`]'s health mutators attach/detach entries on
-//! availability transitions, so the "rebuild equals incremental"
-//! comparison in `check_integrity` verifies the contract for free. On
+//! buckets (and its model's [`ClusterIndex::schedulable`] set) iff it
+//! and its host are [`Healthy`](crate::cluster::HealthState); an
+//! unavailable host also leaves the headroom histograms and the
+//! per-model host counts. [`ClusterIndex::build`] skips unhealthy
+//! capacity, and [`super::DataCenter`]'s health mutators attach/detach
+//! entries on availability transitions, so the "rebuild equals
+//! incremental" comparison in `check_integrity` verifies the contract
+//! for free (plus the structural [`ClusterIndex::check_invariants`]:
+//! summary/leaf coherence, cached lengths and histogram extremes). On
 //! an all-healthy fleet every skip condition is vacuous and the index
 //! is bit-for-bit the pre-health one.
 
@@ -47,21 +84,440 @@ use super::datacenter::GpuRef;
 use super::host::Host;
 use crate::mig::gpu::profile_capacity_for;
 use crate::mig::{BlockMask, GpuModel, Profile, NUM_MODELS, NUM_PROFILE_KEYS};
-use std::collections::{BTreeMap, BTreeSet};
+
+/// Dense GPU numbering in ascending [`GpuRef`] order, shared by every
+/// bucket of one [`ClusterIndex`]. Built once from fleet topology
+/// (which is immutable after construction) and never touched by
+/// occupancy or health changes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+struct SlotMap {
+    /// Host position → first slot of that host's GPUs.
+    base: Vec<u32>,
+    /// Slot → the `GpuRef` it denotes (ascending).
+    refs: Vec<GpuRef>,
+}
+
+impl SlotMap {
+    fn build(hosts: &[Host]) -> SlotMap {
+        let mut base = Vec::with_capacity(hosts.len());
+        let mut refs = Vec::new();
+        for (pos, h) in hosts.iter().enumerate() {
+            debug_assert_eq!(h.id as usize, pos, "host id must equal its position");
+            base.push(refs.len() as u32);
+            for g in 0..h.gpus().len() {
+                refs.push(GpuRef { host: h.id, gpu: g as u8 });
+            }
+        }
+        SlotMap { base, refs }
+    }
+
+    #[inline]
+    fn slot_of(&self, r: GpuRef) -> usize {
+        self.base[r.host as usize] as usize + r.gpu as usize
+    }
+
+    #[inline]
+    fn num_slots(&self) -> usize {
+        self.refs.len()
+    }
+}
+
+/// One two-level bitset over the fleet's slots: `words` holds a bit per
+/// slot, `summary` a bit per nonzero leaf word, `len` the popcount.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+struct BitBucket {
+    words: Vec<u64>,
+    summary: Vec<u64>,
+    len: u32,
+}
+
+fn words_for(bits: usize) -> usize {
+    (bits + 63) / 64
+}
+
+impl BitBucket {
+    fn with_slots(slots: usize) -> BitBucket {
+        let leaves = words_for(slots);
+        BitBucket { words: vec![0; leaves], summary: vec![0; words_for(leaves)], len: 0 }
+    }
+
+    /// Idempotent insert.
+    #[inline]
+    fn set(&mut self, slot: usize) {
+        let (w, bit) = (slot / 64, 1u64 << (slot % 64));
+        if self.words[w] & bit == 0 {
+            self.words[w] |= bit;
+            self.summary[w / 64] |= 1 << (w % 64);
+            self.len += 1;
+        }
+    }
+
+    /// Idempotent remove.
+    #[inline]
+    fn clear(&mut self, slot: usize) {
+        let (w, bit) = (slot / 64, 1u64 << (slot % 64));
+        if self.words[w] & bit != 0 {
+            self.words[w] &= !bit;
+            if self.words[w] == 0 {
+                self.summary[w / 64] &= !(1 << (w % 64));
+            }
+            self.len -= 1;
+        }
+    }
+
+    #[inline]
+    fn contains(&self, slot: usize) -> bool {
+        self.words[slot / 64] & (1 << (slot % 64)) != 0
+    }
+
+    fn check(&self, what: &str, slots: usize) -> Result<(), String> {
+        if self.words.len() != words_for(slots) || self.summary.len() != words_for(self.words.len())
+        {
+            return Err(format!("{what}: bitset sized for a different fleet"));
+        }
+        let pop: u32 = self.words.iter().map(|w| w.count_ones()).sum();
+        if pop != self.len {
+            return Err(format!("{what}: cached len {} != popcount {pop}", self.len));
+        }
+        for (w, &word) in self.words.iter().enumerate() {
+            let summarized = self.summary[w / 64] & (1 << (w % 64)) != 0;
+            if summarized != (word != 0) {
+                return Err(format!("{what}: summary bit {w} out of sync with leaf word"));
+            }
+        }
+        if slots % 64 != 0 {
+            if let Some(&last) = self.words.last() {
+                if last >> (slots % 64) != 0 {
+                    return Err(format!("{what}: bits set past the last slot"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed read view of one feasibility bucket (or schedulable set):
+/// the bitset plus the slot map that translates slots back to
+/// [`GpuRef`]s. `Copy`, so it can be passed around like the old
+/// `&BTreeSet<GpuRef>` handle.
+#[derive(Clone, Copy)]
+pub struct GpuSetView<'a> {
+    bucket: &'a BitBucket,
+    slots: &'a SlotMap,
+}
+
+impl<'a> GpuSetView<'a> {
+    /// Number of GPUs in the set.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bucket.len as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bucket.len == 0
+    }
+
+    /// Membership test in O(1).
+    #[inline]
+    pub fn contains(&self, r: GpuRef) -> bool {
+        self.bucket.contains(self.slots.slot_of(r))
+    }
+
+    /// Iterate members in ascending [`GpuRef`] order (the `globalIndex`
+    /// contract), yielding `GpuRef` by value.
+    #[inline]
+    pub fn iter(&self) -> GpuSetIter<'a> {
+        GpuSetIter {
+            bucket: self.bucket,
+            slots: self.slots,
+            word: 0,
+            bits: 0,
+            sum_word: 0,
+            sum_bits: self.bucket.summary.first().copied().unwrap_or(0),
+        }
+    }
+
+    /// Iterate `self ∩ mask` in ascending [`GpuRef`] order via a
+    /// word-wise AND — GRMU's basket-intersection hot path. The mask
+    /// must have been created against the same index topology.
+    #[inline]
+    pub fn and_iter(&self, mask: &'a GpuBits) -> GpuAndIter<'a> {
+        GpuAndIter {
+            bucket: self.bucket,
+            mask: &mask.words,
+            slots: self.slots,
+            word: 0,
+            bits: 0,
+            sum_word: 0,
+            sum_bits: self.bucket.summary.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+impl<'a> IntoIterator for GpuSetView<'a> {
+    type Item = GpuRef;
+    type IntoIter = GpuSetIter<'a>;
+    fn into_iter(self) -> GpuSetIter<'a> {
+        self.iter()
+    }
+}
+
+/// Ascending-`GpuRef` iterator over one [`GpuSetView`]. The summary
+/// layer skips runs of 64 empty words; within a word, members pop out
+/// via `trailing_zeros` / clear-lowest-set-bit.
+pub struct GpuSetIter<'a> {
+    bucket: &'a BitBucket,
+    slots: &'a SlotMap,
+    word: usize,
+    bits: u64,
+    sum_word: usize,
+    sum_bits: u64,
+}
+
+impl Iterator for GpuSetIter<'_> {
+    type Item = GpuRef;
+
+    #[inline]
+    fn next(&mut self) -> Option<GpuRef> {
+        loop {
+            if self.bits != 0 {
+                let b = self.bits.trailing_zeros() as usize;
+                self.bits &= self.bits - 1;
+                return Some(self.slots.refs[self.word * 64 + b]);
+            }
+            loop {
+                if self.sum_bits != 0 {
+                    let w = self.sum_bits.trailing_zeros() as usize;
+                    self.sum_bits &= self.sum_bits - 1;
+                    self.word = self.sum_word * 64 + w;
+                    self.bits = self.bucket.words[self.word];
+                    break;
+                }
+                self.sum_word += 1;
+                if self.sum_word >= self.bucket.summary.len() {
+                    return None;
+                }
+                self.sum_bits = self.bucket.summary[self.sum_word];
+            }
+        }
+    }
+}
+
+/// Ascending-`GpuRef` iterator over `bucket ∩ mask`
+/// ([`GpuSetView::and_iter`]). Driven by the bucket's summary layer;
+/// each candidate word costs one AND.
+pub struct GpuAndIter<'a> {
+    bucket: &'a BitBucket,
+    mask: &'a [u64],
+    slots: &'a SlotMap,
+    word: usize,
+    bits: u64,
+    sum_word: usize,
+    sum_bits: u64,
+}
+
+impl Iterator for GpuAndIter<'_> {
+    type Item = GpuRef;
+
+    #[inline]
+    fn next(&mut self) -> Option<GpuRef> {
+        loop {
+            if self.bits != 0 {
+                let b = self.bits.trailing_zeros() as usize;
+                self.bits &= self.bits - 1;
+                return Some(self.slots.refs[self.word * 64 + b]);
+            }
+            loop {
+                if self.sum_bits != 0 {
+                    let w = self.sum_bits.trailing_zeros() as usize;
+                    self.sum_bits &= self.sum_bits - 1;
+                    self.word = self.sum_word * 64 + w;
+                    self.bits = self.bucket.words[self.word]
+                        & self.mask.get(self.word).copied().unwrap_or(0);
+                    if self.bits != 0 {
+                        break;
+                    }
+                } else {
+                    self.sum_word += 1;
+                    if self.sum_word >= self.bucket.summary.len() {
+                        return None;
+                    }
+                    self.sum_bits = self.bucket.summary[self.sum_word];
+                }
+            }
+        }
+    }
+}
+
+/// An external GPU set in the index's slot space — the mask side of
+/// [`GpuSetView::and_iter`]. Policies that keep their own GPU
+/// groupings (GRMU's heavy/light baskets) mirror them into a `GpuBits`
+/// so the per-request basket ∩ bucket intersection is a word-wise AND
+/// instead of an ordered-set merge.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GpuBits {
+    words: Vec<u64>,
+}
+
+impl GpuBits {
+    /// An empty set sized for `index`'s fleet.
+    pub fn for_index(index: &ClusterIndex) -> GpuBits {
+        GpuBits { words: vec![0; words_for(index.slots.num_slots())] }
+    }
+
+    /// Idempotent insert (`index` supplies the slot mapping).
+    #[inline]
+    pub fn insert(&mut self, index: &ClusterIndex, r: GpuRef) {
+        let slot = index.slots.slot_of(r);
+        self.words[slot / 64] |= 1 << (slot % 64);
+    }
+
+    /// Idempotent remove.
+    #[inline]
+    pub fn remove(&mut self, index: &ClusterIndex, r: GpuRef) {
+        let slot = index.slots.slot_of(r);
+        self.words[slot / 64] &= !(1 << (slot % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, index: &ClusterIndex, r: GpuRef) -> bool {
+        let slot = index.slots.slot_of(r);
+        self.words[slot / 64] & (1 << (slot % 64)) != 0
+    }
+}
+
+/// Flat headroom histogram with cached extremes: `counts[c]` = number
+/// of GPU-equipped hosts whose free CPU (or RAM) equals `c`. Classes
+/// are small integers (bounded by the largest host), so the backing
+/// vector stays tiny and max/min maintenance on removal is a bounded
+/// scan toward the surviving population.
+#[derive(Debug, Clone, Default)]
+struct Hist {
+    counts: Vec<u32>,
+    /// Total number of entries across all classes.
+    present: u32,
+    /// Largest / smallest populated class; both 0 when `present == 0`
+    /// (mirroring the old `BTreeMap` readers' `unwrap_or(0)`).
+    max: u32,
+    min: u32,
+}
+
+impl Hist {
+    fn insert(&mut self, class: u32) {
+        let i = class as usize;
+        if i >= self.counts.len() {
+            self.counts.resize(i + 1, 0);
+        }
+        self.counts[i] += 1;
+        if self.present == 0 {
+            self.max = class;
+            self.min = class;
+        } else {
+            self.max = self.max.max(class);
+            self.min = self.min.min(class);
+        }
+        self.present += 1;
+    }
+
+    fn remove(&mut self, class: u32) {
+        let i = class as usize;
+        match self.counts.get_mut(i) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                self.present -= 1;
+                if self.present == 0 {
+                    self.max = 0;
+                    self.min = 0;
+                    return;
+                }
+                if self.counts[i] == 0 {
+                    // `present > 0` guarantees a populated class on the
+                    // far side of each rescan.
+                    if class == self.max {
+                        let mut c = i;
+                        while self.counts[c] == 0 {
+                            c -= 1;
+                        }
+                        self.max = c as u32;
+                    }
+                    if class == self.min {
+                        let mut c = i;
+                        while self.counts[c] == 0 {
+                            c += 1;
+                        }
+                        self.min = c as u32;
+                    }
+                }
+            }
+            _ => debug_assert!(false, "headroom histogram missing class {class}"),
+        }
+    }
+
+    fn shift(&mut self, old: u32, new: u32) {
+        if old == new {
+            return;
+        }
+        self.remove(old);
+        self.insert(new);
+    }
+
+    fn check(&self, what: &str) -> Result<(), String> {
+        let total: u32 = self.counts.iter().sum();
+        if total != self.present {
+            return Err(format!("{what}: cached total {} != recount {total}", self.present));
+        }
+        if self.present == 0 {
+            if self.max != 0 || self.min != 0 {
+                return Err(format!("{what}: empty histogram with nonzero extremes"));
+            }
+            return Ok(());
+        }
+        let lo = self.counts.iter().position(|&n| n > 0).unwrap() as u32;
+        let hi = self.counts.iter().rposition(|&n| n > 0).unwrap() as u32;
+        if self.min != lo || self.max != hi {
+            return Err(format!(
+                "{what}: cached extremes {}..{} != populated range {lo}..{hi}",
+                self.min, self.max
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The incremental histogram may carry trailing zero classes that a
+/// fresh rebuild never allocates; compare logical content.
+impl PartialEq for Hist {
+    fn eq(&self, other: &Hist) -> bool {
+        if self.present != other.present || self.max != other.max || self.min != other.min {
+            return false;
+        }
+        let classes = self.counts.len().max(other.counts.len());
+        (0..classes).all(|c| {
+            self.counts.get(c).copied().unwrap_or(0) == other.counts.get(c).copied().unwrap_or(0)
+        })
+    }
+}
+
+impl Eq for Hist {}
 
 /// Index over the live cluster state. Owned and kept coherent by
 /// [`super::DataCenter`]; consumers only read it.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClusterIndex {
+    /// Static GpuRef ↔ slot numbering shared by all bitsets below.
+    slots: SlotMap,
     /// `buckets[k]` = GPUs where the profile with dense index `k`
     /// currently fits, in `globalIndex` order.
-    buckets: Vec<BTreeSet<GpuRef>>,
-    /// Multiset of free CPU cores per GPU-equipped host.
-    free_cpus: BTreeMap<u32, u32>,
-    /// Multiset of free RAM (GB) per GPU-equipped host.
-    free_ram: BTreeMap<u32, u32>,
+    buckets: Vec<BitBucket>,
+    /// `sched[m]` = schedulable GPUs of model `m`, occupancy-blind.
+    sched: Vec<BitBucket>,
+    /// Histogram of free CPU cores per GPU-equipped host.
+    free_cpus: Hist,
+    /// Histogram of free RAM (GB) per GPU-equipped host.
+    free_ram: Hist,
     /// Number of GPU-equipped hosts (hosts without GPUs never receive a
-    /// VM and are excluded from the headroom multisets).
+    /// VM and are excluded from the headroom histograms).
     host_count: u32,
     /// Hosts carrying at least one GPU of each model (static per fleet:
     /// GPU models never change after construction). Drives the
@@ -69,24 +525,22 @@ pub struct ClusterIndex {
     hosts_with_model: [u32; NUM_MODELS],
 }
 
-impl Default for ClusterIndex {
-    fn default() -> Self {
-        ClusterIndex {
-            buckets: vec![BTreeSet::new(); NUM_PROFILE_KEYS],
-            free_cpus: BTreeMap::new(),
-            free_ram: BTreeMap::new(),
-            host_count: 0,
-            hosts_with_model: [0; NUM_MODELS],
-        }
-    }
-}
-
 impl ClusterIndex {
     /// Brute-force (re)construction from host/GPU states — the reference
     /// the incremental maintenance is tested against, and what
     /// [`super::DataCenter::check_integrity`] compares with.
     pub fn build(hosts: &[Host]) -> ClusterIndex {
-        let mut idx = ClusterIndex::default();
+        let slots = SlotMap::build(hosts);
+        let n = slots.num_slots();
+        let mut idx = ClusterIndex {
+            slots,
+            buckets: (0..NUM_PROFILE_KEYS).map(|_| BitBucket::with_slots(n)).collect(),
+            sched: (0..NUM_MODELS).map(|_| BitBucket::with_slots(n)).collect(),
+            free_cpus: Hist::default(),
+            free_ram: Hist::default(),
+            host_count: 0,
+            hosts_with_model: [0; NUM_MODELS],
+        };
         for h in hosts {
             if h.gpus().is_empty() || !h.health().allows_placement() {
                 continue;
@@ -101,8 +555,8 @@ impl ClusterIndex {
     /// [`super::DataCenter`] when a host transitions back to healthy.
     pub(crate) fn attach_host(&mut self, h: &Host) {
         self.host_count += 1;
-        *self.free_cpus.entry(h.free_cpus()).or_insert(0) += 1;
-        *self.free_ram.entry(h.free_ram()).or_insert(0) += 1;
+        self.free_cpus.insert(h.free_cpus());
+        self.free_ram.insert(h.free_ram());
         let mut present = [false; NUM_MODELS];
         for gpu in h.gpus() {
             present[gpu.model() as usize] = true;
@@ -126,8 +580,8 @@ impl ClusterIndex {
     pub(crate) fn detach_host(&mut self, h: &Host) {
         debug_assert!(self.host_count > 0);
         self.host_count -= 1;
-        Self::multiset_remove(&mut self.free_cpus, h.free_cpus());
-        Self::multiset_remove(&mut self.free_ram, h.free_ram());
+        self.free_cpus.remove(h.free_cpus());
+        self.free_ram.remove(h.free_ram());
         let mut present = [false; NUM_MODELS];
         for gpu in h.gpus() {
             present[gpu.model() as usize] = true;
@@ -147,22 +601,28 @@ impl ClusterIndex {
         }
     }
 
-    /// Insert one schedulable GPU into the buckets its occupancy allows.
+    /// Insert one schedulable GPU into its model's schedulable set and
+    /// the buckets its occupancy allows.
     pub(crate) fn attach_gpu(&mut self, r: GpuRef, model: GpuModel, occ: BlockMask) {
+        let slot = self.slots.slot_of(r);
+        self.sched[model as usize].set(slot);
         let cap = profile_capacity_for(model, occ);
         for key in model.profile_keys() {
             if cap[key.index()] > 0 {
-                self.buckets[key.dense()].insert(r);
+                self.buckets[key.dense()].set(slot);
             }
         }
     }
 
-    /// Remove one GPU from every bucket its occupancy had it in.
+    /// Remove one GPU from its model's schedulable set and every bucket
+    /// its occupancy had it in.
     pub(crate) fn detach_gpu(&mut self, r: GpuRef, model: GpuModel, occ: BlockMask) {
+        let slot = self.slots.slot_of(r);
+        self.sched[model as usize].clear(slot);
         let cap = profile_capacity_for(model, occ);
         for key in model.profile_keys() {
             if cap[key.index()] > 0 {
-                self.buckets[key.dense()].remove(&r);
+                self.buckets[key.dense()].clear(slot);
             }
         }
     }
@@ -170,13 +630,20 @@ impl ClusterIndex {
     /// GPUs where `profile` currently fits (all of the profile's model),
     /// in `globalIndex` order.
     #[inline]
-    pub fn gpus_fitting(&self, profile: Profile) -> &BTreeSet<GpuRef> {
-        &self.buckets[profile.dense()]
+    pub fn gpus_fitting(&self, profile: Profile) -> GpuSetView<'_> {
+        GpuSetView { bucket: &self.buckets[profile.dense()], slots: &self.slots }
+    }
+
+    /// Schedulable GPUs of `model` (healthy device on healthy host),
+    /// regardless of occupancy, in `globalIndex` order.
+    #[inline]
+    pub fn schedulable(&self, model: GpuModel) -> GpuSetView<'_> {
+        GpuSetView { bucket: &self.sched[model as usize], slots: &self.slots }
     }
 
     /// Number of GPUs with at least one feasible start for `profile`.
     pub fn fitting_count(&self, profile: Profile) -> usize {
-        self.buckets[profile.dense()].len()
+        self.buckets[profile.dense()].len as usize
     }
 
     /// Number of GPU-equipped hosts.
@@ -196,25 +663,25 @@ impl ClusterIndex {
     /// Largest free-CPU headroom of any GPU-equipped host (0 when empty).
     #[inline]
     pub fn max_free_cpus(&self) -> u32 {
-        self.free_cpus.keys().next_back().copied().unwrap_or(0)
+        self.free_cpus.max
     }
 
     /// Smallest free-CPU headroom of any GPU-equipped host (0 when empty).
     #[inline]
     pub fn min_free_cpus(&self) -> u32 {
-        self.free_cpus.keys().next().copied().unwrap_or(0)
+        self.free_cpus.min
     }
 
     /// Largest free-RAM headroom of any GPU-equipped host (0 when empty).
     #[inline]
     pub fn max_free_ram(&self) -> u32 {
-        self.free_ram.keys().next_back().copied().unwrap_or(0)
+        self.free_ram.max
     }
 
     /// Smallest free-RAM headroom of any GPU-equipped host (0 when empty).
     #[inline]
     pub fn min_free_ram(&self) -> u32 {
-        self.free_ram.keys().next().copied().unwrap_or(0)
+        self.free_ram.min
     }
 
     /// Admission precheck: `false` guarantees no GPU-equipped host has
@@ -237,17 +704,14 @@ impl ClusterIndex {
         if old_occ == new_occ {
             return;
         }
+        let slot = self.slots.slot_of(r);
         let old_cap = profile_capacity_for(model, old_occ);
         let new_cap = profile_capacity_for(model, new_occ);
         for key in model.profile_keys() {
             let p = key.index();
             match (old_cap[p] > 0, new_cap[p] > 0) {
-                (false, true) => {
-                    self.buckets[key.dense()].insert(r);
-                }
-                (true, false) => {
-                    self.buckets[key.dense()].remove(&r);
-                }
+                (false, true) => self.buckets[key.dense()].set(slot),
+                (true, false) => self.buckets[key.dense()].clear(slot),
                 _ => {}
             }
         }
@@ -255,37 +719,37 @@ impl ClusterIndex {
 
     /// Move one host between headroom classes after a reserve/release.
     pub(crate) fn update_host(&mut self, old_free: (u32, u32), new_free: (u32, u32)) {
-        Self::multiset_move(&mut self.free_cpus, old_free.0, new_free.0);
-        Self::multiset_move(&mut self.free_ram, old_free.1, new_free.1);
+        self.free_cpus.shift(old_free.0, new_free.0);
+        self.free_ram.shift(old_free.1, new_free.1);
     }
 
-    fn multiset_move(set: &mut BTreeMap<u32, u32>, old: u32, new: u32) {
-        if old == new {
-            return;
+    /// Structural self-check of the v2 layout, run by
+    /// [`super::DataCenter::check_integrity`] *in addition to* the
+    /// rebuild-equality comparison: every summary bit mirrors its leaf
+    /// word, cached lengths equal popcounts, no bits sit past the last
+    /// slot, and the histogram caches match a recount.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.slots.num_slots();
+        for (k, b) in self.buckets.iter().enumerate() {
+            b.check(&format!("bucket {k}"), n)?;
         }
-        Self::multiset_remove(set, old);
-        *set.entry(new).or_insert(0) += 1;
-    }
-
-    fn multiset_remove(set: &mut BTreeMap<u32, u32>, class: u32) {
-        match set.get_mut(&class) {
-            Some(n) if *n > 1 => *n -= 1,
-            Some(_) => {
-                set.remove(&class);
-            }
-            None => debug_assert!(false, "headroom multiset missing class {class}"),
+        for (m, b) in self.sched.iter().enumerate() {
+            b.check(&format!("sched set {m}"), n)?;
         }
+        self.free_cpus.check("free-CPU histogram")?;
+        self.free_ram.check("free-RAM histogram")?;
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{DataCenter, Host, VmSpec};
+    use crate::cluster::{DataCenter, HealthState, Host, VmSpec};
     use crate::mig::gpu::feasible_starts;
     use crate::mig::placement::mock_assign;
     use crate::mig::profiles::ALL_PROFILES;
-    use crate::mig::{Placement, ProfileKey};
+    use crate::mig::{Placement, ProfileKey, ALL_MODELS};
     use crate::util::prop::forall;
     use crate::util::rng::Rng;
 
@@ -308,6 +772,23 @@ mod tests {
             Host::with_models(1, 16, 64, &[GpuModel::H100_80, GpuModel::A30, GpuModel::A100_40]),
             Host::with_models(2, 8, 32, &[GpuModel::H100_80]),
         ])
+    }
+
+    /// Brute-force bucket recomputation: the schedulable GPUs of the
+    /// profile's model where `mock_assign` finds a start, in scan order.
+    fn scan_bucket(dc: &DataCenter, key: ProfileKey) -> Vec<GpuRef> {
+        let mut out = Vec::new();
+        for h in dc.hosts() {
+            for (g, gpu) in h.gpus().iter().enumerate() {
+                if gpu.model() == key.model()
+                    && h.gpu_available(g)
+                    && mock_assign(gpu.occupancy(), key).is_some()
+                {
+                    out.push(GpuRef { host: h.id, gpu: g as u8 });
+                }
+            }
+        }
+        out
     }
 
     #[test]
@@ -333,7 +814,7 @@ mod tests {
         for k in GpuModel::A30.profile_keys() {
             assert_eq!(dc.index().fitting_count(k), 2, "{k}");
             for r in dc.index().gpus_fitting(k) {
-                assert_eq!(dc.gpu(*r).model(), GpuModel::A30, "{k}");
+                assert_eq!(dc.gpu(r).model(), GpuModel::A30, "{k}");
             }
         }
         // No A100-80s in this fleet: buckets empty.
@@ -343,17 +824,58 @@ mod tests {
     }
 
     #[test]
+    fn view_iterates_ascending_and_agrees_with_contains() {
+        let dc = mixed_dc();
+        for key in ProfileKey::all() {
+            let got: Vec<GpuRef> = dc.index().gpus_fitting(key).iter().collect();
+            let mut sorted = got.clone();
+            sorted.sort();
+            assert_eq!(got, sorted, "{key}: iteration not ascending");
+            assert_eq!(got.len(), dc.index().gpus_fitting(key).len(), "{key}");
+            for r in &got {
+                assert!(dc.index().gpus_fitting(key).contains(*r), "{key}");
+            }
+            assert_eq!(got, scan_bucket(&dc, key), "{key}");
+        }
+    }
+
+    #[test]
+    fn word_and_intersection_matches_filtered_iteration() {
+        let dc = small_dc();
+        let idx = dc.index();
+        // Mask covering every other GPU of the fleet.
+        let mut mask = GpuBits::for_index(idx);
+        let all: Vec<GpuRef> = dc.gpu_refs();
+        for (i, &r) in all.iter().enumerate() {
+            if i % 2 == 0 {
+                mask.insert(idx, r);
+            }
+        }
+        for p in ALL_PROFILES {
+            let anded: Vec<GpuRef> = idx.gpus_fitting(p).and_iter(&mask).collect();
+            let filtered: Vec<GpuRef> =
+                idx.gpus_fitting(p).iter().filter(|&r| mask.contains(idx, r)).collect();
+            assert_eq!(anded, filtered, "{p}");
+        }
+        // Removal empties the intersection again.
+        for &r in &all {
+            mask.remove(idx, r);
+        }
+        assert_eq!(idx.gpus_fitting(Profile::P1g5gb).and_iter(&mask).count(), 0);
+    }
+
+    #[test]
     fn full_gpu_leaves_every_bucket() {
         let mut dc = small_dc();
         let r = GpuRef { host: 0, gpu: 0 };
         let pl = Placement { profile: Profile::P7g40gb, start: 0 };
         dc.place(&spec(1, Profile::P7g40gb, 4, 8), r, pl);
         for p in ALL_PROFILES {
-            assert!(!dc.index().gpus_fitting(p).contains(&r), "{p}");
+            assert!(!dc.index().gpus_fitting(p).contains(r), "{p}");
         }
         dc.remove(1);
         for p in ALL_PROFILES {
-            assert!(dc.index().gpus_fitting(p).contains(&r), "{p}");
+            assert!(dc.index().gpus_fitting(p).contains(r), "{p}");
         }
     }
 
@@ -373,6 +895,47 @@ mod tests {
     }
 
     #[test]
+    fn histogram_extremes_survive_class_exhaustion() {
+        let mut h = Hist::default();
+        for class in [8, 16, 16, 4, 32] {
+            h.insert(class);
+        }
+        assert_eq!((h.min, h.max, h.present), (4, 32, 5));
+        h.remove(32); // exhausts the max class: rescan lands on 16
+        assert_eq!((h.min, h.max), (4, 16));
+        h.remove(4); // exhausts the min class: rescan lands on 8
+        assert_eq!((h.min, h.max), (8, 16));
+        h.remove(16); // one of two: no rescan needed
+        assert_eq!((h.min, h.max), (8, 16));
+        h.remove(16);
+        h.remove(8);
+        assert_eq!((h.min, h.max, h.present), (0, 0, 0));
+        h.check("unit").unwrap();
+        // Logical equality ignores trailing zero classes.
+        let mut tall = Hist::default();
+        tall.insert(40);
+        tall.remove(40);
+        assert_eq!(tall, Hist::default());
+    }
+
+    #[test]
+    fn schedulable_sets_track_health_transitions() {
+        let mut dc = mixed_dc();
+        let a30 = GpuRef { host: 0, gpu: 0 };
+        assert!(dc.index().schedulable(GpuModel::A30).contains(a30));
+        assert_eq!(dc.index().schedulable(GpuModel::A30).len(), 2);
+        dc.set_gpu_health(a30, HealthState::Failed { until: 100 });
+        assert!(!dc.index().schedulable(GpuModel::A30).contains(a30));
+        assert_eq!(dc.index().schedulable(GpuModel::A30).len(), 1);
+        dc.set_host_health(1, HealthState::Draining); // takes the other A30 down too
+        assert!(dc.index().schedulable(GpuModel::A30).is_empty());
+        dc.set_gpu_health(a30, HealthState::Healthy);
+        dc.set_host_health(1, HealthState::Healthy);
+        assert_eq!(dc.index().schedulable(GpuModel::A30).len(), 2);
+        dc.check_integrity().unwrap();
+    }
+
+    #[test]
     fn partial_occupancy_tracks_capacity_zero_crossings() {
         let mut dc = small_dc();
         let r = GpuRef { host: 1, gpu: 2 };
@@ -380,10 +943,10 @@ mod tests {
         // no longer fits; 3g.20gb still fits at start 4.
         let pl = Placement { profile: Profile::P3g20gb, start: 0 };
         dc.place(&spec(1, Profile::P3g20gb, 1, 1), r, pl);
-        assert!(!dc.index().gpus_fitting(Profile::P4g20gb).contains(&r));
-        assert!(!dc.index().gpus_fitting(Profile::P7g40gb).contains(&r));
-        assert!(dc.index().gpus_fitting(Profile::P3g20gb).contains(&r));
-        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(&r));
+        assert!(!dc.index().gpus_fitting(Profile::P4g20gb).contains(r));
+        assert!(!dc.index().gpus_fitting(Profile::P7g40gb).contains(r));
+        assert!(dc.index().gpus_fitting(Profile::P3g20gb).contains(r));
+        assert!(dc.index().gpus_fitting(Profile::P1g5gb).contains(r));
     }
 
     #[test]
@@ -393,8 +956,8 @@ mod tests {
         let k2g = GpuModel::A30.profile(1);
         let k4g = GpuModel::A30.profile(2);
         dc.place(&spec(1, k2g, 1, 1), r, Placement { profile: k2g, start: 0 });
-        assert!(!dc.index().gpus_fitting(k4g).contains(&r));
-        assert!(dc.index().gpus_fitting(k2g).contains(&r)); // start 2 free
+        assert!(!dc.index().gpus_fitting(k4g).contains(r));
+        assert!(dc.index().gpus_fitting(k2g).contains(r)); // start 2 free
         // The A100 buckets are untouched by A30 occupancy changes.
         for p in ALL_PROFILES {
             assert_eq!(dc.index().fitting_count(p), 2, "{p}");
@@ -403,10 +966,11 @@ mod tests {
     }
 
     /// Satellite acceptance: after random place/remove/migrate/relocate
-    /// sequences — on a single-model *or* mixed-model cluster — every
-    /// bucket and headroom class equals a brute-force recomputation from
-    /// the GPU/host states, and `check_integrity` (which embeds the same
-    /// comparison) passes.
+    /// /health-transition sequences — on a single-model *or* mixed-model
+    /// cluster — the bitset index equals a brute-force rebuild, every
+    /// bucket equals an independent availability-masked scan (the
+    /// `use_index(false)` oracle), the structural invariants hold, and
+    /// `check_integrity` passes.
     #[test]
     fn prop_incremental_index_matches_brute_force() {
         forall(
@@ -417,11 +981,14 @@ mod tests {
                 let mut resident: Vec<u64> = Vec::new();
                 let refs: Vec<GpuRef> = dc.gpu_refs();
                 for _ in 0..48 {
-                    match r.below(4) {
+                    match r.below(6) {
                         0 | 1 => {
                             // Place on a random feasible GPU (a profile of
                             // that GPU's own model).
                             let gr = refs[r.below(refs.len() as u64) as usize];
+                            if !dc.gpu_available(gr) {
+                                continue;
+                            }
                             let model = dc.gpu(gr).model();
                             let profile =
                                 model.profile(r.below(model.num_profiles() as u64) as usize);
@@ -444,6 +1011,32 @@ mod tests {
                                 dc.remove(vm);
                             }
                         }
+                        3 => {
+                            // GPU health flip. Failing hardware requires
+                            // emptiness (the eviction-first contract);
+                            // draining tolerates residents.
+                            let gr = refs[r.below(refs.len() as u64) as usize];
+                            let cur = dc.host(gr.host).gpu_health(gr.gpu as usize);
+                            let next = if !cur.allows_placement() {
+                                HealthState::Healthy
+                            } else if dc.gpu(gr).instances().is_empty() && r.chance(0.5) {
+                                HealthState::Failed { until: 10_000 }
+                            } else {
+                                HealthState::Draining
+                            };
+                            dc.set_gpu_health(gr, next);
+                        }
+                        4 => {
+                            // Host health flip (always via Draining, which
+                            // keeps any residents legal).
+                            let id = r.below(3) as u32;
+                            let next = if dc.host(id).health().allows_placement() {
+                                HealthState::Draining
+                            } else {
+                                HealthState::Healthy
+                            };
+                            dc.set_host_health(id, next);
+                        }
                         _ => {
                             if resident.is_empty() {
                                 continue;
@@ -462,9 +1055,10 @@ mod tests {
                                 );
                             } else {
                                 // Inter-GPU migration to a random feasible
-                                // GPU of the same model.
+                                // (and schedulable) GPU of the same model.
                                 let dst = refs[r.below(refs.len() as u64) as usize];
                                 if dst == loc.gpu
+                                    || !dc.gpu_available(dst)
                                     || dc.gpu(dst).model() != loc.placement.profile.model()
                                 {
                                     continue;
@@ -491,6 +1085,7 @@ mod tests {
                 if &rebuilt != dc.index() {
                     return Err("incremental index diverged from brute-force rebuild".into());
                 }
+                dc.index().check_invariants().map_err(|e| format!("invariants: {e}"))?;
                 // The O(1) activity counters must match a brute-force
                 // recount after the same mutation sequence.
                 if dc.active_hardware() != dc.active_hardware_scan() {
@@ -499,12 +1094,30 @@ mod tests {
                 if dc.active_gpus_by_model() != dc.active_gpus_by_model_scan() {
                     return Err("per-model activity diverged from fleet recount".into());
                 }
-                // GPUs only ever sit in buckets of their own model.
+                // Every bucket equals the scan oracle (the walk the
+                // `use_index(false)` policy variants perform), GPUs only
+                // ever sit in buckets of their own model, and the
+                // schedulable sets match an availability recount.
                 for key in ProfileKey::all() {
+                    let indexed: Vec<GpuRef> = dc.index().gpus_fitting(key).iter().collect();
+                    if indexed != scan_bucket(dc, key) {
+                        return Err(format!("{key}: bitset bucket != brute-force scan"));
+                    }
                     for r in dc.index().gpus_fitting(key) {
-                        if dc.gpu(*r).model() != key.model() {
+                        if dc.gpu(r).model() != key.model() {
                             return Err(format!("{key}: foreign-model GPU in bucket"));
                         }
+                    }
+                }
+                for model in ALL_MODELS {
+                    let scan: Vec<GpuRef> = dc
+                        .gpu_refs()
+                        .into_iter()
+                        .filter(|&r| dc.gpu_available(r) && dc.gpu(r).model() == model)
+                        .collect();
+                    let indexed: Vec<GpuRef> = dc.index().schedulable(model).iter().collect();
+                    if scan != indexed {
+                        return Err(format!("{model:?}: schedulable set != availability scan"));
                     }
                 }
                 dc.check_integrity().map_err(|e| format!("integrity: {e}"))

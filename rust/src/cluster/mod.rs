@@ -9,9 +9,11 @@
 //!   VM→location index, GPU addressing by global index, and the paper's
 //!   strict active-hardware accounting.
 //! * [`index`] — the [`index::ClusterIndex`]: per-profile GPU feasibility
-//!   buckets and host headroom multisets, maintained incrementally by
-//!   every `DataCenter` mutation so policies answer placement queries
-//!   without scanning the cluster.
+//!   buckets (two-level hierarchical bitsets read through
+//!   [`index::GpuSetView`]), per-model schedulable sets, and host
+//!   headroom histograms, maintained incrementally by every `DataCenter`
+//!   mutation so policies answer placement queries without scanning the
+//!   cluster.
 //! * [`health`] — operational [`health::HealthState`] of GPUs and hosts
 //!   (failed / draining / banned); the index covers schedulable
 //!   capacity only, a contract `check_integrity` verifies.
@@ -30,6 +32,6 @@ pub mod vm;
 pub use datacenter::{DataCenter, GpuRef, IntegrityReport, VmLocation};
 pub use health::HealthState;
 pub use host::Host;
-pub use index::ClusterIndex;
+pub use index::{ClusterIndex, GpuBits, GpuSetView};
 pub use shard::ShardMap;
 pub use vm::{Time, VmId, VmSpec, HOUR};

@@ -449,22 +449,29 @@ impl IlpSolver {
     }
 
     /// Solve the three objectives lexicographically, exactly (no node
-    /// cap). Equivalent to [`IlpSolver::solve_limited`]`(0)`.
+    /// cap). Equivalent to
+    /// [`IlpSolver::solve_budgeted`]`(NodeBudget::Unlimited)`.
     pub fn solve(&self) -> Option<PlacementSolution> {
-        self.solve_limited(0)
+        self.solve_budgeted(NodeBudget::Unlimited)
+    }
+
+    /// Solve under the legacy sentinel encoding (`0` = unlimited).
+    /// Compatibility wrapper over [`IlpSolver::solve_budgeted`]; new
+    /// call sites should pass a [`NodeBudget`] directly.
+    pub fn solve_limited(&self, node_limit: usize) -> Option<PlacementSolution> {
+        self.solve_budgeted(NodeBudget::from_limit(node_limit))
     }
 
     /// Solve the three objectives lexicographically under a
-    /// branch-and-bound node budget per stage (`0` = unlimited, the
-    /// exact solve). A truncated stage returns its incumbent — still a
-    /// *feasible* solution, just not a proven optimum — and the later
-    /// stages freeze against that incumbent, so the result is always a
-    /// valid (possibly suboptimal) placement. Returns `None` only when a
-    /// stage finds no incumbent inside the budget. Deterministic: same
-    /// instance + same budget → byte-identical solution (the `bb`
-    /// module's determinism contract).
-    pub fn solve_limited(&self, node_limit: usize) -> Option<PlacementSolution> {
-        let budget = NodeBudget::from_limit(node_limit);
+    /// branch-and-bound node budget per stage. A truncated stage
+    /// returns its incumbent — still a *feasible* solution, just not a
+    /// proven optimum — and the later stages freeze against that
+    /// incumbent, so the result is always a valid (possibly suboptimal)
+    /// placement. Returns `None` only when a stage finds no incumbent
+    /// inside the budget. Deterministic: same instance + same budget →
+    /// byte-identical solution (the `bb` module's determinism
+    /// contract).
+    pub fn solve_budgeted(&self, budget: NodeBudget) -> Option<PlacementSolution> {
         let vars = VarMap::new(&self.inst);
         let mut milp = self.build_base(&vars);
         let mut nodes = 0usize;

@@ -90,15 +90,28 @@ pub fn fragmented_window(
     k: usize,
 ) -> Vec<GpuRef> {
     let mut scored: Vec<(f64, GpuRef)> = Vec::new();
-    for r in scope.gpus(dc) {
-        if !dc.gpu_available(r) {
-            continue;
+    match scope {
+        // Cluster scope reads the index's per-model schedulable set
+        // directly: same GPUs, same ascending order as the filtered
+        // fleet walk below, without touching foreign-model or offline
+        // capacity at all.
+        PlanScope::Cluster => {
+            for r in dc.index().schedulable(model) {
+                scored.push((fragmentation_value(model, dc.gpu(r).occupancy()), r));
+            }
         }
-        let gpu = dc.gpu(r);
-        if gpu.model() != model {
-            continue;
+        _ => {
+            for r in scope.gpus(dc) {
+                if !dc.gpu_available(r) {
+                    continue;
+                }
+                let gpu = dc.gpu(r);
+                if gpu.model() != model {
+                    continue;
+                }
+                scored.push((fragmentation_value(model, gpu.occupancy()), r));
+            }
         }
-        scored.push((fragmentation_value(model, gpu.occupancy()), r));
     }
     // Stable sort: equal fragmentation keeps the ascending-GpuRef scope
     // order, so ties resolve to the lowest globalIndex.

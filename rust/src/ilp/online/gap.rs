@@ -30,7 +30,7 @@
 use super::extract::{build_instance, fragmented_window};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::DataCenter;
-use crate::ilp::IlpSolver;
+use crate::ilp::{IlpSolver, NodeBudget};
 use crate::mig::GpuModel;
 use crate::migrate::{MigrationEvent, PlanScope};
 use crate::policies::{Policy, PolicyCtx};
@@ -46,7 +46,7 @@ pub struct GapMeter {
     /// Extraction window: most-fragmented GPUs per model.
     window: usize,
     /// Branch-and-bound node budget per solver stage.
-    node_limit: usize,
+    budget: NodeBudget,
     /// Next batch at or after this time is sampled. Starts at 0 so the
     /// first batch of a run is always a sample.
     next_due: Time,
@@ -76,7 +76,7 @@ impl GapMeter {
             inner,
             every,
             window,
-            node_limit,
+            budget: NodeBudget::from_limit(node_limit),
             next_due: 0,
             weights: HashMap::new(),
             samples: Vec::new(),
@@ -109,7 +109,7 @@ impl GapMeter {
                 // question is being asked of the ILP for this model.
                 continue;
             }
-            let sol = IlpSolver::new(ex.inst.clone()).solve_limited(self.node_limit)?;
+            let sol = IlpSolver::new(ex.inst.clone()).solve_budgeted(self.budget)?;
             bound.ilp += sol.acceptance;
             for vm in &ex.inst.vms {
                 if ex.inst.prior.contains_key(&vm.id) {

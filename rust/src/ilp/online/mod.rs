@@ -10,7 +10,7 @@
 //! [`PlacementInstance`] ([`extract`]), solves it lexicographically
 //! (acceptance ≻ active hardware ≻ migration cost) under a
 //! deterministic branch-and-bound node budget
-//! ([`IlpSolver::solve_limited`]), and translates the solution into a
+//! ([`IlpSolver::solve_budgeted`]), and translates the solution into a
 //! transactional [`MigrationPlan`] applied through
 //! [`DataCenter::apply_plan`](crate::cluster::DataCenter::apply_plan).
 //!
@@ -57,7 +57,7 @@ pub use gap::GapMeter;
 use crate::cluster::vm::{Time, VmId, HOUR};
 use crate::cluster::{DataCenter, GpuRef};
 use crate::ilp::model::{PlacementInstance, PlacementSolution};
-use crate::ilp::IlpSolver;
+use crate::ilp::{IlpSolver, NodeBudget};
 use crate::mig::fragmentation::fragmentation_value;
 use crate::mig::{BlockMask, GpuModel, Instance, Placement};
 use crate::migrate::{MigrationPlan, MigrationPlanner, PlanCtx, PlanTrigger, PlanView};
@@ -150,7 +150,10 @@ impl MigrationPlanner for RollingIlp {
                 continue;
             }
             let solver = IlpSolver::new(ex.inst.clone());
-            let Some(sol) = solver.solve_limited(self.node_limit) else {
+            // node_limit > 0 here (0 = disabled, guarded above), so name
+            // the bounded variant explicitly — `from_limit`'s 0 ⇒
+            // Unlimited mapping must never apply to an online planner.
+            let Some(sol) = solver.solve_budgeted(NodeBudget::Nodes(self.node_limit as u64)) else {
                 continue;
             };
             translate_into_plan(dc, &ex.inst, &ex.map, &sol, plan);

@@ -19,11 +19,16 @@
 //!   IQR outlier filter and Eq. 27–30 GPU-fraction→profile mapping.
 //! * [`cluster`] — physical machines (CPU/RAM/GPUs), VMs and the
 //!   data-center state, plus the [`cluster::ClusterIndex`]: per-profile
-//!   GPU feasibility buckets and host headroom multisets maintained
-//!   incrementally by every `DataCenter` mutation. The determinism
-//!   contract — buckets iterate in ascending [`cluster::GpuRef`] order,
-//!   the paper's `globalIndex` — is what makes indexed policy decisions
-//!   byte-identical to full scans.
+//!   GPU feasibility buckets stored as two-level hierarchical bitsets
+//!   (read through [`cluster::GpuSetView`], intersectable word-wise
+//!   against external [`cluster::GpuBits`] masks), per-model
+//!   schedulable sets, and flat host-headroom histograms with cached
+//!   extremes — all maintained incrementally (O(1) per mutation) by
+//!   every `DataCenter` operation. The determinism contract — buckets
+//!   iterate in ascending [`cluster::GpuRef`] order, the paper's
+//!   `globalIndex` — holds by construction: a bitset walk in ascending
+//!   slot order *is* the ascending-`GpuRef` walk, which is what makes
+//!   indexed policy decisions byte-identical to full scans.
 //! * [`migrate`] — the policy-agnostic migration-planner layer (the
 //!   paper's third objective as a mechanism): [`migrate::MigrationPlanner`]s
 //!   produce explicit [`migrate::MigrationPlan`]s — Algorithm 4 re-packs
@@ -196,7 +201,7 @@
 //!
 //! * `ClusterIndex::build(&hosts)` (and every incremental update) skips
 //!   capacity whose health forbids placement — buckets, headroom
-//!   multisets and `hosts_with_model` describe *schedulable* capacity.
+//!   histograms and `hosts_with_model` describe *schedulable* capacity.
 //!   The scan-mode reference paths (`visit_candidates`,
 //!   `classify_rejection*`, the planners' candidate walks) gained
 //!   matching `gpu_available`/`host_available` checks, so
@@ -257,8 +262,10 @@
 //! Code written against that surface maps as follows:
 //!
 //! * `IlpSolver::solve()` remains the unlimited offline reference;
-//!   `IlpSolver::solve_limited(n)` is the node-budgeted online entry
-//!   point. The historical **zero divergence** — `Milp::solve(0)` meant
+//!   `IlpSolver::solve_budgeted(`[`ilp::NodeBudget`]`)` is the
+//!   node-budgeted online entry point (`solve_limited(n)` survives as a
+//!   sentinel-decoding wrapper). The historical **zero divergence** —
+//!   `Milp::solve(0)` meant
 //!   *unlimited* while a zero `--ilp-nodes`/`--ilp-window` disables
 //!   [`ilp::RollingIlp`] entirely (an online planner must never run
 //!   unbounded) — is now resolved at the type level: the solver's

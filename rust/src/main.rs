@@ -74,7 +74,8 @@ fn print_help() {
                      [--shard-rebalance HOURS] [--shard-rebalance-planner NAME]\n\
                      [--ilp-window K] [--ilp-nodes N] [--ilp-period HOURS]\n\
                      [--gap-every HOURS] [--checkpoint-every H --checkpoint-dir DIR]\n\
-                     [--resume DIR] [--on-corruption MODE] [ops flags] [--quick] [--json FILE]\n\
+                     [--resume DIR] [--on-corruption MODE] [--use-index true|false]\n\
+                     [ops flags] [--quick] [--json FILE]\n\
            figures   --fig 5..12 | --table 6 | --all  [--quick] [--seed N] [--json FILE]\n\
            analyze   [--two-gpu]          §5.1 configuration-space statistics
            ablate    [--heavy-frac F]     GRMU component ablation\n\
@@ -239,6 +240,18 @@ fn experiment_config(args: &Args) -> experiments::ExperimentConfig {
             Ok(action) => cfg.on_corruption = action,
             Err(e) => {
                 eprintln!("--on-corruption: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    // Diagnostic escape hatch: `--use-index false` forces the
+    // brute-force scan paths the index is locked against.
+    if let Some(v) = args.get("use-index") {
+        match v {
+            "true" | "1" | "on" => cfg.use_index = true,
+            "false" | "0" | "off" => cfg.use_index = false,
+            other => {
+                eprintln!("--use-index: expected true|false, got '{other}'");
                 std::process::exit(2);
             }
         }

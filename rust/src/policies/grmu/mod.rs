@@ -33,7 +33,7 @@ use super::{
     RejectReason,
 };
 use crate::cluster::vm::{VmId, VmSpec};
-use crate::cluster::{DataCenter, GpuRef};
+use crate::cluster::{DataCenter, GpuBits, GpuRef};
 use crate::migrate::{
     DefragOnReject, MigrationBudget, PairwiseConsolidate, PlanScope, PlanTrigger, PlannerStack,
 };
@@ -79,6 +79,16 @@ pub struct Grmu {
     heavy: BTreeSet<GpuRef>,
     /// Light basket (all other profiles), ordered by `globalIndex`.
     light: BTreeSet<GpuRef>,
+    /// Bitset mirrors of the baskets in the cluster index's slot space,
+    /// so the indexed placement walk is a word-wise AND against the
+    /// profile's feasibility bucket ([`GpuSetView::and_iter`]
+    /// (crate::cluster::GpuSetView::and_iter)). Derived state: the
+    /// `BTreeSet`s above stay authoritative (they feed `PlanScope::Set`,
+    /// the snapshot codec and the public accessors); the mirrors are
+    /// rebuilt lazily after a snapshot restore (`bits_ready`).
+    heavy_bits: GpuBits,
+    light_bits: GpuBits,
+    bits_ready: bool,
     heavy_capacity: usize,
     light_capacity: usize,
     /// Migration planners (defrag/consolidation), scoped to the light
@@ -119,6 +129,9 @@ impl Grmu {
             pool: BTreeSet::new(),
             heavy: BTreeSet::new(),
             light: BTreeSet::new(),
+            heavy_bits: GpuBits::default(),
+            light_bits: GpuBits::default(),
+            bits_ready: false,
             heavy_capacity: 0,
             light_capacity: 0,
             stack,
@@ -143,6 +156,23 @@ impl Grmu {
             self.light.insert(g);
         }
         self.initialized = true;
+        self.rebuild_bits(dc);
+    }
+
+    /// (Re)derive the basket bitset mirrors from the authoritative
+    /// `BTreeSet`s — at initialization and lazily after a snapshot
+    /// restore (which carries the sets but has no `DataCenter` to size
+    /// the bitsets against).
+    fn rebuild_bits(&mut self, dc: &DataCenter) {
+        self.heavy_bits = GpuBits::for_index(dc.index());
+        self.light_bits = GpuBits::for_index(dc.index());
+        for &r in &self.heavy {
+            self.heavy_bits.insert(dc.index(), r);
+        }
+        for &r in &self.light {
+            self.light_bits.insert(dc.index(), r);
+        }
+        self.bits_ready = true;
     }
 
     fn pop_pool(&mut self) -> Option<GpuRef> {
@@ -166,6 +196,9 @@ impl Grmu {
                 && dc.gpu(ev.from).is_empty()
                 && self.light.remove(&ev.from)
             {
+                if self.bits_ready {
+                    self.light_bits.remove(dc.index(), ev.from);
+                }
                 self.pool.insert(ev.from);
             }
         }
@@ -176,9 +209,10 @@ impl Grmu {
     /// quota from genuine resource/fragmentation shortage.
     ///
     /// With the cluster index the basket walk is intersected with the
-    /// profile's feasibility bucket, so only GPUs that can actually host
-    /// the GI are probed; both walks are ascending `globalIndex`, so the
-    /// first fit — and every decision — is identical.
+    /// profile's feasibility bucket — a word-wise AND of the basket's
+    /// bitset mirror against the bucket — so only GPUs that can actually
+    /// host the GI are probed; both walks are ascending `globalIndex`,
+    /// so the first fit — and every decision — is identical.
     fn place_one(&mut self, dc: &mut DataCenter, vm: &VmSpec) -> Decision {
         let heavy = vm.profile.is_heavy();
         let capacity = if heavy { self.heavy_capacity } else { self.light_capacity };
@@ -186,9 +220,8 @@ impl Grmu {
 
         let probe = |dc: &DataCenter, r: GpuRef| probe_gpu(dc, vm, r).map(|pl| (r, pl));
         let found = if self.config.use_index {
-            basket
-                .intersection(dc.index().gpus_fitting(vm.profile))
-                .find_map(|&r| probe(dc, r))
+            let bits = if heavy { &self.heavy_bits } else { &self.light_bits };
+            dc.index().gpus_fitting(vm.profile).and_iter(bits).find_map(|r| probe(dc, r))
         } else {
             basket.iter().find_map(|&r| probe(dc, r))
         };
@@ -206,8 +239,10 @@ impl Grmu {
                 self.pool.remove(&r);
                 if heavy {
                     self.heavy.insert(r);
+                    self.heavy_bits.insert(dc.index(), r);
                 } else {
                     self.light.insert(r);
+                    self.light_bits.insert(dc.index(), r);
                 }
                 dc.place(vm, r, placement);
                 return Decision::Placed { gpu: r, placement };
@@ -240,6 +275,11 @@ impl Policy for Grmu {
     fn place_batch_into(&mut self, dc: &mut DataCenter, vms: &[VmSpec], ctx: &mut PolicyCtx) {
         if !self.initialized {
             self.initialize(dc);
+        }
+        if !self.bits_ready {
+            // Restored from a snapshot: the baskets traveled in the
+            // image, the bitset mirrors did not (derived state).
+            self.rebuild_bits(dc);
         }
         ctx.decisions.begin(vms.len());
         let mut any_rejected = false;
@@ -329,6 +369,7 @@ impl Policy for Grmu {
         self.pool = basket(&mut d)?;
         self.heavy = basket(&mut d)?;
         self.light = basket(&mut d)?;
+        self.bits_ready = false; // mirrors are rebuilt on the next batch
         let stack = d.blob()?.to_vec();
         self.stack.restore_state(&stack)?;
         let n = d.count(21)?;

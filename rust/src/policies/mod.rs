@@ -453,7 +453,7 @@ pub fn visit_candidates(
     mut visit: impl FnMut(GpuRef) -> bool,
 ) {
     if use_index {
-        for &r in dc.index().gpus_fitting(profile) {
+        for r in dc.index().gpus_fitting(profile) {
             if !visit(r) {
                 return;
             }
@@ -1169,7 +1169,8 @@ mod tests {
             true
         });
         assert_eq!(seen, vec![GpuRef { host: 1, gpu: 0 }]);
-        assert_eq!(seen.as_slice(), dc.index().gpus_fitting(Profile::P1g5gb));
+        let bucket: Vec<GpuRef> = dc.index().gpus_fitting(Profile::P1g5gb).iter().collect();
+        assert_eq!(seen, bucket);
         assert!(probe_gpu(&dc, &vm(1, Profile::P1g5gb), down).is_none());
         // With every compatible GPU down, both classifiers report
         // no-compatible-GPU even though the hosts keep CPU/RAM headroom.

@@ -79,6 +79,12 @@ pub struct ExperimentConfig {
     /// Reaction to a failed integrity check (CLI `--on-corruption
     /// abort|quarantine|rebuild`).
     pub on_corruption: crate::recover::OnCorruption,
+    /// Answer placement queries through the incremental cluster index
+    /// (CLI `--use-index true|false`, default true). `false` forces the
+    /// brute-force full-scan paths — the equivalence oracle the
+    /// `decision_api` locks compare against; decisions are
+    /// byte-identical either way.
+    pub use_index: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -104,6 +110,7 @@ impl Default for ExperimentConfig {
             checkpoint_dir: None,
             resume_from: None,
             on_corruption: crate::recover::OnCorruption::default(),
+            use_index: true,
         }
     }
 }
@@ -129,6 +136,7 @@ impl ExperimentConfig {
             .ilp_nodes(self.ilp_nodes)
             .ilp_period_hours(self.ilp_period_hours)
             .gap_check_hours(self.gap_check_hours)
+            .use_index(self.use_index)
     }
 }
 
@@ -538,7 +546,7 @@ pub fn grmu_config(cfg: &ExperimentConfig, defrag: bool) -> grmu::GrmuConfig {
         heavy_capacity_frac: cfg.heavy_frac,
         consolidation_interval_hours: cfg.consolidation_hours,
         defrag_enabled: defrag,
-        use_index: true,
+        use_index: cfg.use_index,
         migration_budget: cfg.migration_budget,
     }
 }

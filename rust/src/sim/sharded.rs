@@ -52,7 +52,7 @@ use super::event_core::EventCore;
 use super::metrics::{acceptance_rate, Sample, SimResult};
 use crate::cluster::vm::{Time, VmId, VmSpec, HOUR};
 use crate::cluster::{DataCenter, GpuRef, Host, ShardMap};
-use crate::mig::{NUM_MODELS, NUM_PROFILE_KEYS};
+use crate::mig::{Placement, NUM_MODELS, NUM_PROFILE_KEYS};
 use crate::migrate::{
     MigrationBudget, MigrationEvent, MigrationKind, MigrationPlan, MigrationPlanner, PlanCtx,
     PlanScope, PlanStep, PlanTrigger,
@@ -66,6 +66,24 @@ use crate::util::codec::{Dec, Enc};
 use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// The rebalance passes' receiver probe: the first already-active GPU
+/// of `spec`'s model (ascending `GpuRef`) that can host it, read off
+/// the index's per-model schedulable set instead of a full host walk.
+/// Identical to the old fleet scan: `probe_gpu` failed for exactly the
+/// unschedulable or model-incompatible GPUs the walk still visited, and
+/// both candidate orders ascend.
+fn first_active_fit(dc: &DataCenter, spec: &VmSpec) -> Option<(GpuRef, Placement)> {
+    for to in dc.index().schedulable(spec.profile.model()) {
+        if dc.gpu(to).is_empty() {
+            continue; // only consolidate onto active GPUs
+        }
+        if let Some(p) = probe_gpu(dc, spec, to) {
+            return Some((to, p));
+        }
+    }
+    None
+}
 
 /// Per-shard policy-context seed: shard 0 keeps the run seed unchanged
 /// (the `shards == 1` identity), later shards split off their own
@@ -600,19 +618,7 @@ impl ShardedCore {
                     {
                         continue;
                     }
-                    let mut target = None;
-                    'scan: for h in self.cores[receiver].dc.hosts() {
-                        for (g, gpu) in h.gpus().iter().enumerate() {
-                            if gpu.is_empty() {
-                                continue; // only consolidate onto active GPUs
-                            }
-                            let to = GpuRef { host: h.id, gpu: g as u8 };
-                            if let Some(p) = probe_gpu(&self.cores[receiver].dc, &spec, to) {
-                                target = Some((to, p));
-                                break 'scan;
-                            }
-                        }
-                    }
+                    let target = first_active_fit(&self.cores[receiver].dc, &spec);
                     let Some((to_local, placement)) = target else { continue };
                     if self.cores[donor].transfer_out(vm_id).is_none() {
                         continue;
@@ -673,22 +679,11 @@ impl ShardedCore {
                 {
                     continue;
                 }
-                let mut target = None;
-                'recv: for hop in 1..n {
+                let target = (1..n).find_map(|hop| {
                     let receiver = (donor + hop) % n;
-                    for h in self.cores[receiver].dc.hosts() {
-                        for (g, gpu) in h.gpus().iter().enumerate() {
-                            if gpu.is_empty() {
-                                continue; // only consolidate onto active GPUs
-                            }
-                            let to = GpuRef { host: h.id, gpu: g as u8 };
-                            if let Some(p) = probe_gpu(&self.cores[receiver].dc, &spec, to) {
-                                target = Some((receiver, to, p));
-                                break 'recv;
-                            }
-                        }
-                    }
-                }
+                    first_active_fit(&self.cores[receiver].dc, &spec)
+                        .map(|(to, p)| (receiver, to, p))
+                });
                 let Some((receiver, to_local, placement)) = target else { continue };
                 if self.cores[donor].transfer_out(vm_id).is_none() {
                     continue; // the nominated VM already departed

@@ -907,6 +907,47 @@ fn sharded_results_are_thread_count_independent() {
     }
 }
 
+/// The indexed-vs-scan lock through the *sharded* engine at
+/// `--shards 4`: per-shard policies querying the hierarchical bitset
+/// index must produce a `SimResult` byte-identical to per-shard
+/// policies brute-force scanning their shard. (The engine's own
+/// rebalance scans always run over the per-shard index — `use_index`
+/// only toggles the policy-side candidate iteration, which is exactly
+/// the equivalence being locked.)
+#[test]
+fn sharded_indexed_and_scan_policies_decide_identically() {
+    let workload = Workload::generate(TraceConfig::small(42));
+    let run = |name: &str, use_index: bool| {
+        let policies: Vec<Box<dyn Policy>> = (0..4)
+            .map(|_| {
+                PolicyRegistry::standard()
+                    .build(name, &PolicyConfig::new().heavy_frac(0.25).use_index(use_index))
+                    .unwrap()
+            })
+            .collect();
+        let mut sim = ShardedSimulation::new(&workload.hosts, policies, &workload.vms);
+        sim.options =
+            SimulationOptions { integrity_every: 8, drain_cap_hours: 5 * 24, ..Default::default() };
+        sim.shard_options.shards = 4;
+        sim.shard_options.threads = 4;
+        sim.shard_options.seed = 42;
+        sim.run()
+    };
+    for name in ["grmu", "mcc"] {
+        let a = run(name, true);
+        let b = run(name, false);
+        assert!(a.accepted > 0, "{name}: vacuous run");
+        assert_eq!(a.samples, b.samples, "{name}: samples diverged");
+        assert_eq!(a.requested, b.requested, "{name}");
+        assert_eq!(a.accepted, b.accepted, "{name}");
+        assert_eq!(a.per_profile, b.per_profile, "{name}");
+        assert_eq!(a.rejections, b.rejections, "{name}");
+        assert_eq!(a.migration_events, b.migration_events, "{name}");
+        assert_eq!(a.gpu_activity, b.gpu_activity, "{name}");
+        assert_eq!(a.availability, b.availability, "{name}");
+    }
+}
+
 /// The sim-vs-coordinator equivalence, sharded: driving the
 /// [`ShardedCore`] window by window (`run_until` + `step_buffered`, the
 /// coordinator-style surface) produces the same result as

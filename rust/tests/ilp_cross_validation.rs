@@ -7,7 +7,7 @@
 
 use grmu::cluster::VmSpec;
 use grmu::ilp::model::{IlpHost, PlacementInstance};
-use grmu::ilp::IlpSolver;
+use grmu::ilp::{IlpSolver, NodeBudget};
 use grmu::mig::profiles::{Placement, ALL_PROFILES};
 use grmu::mig::Profile;
 use grmu::util::rng::Rng;
@@ -283,7 +283,8 @@ fn online_extraction_matches_the_offline_optimum_on_small_clusters() {
         let ex = build_instance(&dc, &window, &pending, MAX_INSTANCE_VMS, &|_| 1.0);
         let (bf_weight, bf_hw) = brute_force(&ex.inst);
         let offline = IlpSolver::new(ex.inst.clone()).solve().expect("feasible");
-        let online = IlpSolver::new(ex.inst.clone()).solve_limited(200_000).expect("feasible");
+        let online =
+            IlpSolver::new(ex.inst.clone()).solve_budgeted(NodeBudget::Nodes(200_000)).expect("feasible");
         for (label, sol) in [("offline", &offline), ("online", &online)] {
             assert!(
                 (sol.acceptance - bf_weight).abs() < 1e-6,
